@@ -1,0 +1,62 @@
+//! Input-adaptive compression (paper §4.7 / Fig. 5 left, as a demo).
+//!
+//! The same KVzap threshold τ yields different compression ratios on
+//! different inputs: repetitive synthetic haystacks (ruler-mini) compress
+//! harder than information-dense few-shot prompts (longbench-mini trec).
+//!
+//!     cargo run --release --example adaptive_compression
+
+use std::sync::Arc;
+
+use kvzap::coordinator::{Engine, SamplingParams};
+use kvzap::policies;
+use kvzap::runtime::Runtime;
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(kvzap::artifacts_dir())?;
+    let engine = Engine::new(Arc::new(rt));
+    let policy = policies::by_name("kvzap_mlp:-4", engine.window()).unwrap();
+    let mut rng = Rng::new(11);
+
+    let mut groups: Vec<(&str, Vec<f64>)> = vec![];
+    for (label, suite, subset) in [
+        ("ruler niah (repetitive)", "ruler", "niah_single_1"),
+        ("ruler vt   (tracing)", "ruler", "vt"),
+        ("longbench trec (dense)", "longbench", "trec"),
+        ("longbench lcc  (code)", "longbench", "lcc"),
+    ] {
+        let mut comps = vec![];
+        for i in 0..6 {
+            let mut r = rng.fork(i);
+            let task = if suite == "ruler" {
+                workload::ruler_instance(subset, 240, &mut r)
+            } else {
+                workload::longbench_instance(subset, 240, &mut r)
+            };
+            let res = engine.generate(
+                &task.prompt,
+                policy.as_ref(),
+                &SamplingParams::greedy(task.max_new),
+            )?;
+            comps.push(res.compression);
+        }
+        groups.push((label, comps));
+    }
+
+    println!("same threshold τ=-4, per-prompt compression ratios:\n");
+    for (label, comps) in &groups {
+        let mean = comps.iter().sum::<f64>() / comps.len() as f64;
+        let lo = comps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = comps.iter().cloned().fold(0.0f64, f64::max);
+        let bar = "#".repeat((mean * 40.0) as usize);
+        println!("{label:<26} mean {mean:.3}  range [{lo:.3}, {hi:.3}]  {bar}");
+    }
+    println!(
+        "\nThresholding adapts the rate to prompt information density\n\
+         (paper §4.7): no fixed budget gets both the repetitive and the\n\
+         dense prompts right simultaneously."
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: load the AOT artifacts, serve one prompt with and without
+//! KVzap pruning, and inspect the accuracy/compression trade-off.
+//!
+//! Run after `make artifacts && cargo build --release`:
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use kvzap::coordinator::{Engine, SamplingParams};
+use kvzap::policies;
+use kvzap::runtime::Runtime;
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the runtime: HLO artifacts + weights, compiled on demand.
+    let rt = Runtime::load(kvzap::artifacts_dir())?;
+    let engine = Engine::new(Arc::new(rt));
+
+    // 2. A needle-in-a-haystack task from the ruler-mini workload.
+    let mut rng = Rng::new(7);
+    let task = workload::ruler_instance("niah_single_1", 240, &mut rng);
+    println!("prompt tail: ...{:?}", &task.prompt[task.prompt.len() - 24..]);
+    println!("expected answer: {:?}\n", task.answer);
+
+    // 3. Generate with the full cache, then with KVzap-MLP thresholding.
+    let sp = SamplingParams::greedy(task.max_new);
+    for spec in ["full", "kvzap_mlp:-4", "kvzap_mlp:-2"] {
+        let policy = policies::by_name(spec, engine.window()).unwrap();
+        let r = engine.generate(&task.prompt, policy.as_ref(), &sp)?;
+        println!(
+            "{spec:<14} -> {:?}  correct={}  compression={:.2} ({:.1}x)  \
+             prefill={}ms decode={}ms",
+            r.text,
+            task.score(&r.text),
+            r.compression,
+            1.0 / (1.0 - r.compression).max(1e-9),
+            r.prefill_us / 1000,
+            r.decode_us / 1000,
+        );
+    }
+
+    // 4. Engine metrics (what the serving frontend exports).
+    println!("\n{}", engine.metrics.report());
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT lowering: jax model -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Each artifact is lowered per static (batch, length) bucket. Every parameter
+tensor is a runtime input — the weights travel separately in weights.bin
+(see weights_io.py) — so the rust side feeds [data inputs..., weight
+buffers...] in the order recorded in artifacts/manifest.json.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import BUCKETS, MODEL, OBS_WINDOW, PAD, BOS, EOS, SEP, WINDOW
+from .weights_io import flatten_params
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, aval):
+    return {"name": name, "shape": [int(d) for d in aval.shape],
+            "dtype": {"int32": "i32", "float32": "f32"}[str(aval.dtype)]}
+
+
+def _lower(fn, data_specs, params, out_names):
+    """Lower fn(*data, params); return (hlo_text, inputs_meta, outputs_meta).
+
+    keep_unused=True: the rust runtime feeds the SAME weight-buffer list to
+    every artifact; without it jax DCEs unused parameters (e.g. w_out in
+    the kvzip oracle, which never computes logits) and the compiled
+    program's input arity would no longer match the manifest contract."""
+    lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in data_specs], params)
+    hlo = to_hlo_text(lowered)
+    inputs = [_io_entry(n, s) for n, s in data_specs]
+    outs = lowered.out_info
+    out_meta = [
+        {"name": n, "shape": [int(d) for d in o.shape],
+         "dtype": {"int32": "i32", "float32": "f32"}[str(o.dtype)]}
+        for n, o in zip(out_names, jax.tree_util.tree_leaves(outs))
+    ]
+    return hlo, inputs, out_meta
+
+
+def export_artifacts(params, out_dir: str, log=print):
+    """Lower all buckets; returns the manifest dict (without weights section)."""
+    cfg = MODEL
+    L, Hkv, D, Tm, V = (cfg.n_layers, cfg.n_kv_heads, cfg.d_head,
+                        cfg.t_max, cfg.vocab)
+    arts = {}
+
+    def emit(name, fn, data_specs, out_names, extra):
+        hlo, inputs, outputs = _lower(fn, data_specs, params, out_names)
+        path = f"{name}.hlo.txt"
+        with open(f"{out_dir}/{path}", "w") as f:
+            f.write(hlo)
+        arts[name] = {"file": path, "inputs": inputs, "outputs": outputs,
+                      **extra}
+        log(f"  wrote {path} ({len(hlo)//1024} KiB)")
+
+    for b in BUCKETS.prefill_b:
+        for t in BUCKETS.prefill_t:
+            emit(
+                f"prefill_b{b}_t{t}",
+                lambda tok, n, p: model.prefill_batch(p, tok, n),
+                [("tokens", _spec((b, t), jnp.int32)),
+                 ("true_len", _spec((b,), jnp.int32))],
+                model.PREFILL_OUTPUTS,
+                {"kind": "prefill", "batch": b, "t": t},
+            )
+
+    for b in BUCKETS.decode_b:
+        emit(
+            f"decode_b{b}",
+            lambda tok, pos, kc, vc, m, p: model.decode_batch(
+                p, tok, pos, kc, vc, m),
+            [("tokens", _spec((b,), jnp.int32)),
+             ("pos", _spec((b,), jnp.int32)),
+             ("kcache", _spec((L, b, Hkv, Tm, D))),
+             ("vcache", _spec((L, b, Hkv, Tm, D))),
+             ("mask", _spec((L, b, Hkv, Tm)))],
+            model.DECODE_OUTPUTS,
+            {"kind": "decode", "batch": b, "t": Tm},
+        )
+
+    for t in BUCKETS.kvzip_t:
+        emit(
+            f"kvzip_score_t{t}",
+            lambda tok, n, p: model.kvzip_batch(p, tok, n),
+            [("tokens", _spec((1, t), jnp.int32)),
+             ("true_len", _spec((1,), jnp.int32))],
+            model.KVZIP_OUTPUTS,
+            {"kind": "kvzip_score", "batch": 1, "t": t},
+        )
+
+    manifest = {
+        "model": {
+            "vocab": V, "d_model": cfg.d_model, "n_layers": L,
+            "n_q_heads": cfg.n_q_heads, "n_kv_heads": Hkv, "d_head": D,
+            "d_int": cfg.d_int, "d_surrogate": cfg.d_surrogate,
+            "t_max": Tm, "rope_theta": cfg.rope_theta,
+        },
+        "special_tokens": {"pad": PAD, "bos": BOS, "eos": EOS, "sep": SEP},
+        "window": WINDOW,
+        "obs_window": OBS_WINDOW,
+        "buckets": {
+            "prefill_t": list(BUCKETS.prefill_t),
+            "prefill_b": list(BUCKETS.prefill_b),
+            "decode_b": list(BUCKETS.decode_b),
+            "kvzip_t": list(BUCKETS.kvzip_t),
+        },
+        "param_order": [n for n, _ in flatten_params(params)],
+        "artifacts": arts,
+    }
+    return manifest

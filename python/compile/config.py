@@ -1,0 +1,109 @@
+"""Model + pipeline configuration for the KVzap reproduction.
+
+zap-lm is the build-time substitute for Qwen3-8B / Llama-3.1-8B (see
+DESIGN.md §2): a byte-level GQA transformer with RoPE, RMSNorm and SwiGLU —
+the same architectural family the paper evaluates — scaled so that it can be
+pretrained on a single CPU core in minutes.
+
+Everything the rust layer needs to know (dims, buckets, special tokens) is
+emitted into artifacts/manifest.json by aot.py, so this file is the single
+source of truth.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256          # byte-level
+    d_model: int = 192        # D_h
+    n_layers: int = 4         # L
+    n_q_heads: int = 8        # H_Q
+    n_kv_heads: int = 2       # H   (GQA 4x, same ratio as Llama-3.1-8B)
+    d_head: int = 24          # D
+    d_int: int = 384          # SwiGLU intermediate
+    d_surrogate: int = 24     # MLP surrogate hidden width = D_h/8 (paper §4.1)
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-5
+    t_max: int = 512          # decode cache capacity
+
+    @property
+    def group(self) -> int:
+        """Query heads per KV head (GQA group size)."""
+        return self.n_q_heads // self.n_kv_heads
+
+
+@dataclass(frozen=True)
+class BucketConfig:
+    """Static-shape buckets AOT-compiled into artifacts."""
+
+    prefill_t: tuple = (128, 256, 384, 512)
+    prefill_b: tuple = (1, 4)
+    decode_b: tuple = (1, 4, 8)
+    kvzip_t: tuple = (256, 384, 512)  # oracle double-pass buckets (run at 2T)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Build-time pretraining of zap-lm (single CPU core)."""
+
+    seed: int = 0
+    # phase 1: short sequences, bulk of the steps
+    steps1: int = 700
+    batch1: int = 8
+    seq1: int = 224
+    # phase 2: long sequences so RoPE generalizes to eval contexts
+    steps2: int = 160
+    batch2: int = 3
+    seq2: int = 512
+    lr: float = 3e-3
+    warmup: int = 40
+    weight_decay: float = 0.01
+    clip: float = 1.0
+
+
+@dataclass(frozen=True)
+class SurrogateTrainConfig:
+    seed: int = 1
+    n_prompts: int = 220          # prompts scored with the KVzip+ oracle
+    prompt_len: int = 256         # scored at 2T = 512
+    positions_per_prompt: int = 192
+    holdout_frac: float = 0.15
+    ridge_lambda: float = 1e-2    # KVzap-Linear closed form
+    mlp_steps: int = 1200         # KVzap-MLP Adam steps
+    mlp_batch: int = 512
+    mlp_lr: float = 2e-3
+    log_floor: float = -14.0      # clip log(s+) from below
+
+
+# Special byte tokens (the corpus generators never emit bytes < 16).
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+
+# Sliding window w (paper: 128 @ 4k context; scaled 8x like the contexts).
+WINDOW = 16
+# Observed-attention window for SnapKV-style stats (last-w queries).
+OBS_WINDOW = 32
+
+MODEL = ModelConfig()
+BUCKETS = BucketConfig()
+TRAIN = TrainConfig()
+SURROGATE = SurrogateTrainConfig()
+
+
+def fast_mode() -> bool:
+    """KVZAP_FAST=1 shrinks the pipeline for CI-style smoke runs."""
+    import os
+
+    return os.environ.get("KVZAP_FAST", "0") == "1"
+
+
+def train_config() -> TrainConfig:
+    if fast_mode():
+        return TrainConfig(steps1=30, steps2=8, warmup=5)
+    return TRAIN
+
+
+def surrogate_config() -> SurrogateTrainConfig:
+    if fast_mode():
+        return SurrogateTrainConfig(n_prompts=24, mlp_steps=150)
+    return SURROGATE

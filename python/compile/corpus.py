@@ -1,0 +1,442 @@
+"""Synthetic corpus + task grammar for zap-lm.
+
+This file defines the *shared task grammar*: the rust workload generators
+(rust/src/workload/) emit evaluation instances with exactly the same byte
+formats, so the build-time-trained model transfers to the rust-served
+benchmarks. Any change here must be mirrored there (and vice versa) — the
+template lists below are the contract.
+
+The grammar scales the paper's benchmark suites down to zap-lm's context:
+
+  ruler-mini   : niah_single_{1,2,3}, niah_multikey_{1,2,3}, niah_multiquery,
+                 niah_multivalue, vt, cwe, fwe, qa_1, qa_2      (13 subsets)
+  longbench-mini: sdqa, mdqa, summ, trec, fewshot_math, count,
+                 passage_ret, lcc, repobench, kvret             (10 subsets)
+  aime-mini    : multi-step integer arithmetic with chain-of-thought decoding
+
+Prompts end with "A " (or "-> " for trec); the answer is the byte string the
+model must generate, terminated by "\n". Training texts are prompt+answer+"\n"
+followed by EOS.
+"""
+
+import numpy as np
+
+from .config import BOS, EOS
+
+# --------------------------------------------------------------------------
+# Shared template lists — mirrored verbatim in rust/src/workload/templates.rs
+
+FILLERS = [
+    "the sky was clear and the wind moved over the hills. ",
+    "a river runs past the old mill near the stone bridge. ",
+    "people walked slowly through the quiet market square. ",
+    "the train left the station two minutes after noon. ",
+    "rain fell softly on the roof of the wooden cabin. ",
+    "the library keeps its oldest maps in the north wing. ",
+    "a grey cat slept on the warm step by the door. ",
+    "the garden path was lined with small white stones. ",
+]
+
+NAMES = ["amir", "bella", "chen", "dara", "elif", "farid", "gita", "hana"]
+CITIES = ["oslo", "lima", "kyoto", "accra", "quito", "perth", "turin", "hanoi"]
+JOBS = ["baker", "pilot", "nurse", "coder", "judge", "miner", "actor", "clerk"]
+WORDS = ["apple", "stone", "cloud", "tiger", "brick", "olive", "comet", "fern",
+         "maple", "ridge", "pearl", "wolf", "cedar", "lark", "moss", "dune"]
+
+TREC_LABELS = ["loc", "num", "person", "desc", "entity", "abbr"]
+TREC_PATTERNS = {
+    "loc": ["where is {w}", "where can one find {w}", "what country is {w} in"],
+    "num": ["how many {w} are there", "what is the count of {w}",
+            "how much {w} is needed"],
+    "person": ["who made {w}", "who leads {w}", "who found {w}"],
+    "desc": ["what is {w}", "what does {w} mean", "how does {w} work"],
+    "entity": ["what kind of {w} is it", "which {w} is best",
+               "name a type of {w}"],
+    "abbr": ["what does {w} stand for", "expand the term {w}",
+             "what is short for {w}"],
+}
+
+AIME_OPS = ["+", "-", "*"]
+
+
+def rng_for(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# Low-level helpers
+
+
+def _key(r) -> str:
+    return "".join(chr(ord("A") + r.integers(0, 26)) for _ in range(4))
+
+
+def _val(r) -> str:
+    return "".join(chr(ord("0") + r.integers(0, 10)) for _ in range(5))
+
+
+def _filler_block(r, n_bytes: int) -> str:
+    out = []
+    size = 0
+    while size < n_bytes:
+        s = FILLERS[int(r.integers(0, len(FILLERS)))]
+        out.append(s)
+        size += len(s)
+    return "".join(out)
+
+
+def _haystack(r, items, target_len: int) -> str:
+    """Scatter `items` (lines) at random depths in filler up to target_len."""
+    budget = max(target_len - sum(len(i) + 1 for i in items) - 16, 32)
+    cuts = sorted(r.integers(0, budget + 1, size=len(items)))
+    segs = []
+    prev = 0
+    fill = _filler_block(r, budget)
+    for c, item in zip(cuts, items):
+        segs.append(fill[prev:c])
+        segs.append(item + "\n")
+        prev = c
+    segs.append(fill[prev:budget])
+    return "".join(segs)
+
+
+# --------------------------------------------------------------------------
+# ruler-mini subsets — each returns (prompt, answer)
+
+
+def niah_single(r, target_len, variant=1):
+    k, v = _key(r), _val(r)
+    line = {1: f"{k} = {v}.", 2: f"note {k} holds {v}.",
+            3: f"remember that {k} maps to {v}."}[variant]
+    hay = _haystack(r, [line], target_len)
+    return f"{hay}Q {k}\nA ", v
+
+
+def niah_multikey(r, target_len, n_keys=4, variant=1):
+    pairs = [(_key(r), _val(r)) for _ in range(n_keys)]
+    lines = [f"{k} = {v}." for k, v in pairs]
+    hay = _haystack(r, lines, target_len)
+    k, v = pairs[int(r.integers(0, n_keys))]
+    return f"{hay}Q {k}\nA ", v
+
+
+def niah_multiquery(r, target_len):
+    pairs = [(_key(r), _val(r)) for _ in range(3)]
+    lines = [f"{k} = {v}." for k, v in pairs]
+    hay = _haystack(r, lines, target_len)
+    (k1, v1), (k2, v2) = pairs[0], pairs[2]
+    return f"{hay}Q {k1} {k2}\nA ", f"{v1} {v2}"
+
+
+def niah_multivalue(r, target_len):
+    k, v1, v2 = _key(r), _val(r), _val(r)
+    hay = _haystack(r, [f"{k} = {v1} {v2}."], target_len)
+    return f"{hay}Q {k}\nA ", f"{v1} {v2}"
+
+
+def vt(r, target_len, hops=3):
+    root = _val(r)
+    names = [f"V{int(r.integers(10, 99))}" for _ in range(hops + 2)]
+    lines = [f"{names[0]} = {root}."]
+    for i in range(1, hops):
+        lines.append(f"{names[i]} = {names[i-1]}.")
+    # distractor chain
+    lines.append(f"{names[hops]} = {_val(r)}.")
+    lines.append(f"{names[hops+1]} = {names[hops]}.")
+    order = r.permutation(len(lines))
+    hay = _haystack(r, [lines[i] for i in order], target_len)
+    return f"{hay}Q {names[hops-1]}\nA ", root
+
+
+def cwe(r, target_len):
+    common = WORDS[int(r.integers(0, len(WORDS)))]
+    others = [w for w in WORDS if w != common]
+    seq = [common] * 6
+    for _ in range(10):
+        seq.append(others[int(r.integers(0, len(others)))])
+    r.shuffle(seq)
+    lst = "list: " + " ".join(seq) + "."
+    hay = _haystack(r, [lst], target_len)
+    return f"{hay}Q most\nA ", common
+
+
+def fwe(r, target_len):
+    picks = r.permutation(len(WORDS))[:3]
+    a, b, c = (WORDS[int(i)] for i in picks)
+    seq = [a] * 5 + [b] * 3 + [c] * 2
+    r.shuffle(seq)
+    lst = "list: " + " ".join(seq) + "."
+    hay = _haystack(r, [lst], target_len)
+    return f"{hay}Q most\nA ", a
+
+
+def qa1(r, target_len):
+    n = NAMES[int(r.integers(0, len(NAMES)))]
+    c = CITIES[int(r.integers(0, len(CITIES)))]
+    d1 = NAMES[int(r.integers(0, len(NAMES)))]
+    j = JOBS[int(r.integers(0, len(JOBS)))]
+    lines = [f"{n} lives in {c}.", f"{d1} works as a {j}."]
+    hay = _haystack(r, lines, target_len)
+    return f"{hay}Q where {n}\nA ", c
+
+
+def qa2(r, target_len):
+    n1, n2 = (NAMES[int(i)] for i in r.permutation(len(NAMES))[:2])
+    c = CITIES[int(r.integers(0, len(CITIES)))]
+    j = JOBS[int(r.integers(0, len(JOBS)))]
+    lines = [f"doc1: {n1} lives in {c}.", f"doc2: {n2} works as a {j}."]
+    hay = _haystack(r, lines, target_len)
+    return f"{hay}Q job {n2}\nA ", j
+
+
+RULER_SUBSETS = {
+    "niah_single_1": lambda r, t: niah_single(r, t, 1),
+    "niah_single_2": lambda r, t: niah_single(r, t, 2),
+    "niah_single_3": lambda r, t: niah_single(r, t, 3),
+    "niah_multikey_1": lambda r, t: niah_multikey(r, t, 3),
+    "niah_multikey_2": lambda r, t: niah_multikey(r, t, 4),
+    "niah_multikey_3": lambda r, t: niah_multikey(r, t, 5),
+    "niah_multiquery": niah_multiquery,
+    "niah_multivalue": niah_multivalue,
+    "vt": vt,
+    "cwe": cwe,
+    "fwe": fwe,
+    "qa_1": qa1,
+    "qa_2": qa2,
+}
+
+
+# --------------------------------------------------------------------------
+# longbench-mini subsets
+
+
+def sdqa(r, target_len):
+    return qa1(r, target_len)
+
+
+def mdqa(r, target_len):
+    return qa2(r, target_len)
+
+
+def summ(r, target_len):
+    w = WORDS[int(r.integers(0, len(WORDS)))]
+    hay = _haystack(r, [f"!! topic {w}."], target_len)
+    return f"{hay}Q topic\nA ", w
+
+
+def trec(r, target_len, n_shots=None):
+    """Few-shot question-type classification (the TREC-outlier proxy)."""
+    lines = []
+    budget = target_len - 40
+    used = 0
+    shots = 0
+    while n_shots is None or shots < n_shots:
+        lbl = TREC_LABELS[int(r.integers(0, len(TREC_LABELS)))]
+        pat = TREC_PATTERNS[lbl][int(r.integers(0, len(TREC_PATTERNS[lbl])))]
+        w = WORDS[int(r.integers(0, len(WORDS)))]
+        line = f"{pat.format(w=w)} -> {lbl}"
+        if used + len(line) + 1 > budget:
+            break
+        lines.append(line)
+        used += len(line) + 1
+        shots += 1
+    lbl = TREC_LABELS[int(r.integers(0, len(TREC_LABELS)))]
+    pat = TREC_PATTERNS[lbl][int(r.integers(0, len(TREC_PATTERNS[lbl])))]
+    w = WORDS[int(r.integers(0, len(WORDS)))]
+    prompt = "\n".join(lines) + f"\n{pat.format(w=w)} -> "
+    return prompt, lbl
+
+
+def fewshot_math(r, target_len):
+    lines = []
+    used = 0
+    while used < target_len - 30:
+        a, b = int(r.integers(10, 90)), int(r.integers(10, 90))
+        line = f"{a} plus {b} is {a+b}."
+        lines.append(line)
+        used += len(line) + 1
+    a, b = int(r.integers(10, 90)), int(r.integers(10, 90))
+    return "\n".join(lines) + f"\n{a} plus {b} is ", str(a + b)
+
+
+def count_task(r, target_len):
+    n = int(r.integers(2, 8))
+    marks = ["## section"] * n
+    hay = _haystack(r, marks, target_len)
+    return f"{hay}Q sections\nA ", str(n)
+
+
+def passage_ret(r, target_len):
+    n_docs = 4
+    w = WORDS[int(r.integers(0, len(WORDS)))]
+    target = int(r.integers(1, n_docs + 1))
+    segs = []
+    per = max((target_len - 40) // n_docs, 24)
+    for i in range(1, n_docs + 1):
+        segs.append(f"doc{i}: " + _filler_block(r, per - 20))
+        if i == target:
+            segs.append(f"the word {w} is here. ")
+    return "".join(segs) + f"Q doc {w}\nA ", str(target)
+
+
+def lcc(r, target_len):
+    lines = []
+    used = 0
+    vals = {}
+    i = 0
+    while used < target_len - 30:
+        i += 1
+        v = int(r.integers(100, 999))
+        vals[i] = v
+        line = f"let a{i} = {v};"
+        lines.append(line)
+        used += len(line) + 1
+    k = int(r.integers(1, i + 1))
+    return "\n".join(lines) + f"\na{k} == ", str(vals[k])
+
+
+def repobench(r, target_len):
+    lines = []
+    used = 0
+    vals = {}
+    i = 0
+    while used < target_len - 40:
+        i += 1
+        v = int(r.integers(100, 999))
+        vals[i] = v
+        line = f"file{(i % 3) + 1}.rs: let b{i} = {v};"
+        lines.append(line)
+        used += len(line) + 1
+    k = int(r.integers(1, i + 1))
+    return "\n".join(lines) + f"\nb{k} == ", str(vals[k])
+
+
+def kvret(r, target_len):
+    return niah_multikey(r, target_len, 5)
+
+
+LONGBENCH_SUBSETS = {
+    "sdqa": sdqa,
+    "mdqa": mdqa,
+    "summ": summ,
+    "trec": trec,
+    "fewshot_math": fewshot_math,
+    "count": count_task,
+    "passage_ret": passage_ret,
+    "lcc": lcc,
+    "repobench": repobench,
+    "kvret": kvret,
+}
+
+
+# --------------------------------------------------------------------------
+# aime-mini: chain-of-thought integer arithmetic (decode-phase workload)
+
+
+def aime(r, n_steps=None):
+    """Returns (prompt, full_cot, answer). The model is trained to emit the
+    whole chain; evaluation parses the final 'ANSWER n' line."""
+    n_steps = n_steps or int(r.integers(6, 11))
+    x = int(r.integers(10, 90))
+    ops = []
+    cur = x
+    for _ in range(n_steps):
+        while True:
+            op = AIME_OPS[int(r.integers(0, len(AIME_OPS)))]
+            n = int(r.integers(2, 9)) if op == "*" else int(r.integers(2, 99))
+            nxt = cur * n if op == "*" else (cur + n if op == "+" else cur - n)
+            if 0 < nxt < 9000:
+                break
+        ops.append((op, n))
+        cur = nxt
+    prompt = f"start {x}\nops " + " ".join(f"{o}{n}" for o, n in ops) + "\nA "
+    steps = []
+    v = x
+    for o, n in ops:
+        v = v * n if o == "*" else (v + n if o == "+" else v - n)
+        steps.append(f"{o}{n} -> {v}")
+    cot = "\n".join(steps) + f"\nANSWER {cur}"
+    return prompt, cot, str(cur)
+
+
+# --------------------------------------------------------------------------
+# Training mixture
+
+
+def _multilingual_block(r, n_bytes):
+    """Accented-latin filler — the multilingual subset proxy."""
+    toks = ["søren går", "el río es", "die straße", "põhja tuul", "çok güzel",
+            "länge väg", "außer dem", "ça marche"]
+    out, size = [], 0
+    while size < n_bytes:
+        s = toks[int(r.integers(0, len(toks)))] + " "
+        out.append(s)
+        size += len(s)
+    return "".join(out)
+
+
+def training_text(r, seq_len: int):
+    """One training document: a task instance (with its answer) or filler.
+
+    Returns (doc_bytes, answer_spans): spans are byte ranges (in doc
+    coordinates, after the BOS) covering answer/chain-of-thought tokens —
+    the LM loss upweights them, since retrieval answers are a tiny fraction
+    of the byte stream (train.py, ANSWER_WEIGHT)."""
+    kind = int(r.integers(0, 10))
+    target = seq_len - 24
+    spans = []
+    if kind <= 5:   # ruler-style retrieval tasks — the core capability
+        name = list(RULER_SUBSETS)[int(r.integers(0, len(RULER_SUBSETS)))]
+        # vary prompt lengths so retrieval generalizes across contexts
+        tgt = int(r.integers(max(target // 2, 48), target + 1))
+        p, a = RULER_SUBSETS[name](r, tgt)
+        text = p + a + "\n"
+        spans.append((len(p), len(text)))
+        # pack a second instance when budget remains (more retrieval
+        # signal per document)
+        if len(text) + 72 < target:
+            p2, a2 = RULER_SUBSETS[name](r, target - len(text))
+            spans.append((len(text) + len(p2), len(text) + len(p2) + len(a2) + 1))
+            text += p2 + a2 + "\n"
+    elif kind <= 7:  # longbench-style tasks
+        name = list(LONGBENCH_SUBSETS)[int(r.integers(0, len(LONGBENCH_SUBSETS)))]
+        p, a = LONGBENCH_SUBSETS[name](r, target)
+        text = p + a + "\n"
+        spans.append((len(p), len(text)))
+    elif kind == 8:  # reasoning chains (decode-phase capability)
+        p, cot, _ = aime(r)
+        text = p + cot + "\n"
+        spans.append((len(p), len(text)))
+        if len(text) < target:
+            p2, cot2, _ = aime(r)
+            spans.append((len(text) + len(p2), len(text) + len(p2) + len(cot2) + 1))
+            text += p2 + cot2 + "\n"
+    else:            # multilingual / plain filler (common-crawl proxy)
+        text = (_multilingual_block(r, target) if int(r.integers(0, 2)) == 0
+                else _filler_block(r, target))
+    enc = text.encode("utf-8", errors="replace")[: seq_len - 2]
+    doc = bytes([BOS]) + enc + bytes([EOS])
+    # shift spans by 1 for BOS and clip to the doc
+    spans = [(s + 1, min(e + 1, len(doc))) for s, e in spans if s + 1 < len(doc)]
+    return doc, spans
+
+
+def training_batch(r, batch: int, seq_len: int):
+    """Returns (tokens [B, S] int32, answer_mask [B, S] f32)."""
+    out = np.zeros((batch, seq_len), np.int32)
+    ans = np.zeros((batch, seq_len), np.float32)
+    for b in range(batch):
+        doc, spans = training_text(r, seq_len)
+        out[b, : len(doc)] = np.frombuffer(doc, np.uint8)
+        for s, e in spans:
+            ans[b, s:e] = 1.0
+    return out, ans
+
+
+def surrogate_prompt(r, seq_len: int):
+    """A prompt (no answer) for KVzip+ oracle scoring — mixed subsets, like
+    the paper's Nemotron-Pretraining sample."""
+    doc, _spans = training_text(r, seq_len)
+    arr = np.zeros((seq_len,), np.int32)
+    arr[: len(doc)] = np.frombuffer(doc, np.uint8)
+    return arr, len(doc)

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for the KVzap reproduction (all interpret=True on CPU)."""
+
+from .attention import attention_with_stats
+from .masked_decode import decode_attention
+from .surrogate import surrogate_linear, surrogate_mlp
+
+__all__ = [
+    "attention_with_stats",
+    "decode_attention",
+    "surrogate_linear",
+    "surrogate_mlp",
+]

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: single-step masked decode attention.
+
+During decoding the cache is a dense [S, D] buffer (S = t_max + 1; the last
+row holds the KV pair produced this step) with a per-head keep-mask — the
+XLA-side view of the rust paged cache manager (DESIGN.md §4): eviction flips
+mask bits, the block tables that account for the freed memory live in rust.
+
+The query is a single row per head, so the whole K/V panel fits in VMEM
+(S·D·4 B ≈ 49 KiB per head at zap-lm scale, ~256 KiB at paper scale) and the
+kernel is one grid step per group-head; a real-TPU deployment would tile S
+only beyond ~32k cache slots. The kernel also emits the attention row summed
+over the GQA group — the decode-time statistic update for H2O-style
+baselines (KVzap itself never needs it: its scores come from hidden states).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, row_ref):
+    q = q_ref[...]                     # [G, D]
+    k = k_ref[...]                     # [S, D]
+    v = v_ref[...]
+    mask = m_ref[...] > 0.0            # [S]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # [G, S]
+    scores = jnp.where(mask[None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    a = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(a, v, preferred_element_type=jnp.float32)
+    row_ref[...] = jnp.sum(a, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k, v, mask, interpret: bool = True):
+    """Pallas version of ref.decode_attention_ref.
+
+    q: [G, D] (scaled + RoPE'd); k, v: [S, D]; mask: [S] (1 = attendable).
+    Returns (out [G, D], attn_row [S]).
+    """
+    G, D = q.shape
+    S = k.shape[0]
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((G, D), lambda i: (0, 0)),
+            pl.BlockSpec((S, D), lambda i: (0, 0)),
+            pl.BlockSpec((S, D), lambda i: (0, 0)),
+            pl.BlockSpec((S,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((G, D), lambda i: (0, 0)),
+            pl.BlockSpec((S,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, D), jnp.float32),
+            jax.ShapeDtypeStruct((S,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)

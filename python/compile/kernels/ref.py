@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the semantic ground truth: every Pallas kernel in this package is
+tested against these functions (pytest + hypothesis sweeps over shapes,
+lengths and dtypes in python/tests/test_kernels.py).
+
+Shapes follow the per-(batch, kv-head) kernel view:
+    q:      [G, T, D]   G = GQA group size (query heads per KV head)
+    k, v:   [T, D]
+and the statistics are the raw material for every pruning policy
+(KVzip / KVzip+ / H2O / SnapKV / StreamingLLM / ...), see DESIGN.md §3.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_with_stats_ref(q, k, v, hnorm_inv, true_len, stats_from, win_from):
+    """Causal GQA attention + per-KV-position score statistics.
+
+    Args:
+        q: [G, T, D] query vectors, already scaled by 1/sqrt(D) and RoPE'd.
+        k: [T, D] keys (RoPE'd), v: [T, D] values.
+        hnorm_inv: [T] reciprocal norms 1/||h_j|| of the *query* residual
+            stream (the KVzip+ normalization of Eq. 3).
+        true_len: scalar int — positions >= true_len are padding.
+        stats_from: scalar int — only queries j >= stats_from contribute to
+            max/maxn statistics. 0 for plain prefill; = true_len for the
+            KVzip repeated-prompt oracle (queries from the repeat only).
+        win_from: scalar int — queries j >= win_from contribute to win_attn
+            (SnapKV-style observed window).
+
+    Returns:
+        out:       [G, T, D] attention output.
+        max_attn:  [G, T]  max_j a_ji              (KVzip, Eq. 1)
+        maxn_attn: [G, T]  max_j a_ji / ||h_j||    (KVzip+ before vnorm, Eq. 3)
+        cum_attn:  [T]     sum_{g,j} a_ji          (H2O heavy-hitter score)
+        win_attn:  [T]     sum_{g, j>=win_from} a_ji  (SnapKV observed window)
+    """
+    G, T, D = q.shape
+    pos = jnp.arange(T)
+    causal = pos[:, None] >= pos[None, :]                 # [Tq, Tk]
+    valid_k = pos < true_len
+    mask = causal & valid_k[None, :]
+    scores = jnp.einsum("gtd,sd->gts", q, k)
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    a = jax.nn.softmax(scores, axis=-1)                   # [G, Tq, Tk]
+    valid_q = (pos < true_len).astype(a.dtype)
+    a = a * valid_q[None, :, None]                        # zero pad-query rows
+    out = jnp.einsum("gts,sd->gtd", a, v)
+
+    stats_q = valid_q * (pos >= stats_from).astype(a.dtype)
+    a_st = a * stats_q[None, :, None]
+    max_attn = jnp.max(a_st, axis=1)
+    maxn_attn = jnp.max(a_st * hnorm_inv[None, :, None], axis=1)
+    cum_attn = jnp.sum(a_st, axis=(0, 1))
+    win_q = valid_q * (pos >= win_from).astype(a.dtype)
+    win_attn = jnp.sum(a * win_q[None, :, None], axis=(0, 1))
+    return out, max_attn, maxn_attn, cum_attn, win_attn
+
+
+def decode_attention_ref(q, k, v, mask):
+    """Single-step masked decode attention over a dense padded cache.
+
+    Args:
+        q: [G, D] the new query (scaled, RoPE'd).
+        k, v: [S, D] cache (S = t_max + 1; row t_max holds this step's KV).
+        mask: [S] 1.0 = attendable, 0.0 = evicted / not-yet-filled.
+
+    Returns:
+        out: [G, D], attn_row: [S] (sum of attention over the group —
+        the decode-time H2O / oracle statistic update).
+    """
+    scores = jnp.einsum("gd,sd->gs", q, k)
+    scores = jnp.where(mask[None, :] > 0, scores, NEG_INF)
+    a = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("gs,sd->gd", a, v)
+    return out, jnp.sum(a, axis=0)
+
+
+def surrogate_linear_ref(h, w, b):
+    """KVzap-Linear scorer: h [T, Dh] @ w [Dh, H] + b [H] -> log-scores [T, H]."""
+    return h @ w + b
+
+
+def surrogate_mlp_ref(h, w1, b1, w2, b2):
+    """KVzap-MLP scorer (paper §4.1): GELU MLP with hidden width Dh/8."""
+    return jax.nn.gelu(h @ w1 + b1) @ w2 + b2

@@ -1,0 +1,87 @@
+"""L1 Pallas kernels: the KVzap surrogate scorers.
+
+The paper's central efficiency claim (Criterion 1, Appendix B) is that KV
+importance can be predicted from the residual stream with one or two small
+matmuls per layer: KVzap-Linear (h @ W) and KVzap-MLP (GELU(h @ W1) @ W2,
+hidden width D_h/8). These kernels tile the token axis in blocks of
+`block_t` rows; the weight panels ([Dh, H] / [Dh, Dm] + [Dm, H]) stay
+resident in VMEM across grid steps — at paper scale (Dh=4096, Dm=512) that
+is ~8.4 MiB in bf16, which fits; at zap-lm scale it is trivial.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(h_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = (
+        jnp.dot(h_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+
+
+def _mlp_kernel(h_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    z = jnp.dot(h_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+    z = jax.nn.gelu(z + b1_ref[...][None, :])
+    o_ref[...] = (
+        jnp.dot(z, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...][None, :]
+    )
+
+
+def _pad_rows(h, block_t):
+    T = h.shape[0]
+    tp = ((T + block_t - 1) // block_t) * block_t
+    if tp != T:
+        h = jnp.pad(h, ((0, tp - T), (0, 0)))
+    return h, tp
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def surrogate_linear(h, w, b, block_t: int = 128, interpret: bool = True):
+    """KVzap-Linear: h [T, Dh] -> log-score predictions [T, H]."""
+    T, Dh = h.shape
+    H = w.shape[1]
+    bt = min(block_t, T)
+    hp, tp = _pad_rows(h, bt)
+    out = pl.pallas_call(
+        _linear_kernel,
+        grid=(tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, Dh), lambda i: (i, 0)),
+            pl.BlockSpec((Dh, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, H), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, H), jnp.float32),
+        interpret=interpret,
+    )(hp, w, b)
+    return out[:T]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def surrogate_mlp(h, w1, b1, w2, b2, block_t: int = 128, interpret: bool = True):
+    """KVzap-MLP: h [T, Dh] -> GELU(h@W1+b1)@W2+b2, predictions [T, H]."""
+    T, Dh = h.shape
+    Dm = w1.shape[1]
+    H = w2.shape[1]
+    bt = min(block_t, T)
+    hp, tp = _pad_rows(h, bt)
+    out = pl.pallas_call(
+        _mlp_kernel,
+        grid=(tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, Dh), lambda i: (i, 0)),
+            pl.BlockSpec((Dh, Dm), lambda i: (0, 0)),
+            pl.BlockSpec((Dm,), lambda i: (0,)),
+            pl.BlockSpec((Dm, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, H), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, H), jnp.float32),
+        interpret=interpret,
+    )(hp, w1, b1, w2, b2)
+    return out[:T]

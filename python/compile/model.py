@@ -1,0 +1,468 @@
+"""L2: zap-lm — the JAX model whose KV cache KVzap prunes.
+
+A byte-level GQA transformer (RoPE + RMSNorm + SwiGLU — the Qwen3/Llama-3
+architectural family, scaled for single-core CPU pretraining, DESIGN.md §2).
+All attention goes through the L1 Pallas kernels; the same code path is
+
+  * trained at build time (train.py),
+  * probed for KVzip+ oracle scores (kvzip_plus_scores → surrogate targets),
+  * AOT-lowered to the HLO artifacts the rust coordinator executes
+    (prefill / decode / kvzip_score, see aot.py).
+
+Prefill returns, besides the KV cache, every per-position statistic the rust
+pruning policies consume; decode consumes a dense masked cache and returns
+the updated cache plus the per-step statistics (surrogate scores, vnorm,
+attention row). Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import MODEL, OBS_WINDOW, ModelConfig
+from .kernels import (
+    attention_with_stats,
+    decode_attention,
+    surrogate_linear,
+    surrogate_mlp,
+)
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+
+def init_params(key, cfg: ModelConfig = MODEL):
+    """Initialize zap-lm + surrogate parameters (layer-stacked for lax.scan)."""
+    L, Dh, Di = cfg.n_layers, cfg.d_model, cfg.d_int
+    Hq, Hkv, D, Dm = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_surrogate
+    V = cfg.vocab
+    ks = jax.random.split(key, 12)
+
+    def norm_init(k, shape, fan_in):
+        return (jax.random.normal(k, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    return {
+        "embed": 0.02 * jax.random.normal(ks[0], (V, Dh)).astype(jnp.float32),
+        "layers": {
+            "ln1": jnp.ones((L, Dh), jnp.float32),
+            "ln2": jnp.ones((L, Dh), jnp.float32),
+            "wq": norm_init(ks[1], (L, Dh, Hq * D), Dh),
+            "wk": norm_init(ks[2], (L, Dh, Hkv * D), Dh),
+            "wv": norm_init(ks[3], (L, Dh, Hkv * D), Dh),
+            "wo": norm_init(ks[4], (L, Hq * D, Dh), Hq * D),
+            "wg": norm_init(ks[5], (L, Dh, Di), Dh),
+            "wu": norm_init(ks[6], (L, Dh, Di), Dh),
+            "wd": norm_init(ks[7], (L, Di, Dh), Di),
+        },
+        "ln_f": jnp.ones((Dh,), jnp.float32),
+        "w_out": norm_init(ks[8], (Dh, V), Dh),
+        "surrogate": {
+            "lin_w": jnp.zeros((L, Dh, Hkv), jnp.float32),
+            "lin_b": jnp.zeros((L, Hkv), jnp.float32),
+            "mlp_w1": norm_init(ks[9], (L, Dh, Dm), Dh),
+            "mlp_b1": jnp.zeros((L, Dm), jnp.float32),
+            "mlp_w2": jnp.zeros((L, Dm, Hkv), jnp.float32),
+            "mlp_b2": jnp.zeros((L, Hkv), jnp.float32),
+        },
+    }
+
+
+def model_param_count(params) -> int:
+    lm = {k: v for k, v in params.items() if k != "surrogate"}
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(lm))
+
+
+def surrogate_param_count(params, kind: str) -> int:
+    s = params["surrogate"]
+    if kind == "linear":
+        return int(s["lin_w"].size + s["lin_b"].size)
+    return int(s["mlp_w1"].size + s["mlp_b1"].size
+               + s["mlp_w2"].size + s["mlp_b2"].size)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+
+
+def rmsnorm(x, g, eps=MODEL.rms_eps):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope_tables(positions, cfg: ModelConfig = MODEL):
+    """cos/sin tables [T, D/2] for absolute integer positions."""
+    half = cfg.d_head // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., T, D] split-half rotation; cos/sin [T, D/2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(h, wg, wu, wd):
+    return (jax.nn.silu(h @ wg) * (h @ wu)) @ wd
+
+
+def head_vnorm(v_heads, wo, cfg: ModelConfig = MODEL):
+    """||W_O v_i|| per (kv-head, group-head, position) — the Eq. 3 factor.
+
+    v_heads: [Hkv, T, D]; wo: [Hq*D, Dh]. Returns [Hkv, G, T]: the norm of
+    each query-head's W_O slice applied to the kv-head's value.
+    """
+    G, D, Dh = cfg.group, cfg.d_head, cfg.d_model
+    wo_h = wo.reshape(cfg.n_kv_heads, G, D, Dh)       # query-head slices
+    contrib = jnp.einsum("htd,hgde->hgte", v_heads, wo_h)
+    return jnp.linalg.norm(contrib, axis=-1)          # [Hkv, G, T]
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+
+
+def _layer_prefill(h, layer, cos, sin, true_len, stats_from, win_from,
+                   cfg: ModelConfig, want_stats: bool = True):
+    """One transformer layer over [T, Dh]; returns (h_out, per-layer stats)."""
+    Hq, Hkv, D, G = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head, cfg.group
+    T = h.shape[0]
+
+    # KVzap surrogate scores are predicted from the layer *input* hidden
+    # states (paper §3.3) — one or two matmuls, the whole of Criterion 1.
+    if want_stats:
+        s_lin = surrogate_linear(h, layer["slin_w"], layer["slin_b"])    # [T,Hkv]
+        s_mlp = surrogate_mlp(h, layer["smlp_w1"], layer["smlp_b1"],
+                              layer["smlp_w2"], layer["smlp_b2"])
+    hnorm = jnp.linalg.norm(h, axis=-1)                                  # [T]
+    hnorm_inv = 1.0 / jnp.maximum(hnorm, 1e-6)
+
+    x = rmsnorm(h, layer["ln1"])
+    q = (x @ layer["wq"]).reshape(T, Hq, D).transpose(1, 0, 2)           # [Hq,T,D]
+    k = (x @ layer["wk"]).reshape(T, Hkv, D).transpose(1, 0, 2)          # [Hkv,T,D]
+    v = (x @ layer["wv"]).reshape(T, Hkv, D).transpose(1, 0, 2)
+    q = apply_rope(q, cos, sin) / jnp.sqrt(D).astype(jnp.float32)
+    k = apply_rope(k, cos, sin)
+
+    qg = q.reshape(Hkv, G, T, D)
+    out, max_attn, maxn_attn, cum_attn, win_attn = jax.vmap(
+        lambda qh, kh, vh: attention_with_stats(
+            qh, kh, vh, hnorm_inv, true_len, stats_from, win_from)
+    )(qg, k, v)
+    # out: [Hkv, G, T, D] -> [T, Hq*D]
+    out = out.reshape(Hq, T, D).transpose(1, 0, 2).reshape(T, Hq * D)
+    h = h + out @ layer["wo"]
+    h = h + swiglu(rmsnorm(h, layer["ln2"]),
+                   layer["wg"], layer["wu"], layer["wd"])
+
+    if not want_stats:
+        return h, None
+    vnorm_g = head_vnorm(v, layer["wo"], cfg)                            # [Hkv,G,T]
+    stats = {
+        "k": k, "v": v,                                                  # [Hkv,T,D]
+        "score_lin": s_lin.T, "score_mlp": s_mlp.T,                      # [Hkv,T]
+        # KVzip Eq. 1 (max over queries and over the GQA group):
+        "max_attn": jnp.max(max_attn, axis=1),                           # [Hkv,T]
+        # KVzip+ Eq. 3: max over group of (max_j a_ji/||h_j||) * ||W_O v_i||
+        "plus_attn": jnp.max(maxn_attn * vnorm_g, axis=1),               # [Hkv,T]
+        "cum_attn": cum_attn,                                            # [Hkv,T]
+        "win_attn": win_attn,                                            # [Hkv,T]
+        "vnorm": jnp.max(vnorm_g, axis=1),                               # [Hkv,T]
+        "knorm": jnp.linalg.norm(k, axis=-1),                            # [Hkv,T]
+        "hidden": h,                                                     # next layer's input
+    }
+    return h, stats
+
+
+def _scan_layers(params, cfg: ModelConfig):
+    """Merge model-layer and surrogate weights into one scan-able pytree."""
+    lay = dict(params["layers"])
+    s = params["surrogate"]
+    lay.update({
+        "slin_w": s["lin_w"], "slin_b": s["lin_b"],
+        "smlp_w1": s["mlp_w1"], "smlp_b1": s["mlp_b1"],
+        "smlp_w2": s["mlp_w2"], "smlp_b2": s["mlp_b2"],
+    })
+    return lay
+
+
+def prefill_single(params, tokens, true_len, stats_from=0,
+                   cfg: ModelConfig = MODEL, t_out=None, collect_hidden=False):
+    """Prefill one sequence. tokens: [T] int32, true_len: scalar.
+
+    Returns (last-position logits [V], dict of stacked per-layer stats
+    [L, ...] with the token axis padded to t_out slots — default cfg.t_max,
+    so prefill KV output buffers plug directly into the decode cache).
+    stats_from > 0 restricts max/maxn statistics to queries >= stats_from
+    (the KVzip repeated-prompt oracle pass).
+    """
+    T = tokens.shape[0]
+    t_out = t_out or cfg.t_max
+    h = params["embed"][tokens]                                          # [T, Dh]
+    cos, sin = rope_tables(jnp.arange(T), cfg)
+    win_from = jnp.maximum(true_len - OBS_WINDOW, 0)
+    layers = _scan_layers(params, cfg)
+
+    def step(h, layer):
+        h2, stats = _layer_prefill(h, layer, cos, sin, true_len,
+                                   stats_from, win_from, cfg)
+        if not collect_hidden:
+            stats = {k: v for k, v in stats.items() if k != "hidden"}
+        return h2, stats
+
+    h0 = h
+    h, stats = jax.lax.scan(step, h, layers)
+    if collect_hidden:
+        # Surrogate input = layer *input* hidden states: h0 for layer 0,
+        # layer l-1's output for layer l.
+        stats["hidden"] = jnp.concatenate(
+            [h0[None], stats["hidden"][:-1]], axis=0)                    # [L,T,Dh]
+
+    hf = rmsnorm(h, params["ln_f"])
+    last = jnp.take(hf, jnp.maximum(true_len - 1, 0), axis=0)
+    logits = last @ params["w_out"]                                      # [V]
+
+    pad = t_out - T
+    if pad > 0:
+        stats = {
+            k: (jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))) if v.ndim == 4
+                else jnp.pad(v, ((0, 0), (0, 0), (0, pad))) if v.ndim == 3
+                else jnp.pad(v, ((0, 0), (0, pad), (0, 0))))
+            for k, v in stats.items()
+        }
+    return logits, stats
+
+
+def prefill_batch(params, tokens, true_len, cfg: ModelConfig = MODEL):
+    """AOT prefill entrypoint. tokens [B, T] int32, true_len [B] int32.
+
+    Output order (the rust runtime indexes the HLO tuple by this order):
+      logits      [B, V]
+      kcache      [L, B, Hkv, t_max, D]
+      vcache      [L, B, Hkv, t_max, D]
+      score_lin   [L, B, Hkv, t_max]   KVzap-Linear log-score predictions
+      score_mlp   [L, B, Hkv, t_max]   KVzap-MLP  log-score predictions
+      max_attn    [L, B, Hkv, t_max]   observed KVzip-style statistic
+      plus_attn   [L, B, Hkv, t_max]   observed KVzip+-style statistic
+      cum_attn    [L, B, Hkv, t_max]   H2O accumulated attention
+      win_attn    [L, B, Hkv, t_max]   SnapKV observed-window attention
+      vnorm       [L, B, Hkv, t_max]   ||W_O v_i||
+      knorm       [L, B, Hkv, t_max]   ||k_i||
+    """
+    logits, stats = jax.vmap(
+        lambda t, n: prefill_single(params, t, n, 0, cfg))(tokens, true_len)
+    # vmap puts B in front of the scanned L axis -> [B, L, ...]; move B inside.
+    stats = {k: jnp.moveaxis(v, 0, 1) for k, v in stats.items()}
+    return (
+        logits,
+        stats["k"], stats["v"],
+        stats["score_lin"], stats["score_mlp"],
+        stats["max_attn"], stats["plus_attn"],
+        stats["cum_attn"], stats["win_attn"],
+        stats["vnorm"], stats["knorm"],
+    )
+
+
+PREFILL_OUTPUTS = [
+    "logits", "kcache", "vcache", "score_lin", "score_mlp",
+    "max_attn", "plus_attn", "cum_attn", "win_attn", "vnorm", "knorm",
+]
+
+
+# ---------------------------------------------------------------------------
+# KVzip oracle (repeated-prompt double pass, Eq. 1 / Eq. 3)
+
+
+def kvzip_scores(params, tokens, true_len, cfg: ModelConfig = MODEL):
+    """Oracle scoring pass: forward over [prompt; prompt] of static length 2T.
+
+    tokens: [T]; the repeat is placed at dynamic offset true_len, so valid
+    content occupies [0, 2*true_len). Only queries j >= true_len contribute
+    to the max statistics — exactly "how much does the model attend to
+    position i when repeating the prompt" (paper §3.1).
+
+    Returns (s [L, Hkv, T], s_plus [L, Hkv, T]) for the original prompt.
+    """
+    T = tokens.shape[0]
+    tok2 = jnp.zeros((2 * T,), tokens.dtype)
+    tok2 = jax.lax.dynamic_update_slice(tok2, tokens, (0,))
+    tok2 = jax.lax.dynamic_update_slice(tok2, tokens, (true_len,))
+    _, stats = prefill_single(params, tok2, 2 * true_len, stats_from=true_len,
+                              cfg=cfg, t_out=2 * T)
+    return stats["max_attn"][:, :, :T], stats["plus_attn"][:, :, :T]
+
+
+def kvzip_batch(params, tokens, true_len, cfg: ModelConfig = MODEL):
+    """AOT oracle entrypoint (B=1). tokens [1, T], true_len [1].
+
+    Output order: s [L, 1, Hkv, T], s_plus [L, 1, Hkv, T].
+    """
+    s, sp = jax.vmap(lambda t, n: kvzip_scores(params, t, n, cfg))(
+        tokens, true_len)
+    return jnp.moveaxis(s, 0, 1), jnp.moveaxis(sp, 0, 1)
+
+
+KVZIP_OUTPUTS = ["s", "s_plus"]
+
+
+# ---------------------------------------------------------------------------
+# Surrogate-target collection (build-time only; used by train_surrogate.py)
+
+
+def collect_pairs(params, tokens, true_len, cfg: ModelConfig = MODEL):
+    """Return (hidden [L, T, Dh], log-target s+ [L, Hkv, T]) for training."""
+    T = tokens.shape[0]
+    _, pre = prefill_single(params, tokens, true_len, 0, cfg, t_out=T,
+                            collect_hidden=True)
+    _, s_plus = kvzip_scores(params, tokens, true_len, cfg)
+    return pre["hidden"], s_plus
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+
+def decode_single(params, token, pos, kcache, vcache, mask,
+                  cfg: ModelConfig = MODEL):
+    """Decode one step for one sequence.
+
+    token: scalar int32; pos: scalar int32 (absolute position of this token);
+    kcache/vcache: [L, Hkv, t_max, D]; mask: [L, Hkv, t_max] (1 = attendable).
+
+    Returns (logits [V], kcache', vcache' (new KV written at slot `pos`),
+    score_lin/score_mlp/vnorm [L, Hkv], attn_row [L, Hkv, t_max+1] — the
+    last column is the new token's self-attention).
+    """
+    Hq, Hkv, D, G = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head, cfg.group
+    h = params["embed"][token]                                           # [Dh]
+    cos, sin = rope_tables(pos[None] if pos.ndim == 0 else pos, cfg)     # [1,D/2]
+    layers = _scan_layers(params, cfg)
+
+    def step(h, xs):
+        layer, kc, vc, msk = xs
+        s_lin = surrogate_linear(h[None], layer["slin_w"], layer["slin_b"],
+                                 block_t=1)[0]
+        s_mlp = surrogate_mlp(h[None], layer["smlp_w1"], layer["smlp_b1"],
+                              layer["smlp_w2"], layer["smlp_b2"], block_t=1)[0]
+        x = rmsnorm(h, layer["ln1"])
+        q = (x @ layer["wq"]).reshape(Hq, 1, D)
+        kn = (x @ layer["wk"]).reshape(Hkv, 1, D)
+        vn = (x @ layer["wv"]).reshape(Hkv, 1, D)
+        q = apply_rope(q, cos, sin)[:, 0] / jnp.sqrt(D).astype(jnp.float32)
+        kn = apply_rope(kn, cos, sin)[:, 0]                              # [Hkv, D]
+        vn = vn[:, 0]
+
+        # Cache + the new KV appended as row t_max (static shape t_max+1).
+        kx = jnp.concatenate([kc, kn[:, None, :]], axis=1)               # [Hkv,S,D]
+        vx = jnp.concatenate([vc, vn[:, None, :]], axis=1)
+        mx = jnp.concatenate([msk, jnp.ones((Hkv, 1), msk.dtype)], axis=1)
+
+        qg = q.reshape(Hkv, G, D)
+        out, row = jax.vmap(decode_attention)(qg, kx, vx, mx)
+        out = out.reshape(Hq * D)
+        h2 = h + out @ layer["wo"]
+        h2 = h2 + swiglu(rmsnorm(h2, layer["ln2"]),
+                         layer["wg"], layer["wu"], layer["wd"])
+
+        vnorm = jnp.max(head_vnorm(vn[:, None, :], layer["wo"], cfg)[:, :, 0],
+                        axis=1)                                          # [Hkv]
+        # Write the new KV into its true cache slot.
+        kc2 = jax.vmap(lambda c, n: jax.lax.dynamic_update_slice(
+            c, n[None], (pos, 0)))(kc, kn)
+        vc2 = jax.vmap(lambda c, n: jax.lax.dynamic_update_slice(
+            c, n[None], (pos, 0)))(vc, vn)
+        return h2, (kc2, vc2, s_lin, s_mlp, vnorm, row)
+
+    h, ys = jax.lax.scan(step, h, (layers, kcache, vcache, mask))
+    kcache2, vcache2, s_lin, s_mlp, vnorm, rows = ys
+    logits = rmsnorm(h, params["ln_f"]) @ params["w_out"]
+    return logits, kcache2, vcache2, s_lin, s_mlp, vnorm, rows
+
+
+def decode_batch(params, tokens, pos, kcache, vcache, mask,
+                 cfg: ModelConfig = MODEL):
+    """AOT decode entrypoint. tokens [B], pos [B],
+    kcache/vcache [L, B, Hkv, t_max, D], mask [L, B, Hkv, t_max].
+
+    Output order:
+      logits [B, V]; kcache'/vcache' [L, B, Hkv, t_max, D];
+      score_lin/score_mlp/vnorm [L, B, Hkv]; attn_row [L, B, Hkv, t_max+1].
+    """
+    kc = jnp.moveaxis(kcache, 1, 0)
+    vc = jnp.moveaxis(vcache, 1, 0)
+    mk = jnp.moveaxis(mask, 1, 0)
+    outs = jax.vmap(
+        lambda t, p, k, v, m: decode_single(params, t, p, k, v, m, cfg)
+    )(tokens, pos, kc, vc, mk)
+    logits, kc2, vc2, s_lin, s_mlp, vnorm, rows = outs
+    return (
+        logits,
+        jnp.moveaxis(kc2, 0, 1), jnp.moveaxis(vc2, 0, 1),
+        jnp.moveaxis(s_lin, 0, 1), jnp.moveaxis(s_mlp, 0, 1),
+        jnp.moveaxis(vnorm, 0, 1), jnp.moveaxis(rows, 0, 1),
+    )
+
+
+DECODE_OUTPUTS = [
+    "logits", "kcache", "vcache", "score_lin", "score_mlp", "vnorm", "attn_row",
+]
+
+
+# ---------------------------------------------------------------------------
+# Training loss (build-time pretraining)
+
+
+def _layer_train(h, layer, cos, sin, cfg: ModelConfig):
+    """Training-path layer forward: pure-jnp attention (pallas_call has no
+    VJP rule, so jax.grad cannot flow through the L1 kernels; the math is
+    identical and is cross-checked in python/tests/test_model.py)."""
+    Hq, Hkv, D, G = cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head, cfg.group
+    T = h.shape[0]
+    x = rmsnorm(h, layer["ln1"])
+    q = (x @ layer["wq"]).reshape(T, Hq, D).transpose(1, 0, 2)
+    k = (x @ layer["wk"]).reshape(T, Hkv, D).transpose(1, 0, 2)
+    v = (x @ layer["wv"]).reshape(T, Hkv, D).transpose(1, 0, 2)
+    q = apply_rope(q, cos, sin) / jnp.sqrt(D).astype(jnp.float32)
+    k = apply_rope(k, cos, sin)
+    qg = q.reshape(Hkv, G, T, D)
+    scores = jnp.einsum("hgtd,hsd->hgts", qg, k)
+    pos = jnp.arange(T)
+    causal = pos[:, None] >= pos[None, :]
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    a = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hgts,hsd->hgtd", a, v)
+    out = out.reshape(Hq, T, D).transpose(1, 0, 2).reshape(T, Hq * D)
+    h = h + out @ layer["wo"]
+    h = h + swiglu(rmsnorm(h, layer["ln2"]),
+                   layer["wg"], layer["wu"], layer["wd"])
+    return h
+
+
+def lm_loss(params, tokens, answer_mask=None, answer_weight=1.0,
+            cfg: ModelConfig = MODEL):
+    """Next-token cross-entropy over a [B, T] batch (PAD=0 positions masked).
+
+    answer_mask [B, T] upweights answer/chain-of-thought bytes by
+    `answer_weight`: retrieval answers are ~3% of the byte stream, so
+    without upweighting the induction behaviour the benchmarks test is
+    underrepresented in the gradient signal."""
+
+    def fwd(tok):
+        T = tok.shape[0]
+        h = params["embed"][tok]
+        cos, sin = rope_tables(jnp.arange(T), cfg)
+        layers = _scan_layers(params, cfg)
+
+        def step(h, layer):
+            return _layer_train(h, layer, cos, sin, cfg), None
+
+        h, _ = jax.lax.scan(step, h, layers)
+        return rmsnorm(h, params["ln_f"]) @ params["w_out"]
+
+    logits = jax.vmap(fwd)(tokens)                                       # [B,T,V]
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    weight = (targets != 0).astype(jnp.float32)
+    if answer_mask is not None:
+        weight = weight * (1.0 + (answer_weight - 1.0) * answer_mask[:, 1:])
+    return jnp.sum(nll * weight) / jnp.maximum(jnp.sum(weight), 1.0)

@@ -1,0 +1,104 @@
+"""The `make artifacts` entrypoint: train -> fit surrogates -> AOT export.
+
+Runs ONCE at build time; the rust binary is self-contained afterwards.
+Produces in artifacts/:
+    weights.bin             all parameter tensors (LE f32, manifest order)
+    manifest.json           model dims, buckets, IO specs, thresholds
+    surrogate_metrics.json  Table 1 / Figs 6-8 data (R², score histograms)
+    *.hlo.txt               prefill / decode / kvzip_score artifacts
+and in results/: fig6_8 CSVs (score distribution + R² heatmaps).
+
+KVZAP_FAST=1 shrinks training for smoke runs (CI); the default budget is
+sized for a single CPU core (~10 min).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from . import aot, train, train_surrogate, weights_io
+from .config import MODEL, fast_mode
+
+
+def _write_fig6_8_csvs(metrics, results_dir):
+    os.makedirs(results_dir, exist_ok=True)
+    # Fig 6-8 left: KVzip+ log-score distribution.
+    with open(f"{results_dir}/fig6_8_score_hist.csv", "w") as f:
+        f.write("bin_left,bin_right,count\n")
+        edges = metrics["target_hist_edges"]
+        for i, c in enumerate(metrics["target_hist"]):
+            f.write(f"{edges[i]:.4f},{edges[i+1]:.4f},{c}\n")
+    # Fig 6-8 right: per-(layer, head) R² heatmap + linear-vs-mlp scatter.
+    with open(f"{results_dir}/fig6_8_r2_heads.csv", "w") as f:
+        f.write("layer,head,r2_linear,r2_mlp\n")
+        lin = metrics["r2_linear"]
+        mlp = metrics["r2_mlp"]
+        for l in range(len(lin)):
+            for h in range(len(lin[l])):
+                f.write(f"{l},{h},{lin[l][h]:.4f},{mlp[l][h]:.4f}\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--results", default="../results")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    t0 = time.time()
+    mode = "FAST (smoke)" if fast_mode() else "full"
+    print(f"[pipeline] {mode} build starting")
+
+    # Checkpoint-resume: pretraining is the longest phase; keep its output
+    # so a failure later in the pipeline never re-pays it.
+    ckpt_blob = f"{args.out}/checkpoint.bin"
+    ckpt_meta = f"{args.out}/checkpoint.json"
+    if (os.path.exists(ckpt_blob) and os.path.exists(ckpt_meta)
+            and os.environ.get("KVZAP_RETRAIN", "0") != "1"):
+        print("[pipeline] 1/4 reusing pretrained checkpoint "
+              "(KVZAP_RETRAIN=1 to retrain)")
+        import jax
+        import jax.numpy as jnp
+        from . import model
+        entries = json.load(open(ckpt_meta))
+        template = model.init_params(jax.random.PRNGKey(0))
+        params = weights_io.load_weights(ckpt_blob, entries["weights"], template)
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        losses = entries["losses"]
+    else:
+        print("[pipeline] 1/4 pretraining zap-lm ...")
+        params, losses = train.train()
+        entries = weights_io.save_weights(params, ckpt_blob)
+        with open(ckpt_meta, "w") as f:
+            json.dump({"weights": entries, "losses": losses}, f)
+    print(f"[pipeline] final loss {losses[-1]:.4f} "
+          f"({time.time()-t0:.0f}s)")
+
+    print("[pipeline] 2/4 fitting KVzap surrogates against KVzip+ oracle ...")
+    params, metrics = train_surrogate.train_surrogates(params)
+    print(f"[pipeline] Table 1  |  R2 linear {metrics['r2_linear_mean']:.3f}"
+          f"  R2 mlp {metrics['r2_mlp_mean']:.3f}")
+    metrics["train_losses"] = losses
+    with open(f"{args.out}/surrogate_metrics.json", "w") as f:
+        json.dump(metrics, f, indent=1)
+    _write_fig6_8_csvs(metrics, args.results)
+
+    print("[pipeline] 3/4 writing weights blob ...")
+    entries = weights_io.save_weights(params, f"{args.out}/weights.bin")
+
+    print("[pipeline] 4/4 AOT-lowering HLO artifacts ...")
+    manifest = aot.export_artifacts(params, args.out)
+    manifest["weights"] = entries
+    # Default threshold sweep for the benches: quantiles of the oracle
+    # log-score distribution (the paper sweeps tau per model the same way).
+    manifest["threshold_quantiles"] = metrics["target_quantiles"]
+    weights_io.save_manifest(f"{args.out}/manifest.json", manifest)
+
+    print(f"[pipeline] done in {time.time()-t0:.0f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

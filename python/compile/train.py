@@ -1,0 +1,90 @@
+"""Build-time pretraining of zap-lm (single CPU core, minutes).
+
+Two phases: bulk steps at short sequences, then a long-sequence phase so
+RoPE generalizes to the evaluation contexts (128–512). Adam + cosine decay
+and gradient clipping are implemented inline (optax is not available in this
+image). Only the LM parameters train; the surrogate heads stay frozen here
+and are fit afterwards by train_surrogate.py against KVzip+ targets.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .config import MODEL, TrainConfig, train_config
+
+# Answer/chain-of-thought bytes are ~3% of the stream; upweighting them
+# concentrates gradient signal on the retrieval/induction behaviour the
+# benchmarks measure (see corpus.training_text spans).
+ANSWER_WEIGHT = 10.0
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, wd, clip, b1=0.9, b2=0.95, eps=1e-8):
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g)
+                         for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda x: x / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda x: x / (1 - b2 ** t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / (jnp.sqrt(vv) + eps) + wd * p),
+        params, mh, vh)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def _freeze_surrogate(grads):
+    """Surrogate heads are trained separately against KVzip+ targets."""
+    grads = dict(grads)
+    grads["surrogate"] = jax.tree_util.tree_map(
+        jnp.zeros_like, grads["surrogate"])
+    return grads
+
+
+def train(cfg: TrainConfig = None, log=print):
+    cfg = cfg or train_config()
+    r = corpus.rng_for(cfg.seed)
+    params = model.init_params(jax.random.PRNGKey(cfg.seed))
+    opt = adam_init(params)
+    total = cfg.steps1 + cfg.steps2
+
+    @jax.jit
+    def step_fn(params, opt, batch, ans, lr):
+        loss, grads = jax.value_and_grad(model.lm_loss)(
+            params, batch, ans, ANSWER_WEIGHT)
+        grads = _freeze_surrogate(grads)
+        params, opt = adam_update(params, grads, opt, lr,
+                                  cfg.weight_decay, cfg.clip)
+        return params, opt, loss
+
+    losses = []
+    t0 = time.time()
+    for step in range(total):
+        if step < cfg.steps1:
+            batch, ans = corpus.training_batch(r, cfg.batch1, cfg.seq1)
+        else:
+            batch, ans = corpus.training_batch(r, cfg.batch2, cfg.seq2)
+        frac = step / max(total - 1, 1)
+        warm = min((step + 1) / cfg.warmup, 1.0)
+        lr = cfg.lr * warm * 0.5 * (1 + np.cos(np.pi * frac))
+        params, opt, loss = step_fn(params, opt, jnp.asarray(batch),
+                                    jnp.asarray(ans),
+                                    jnp.asarray(lr, jnp.float32))
+        losses.append(float(loss))
+        if step % 25 == 0 or step == total - 1:
+            log(f"  train step {step:4d}/{total} loss {float(loss):.4f} "
+                f"lr {lr:.2e} ({time.time()-t0:.0f}s)")
+    return params, losses

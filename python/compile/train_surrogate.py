@@ -1,0 +1,155 @@
+"""Fit the KVzap surrogates against KVzip+ oracle scores (paper §4.1).
+
+Pipeline:
+  1. Sample diverse prompts from the corpus mixture; run the KVzip+ oracle
+     (repeated-prompt double pass) to obtain log(s+) targets per (layer,
+     kv-head, position); pair them with the layer-input hidden states.
+  2. KVzap-Linear: per-layer ridge regression, closed form.
+  3. KVzap-MLP: per-layer 2-layer GELU MLP (hidden width D_h/8), Adam on MSE.
+  4. Report per-head R² on a holdout split (Table 1 / Figs 6–8 data) and
+     write the fitted weights back into the params pytree so aot.py bakes
+     them into the artifacts' weight manifest.
+
+sklearn/skorch (the paper's tooling) are unavailable in this image; the
+ridge solve and the Adam loop are implemented inline in jax.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .config import MODEL, SurrogateTrainConfig, surrogate_config
+
+
+def collect_dataset(params, cfg: SurrogateTrainConfig, log=print):
+    """Returns X [N, L, Dh] hidden states and Y [N, L, Hkv] log(s+) targets."""
+    r = corpus.rng_for(cfg.seed)
+    T = cfg.prompt_len
+    collect = jax.jit(lambda t, n: model.collect_pairs(params, t, n))
+    xs, ys = [], []
+    t0 = time.time()
+    for i in range(cfg.n_prompts):
+        tok, true_len = corpus.surrogate_prompt(r, T)
+        hidden, s_plus = collect(jnp.asarray(tok), jnp.asarray(true_len))
+        hidden = np.asarray(hidden)           # [L, T, Dh]
+        target = np.log(np.maximum(np.asarray(s_plus), 1e-9))  # [L, Hkv, T]
+        target = np.maximum(target, cfg.log_floor)
+        n_pos = min(cfg.positions_per_prompt, true_len - 2)
+        pos = r.choice(np.arange(1, true_len - 1), size=n_pos, replace=False)
+        xs.append(hidden[:, pos].transpose(1, 0, 2))      # [n, L, Dh]
+        ys.append(target[:, :, pos].transpose(2, 0, 1))   # [n, L, Hkv]
+        if i % 50 == 0:
+            log(f"  oracle scoring prompt {i}/{cfg.n_prompts} "
+                f"({time.time()-t0:.0f}s)")
+    return np.concatenate(xs), np.concatenate(ys)
+
+
+def fit_linear(X, Y, lam):
+    """Closed-form ridge per layer. X [N, Dh], Y [N, Hkv] -> (w, b)."""
+    mu = X.mean(0)
+    Xc = X - mu
+    A = Xc.T @ Xc + lam * len(X) * np.eye(X.shape[1], dtype=np.float64)
+    w = np.linalg.solve(A.astype(np.float64), (Xc.T @ (Y - Y.mean(0))).astype(np.float64))
+    w = w.astype(np.float32)
+    b = Y.mean(0) - mu @ w
+    return w, b
+
+
+def fit_mlp(X, Y, dm, cfg: SurrogateTrainConfig, seed):
+    """Per-layer MLP on MSE with Adam. X [N, Dh], Y [N, Hkv]."""
+    N, Dh = X.shape
+    H = Y.shape[1]
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "w1": (jax.random.normal(k1, (Dh, dm)) / np.sqrt(Dh)).astype(jnp.float32),
+        "b1": jnp.zeros((dm,), jnp.float32),
+        "w2": (jax.random.normal(k2, (dm, H)) / np.sqrt(dm)).astype(jnp.float32),
+        "b2": jnp.asarray(np.tile(Y.mean(0, keepdims=True), (1, 1))[0],
+                          jnp.float32),
+    }
+    m = jax.tree_util.tree_map(jnp.zeros_like, p)
+    v = jax.tree_util.tree_map(jnp.zeros_like, p)
+
+    def loss_fn(p, x, y):
+        pred = jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+        return jnp.mean((pred - y) ** 2)
+
+    @jax.jit
+    def step(p, m, v, x, y, t):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        m = jax.tree_util.tree_map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree_util.tree_map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree_util.tree_map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree_util.tree_map(lambda a: a / (1 - 0.999 ** t), v)
+        p = jax.tree_util.tree_map(
+            lambda pp, a, b: pp - cfg.mlp_lr * a / (jnp.sqrt(b) + 1e-8),
+            p, mh, vh)
+        return p, m, v, loss
+
+    rs = np.random.default_rng(seed)
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    for t in range(1, cfg.mlp_steps + 1):
+        idx = rs.integers(0, N, size=min(cfg.mlp_batch, N))
+        p, m, v, loss = step(p, m, v, Xj[idx], Yj[idx],
+                             jnp.asarray(t, jnp.float32))
+    return {k: np.asarray(x) for k, x in p.items()}
+
+
+def r2_score(pred, y):
+    ss_res = np.sum((pred - y) ** 2, axis=0)
+    ss_tot = np.sum((y - y.mean(0)) ** 2, axis=0) + 1e-9
+    return 1.0 - ss_res / ss_tot
+
+
+def train_surrogates(params, cfg: SurrogateTrainConfig = None, log=print):
+    """Fit both surrogates; returns (params', metrics dict)."""
+    cfg = cfg or surrogate_config()
+    L, Hkv, Dm = MODEL.n_layers, MODEL.n_kv_heads, MODEL.d_surrogate
+    log(f"collecting surrogate dataset ({cfg.n_prompts} prompts)...")
+    X, Y = collect_dataset(params, cfg, log)
+    N = len(X)
+    n_hold = max(int(N * cfg.holdout_frac), 1)
+    perm = np.random.default_rng(cfg.seed).permutation(N)
+    tr, ho = perm[n_hold:], perm[:n_hold]
+    log(f"  {N} pairs ({len(tr)} train / {len(ho)} holdout) per layer")
+
+    s = {k: np.array(v) for k, v in params["surrogate"].items()}  # writable copies
+    r2_lin = np.zeros((L, Hkv))
+    r2_mlp = np.zeros((L, Hkv))
+    for l in range(L):
+        Xl, Yl = X[:, l], Y[:, l]
+        w, b = fit_linear(Xl[tr], Yl[tr], cfg.ridge_lambda)
+        s["lin_w"][l], s["lin_b"][l] = w, b
+        r2_lin[l] = r2_score(Xl[ho] @ w + b, Yl[ho])
+
+        mp = fit_mlp(Xl[tr], Yl[tr], Dm, cfg, cfg.seed + l)
+        s["mlp_w1"][l], s["mlp_b1"][l] = mp["w1"], mp["b1"]
+        s["mlp_w2"][l], s["mlp_b2"][l] = mp["w2"], mp["b2"]
+        pred = np.asarray(
+            jax.nn.gelu(Xl[ho] @ mp["w1"] + mp["b1"]) @ mp["w2"] + mp["b2"])
+        r2_mlp[l] = r2_score(pred, Yl[ho])
+        log(f"  layer {l}: R2 linear {r2_lin[l].mean():.3f} "
+            f"mlp {r2_mlp[l].mean():.3f}")
+
+    params = dict(params)
+    params["surrogate"] = {k: jnp.asarray(v) for k, v in s.items()}
+
+    # Score-distribution summary for threshold selection + Figs 6-8.
+    flatY = Y.reshape(-1)
+    qs = [0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+    metrics = {
+        "n_pairs": int(N),
+        "r2_linear": r2_lin.tolist(),
+        "r2_mlp": r2_mlp.tolist(),
+        "r2_linear_mean": float(r2_lin.mean()),
+        "r2_mlp_mean": float(r2_mlp.mean()),
+        "target_quantiles": {str(q): float(np.quantile(flatY, q)) for q in qs},
+        "target_hist": np.histogram(flatY, bins=40)[0].tolist(),
+        "target_hist_edges": np.histogram(flatY, bins=40)[1].tolist(),
+        "below_median_frac": float((flatY < np.median(flatY)).mean()),
+    }
+    return params, metrics

@@ -1,0 +1,62 @@
+"""Weights interchange: params pytree <-> flat binary blob + JSON manifest.
+
+The HLO artifacts take every parameter tensor as a runtime input (keeping the
+HLO text small and checkpoint-independent). The rust runtime reads
+artifacts/weights.bin once, uploads each tensor as a device buffer in the
+order recorded here, and appends those buffers to every execute call.
+
+Blob layout: little-endian f32, tensors concatenated in jax tree-flatten
+order (dict keys sorted — deterministic). The manifest records, per tensor:
+name (path), shape, byte offset/length; plus the model/bucket metadata the
+rust side needs (see aot.py for the artifact-level input/output specs).
+"""
+
+import json
+
+import jax
+import numpy as np
+
+
+def flatten_params(params):
+    """Deterministic (name, array) list in jax tree-flatten order."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        out.append((name, np.asarray(leaf, np.float32)))
+    return out
+
+
+def save_weights(params, blob_path: str):
+    entries = []
+    offset = 0
+    with open(blob_path, "wb") as f:
+        for name, arr in flatten_params(params):
+            data = arr.astype("<f4").tobytes()
+            entries.append({
+                "name": name,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "bytes": len(data),
+            })
+            f.write(data)
+            offset += len(data)
+    return entries
+
+
+def load_weights(blob_path: str, entries, template):
+    """Rebuild a params pytree (used by tests for round-trip checks)."""
+    with open(blob_path, "rb") as f:
+        blob = f.read()
+    flat = []
+    for e in entries:
+        arr = np.frombuffer(blob[e["offset"]: e["offset"] + e["bytes"]],
+                            "<f4").reshape(e["shape"])
+        flat.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+def save_manifest(path: str, manifest: dict):
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)

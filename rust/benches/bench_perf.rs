@@ -1,0 +1,147 @@
+//! §Perf microbenchmarks (criterion substitute): the numbers behind
+//! EXPERIMENTS.md §Perf before/after table.
+//!
+//! Measures, per layer of the stack:
+//!   L3 host path : policy decision, mask rebuild, cache ops, JSON codec
+//!   runtime      : prefill per bucket, decode step (B=1/B=4), oracle pass
+//!   serving      : batched vs sequential throughput
+//!
+//!     cargo bench --bench bench_perf -- --iters 5
+
+use std::sync::Arc;
+
+use kvzap::bench_support::{load_engine, results_dir, time_us, write_csv, BenchArgs};
+use kvzap::coordinator::SamplingParams;
+use kvzap::kvcache::PagedKvCache;
+use kvzap::policies::{self, PrunePolicy};
+use kvzap::runtime::{Arg, Tensor};
+use kvzap::util::json::Json;
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let iters = args.usize("iters", 5);
+    let engine = load_engine()?;
+    let man = engine.rt.manifest.clone();
+    let (l, h, tm) = (man.model.n_layers, man.model.n_kv_heads, man.model.t_max);
+    let mut csv = vec![];
+    let mut emit = |name: &str, us: f64| {
+        println!("  {name:<36} {us:>10.1} us");
+        csv.push(format!("{name},{us:.1}"));
+    };
+
+    println!("== L3 host-path microbenchmarks");
+    // policy decision over realistic stat tensors
+    let mut rng = Rng::new(1);
+    let n = l * h * tm;
+    let data: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+    let t = Tensor::new(data, vec![l, 1, h, tm]).unwrap();
+    let view = kvzap::policies::PrefillView {
+        b: 0, score_lin: &t, score_mlp: &t, max_attn: &t, plus_attn: &t,
+        cum_attn: &t, win_attn: &t, vnorm: &t, knorm: &t,
+        oracle_s: Some(&t), oracle_s_plus: Some(&t),
+    };
+    for spec in ["kvzap_mlp:-4", "h2o:0.5", "kvzip:0.5", "adakv:0.5"] {
+        let pol = policies::by_name(spec, man.window).unwrap();
+        let us = time_us(3, iters.max(20), || {
+            let mut cache = PagedKvCache::new(l, h, tm);
+            cache.fill(tm - 16);
+            pol.prefill_prune(&view, tm - 16, &mut cache);
+        });
+        emit(&format!("policy_decision[{spec}]"), us);
+    }
+    // mask rebuild + cache ops
+    let us = time_us(3, 50, || {
+        let mut cache = PagedKvCache::new(l, h, tm);
+        cache.fill(tm);
+        let _ = cache.mask_f32();
+    });
+    emit("cache_fill_plus_mask", us);
+    // JSON codec on a serving-size payload
+    let payload = Json::obj(vec![
+        ("prompt", Json::str("x".repeat(512))),
+        ("max_new", Json::num(32.0)),
+    ]).dump();
+    let us = time_us(3, 200, || {
+        let _ = Json::parse(&payload).unwrap();
+    });
+    emit("json_parse_request", us);
+
+    println!("== runtime: artifact execution");
+    for bucket in ["prefill_b1_t128", "prefill_b1_t256", "prefill_b1_t512", "prefill_b4_t256"] {
+        let art = engine.rt.artifact(bucket)?;
+        let (b, t_) = (art.meta.batch, art.meta.t);
+        let toks = vec![65i32; b * t_];
+        let lens = vec![t_ as i32; b];
+        let us = time_us(1, iters, || {
+            engine.rt.exec(&art, &[Arg::I32(&toks, &[b, t_]), Arg::I32(&lens, &[b])]).unwrap();
+        });
+        emit(&format!("exec[{bucket}]"), us);
+    }
+    for bucket in ["decode_b1", "decode_b4"] {
+        let art = engine.rt.artifact(bucket)?;
+        let b = art.meta.batch;
+        // bootstrap a cache with a prefill
+        let pf = engine.rt.artifact(&format!("prefill_b{b}_t128", b = b))?;
+        let toks = vec![65i32; b * 128];
+        let lens = vec![128i32; b];
+        let outs = engine
+            .rt
+            .exec(&pf, &[Arg::I32(&toks, &[b, 128]), Arg::I32(&lens, &[b])])?;
+        let ki = pf.meta.output_index("kcache")?;
+        let vi = pf.meta.output_index("vcache")?;
+        let tok = vec![66i32; b];
+        let pos = vec![128i32; b];
+        let mask = vec![1.0f32; l * b * h * tm];
+        let mask_buf = engine.rt.upload_f32(&mask, &[l, b, h, tm])?;
+        let us = time_us(1, iters.max(10), || {
+            engine
+                .rt
+                .exec(
+                    &art,
+                    &[
+                        Arg::I32(&tok, &[b]),
+                        Arg::I32(&pos, &[b]),
+                        Arg::Buf(&outs[ki]),
+                        Arg::Buf(&outs[vi]),
+                        Arg::Buf(&mask_buf),
+                    ],
+                )
+                .unwrap();
+        });
+        emit(&format!("exec[{bucket}] (per step)"), us);
+    }
+    {
+        let art = engine.rt.artifact("kvzip_score_t256")?;
+        let toks = vec![65i32; 256];
+        let lens = vec![200i32];
+        let us = time_us(1, iters, || {
+            engine.rt.exec(&art, &[Arg::I32(&toks, &[1, 256]), Arg::I32(&lens, &[1])]).unwrap();
+        });
+        emit("exec[kvzip oracle t256] (2x pass)", us);
+    }
+
+    println!("== serving: batched vs sequential (4 requests)");
+    let mut rng = Rng::new(4);
+    let tasks: Vec<_> = (0..4)
+        .map(|i| workload::ruler_instance("niah_single_1", 240, &mut rng.fork(i)))
+        .collect();
+    let policy = policies::by_name("kvzap_mlp:-4", man.window).unwrap();
+    let sp = SamplingParams::greedy(8);
+    let us_seq = time_us(1, iters, || {
+        for t in &tasks {
+            engine.generate(&t.prompt, policy.as_ref(), &sp).unwrap();
+        }
+    });
+    emit("4 requests sequential (b=1)", us_seq);
+    let prompts: Vec<&str> = tasks.iter().map(|t| t.prompt.as_str()).collect();
+    let us_bat = time_us(1, iters, || {
+        engine.generate_batch(&prompts, policy.as_ref(), &sp).unwrap();
+    });
+    emit("4 requests batched    (b=4)", us_bat);
+    println!("  batching speedup: {:.2}x", us_seq / us_bat);
+
+    write_csv(&results_dir().join("perf_microbench.csv"), "name,median_us", &csv)?;
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Figure 1 / Figure 2 / Figures 9-11: RULER accuracy-vs-compression.
+//!
+//! Sweeps every pruning method over the 13 ruler-mini subsets at the
+//! "4k"-scaled context (and "16k"-scaled with --long), writing
+//! results/fig1_frontier.csv (+ fig2 zoom series and per-subset CSVs for
+//! Figs 9-11) and printing the leaderboard-style frontier table.
+//!
+//!     cargo bench --bench bench_ruler -- --samples 4 [--per-subset] [--long]
+
+use kvzap::bench_support::{
+    aggregate, default_taus, eval_policy, load_engine, print_frontier, results_dir, write_csv,
+    BenchArgs, KEEP_FRACS,
+};
+use kvzap::workload::RULER_SUBSETS;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let samples = args.usize("samples", 2);
+    let seed = args.usize("seed", 42) as u64;
+    let ctx = if args.flag("long") { 368 } else { 248 }; // "16k" / "4k" scaled
+    let engine = load_engine()?;
+    let taus = default_taus(&engine);
+
+    // The Fig. 1 method zoo: KVzap variants + oracles + baselines. The
+    // default run (single CPU core) sweeps a reduced grid; --full restores
+    // the complete 17-method x 4-point sweep of the paper's figure.
+    let (fracs, baselines): (&[f64], &[&str]) = if args.flag("full") {
+        (KEEP_FRACS, &[
+            "kvzip", "kvzip_plus", "h2o", "snapkv", "adakv", "tova",
+            "observed_attn", "expected_attn", "knorm", "streaming_llm", "random",
+        ])
+    } else {
+        (&[0.6, 0.35], &[
+            "kvzip", "kvzip_plus", "h2o", "snapkv", "expected_attn",
+            "streaming_llm", "random",
+        ])
+    };
+    let mut specs: Vec<String> = vec![];
+    for t in &taus {
+        specs.push(format!("kvzap_mlp:{t:.2}"));
+        specs.push(format!("kvzap_linear:{t:.2}"));
+    }
+    for f in fracs {
+        for name in baselines {
+            specs.push(format!("{name}:{f}"));
+        }
+    }
+    specs.push("full".into());
+
+    let mut frontier: Vec<(String, f64, f64, f64)> = vec![];
+    let mut csv = vec![];
+    let mut per_subset_csv = vec![];
+    for spec in &specs {
+        let rows = eval_policy(&engine, "ruler", RULER_SUBSETS, spec, samples, ctx, seed)?;
+        let (acc, comp, nll) = aggregate(&rows);
+        eprintln!("  {spec:<28} acc {:>5.1}%  nll {nll:.3}  comp {comp:.3}", acc * 100.0);
+        frontier.push((spec.clone(), comp, acc, nll));
+        csv.push(format!("{spec},{comp:.4},{acc:.4},{nll:.4},{samples}"));
+        for r in rows {
+            per_subset_csv.push(format!(
+                "{spec},{},{:.4},{:.4},{:.4}",
+                r.subset, r.compression, r.accuracy, r.nll
+            ));
+        }
+    }
+
+    let tag = if args.flag("long") { "16k" } else { "4k" };
+    write_csv(
+        &results_dir().join(format!("fig1_frontier_{tag}.csv")),
+        "policy,compression,accuracy,nll,n",
+        &csv,
+    )?;
+    if args.flag("per-subset") {
+        // Figures 9-11: per-subset curves.
+        write_csv(
+            &results_dir().join(format!("fig9_11_per_subset_{tag}.csv")),
+            "policy,subset,compression,accuracy,nll",
+            &per_subset_csv,
+        )?;
+    }
+    print_frontier(&format!("Figure 1 | ruler-mini {tag} frontier"), &frontier);
+
+    // Figure 2: zoomed comparison, KVzap vs the oracles it approximates.
+    let zoom: Vec<(String, f64, f64, f64)> = frontier
+        .iter()
+        .filter(|(s, _, _, _)| {
+            s.starts_with("kvzap_") || s.starts_with("kvzip") || s.starts_with("expected_attn")
+                || s == "full"
+        })
+        .cloned()
+        .collect();
+    print_frontier("Figure 2 | zoom: KVzap vs KVzip/KVzip+ oracles", &zoom);
+    let zoom_csv: Vec<String> = zoom
+        .iter()
+        .map(|(s, c, a, n)| format!("{s},{c:.4},{a:.4},{n:.4}"))
+        .collect();
+    write_csv(
+        &results_dir().join(format!("fig2_zoom_{tag}.csv")),
+        "policy,compression,accuracy,nll",
+        &zoom_csv,
+    )?;
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Table 1 + Figures 6-8: surrogate quality (R² against KVzip+ targets).
+//!
+//! Reads artifacts/surrogate_metrics.json (produced at `make artifacts` by
+//! train_surrogate.py) and prints Table 1 plus the per-head R² heatmap and
+//! the score-distribution summary the appendix figures show.
+//!
+//!     cargo bench --bench bench_table1
+
+use kvzap::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let path = kvzap::artifacts_dir().join("surrogate_metrics.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("{e}: run `make artifacts` first"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!(e))?;
+
+    let lin = j.req("r2_linear_mean").map_err(|e| anyhow::anyhow!(e))?.as_f64().unwrap();
+    let mlp = j.req("r2_mlp_mean").map_err(|e| anyhow::anyhow!(e))?.as_f64().unwrap();
+    println!("== Table 1 | average R² between KVzip+ scores and KVzap predictions");
+    println!("{:<24} {:>8} {:>8}", "model", "Linear", "MLP");
+    println!("{:<24} {:>8.3} {:>8.3}   (paper: 0.6-0.8 band, MLP > Linear)",
+             "zap-lm (this repo)", lin, mlp);
+
+    println!("\n== Figures 6-8 | per-(layer, head) R² heatmap");
+    let rl = j.req("r2_linear").map_err(|e| anyhow::anyhow!(e))?.as_arr().unwrap();
+    let rm = j.req("r2_mlp").map_err(|e| anyhow::anyhow!(e))?.as_arr().unwrap();
+    println!("{:<8} {:<22} {:<22}", "layer", "linear per head", "mlp per head");
+    for (l, (a, b)) in rl.iter().zip(rm).enumerate() {
+        let fmt = |x: &Json| {
+            x.as_arr().unwrap().iter()
+                .map(|v| format!("{:+.2}", v.as_f64().unwrap()))
+                .collect::<Vec<_>>().join(" ")
+        };
+        println!("{l:<8} {:<22} {:<22}", fmt(a), fmt(b));
+    }
+
+    println!("\n== Figures 6-8 | KVzip+ log-score distribution");
+    let frac = j.req("below_median_frac").map_err(|e| anyhow::anyhow!(e))?.as_f64().unwrap();
+    println!("fraction below median score: {frac:.3} (definitionally ~0.5)");
+    if let Some(q) = j.get("target_quantiles").and_then(|x| x.as_obj()) {
+        for (k, v) in q {
+            println!("  q{k:<5} log s+ = {:+.3}", v.as_f64().unwrap());
+        }
+    }
+    println!("\n(CSV versions: results/fig6_8_score_hist.csv, results/fig6_8_r2_heads.csv)");
+
+    // sanity assertions, in the spirit of a regression bench
+    assert!(mlp > 0.0 && lin > 0.0, "surrogates must have positive R²");
+    Ok(())
+}

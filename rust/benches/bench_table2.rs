@@ -1,0 +1,89 @@
+//! Table 2: best-configuration summary across datasets.
+//!
+//! Picks the best KVzap configuration (Linear/MLP x τ) by the paper's
+//! criterion — highest compression whose accuracy stays within 1 point of
+//! the full-cache baseline on ruler-mini — then reports full->compressed
+//! accuracy with compression ratios on ruler 4k/16k, longbench and aime,
+//! exactly the Table 2 row structure.
+//!
+//!     cargo bench --bench bench_table2 -- --samples 4
+
+use kvzap::bench_support::{
+    aggregate, default_taus, eval_policy, load_engine, results_dir, write_csv, BenchArgs,
+};
+use kvzap::workload::{LONGBENCH_SUBSETS, RULER_SUBSETS};
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let samples = args.usize("samples", 2);
+    let engine = load_engine()?;
+    let taus = default_taus(&engine);
+
+    // ---- select the best config on ruler-mini 4k ---------------------------
+    let base = eval_policy(&engine, "ruler", RULER_SUBSETS, "full", samples, 248, 1)?;
+    let (base_acc, _, base_nll) = aggregate(&base);
+    let mut best: Option<(String, f64, f64)> = None;
+    for kind in ["mlp", "linear"] {
+        for t in &taus {
+            let spec = format!("kvzap_{kind}:{t:.2}");
+            let rows = eval_policy(&engine, "ruler", RULER_SUBSETS, &spec, samples, 248, 1)?;
+            let (acc, comp, nll) = aggregate(&rows);
+            eprintln!("  candidate {spec:<22} acc {:.1}% nll {nll:.3} comp {comp:.3}",
+                      acc * 100.0);
+            // paper criterion: accuracy within ~1pt of full cache; with a
+            // weak substrate also require NLL within 10% of baseline
+            if acc >= base_acc - 0.0101 && nll <= base_nll * 1.10 + 0.02 {
+                if best.as_ref().map_or(true, |b| comp > b.1) {
+                    best = Some((spec, comp, acc));
+                }
+            }
+        }
+    }
+    let (best_spec, _, _) =
+        best.unwrap_or_else(|| (format!("kvzap_mlp:{:.2}", taus[taus.len() / 2]), 0.0, 0.0));
+    println!("\n== Table 2 | best KVzap configuration: {best_spec}");
+
+    // ---- the four dataset rows ---------------------------------------------
+    let mut csv = vec![];
+    println!(
+        "{:<16} {:>22} {:>14}",
+        "dataset", "full -> compressed", "(compression)"
+    );
+    let mut comp_sum = 0.0;
+    let mut n_rows = 0.0;
+    for (label, suite, subsets, ctx) in [
+        ("ruler 4k", "ruler", RULER_SUBSETS, 248usize),
+        ("ruler 16k", "ruler", RULER_SUBSETS, 368),
+        ("longbench", "longbench", LONGBENCH_SUBSETS, 248),
+        ("aime", "aime", &["aime"][..], 0),
+    ] {
+        let full = eval_policy(&engine, suite, subsets, "full", samples, ctx, 5)?;
+        let comp = eval_policy(&engine, suite, subsets, &best_spec, samples, ctx, 5)?;
+        let (fa, _, fn_) = aggregate(&full);
+        let (ca, cc, cn) = aggregate(&comp);
+        println!(
+            "{label:<16} {:>9.1} -> {:>9.1} {:>13.2}   nll {:.3} -> {:.3}",
+            100.0 * fa,
+            100.0 * ca,
+            cc,
+            fn_,
+            cn
+        );
+        csv.push(format!("{label},{fa:.4},{ca:.4},{fn_:.4},{cn:.4},{cc:.4}"));
+        comp_sum += cc;
+        n_rows += 1.0;
+    }
+    let avg = comp_sum / n_rows;
+    println!(
+        "{:<16} {:>22} {:>10.2} ({:.1}x)",
+        "average", "", avg,
+        1.0 / (1.0 - avg).max(1e-9)
+    );
+    csv.push(format!("average,,,,,{avg:.4}"));
+    write_csv(
+        &results_dir().join("table2_summary.csv"),
+        "dataset,acc_full,acc_compressed,nll_full,nll_compressed,compression",
+        &csv,
+    )?;
+    Ok(())
+}

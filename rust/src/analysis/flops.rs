@@ -1,0 +1,136 @@
+//! Compute/memory overhead of KVzap — paper Appendix B, Eqs. (4)–(6).
+//!
+//! C        = 4·D_h·(H_Q·D + H·D) + 6·D_h·D_int          (linear projections)
+//! C_MLP    = 2·D_h·D_m + 2·D_m·H   (D_m = D_h/8 in the paper)
+//! C_Linear = 2·D_h·H
+//!
+//! `bench_overhead` reproduces Table 3 for the paper's three models AND for
+//! zap-lm (from the manifest), verifying the <=1.1% / <=0.02% bounds.
+
+#[derive(Debug, Clone)]
+pub struct LayerDims {
+    pub name: String,
+    pub h_q: usize,
+    pub h_kv: usize,
+    pub d_head: usize,
+    pub d_model: usize,
+    pub d_int: usize,
+    pub d_surrogate: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct OverheadRow {
+    pub dims: LayerDims,
+    pub layer_flops: f64,
+    pub mlp_flops: f64,
+    pub linear_flops: f64,
+    pub mlp_pct: f64,
+    pub linear_pct: f64,
+}
+
+/// Per-token FLOPs of one decoder layer's linear projections (Eq. 4).
+pub fn layer_flops(d: &LayerDims) -> f64 {
+    let attn = 4.0 * d.d_model as f64 * (d.h_q * d.d_head + d.h_kv * d.d_head) as f64;
+    let ffn = 6.0 * d.d_model as f64 * d.d_int as f64;
+    attn + ffn
+}
+
+/// Eq. 5 with general hidden width D_m.
+pub fn mlp_flops(d: &LayerDims) -> f64 {
+    2.0 * (d.d_model * d.d_surrogate) as f64 + 2.0 * (d.d_surrogate * d.h_kv) as f64
+}
+
+/// Eq. 6.
+pub fn linear_flops(d: &LayerDims) -> f64 {
+    2.0 * (d.d_model * d.h_kv) as f64
+}
+
+pub fn row(dims: LayerDims) -> OverheadRow {
+    let c = layer_flops(&dims);
+    let m = mlp_flops(&dims);
+    let l = linear_flops(&dims);
+    OverheadRow {
+        layer_flops: c,
+        mlp_flops: m,
+        linear_flops: l,
+        mlp_pct: 100.0 * m / c,
+        linear_pct: 100.0 * l / c,
+        dims,
+    }
+}
+
+/// The paper's Table 3 rows (Qwen3-8B / Llama-3.1-8B / Qwen3-32B) plus an
+/// optional extra model (zap-lm from the manifest).
+pub fn overhead_table(extra: Option<LayerDims>) -> Vec<OverheadRow> {
+    let mut rows = vec![
+        row(LayerDims {
+            name: "Qwen3-8B".into(),
+            h_q: 32,
+            h_kv: 8,
+            d_head: 128,
+            d_model: 4096,
+            d_int: 12288,
+            d_surrogate: 512,
+        }),
+        row(LayerDims {
+            name: "Llama-3.1-8B-Instruct".into(),
+            h_q: 32,
+            h_kv: 8,
+            d_head: 128,
+            d_model: 4096,
+            d_int: 14336,
+            d_surrogate: 512,
+        }),
+        row(LayerDims {
+            name: "Qwen3-32B".into(),
+            h_q: 64,
+            h_kv: 8,
+            d_head: 128,
+            d_model: 5120,
+            d_int: 25600,
+            d_surrogate: 640,
+        }),
+    ];
+    if let Some(d) = extra {
+        rows.push(row(d));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Table 3 numbers: 1.09% / 0.96% / 0.67% for MLP and
+    /// 0.02% / 0.02% / 0.01% for Linear.
+    #[test]
+    fn reproduces_paper_table3() {
+        let rows = overhead_table(None);
+        let expect_mlp = [1.09, 0.96, 0.67];
+        let expect_lin = [0.02, 0.02, 0.01];
+        for (i, r) in rows.iter().enumerate() {
+            assert!(
+                (r.mlp_pct - expect_mlp[i]).abs() < 0.02,
+                "{}: mlp {:.3}% vs paper {}%",
+                r.dims.name,
+                r.mlp_pct,
+                expect_mlp[i]
+            );
+            assert!(
+                (r.linear_pct - expect_lin[i]).abs() < 0.01,
+                "{}: linear {:.3}% vs paper {}%",
+                r.dims.name,
+                r.linear_pct,
+                expect_lin[i]
+            );
+        }
+    }
+
+    #[test]
+    fn overhead_bounded() {
+        for r in overhead_table(None) {
+            assert!(r.mlp_pct < 1.1, "paper's stated bound");
+            assert!(r.linear_pct <= 0.02 + 1e-9);
+        }
+    }
+}

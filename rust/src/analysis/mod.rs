@@ -1,0 +1,5 @@
+//! Analytic models: FLOPs overhead (paper Appendix B) and roofline notes.
+
+pub mod flops;
+
+pub use flops::{overhead_table, LayerDims, OverheadRow};

@@ -1,0 +1,228 @@
+//! Shared harness for the benchmark binaries (criterion is unavailable
+//! offline — DESIGN.md §7): evaluation sweeps, CSV output, timing loops.
+//!
+//! Every `cargo bench` target regenerates one paper table/figure by running
+//! policy sweeps over the workload generators and writing a CSV into
+//! results/ plus a human-readable table on stdout (DESIGN.md §5 maps
+//! each target to its table/figure).
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{Engine, SamplingParams};
+use crate::policies;
+use crate::util::rng::Rng;
+use crate::workload;
+
+/// Parse `--key value` bench arguments (cargo bench passes extra args after
+/// `--`).
+pub struct BenchArgs {
+    kv: std::collections::HashMap<String, String>,
+}
+
+impl BenchArgs {
+    pub fn parse() -> BenchArgs {
+        let mut kv = std::collections::HashMap::new();
+        let args: Vec<String> = std::env::args().collect();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(k) = args[i].strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    kv.insert(k.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    kv.insert(k.to_string(), "true".into());
+                }
+            }
+            i += 1;
+        }
+        BenchArgs { kv }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.kv.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+}
+
+/// Locate results/ next to artifacts/.
+pub fn results_dir() -> PathBuf {
+    let mut d = crate::artifacts_dir();
+    d.pop();
+    let r = d.join("results");
+    let _ = std::fs::create_dir_all(&r);
+    r
+}
+
+pub fn load_engine() -> Result<Arc<Engine>> {
+    let rt = crate::runtime::Runtime::load(crate::artifacts_dir())?;
+    Ok(Arc::new(Engine::new(Arc::new(rt))))
+}
+
+/// Threshold sweep for KVzap policies, derived from the oracle log-score
+/// quantiles recorded in the manifest (the paper sweeps τ per model).
+pub fn default_taus(engine: &Engine) -> Vec<f64> {
+    let q = &engine.rt.manifest.threshold_quantiles;
+    let picks = ["0.3", "0.5", "0.7", "0.8"];
+    let mut taus: Vec<f64> =
+        picks.iter().filter_map(|k| q.get(*k).copied()).collect();
+    if taus.is_empty() {
+        taus = vec![-8.0, -6.0, -4.0, -3.0];
+    }
+    taus
+}
+
+pub const KEEP_FRACS: &[f64] = &[0.8, 0.6, 0.4, 0.25];
+
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    pub policy: String,
+    pub subset: String,
+    pub n: usize,
+    pub accuracy: f64,
+    /// Teacher-forced answer NLL (nats/byte): the smooth quality metric
+    /// reported alongside exact match (lower = better).
+    pub nll: f64,
+    pub compression: f64,
+    pub prefill_us: f64,
+    pub decode_us: f64,
+    pub policy_us: f64,
+    pub oracle_us: f64,
+}
+
+/// Evaluate one policy spec over one suite; returns one row per subset.
+pub fn eval_policy(
+    engine: &Engine,
+    suite: &str,
+    subsets: &[&str],
+    spec: &str,
+    samples: usize,
+    ctx: usize,
+    seed: u64,
+) -> Result<Vec<EvalRow>> {
+    let policy = policies::by_name(spec, engine.window())
+        .ok_or_else(|| anyhow::anyhow!("unknown policy {spec}"))?;
+    let mut rows = vec![];
+    for subset in subsets {
+        let mut rng = Rng::new(seed ^ fxhash(subset));
+        let mut ok = 0usize;
+        let mut comp = 0.0;
+        let mut nll_sum = 0.0;
+        let (mut pf, mut dc, mut pol, mut orc) = (0.0, 0.0, 0.0, 0.0);
+        for i in 0..samples {
+            let mut r = rng.fork(i as u64);
+            let (task, is_aime) = match suite {
+                "ruler" => (workload::ruler_instance(subset, ctx, &mut r), false),
+                "longbench" => (workload::longbench_instance(subset, ctx, &mut r), false),
+                "aime" => (workload::aime_instance(&mut r).task, true),
+                _ => anyhow::bail!("unknown suite {suite}"),
+            };
+            let sp = SamplingParams::greedy(task.max_new);
+            let res = engine.generate(&task.prompt, policy.as_ref(), &sp)?;
+            let correct = if is_aime {
+                workload::generators::parse_aime_answer(&res.text).as_deref()
+                    == Some(task.answer.as_str())
+            } else {
+                task.score(&res.text)
+            };
+            let (sample_nll, _) =
+                engine.score_answer(&task.prompt, &task.answer, policy.as_ref())?;
+            nll_sum += sample_nll;
+            ok += correct as usize;
+            comp += res.compression;
+            pf += res.prefill_us as f64;
+            dc += res.decode_us as f64;
+            pol += res.policy_us as f64;
+            orc += res.oracle_us as f64;
+        }
+        let n = samples as f64;
+        rows.push(EvalRow {
+            policy: spec.to_string(),
+            subset: subset.to_string(),
+            n: samples,
+            accuracy: ok as f64 / n,
+            nll: nll_sum / n,
+            compression: comp / n,
+            prefill_us: pf / n,
+            decode_us: dc / n,
+            policy_us: pol / n,
+            oracle_us: orc / n,
+        });
+    }
+    Ok(rows)
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Mean (accuracy, compression, nll) across subsets (a figure's point).
+pub fn aggregate(rows: &[EvalRow]) -> (f64, f64, f64) {
+    let n = rows.len() as f64;
+    (
+        rows.iter().map(|r| r.accuracy).sum::<f64>() / n,
+        rows.iter().map(|r| r.compression).sum::<f64>() / n,
+        rows.iter().map(|r| r.nll).sum::<f64>() / n,
+    )
+}
+
+pub fn write_csv(path: &PathBuf, header: &str, lines: &[String]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for l in lines {
+        writeln!(f, "{l}")?;
+    }
+    eprintln!("  wrote {}", path.display());
+    Ok(())
+}
+
+/// Simple timing loop: median of `iters` runs after `warmup` (µs).
+pub fn time_us(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_micros() as f64);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    samples[samples.len() / 2]
+}
+
+/// Print a paper-style frontier table: policy -> (compression, accuracy,
+/// answer-NLL).
+pub fn print_frontier(title: &str, points: &[(String, f64, f64, f64)]) {
+    println!("\n== {title}");
+    println!(
+        "{:<32} {:>12} {:>10} {:>8} {:>10}",
+        "policy", "compression", "factor", "acc %", "ans NLL"
+    );
+    let mut sorted = points.to_vec();
+    sorted.sort_by(|a, b| a.1.total_cmp(&b.1));
+    for (name, comp, acc, nll) in sorted {
+        println!(
+            "{:<32} {:>11.3} {:>9.2}x {:>7.1} {:>10.3}",
+            name,
+            comp,
+            1.0 / (1.0 - comp).max(1e-9),
+            100.0 * acc,
+            nll
+        );
+    }
+}

@@ -1,0 +1,171 @@
+//! Continuous batcher: the request-level scheduler in front of the engine.
+//!
+//! Requests enter a queue; a scheduler thread forms decode groups of up to
+//! `max_batch` *compatible* requests (same policy spec — they share pruning
+//! decisions' configuration, not state) that arrive within `max_wait_us`
+//! of the group leader, then runs them through `Engine::generate_batch`.
+//! This is vLLM-v0-style group batching; slots of finished sequences stay
+//! masked until the group drains (see engine.rs). tokio is unavailable
+//! offline — the runtime is std threads + mpsc channels (DESIGN.md §7).
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use super::sampler::SamplingParams;
+use crate::policies;
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 4, max_wait_us: 2_000 }
+    }
+}
+
+pub struct Request {
+    pub prompt: String,
+    pub policy: String,
+    pub sp: SamplingParams,
+    pub resp: Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub text: String,
+    pub compression: f64,
+    pub tokens_out: usize,
+    pub e2e_us: u64,
+    pub error: Option<String>,
+}
+
+struct Pending {
+    req: Request,
+    arrived: Instant,
+}
+
+pub struct Batcher {
+    tx: Sender<Pending>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(engine: Arc<Engine>, cfg: BatcherConfig) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let handle = std::thread::spawn(move || Self::run(engine, cfg, rx));
+        Batcher { tx, handle: Some(handle) }
+    }
+
+    /// Enqueue a request; the response arrives on `req.resp`.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .send(Pending { req, arrived: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("batcher stopped"))
+    }
+
+    fn run(engine: Arc<Engine>, cfg: BatcherConfig, rx: Receiver<Pending>) {
+        loop {
+            // Block for the group leader.
+            let leader = match rx.recv() {
+                Ok(p) => p,
+                Err(_) => return, // all senders dropped: shut down
+            };
+            let mut group = vec![leader];
+            let deadline = Instant::now() + Duration::from_micros(cfg.max_wait_us);
+            // Fill the group with compatible requests until deadline/full.
+            let mut stash: Option<Pending> = None;
+            while group.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(p) => {
+                        if p.req.policy == group[0].req.policy
+                            && p.req.sp.greedy == group[0].req.sp.greedy
+                        {
+                            group.push(p);
+                        } else {
+                            // incompatible: run it as the next group leader
+                            stash = Some(p);
+                            break;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            Self::run_group(&engine, group);
+            if let Some(p) = stash {
+                Self::run_group(&engine, vec![p]);
+            }
+        }
+    }
+
+    fn run_group(engine: &Engine, group: Vec<Pending>) {
+        let policy = match policies::by_name(&group[0].req.policy, engine.window()) {
+            Some(p) => p,
+            None => {
+                for p in &group {
+                    let _ = p.req.resp.send(Response {
+                        text: String::new(),
+                        compression: 0.0,
+                        tokens_out: 0,
+                        e2e_us: 0,
+                        error: Some(format!("unknown policy '{}'", p.req.policy)),
+                    });
+                }
+                return;
+            }
+        };
+        let prompts: Vec<&str> = group.iter().map(|p| p.req.prompt.as_str()).collect();
+        let sp = group[0].req.sp.clone();
+        match engine.generate_batch(&prompts, policy.as_ref(), &sp) {
+            Ok(results) => {
+                for (p, r) in group.iter().zip(results) {
+                    let e2e = p.arrived.elapsed().as_micros() as u64;
+                    engine.metrics.e2e.lock().unwrap().record(e2e);
+                    let _ = p.req.resp.send(Response {
+                        text: r.text,
+                        compression: r.compression,
+                        tokens_out: r.tokens_out,
+                        e2e_us: e2e,
+                        error: None,
+                    });
+                }
+            }
+            Err(e) => {
+                for p in &group {
+                    let _ = p.req.resp.send(Response {
+                        text: String::new(),
+                        compression: 0.0,
+                        tokens_out: 0,
+                        e2e_us: p.arrived.elapsed().as_micros() as u64,
+                        error: Some(format!("{e:#}")),
+                    });
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Closing `tx` ends the worker loop once the queue drains.
+        // (tx is dropped as part of self; join the worker.)
+        let (dummy_tx, _) = mpsc::channel::<Pending>();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

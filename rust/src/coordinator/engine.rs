@@ -1,0 +1,489 @@
+//! The generation engine: prefill → prune → masked decode, per sequence or
+//! slot-batched. This is the request hot path — python never runs here.
+//!
+//! Data movement per decode step (see DESIGN.md §Perf): the KV cache lives
+//! in device buffers produced by the previous step (untupled outputs); the
+//! host only uploads the new token ids + positions and, when a pruning
+//! decision changed it, the keep-mask; it downloads logits `[B, V]` and,
+//! for threshold policies, the per-step surrogate scores `[L, B, H]`.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use xla::PjRtBuffer;
+
+use super::sampler::{Sampler, SamplingParams};
+use crate::kvcache::PagedKvCache;
+use crate::metrics::EngineMetrics;
+use crate::policies::{PrefillView, PrunePolicy, ScoreBuffer, Stat};
+use crate::runtime::{Arg, Runtime, Tensor};
+use crate::workload::ByteTokenizer;
+
+pub struct Engine {
+    pub rt: Arc<Runtime>,
+    pub tok: ByteTokenizer,
+    pub metrics: EngineMetrics,
+}
+
+/// -log softmax(logits)[target] in nats.
+fn nll_of(logits: &[f32], target: i32) -> f64 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum::<f64>().ln() + m;
+    lse - logits[target as usize] as f64
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub text: String,
+    pub prompt_len: usize,
+    pub tokens_out: usize,
+    /// Removed fraction of the KV cache at end of generation (the paper's
+    /// "compression ratio (removed fraction)", Table 2).
+    pub compression: f64,
+    pub prefill_us: u64,
+    pub oracle_us: u64,
+    pub decode_us: u64,
+    pub policy_us: u64,
+    pub decode_evictions: usize,
+}
+
+struct PrefillStats {
+    score_lin: Tensor,
+    score_mlp: Tensor,
+    max_attn: Tensor,
+    plus_attn: Tensor,
+    cum_attn: Tensor,
+    win_attn: Tensor,
+    vnorm: Tensor,
+    knorm: Tensor,
+}
+
+impl PrefillStats {
+    fn view<'a>(
+        &'a self,
+        b: usize,
+        oracle: Option<&'a (Tensor, Tensor)>,
+    ) -> PrefillView<'a> {
+        PrefillView {
+            b,
+            score_lin: &self.score_lin,
+            score_mlp: &self.score_mlp,
+            max_attn: &self.max_attn,
+            plus_attn: &self.plus_attn,
+            cum_attn: &self.cum_attn,
+            win_attn: &self.win_attn,
+            vnorm: &self.vnorm,
+            knorm: &self.knorm,
+            oracle_s: oracle.map(|o| &o.0),
+            oracle_s_plus: oracle.map(|o| &o.1),
+        }
+    }
+}
+
+impl Engine {
+    pub fn new(rt: Arc<Runtime>) -> Engine {
+        Engine { rt, tok: ByteTokenizer::default(), metrics: EngineMetrics::default() }
+    }
+
+    pub fn window(&self) -> usize {
+        self.rt.manifest.window
+    }
+
+    /// Largest prompt (in tokens incl. BOS) the artifacts can prefill.
+    pub fn max_prompt(&self) -> usize {
+        *self.rt.manifest.buckets.prefill_t.iter().max().unwrap()
+    }
+
+    /// Generate for a single prompt (B=1 decode path).
+    pub fn generate(
+        &self,
+        prompt: &str,
+        policy: &dyn PrunePolicy,
+        sp: &SamplingParams,
+    ) -> Result<GenResult> {
+        let mut rs = self.generate_batch(&[prompt], policy, sp)?;
+        Ok(rs.pop().unwrap())
+    }
+
+    /// KVzip oracle double pass for one prompt: returns (s, s+) `[L,1,H,T]`.
+    fn oracle_scores(&self, tokens: &[i32]) -> Result<(Tensor, Tensor)> {
+        let man = &self.rt.manifest;
+        let bucket = man
+            .kvzip_bucket(tokens.len())
+            .ok_or_else(|| anyhow!("no kvzip bucket for len {}", tokens.len()))?;
+        let art = self.rt.artifact(&bucket)?;
+        let t = art.meta.t;
+        let mut padded = vec![self.tok.pad as i32; t];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let lens = [tokens.len() as i32];
+        let outs = self.rt.exec(&art, &[Arg::I32(&padded, &[1, t]), Arg::I32(&lens, &[1])])?;
+        let si = art.meta.output_index("s")?;
+        let pi = art.meta.output_index("s_plus")?;
+        Ok((
+            self.rt.fetch_f32(&outs[si], &art.meta.outputs[si].shape)?,
+            self.rt.fetch_f32(&outs[pi], &art.meta.outputs[pi].shape)?,
+        ))
+    }
+
+    /// Teacher-forced answer scoring: mean NLL (nats/byte) of `answer`
+    /// given `prompt` under the pruned cache. This is the smooth quality
+    /// metric the benches report alongside exact-match accuracy — it
+    /// degrades gracefully as pruning removes needed KV pairs, so the
+    /// policy ranking is measurable at any model quality.
+    pub fn score_answer(
+        &self,
+        prompt: &str,
+        answer: &str,
+        policy: &dyn PrunePolicy,
+    ) -> Result<(f64, f64)> {
+        let man = &self.rt.manifest;
+        let (layers, heads, t_max) =
+            (man.model.n_layers, man.model.n_kv_heads, man.model.t_max);
+        let toks = self.tok.encode(prompt, self.max_prompt());
+        let n = toks.len();
+        let ans: Vec<i32> = answer.bytes().map(|b| b as i32).collect();
+        let bucket = man
+            .prefill_bucket(n, 1)
+            .ok_or_else(|| anyhow!("no prefill bucket for {n}"))?;
+        let pf = self.rt.artifact(&bucket)?;
+        let pt = pf.meta.t;
+        let mut tok_flat = vec![self.tok.pad as i32; pt];
+        tok_flat[..n].copy_from_slice(&toks);
+        let lens = [n as i32];
+        let outs =
+            self.rt.exec(&pf, &[Arg::I32(&tok_flat, &[1, pt]), Arg::I32(&lens, &[1])])?;
+        let fetch = |name: &str| -> Result<Tensor> {
+            let i = pf.meta.output_index(name)?;
+            self.rt.fetch_f32(&outs[i], &pf.meta.outputs[i].shape)
+        };
+        let logits0 = fetch("logits")?;
+        let stats = PrefillStats {
+            score_lin: fetch("score_lin")?,
+            score_mlp: fetch("score_mlp")?,
+            max_attn: fetch("max_attn")?,
+            plus_attn: fetch("plus_attn")?,
+            cum_attn: fetch("cum_attn")?,
+            win_attn: fetch("win_attn")?,
+            vnorm: fetch("vnorm")?,
+            knorm: fetch("knorm")?,
+        };
+        let oracle = if policy.needs_oracle() {
+            Some(self.oracle_scores(&toks)?)
+        } else {
+            None
+        };
+        let mut cache = PagedKvCache::new(layers, heads, t_max);
+        cache.fill(n);
+        policy.prefill_prune(&stats.view(0, oracle.as_ref()), n, &mut cache);
+        let compression = cache.stats().compression();
+
+        let ki = pf.meta.output_index("kcache")?;
+        let vi = pf.meta.output_index("vcache")?;
+        let mut outs_opt: Vec<Option<PjRtBuffer>> = outs.into_iter().map(Some).collect();
+        let mut kc = outs_opt[ki].take().unwrap();
+        let mut vc = outs_opt[vi].take().unwrap();
+        drop(outs_opt);
+
+        let dec = self.rt.artifact(&man.decode_bucket(1).unwrap())?;
+        let mut mask = cache.mask_f32();
+
+        // NLL of answer byte i under logits from step i-1 (teacher forcing).
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        let mut logits = logits0;
+        for (i, &a) in ans.iter().enumerate() {
+            nll += nll_of(logits.row(&[0]), a);
+            count += 1;
+            let pos = n + i;
+            if pos >= t_max || i == ans.len() - 1 {
+                break;
+            }
+            // previously fed answer tokens become attendable
+            if i > 0 {
+                for l in 0..layers {
+                    for h in 0..heads {
+                        mask[(l * heads + h) * t_max + pos - 1] = 1.0;
+                    }
+                }
+            }
+            let mask_buf = self.rt.upload_f32(&mask, &[layers, 1, heads, t_max])?;
+            let outs = self.rt.exec(
+                &dec,
+                &[
+                    Arg::I32(&[a], &[1]),
+                    Arg::I32(&[pos as i32], &[1]),
+                    Arg::Buf(&kc),
+                    Arg::Buf(&vc),
+                    Arg::Buf(&mask_buf),
+                ],
+            )?;
+            let li = dec.meta.output_index("logits")?;
+            logits = self.rt.fetch_f32(&outs[li], &dec.meta.outputs[li].shape)?;
+            let ki = dec.meta.output_index("kcache")?;
+            let vi = dec.meta.output_index("vcache")?;
+            let mut o: Vec<Option<PjRtBuffer>> = outs.into_iter().map(Some).collect();
+            kc = o[ki].take().unwrap();
+            vc = o[vi].take().unwrap();
+        }
+        Ok((nll / count.max(1) as f64, compression))
+    }
+
+    /// Slot-batched generation: prompts share a prefill bucket and decode
+    /// together; sequences that finish keep their slot masked until the
+    /// group drains (group-static continuous batching — the batcher forms
+    /// the groups, see batcher.rs).
+    pub fn generate_batch(
+        &self,
+        prompts: &[&str],
+        policy: &dyn PrunePolicy,
+        sp: &SamplingParams,
+    ) -> Result<Vec<GenResult>> {
+        let man = &self.rt.manifest;
+        let (layers, heads, t_max) =
+            (man.model.n_layers, man.model.n_kv_heads, man.model.t_max);
+        let nb = prompts.len();
+        assert!(nb > 0);
+
+        // ---- tokenize + bucket -------------------------------------------
+        let toks: Vec<Vec<i32>> =
+            prompts.iter().map(|p| self.tok.encode(p, self.max_prompt())).collect();
+        let maxlen = toks.iter().map(|t| t.len()).max().unwrap();
+        let bucket = man
+            .prefill_bucket(maxlen, nb)
+            .ok_or_else(|| anyhow!("no prefill bucket for len {maxlen} batch {nb}"))?;
+        let pf = self.rt.artifact(&bucket)?;
+        let (pb, pt) = (pf.meta.batch, pf.meta.t);
+        let dec = self.rt.artifact(
+            &man.decode_bucket(nb).ok_or_else(|| anyhow!("no decode bucket for {nb}"))?,
+        )?;
+        let db = dec.meta.batch;
+        if db != pb {
+            return Err(anyhow!("bucket mismatch: prefill b{pb} vs decode b{db}"));
+        }
+
+        let mut tok_flat = vec![self.tok.pad as i32; pb * pt];
+        let mut lens = vec![1i32; pb];
+        for (i, t) in toks.iter().enumerate() {
+            tok_flat[i * pt..i * pt + t.len()].copy_from_slice(t);
+            lens[i] = t.len() as i32;
+        }
+
+        // ---- prefill ------------------------------------------------------
+        let t0 = crate::util::now_micros();
+        let outs =
+            self.rt.exec(&pf, &[Arg::I32(&tok_flat, &[pb, pt]), Arg::I32(&lens, &[pb])])?;
+        let prefill_us = crate::util::now_micros() - t0;
+        self.metrics.prefill.lock().unwrap().record(prefill_us);
+
+        let fetch = |name: &str| -> Result<Tensor> {
+            let i = pf.meta.output_index(name)?;
+            self.rt.fetch_f32(&outs[i], &pf.meta.outputs[i].shape)
+        };
+        let logits0 = fetch("logits")?;
+        let stats = PrefillStats {
+            score_lin: fetch("score_lin")?,
+            score_mlp: fetch("score_mlp")?,
+            max_attn: fetch("max_attn")?,
+            plus_attn: fetch("plus_attn")?,
+            cum_attn: fetch("cum_attn")?,
+            win_attn: fetch("win_attn")?,
+            vnorm: fetch("vnorm")?,
+            knorm: fetch("knorm")?,
+        };
+        let ki = pf.meta.output_index("kcache")?;
+        let vi = pf.meta.output_index("vcache")?;
+        let mut outs_opt: Vec<Option<PjRtBuffer>> = outs.into_iter().map(Some).collect();
+        let mut kc = outs_opt[ki].take().unwrap();
+        let mut vc = outs_opt[vi].take().unwrap();
+        drop(outs_opt);
+
+        // ---- oracle pass (KVzip / KVzip+ baselines only) -------------------
+        let mut oracle: Vec<Option<(Tensor, Tensor)>> = (0..nb).map(|_| None).collect();
+        let mut oracle_us = 0;
+        if policy.needs_oracle() {
+            let t0 = crate::util::now_micros();
+            for (b, t) in toks.iter().enumerate() {
+                oracle[b] = Some(self.oracle_scores(t)?);
+            }
+            oracle_us = crate::util::now_micros() - t0;
+            self.metrics.oracle.lock().unwrap().record(oracle_us);
+        }
+
+        // ---- prune after prefill -------------------------------------------
+        let t0 = crate::util::now_micros();
+        let mut caches: Vec<PagedKvCache> =
+            (0..nb).map(|_| PagedKvCache::new(layers, heads, t_max)).collect();
+        for b in 0..nb {
+            caches[b].fill(lens[b] as usize);
+            let view = stats.view(b, oracle[b].as_ref());
+            policy.prefill_prune(&view, lens[b] as usize, &mut caches[b]);
+        }
+        let mut policy_us = crate::util::now_micros() - t0;
+
+        // ---- score buffers (threshold policies prune during decode) --------
+        let tau = policy.decode_threshold();
+        let dstat = policy.decode_stat();
+        let window = self.window();
+        let mut sbufs: Vec<ScoreBuffer> = (0..nb)
+            .map(|b| {
+                let mut sb = ScoreBuffer::new(window, layers, heads);
+                if tau.is_some() {
+                    let view = stats.view(b, None);
+                    sb.seed_from_prefill(lens[b] as usize, |l, h, pos| {
+                        view.row(dstat, l, h)[pos]
+                    });
+                }
+                sb
+            })
+            .collect();
+
+        // ---- decode loop -----------------------------------------------------
+        let mut samplers: Vec<Sampler> =
+            (0..nb).map(|b| Sampler::new(sp.seed.wrapping_add(b as u64 * 7919))).collect();
+        let mut generated: Vec<Vec<i32>> = vec![vec![]; nb];
+        let mut done = vec![false; nb];
+        let mut evictions = vec![0usize; nb];
+        let mut cur = vec![self.tok.pad as i32; db];
+        let mut pos: Vec<usize> = (0..db).map(|b| {
+            if b < nb { lens[b] as usize } else { t_max - 1 }
+        }).collect();
+
+        // first token comes from the prefill logits
+        for b in 0..nb {
+            let t = samplers[b].sample(logits0.row(&[b]), sp);
+            if self.tok.is_stop(t, sp.stop_at_newline) {
+                done[b] = true;
+            } else {
+                generated[b].push(t);
+                cur[b] = t;
+            }
+        }
+
+        let mask_dims = [layers, db, heads, t_max];
+        let mut mask = vec![0.0f32; layers * db * heads * t_max];
+        let rebuild_mask =
+            |mask: &mut Vec<f32>, caches: &[PagedKvCache]| {
+                for (b, cache) in caches.iter().enumerate() {
+                    let m = cache.mask_f32(); // [L, H, t_max]
+                    for l in 0..layers {
+                        for h in 0..heads {
+                            let src = &m[(l * heads + h) * t_max..][..t_max];
+                            let off = ((l * db + b) * heads + h) * t_max;
+                            mask[off..off + t_max].copy_from_slice(src);
+                        }
+                    }
+                }
+            };
+        rebuild_mask(&mut mask, &caches);
+        let mut mask_dirty = true;
+
+        let t_dec = crate::util::now_micros();
+        let mut steps = 0usize;
+        let mut mask_buf: Option<PjRtBuffer> = None;
+        while steps < sp.max_new.saturating_sub(1) && done.iter().any(|d| !d) {
+            // stop sequences that would overflow the cache
+            for b in 0..nb {
+                if !done[b] && pos[b] >= t_max {
+                    done[b] = true;
+                }
+            }
+            if done.iter().all(|d| *d) {
+                break;
+            }
+            let pos_i32: Vec<i32> =
+                pos.iter().map(|&p| (p.min(t_max - 1)) as i32).collect();
+            if mask_dirty {
+                mask_buf = Some(self.rt.upload_f32(&mask, &mask_dims)?);
+                mask_dirty = false;
+            }
+            let outs = self.rt.exec(
+                &dec,
+                &[
+                    Arg::I32(&cur, &[db]),
+                    Arg::I32(&pos_i32, &[db]),
+                    Arg::Buf(&kc),
+                    Arg::Buf(&vc),
+                    Arg::Buf(mask_buf.as_ref().unwrap()),
+                ],
+            )?;
+            let li = dec.meta.output_index("logits")?;
+            let logits = self.rt.fetch_f32(&outs[li], &dec.meta.outputs[li].shape)?;
+            let scores = if tau.is_some() {
+                let name = match dstat {
+                    Stat::ScoreLin => "score_lin",
+                    _ => "score_mlp",
+                };
+                let i = dec.meta.output_index(name)?;
+                Some(self.rt.fetch_f32(&outs[i], &dec.meta.outputs[i].shape)?)
+            } else {
+                None
+            };
+            let ki = dec.meta.output_index("kcache")?;
+            let vi = dec.meta.output_index("vcache")?;
+            let mut outs_opt: Vec<Option<PjRtBuffer>> = outs.into_iter().map(Some).collect();
+            kc = outs_opt[ki].take().unwrap();
+            vc = outs_opt[vi].take().unwrap();
+            drop(outs_opt);
+
+            for b in 0..nb {
+                if done[b] {
+                    continue;
+                }
+                // the token we just fed occupies pos[b]
+                caches[b].fill((pos[b] + 1).min(t_max));
+                if let (Some(tau), Some(sc)) = (tau, scores.as_ref()) {
+                    // sc is [L, B, H]: collect this sequence's row
+                    let mut v = Vec::with_capacity(layers * heads);
+                    for l in 0..layers {
+                        for h in 0..heads {
+                            v.push(sc.at(&[l, b, h]));
+                        }
+                    }
+                    let t0 = crate::util::now_micros();
+                    evictions[b] += sbufs[b].push_and_evict(pos[b], v, tau, &mut caches[b]);
+                    policy_us += crate::util::now_micros() - t0;
+                }
+                if caches[b].take_dirty() {
+                    mask_dirty = true;
+                }
+                let t = samplers[b].sample(logits.row(&[b]), sp);
+                pos[b] += 1;
+                if self.tok.is_stop(t, sp.stop_at_newline)
+                    || generated[b].len() + 1 >= sp.max_new
+                {
+                    done[b] = true;
+                } else {
+                    generated[b].push(t);
+                    cur[b] = t;
+                }
+            }
+            if mask_dirty {
+                rebuild_mask(&mut mask, &caches);
+            }
+            steps += 1;
+        }
+        let decode_us = crate::util::now_micros() - t_dec;
+        if steps > 0 {
+            self.metrics.decode_step.lock().unwrap().record(decode_us / steps as u64);
+        }
+
+        // ---- results ----------------------------------------------------------
+        let mut results = vec![];
+        for b in 0..nb {
+            let st = caches[b].stats();
+            self.metrics.note_request(generated[b].len(), st.compression());
+            results.push(GenResult {
+                text: self.tok.decode(&generated[b]),
+                prompt_len: lens[b] as usize,
+                tokens_out: generated[b].len(),
+                compression: st.compression(),
+                prefill_us,
+                oracle_us,
+                decode_us,
+                policy_us,
+                decode_evictions: evictions[b],
+            });
+        }
+        Ok(results)
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: the serving-system contribution (vLLM-router-shaped).
+//!
+//! * [`engine`] — prefill → prune → masked-decode generation over the PJRT
+//!   artifacts, single or slot-batched.
+//! * [`batcher`] — request queue + continuous batcher: groups compatible
+//!   requests (same policy) into decode groups within a latency deadline.
+//! * [`sampler`] — greedy / temperature / top-k / top-p sampling.
+//!
+//! KV cache pruning is a first-class feature of the serving path: the
+//! engine applies a [`crate::policies::PrunePolicy`] after prefill
+//! attention and, for threshold policies (KVzap), keeps pruning during
+//! decoding through the sliding-window score buffer.
+
+pub mod batcher;
+pub mod engine;
+pub mod sampler;
+
+pub use batcher::{Batcher, BatcherConfig, Request, Response};
+pub use engine::{Engine, GenResult};
+pub use sampler::{Sampler, SamplingParams};

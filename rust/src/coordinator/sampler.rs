@@ -1,0 +1,155 @@
+//! Token sampling: greedy and temperature / top-k / top-p (the Qwen3
+//! reasoning settings from paper §4.3: T=0.6, top-p=0.95, top-k=20).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    pub greedy: bool,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub top_p: f32,
+    pub seed: u64,
+    pub max_new: usize,
+    /// Answers in the task grammar are newline-terminated.
+    pub stop_at_newline: bool,
+}
+
+impl SamplingParams {
+    pub fn greedy(max_new: usize) -> SamplingParams {
+        SamplingParams {
+            greedy: true,
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            max_new,
+            stop_at_newline: true,
+        }
+    }
+
+    /// The paper's reasoning sampling configuration (§4.3).
+    pub fn reasoning(max_new: usize, seed: u64) -> SamplingParams {
+        SamplingParams {
+            greedy: false,
+            temperature: 0.6,
+            top_k: 20,
+            top_p: 0.95,
+            seed,
+            max_new,
+            stop_at_newline: false,
+        }
+    }
+}
+
+pub struct Sampler {
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(seed: u64) -> Sampler {
+        Sampler { rng: Rng::new(seed) }
+    }
+
+    pub fn sample(&mut self, logits: &[f32], p: &SamplingParams) -> i32 {
+        if p.greedy {
+            return argmax(logits) as i32;
+        }
+        // temperature + top-k + top-p over a softmax
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        if p.top_k > 0 && p.top_k < idx.len() {
+            idx.truncate(p.top_k);
+        }
+        let m = logits[idx[0]];
+        let mut probs: Vec<f64> = idx
+            .iter()
+            .map(|&i| (((logits[i] - m) / p.temperature.max(1e-6)) as f64).exp())
+            .collect();
+        let sum: f64 = probs.iter().sum();
+        for q in probs.iter_mut() {
+            *q /= sum;
+        }
+        if p.top_p < 1.0 {
+            let mut acc = 0.0;
+            let mut cut = probs.len();
+            for (i, &q) in probs.iter().enumerate() {
+                acc += q;
+                if acc >= p.top_p as f64 {
+                    cut = i + 1;
+                    break;
+                }
+            }
+            probs.truncate(cut);
+            idx.truncate(cut);
+            let s: f64 = probs.iter().sum();
+            for q in probs.iter_mut() {
+                *q /= s;
+            }
+        }
+        let mut u = self.rng.f64();
+        for (i, &q) in probs.iter().enumerate() {
+            if u < q {
+                return idx[i] as i32;
+            }
+            u -= q;
+        }
+        *idx.last().unwrap() as i32
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(0);
+        let logits = vec![0.1, 5.0, -1.0, 2.0];
+        assert_eq!(s.sample(&logits, &SamplingParams::greedy(1)), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut s = Sampler::new(1);
+        let mut logits = vec![0.0f32; 16];
+        logits[3] = 10.0;
+        logits[7] = 9.0;
+        let p = SamplingParams { greedy: false, temperature: 1.0, top_k: 2, top_p: 1.0, seed: 0, max_new: 1, stop_at_newline: false };
+        for _ in 0..200 {
+            let t = s.sample(&logits, &p);
+            assert!(t == 3 || t == 7, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn temperature_zero_like_behaviour() {
+        // very low temperature concentrates on the max
+        let mut s = Sampler::new(2);
+        let logits = vec![1.0, 1.2, 0.8];
+        let p = SamplingParams { greedy: false, temperature: 0.01, top_k: 0, top_p: 1.0, seed: 0, max_new: 1, stop_at_newline: false };
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits, &p), 1);
+        }
+    }
+
+    #[test]
+    fn top_p_nucleus() {
+        let mut s = Sampler::new(3);
+        let logits = vec![10.0, 0.0, 0.0, 0.0];
+        let p = SamplingParams { greedy: false, temperature: 1.0, top_k: 0, top_p: 0.5, seed: 0, max_new: 1, stop_at_newline: false };
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits, &p), 0);
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! Paged KV cache manager with per-head variable lengths.
+//!
+//! The paper's §5 implementation challenge: KVzap's per-head thresholding
+//! produces *non-uniform cache lengths across heads*, which a production
+//! engine must account for with PagedAttention-style block tables. XLA
+//! needs static shapes, so the device-side cache stays a dense
+//! `[L, H, t_max]` buffer with a keep-mask; everything vLLM's block manager
+//! would do — block tables, free lists, residency accounting, freed-memory
+//! reporting — lives here (DESIGN.md §4). Eviction flips mask bits; when
+//! every slot of a block is evicted (or never filled) the block is returned
+//! to the [`BlockPool`].
+
+pub mod pool;
+
+pub use pool::BlockPool;
+
+use std::sync::Arc;
+
+/// Slots per block (vLLM's default block size is 16).
+pub const BLOCK_SLOTS: usize = 16;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheStats {
+    /// KV pairs currently kept (filled and not evicted), summed over heads.
+    pub kept: usize,
+    /// KV pairs ever filled (prompt + decoded), summed over heads.
+    pub filled: usize,
+    /// Blocks currently resident (≥1 kept slot).
+    pub resident_blocks: usize,
+    /// Blocks freed by eviction (were resident, now empty).
+    pub freed_blocks: usize,
+}
+
+impl CacheStats {
+    /// Removed fraction — the paper's "compression ratio (removed
+    /// fraction)" from Table 2.
+    pub fn compression(&self) -> f64 {
+        if self.filled == 0 {
+            0.0
+        } else {
+            1.0 - self.kept as f64 / self.filled as f64
+        }
+    }
+
+    /// Compression factor (e.g. 0.75 removed -> 4.0x).
+    pub fn factor(&self) -> f64 {
+        if self.filled == 0 || self.kept == 0 {
+            1.0
+        } else {
+            self.filled as f64 / self.kept as f64
+        }
+    }
+}
+
+/// Per-sequence paged cache bookkeeping over the dense masked device cache.
+pub struct PagedKvCache {
+    pub layers: usize,
+    pub heads: usize,
+    pub t_max: usize,
+    /// kept[l][h] is a t_max bitset (true = attendable).
+    kept: Vec<u64>,
+    words_per_head: usize,
+    /// Highest filled position + 1 (same across heads: decode always fills).
+    len: usize,
+    /// Per-(l,h) kept count, maintained incrementally.
+    kept_count: Vec<usize>,
+    freed_blocks: usize,
+    pool: Option<Arc<BlockPool>>,
+    pool_blocks: usize,
+    /// Dirty flag so the coordinator only re-uploads the mask on change.
+    dirty: bool,
+}
+
+impl PagedKvCache {
+    pub fn new(layers: usize, heads: usize, t_max: usize) -> PagedKvCache {
+        let words_per_head = t_max.div_ceil(64);
+        PagedKvCache {
+            layers,
+            heads,
+            t_max,
+            kept: vec![0; layers * heads * words_per_head],
+            words_per_head,
+            len: 0,
+            kept_count: vec![0; layers * heads],
+            freed_blocks: 0,
+            pool: None,
+            pool_blocks: 0,
+            dirty: true,
+        }
+    }
+
+    /// Attach a shared block pool; residency is charged against it.
+    pub fn with_pool(mut self, pool: Arc<BlockPool>) -> PagedKvCache {
+        self.pool = Some(pool);
+        self
+    }
+
+    fn idx(&self, l: usize, h: usize) -> usize {
+        l * self.heads + h
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_kept(&self, l: usize, h: usize, pos: usize) -> bool {
+        let base = self.idx(l, h) * self.words_per_head;
+        self.kept[base + pos / 64] >> (pos % 64) & 1 == 1
+    }
+
+    fn set_kept(&mut self, l: usize, h: usize, pos: usize, val: bool) {
+        let head = self.idx(l, h);
+        let word = head * self.words_per_head + pos / 64;
+        let bit = 1u64 << (pos % 64);
+        let was = self.kept[word] & bit != 0;
+        if was == val {
+            return;
+        }
+        if val {
+            self.kept[word] |= bit;
+            self.kept_count[head] += 1;
+        } else {
+            self.kept[word] &= !bit;
+            self.kept_count[head] -= 1;
+            // Block reclamation: did this empty the whole block?
+            let b0 = pos / BLOCK_SLOTS * BLOCK_SLOTS;
+            let b1 = (b0 + BLOCK_SLOTS).min(self.t_max);
+            if (b0..b1).all(|p| !self.is_kept(l, h, p)) {
+                self.freed_blocks += 1;
+                if let Some(pool) = &self.pool {
+                    pool.release(1);
+                    self.pool_blocks -= 1;
+                }
+            }
+        }
+        self.dirty = true;
+    }
+
+    /// Mark positions [len, new_len) filled (kept) in every head.
+    /// Returns false if the block pool is exhausted (admission control).
+    pub fn fill(&mut self, new_len: usize) -> bool {
+        assert!(new_len <= self.t_max, "fill beyond t_max");
+        if new_len <= self.len {
+            return true;
+        }
+        // Charge new blocks to the pool before mutating.
+        if let Some(pool) = &self.pool {
+            let old_blocks = self.len.div_ceil(BLOCK_SLOTS);
+            let new_blocks = new_len.div_ceil(BLOCK_SLOTS);
+            let need = (new_blocks - old_blocks) * self.layers * self.heads;
+            if !pool.try_alloc(need) {
+                return false;
+            }
+            self.pool_blocks += need;
+        }
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                for pos in self.len..new_len {
+                    self.set_kept(l, h, pos, true);
+                }
+            }
+        }
+        self.len = new_len;
+        true
+    }
+
+    /// Evict one KV pair (no-op if already evicted / never filled).
+    pub fn evict(&mut self, l: usize, h: usize, pos: usize) {
+        if pos < self.len {
+            self.set_kept(l, h, pos, false);
+        }
+    }
+
+    /// Apply a per-head keep decision over the prompt region [0, upto):
+    /// keep position p iff `keep(p)`.
+    pub fn retain(&mut self, l: usize, h: usize, upto: usize, keep: impl Fn(usize) -> bool) {
+        for pos in 0..upto.min(self.len) {
+            if !keep(pos) {
+                self.set_kept(l, h, pos, false);
+            }
+        }
+    }
+
+    /// Dense f32 mask `[L, H, t_max]` for the decode artifact.
+    pub fn mask_f32(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.layers * self.heads * self.t_max];
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let base = (l * self.heads + h) * self.t_max;
+                for pos in 0..self.len {
+                    if self.is_kept(l, h, pos) {
+                        out[base + pos] = 1.0;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// True if the mask changed since the last `take_dirty` call.
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
+    }
+
+    pub fn kept_in_head(&self, l: usize, h: usize) -> usize {
+        self.kept_count[self.idx(l, h)]
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let kept: usize = self.kept_count.iter().sum();
+        let filled = self.len * self.layers * self.heads;
+        let mut resident = 0;
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                for b in 0..self.len.div_ceil(BLOCK_SLOTS) {
+                    let b0 = b * BLOCK_SLOTS;
+                    let b1 = (b0 + BLOCK_SLOTS).min(self.t_max);
+                    if (b0..b1).any(|p| self.is_kept(l, h, p)) {
+                        resident += 1;
+                    }
+                }
+            }
+        }
+        CacheStats { kept, filled, resident_blocks: resident, freed_blocks: self.freed_blocks }
+    }
+
+    /// Release all pool blocks (sequence finished).
+    pub fn release(&mut self) {
+        if let Some(pool) = &self.pool {
+            pool.release(self.pool_blocks);
+            self.pool_blocks = 0;
+        }
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_and_evict_accounting() {
+        let mut c = PagedKvCache::new(2, 2, 64);
+        assert!(c.fill(40));
+        let s = c.stats();
+        assert_eq!(s.kept, 40 * 4);
+        assert_eq!(s.filled, 40 * 4);
+        assert_eq!(s.compression(), 0.0);
+
+        // evict a full block in one head -> freed_blocks increments
+        for pos in 0..16 {
+            c.evict(0, 0, pos);
+        }
+        let s = c.stats();
+        assert_eq!(s.kept, 40 * 4 - 16);
+        assert_eq!(s.freed_blocks, 1);
+        assert!(s.compression() > 0.0);
+    }
+
+    #[test]
+    fn mask_matches_kept() {
+        let mut c = PagedKvCache::new(1, 2, 32);
+        c.fill(20);
+        c.evict(0, 1, 5);
+        let m = c.mask_f32();
+        assert_eq!(m.len(), 1 * 2 * 32);
+        assert_eq!(m[5], 1.0); // head 0 untouched
+        assert_eq!(m[32 + 5], 0.0); // head 1 evicted
+        assert_eq!(m[32 + 20], 0.0); // beyond len unfilled
+    }
+
+    #[test]
+    fn retain_applies_predicate() {
+        let mut c = PagedKvCache::new(1, 1, 64);
+        c.fill(50);
+        c.retain(0, 0, 50, |p| p % 2 == 0);
+        assert_eq!(c.kept_in_head(0, 0), 25);
+        assert!(c.is_kept(0, 0, 0) && !c.is_kept(0, 0, 1));
+    }
+
+    #[test]
+    fn pool_admission_control() {
+        let pool = Arc::new(BlockPool::new(4)); // 4 blocks total
+        let mut c = PagedKvCache::new(1, 1, 256).with_pool(pool.clone());
+        assert!(c.fill(64)); // 4 blocks
+        assert!(!c.fill(80)); // would need a 5th
+        c.release();
+        assert_eq!(pool.free(), 4);
+    }
+
+    #[test]
+    fn double_evict_idempotent() {
+        let mut c = PagedKvCache::new(1, 1, 32);
+        c.fill(10);
+        c.evict(0, 0, 3);
+        c.evict(0, 0, 3);
+        assert_eq!(c.kept_in_head(0, 0), 9);
+    }
+}

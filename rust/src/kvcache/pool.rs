@@ -1,0 +1,88 @@
+//! Shared block pool: global KV memory accounting across sequences
+//! (the vLLM block-allocator role — admission control for the batcher).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct BlockPool {
+    total: usize,
+    free: AtomicUsize,
+}
+
+impl BlockPool {
+    pub fn new(total: usize) -> BlockPool {
+        BlockPool { total, free: AtomicUsize::new(total) }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn free(&self) -> usize {
+        self.free.load(Ordering::Relaxed)
+    }
+
+    pub fn used(&self) -> usize {
+        self.total - self.free()
+    }
+
+    /// Try to reserve `n` blocks; false (and no change) if unavailable.
+    pub fn try_alloc(&self, n: usize) -> bool {
+        let mut cur = self.free.load(Ordering::Relaxed);
+        loop {
+            if cur < n {
+                return false;
+            }
+            match self.free.compare_exchange_weak(
+                cur,
+                cur - n,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn release(&self, n: usize) {
+        let prev = self.free.fetch_add(n, Ordering::AcqRel);
+        debug_assert!(prev + n <= self.total, "pool over-release");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn alloc_release() {
+        let p = BlockPool::new(10);
+        assert!(p.try_alloc(7));
+        assert!(!p.try_alloc(4));
+        assert!(p.try_alloc(3));
+        p.release(10);
+        assert_eq!(p.free(), 10);
+    }
+
+    #[test]
+    fn concurrent_alloc_never_oversubscribes() {
+        let p = Arc::new(BlockPool::new(1000));
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0;
+                for _ in 0..1000 {
+                    if p.try_alloc(1) {
+                        got += 1;
+                    }
+                }
+                got
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 1000);
+        assert_eq!(p.free(), 0);
+    }
+}

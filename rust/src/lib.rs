@@ -1,0 +1,44 @@
+//! # kvzap — fast, adaptive and faithful KV cache pruning
+//!
+//! Reproduction of *KVzap* (Jégou & Jeblick, 2026) as a three-layer
+//! rust + JAX + Pallas serving stack:
+//!
+//! * **L1/L2** (build-time python): Pallas attention/scorer kernels inside a
+//!   GQA transformer, AOT-lowered to HLO-text artifacts (`make artifacts`).
+//! * **L3** (this crate): a vLLM-router-shaped serving coordinator — request
+//!   router, continuous batcher, paged KV cache manager with per-head
+//!   variable lengths, prefill/decode scheduler — with KV cache pruning as a
+//!   first-class feature ([`policies`]).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! artifacts once and executes them via PJRT.
+
+pub mod analysis;
+pub mod bench_support;
+pub mod coordinator;
+pub mod kvcache;
+pub mod metrics;
+pub mod policies;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+/// Default artifacts directory, overridable via `KVZAP_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("KVZAP_ARTIFACTS") {
+        return d.into();
+    }
+    // Walk up from cwd until an artifacts/manifest.json is found (so tests,
+    // benches and examples work from any directory in the repo).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

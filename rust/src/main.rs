@@ -1,0 +1,239 @@
+//! kvzap CLI — leader entrypoint for the serving stack.
+//!
+//! Subcommands:
+//!   info                         manifest + artifact summary
+//!   generate --prompt ... [--policy kvzap_mlp:-4] [--max-new 32]
+//!   eval --suite ruler|longbench|aime [--policy ...] [--samples N] [--ctx T]
+//!   serve [--addr host:port] [--policy ...]
+//!   flops                        Appendix-B overhead table (Table 3)
+//!   metrics-demo                 quick built-in load test printing metrics
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use kvzap::coordinator::{Engine, SamplingParams};
+use kvzap::policies;
+use kvzap::runtime::Runtime;
+use kvzap::server::{Server, ServerConfig};
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+/// Tiny --key value argument parser (clap is unavailable offline).
+struct Args {
+    cmd: String,
+    kv: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut kv = std::collections::HashMap::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            if let Some(key) = rest[i].strip_prefix("--") {
+                let val = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    i += 1;
+                    rest[i].clone()
+                } else {
+                    "true".into()
+                };
+                kv.insert(key.to_string(), val);
+            }
+            i += 1;
+        }
+        Args { cmd, kv }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.cmd.as_str() {
+        "info" => info(),
+        "generate" => generate(&args),
+        "eval" => eval(&args),
+        "serve" => serve(&args),
+        "flops" => flops(),
+        "metrics-demo" => metrics_demo(&args),
+        _ => {
+            eprintln!(
+                "usage: kvzap <info|generate|eval|serve|flops|metrics-demo> [--key value ...]\n\
+                 policies: {}",
+                policies::POLICY_NAMES.join(", ")
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_engine() -> Result<Arc<Engine>> {
+    let rt = Runtime::load(kvzap::artifacts_dir())?;
+    Ok(Arc::new(Engine::new(Arc::new(rt))))
+}
+
+fn info() -> Result<()> {
+    let rt = Runtime::load(kvzap::artifacts_dir())?;
+    let m = &rt.manifest;
+    println!("zap-lm: L={} Dh={} Hq={} Hkv={} D={} Dint={} t_max={}",
+        m.model.n_layers, m.model.d_model, m.model.n_q_heads, m.model.n_kv_heads,
+        m.model.d_head, m.model.d_int, m.model.t_max);
+    println!("window w={} obs_window={}", m.window, m.obs_window);
+    println!("prefill buckets t={:?} b={:?}", m.buckets.prefill_t, m.buckets.prefill_b);
+    println!("decode buckets b={:?}; kvzip oracle t={:?}", m.buckets.decode_b, m.buckets.kvzip_t);
+    println!("weights: {} tensors", m.weights.len());
+    println!("threshold quantiles (oracle log s+): {:?}", m.threshold_quantiles);
+    let mut names: Vec<&String> = m.artifacts.keys().collect();
+    names.sort();
+    println!("artifacts ({}):", names.len());
+    for n in names {
+        println!("  {n}");
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let engine = load_engine()?;
+    let prompt = args.get("prompt", "AAQX = 90210. the sky was clear. Q AAQX\nA ");
+    let spec = args.get("policy", "kvzap_mlp:-4");
+    let policy = policies::by_name(&spec, engine.window())
+        .ok_or_else(|| anyhow!("unknown policy {spec}"))?;
+    let sp = SamplingParams::greedy(args.usize("max-new", 32));
+    let r = engine.generate(&prompt, policy.as_ref(), &sp)?;
+    println!("text: {:?}", r.text);
+    println!(
+        "compression: {:.3} ({:.2}x) | prefill {}us oracle {}us decode {}us policy {}us",
+        r.compression,
+        1.0 / (1.0 - r.compression).max(1e-9),
+        r.prefill_us,
+        r.oracle_us,
+        r.decode_us,
+        r.policy_us
+    );
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let engine = load_engine()?;
+    let suite = args.get("suite", "ruler");
+    let spec = args.get("policy", "kvzap_mlp:-4");
+    let samples = args.usize("samples", 5);
+    let ctx = args.usize("ctx", 248);
+    let policy = policies::by_name(&spec, engine.window())
+        .ok_or_else(|| anyhow!("unknown policy {spec}"))?;
+    let mut rng = Rng::new(args.usize("seed", 42) as u64);
+
+    let mut total = 0;
+    let mut correct = 0;
+    let mut comp_sum = 0.0;
+    let subsets: Vec<String> = match suite.as_str() {
+        "ruler" => workload::RULER_SUBSETS.iter().map(|s| s.to_string()).collect(),
+        "longbench" => workload::LONGBENCH_SUBSETS.iter().map(|s| s.to_string()).collect(),
+        "aime" => vec!["aime".to_string()],
+        _ => return Err(anyhow!("unknown suite {suite}")),
+    };
+    for subset in &subsets {
+        let mut sub_ok = 0;
+        for i in 0..samples {
+            let mut r = rng.fork(i as u64);
+            let (task, max_new) = match suite.as_str() {
+                "ruler" => {
+                    let t = workload::ruler_instance(subset, ctx, &mut r);
+                    let m = t.max_new;
+                    (t, m)
+                }
+                "longbench" => {
+                    let t = workload::longbench_instance(subset, ctx, &mut r);
+                    let m = t.max_new;
+                    (t, m)
+                }
+                _ => {
+                    let a = workload::aime_instance(&mut r);
+                    let m = a.task.max_new;
+                    (a.task, m)
+                }
+            };
+            let sp = SamplingParams::greedy(max_new);
+            let res = engine.generate(&task.prompt, policy.as_ref(), &sp)?;
+            let ok = if suite == "aime" {
+                workload::generators::parse_aime_answer(&res.text).as_deref()
+                    == Some(task.answer.as_str())
+            } else {
+                task.score(&res.text)
+            };
+            sub_ok += ok as usize;
+            correct += ok as usize;
+            total += 1;
+            comp_sum += res.compression;
+        }
+        println!("{subset:<18} acc {:>5.1}%", 100.0 * sub_ok as f64 / samples as f64);
+    }
+    println!(
+        "== {suite} | policy {spec} | acc {:.1}% | mean compression {:.3} ({:.2}x)",
+        100.0 * correct as f64 / total as f64,
+        comp_sum / total as f64,
+        1.0 / (1.0 - comp_sum / total as f64).max(1e-9)
+    );
+    println!("{}", engine.metrics.report());
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let engine = load_engine()?;
+    let cfg = ServerConfig {
+        addr: args.get("addr", "127.0.0.1:7712"),
+        default_policy: args.get("policy", "kvzap_mlp:-4"),
+        max_batch: args.usize("max-batch", 4),
+        max_wait_us: args.usize("max-wait-us", 2000) as u64,
+    };
+    Server::new(engine, cfg).serve()
+}
+
+fn flops() -> Result<()> {
+    // Include zap-lm when artifacts exist; the paper rows never need them.
+    let extra = Runtime::load(kvzap::artifacts_dir()).ok().map(|rt| {
+        let m = &rt.manifest.model;
+        kvzap::analysis::LayerDims {
+            name: "zap-lm (this repo)".into(),
+            h_q: m.n_q_heads,
+            h_kv: m.n_kv_heads,
+            d_head: m.d_head,
+            d_model: m.d_model,
+            d_int: m.d_int,
+            d_surrogate: m.d_surrogate,
+        }
+    });
+    println!("Table 3 | relative compute overhead of KVzap (linear projections only)");
+    println!("{:<24} {:>5} {:>3} {:>5} {:>6} {:>7} {:>10} {:>12}",
+        "model", "H_Q", "H", "D", "D_h", "D_int", "MLP %", "Linear %");
+    for r in kvzap::analysis::overhead_table(extra) {
+        println!(
+            "{:<24} {:>5} {:>3} {:>5} {:>6} {:>7} {:>9.2}% {:>11.2}%",
+            r.dims.name, r.dims.h_q, r.dims.h_kv, r.dims.d_head, r.dims.d_model,
+            r.dims.d_int, r.mlp_pct, r.linear_pct
+        );
+    }
+    Ok(())
+}
+
+fn metrics_demo(args: &Args) -> Result<()> {
+    let engine = load_engine()?;
+    let n = args.usize("requests", 8);
+    let spec = args.get("policy", "kvzap_mlp:-4");
+    let policy = policies::by_name(&spec, engine.window()).unwrap();
+    let mut rng = Rng::new(7);
+    for i in 0..n {
+        let t = workload::ruler_instance("niah_single_1", 200, &mut rng.fork(i as u64));
+        let _ = engine.generate(&t.prompt, policy.as_ref(), &SamplingParams::greedy(t.max_new))?;
+    }
+    println!("{}", engine.metrics.report());
+    Ok(())
+}

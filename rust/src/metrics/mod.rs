@@ -1,0 +1,67 @@
+//! Serving metrics: latency histograms + throughput/compression counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::histogram::Histogram;
+
+#[derive(Default)]
+pub struct EngineMetrics {
+    /// Prefill latency (µs per batch).
+    pub prefill: Mutex<Histogram>,
+    /// Oracle (KVzip double-pass) latency (µs) — baseline policies only.
+    pub oracle: Mutex<Histogram>,
+    /// Per decode step latency (µs).
+    pub decode_step: Mutex<Histogram>,
+    /// End-to-end request latency (µs), recorded by the batcher.
+    pub e2e: Mutex<Histogram>,
+    pub requests: AtomicU64,
+    pub tokens_out: AtomicU64,
+    /// Sum of per-request compression ratios ×1e6 (for a cheap mean).
+    compression_micro: AtomicU64,
+}
+
+impl EngineMetrics {
+    pub fn note_request(&self, tokens: usize, compression: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.tokens_out.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.compression_micro
+            .fetch_add((compression.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_compression(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.compression_micro.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens_out={} mean_compression={:.3}\n  prefill {}\n  decode_step {}\n  e2e {}",
+            self.requests.load(Ordering::Relaxed),
+            self.tokens_out.load(Ordering::Relaxed),
+            self.mean_compression(),
+            self.prefill.lock().unwrap().summary("us"),
+            self.decode_step.lock().unwrap().summary("us"),
+            self.e2e.lock().unwrap().summary("us"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_accounting() {
+        let m = EngineMetrics::default();
+        m.note_request(10, 0.5);
+        m.note_request(20, 0.7);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.tokens_out.load(Ordering::Relaxed), 30);
+        assert!((m.mean_compression() - 0.6).abs() < 1e-6);
+    }
+}

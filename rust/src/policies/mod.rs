@@ -1,0 +1,641 @@
+//! KV cache pruning policies — KVzap and every baseline from Figure 1.
+//!
+//! A policy consumes the per-position statistics the prefill artifact
+//! produces (surrogate scores, oracle scores, cumulative / windowed
+//! attention, norms — see model.PREFILL_OUTPUTS) and decides which KV
+//! pairs to evict from the [`PagedKvCache`]. Two families:
+//!
+//! * **Threshold policies** (KVzap, paper §3.3): evict pairs whose
+//!   predicted log s+ falls below τ, keep a sliding window of the `w` most
+//!   recent tokens, and keep pruning *during decoding* via the
+//!   [`ScoreBuffer`] (Algorithm 1's delayed eviction).
+//! * **Budget policies** (KVzip, H2O, SnapKV, ...): keep a fixed fraction
+//!   of pairs by score rank — per head, per layer (AdaKV), or global
+//!   (KVzip). These match the paper's fixed-budget comparisons and the
+//!   Fig. 5 (right) threshold-vs-top-k ablation.
+
+pub mod score_buffer;
+
+pub use score_buffer::ScoreBuffer;
+
+use crate::kvcache::PagedKvCache;
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+/// Host-side view of one sequence's prefill statistics.
+///
+/// Every tensor is `[L, B, H, t_max]`; `b` selects the sequence.
+pub struct PrefillView<'a> {
+    pub b: usize,
+    pub score_lin: &'a Tensor,
+    pub score_mlp: &'a Tensor,
+    pub max_attn: &'a Tensor,
+    pub plus_attn: &'a Tensor,
+    pub cum_attn: &'a Tensor,
+    pub win_attn: &'a Tensor,
+    pub vnorm: &'a Tensor,
+    pub knorm: &'a Tensor,
+    /// KVzip oracle scores `[L, 1, H, T]` — present only when the policy
+    /// declared `needs_oracle()` (they cost a second, doubled-length pass).
+    pub oracle_s: Option<&'a Tensor>,
+    pub oracle_s_plus: Option<&'a Tensor>,
+}
+
+impl<'a> PrefillView<'a> {
+    pub fn row(&self, which: Stat, l: usize, h: usize) -> &'a [f32] {
+        // Oracle tensors are fetched per sequence (batch dim 1), while the
+        // prefill stats are slot-batched: index them differently.
+        let (t, b) = match which {
+            Stat::ScoreLin => (self.score_lin, self.b),
+            Stat::ScoreMlp => (self.score_mlp, self.b),
+            Stat::MaxAttn => (self.max_attn, self.b),
+            Stat::PlusAttn => (self.plus_attn, self.b),
+            Stat::CumAttn => (self.cum_attn, self.b),
+            Stat::WinAttn => (self.win_attn, self.b),
+            Stat::VNorm => (self.vnorm, self.b),
+            Stat::KNorm => (self.knorm, self.b),
+            Stat::OracleS => (self.oracle_s.expect("oracle stats not fetched"), 0),
+            Stat::OracleSPlus => {
+                (self.oracle_s_plus.expect("oracle stats not fetched"), 0)
+            }
+        };
+        t.row(&[l, b, h])
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stat {
+    ScoreLin,
+    ScoreMlp,
+    MaxAttn,
+    PlusAttn,
+    CumAttn,
+    WinAttn,
+    VNorm,
+    KNorm,
+    OracleS,
+    OracleSPlus,
+}
+
+/// Decode-step scores for threshold policies: predicted log s+ per (l, h).
+pub struct DecodeScores<'a> {
+    /// `[L, H]` for this sequence.
+    pub scores: &'a [f32],
+    pub heads: usize,
+}
+
+impl<'a> DecodeScores<'a> {
+    pub fn at(&self, l: usize, h: usize) -> f32 {
+        self.scores[l * self.heads + h]
+    }
+}
+
+pub trait PrunePolicy: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Apply prefill-time pruning for positions [0, prompt_len).
+    fn prefill_prune(&self, view: &PrefillView, prompt_len: usize, cache: &mut PagedKvCache);
+
+    /// Threshold for decode-time pruning (None = no decode pruning, like
+    /// the budget baselines / KVzip itself, paper Criterion 2).
+    fn decode_threshold(&self) -> Option<f32> {
+        None
+    }
+
+    /// Which surrogate drives decode-time scores.
+    fn decode_stat(&self) -> Stat {
+        Stat::ScoreMlp
+    }
+
+    /// Whether the KVzip oracle double-pass must be run for this policy.
+    fn needs_oracle(&self) -> bool {
+        false
+    }
+}
+
+/// Sliding-window size shared by all policies (paper w, scaled — see
+/// config.py). Positions in [prompt_len - w, prompt_len) are always kept at
+/// prefill; during decode the window slides via the ScoreBuffer.
+pub fn protected(pos: usize, prompt_len: usize, window: usize) -> bool {
+    pos + window >= prompt_len
+}
+
+// ---------------------------------------------------------------------------
+// Full cache (no pruning)
+
+pub struct NoPress;
+
+impl PrunePolicy for NoPress {
+    fn name(&self) -> String {
+        "full".into()
+    }
+    fn prefill_prune(&self, _: &PrefillView, _: usize, _: &mut PagedKvCache) {}
+}
+
+// ---------------------------------------------------------------------------
+// KVzap (the paper's method): thresholding + sliding window, decode-capable
+
+pub struct KVzap {
+    pub mlp: bool,
+    pub tau: f32,
+    pub window: usize,
+}
+
+impl KVzap {
+    pub fn linear(tau: f32, window: usize) -> Self {
+        KVzap { mlp: false, tau, window }
+    }
+    pub fn mlp(tau: f32, window: usize) -> Self {
+        KVzap { mlp: true, tau, window }
+    }
+}
+
+impl PrunePolicy for KVzap {
+    fn name(&self) -> String {
+        format!("kvzap_{}_tau{}", if self.mlp { "mlp" } else { "linear" }, self.tau)
+    }
+
+    fn prefill_prune(&self, view: &PrefillView, prompt_len: usize, cache: &mut PagedKvCache) {
+        let stat = if self.mlp { Stat::ScoreMlp } else { Stat::ScoreLin };
+        for l in 0..cache.layers {
+            for h in 0..cache.heads {
+                let scores = view.row(stat, l, h);
+                cache.retain(l, h, prompt_len, |p| {
+                    protected(p, prompt_len, self.window) || scores[p] >= self.tau
+                });
+            }
+        }
+    }
+
+    fn decode_threshold(&self) -> Option<f32> {
+        Some(self.tau)
+    }
+
+    fn decode_stat(&self) -> Stat {
+        if self.mlp {
+            Stat::ScoreMlp
+        } else {
+            Stat::ScoreLin
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Budget-based scoring policies (KVzip oracle + the baseline zoo)
+
+/// How a budget is allocated across heads/layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// Fixed share per head (SnapKV / H2O style).
+    PerHead,
+    /// Budget pooled within a layer, heads compete (AdaKV).
+    PerLayer,
+    /// One global pool across layers and heads (KVzip §3.1).
+    Global,
+}
+
+/// Generic score-rank budget policy: keep the `keep_frac` highest-scoring
+/// pairs at `granularity`, always keeping the protected window.
+pub struct BudgetPolicy {
+    pub label: String,
+    pub stat: Stat,
+    /// Fraction of prompt KV pairs to keep (0, 1].
+    pub keep_frac: f64,
+    pub granularity: Granularity,
+    pub window: usize,
+    /// Negate scores (keep the *lowest*, e.g. Knorm keeps small ||k||).
+    pub invert: bool,
+    /// Always keep the first `sink` tokens (StreamingLLM attention sinks).
+    pub sinks: usize,
+    pub needs_oracle: bool,
+}
+
+impl BudgetPolicy {
+    fn score(&self, view: &PrefillView, l: usize, h: usize, p: usize) -> f64 {
+        let v = view.row(self.stat, l, h)[p] as f64;
+        if self.invert {
+            -v
+        } else {
+            v
+        }
+    }
+}
+
+impl PrunePolicy for BudgetPolicy {
+    fn name(&self) -> String {
+        format!("{}_keep{:.2}", self.label, self.keep_frac)
+    }
+
+    fn needs_oracle(&self) -> bool {
+        self.needs_oracle
+    }
+
+    fn prefill_prune(&self, view: &PrefillView, prompt_len: usize, cache: &mut PagedKvCache) {
+        let (layers, heads) = (cache.layers, cache.heads);
+        let forced = |p: usize| protected(p, prompt_len, self.window) || p < self.sinks;
+
+        match self.granularity {
+            Granularity::PerHead => {
+                let budget = ((prompt_len as f64) * self.keep_frac).round() as usize;
+                for l in 0..layers {
+                    for h in 0..heads {
+                        let mut ranked: Vec<(usize, f64)> = (0..prompt_len)
+                            .filter(|&p| !forced(p))
+                            .map(|p| (p, self.score(view, l, h, p)))
+                            .collect();
+                        ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+                        let n_forced = (0..prompt_len).filter(|&p| forced(p)).count();
+                        let quota = budget.saturating_sub(n_forced);
+                        let keep: std::collections::HashSet<usize> =
+                            ranked.iter().take(quota).map(|&(p, _)| p).collect();
+                        cache.retain(l, h, prompt_len, |p| forced(p) || keep.contains(&p));
+                    }
+                }
+            }
+            Granularity::PerLayer | Granularity::Global => {
+                let pools: Vec<Vec<(usize, usize)>> = match self.granularity {
+                    Granularity::PerLayer => (0..layers)
+                        .map(|l| (0..heads).map(|h| (l, h)).collect())
+                        .collect(),
+                    _ => vec![(0..layers)
+                        .flat_map(|l| (0..heads).map(move |h| (l, h)))
+                        .collect()],
+                };
+                for pool in pools {
+                    let mut ranked: Vec<(usize, usize, usize, f64)> = vec![];
+                    let mut n_forced = 0;
+                    for &(l, h) in &pool {
+                        for p in 0..prompt_len {
+                            if forced(p) {
+                                n_forced += 1;
+                            } else {
+                                ranked.push((l, h, p, self.score(view, l, h, p)));
+                            }
+                        }
+                    }
+                    let budget =
+                        ((pool.len() * prompt_len) as f64 * self.keep_frac).round() as usize;
+                    let quota = budget.saturating_sub(n_forced);
+                    ranked.sort_by(|a, b| b.3.total_cmp(&a.3));
+                    let keep: std::collections::HashSet<(usize, usize, usize)> =
+                        ranked.iter().take(quota).map(|&(l, h, p, _)| (l, h, p)).collect();
+                    for &(l, h) in &pool {
+                        cache.retain(l, h, prompt_len, |p| {
+                            forced(p) || keep.contains(&(l, h, p))
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+// Named constructors for the baseline zoo ----------------------------------
+
+pub fn kvzip_oracle(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "kvzip".into(),
+        stat: Stat::OracleS,
+        keep_frac,
+        granularity: Granularity::Global,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: true,
+    }
+}
+
+pub fn kvzip_plus_oracle(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "kvzip_plus".into(),
+        stat: Stat::OracleSPlus,
+        keep_frac,
+        granularity: Granularity::Global,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: true,
+    }
+}
+
+pub fn h2o(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "h2o".into(),
+        stat: Stat::CumAttn,
+        keep_frac,
+        granularity: Granularity::PerHead,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: false,
+    }
+}
+
+pub fn snapkv(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "snapkv".into(),
+        stat: Stat::WinAttn,
+        keep_frac,
+        granularity: Granularity::PerHead,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: false,
+    }
+}
+
+pub fn adakv(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "adakv".into(),
+        stat: Stat::WinAttn,
+        keep_frac,
+        granularity: Granularity::PerLayer,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: false,
+    }
+}
+
+pub fn tova(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "tova".into(),
+        stat: Stat::MaxAttn,
+        keep_frac,
+        granularity: Granularity::PerHead,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: false,
+    }
+}
+
+pub fn observed_attention(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "observed_attn".into(),
+        stat: Stat::MaxAttn,
+        keep_frac,
+        granularity: Granularity::Global,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: false,
+    }
+}
+
+pub fn expected_attention(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "expected_attn".into(),
+        stat: Stat::PlusAttn,
+        keep_frac,
+        granularity: Granularity::PerHead,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: false,
+    }
+}
+
+pub fn knorm(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "knorm".into(),
+        stat: Stat::KNorm,
+        keep_frac,
+        granularity: Granularity::PerHead,
+        window,
+        invert: true, // keep the smallest key norms
+        sinks: 0,
+        needs_oracle: false,
+    }
+}
+
+/// Fixed-ratio top-k on KVzap surrogate scores — the Fig. 5 (right)
+/// threshold-vs-top-k ablation.
+pub fn kvzap_topk(mlp: bool, keep_frac: f64, window: usize, per_layer: bool) -> BudgetPolicy {
+    BudgetPolicy {
+        label: format!(
+            "kvzap_{}_top{}",
+            if mlp { "mlp" } else { "linear" },
+            if per_layer { "layer" } else { "head" }
+        ),
+        stat: if mlp { Stat::ScoreMlp } else { Stat::ScoreLin },
+        keep_frac,
+        granularity: if per_layer { Granularity::PerLayer } else { Granularity::PerHead },
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StreamingLLM: sinks + recency (no scores at all)
+
+pub struct StreamingLlm {
+    pub keep_frac: f64,
+    pub sinks: usize,
+}
+
+impl PrunePolicy for StreamingLlm {
+    fn name(&self) -> String {
+        format!("streaming_llm_keep{:.2}", self.keep_frac)
+    }
+
+    fn prefill_prune(&self, _view: &PrefillView, prompt_len: usize, cache: &mut PagedKvCache) {
+        let budget = ((prompt_len as f64) * self.keep_frac).round() as usize;
+        let recent = budget.saturating_sub(self.sinks).max(1);
+        let cut = prompt_len.saturating_sub(recent);
+        for l in 0..cache.layers {
+            for h in 0..cache.heads {
+                cache.retain(l, h, prompt_len, |p| p < self.sinks || p >= cut);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Random eviction (sanity-check lower bound)
+
+pub struct RandomPress {
+    pub keep_frac: f64,
+    pub seed: u64,
+    pub window: usize,
+}
+
+impl PrunePolicy for RandomPress {
+    fn name(&self) -> String {
+        format!("random_keep{:.2}", self.keep_frac)
+    }
+
+    fn prefill_prune(&self, _view: &PrefillView, prompt_len: usize, cache: &mut PagedKvCache) {
+        let mut rng = Rng::new(self.seed);
+        for l in 0..cache.layers {
+            for h in 0..cache.heads {
+                let keep: Vec<bool> =
+                    (0..prompt_len).map(|_| rng.f64() < self.keep_frac).collect();
+                cache.retain(l, h, prompt_len, |p| {
+                    protected(p, prompt_len, self.window) || keep[p]
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry used by the CLI / server / benches
+
+/// Instantiate a policy by name, e.g. "kvzap_mlp:-4.0", "h2o:0.5",
+/// "full". The parameter after ':' is τ for threshold policies and the
+/// keep-fraction for budget policies.
+pub fn by_name(spec: &str, window: usize) -> Option<Box<dyn PrunePolicy>> {
+    let (name, param) = match spec.split_once(':') {
+        Some((n, p)) => (n, p.parse::<f64>().ok()?),
+        None => (spec, f64::NAN),
+    };
+    let frac = if param.is_nan() { 0.5 } else { param };
+    Some(match name {
+        "full" => Box::new(NoPress),
+        "kvzap_mlp" => Box::new(KVzap::mlp(param as f32, window)),
+        "kvzap_linear" => Box::new(KVzap::linear(param as f32, window)),
+        "kvzap_mlp_topk" => Box::new(kvzap_topk(true, frac, window, false)),
+        "kvzap_linear_topk" => Box::new(kvzap_topk(false, frac, window, false)),
+        "kvzap_mlp_toplayer" => Box::new(kvzap_topk(true, frac, window, true)),
+        "kvzip" => Box::new(kvzip_oracle(frac, window)),
+        "kvzip_plus" => Box::new(kvzip_plus_oracle(frac, window)),
+        "h2o" => Box::new(h2o(frac, window)),
+        "snapkv" => Box::new(snapkv(frac, window)),
+        "adakv" => Box::new(adakv(frac, window)),
+        "tova" => Box::new(tova(frac, window)),
+        "observed_attn" => Box::new(observed_attention(frac, window)),
+        "expected_attn" => Box::new(expected_attention(frac, window)),
+        "knorm" => Box::new(knorm(frac, window)),
+        "streaming_llm" => Box::new(StreamingLlm { keep_frac: frac, sinks: 4 }),
+        "random" => Box::new(RandomPress { keep_frac: frac, seed: 0, window }),
+        _ => return None,
+    })
+}
+
+/// All baseline family names (for `--help` and the bench sweeps).
+pub const POLICY_NAMES: &[&str] = &[
+    "full",
+    "kvzap_mlp",
+    "kvzap_linear",
+    "kvzap_mlp_topk",
+    "kvzap_linear_topk",
+    "kvzap_mlp_toplayer",
+    "kvzip",
+    "kvzip_plus",
+    "h2o",
+    "snapkv",
+    "adakv",
+    "tova",
+    "observed_attn",
+    "expected_attn",
+    "knorm",
+    "streaming_llm",
+    "random",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_view(t: &Tensor) -> PrefillView {
+        PrefillView {
+            b: 0,
+            score_lin: t,
+            score_mlp: t,
+            max_attn: t,
+            plus_attn: t,
+            cum_attn: t,
+            win_attn: t,
+            vnorm: t,
+            knorm: t,
+            oracle_s: Some(t),
+            oracle_s_plus: Some(t),
+        }
+    }
+
+    fn ramp_tensor(l: usize, h: usize, t: usize) -> Tensor {
+        // score = position index (later positions score higher)
+        let mut data = vec![0.0; l * h * t];
+        for li in 0..l {
+            for hi in 0..h {
+                for p in 0..t {
+                    data[(li * h + hi) * t + p] = p as f32;
+                }
+            }
+        }
+        Tensor::new(data, vec![l, 1, h, t]).unwrap()
+    }
+
+    #[test]
+    fn kvzap_threshold_respects_window() {
+        let t = ramp_tensor(2, 2, 64);
+        let view = fake_view(&t);
+        let mut cache = PagedKvCache::new(2, 2, 64);
+        cache.fill(50);
+        KVzap::mlp(40.0, 8).prefill_prune(&view, 50, &mut cache);
+        // scores 0..40 evicted except protected window [42, 50)
+        assert!(!cache.is_kept(0, 0, 10));
+        assert!(cache.is_kept(0, 0, 45)); // window
+        assert!(cache.is_kept(0, 0, 44)); // score 44 >= 40
+        assert!(!cache.is_kept(1, 1, 39));
+    }
+
+    #[test]
+    fn budget_policy_hits_budget() {
+        let t = ramp_tensor(2, 2, 64);
+        let view = fake_view(&t);
+        for gran in [Granularity::PerHead, Granularity::PerLayer, Granularity::Global] {
+            let mut cache = PagedKvCache::new(2, 2, 64);
+            cache.fill(60);
+            let pol = BudgetPolicy {
+                label: "test".into(),
+                stat: Stat::ScoreMlp,
+                keep_frac: 0.5,
+                granularity: gran,
+                window: 4,
+                invert: false,
+                sinks: 0,
+                needs_oracle: false,
+            };
+            pol.prefill_prune(&view, 60, &mut cache);
+            let s = cache.stats();
+            let frac = s.kept as f64 / s.filled as f64;
+            assert!((frac - 0.5).abs() < 0.05, "{gran:?}: kept frac {frac}");
+        }
+    }
+
+    #[test]
+    fn streaming_llm_keeps_sinks_and_recency() {
+        let t = ramp_tensor(1, 1, 128);
+        let view = fake_view(&t);
+        let mut cache = PagedKvCache::new(1, 1, 128);
+        cache.fill(100);
+        StreamingLlm { keep_frac: 0.3, sinks: 4 }.prefill_prune(&view, 100, &mut cache);
+        assert!(cache.is_kept(0, 0, 0) && cache.is_kept(0, 0, 3)); // sinks
+        assert!(cache.is_kept(0, 0, 99)); // recent
+        assert!(!cache.is_kept(0, 0, 50)); // middle dropped
+    }
+
+    #[test]
+    fn registry_instantiates_all() {
+        for name in POLICY_NAMES {
+            let spec = if *name == "full" { (*name).to_string() } else { format!("{name}:0.5") };
+            assert!(by_name(&spec, 16).is_some(), "{name}");
+        }
+        assert!(by_name("nope", 16).is_none());
+    }
+
+    #[test]
+    fn inverted_budget_keeps_lowest() {
+        let t = ramp_tensor(1, 1, 32);
+        let view = fake_view(&t);
+        let mut cache = PagedKvCache::new(1, 1, 32);
+        cache.fill(32);
+        knorm(0.25, 0).prefill_prune(&view, 32, &mut cache);
+        assert!(cache.is_kept(0, 0, 0)); // smallest score kept
+        assert!(!cache.is_kept(0, 0, 31));
+    }
+}

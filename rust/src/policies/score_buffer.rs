@@ -1,0 +1,131 @@
+//! Decode-time delayed eviction (paper Algorithm 1, decoding case).
+//!
+//! During decoding every new token is provisionally kept; its predicted
+//! log s+ enters this buffer. Once a position falls out of the sliding
+//! window of the `window` most recent tokens, the deferred decision is
+//! applied: evict iff its score is below τ. This is exactly the DMS-style
+//! "delayed eviction with a sliding window" the paper adopts (§3.3) — the
+//! window also seeds from the tail of the prompt at prefill time so the
+//! window semantics are continuous across the phase boundary.
+
+use crate::kvcache::PagedKvCache;
+
+pub struct ScoreBuffer {
+    window: usize,
+    layers: usize,
+    heads: usize,
+    /// Ring of (position, scores[l*heads+h]) entries, oldest first.
+    ring: std::collections::VecDeque<(usize, Vec<f32>)>,
+}
+
+impl ScoreBuffer {
+    pub fn new(window: usize, layers: usize, heads: usize) -> ScoreBuffer {
+        ScoreBuffer { window, layers, heads, ring: Default::default() }
+    }
+
+    /// Seed from the prompt tail: positions [prompt_len - window,
+    /// prompt_len) with their prefill surrogate scores; `score(l, h, pos)`.
+    pub fn seed_from_prefill(
+        &mut self,
+        prompt_len: usize,
+        score: impl Fn(usize, usize, usize) -> f32,
+    ) {
+        let start = prompt_len.saturating_sub(self.window);
+        for pos in start..prompt_len {
+            let mut v = Vec::with_capacity(self.layers * self.heads);
+            for l in 0..self.layers {
+                for h in 0..self.heads {
+                    v.push(score(l, h, pos));
+                }
+            }
+            self.ring.push_back((pos, v));
+        }
+    }
+
+    /// Push the new position's scores; apply the deferred eviction for any
+    /// position that just left the window. Returns the number of evictions.
+    pub fn push_and_evict(
+        &mut self,
+        pos: usize,
+        scores: Vec<f32>,
+        tau: f32,
+        cache: &mut PagedKvCache,
+    ) -> usize {
+        debug_assert_eq!(scores.len(), self.layers * self.heads);
+        self.ring.push_back((pos, scores));
+        let mut evicted = 0;
+        while self.ring.len() > self.window {
+            let (old_pos, old_scores) = self.ring.pop_front().unwrap();
+            for l in 0..self.layers {
+                for h in 0..self.heads {
+                    if old_scores[l * self.heads + h] < tau {
+                        cache.evict(l, h, old_pos);
+                        evicted += 1;
+                    }
+                }
+            }
+        }
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delayed_eviction_waits_for_window_exit() {
+        let mut cache = PagedKvCache::new(1, 1, 64);
+        cache.fill(8);
+        let mut buf = ScoreBuffer::new(4, 1, 1);
+        // Positions 8..16 decode with low scores; eviction must lag by 4.
+        for pos in 8..16 {
+            cache.fill(pos + 1);
+            let n = buf.push_and_evict(pos, vec![-10.0], -5.0, &mut cache);
+            if pos < 12 {
+                assert_eq!(n, 0, "still inside window at {pos}");
+            } else {
+                assert_eq!(n, 1);
+                assert!(!cache.is_kept(0, 0, pos - 4));
+            }
+            assert!(cache.is_kept(0, 0, pos), "current token always kept");
+        }
+    }
+
+    #[test]
+    fn high_scores_survive_window_exit() {
+        let mut cache = PagedKvCache::new(1, 1, 64);
+        cache.fill(1);
+        let mut buf = ScoreBuffer::new(2, 1, 1);
+        for pos in 1..8 {
+            cache.fill(pos + 1);
+            buf.push_and_evict(pos, vec![3.0], -5.0, &mut cache);
+        }
+        for pos in 0..8 {
+            assert!(cache.is_kept(0, 0, pos));
+        }
+    }
+
+    #[test]
+    fn seed_from_prefill_joins_phases() {
+        let mut cache = PagedKvCache::new(1, 1, 64);
+        cache.fill(10);
+        let mut buf = ScoreBuffer::new(4, 1, 1);
+        // prompt tail scores: position 6 low, others high
+        buf.seed_from_prefill(10, |_, _, pos| if pos == 6 { -9.0 } else { 1.0 });
+        assert_eq!(buf.len(), 4);
+        // two decode steps push 6 out of the window -> it gets evicted
+        cache.fill(11);
+        buf.push_and_evict(10, vec![1.0], -5.0, &mut cache);
+        assert!(!cache.is_kept(0, 0, 6));
+        assert!(cache.is_kept(0, 0, 7));
+    }
+}

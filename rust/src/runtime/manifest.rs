@@ -1,0 +1,221 @@
+//! artifacts/manifest.json — the contract between the python compile path
+//! and the rust runtime (written by python/compile/aot.py).
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_int: usize,
+    pub d_surrogate: usize,
+    pub t_max: usize,
+}
+
+impl ModelDims {
+    pub fn group(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SpecialTokens {
+    pub pad: u8,
+    pub bos: u8,
+    pub eos: u8,
+    pub sep: u8,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // prefill | decode | kvzip_score
+    pub batch: usize,
+    pub t: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactMeta {
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no output '{name}'", self.name))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Buckets {
+    pub prefill_t: Vec<usize>,
+    pub prefill_b: Vec<usize>,
+    pub decode_b: Vec<usize>,
+    pub kvzip_t: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelDims,
+    pub special: SpecialTokens,
+    pub window: usize,
+    pub obs_window: usize,
+    pub buckets: Buckets,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub weights: Vec<WeightEntry>,
+    /// Oracle log-score quantiles — the default threshold sweep for benches.
+    pub threshold_quantiles: BTreeMap<String, f64>,
+}
+
+fn io_specs(v: &Json) -> Result<Vec<IoSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("io spec not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+                shape: e
+                    .req("shape")
+                    .map_err(|e| anyhow!(e))?
+                    .usize_vec()
+                    .ok_or_else(|| anyhow!("bad shape"))?,
+                dtype: e.req("dtype").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+            })
+        })
+        .collect()
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.req(key)
+        .map_err(|e| anyhow!(e))?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{key} not a number"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let m = j.req("model").map_err(|e| anyhow!(e))?;
+        let model = ModelDims {
+            vocab: req_usize(m, "vocab")?,
+            d_model: req_usize(m, "d_model")?,
+            n_layers: req_usize(m, "n_layers")?,
+            n_q_heads: req_usize(m, "n_q_heads")?,
+            n_kv_heads: req_usize(m, "n_kv_heads")?,
+            d_head: req_usize(m, "d_head")?,
+            d_int: req_usize(m, "d_int")?,
+            d_surrogate: req_usize(m, "d_surrogate")?,
+            t_max: req_usize(m, "t_max")?,
+        };
+        let s = j.req("special_tokens").map_err(|e| anyhow!(e))?;
+        let special = SpecialTokens {
+            pad: req_usize(s, "pad")? as u8,
+            bos: req_usize(s, "bos")? as u8,
+            eos: req_usize(s, "eos")? as u8,
+            sep: req_usize(s, "sep")? as u8,
+        };
+        let b = j.req("buckets").map_err(|e| anyhow!(e))?;
+        let buckets = Buckets {
+            prefill_t: b.req("prefill_t").map_err(|e| anyhow!(e))?.usize_vec().unwrap(),
+            prefill_b: b.req("prefill_b").map_err(|e| anyhow!(e))?.usize_vec().unwrap(),
+            decode_b: b.req("decode_b").map_err(|e| anyhow!(e))?.usize_vec().unwrap(),
+            kvzip_t: b.req("kvzip_t").map_err(|e| anyhow!(e))?.usize_vec().unwrap(),
+        };
+
+        let mut artifacts = HashMap::new();
+        for (name, a) in j.req("artifacts").map_err(|e| anyhow!(e))?.as_obj().unwrap() {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: a.req("file").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+                    kind: a.req("kind").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+                    batch: req_usize(a, "batch")?,
+                    t: req_usize(a, "t")?,
+                    inputs: io_specs(a.req("inputs").map_err(|e| anyhow!(e))?)?,
+                    outputs: io_specs(a.req("outputs").map_err(|e| anyhow!(e))?)?,
+                },
+            );
+        }
+
+        let mut weights = vec![];
+        for w in j.req("weights").map_err(|e| anyhow!(e))?.as_arr().unwrap() {
+            weights.push(WeightEntry {
+                name: w.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap().to_string(),
+                shape: w.req("shape").map_err(|e| anyhow!(e))?.usize_vec().unwrap(),
+                offset: req_usize(w, "offset")?,
+                bytes: req_usize(w, "bytes")?,
+            });
+        }
+
+        let mut threshold_quantiles = BTreeMap::new();
+        if let Some(q) = j.get("threshold_quantiles").and_then(|q| q.as_obj()) {
+            for (k, v) in q {
+                if let Some(x) = v.as_f64() {
+                    threshold_quantiles.insert(k.clone(), x);
+                }
+            }
+        }
+
+        Ok(Manifest {
+            model,
+            special,
+            window: req_usize(&j, "window")?,
+            obs_window: req_usize(&j, "obs_window")?,
+            buckets,
+            artifacts,
+            weights,
+            threshold_quantiles,
+        })
+    }
+
+    /// Smallest prefill T bucket that fits `len` tokens (for `batch`).
+    pub fn prefill_bucket(&self, len: usize, batch: usize) -> Option<String> {
+        let t = self.buckets.prefill_t.iter().copied().find(|&t| t >= len)?;
+        let b = self.buckets.prefill_b.iter().copied().find(|&b| b >= batch)?;
+        Some(format!("prefill_b{b}_t{t}"))
+    }
+
+    pub fn decode_bucket(&self, batch: usize) -> Option<String> {
+        let b = self.buckets.decode_b.iter().copied().find(|&b| b >= batch)?;
+        Some(format!("decode_b{b}"))
+    }
+
+    pub fn kvzip_bucket(&self, len: usize) -> Option<String> {
+        let t = self.buckets.kvzip_t.iter().copied().find(|&t| t >= len)?;
+        Some(format!("kvzip_score_t{t}"))
+    }
+}

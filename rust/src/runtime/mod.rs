@@ -1,0 +1,180 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client with the weights resident on device.
+//!
+//! Wiring (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Our vendored xla crate is patched with
+//! `untuple_result = true`, so each artifact output arrives as its own
+//! device buffer: the KV cache produced by prefill (or a decode step) is
+//! fed straight back into the next decode step with zero host traffic.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub use manifest::{ArtifactMeta, Manifest};
+pub use tensor::Tensor;
+
+/// An argument to an artifact execution.
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    /// A device buffer from a previous execution (e.g. the KV cache).
+    Buf(&'a PjRtBuffer),
+}
+
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: PjRtLoadedExecutable,
+}
+
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    /// Weight tensors resident on device, in manifest order; appended to
+    /// every execute call after the data inputs.
+    weights: Vec<PjRtBuffer>,
+    exes: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+
+        let blob = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| "reading weights.bin (run `make artifacts`)")?;
+        let mut weights = Vec::with_capacity(manifest.weights.len());
+        for w in &manifest.weights {
+            let slice = blob
+                .get(w.offset..w.offset + w.bytes)
+                .ok_or_else(|| anyhow!("weights.bin too short for {}", w.name))?;
+            let data: Vec<f32> = slice
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = client
+                .buffer_from_host_buffer(&data, &w.shape, None)
+                .map_err(|e| anyhow!("upload weight {}: {e:?}", w.name))?;
+            weights.push(buf);
+        }
+
+        Ok(Runtime { client, manifest, dir, weights, exes: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Compile-on-demand with caching; artifacts are keyed by bucket name.
+    pub fn artifact(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", meta.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", meta.file))?;
+        let entry = Arc::new(Executable { meta, exe });
+        self.exes.lock().unwrap().insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    }
+
+    /// Execute an artifact: `data` args in manifest input order; the weight
+    /// buffers are appended automatically. Returns one device buffer per
+    /// manifest output (untupled).
+    pub fn exec(&self, exe: &Executable, data: &[Arg]) -> Result<Vec<PjRtBuffer>> {
+        if data.len() != exe.meta.inputs.len() {
+            return Err(anyhow!(
+                "artifact {} expects {} data inputs, got {}",
+                exe.meta.name,
+                exe.meta.inputs.len(),
+                data.len()
+            ));
+        }
+        let mut owned: Vec<PjRtBuffer> = vec![];
+        for (arg, spec) in data.iter().zip(&exe.meta.inputs) {
+            match arg {
+                Arg::F32(v, dims) => {
+                    debug_assert_eq!(&spec.shape, *dims, "{} shape", spec.name);
+                    owned.push(self.upload_f32(v, dims)?);
+                }
+                Arg::I32(v, dims) => {
+                    debug_assert_eq!(&spec.shape, *dims, "{} shape", spec.name);
+                    owned.push(self.upload_i32(v, dims)?);
+                }
+                Arg::Buf(_) => {}
+            }
+        }
+        let mut refs: Vec<&PjRtBuffer> = Vec::with_capacity(data.len() + self.weights.len());
+        let mut oi = 0;
+        for arg in data {
+            match arg {
+                Arg::Buf(b) => refs.push(b),
+                _ => {
+                    refs.push(&owned[oi]);
+                    oi += 1;
+                }
+            }
+        }
+        refs.extend(self.weights.iter());
+        let mut outs = exe
+            .exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", exe.meta.name))?;
+        let replica = outs
+            .pop()
+            .ok_or_else(|| anyhow!("no replica outputs from {}", exe.meta.name))?;
+        if replica.len() != exe.meta.outputs.len() {
+            return Err(anyhow!(
+                "artifact {}: {} outputs returned, manifest says {} — \
+                 was the xla crate patched with untuple_result?",
+                exe.meta.name,
+                replica.len(),
+                exe.meta.outputs.len()
+            ));
+        }
+        Ok(replica)
+    }
+
+    /// Fetch an output buffer to the host as an f32 tensor.
+    pub fn fetch_f32(&self, buf: &PjRtBuffer, shape: &[usize]) -> Result<Tensor> {
+        let lit: Literal = buf.to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Tensor::new(data, shape.to_vec())
+    }
+}

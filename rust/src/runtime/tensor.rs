@@ -1,0 +1,81 @@
+//! A minimal host-side dense f32 tensor (row-major) for artifact outputs.
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} != data len {}", shape, data.len()));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let s = self.strides();
+        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        self.data[off]
+    }
+
+    /// Contiguous slice for a prefix index (e.g. [layer, batch, head] of a
+    /// 4-D tensor -> the trailing row).
+    pub fn row(&self, prefix: &[usize]) -> &[f32] {
+        let s = self.strides();
+        let off: usize = prefix.iter().zip(&s).map(|(i, st)| i * st).sum();
+        let len: usize = self.shape[prefix.len()..].iter().product();
+        &self.data[off..off + len]
+    }
+
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing() {
+        let t = Tensor::new((0..24).map(|x| x as f32).collect(), vec![2, 3, 4]).unwrap();
+        assert_eq!(t.at(&[1, 2, 3]), 23.0);
+        assert_eq!(t.row(&[0, 1]), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(vec![0.0; 5], vec![2, 3]).is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! JSON-lines TCP serving frontend.
+//!
+//! Protocol: one JSON object per line.
+//!   request : {"prompt": str, "policy": str, "max_new": int,
+//!              "greedy": bool?, "temperature": f?, "top_k": int?,
+//!              "top_p": f?, "seed": int?}
+//!   response: {"text": str, "compression": f, "tokens_out": int,
+//!              "e2e_us": int, "error": str?}
+//!   special : {"cmd": "metrics"} -> metrics report; {"cmd": "shutdown"}
+//!
+//! Connections are handled by a small thread-per-connection frontend; all
+//! generation funnels through the shared [`Batcher`] so concurrent clients
+//! get batched together (the continuous-batching path).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Batcher, Engine, Request, SamplingParams};
+use crate::util::json::Json;
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub default_policy: String,
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7712".into(),
+            default_policy: "kvzap_mlp:-4".into(),
+            max_batch: 4,
+            max_wait_us: 2_000,
+        }
+    }
+}
+
+pub fn parse_request(line: &str, default_policy: &str) -> Result<(String, String, SamplingParams)> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let prompt = j
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .context("missing 'prompt'")?
+        .to_string();
+    let policy = j
+        .get("policy")
+        .and_then(|p| p.as_str())
+        .unwrap_or(default_policy)
+        .to_string();
+    let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(32);
+    let greedy = j.get("greedy").and_then(|v| v.as_bool()).unwrap_or(true);
+    let mut sp = if greedy {
+        SamplingParams::greedy(max_new)
+    } else {
+        SamplingParams::reasoning(max_new, j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64)
+    };
+    if let Some(t) = j.get("temperature").and_then(|v| v.as_f64()) {
+        sp.temperature = t as f32;
+    }
+    if let Some(k) = j.get("top_k").and_then(|v| v.as_usize()) {
+        sp.top_k = k;
+    }
+    if let Some(p) = j.get("top_p").and_then(|v| v.as_f64()) {
+        sp.top_p = p as f32;
+    }
+    Ok((prompt, policy, sp))
+}
+
+pub fn response_json(r: &crate::coordinator::Response) -> String {
+    let mut pairs = vec![
+        ("text", Json::str(r.text.clone())),
+        ("compression", Json::num(r.compression)),
+        ("tokens_out", Json::num(r.tokens_out as f64)),
+        ("e2e_us", Json::num(r.e2e_us as f64)),
+    ];
+    if let Some(e) = &r.error {
+        pairs.push(("error", Json::str(e.clone())));
+    }
+    Json::obj(pairs).dump()
+}
+
+pub struct Server {
+    pub engine: Arc<Engine>,
+    batcher: Arc<Batcher>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(engine: Arc<Engine>, cfg: ServerConfig) -> Server {
+        let batcher = Arc::new(Batcher::start(
+            engine.clone(),
+            crate::coordinator::BatcherConfig {
+                max_batch: cfg.max_batch,
+                max_wait_us: cfg.max_wait_us,
+            },
+        ));
+        Server { engine, batcher, cfg, stop: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Blocking accept loop. Returns when a client sends {"cmd":"shutdown"}.
+    pub fn serve(&self) -> Result<()> {
+        let listener = TcpListener::bind(&self.cfg.addr)
+            .with_context(|| format!("bind {}", self.cfg.addr))?;
+        listener.set_nonblocking(true)?;
+        eprintln!("[kvzap] serving on {}", self.cfg.addr);
+        let mut handles = vec![];
+        while !self.stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let batcher = self.batcher.clone();
+                    let engine = self.engine.clone();
+                    let stop = self.stop.clone();
+                    let default_policy = self.cfg.default_policy.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, batcher, engine, stop, default_policy);
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    batcher: Arc<Batcher>,
+    engine: Arc<Engine>,
+    stop: Arc<AtomicBool>,
+    default_policy: String,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Ok(j) = Json::parse(&line) {
+            match j.get("cmd").and_then(|c| c.as_str()) {
+                Some("metrics") => {
+                    let rep = Json::obj(vec![("metrics", Json::str(engine.metrics.report()))]);
+                    writeln!(writer, "{}", rep.dump())?;
+                    continue;
+                }
+                Some("shutdown") => {
+                    stop.store(true, Ordering::Relaxed);
+                    writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).dump())?;
+                    return Ok(());
+                }
+                _ => {}
+            }
+        }
+        match parse_request(&line, &default_policy) {
+            Ok((prompt, policy, sp)) => {
+                let (tx, rx) = mpsc::channel();
+                batcher.submit(Request { prompt, policy, sp, resp: tx })?;
+                let resp = rx.recv()?;
+                writeln!(writer, "{}", response_json(&resp))?;
+            }
+            Err(e) => {
+                let err = Json::obj(vec![("error", Json::str(format!("{e:#}")))]);
+                writeln!(writer, "{}", err.dump())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client (used by examples and integration tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn request(&mut self, body: &Json) -> Result<Json> {
+        writeln!(self.writer, "{}", body.dump())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        writeln!(self.writer, "{}", Json::obj(vec![("cmd", Json::str("shutdown"))]).dump())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_defaults() {
+        let (p, pol, sp) =
+            parse_request(r#"{"prompt": "hi", "max_new": 7}"#, "kvzap_mlp:-4").unwrap();
+        assert_eq!(p, "hi");
+        assert_eq!(pol, "kvzap_mlp:-4");
+        assert_eq!(sp.max_new, 7);
+        assert!(sp.greedy);
+    }
+
+    #[test]
+    fn parse_request_sampling_overrides() {
+        let (_, _, sp) = parse_request(
+            r#"{"prompt":"x","greedy":false,"temperature":0.8,"top_k":5,"top_p":0.9,"seed":3}"#,
+            "full",
+        )
+        .unwrap();
+        assert!(!sp.greedy);
+        assert!((sp.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(sp.top_k, 5);
+    }
+
+    #[test]
+    fn parse_request_rejects_missing_prompt() {
+        assert!(parse_request(r#"{"max_new": 2}"#, "full").is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Latency histogram substrate (hdrhistogram is unavailable offline).
+//!
+//! Log-bucketed histogram over microseconds: 64 major buckets (powers of
+//! two) × 16 minor — <7% relative error, constant memory, O(1) record.
+
+#[derive(Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+    min: u64,
+}
+
+const MINOR: usize = 16;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; 64 * MINOR],
+            count: 0,
+            sum: 0,
+            max: 0,
+            min: u64::MAX,
+        }
+    }
+
+    fn index(v: u64) -> usize {
+        if v < MINOR as u64 {
+            return v as usize;
+        }
+        let major = 63 - v.leading_zeros() as usize;
+        let minor = ((v >> (major - 4)) & (MINOR as u64 - 1)) as usize;
+        (major * MINOR + minor).min(64 * MINOR - 1)
+    }
+
+    fn bucket_value(i: usize) -> u64 {
+        let major = i / MINOR;
+        let minor = (i % MINOR) as u64;
+        if major < 4 {
+            return i as u64;
+        }
+        (1u64 << major) + (minor << (major - 4))
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+        self.min = self.min.min(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn summary(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.1}{u} p50={}{u} p95={}{u} p99={}{u} max={}{u}",
+            self.count,
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.max,
+            u = unit
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_monotone() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max());
+        // log-bucket relative error bound
+        assert!((p50 as f64 - 500.0).abs() / 500.0 < 0.08, "p50={p50}");
+        assert!((p95 as f64 - 950.0).abs() / 950.0 < 0.08, "p95={p95}");
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Substrates built in-repo because crates.io is unreachable offline:
+//! JSON codec, PRNG, latency histograms, property testing (DESIGN.md §7).
+
+pub mod histogram;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+
+/// Monotonic microsecond clock for latency metrics.
+pub fn now_micros() -> u64 {
+    use std::time::Instant;
+    use once_cell::sync::Lazy;
+    static START: Lazy<Instant> = Lazy::new(Instant::now);
+    START.elapsed().as_micros() as u64
+}

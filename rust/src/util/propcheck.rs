@@ -1,0 +1,114 @@
+//! `propcheck`: a property-testing mini-framework (proptest is unavailable
+//! offline — DESIGN.md §7).
+//!
+//! Runs a property over `cases` random inputs drawn from a generator
+//! closure; on failure it performs greedy shrinking via the user-supplied
+//! `shrink` steps (each yields candidate smaller inputs) and reports the
+//! minimal counterexample. Used by rust/tests/ for the coordinator
+//! invariants (cache accounting, policy monotonicity, batching).
+
+use crate::util::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// Check `prop` over `cases` inputs from `gen`; shrink failures with
+/// `shrink` (return candidate simpler inputs; first failing one recurses).
+pub fn check_with<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink
+            let mut cur = input;
+            let mut cur_msg = msg;
+            'outer: loop {
+                for cand in shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "propcheck failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.seed, cur, cur_msg
+            );
+        }
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn check<T: Clone + std::fmt::Debug>(
+    cases: usize,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    check_with(Config { cases, ..Config::default() }, gen, |_| vec![], prop);
+}
+
+/// Shrinker for Vec<T>: halves and single-removals.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = vec![];
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 12 {
+        for i in 0..v.len() {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check(64, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "propcheck failed")]
+    fn fails_and_shrinks() {
+        check_with(
+            Config::default(),
+            |r| (0..r.below(20) + 5).map(|i| i as u32).collect::<Vec<u32>>(),
+            |v| shrink_vec(v),
+            |v| {
+                if v.len() < 3 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+    }
+}

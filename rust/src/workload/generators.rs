@@ -1,0 +1,405 @@
+//! Task-instance generators — the rust mirror of python/compile/corpus.py.
+//!
+//! IMPORTANT: the template lists and byte formats here are a contract with
+//! corpus.py (the model was trained on exactly these formats). Keep in sync.
+
+use super::TaskInstance;
+use crate::util::rng::Rng;
+
+pub const FILLERS: &[&str] = &[
+    "the sky was clear and the wind moved over the hills. ",
+    "a river runs past the old mill near the stone bridge. ",
+    "people walked slowly through the quiet market square. ",
+    "the train left the station two minutes after noon. ",
+    "rain fell softly on the roof of the wooden cabin. ",
+    "the library keeps its oldest maps in the north wing. ",
+    "a grey cat slept on the warm step by the door. ",
+    "the garden path was lined with small white stones. ",
+];
+
+pub const NAMES: &[&str] = &["amir", "bella", "chen", "dara", "elif", "farid", "gita", "hana"];
+pub const CITIES: &[&str] = &["oslo", "lima", "kyoto", "accra", "quito", "perth", "turin", "hanoi"];
+pub const JOBS: &[&str] = &["baker", "pilot", "nurse", "coder", "judge", "miner", "actor", "clerk"];
+pub const WORDS: &[&str] = &[
+    "apple", "stone", "cloud", "tiger", "brick", "olive", "comet", "fern", "maple", "ridge",
+    "pearl", "wolf", "cedar", "lark", "moss", "dune",
+];
+
+pub const TREC_LABELS: &[&str] = &["loc", "num", "person", "desc", "entity", "abbr"];
+
+pub fn trec_patterns(label: &str) -> &'static [&'static str] {
+    match label {
+        "loc" => &["where is {w}", "where can one find {w}", "what country is {w} in"],
+        "num" => &["how many {w} are there", "what is the count of {w}", "how much {w} is needed"],
+        "person" => &["who made {w}", "who leads {w}", "who found {w}"],
+        "desc" => &["what is {w}", "what does {w} mean", "how does {w} work"],
+        "entity" => &["what kind of {w} is it", "which {w} is best", "name a type of {w}"],
+        "abbr" => &["what does {w} stand for", "expand the term {w}", "what is short for {w}"],
+        _ => panic!("unknown trec label {label}"),
+    }
+}
+
+fn key(r: &mut Rng) -> String {
+    (0..4).map(|_| (b'A' + r.below(26) as u8) as char).collect()
+}
+
+fn val(r: &mut Rng) -> String {
+    (0..5).map(|_| (b'0' + r.below(10) as u8) as char).collect()
+}
+
+fn filler_block(r: &mut Rng, n_bytes: usize) -> String {
+    let mut out = String::new();
+    while out.len() < n_bytes {
+        out.push_str(*r.choice(FILLERS));
+    }
+    out
+}
+
+/// Scatter item lines at random depths inside filler, like corpus._haystack.
+fn haystack(r: &mut Rng, items: &[String], target_len: usize) -> String {
+    let items_len: usize = items.iter().map(|i| i.len() + 1).sum();
+    let budget = target_len.saturating_sub(items_len + 16).max(32);
+    let mut cuts: Vec<usize> = (0..items.len()).map(|_| r.below(budget + 1)).collect();
+    cuts.sort_unstable();
+    let fill = filler_block(r, budget);
+    let fill = &fill[..budget];
+    let mut segs = String::new();
+    let mut prev = 0;
+    for (c, item) in cuts.iter().zip(items) {
+        segs.push_str(&fill[prev..*c]);
+        segs.push_str(item);
+        segs.push('\n');
+        prev = *c;
+    }
+    segs.push_str(&fill[prev..budget]);
+    segs
+}
+
+fn pattern_fill(pat: &str, w: &str) -> String {
+    pat.replace("{w}", w)
+}
+
+// ---------------------------------------------------------------------------
+// ruler-mini
+
+fn inst(suite: &'static str, subset: &str, prompt: String, answer: String) -> TaskInstance {
+    let max_new = answer.len() + 3;
+    TaskInstance { suite, subset: subset.to_string(), prompt, answer, max_new }
+}
+
+fn niah_single(r: &mut Rng, target: usize, variant: u8, subset: &str) -> TaskInstance {
+    let (k, v) = (key(r), val(r));
+    let line = match variant {
+        1 => format!("{k} = {v}."),
+        2 => format!("note {k} holds {v}."),
+        _ => format!("remember that {k} maps to {v}."),
+    };
+    let hay = haystack(r, &[line], target);
+    inst("ruler", subset, format!("{hay}Q {k}\nA "), v)
+}
+
+fn niah_multikey(r: &mut Rng, target: usize, n_keys: usize, subset: &str) -> TaskInstance {
+    let pairs: Vec<(String, String)> = (0..n_keys).map(|_| (key(r), val(r))).collect();
+    let lines: Vec<String> = pairs.iter().map(|(k, v)| format!("{k} = {v}.")).collect();
+    let hay = haystack(r, &lines, target);
+    let (k, v) = &pairs[r.below(n_keys)];
+    inst("ruler", subset, format!("{hay}Q {k}\nA "), v.clone())
+}
+
+fn niah_multiquery(r: &mut Rng, target: usize) -> TaskInstance {
+    let pairs: Vec<(String, String)> = (0..3).map(|_| (key(r), val(r))).collect();
+    let lines: Vec<String> = pairs.iter().map(|(k, v)| format!("{k} = {v}.")).collect();
+    let hay = haystack(r, &lines, target);
+    let (k1, v1) = &pairs[0];
+    let (k2, v2) = &pairs[2];
+    inst("ruler", "niah_multiquery", format!("{hay}Q {k1} {k2}\nA "), format!("{v1} {v2}"))
+}
+
+fn niah_multivalue(r: &mut Rng, target: usize) -> TaskInstance {
+    let (k, v1, v2) = (key(r), val(r), val(r));
+    let hay = haystack(r, &[format!("{k} = {v1} {v2}.")], target);
+    inst("ruler", "niah_multivalue", format!("{hay}Q {k}\nA "), format!("{v1} {v2}"))
+}
+
+fn vt(r: &mut Rng, target: usize) -> TaskInstance {
+    let hops = 3;
+    let root = val(r);
+    let names: Vec<String> = (0..hops + 2).map(|_| format!("V{}", r.range(10, 99))).collect();
+    let mut lines = vec![format!("{} = {root}.", names[0])];
+    for i in 1..hops {
+        lines.push(format!("{} = {}.", names[i], names[i - 1]));
+    }
+    let decoy = val(r);
+    lines.push(format!("{} = {decoy}.", names[hops]));
+    lines.push(format!("{} = {}.", names[hops + 1], names[hops]));
+    r.shuffle(&mut lines);
+    let hay = haystack(r, &lines, target);
+    inst("ruler", "vt", format!("{hay}Q {}\nA ", names[hops - 1]), root)
+}
+
+fn cwe(r: &mut Rng, target: usize) -> TaskInstance {
+    let common = *r.choice(WORDS);
+    let others: Vec<&str> = WORDS.iter().copied().filter(|w| *w != common).collect();
+    let mut seq: Vec<&str> = vec![common; 6];
+    for _ in 0..10 {
+        seq.push(*r.choice(&others));
+    }
+    r.shuffle(&mut seq);
+    let lst = format!("list: {}.", seq.join(" "));
+    let hay = haystack(r, &[lst], target);
+    inst("ruler", "cwe", format!("{hay}Q most\nA "), common.to_string())
+}
+
+fn fwe(r: &mut Rng, target: usize) -> TaskInstance {
+    let picks = r.sample_indices(WORDS.len(), 3);
+    let (a, b, c) = (WORDS[picks[0]], WORDS[picks[1]], WORDS[picks[2]]);
+    let mut seq: Vec<&str> = vec![];
+    seq.extend(std::iter::repeat(a).take(5));
+    seq.extend(std::iter::repeat(b).take(3));
+    seq.extend(std::iter::repeat(c).take(2));
+    r.shuffle(&mut seq);
+    let lst = format!("list: {}.", seq.join(" "));
+    let hay = haystack(r, &[lst], target);
+    inst("ruler", "fwe", format!("{hay}Q most\nA "), a.to_string())
+}
+
+fn qa1(r: &mut Rng, target: usize, subset: &str) -> TaskInstance {
+    let n = *r.choice(NAMES);
+    let c = *r.choice(CITIES);
+    let d1 = *r.choice(NAMES);
+    let j = *r.choice(JOBS);
+    let lines = vec![format!("{n} lives in {c}."), format!("{d1} works as a {j}.")];
+    let hay = haystack(r, &lines, target);
+    inst("ruler", subset, format!("{hay}Q where {n}\nA "), c.to_string())
+}
+
+fn qa2(r: &mut Rng, target: usize, subset: &str) -> TaskInstance {
+    let picks = r.sample_indices(NAMES.len(), 2);
+    let (n1, n2) = (NAMES[picks[0]], NAMES[picks[1]]);
+    let c = *r.choice(CITIES);
+    let j = *r.choice(JOBS);
+    let lines = vec![format!("doc1: {n1} lives in {c}."), format!("doc2: {n2} works as a {j}.")];
+    let hay = haystack(r, &lines, target);
+    inst("ruler", subset, format!("{hay}Q job {n2}\nA "), j.to_string())
+}
+
+pub fn ruler_instance(subset: &str, target_len: usize, r: &mut Rng) -> TaskInstance {
+    match subset {
+        "niah_single_1" => niah_single(r, target_len, 1, subset),
+        "niah_single_2" => niah_single(r, target_len, 2, subset),
+        "niah_single_3" => niah_single(r, target_len, 3, subset),
+        "niah_multikey_1" => niah_multikey(r, target_len, 3, subset),
+        "niah_multikey_2" => niah_multikey(r, target_len, 4, subset),
+        "niah_multikey_3" => niah_multikey(r, target_len, 5, subset),
+        "niah_multiquery" => niah_multiquery(r, target_len),
+        "niah_multivalue" => niah_multivalue(r, target_len),
+        "vt" => vt(r, target_len),
+        "cwe" => cwe(r, target_len),
+        "fwe" => fwe(r, target_len),
+        "qa_1" => qa1(r, target_len, subset),
+        "qa_2" => qa2(r, target_len, subset),
+        _ => panic!("unknown ruler subset {subset}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// longbench-mini
+
+fn summ(r: &mut Rng, target: usize) -> TaskInstance {
+    let w = *r.choice(WORDS);
+    let hay = haystack(r, &[format!("!! topic {w}.")], target);
+    let mut t = inst("longbench", "summ", format!("{hay}Q topic\nA "), w.to_string());
+    t.suite = "longbench";
+    t
+}
+
+/// Few-shot question-type classification (TREC proxy). `n_shots` caps the
+/// number of examples for the over-prompting ablation; None = fill budget.
+pub fn trec(r: &mut Rng, target: usize, n_shots: Option<usize>) -> TaskInstance {
+    let mut lines: Vec<String> = vec![];
+    let budget = target.saturating_sub(40);
+    let mut used = 0;
+    let mut shots = 0;
+    while n_shots.map_or(true, |n| shots < n) {
+        let lbl = *r.choice(TREC_LABELS);
+        let pat = *r.choice(trec_patterns(lbl));
+        let w = *r.choice(WORDS);
+        let line = format!("{} -> {lbl}", pattern_fill(pat, w));
+        if used + line.len() + 1 > budget {
+            break;
+        }
+        used += line.len() + 1;
+        lines.push(line);
+        shots += 1;
+    }
+    let lbl = *r.choice(TREC_LABELS);
+    let pat = *r.choice(trec_patterns(lbl));
+    let w = *r.choice(WORDS);
+    let prompt = format!("{}\n{} -> ", lines.join("\n"), pattern_fill(pat, w));
+    let mut t = inst("longbench", "trec", prompt, lbl.to_string());
+    t.suite = "longbench";
+    t
+}
+
+fn fewshot_math(r: &mut Rng, target: usize) -> TaskInstance {
+    let mut lines = vec![];
+    let mut used = 0;
+    while used < target.saturating_sub(30) {
+        let a = r.range(10, 90);
+        let b = r.range(10, 90);
+        let line = format!("{a} plus {b} is {}.", a + b);
+        used += line.len() + 1;
+        lines.push(line);
+    }
+    let a = r.range(10, 90);
+    let b = r.range(10, 90);
+    let prompt = format!("{}\n{a} plus {b} is ", lines.join("\n"));
+    inst("longbench", "fewshot_math", prompt, (a + b).to_string())
+}
+
+fn count_task(r: &mut Rng, target: usize) -> TaskInstance {
+    let n = r.range(2, 8) as usize;
+    let marks: Vec<String> = vec!["## section".to_string(); n];
+    let hay = haystack(r, &marks, target);
+    inst("longbench", "count", format!("{hay}Q sections\nA "), n.to_string())
+}
+
+fn passage_ret(r: &mut Rng, target: usize) -> TaskInstance {
+    let n_docs = 4usize;
+    let w = *r.choice(WORDS);
+    let target_doc = r.range(1, n_docs as i64 + 1) as usize;
+    let per = ((target.saturating_sub(40)) / n_docs).max(24);
+    let mut segs = String::new();
+    for i in 1..=n_docs {
+        segs.push_str(&format!("doc{i}: "));
+        let block = filler_block(r, per.saturating_sub(20));
+        segs.push_str(&block[..per.saturating_sub(20).min(block.len())]);
+        if i == target_doc {
+            segs.push_str(&format!("the word {w} is here. "));
+        }
+    }
+    inst("longbench", "passage_ret", format!("{segs}Q doc {w}\nA "), target_doc.to_string())
+}
+
+fn lcc(r: &mut Rng, target: usize) -> TaskInstance {
+    let mut lines = vec![];
+    let mut vals = vec![];
+    let mut used = 0;
+    let mut i = 0;
+    while used < target.saturating_sub(30) {
+        i += 1;
+        let v = r.range(100, 999);
+        vals.push(v);
+        let line = format!("let a{i} = {v};");
+        used += line.len() + 1;
+        lines.push(line);
+    }
+    let k = r.range(1, i as i64 + 1) as usize;
+    let prompt = format!("{}\na{k} == ", lines.join("\n"));
+    inst("longbench", "lcc", prompt, vals[k - 1].to_string())
+}
+
+fn repobench(r: &mut Rng, target: usize) -> TaskInstance {
+    let mut lines = vec![];
+    let mut vals = vec![];
+    let mut used = 0;
+    let mut i = 0usize;
+    while used < target.saturating_sub(40) {
+        i += 1;
+        let v = r.range(100, 999);
+        vals.push(v);
+        let line = format!("file{}.rs: let b{i} = {v};", (i % 3) + 1);
+        used += line.len() + 1;
+        lines.push(line);
+    }
+    let k = r.range(1, i as i64 + 1) as usize;
+    let prompt = format!("{}\nb{k} == ", lines.join("\n"));
+    inst("longbench", "repobench", prompt, vals[k - 1].to_string())
+}
+
+pub fn longbench_instance(subset: &str, target_len: usize, r: &mut Rng) -> TaskInstance {
+    let mut t = match subset {
+        "sdqa" => qa1(r, target_len, "sdqa"),
+        "mdqa" => qa2(r, target_len, "mdqa"),
+        "summ" => summ(r, target_len),
+        "trec" => trec(r, target_len, None),
+        "fewshot_math" => fewshot_math(r, target_len),
+        "count" => count_task(r, target_len),
+        "passage_ret" => passage_ret(r, target_len),
+        "lcc" => lcc(r, target_len),
+        "repobench" => repobench(r, target_len),
+        "kvret" => {
+            let mut t = niah_multikey(r, target_len, 5, "kvret");
+            t.suite = "longbench";
+            t
+        }
+        _ => panic!("unknown longbench subset {subset}"),
+    };
+    t.suite = "longbench";
+    t
+}
+
+// ---------------------------------------------------------------------------
+// aime-mini
+
+#[derive(Debug, Clone)]
+pub struct AimeInstance {
+    pub task: TaskInstance,
+    /// Reference chain-of-thought (what the model was trained to emit).
+    pub cot: String,
+}
+
+pub fn aime_instance(r: &mut Rng) -> AimeInstance {
+    let n_steps = r.range(6, 11) as usize;
+    let x = r.range(10, 90);
+    let mut ops: Vec<(char, i64)> = vec![];
+    let mut cur = x;
+    for _ in 0..n_steps {
+        loop {
+            let op = *r.choice(&['+', '-', '*']);
+            let n = if op == '*' { r.range(2, 9) } else { r.range(2, 99) };
+            let nxt = match op {
+                '*' => cur * n,
+                '+' => cur + n,
+                _ => cur - n,
+            };
+            if nxt > 0 && nxt < 9000 {
+                ops.push((op, n));
+                cur = nxt;
+                break;
+            }
+        }
+    }
+    let ops_str: Vec<String> = ops.iter().map(|(o, n)| format!("{o}{n}")).collect();
+    let prompt = format!("start {x}\nops {}\nA ", ops_str.join(" "));
+    let mut steps = vec![];
+    let mut v = x;
+    for (o, n) in &ops {
+        v = match o {
+            '*' => v * n,
+            '+' => v + n,
+            _ => v - n,
+        };
+        steps.push(format!("{o}{n} -> {v}"));
+    }
+    let cot = format!("{}\nANSWER {cur}", steps.join("\n"));
+    let max_new = cot.len() + 8;
+    AimeInstance {
+        task: TaskInstance {
+            suite: "aime",
+            subset: "aime".into(),
+            prompt,
+            answer: cur.to_string(),
+            max_new,
+        },
+        cot,
+    }
+}
+
+/// Parse the final "ANSWER n" line from an AIME generation.
+pub fn parse_aime_answer(generated: &str) -> Option<String> {
+    generated
+        .lines()
+        .rev()
+        .find_map(|l| l.strip_prefix("ANSWER ").map(|s| s.trim().to_string()))
+}

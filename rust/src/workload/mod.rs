@@ -1,0 +1,139 @@
+//! Evaluation workloads: ruler-mini / longbench-mini / aime-mini.
+//!
+//! These generators mirror the *task grammar* of python/compile/corpus.py
+//! byte-for-byte in format (the template lists are the contract — see that
+//! file's docstring). They produce the scaled equivalents of the paper's
+//! benchmark suites:
+//!
+//! * ruler-mini: 13 subsets (retrieval / multi-hop tracing / aggregation /
+//!   QA) — RULER (paper §4.4), contexts 256 ("4k") and 384–512 ("16k").
+//! * longbench-mini: 10 subsets incl. a TREC-proxy few-shot classification
+//!   subset for the over-prompting outlier analysis — LongBench (§4.5).
+//! * aime-mini: multi-step arithmetic with chain-of-thought decoding —
+//!   AIME25 (§4.6), the decode-phase pruning regime.
+
+pub mod generators;
+pub mod tokenizer;
+
+pub use generators::{aime_instance, longbench_instance, ruler_instance, AimeInstance};
+pub use tokenizer::ByteTokenizer;
+
+/// One evaluation sample.
+#[derive(Debug, Clone)]
+pub struct TaskInstance {
+    pub suite: &'static str,
+    pub subset: String,
+    pub prompt: String,
+    pub answer: String,
+    pub max_new: usize,
+}
+
+impl TaskInstance {
+    /// Exact-match scoring: the generation, trimmed at the first newline,
+    /// must equal the reference answer (RULER-style string match).
+    pub fn score(&self, generated: &str) -> bool {
+        let got = generated.split('\n').next().unwrap_or("").trim();
+        got == self.answer
+    }
+}
+
+pub const RULER_SUBSETS: &[&str] = &[
+    "niah_single_1",
+    "niah_single_2",
+    "niah_single_3",
+    "niah_multikey_1",
+    "niah_multikey_2",
+    "niah_multikey_3",
+    "niah_multiquery",
+    "niah_multivalue",
+    "vt",
+    "cwe",
+    "fwe",
+    "qa_1",
+    "qa_2",
+];
+
+pub const LONGBENCH_SUBSETS: &[&str] = &[
+    "sdqa",
+    "mdqa",
+    "summ",
+    "trec",
+    "fewshot_math",
+    "count",
+    "passage_ret",
+    "lcc",
+    "repobench",
+    "kvret",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_ruler_subsets_generate_within_budget() {
+        let mut rng = Rng::new(1);
+        for subset in RULER_SUBSETS {
+            for _ in 0..5 {
+                let inst = ruler_instance(subset, 248, &mut rng.fork(7));
+                assert!(inst.prompt.len() <= 248, "{subset}: {}", inst.prompt.len());
+                assert!(!inst.answer.is_empty(), "{subset}");
+                assert!(inst.prompt.ends_with("A ") || inst.prompt.ends_with("-> "),
+                        "{subset} prompt tail");
+            }
+        }
+    }
+
+    #[test]
+    fn all_longbench_subsets_generate_within_budget() {
+        let mut rng = Rng::new(2);
+        for subset in LONGBENCH_SUBSETS {
+            for i in 0..5 {
+                let inst = longbench_instance(subset, 248, &mut rng.fork(i));
+                assert!(inst.prompt.len() <= 248, "{subset}: {}", inst.prompt.len());
+                assert!(!inst.answer.is_empty(), "{subset}");
+            }
+        }
+    }
+
+    #[test]
+    fn scoring_is_exact_prefix_match() {
+        let inst = TaskInstance {
+            suite: "ruler",
+            subset: "x".into(),
+            prompt: "p".into(),
+            answer: "12345".into(),
+            max_new: 8,
+        };
+        assert!(inst.score("12345\ngarbage"));
+        assert!(inst.score("12345"));
+        assert!(!inst.score("12346\n"));
+        assert!(!inst.score(""));
+    }
+
+    #[test]
+    fn aime_chain_is_consistent() {
+        let mut rng = Rng::new(3);
+        for i in 0..10 {
+            let a = aime_instance(&mut rng.fork(i));
+            // replay the ops from the prompt and check the answer
+            let ops_line = a.task.prompt.lines().nth(1).unwrap();
+            let start: i64 = a.task.prompt.lines().next().unwrap()[6..].parse().unwrap();
+            let mut cur = start;
+            for op in ops_line[4..].split(' ') {
+                let (sym, n) = op.split_at(1);
+                let n: i64 = n.parse().unwrap();
+                cur = match sym {
+                    "+" => cur + n,
+                    "-" => cur - n,
+                    "*" => cur * n,
+                    _ => panic!("bad op {sym}"),
+                };
+                assert!(cur > 0 && cur < 9000);
+            }
+            assert_eq!(cur.to_string(), a.task.answer);
+            assert!(a.cot.ends_with(&format!("ANSWER {cur}")));
+        }
+    }
+}

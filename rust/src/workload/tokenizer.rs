@@ -1,0 +1,84 @@
+//! Byte-level tokenizer (the HF-tokenizers substitute, DESIGN.md §7).
+//!
+//! zap-lm is byte-level with reserved low bytes: PAD=0, BOS=1, EOS=2,
+//! SEP=3 (the corpus generators never emit bytes < 16).
+
+#[derive(Debug, Clone, Copy)]
+pub struct ByteTokenizer {
+    pub pad: u8,
+    pub bos: u8,
+    pub eos: u8,
+}
+
+impl Default for ByteTokenizer {
+    fn default() -> Self {
+        ByteTokenizer { pad: 0, bos: 1, eos: 2 }
+    }
+}
+
+impl ByteTokenizer {
+    /// BOS + utf-8 bytes, truncated to `max_len`.
+    pub fn encode(&self, text: &str, max_len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(self.bos as i32);
+        out.extend(text.bytes().map(|b| b as i32));
+        out.truncate(max_len);
+        out
+    }
+
+    /// Pad to `len` with PAD.
+    pub fn pad_to(&self, mut tokens: Vec<i32>, len: usize) -> Vec<i32> {
+        tokens.resize(len, self.pad as i32);
+        tokens
+    }
+
+    /// Decode generated token ids back to text, stopping at EOS/PAD.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .take_while(|&&t| t != self.eos as i32 && t != self.pad as i32)
+            .filter_map(|&t| u8::try_from(t).ok())
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// True when the generation should stop (EOS or newline — answers are
+    /// newline-terminated in the task grammar).
+    pub fn is_stop(&self, token: i32, stop_at_newline: bool) -> bool {
+        token == self.eos as i32
+            || token == self.pad as i32
+            || (stop_at_newline && token == b'\n' as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = ByteTokenizer::default();
+        let ids = t.encode("hi there", 64);
+        assert_eq!(ids[0], 1);
+        assert_eq!(t.decode(&ids[1..]), "hi there");
+    }
+
+    #[test]
+    fn truncation_and_padding() {
+        let t = ByteTokenizer::default();
+        let ids = t.encode("abcdef", 4);
+        assert_eq!(ids.len(), 4);
+        let padded = t.pad_to(ids, 8);
+        assert_eq!(padded.len(), 8);
+        assert_eq!(padded[7], 0);
+    }
+
+    #[test]
+    fn stop_conditions() {
+        let t = ByteTokenizer::default();
+        assert!(t.is_stop(2, false));
+        assert!(t.is_stop(b'\n' as i32, true));
+        assert!(!t.is_stop(b'\n' as i32, false));
+        assert!(!t.is_stop(b'a' as i32, true));
+    }
+}

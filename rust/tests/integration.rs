@@ -1,0 +1,329 @@
+//! Integration tests over the full rust stack (runtime + coordinator +
+//! policies + server). Tests that need compiled artifacts skip gracefully
+//! when artifacts/ is absent; `make test` runs after `make artifacts` so
+//! they execute in CI order.
+
+use std::sync::Arc;
+
+use kvzap::coordinator::{Engine, SamplingParams};
+use kvzap::kvcache::PagedKvCache;
+use kvzap::policies::{self, PrefillView, PrunePolicy};
+use kvzap::runtime::{Runtime, Tensor};
+use kvzap::util::propcheck::{check, check_with, shrink_vec, Config};
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = kvzap::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    static ENGINE: once_cell::sync::OnceCell<Arc<Engine>> = once_cell::sync::OnceCell::new();
+    Some(
+        ENGINE
+            .get_or_init(|| Arc::new(Engine::new(Arc::new(Runtime::load(dir).unwrap()))))
+            .clone(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Runtime-level
+
+#[test]
+fn manifest_buckets_resolve() {
+    let Some(e) = engine() else { return };
+    let m = &e.rt.manifest;
+    assert!(m.prefill_bucket(100, 1).is_some());
+    assert!(m.prefill_bucket(m.model.t_max, 4).is_some());
+    assert!(m.prefill_bucket(m.model.t_max + 1, 1).is_none());
+    assert!(m.decode_bucket(1).is_some());
+    assert!(m.kvzip_bucket(200).is_some());
+}
+
+#[test]
+fn generate_full_cache_is_deterministic() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let policy = policies::by_name("full", e.window()).unwrap();
+    let sp = SamplingParams::greedy(8);
+    let a = e.generate(&task.prompt, policy.as_ref(), &sp).unwrap();
+    let b = e.generate(&task.prompt, policy.as_ref(), &sp).unwrap();
+    assert_eq!(a.text, b.text);
+    assert_eq!(a.compression, 0.0, "full cache never compresses");
+}
+
+#[test]
+fn kvzap_policy_compresses_and_still_generates() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(2);
+    let task = workload::ruler_instance("niah_single_1", 220, &mut rng);
+    let policy = policies::by_name("kvzap_mlp:-4", e.window()).unwrap();
+    let r = e
+        .generate(&task.prompt, policy.as_ref(), &SamplingParams::greedy(8))
+        .unwrap();
+    assert!(r.compression > 0.05, "tau=-4 should evict something: {}", r.compression);
+    assert!(r.compression < 0.99);
+}
+
+#[test]
+fn higher_threshold_compresses_more() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let task = workload::ruler_instance("niah_multikey_1", 220, &mut rng);
+    let sp = SamplingParams::greedy(4);
+    let mut last = -1.0;
+    for tau in [-8.0f64, -4.0, -1.0] {
+        let p = policies::by_name(&format!("kvzap_mlp:{tau}"), e.window()).unwrap();
+        let r = e.generate(&task.prompt, p.as_ref(), &sp).unwrap();
+        assert!(
+            r.compression >= last - 1e-9,
+            "compression must be monotone in tau: {} then {}",
+            last,
+            r.compression
+        );
+        last = r.compression;
+    }
+}
+
+#[test]
+fn oracle_policy_runs_double_pass() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(4);
+    let task = workload::ruler_instance("niah_single_2", 180, &mut rng);
+    let p = policies::by_name("kvzip_plus:0.5", e.window()).unwrap();
+    let r = e.generate(&task.prompt, p.as_ref(), &SamplingParams::greedy(4)).unwrap();
+    assert!(r.oracle_us > 0, "oracle pass must have run");
+    // budget 0.5 with window protection -> roughly half removed
+    assert!(r.compression > 0.3 && r.compression < 0.6, "{}", r.compression);
+}
+
+#[test]
+fn batched_generation_matches_single() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(5);
+    let tasks: Vec<_> = (0..3)
+        .map(|i| workload::ruler_instance("niah_single_1", 200, &mut rng.fork(i)))
+        .collect();
+    let p = policies::by_name("full", e.window()).unwrap();
+    let sp = SamplingParams::greedy(6);
+    let singles: Vec<String> = tasks
+        .iter()
+        .map(|t| e.generate(&t.prompt, p.as_ref(), &sp).unwrap().text)
+        .collect();
+    let prompts: Vec<&str> = tasks.iter().map(|t| t.prompt.as_str()).collect();
+    let batched = e.generate_batch(&prompts, p.as_ref(), &sp).unwrap();
+    for (s, b) in singles.iter().zip(&batched) {
+        assert_eq!(s, &b.text, "slot-batched decode must match single decode");
+    }
+}
+
+#[test]
+fn score_answer_full_beats_random_eviction() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(6);
+    let task = workload::ruler_instance("niah_single_1", 220, &mut rng);
+    let full = policies::by_name("full", e.window()).unwrap();
+    let rand = policies::by_name("random:0.15", e.window()).unwrap();
+    let (nll_full, c0) = e.score_answer(&task.prompt, &task.answer, full.as_ref()).unwrap();
+    let (nll_rand, c1) = e.score_answer(&task.prompt, &task.answer, rand.as_ref()).unwrap();
+    assert_eq!(c0, 0.0);
+    assert!(c1 > 0.5);
+    assert!(
+        nll_rand > nll_full,
+        "evicting 85% of the cache at random must hurt: full {nll_full} vs random {nll_rand}"
+    );
+}
+
+#[test]
+fn decode_time_eviction_happens_on_long_generation() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(7);
+    let a = workload::aime_instance(&mut rng);
+    // very aggressive threshold: everything below +inf gets evicted when
+    // it leaves the window
+    let p = policies::by_name("kvzap_mlp:100", e.window()).unwrap();
+    let r = e
+        .generate(&a.task.prompt, p.as_ref(), &SamplingParams::greedy(40))
+        .unwrap();
+    if r.tokens_out > e.window() + 2 {
+        assert!(r.decode_evictions > 0, "decode-time evictions expected");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server-level
+
+#[test]
+fn server_round_trip() {
+    let Some(e) = engine() else { return };
+    use kvzap::server::{Client, Server, ServerConfig};
+    use kvzap::util::json::Json;
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:7961".into(),
+        default_policy: "kvzap_mlp:-4".into(),
+        max_batch: 2,
+        max_wait_us: 500,
+    };
+    let server = Arc::new(Server::new(e, cfg));
+    let srv = server.clone();
+    let h = std::thread::spawn(move || srv.serve());
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let mut c = Client::connect("127.0.0.1:7961").unwrap();
+    let resp = c
+        .request(&Json::obj(vec![
+            ("prompt", Json::str("XQZA = 12345. filler. Q XQZA\nA ")),
+            ("max_new", Json::num(8.0)),
+        ]))
+        .unwrap();
+    assert!(resp.get("error").is_none(), "{resp:?}");
+    assert!(resp.get("text").is_some());
+    assert!(resp.get("compression").and_then(|c| c.as_f64()).is_some());
+    c.shutdown().unwrap();
+    let _ = h.join();
+}
+
+// ---------------------------------------------------------------------------
+// Property tests (no artifacts needed)
+
+fn ramp_tensor(l: usize, h: usize, t: usize, rng: &mut Rng) -> Tensor {
+    let data: Vec<f32> = (0..l * h * t).map(|_| rng.f64() as f32).collect();
+    Tensor::new(data, vec![l, 1, h, t]).unwrap()
+}
+
+#[test]
+fn prop_budget_policies_meet_budget() {
+    check(
+        40,
+        |r| {
+            (
+                r.below(4) + 1,                   // layers
+                r.below(3) + 1,                   // heads
+                r.below(200) + 40,                // prompt len
+                [0.25, 0.5, 0.75][r.below(3)],    // keep frac
+                r.next_u64(),
+            )
+        },
+        |&(l, h, n, frac, seed)| {
+            let mut rng = Rng::new(seed);
+            let t = ramp_tensor(l, h, 256, &mut rng);
+            let view = PrefillView {
+                b: 0,
+                score_lin: &t, score_mlp: &t, max_attn: &t, plus_attn: &t,
+                cum_attn: &t, win_attn: &t, vnorm: &t, knorm: &t,
+                oracle_s: Some(&t), oracle_s_plus: Some(&t),
+            };
+            for spec in ["h2o", "snapkv", "adakv", "kvzip", "knorm"] {
+                let pol = policies::by_name(&format!("{spec}:{frac}"), 8).unwrap();
+                let mut cache = PagedKvCache::new(l, h, 256);
+                cache.fill(n);
+                pol.prefill_prune(&view, n, &mut cache);
+                let s = cache.stats();
+                let kept_frac = s.kept as f64 / s.filled as f64;
+                // budget ± window slack
+                let slack = (8.0 + 2.0) / n as f64;
+                if (kept_frac - frac).abs() > slack + 0.05 {
+                    return Err(format!(
+                        "{spec}: kept {kept_frac:.3} vs budget {frac} (l={l} h={h} n={n})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_window_always_protected() {
+    check(
+        40,
+        |r| (r.below(150) + 30, r.next_u64(), [-100.0f32, 0.0, 100.0][r.below(3)]),
+        |&(n, seed, tau)| {
+            let mut rng = Rng::new(seed);
+            let t = ramp_tensor(2, 2, 256, &mut rng);
+            let view = PrefillView {
+                b: 0,
+                score_lin: &t, score_mlp: &t, max_attn: &t, plus_attn: &t,
+                cum_attn: &t, win_attn: &t, vnorm: &t, knorm: &t,
+                oracle_s: None, oracle_s_plus: None,
+            };
+            let window = 8;
+            let pol = policies::KVzap::mlp(tau, window);
+            let mut cache = PagedKvCache::new(2, 2, 256);
+            cache.fill(n);
+            pol.prefill_prune(&view, n, &mut cache);
+            for l in 0..2 {
+                for h in 0..2 {
+                    for pos in n.saturating_sub(window)..n {
+                        if !cache.is_kept(l, h, pos) {
+                            return Err(format!("window pos {pos} evicted (n={n})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_accounting_consistent() {
+    check_with(
+        Config { cases: 60, seed: 0xFEED },
+        |r| {
+            let n = r.below(120) + 16;
+            let evictions: Vec<(usize, usize, usize)> = (0..r.below(200))
+                .map(|_| (r.below(2), r.below(2), r.below(n)))
+                .collect();
+            (n, evictions)
+        },
+        |(n, ev)| {
+            vec![(*n, shrink_vec(ev).pop().unwrap_or_default())]
+        },
+        |(n, evictions)| {
+            let mut cache = PagedKvCache::new(2, 2, 256);
+            cache.fill(*n);
+            let mut expect = std::collections::HashSet::new();
+            for &(l, h, p) in evictions {
+                cache.evict(l, h, p);
+                expect.insert((l, h, p));
+            }
+            let s = cache.stats();
+            let want_kept = 2 * 2 * n - expect.len();
+            if s.kept != want_kept {
+                return Err(format!("kept {} want {}", s.kept, want_kept));
+            }
+            // mask agrees
+            let mask = cache.mask_f32();
+            let on = mask.iter().filter(|&&m| m > 0.0).count();
+            if on != want_kept {
+                return Err(format!("mask on {} want {}", on, want_kept));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tokenizer_roundtrip() {
+    check(
+        80,
+        |r| {
+            let n = r.below(100);
+            (0..n)
+                .map(|_| (r.below(94) + 32) as u8 as char)
+                .collect::<String>()
+        },
+        |s| {
+            let t = workload::ByteTokenizer::default();
+            let ids = t.encode(s, 512);
+            let back = t.decode(&ids[1..]);
+            if &back == s {
+                Ok(())
+            } else {
+                Err(format!("{s:?} -> {back:?}"))
+            }
+        },
+    );
+}
