@@ -15,7 +15,7 @@ use kvzap::util::rng::Rng;
 use kvzap::workload;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load(kvzap::artifacts_dir())?;
+    let rt = Runtime::auto()?;
     let engine = Engine::new(Arc::new(rt));
     let policy = policies::by_name("kvzap_mlp:-4", engine.window()).unwrap();
     let mut rng = Rng::new(11);

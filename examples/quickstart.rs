@@ -1,7 +1,8 @@
-//! Quickstart: load the AOT artifacts, serve one prompt with and without
+//! Quickstart: load the best available backend (reference or PJRT
+//! artifacts), serve one prompt with and without
 //! KVzap pruning, and inspect the accuracy/compression trade-off.
 //!
-//! Run after `make artifacts && cargo build --release`:
+//! Runs hermetically from a fresh checkout (no artifacts needed):
 //!     cargo run --release --example quickstart
 
 use std::sync::Arc;
@@ -13,8 +14,8 @@ use kvzap::util::rng::Rng;
 use kvzap::workload;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the runtime: HLO artifacts + weights, compiled on demand.
-    let rt = Runtime::load(kvzap::artifacts_dir())?;
+    // 1. Load the runtime: reference backend, or PJRT artifacts when built.
+    let rt = Runtime::auto()?;
     let engine = Engine::new(Arc::new(rt));
 
     // 2. A needle-in-a-haystack task from the ruler-mini workload.

@@ -16,7 +16,7 @@ use kvzap::util::rng::Rng;
 use kvzap::workload::{self, generators::parse_aime_answer};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load(kvzap::artifacts_dir())?;
+    let rt = Runtime::auto()?;
     let engine = Engine::new(Arc::new(rt));
     let mut rng = Rng::new(5);
 

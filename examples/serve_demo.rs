@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
         .and_then(|a| a.parse().ok())
         .unwrap_or(16);
 
-    let rt = Runtime::load(kvzap::artifacts_dir())?;
+    let rt = Runtime::auto()?;
     let engine = Arc::new(Engine::new(Arc::new(rt)));
     // Pre-compile the buckets the workload will hit so latency numbers
     // measure serving, not JIT compilation.

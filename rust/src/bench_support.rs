@@ -64,8 +64,12 @@ pub fn results_dir() -> PathBuf {
     r
 }
 
+/// Engine over the best available backend: PJRT artifacts when compiled
+/// with `--features pjrt` and built, the hermetic reference backend
+/// otherwise — so every bench target runs from a fresh checkout.
 pub fn load_engine() -> Result<Arc<Engine>> {
-    let rt = crate::runtime::Runtime::load(crate::artifacts_dir())?;
+    let rt = crate::runtime::Runtime::auto()?;
+    eprintln!("[kvzap] backend: {}", rt.backend_name());
     Ok(Arc::new(Engine::new(Arc::new(rt))))
 }
 

@@ -1,22 +1,24 @@
 //! The generation engine: prefill → prune → masked decode, per sequence or
 //! slot-batched. This is the request hot path — python never runs here.
 //!
-//! Data movement per decode step (see DESIGN.md §Perf): the KV cache lives
-//! in device buffers produced by the previous step (untupled outputs); the
-//! host only uploads the new token ids + positions and, when a pruning
-//! decision changed it, the keep-mask; it downloads logits `[B, V]` and,
-//! for threshold policies, the per-step surrogate scores `[L, B, H]`.
+//! The engine is backend-generic: it only sees the [`Runtime`] facade and
+//! opaque [`Buffer`]s, so the same code path drives the hermetic reference
+//! backend and the PJRT artifacts. Data movement per decode step (see
+//! DESIGN.md §Perf): the KV cache lives in backend buffers produced by the
+//! previous step (untupled outputs); the host only uploads the new token
+//! ids + positions and, when a pruning decision changed it, the keep-mask;
+//! it downloads logits `[B, V]` and, for threshold policies, the per-step
+//! surrogate scores `[L, B, H]`.
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
-use xla::PjRtBuffer;
 
 use super::sampler::{Sampler, SamplingParams};
 use crate::kvcache::PagedKvCache;
 use crate::metrics::EngineMetrics;
 use crate::policies::{PrefillView, PrunePolicy, ScoreBuffer, Stat};
-use crate::runtime::{Arg, Runtime, Tensor};
+use crate::runtime::{Arg, Buffer, Runtime, Tensor};
 use crate::workload::ByteTokenizer;
 
 pub struct Engine {
@@ -179,7 +181,7 @@ impl Engine {
 
         let ki = pf.meta.output_index("kcache")?;
         let vi = pf.meta.output_index("vcache")?;
-        let mut outs_opt: Vec<Option<PjRtBuffer>> = outs.into_iter().map(Some).collect();
+        let mut outs_opt: Vec<Option<Buffer>> = outs.into_iter().map(Some).collect();
         let mut kc = outs_opt[ki].take().unwrap();
         let mut vc = outs_opt[vi].take().unwrap();
         drop(outs_opt);
@@ -221,7 +223,7 @@ impl Engine {
             logits = self.rt.fetch_f32(&outs[li], &dec.meta.outputs[li].shape)?;
             let ki = dec.meta.output_index("kcache")?;
             let vi = dec.meta.output_index("vcache")?;
-            let mut o: Vec<Option<PjRtBuffer>> = outs.into_iter().map(Some).collect();
+            let mut o: Vec<Option<Buffer>> = outs.into_iter().map(Some).collect();
             kc = o[ki].take().unwrap();
             vc = o[vi].take().unwrap();
         }
@@ -292,7 +294,7 @@ impl Engine {
         };
         let ki = pf.meta.output_index("kcache")?;
         let vi = pf.meta.output_index("vcache")?;
-        let mut outs_opt: Vec<Option<PjRtBuffer>> = outs.into_iter().map(Some).collect();
+        let mut outs_opt: Vec<Option<Buffer>> = outs.into_iter().map(Some).collect();
         let mut kc = outs_opt[ki].take().unwrap();
         let mut vc = outs_opt[vi].take().unwrap();
         drop(outs_opt);
@@ -379,7 +381,7 @@ impl Engine {
 
         let t_dec = crate::util::now_micros();
         let mut steps = 0usize;
-        let mut mask_buf: Option<PjRtBuffer> = None;
+        let mut mask_buf: Option<Buffer> = None;
         while steps < sp.max_new.saturating_sub(1) && done.iter().any(|d| !d) {
             // stop sequences that would overflow the cache
             for b in 0..nb {
@@ -420,7 +422,7 @@ impl Engine {
             };
             let ki = dec.meta.output_index("kcache")?;
             let vi = dec.meta.output_index("vcache")?;
-            let mut outs_opt: Vec<Option<PjRtBuffer>> = outs.into_iter().map(Some).collect();
+            let mut outs_opt: Vec<Option<Buffer>> = outs.into_iter().map(Some).collect();
             kc = outs_opt[ki].take().unwrap();
             vc = outs_opt[vi].take().unwrap();
             drop(outs_opt);

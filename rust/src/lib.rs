@@ -1,17 +1,35 @@
 //! # kvzap — fast, adaptive and faithful KV cache pruning
 //!
-//! Reproduction of *KVzap* (Jégou & Jeblick, 2026) as a three-layer
-//! rust + JAX + Pallas serving stack:
+//! Reproduction of *KVzap* (Jégou & Jeblick, 2026) as a serving stack with
+//! KV cache pruning as a first-class feature: a vLLM-router-shaped
+//! coordinator (request router, continuous batcher, paged KV cache manager
+//! with per-head variable lengths, prefill/decode scheduler) over a
+//! **pluggable execution backend** ([`runtime::Backend`]).
 //!
-//! * **L1/L2** (build-time python): Pallas attention/scorer kernels inside a
-//!   GQA transformer, AOT-lowered to HLO-text artifacts (`make artifacts`).
-//! * **L3** (this crate): a vLLM-router-shaped serving coordinator — request
-//!   router, continuous batcher, paged KV cache manager with per-head
-//!   variable lengths, prefill/decode scheduler — with KV cache pruning as a
-//!   first-class feature ([`policies`]).
+//! ## Two backends, one engine
 //!
-//! Python never runs on the request path: the [`runtime`] module loads the
-//! artifacts once and executes them via PJRT.
+//! * **reference** (default) — [`runtime::reference`]: a hermetic pure-Rust
+//!   CPU port of the model semantics (GQA attention + RoPE + RMSNorm, the
+//!   paper's per-position prefill statistics, the KVzip oracle double pass,
+//!   masked decode) over a deterministic in-code weight set. No artifacts,
+//!   no python, no native dependencies: `cargo build && cargo test` run the
+//!   full engine → policy → cache path from a fresh checkout, which is how
+//!   CI regression-gates the stack.
+//! * **pjrt** (`--features pjrt`) — [`runtime::pjrt`]: loads the AOT
+//!   HLO-text artifacts built by the python compile pipeline
+//!   (`make artifacts`: Pallas kernels → JAX model → HLO text) and executes
+//!   them via the PJRT CPU client. Python never runs on the request path.
+//!
+//! [`runtime::Runtime::auto`] picks PJRT when compiled in and artifacts
+//! exist, the reference backend otherwise, so the CLI, server and benches
+//! work out of the box and transparently upgrade.
+//!
+//! Layering:
+//!
+//! * **L1/L2** (build-time python, optional): Pallas attention/scorer
+//!   kernels inside a GQA transformer, AOT-lowered to HLO-text artifacts.
+//! * **L3** (this crate): the serving coordinator — [`coordinator`],
+//!   [`kvcache`], [`policies`], [`server`] — plus the [`runtime`] backends.
 
 pub mod analysis;
 pub mod bench_support;

@@ -76,12 +76,12 @@ fn main() -> Result<()> {
 }
 
 fn load_engine() -> Result<Arc<Engine>> {
-    let rt = Runtime::load(kvzap::artifacts_dir())?;
-    Ok(Arc::new(Engine::new(Arc::new(rt))))
+    kvzap::bench_support::load_engine()
 }
 
 fn info() -> Result<()> {
-    let rt = Runtime::load(kvzap::artifacts_dir())?;
+    let rt = Runtime::auto()?;
+    println!("backend: {}", rt.backend_name());
     let m = &rt.manifest;
     println!("zap-lm: L={} Dh={} Hq={} Hkv={} D={} Dint={} t_max={}",
         m.model.n_layers, m.model.d_model, m.model.n_q_heads, m.model.n_kv_heads,
@@ -198,8 +198,9 @@ fn serve(args: &Args) -> Result<()> {
 }
 
 fn flops() -> Result<()> {
-    // Include zap-lm when artifacts exist; the paper rows never need them.
-    let extra = Runtime::load(kvzap::artifacts_dir()).ok().map(|rt| {
+    // Include zap-lm from whichever backend is available; the paper rows
+    // never need one.
+    let extra = Runtime::auto().ok().map(|rt| {
         let m = &rt.manifest.model;
         kvzap::analysis::LayerDims {
             name: "zap-lm (this repo)".into(),

@@ -1,0 +1,70 @@
+//! The execution-backend abstraction.
+//!
+//! A [`Backend`] executes manifest artifacts (prefill / decode /
+//! kvzip_score) over opaque device [`Buffer`]s. Two implementations:
+//!
+//! * [`crate::runtime::reference`] — pure-Rust CPU reference (hermetic,
+//!   default): the model forward runs in-process from a deterministic
+//!   in-code weight set; buffers are host tensors.
+//! * [`crate::runtime::pjrt`] (`--features pjrt`) — loads AOT HLO-text
+//!   artifacts and executes them on the PJRT CPU client; buffers are
+//!   device-resident `PjRtBuffer`s, so the KV cache never touches the host
+//!   between decode steps.
+//!
+//! The trait is object-safe: the engine, batcher, server and benches hold a
+//! `Runtime` facade over `Box<dyn Backend>` and are generic over backends
+//! without generics infecting their signatures.
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::ArtifactMeta;
+use super::tensor::Tensor;
+
+/// An argument to an artifact execution.
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    /// A buffer from a previous execution (e.g. the KV cache).
+    Buf(&'a Buffer),
+}
+
+/// Backend-owned value: host tensor for the reference backend, device
+/// buffer for PJRT. Opaque to the coordinator — it only threads buffers
+/// from one exec into the next and fetches f32 outputs it needs on host.
+pub struct Buffer(pub(crate) BufferRepr);
+
+pub(crate) enum BufferRepr {
+    HostF32(Tensor),
+    HostI32(Vec<i32>, Vec<usize>),
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+impl Buffer {
+    pub(crate) fn host_f32(&self) -> Result<&Tensor> {
+        match &self.0 {
+            BufferRepr::HostF32(t) => Ok(t),
+            BufferRepr::HostI32(..) => Err(anyhow!("expected f32 buffer, got i32")),
+            #[cfg(feature = "pjrt")]
+            BufferRepr::Pjrt(_) => Err(anyhow!("expected host buffer, got device buffer")),
+        }
+    }
+}
+
+/// An execution backend: runs artifacts, moves data on/off the "device".
+pub trait Backend: Send + Sync {
+    /// Short backend identifier ("reference" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Execute one artifact. `data` holds the artifact's data inputs in
+    /// manifest input order (weights, if any, are the backend's concern).
+    /// Returns one buffer per manifest output.
+    fn exec(&self, meta: &ArtifactMeta, data: &[Arg]) -> Result<Vec<Buffer>>;
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer>;
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer>;
+
+    /// Fetch an output buffer to the host as an f32 tensor.
+    fn fetch_f32(&self, buf: &Buffer, shape: &[usize]) -> Result<Tensor>;
+}

@@ -1,82 +1,89 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
-//! client with the weights resident on device.
+//! Runtime: artifact execution behind a pluggable [`Backend`].
 //!
-//! Wiring (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
-//! HLO *text* is the interchange format — jax ≥ 0.5 emits protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids. Our vendored xla crate is patched with
-//! `untuple_result = true`, so each artifact output arrives as its own
-//! device buffer: the KV cache produced by prefill (or a decode step) is
-//! fed straight back into the next decode step with zero host traffic.
+//! The coordinator talks to a [`Runtime`] facade — bucket resolution via
+//! the [`Manifest`], `artifact()` handles with per-name caching, `exec()`
+//! over backend-opaque [`Buffer`]s — and never sees which backend runs the
+//! math:
+//!
+//! * **reference** (default, hermetic): [`reference::ReferenceBackend`], a
+//!   pure-Rust CPU port of the model semantics with a deterministic
+//!   in-code weight set. No artifacts, no python, no native deps — this is
+//!   what CI and `cargo test` exercise.
+//! * **pjrt** (`--features pjrt`): [`pjrt::PjrtBackend`] loads the AOT
+//!   HLO-text artifacts produced by `make artifacts` and executes them via
+//!   the PJRT CPU client with weights resident on device.
+//!
+//! [`Runtime::auto`] picks pjrt when the feature is compiled in *and*
+//! artifacts exist, otherwise the reference backend — so every binary
+//! (CLI, server, benches) runs out of the box and transparently upgrades
+//! when artifacts are built.
 
+pub mod backend;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 pub mod tensor;
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::{anyhow, Result};
 
+pub use backend::{Arg, Backend, Buffer};
 pub use manifest::{ArtifactMeta, Manifest};
 pub use tensor::Tensor;
 
-/// An argument to an artifact execution.
-pub enum Arg<'a> {
-    F32(&'a [f32], &'a [usize]),
-    I32(&'a [i32], &'a [usize]),
-    /// A device buffer from a previous execution (e.g. the KV cache).
-    Buf(&'a PjRtBuffer),
-}
-
+/// A resolved artifact handle: the manifest metadata the engine indexes
+/// outputs by. Compilation state (for backends that compile) lives in the
+/// backend, keyed by `meta.name`.
 pub struct Executable {
     pub meta: ArtifactMeta,
-    exe: PjRtLoadedExecutable,
 }
 
 pub struct Runtime {
-    client: PjRtClient,
     pub manifest: Manifest,
-    dir: PathBuf,
-    /// Weight tensors resident on device, in manifest order; appended to
-    /// every execute call after the data inputs.
-    weights: Vec<PjRtBuffer>,
+    backend: Box<dyn Backend>,
     exes: Mutex<HashMap<String, Arc<Executable>>>,
 }
 
 impl Runtime {
-    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+    /// The hermetic pure-Rust reference runtime (no artifacts needed).
+    pub fn reference() -> Runtime {
+        Runtime {
+            manifest: reference::reference_manifest(),
+            backend: Box::new(reference::ReferenceBackend::new()),
+            exes: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Load the PJRT runtime from an artifacts directory.
+    #[cfg(feature = "pjrt")]
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let backend = pjrt::PjrtBackend::load(&dir, &manifest)?;
+        Ok(Runtime { manifest, backend: Box::new(backend), exes: Mutex::new(HashMap::new()) })
+    }
 
-        let blob = std::fs::read(dir.join("weights.bin"))
-            .with_context(|| "reading weights.bin (run `make artifacts`)")?;
-        let mut weights = Vec::with_capacity(manifest.weights.len());
-        for w in &manifest.weights {
-            let slice = blob
-                .get(w.offset..w.offset + w.bytes)
-                .ok_or_else(|| anyhow!("weights.bin too short for {}", w.name))?;
-            let data: Vec<f32> = slice
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            let buf = client
-                .buffer_from_host_buffer(&data, &w.shape, None)
-                .map_err(|e| anyhow!("upload weight {}: {e:?}", w.name))?;
-            weights.push(buf);
+    /// Best available backend: PJRT when compiled in and artifacts exist,
+    /// the hermetic reference backend otherwise.
+    pub fn auto() -> Result<Runtime> {
+        #[cfg(feature = "pjrt")]
+        {
+            let dir = crate::artifacts_dir();
+            if dir.join("manifest.json").exists() {
+                return Runtime::load(dir);
+            }
         }
-
-        Ok(Runtime { client, manifest, dir, weights, exes: Mutex::new(HashMap::new()) })
+        Ok(Runtime::reference())
     }
 
-    pub fn client(&self) -> &PjRtClient {
-        &self.client
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
-    /// Compile-on-demand with caching; artifacts are keyed by bucket name.
+    /// Resolve an artifact by bucket name (cached).
     pub fn artifact(&self, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.exes.lock().unwrap().get(name) {
             return Ok(e.clone());
@@ -87,37 +94,14 @@ impl Runtime {
             .get(name)
             .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
             .clone();
-        let path = self.dir.join(&meta.file);
-        let proto = HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", meta.file))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", meta.file))?;
-        let entry = Arc::new(Executable { meta, exe });
+        let entry = Arc::new(Executable { meta });
         self.exes.lock().unwrap().insert(name.to_string(), entry.clone());
         Ok(entry)
     }
 
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload f32: {e:?}"))
-    }
-
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload i32: {e:?}"))
-    }
-
-    /// Execute an artifact: `data` args in manifest input order; the weight
-    /// buffers are appended automatically. Returns one device buffer per
-    /// manifest output (untupled).
-    pub fn exec(&self, exe: &Executable, data: &[Arg]) -> Result<Vec<PjRtBuffer>> {
+    /// Execute an artifact: `data` args in manifest input order. Returns
+    /// one buffer per manifest output.
+    pub fn exec(&self, exe: &Executable, data: &[Arg]) -> Result<Vec<Buffer>> {
         if data.len() != exe.meta.inputs.len() {
             return Err(anyhow!(
                 "artifact {} expects {} data inputs, got {}",
@@ -126,55 +110,57 @@ impl Runtime {
                 data.len()
             ));
         }
-        let mut owned: Vec<PjRtBuffer> = vec![];
-        for (arg, spec) in data.iter().zip(&exe.meta.inputs) {
-            match arg {
-                Arg::F32(v, dims) => {
-                    debug_assert_eq!(&spec.shape, *dims, "{} shape", spec.name);
-                    owned.push(self.upload_f32(v, dims)?);
-                }
-                Arg::I32(v, dims) => {
-                    debug_assert_eq!(&spec.shape, *dims, "{} shape", spec.name);
-                    owned.push(self.upload_i32(v, dims)?);
-                }
-                Arg::Buf(_) => {}
-            }
-        }
-        let mut refs: Vec<&PjRtBuffer> = Vec::with_capacity(data.len() + self.weights.len());
-        let mut oi = 0;
-        for arg in data {
-            match arg {
-                Arg::Buf(b) => refs.push(b),
-                _ => {
-                    refs.push(&owned[oi]);
-                    oi += 1;
-                }
-            }
-        }
-        refs.extend(self.weights.iter());
-        let mut outs = exe
-            .exe
-            .execute_b(&refs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", exe.meta.name))?;
-        let replica = outs
-            .pop()
-            .ok_or_else(|| anyhow!("no replica outputs from {}", exe.meta.name))?;
-        if replica.len() != exe.meta.outputs.len() {
-            return Err(anyhow!(
-                "artifact {}: {} outputs returned, manifest says {} — \
-                 was the xla crate patched with untuple_result?",
-                exe.meta.name,
-                replica.len(),
-                exe.meta.outputs.len()
-            ));
-        }
-        Ok(replica)
+        self.backend.exec(&exe.meta, data)
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        self.backend.upload_f32(data, dims)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        self.backend.upload_i32(data, dims)
     }
 
     /// Fetch an output buffer to the host as an f32 tensor.
-    pub fn fetch_f32(&self, buf: &PjRtBuffer, shape: &[usize]) -> Result<Tensor> {
-        let lit: Literal = buf.to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
-        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        Tensor::new(data, shape.to_vec())
+    pub fn fetch_f32(&self, buf: &Buffer, shape: &[usize]) -> Result<Tensor> {
+        self.backend.fetch_f32(buf, shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_runtime_resolves_and_executes() {
+        let rt = Runtime::reference();
+        assert_eq!(rt.backend_name(), "reference");
+        let name = rt.manifest.prefill_bucket(50, 1).unwrap();
+        let art = rt.artifact(&name).unwrap();
+        let again = rt.artifact(&name).unwrap();
+        assert!(Arc::ptr_eq(&art, &again), "artifact handles are cached");
+        let t = art.meta.t;
+        let mut toks = vec![0i32; t];
+        toks[0] = 1;
+        let lens = [1i32];
+        let outs = rt.exec(&art, &[Arg::I32(&toks, &[1, t]), Arg::I32(&lens, &[1])]).unwrap();
+        assert_eq!(outs.len(), art.meta.outputs.len());
+        let li = art.meta.output_index("logits").unwrap();
+        let logits = rt.fetch_f32(&outs[li], &art.meta.outputs[li].shape).unwrap();
+        assert_eq!(logits.shape, vec![1, 256]);
+    }
+
+    #[test]
+    fn exec_arity_checked() {
+        let rt = Runtime::reference();
+        let art = rt.artifact("decode_b1").unwrap();
+        let toks = [0i32];
+        assert!(rt.exec(&art, &[Arg::I32(&toks, &[1])]).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let rt = Runtime::reference();
+        assert!(rt.artifact("prefill_b9_t9").is_err());
     }
 }

@@ -1,0 +1,168 @@
+//! PJRT execution backend (`--features pjrt`): load AOT HLO-text artifacts
+//! and execute them on the CPU client with the weights resident on device.
+//!
+//! Wiring (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Our vendored xla crate is patched with
+//! `untuple_result = true`, so each artifact output arrives as its own
+//! device buffer: the KV cache produced by prefill (or a decode step) is
+//! fed straight back into the next decode step with zero host traffic.
+//!
+//! Building with this feature requires the vendored `xla` crate — see the
+//! commented dependency in rust/Cargo.toml.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, XlaComputation};
+
+use super::backend::{Arg, Backend, Buffer, BufferRepr};
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensor::Tensor;
+
+pub struct PjrtBackend {
+    client: PjRtClient,
+    dir: PathBuf,
+    /// Weight tensors resident on device, in manifest order; appended to
+    /// every execute call after the data inputs.
+    weights: Vec<PjRtBuffer>,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtBackend {
+    /// Load weights.bin onto the device; artifacts compile on demand.
+    pub fn load(dir: impl AsRef<Path>, manifest: &Manifest) -> Result<PjrtBackend> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+
+        let blob = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| "reading weights.bin (run `make artifacts`)")?;
+        let mut weights = Vec::with_capacity(manifest.weights.len());
+        for w in &manifest.weights {
+            let slice = blob
+                .get(w.offset..w.offset + w.bytes)
+                .ok_or_else(|| anyhow!("weights.bin too short for {}", w.name))?;
+            let data: Vec<f32> = slice
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = client
+                .buffer_from_host_buffer(&data, &w.shape, None)
+                .map_err(|e| anyhow!("upload weight {}: {e:?}", w.name))?;
+            weights.push(buf);
+        }
+        Ok(PjrtBackend { client, dir, weights, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Compile-on-demand with caching, keyed by artifact name.
+    fn compile(&self, meta: &ArtifactMeta) -> Result<()> {
+        if self.exes.lock().unwrap().contains_key(&meta.name) {
+            return Ok(());
+        }
+        let path = self.dir.join(&meta.file);
+        let proto =
+            HloModuleProto::from_text_file(path.to_str().ok_or_else(|| anyhow!("bad path"))?)
+                .map_err(|e| anyhow!("parse {}: {e:?}", meta.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", meta.file))?;
+        self.exes.lock().unwrap().insert(meta.name.clone(), exe);
+        Ok(())
+    }
+}
+
+fn device<'a>(buf: &'a Buffer, ctx: &str) -> Result<&'a PjRtBuffer> {
+    match &buf.0 {
+        BufferRepr::Pjrt(b) => Ok(b),
+        _ => Err(anyhow!("{ctx}: expected a device buffer (mixed backends?)")),
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn exec(&self, meta: &ArtifactMeta, data: &[Arg]) -> Result<Vec<Buffer>> {
+        self.compile(meta)?;
+        let mut owned: Vec<PjRtBuffer> = vec![];
+        for (arg, spec) in data.iter().zip(&meta.inputs) {
+            match arg {
+                Arg::F32(v, dims) => {
+                    debug_assert_eq!(&spec.shape, *dims, "{} shape", spec.name);
+                    owned.push(
+                        self.client
+                            .buffer_from_host_buffer(v, dims, None)
+                            .map_err(|e| anyhow!("upload f32: {e:?}"))?,
+                    );
+                }
+                Arg::I32(v, dims) => {
+                    debug_assert_eq!(&spec.shape, *dims, "{} shape", spec.name);
+                    owned.push(
+                        self.client
+                            .buffer_from_host_buffer(v, dims, None)
+                            .map_err(|e| anyhow!("upload i32: {e:?}"))?,
+                    );
+                }
+                Arg::Buf(_) => {}
+            }
+        }
+        let mut refs: Vec<&PjRtBuffer> = Vec::with_capacity(data.len() + self.weights.len());
+        let mut oi = 0;
+        for arg in data {
+            match arg {
+                Arg::Buf(b) => refs.push(device(b, &meta.name)?),
+                _ => {
+                    refs.push(&owned[oi]);
+                    oi += 1;
+                }
+            }
+        }
+        refs.extend(self.weights.iter());
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(&meta.name).expect("compiled above");
+        let mut outs = exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?;
+        let replica = outs
+            .pop()
+            .ok_or_else(|| anyhow!("no replica outputs from {}", meta.name))?;
+        if replica.len() != meta.outputs.len() {
+            return Err(anyhow!(
+                "artifact {}: {} outputs returned, manifest says {} — \
+                 was the xla crate patched with untuple_result?",
+                meta.name,
+                replica.len(),
+                meta.outputs.len()
+            ));
+        }
+        Ok(replica.into_iter().map(|b| Buffer(BufferRepr::Pjrt(b))).collect())
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map(|b| Buffer(BufferRepr::Pjrt(b)))
+            .map_err(|e| anyhow!("upload f32: {e:?}"))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map(|b| Buffer(BufferRepr::Pjrt(b)))
+            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    }
+
+    fn fetch_f32(&self, buf: &Buffer, shape: &[usize]) -> Result<Tensor> {
+        let lit: Literal =
+            device(buf, "fetch")?.to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Tensor::new(data, shape.to_vec())
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal in-repo substitute for the `anyhow` crate.
+//!
+//! Built in-repo because crates.io is unreachable offline (the same
+//! DESIGN.md §7 rationale as util::json / util::rng / util::propcheck).
+//! API-compatible subset of what this codebase uses: [`Error`],
+//! [`Result`], [`anyhow!`], [`bail!`], and the [`Context`] extension
+//! trait for `Result` and `Option`. `{e}` prints the outermost message,
+//! `{e:#}` the full context chain — matching real anyhow's formatting
+//! contract. If network access is available, this can be swapped for
+//! crates.io anyhow by editing rust/Cargo.toml; no call sites change.
+
+use std::fmt;
+
+/// A context-chained error value (message + optional cause).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap with an outer context message (innermost cause stays last).
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+    }
+
+    fn chain_fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = &e.source;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // "{:#}" — the whole chain, outermost first
+            self.chain_fmt(f)
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    ")?;
+            src.chain_fmt(f)?;
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: Error deliberately does NOT implement std::error::Error,
+// which is what makes this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg, source: None }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt {x}")`, `anyhow!("fmt {}", x)` or `anyhow!(display_value)`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `bail!(..)` = `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/here/xyz")
+            .with_context(|| "reading xyz".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = fails_io().unwrap_err();
+        assert_eq!(format!("{e}"), "reading xyz");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading xyz: "), "{full}");
+        assert!(full.len() > "reading xyz: ".len());
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+        let x = 3;
+        let e = anyhow!("inline {x}");
+        assert_eq!(format!("{e}"), "inline 3");
+        let e = anyhow!(String::from("from display"));
+        assert_eq!(format!("{e}"), "from display");
+        let none: Option<u8> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+
+        fn bails(flag: bool) -> Result<u8> {
+            if flag {
+                bail!("flagged {}", 1);
+            }
+            Ok(0)
+        }
+        assert_eq!(format!("{}", bails(true).unwrap_err()), "flagged 1");
+        assert_eq!(bails(false).unwrap(), 0);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            let v: i32 = "not a number".parse()?;
+            Ok(v)
+        }
+        assert!(parse().is_err());
+    }
+}

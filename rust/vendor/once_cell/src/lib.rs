@@ -1,0 +1,77 @@
+//! Minimal in-repo substitute for the `once_cell` crate, backed by
+//! `std::sync::OnceLock` (crates.io is unreachable offline — DESIGN.md
+//! §7). API-compatible subset: `sync::OnceCell` and `sync::Lazy`.
+
+pub mod sync {
+    use std::sync::OnceLock;
+
+    pub struct OnceCell<T>(OnceLock<T>);
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> OnceCell<T> {
+            OnceCell(OnceLock::new())
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            self.0.get()
+        }
+
+        pub fn set(&self, value: T) -> Result<(), T> {
+            self.0.set(value)
+        }
+
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.0.get_or_init(f)
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    /// Lazily-initialized static value; `F` defaults to a fn pointer so
+    /// `static X: Lazy<T> = Lazy::new(init_fn)` works as with once_cell.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> std::ops::Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            self.cell.get_or_init(|| (self.init)())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::{Lazy, OnceCell};
+
+    static GLOBAL: Lazy<u64> = Lazy::new(|| 41 + 1);
+    static CELL: OnceCell<String> = OnceCell::new();
+
+    #[test]
+    fn lazy_static_derefs() {
+        assert_eq!(*GLOBAL, 42);
+        assert_eq!(*GLOBAL, 42);
+    }
+
+    #[test]
+    fn once_cell_init_once() {
+        let v = CELL.get_or_init(|| "first".to_string());
+        assert_eq!(v, "first");
+        assert_eq!(CELL.get_or_init(|| "second".to_string()), "first");
+        assert!(CELL.set("third".to_string()).is_err());
+        assert_eq!(CELL.get().unwrap(), "first");
+    }
+}
