@@ -1,12 +1,14 @@
 //! End-to-end serving driver (deliverable: E2E validation).
 //!
-//! Boots the full stack — PJRT runtime, engine, continuous batcher, TCP
+//! Boots the full stack — runtime, engine, continuous batcher, TCP
 //! JSON-lines server — then drives it with concurrent clients running a
 //! real ruler-mini workload, and reports answer accuracy, latency
-//! percentiles, throughput and KV cache compression.
+//! percentiles, throughput and KV cache compression. Ends with a v2
+//! streaming request (token events + done line).
 //!
 //!     cargo run --release --example serve_demo [-- <n_requests>]
 
+use std::io::Write as _;
 use std::sync::Arc;
 
 use kvzap::coordinator::Engine;
@@ -95,6 +97,27 @@ fn main() -> anyhow::Result<()> {
     println!("throughput      : {:.2} req/s", total as f64 / wall);
     println!("latency         : {}", hist.summary("us"));
     println!("\nengine metrics:\n{}", engine.metrics.report());
+
+    // v2 streaming: tokens arrive as they are decoded, keyed by request id
+    let mut sc = Client::connect(&addr)?;
+    let task = workload::ruler_instance("niah_single_1", 240, &mut Rng::new(999));
+    let req = Json::obj(vec![
+        ("id", Json::str("stream-demo")),
+        ("prompt", Json::str(task.prompt.clone())),
+        ("max_new", Json::num(task.max_new as f64)),
+        ("stream", Json::Bool(true)),
+    ]);
+    print!("\nstreaming demo  : ");
+    let done = sc.stream(&req, |t| {
+        print!("{t}");
+        let _ = std::io::stdout().flush();
+    })?;
+    println!(
+        "  <- done reason={} tokens={} compression={:.3}",
+        done.get("reason").and_then(|r| r.as_str()).unwrap_or("?"),
+        done.get("tokens_out").and_then(|t| t.as_usize()).unwrap_or(0),
+        done.get("compression").and_then(|c| c.as_f64()).unwrap_or(0.0),
+    );
 
     // clean shutdown
     let mut c = Client::connect(&addr)?;

@@ -114,8 +114,9 @@ pub fn eval_policy(
     ctx: usize,
     seed: u64,
 ) -> Result<Vec<EvalRow>> {
-    let policy = policies::by_name(spec, engine.window())
-        .ok_or_else(|| anyhow::anyhow!("unknown policy {spec}"))?;
+    let policy = policies::PolicySpec::parse(spec)
+        .map_err(|e| anyhow::anyhow!("bad policy '{spec}': {e:#}"))?
+        .build(engine.window());
     let mut rows = vec![];
     for subset in subsets {
         let mut rng = Rng::new(seed ^ fxhash(subset));

@@ -1,23 +1,31 @@
 //! Continuous batcher: the request-level scheduler in front of the engine.
 //!
-//! Requests enter a queue; a scheduler thread forms decode groups of up to
-//! `max_batch` *compatible* requests (same policy spec — they share pruning
-//! decisions' configuration, not state) that arrive within `max_wait_us`
-//! of the group leader, then runs them through `Engine::generate_batch`.
-//! This is vLLM-v0-style group batching; slots of finished sequences stay
-//! masked until the group drains (see engine.rs). tokio is unavailable
-//! offline — the runtime is std threads + mpsc channels (DESIGN.md §7).
+//! Requests enter a queue; the scheduler thread keeps a set of slots (up
+//! to `max_batch`) and advances all resident sequences one token per
+//! iteration via [`Engine::decode_step`]. Between steps it admits queued
+//! requests into free slots — a sequence joins a *running* decode group
+//! the moment a slot opens, each with its own [`SamplingParams`] and
+//! [`PolicySpec`] (vLLM-v1-style continuous batching; the old group-static
+//! scheduler could only start identical requests together). Cancellation
+//! frees a slot mid-decode. tokio is unavailable offline — the runtime is
+//! std threads + mpsc channels (DESIGN.md §7).
+//!
+//! Per-request progress flows over the request's `events` channel:
+//! [`SeqEvent::Token`] per accepted token (streaming requests only), then
+//! exactly one [`SeqEvent::Done`] with the final [`Response`].
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::engine::Engine;
+use super::engine::{Engine, Sequence, StepEvent};
 use super::sampler::SamplingParams;
-use crate::policies;
+use crate::policies::PolicySpec;
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -33,9 +41,19 @@ impl Default for BatcherConfig {
 
 pub struct Request {
     pub prompt: String,
-    pub policy: String,
+    pub policy: PolicySpec,
     pub sp: SamplingParams,
-    pub resp: Sender<Response>,
+    /// When set, every accepted token is forwarded as [`SeqEvent::Token`];
+    /// otherwise only the final [`SeqEvent::Done`] is sent.
+    pub stream: bool,
+    pub events: Sender<SeqEvent>,
+}
+
+/// Per-request progress event (see module docs).
+#[derive(Debug, Clone)]
+pub enum SeqEvent {
+    Token { token: i32, text: String },
+    Done(Response),
 }
 
 #[derive(Debug, Clone)]
@@ -45,123 +63,268 @@ pub struct Response {
     pub tokens_out: usize,
     pub e2e_us: u64,
     pub error: Option<String>,
+    /// Engine done reason ("stop" | "max_tokens" | "cache_full" |
+    /// "cancelled"); None on transport/build errors.
+    pub reason: Option<String>,
+}
+
+fn error_response(e2e_us: u64, error: String) -> Response {
+    Response {
+        text: String::new(),
+        compression: 0.0,
+        tokens_out: 0,
+        e2e_us,
+        error: Some(error),
+        reason: None,
+    }
 }
 
 struct Pending {
+    id: u64,
     req: Request,
     arrived: Instant,
 }
 
+enum Msg {
+    Submit(Pending),
+    Cancel(u64),
+}
+
+struct Slot {
+    id: u64,
+    req: Request,
+    arrived: Instant,
+    seq: Sequence,
+}
+
 pub struct Batcher {
-    tx: Sender<Pending>,
+    tx: Sender<Msg>,
+    next_id: AtomicU64,
     handle: Option<JoinHandle<()>>,
 }
 
 impl Batcher {
     pub fn start(engine: Arc<Engine>, cfg: BatcherConfig) -> Batcher {
-        let (tx, rx) = mpsc::channel::<Pending>();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        // never form groups larger than the largest decode bucket
+        let max_bucket =
+            engine.rt.manifest.buckets.decode_b.iter().copied().max().unwrap_or(1);
+        let cfg = BatcherConfig { max_batch: cfg.max_batch.clamp(1, max_bucket), ..cfg };
         let handle = std::thread::spawn(move || Self::run(engine, cfg, rx));
-        Batcher { tx, handle: Some(handle) }
+        Batcher { tx, next_id: AtomicU64::new(1), handle: Some(handle) }
     }
 
-    /// Enqueue a request; the response arrives on `req.resp`.
-    pub fn submit(&self, req: Request) -> Result<()> {
+    /// Enqueue a request; progress arrives on `req.events`. Returns the
+    /// batcher-assigned request id (usable with [`Batcher::cancel`]).
+    pub fn submit(&self, req: Request) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
-            .send(Pending { req, arrived: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("batcher stopped"))
+            .send(Msg::Submit(Pending { id, req, arrived: Instant::now() }))
+            .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
+        Ok(id)
     }
 
-    fn run(engine: Arc<Engine>, cfg: BatcherConfig, rx: Receiver<Pending>) {
+    /// Cancel a submitted request: its slot is freed between decode steps
+    /// and its stream receives a final `Done` with reason "cancelled"
+    /// (carrying any partial text).
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        self.tx.send(Msg::Cancel(id)).map_err(|_| anyhow::anyhow!("batcher stopped"))
+    }
+
+    fn run(engine: Arc<Engine>, cfg: BatcherConfig, rx: Receiver<Msg>) {
+        let mut slots: Vec<Slot> = vec![];
+        let mut waiting: VecDeque<Pending> = VecDeque::new();
+        // ids cancelled before their Submit was processed
+        let mut cancelled: HashSet<u64> = HashSet::new();
+        let mut disconnected = false;
         loop {
-            // Block for the group leader.
-            let leader = match rx.recv() {
-                Ok(p) => p,
-                Err(_) => return, // all senders dropped: shut down
-            };
-            let mut group = vec![leader];
-            let deadline = Instant::now() + Duration::from_micros(cfg.max_wait_us);
-            // Fill the group with compatible requests until deadline/full.
-            let mut stash: Option<Pending> = None;
-            while group.len() < cfg.max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
+            // ---- message intake -------------------------------------------
+            if slots.is_empty() && waiting.is_empty() {
+                if disconnected {
+                    return;
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(p) => {
-                        if p.req.policy == group[0].req.policy
-                            && p.req.sp.greedy == group[0].req.sp.greedy
-                        {
-                            group.push(p);
-                        } else {
-                            // incompatible: run it as the next group leader
-                            stash = Some(p);
+                match rx.recv() {
+                    Ok(msg) => process(msg, &mut slots, &mut waiting, &mut cancelled),
+                    Err(_) => return,
+                }
+                // batch-forming grace: give companions up to max_wait_us to
+                // arrive before the first decode step
+                let deadline = Instant::now() + Duration::from_micros(cfg.max_wait_us);
+                while slots.len() + waiting.len() < cfg.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(msg) => process(msg, &mut slots, &mut waiting, &mut cancelled),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            disconnected = true;
                             break;
                         }
                     }
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            } else {
+                // drain whatever arrived between steps (the slot-join point)
+                loop {
+                    match rx.try_recv() {
+                        Ok(msg) => process(msg, &mut slots, &mut waiting, &mut cancelled),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            disconnected = true;
+                            break;
+                        }
+                    }
                 }
             }
-            Self::run_group(&engine, group);
-            if let Some(p) = stash {
-                Self::run_group(&engine, vec![p]);
+            // ---- admit into free slots, then advance the group ------------
+            admit(&engine, &cfg, &mut slots, &mut waiting);
+            reap(&engine, &mut slots);
+            if slots.is_empty() {
+                continue;
+            }
+            let step = {
+                let mut live: Vec<&mut Sequence> =
+                    slots.iter_mut().map(|s| &mut s.seq).collect();
+                engine.decode_step(&mut live)
+            };
+            match step {
+                Ok(events) => dispatch(&mut slots, events),
+                Err(e) => {
+                    for slot in slots.drain(..) {
+                        let _ = slot.req.events.send(SeqEvent::Done(error_response(
+                            slot.arrived.elapsed().as_micros() as u64,
+                            format!("{e:#}"),
+                        )));
+                    }
+                }
+            }
+            reap(&engine, &mut slots);
+        }
+    }
+}
+
+fn process(
+    msg: Msg,
+    slots: &mut [Slot],
+    waiting: &mut VecDeque<Pending>,
+    cancelled: &mut HashSet<u64>,
+) {
+    match msg {
+        Msg::Submit(p) => {
+            if cancelled.remove(&p.id) {
+                respond_cancelled(&p);
+            } else {
+                waiting.push_back(p);
+            }
+        }
+        Msg::Cancel(id) => {
+            if let Some(slot) = slots.iter_mut().find(|s| s.id == id) {
+                slot.seq.cancel(); // freed by the next reap pass
+            } else if let Some(i) = waiting.iter().position(|p| p.id == id) {
+                let p = waiting.remove(i).unwrap();
+                respond_cancelled(&p);
+            } else {
+                // The Submit may still be queued behind us; remember the id
+                // so it is matched on arrival. Ids of already-finished or
+                // bogus requests would linger, so bound the set — dropping
+                // ancient entries only un-cancels requests that no longer
+                // exist.
+                if cancelled.len() >= 1024 {
+                    cancelled.clear();
+                }
+                cancelled.insert(id);
             }
         }
     }
+}
 
-    fn run_group(engine: &Engine, group: Vec<Pending>) {
-        let policy = match policies::by_name(&group[0].req.policy, engine.window()) {
-            Some(p) => p,
-            None => {
-                for p in &group {
-                    let _ = p.req.resp.send(Response {
-                        text: String::new(),
-                        compression: 0.0,
-                        tokens_out: 0,
-                        e2e_us: 0,
-                        error: Some(format!("unknown policy '{}'", p.req.policy)),
-                    });
-                }
-                return;
-            }
-        };
-        let prompts: Vec<&str> = group.iter().map(|p| p.req.prompt.as_str()).collect();
-        let sp = group[0].req.sp.clone();
-        match engine.generate_batch(&prompts, policy.as_ref(), &sp) {
-            Ok(results) => {
-                for (p, r) in group.iter().zip(results) {
-                    let e2e = p.arrived.elapsed().as_micros() as u64;
-                    engine.metrics.e2e.lock().unwrap().record(e2e);
-                    let _ = p.req.resp.send(Response {
-                        text: r.text,
-                        compression: r.compression,
-                        tokens_out: r.tokens_out,
-                        e2e_us: e2e,
-                        error: None,
-                    });
-                }
+fn respond_cancelled(p: &Pending) {
+    let _ = p.req.events.send(SeqEvent::Done(Response {
+        text: String::new(),
+        compression: 0.0,
+        tokens_out: 0,
+        e2e_us: p.arrived.elapsed().as_micros() as u64,
+        error: None,
+        reason: Some("cancelled".into()),
+    }));
+}
+
+/// Move queued requests into free slots: build the policy, prefill, and
+/// stream the first token. A sequence admitted here decodes together with
+/// whatever is already mid-flight.
+fn admit(
+    engine: &Engine,
+    cfg: &BatcherConfig,
+    slots: &mut Vec<Slot>,
+    waiting: &mut VecDeque<Pending>,
+) {
+    while slots.len() < cfg.max_batch && !waiting.is_empty() {
+        let p = waiting.pop_front().unwrap();
+        let policy = p.req.policy.build(engine.window());
+        let mut seq = engine.sequence(p.id, &p.req.prompt, p.req.sp.clone());
+        match engine.prefill(&mut seq, policy.as_ref()) {
+            Ok(events) => {
+                let mut slot = Slot { id: p.id, req: p.req, arrived: p.arrived, seq };
+                forward_tokens(&mut slot, events);
+                slots.push(slot);
             }
             Err(e) => {
-                for p in &group {
-                    let _ = p.req.resp.send(Response {
-                        text: String::new(),
-                        compression: 0.0,
-                        tokens_out: 0,
-                        e2e_us: p.arrived.elapsed().as_micros() as u64,
-                        error: Some(format!("{e:#}")),
-                    });
+                let _ = p.req.events.send(SeqEvent::Done(error_response(
+                    p.arrived.elapsed().as_micros() as u64,
+                    format!("{e:#}"),
+                )));
+            }
+        }
+    }
+}
+
+fn forward_tokens(slot: &mut Slot, events: Vec<StepEvent>) {
+    dispatch(std::slice::from_mut(slot), events);
+}
+
+fn dispatch(slots: &mut [Slot], events: Vec<StepEvent>) {
+    for ev in events {
+        if let StepEvent::Token { id, token, text, .. } = ev {
+            if let Some(slot) = slots.iter_mut().find(|s| s.id == id) {
+                if slot.req.stream
+                    && slot.req.events.send(SeqEvent::Token { token, text }).is_err()
+                {
+                    // client went away: free the slot at the next reap
+                    slot.seq.cancel();
                 }
             }
+        }
+    }
+}
+
+/// Send final responses for finished sequences and free their slots.
+fn reap(engine: &Engine, slots: &mut Vec<Slot>) {
+    let mut i = 0;
+    while i < slots.len() {
+        if slots[i].seq.is_done() {
+            let slot = slots.remove(i);
+            let r = engine.finish(&slot.seq);
+            let e2e = slot.arrived.elapsed().as_micros() as u64;
+            engine.metrics.e2e.lock().unwrap().record(e2e);
+            let _ = slot.req.events.send(SeqEvent::Done(Response {
+                text: r.text,
+                compression: r.compression,
+                tokens_out: r.tokens_out,
+                e2e_us: e2e,
+                error: None,
+                reason: slot.seq.done_reason().map(|d| d.as_str().to_string()),
+            }));
+        } else {
+            i += 1;
         }
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        // Closing `tx` ends the worker loop once the queue drains.
-        // (tx is dropped as part of self; join the worker.)
-        let (dummy_tx, _) = mpsc::channel::<Pending>();
+        // Closing `tx` ends the worker loop once resident sequences drain.
+        let (dummy_tx, _) = mpsc::channel::<Msg>();
         let tx = std::mem::replace(&mut self.tx, dummy_tx);
         drop(tx);
         if let Some(h) = self.handle.take() {

@@ -1,14 +1,31 @@
-//! The generation engine: prefill → prune → masked decode, per sequence or
-//! slot-batched. This is the request hot path — python never runs here.
+//! The generation engine: prefill → prune → masked decode, exposed as
+//! step-level sequence sessions. This is the request hot path — python
+//! never runs here.
+//!
+//! The public surface is built from three primitives:
+//!
+//! * [`Sequence`] — one in-flight generation: prompt tokens, position,
+//!   [`PagedKvCache`], [`ScoreBuffer`], sampler, per-sequence
+//!   [`SamplingParams`] and pruning configuration, plus its host-side KV
+//!   copy so it can join/leave decode groups between steps.
+//! * [`Engine::prefill`] — run the prefill bucket for one sequence, apply
+//!   the policy's prefill pruning, sample the first token.
+//! * [`Engine::decode_step`] — advance any set of live sequences by one
+//!   token together (they share one decode-bucket execution), emitting
+//!   [`StepEvent`]s (token, eviction count, done reason).
+//!
+//! [`Engine::generate`] / [`Engine::generate_batch`] are thin loops over
+//! these primitives; the continuous batcher drives the same primitives but
+//! admits and removes sequences between steps (see batcher.rs).
 //!
 //! The engine is backend-generic: it only sees the [`Runtime`] facade and
 //! opaque [`Buffer`]s, so the same code path drives the hermetic reference
 //! backend and the PJRT artifacts. Data movement per decode step (see
-//! DESIGN.md §Perf): the KV cache lives in backend buffers produced by the
-//! previous step (untupled outputs); the host only uploads the new token
-//! ids + positions and, when a pruning decision changed it, the keep-mask;
-//! it downloads logits `[B, V]` and, for threshold policies, the per-step
-//! surrogate scores `[L, B, H]`.
+//! DESIGN.md §Perf): each sequence keeps a host copy of its KV rows; the
+//! step packs the group's rows + keep-masks, executes the decode bucket,
+//! and copies back only the one new KV row per sequence. (Keeping the
+//! group cache device-resident across steps when membership is unchanged
+//! is an open perf item — see ROADMAP.)
 
 use std::sync::Arc;
 
@@ -18,7 +35,7 @@ use super::sampler::{Sampler, SamplingParams};
 use crate::kvcache::PagedKvCache;
 use crate::metrics::EngineMetrics;
 use crate::policies::{PrefillView, PrunePolicy, ScoreBuffer, Stat};
-use crate::runtime::{Arg, Buffer, Runtime, Tensor};
+use crate::runtime::{Arg, Runtime, Tensor};
 use crate::workload::ByteTokenizer;
 
 pub struct Engine {
@@ -47,6 +64,111 @@ pub struct GenResult {
     pub decode_us: u64,
     pub policy_us: u64,
     pub decode_evictions: usize,
+}
+
+/// Why a sequence stopped generating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DoneReason {
+    /// The model emitted a stop token (EOS/PAD, or newline for
+    /// newline-terminated task grammars).
+    Stop,
+    /// The per-sequence `max_new` token budget was reached.
+    MaxTokens,
+    /// The KV cache ran out of positions (`t_max`).
+    CacheFull,
+    /// The request was cancelled mid-generation.
+    Cancelled,
+}
+
+impl DoneReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DoneReason::Stop => "stop",
+            DoneReason::MaxTokens => "max_tokens",
+            DoneReason::CacheFull => "cache_full",
+            DoneReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// What one engine step produced for one sequence.
+#[derive(Debug, Clone)]
+pub enum StepEvent {
+    /// A new token was accepted into the sequence. `text` is its decoded
+    /// byte (the tokenizer is byte-level); `evicted` counts KV pairs the
+    /// threshold policy removed at this step (Algorithm 1's delayed
+    /// eviction).
+    Token { id: u64, token: i32, text: String, evicted: usize },
+    /// The sequence finished; no more events will follow for `id`.
+    Done { id: u64, reason: DoneReason },
+}
+
+/// One in-flight generation: everything the engine needs to advance a
+/// request one token at a time. Create with [`Engine::sequence`], run
+/// [`Engine::prefill`] once, then pass to [`Engine::decode_step`] together
+/// with any other live sequences until [`Sequence::is_done`].
+pub struct Sequence {
+    pub id: u64,
+    pub sp: SamplingParams,
+    /// Human-readable policy label (set at prefill; for logs/metrics).
+    pub policy_name: String,
+    /// Prompt token ids (BOS + bytes, truncated to the max prefill bucket).
+    toks: Vec<i32>,
+    /// Accepted generated tokens.
+    pub generated: Vec<i32>,
+    /// Next cache position to be written by decode (== tokens fed so far).
+    pos: usize,
+    /// Token to feed at the next decode step.
+    cur: i32,
+    cache: PagedKvCache,
+    sbuf: ScoreBuffer,
+    /// Decode-time eviction threshold (None: no decode pruning).
+    tau: Option<f32>,
+    /// Which surrogate drives decode-time scores.
+    dstat: Stat,
+    sampler: Sampler,
+    /// Host copy of this sequence's KV rows, `[L, H, t_max, D]` — lets the
+    /// sequence join a decode group in any slot at any step.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    done: Option<DoneReason>,
+    prefilled: bool,
+    pub decode_evictions: usize,
+    pub prefill_us: u64,
+    pub oracle_us: u64,
+    pub decode_us: u64,
+    pub policy_us: u64,
+}
+
+impl Sequence {
+    pub fn is_done(&self) -> bool {
+        self.done.is_some()
+    }
+
+    pub fn done_reason(&self) -> Option<DoneReason> {
+        self.done
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.toks.len()
+    }
+
+    pub fn tokens_out(&self) -> usize {
+        self.generated.len()
+    }
+
+    /// Removed fraction of this sequence's KV cache so far.
+    pub fn compression(&self) -> f64 {
+        self.cache.stats().compression()
+    }
+
+    /// Mark the sequence as cancelled; it will be skipped by subsequent
+    /// decode steps. No-op when the sequence already finished.
+    pub fn cancel(&mut self) {
+        if self.done.is_none() {
+            self.done = Some(DoneReason::Cancelled);
+        }
+    }
 }
 
 struct PrefillStats {
@@ -96,6 +218,300 @@ impl Engine {
         *self.rt.manifest.buckets.prefill_t.iter().max().unwrap()
     }
 
+    /// Create a fresh (not yet prefilled) sequence for `prompt`.
+    pub fn sequence(&self, id: u64, prompt: &str, sp: SamplingParams) -> Sequence {
+        let man = &self.rt.manifest;
+        let (layers, heads, t_max) =
+            (man.model.n_layers, man.model.n_kv_heads, man.model.t_max);
+        let seed = sp.seed;
+        Sequence {
+            id,
+            toks: self.tok.encode(prompt, self.max_prompt()),
+            generated: vec![],
+            pos: 0,
+            cur: self.tok.pad as i32,
+            cache: PagedKvCache::new(layers, heads, t_max),
+            sbuf: ScoreBuffer::new(self.window(), layers, heads),
+            tau: None,
+            dstat: Stat::ScoreMlp,
+            sampler: Sampler::new(seed),
+            sp,
+            policy_name: String::new(),
+            k: vec![],
+            v: vec![],
+            done: None,
+            prefilled: false,
+            decode_evictions: 0,
+            prefill_us: 0,
+            oracle_us: 0,
+            decode_us: 0,
+            policy_us: 0,
+        }
+    }
+
+    /// Prefill one sequence: run the prefill bucket, apply `policy`'s
+    /// prefill-time pruning, seed the decode score window, and sample the
+    /// first token from the prefill logits. Returns the emitted events
+    /// (first token, and possibly an immediate done).
+    pub fn prefill(&self, seq: &mut Sequence, policy: &dyn PrunePolicy) -> Result<Vec<StepEvent>> {
+        assert!(!seq.prefilled, "sequence {} already prefilled", seq.id);
+        let man = &self.rt.manifest;
+        let n = seq.toks.len();
+        let bucket = man
+            .prefill_bucket(n, 1)
+            .ok_or_else(|| anyhow!("no prefill bucket for len {n}"))?;
+        let pf = self.rt.artifact(&bucket)?;
+        let pt = pf.meta.t;
+        let mut tok_flat = vec![self.tok.pad as i32; pt];
+        tok_flat[..n].copy_from_slice(&seq.toks);
+        let lens = [n as i32];
+
+        let t0 = crate::util::now_micros();
+        let outs =
+            self.rt.exec(&pf, &[Arg::I32(&tok_flat, &[1, pt]), Arg::I32(&lens, &[1])])?;
+        seq.prefill_us = crate::util::now_micros() - t0;
+        self.metrics.prefill.lock().unwrap().record(seq.prefill_us);
+
+        let fetch = |name: &str| -> Result<Tensor> {
+            let i = pf.meta.output_index(name)?;
+            self.rt.fetch_f32(&outs[i], &pf.meta.outputs[i].shape)
+        };
+        let logits0 = fetch("logits")?;
+        let stats = PrefillStats {
+            score_lin: fetch("score_lin")?,
+            score_mlp: fetch("score_mlp")?,
+            max_attn: fetch("max_attn")?,
+            plus_attn: fetch("plus_attn")?,
+            cum_attn: fetch("cum_attn")?,
+            win_attn: fetch("win_attn")?,
+            vnorm: fetch("vnorm")?,
+            knorm: fetch("knorm")?,
+        };
+        seq.k = fetch("kcache")?.data;
+        seq.v = fetch("vcache")?.data;
+
+        // oracle double pass (KVzip / KVzip+ baselines only)
+        let oracle = if policy.needs_oracle() {
+            let t0 = crate::util::now_micros();
+            let o = self.oracle_scores(&seq.toks)?;
+            seq.oracle_us = crate::util::now_micros() - t0;
+            self.metrics.oracle.lock().unwrap().record(seq.oracle_us);
+            Some(o)
+        } else {
+            None
+        };
+
+        // prune after prefill + seed the decode score window
+        let t0 = crate::util::now_micros();
+        seq.cache.fill(n);
+        policy.prefill_prune(&stats.view(0, oracle.as_ref()), n, &mut seq.cache);
+        seq.tau = policy.decode_threshold();
+        seq.dstat = policy.decode_stat();
+        if seq.tau.is_some() {
+            let view = stats.view(0, None);
+            let dstat = seq.dstat;
+            seq.sbuf.seed_from_prefill(n, |l, h, pos| view.row(dstat, l, h)[pos]);
+        }
+        seq.policy_us = crate::util::now_micros() - t0;
+        seq.policy_name = policy.name();
+        seq.prefilled = true;
+        seq.pos = n;
+
+        // first token comes from the prefill logits
+        let mut events = vec![];
+        let t = seq.sampler.sample(logits0.row(&[0]), &seq.sp);
+        if self.tok.is_stop(t, seq.sp.stop_at_newline) {
+            seq.done = Some(DoneReason::Stop);
+            events.push(StepEvent::Done { id: seq.id, reason: DoneReason::Stop });
+        } else {
+            seq.generated.push(t);
+            seq.cur = t;
+            events.push(StepEvent::Token {
+                id: seq.id,
+                token: t,
+                text: self.tok.decode(&[t]),
+                evicted: 0,
+            });
+            if seq.generated.len() >= seq.sp.max_new {
+                seq.done = Some(DoneReason::MaxTokens);
+                events.push(StepEvent::Done { id: seq.id, reason: DoneReason::MaxTokens });
+            }
+        }
+        Ok(events)
+    }
+
+    /// Advance every live sequence in `seqs` by one decode step. The
+    /// sequences share one decode-bucket execution (slot-batched); done or
+    /// not-yet-prefilled sequences are skipped, so a scheduler can pass a
+    /// stable set while membership changes between steps. Returns the
+    /// step's events in sequence order.
+    pub fn decode_step(&self, seqs: &mut [&mut Sequence]) -> Result<Vec<StepEvent>> {
+        let man = &self.rt.manifest;
+        let (layers, heads, t_max, d_head) = (
+            man.model.n_layers,
+            man.model.n_kv_heads,
+            man.model.t_max,
+            man.model.d_head,
+        );
+        let mut events = vec![];
+        // sequences that would overflow the cache stop here
+        for seq in seqs.iter_mut() {
+            if seq.prefilled && seq.done.is_none() && seq.pos >= t_max {
+                seq.done = Some(DoneReason::CacheFull);
+                events.push(StepEvent::Done { id: seq.id, reason: DoneReason::CacheFull });
+            }
+        }
+        let active: Vec<usize> = (0..seqs.len())
+            .filter(|&i| seqs[i].prefilled && seqs[i].done.is_none())
+            .collect();
+        if active.is_empty() {
+            return Ok(events);
+        }
+        let nb = active.len();
+        let bucket =
+            man.decode_bucket(nb).ok_or_else(|| anyhow!("no decode bucket for {nb}"))?;
+        let dec = self.rt.artifact(&bucket)?;
+        let db = dec.meta.batch;
+
+        let t0 = crate::util::now_micros();
+        // pack the group: per-sequence host KV rows + keep-masks
+        let head_len = t_max * d_head;
+        let mut kc = vec![0.0f32; layers * db * heads * head_len];
+        let mut vc = vec![0.0f32; layers * db * heads * head_len];
+        let mut mask = vec![0.0f32; layers * db * heads * t_max];
+        let mut cur = vec![self.tok.pad as i32; db];
+        let mut pos_i32 = vec![(t_max - 1) as i32; db];
+        for (slot, &si) in active.iter().enumerate() {
+            let seq = &*seqs[si];
+            let m = seq.cache.mask_f32(); // [L, H, t_max]
+            for l in 0..layers {
+                for h in 0..heads {
+                    let s_off = (l * heads + h) * head_len;
+                    let g_off = ((l * db + slot) * heads + h) * head_len;
+                    kc[g_off..g_off + head_len]
+                        .copy_from_slice(&seq.k[s_off..s_off + head_len]);
+                    vc[g_off..g_off + head_len]
+                        .copy_from_slice(&seq.v[s_off..s_off + head_len]);
+                    let sm = (l * heads + h) * t_max;
+                    let gm = ((l * db + slot) * heads + h) * t_max;
+                    mask[gm..gm + t_max].copy_from_slice(&m[sm..sm + t_max]);
+                }
+            }
+            cur[slot] = seq.cur;
+            pos_i32[slot] = seq.pos as i32;
+        }
+        let cache_dims = [layers, db, heads, t_max, d_head];
+        let kc_buf = self.rt.upload_f32(&kc, &cache_dims)?;
+        let vc_buf = self.rt.upload_f32(&vc, &cache_dims)?;
+        let mask_buf = self.rt.upload_f32(&mask, &[layers, db, heads, t_max])?;
+        let outs = self.rt.exec(
+            &dec,
+            &[
+                Arg::I32(&cur, &[db]),
+                Arg::I32(&pos_i32, &[db]),
+                Arg::Buf(&kc_buf),
+                Arg::Buf(&vc_buf),
+                Arg::Buf(&mask_buf),
+            ],
+        )?;
+        let fetch = |name: &str| -> Result<Tensor> {
+            let i = dec.meta.output_index(name)?;
+            self.rt.fetch_f32(&outs[i], &dec.meta.outputs[i].shape)
+        };
+        let logits = fetch("logits")?;
+        let need_lin = active
+            .iter()
+            .any(|&i| seqs[i].tau.is_some() && seqs[i].dstat == Stat::ScoreLin);
+        let need_mlp = active
+            .iter()
+            .any(|&i| seqs[i].tau.is_some() && seqs[i].dstat != Stat::ScoreLin);
+        let sc_lin = if need_lin { Some(fetch("score_lin")?) } else { None };
+        let sc_mlp = if need_mlp { Some(fetch("score_mlp")?) } else { None };
+        let kc_out = fetch("kcache")?;
+        let vc_out = fetch("vcache")?;
+
+        for (slot, &si) in active.iter().enumerate() {
+            let seq = &mut *seqs[si];
+            // copy back the one KV row this step wrote for this sequence
+            let p = seq.pos;
+            for l in 0..layers {
+                for h in 0..heads {
+                    let s_off = (l * heads + h) * head_len + p * d_head;
+                    let g_off = ((l * db + slot) * heads + h) * head_len + p * d_head;
+                    seq.k[s_off..s_off + d_head]
+                        .copy_from_slice(&kc_out.data[g_off..g_off + d_head]);
+                    seq.v[s_off..s_off + d_head]
+                        .copy_from_slice(&vc_out.data[g_off..g_off + d_head]);
+                }
+            }
+            // the token we just fed occupies pos
+            seq.cache.fill((seq.pos + 1).min(t_max));
+            let mut evicted = 0usize;
+            if let Some(tau) = seq.tau {
+                let sc = if seq.dstat == Stat::ScoreLin {
+                    sc_lin.as_ref()
+                } else {
+                    sc_mlp.as_ref()
+                };
+                let sc = sc.expect("decode scores fetched for threshold policies");
+                // sc is [L, B, H]: collect this sequence's row
+                let mut v = Vec::with_capacity(layers * heads);
+                for l in 0..layers {
+                    for h in 0..heads {
+                        v.push(sc.at(&[l, slot, h]));
+                    }
+                }
+                let tp = crate::util::now_micros();
+                evicted = seq.sbuf.push_and_evict(seq.pos, v, tau, &mut seq.cache);
+                seq.decode_evictions += evicted;
+                seq.policy_us += crate::util::now_micros() - tp;
+            }
+            let t = seq.sampler.sample(logits.row(&[slot]), &seq.sp);
+            seq.pos += 1;
+            if self.tok.is_stop(t, seq.sp.stop_at_newline) {
+                seq.done = Some(DoneReason::Stop);
+                events.push(StepEvent::Done { id: seq.id, reason: DoneReason::Stop });
+            } else if seq.generated.len() + 1 >= seq.sp.max_new {
+                // matches the pre-session decode loop: the final candidate
+                // token is discarded once the budget is reached
+                seq.done = Some(DoneReason::MaxTokens);
+                events.push(StepEvent::Done { id: seq.id, reason: DoneReason::MaxTokens });
+            } else {
+                seq.generated.push(t);
+                seq.cur = t;
+                events.push(StepEvent::Token {
+                    id: seq.id,
+                    token: t,
+                    text: self.tok.decode(&[t]),
+                    evicted,
+                });
+            }
+        }
+        let dt = crate::util::now_micros() - t0;
+        self.metrics.decode_step.lock().unwrap().record(dt);
+        for &si in &active {
+            seqs[si].decode_us += dt;
+        }
+        Ok(events)
+    }
+
+    /// Finalize a sequence into a [`GenResult`] (records request metrics).
+    pub fn finish(&self, seq: &Sequence) -> GenResult {
+        let st = seq.cache.stats();
+        self.metrics.note_request(seq.generated.len(), st.compression());
+        GenResult {
+            text: self.tok.decode(&seq.generated),
+            prompt_len: seq.toks.len(),
+            tokens_out: seq.generated.len(),
+            compression: st.compression(),
+            prefill_us: seq.prefill_us,
+            oracle_us: seq.oracle_us,
+            decode_us: seq.decode_us,
+            policy_us: seq.policy_us,
+            decode_evictions: seq.decode_evictions,
+        }
+    }
+
     /// Generate for a single prompt (B=1 decode path).
     pub fn generate(
         &self,
@@ -105,6 +521,46 @@ impl Engine {
     ) -> Result<GenResult> {
         let mut rs = self.generate_batch(&[prompt], policy, sp)?;
         Ok(rs.pop().unwrap())
+    }
+
+    /// Slot-batched generation: a thin loop over [`Engine::prefill`] +
+    /// [`Engine::decode_step`]. All prompts share one policy and one set of
+    /// sampling params (per-slot sampler seeds are derived as before); the
+    /// continuous batcher uses the same primitives with per-request params.
+    pub fn generate_batch(
+        &self,
+        prompts: &[&str],
+        policy: &dyn PrunePolicy,
+        sp: &SamplingParams,
+    ) -> Result<Vec<GenResult>> {
+        let nb = prompts.len();
+        assert!(nb > 0);
+        // fail early (before any prefill work) when the batch cannot decode
+        self.rt
+            .manifest
+            .decode_bucket(nb)
+            .ok_or_else(|| anyhow!("no decode bucket for {nb}"))?;
+        let mut seqs: Vec<Sequence> = prompts
+            .iter()
+            .enumerate()
+            .map(|(b, p)| {
+                let mut sp_b = sp.clone();
+                sp_b.seed = sp.seed.wrapping_add(b as u64 * 7919);
+                self.sequence(b as u64, p, sp_b)
+            })
+            .collect();
+        for seq in seqs.iter_mut() {
+            self.prefill(seq, policy)?;
+        }
+        loop {
+            let mut live: Vec<&mut Sequence> =
+                seqs.iter_mut().filter(|s| !s.is_done()).collect();
+            if live.is_empty() {
+                break;
+            }
+            self.decode_step(&mut live)?;
+        }
+        Ok(seqs.iter().map(|s| self.finish(s)).collect())
     }
 
     /// KVzip oracle double pass for one prompt: returns (s, s+) `[L,1,H,T]`.
@@ -181,7 +637,8 @@ impl Engine {
 
         let ki = pf.meta.output_index("kcache")?;
         let vi = pf.meta.output_index("vcache")?;
-        let mut outs_opt: Vec<Option<Buffer>> = outs.into_iter().map(Some).collect();
+        let mut outs_opt: Vec<Option<crate::runtime::Buffer>> =
+            outs.into_iter().map(Some).collect();
         let mut kc = outs_opt[ki].take().unwrap();
         let mut vc = outs_opt[vi].take().unwrap();
         drop(outs_opt);
@@ -223,269 +680,11 @@ impl Engine {
             logits = self.rt.fetch_f32(&outs[li], &dec.meta.outputs[li].shape)?;
             let ki = dec.meta.output_index("kcache")?;
             let vi = dec.meta.output_index("vcache")?;
-            let mut o: Vec<Option<Buffer>> = outs.into_iter().map(Some).collect();
+            let mut o: Vec<Option<crate::runtime::Buffer>> =
+                outs.into_iter().map(Some).collect();
             kc = o[ki].take().unwrap();
             vc = o[vi].take().unwrap();
         }
         Ok((nll / count.max(1) as f64, compression))
-    }
-
-    /// Slot-batched generation: prompts share a prefill bucket and decode
-    /// together; sequences that finish keep their slot masked until the
-    /// group drains (group-static continuous batching — the batcher forms
-    /// the groups, see batcher.rs).
-    pub fn generate_batch(
-        &self,
-        prompts: &[&str],
-        policy: &dyn PrunePolicy,
-        sp: &SamplingParams,
-    ) -> Result<Vec<GenResult>> {
-        let man = &self.rt.manifest;
-        let (layers, heads, t_max) =
-            (man.model.n_layers, man.model.n_kv_heads, man.model.t_max);
-        let nb = prompts.len();
-        assert!(nb > 0);
-
-        // ---- tokenize + bucket -------------------------------------------
-        let toks: Vec<Vec<i32>> =
-            prompts.iter().map(|p| self.tok.encode(p, self.max_prompt())).collect();
-        let maxlen = toks.iter().map(|t| t.len()).max().unwrap();
-        let bucket = man
-            .prefill_bucket(maxlen, nb)
-            .ok_or_else(|| anyhow!("no prefill bucket for len {maxlen} batch {nb}"))?;
-        let pf = self.rt.artifact(&bucket)?;
-        let (pb, pt) = (pf.meta.batch, pf.meta.t);
-        let dec = self.rt.artifact(
-            &man.decode_bucket(nb).ok_or_else(|| anyhow!("no decode bucket for {nb}"))?,
-        )?;
-        let db = dec.meta.batch;
-        if db != pb {
-            return Err(anyhow!("bucket mismatch: prefill b{pb} vs decode b{db}"));
-        }
-
-        let mut tok_flat = vec![self.tok.pad as i32; pb * pt];
-        let mut lens = vec![1i32; pb];
-        for (i, t) in toks.iter().enumerate() {
-            tok_flat[i * pt..i * pt + t.len()].copy_from_slice(t);
-            lens[i] = t.len() as i32;
-        }
-
-        // ---- prefill ------------------------------------------------------
-        let t0 = crate::util::now_micros();
-        let outs =
-            self.rt.exec(&pf, &[Arg::I32(&tok_flat, &[pb, pt]), Arg::I32(&lens, &[pb])])?;
-        let prefill_us = crate::util::now_micros() - t0;
-        self.metrics.prefill.lock().unwrap().record(prefill_us);
-
-        let fetch = |name: &str| -> Result<Tensor> {
-            let i = pf.meta.output_index(name)?;
-            self.rt.fetch_f32(&outs[i], &pf.meta.outputs[i].shape)
-        };
-        let logits0 = fetch("logits")?;
-        let stats = PrefillStats {
-            score_lin: fetch("score_lin")?,
-            score_mlp: fetch("score_mlp")?,
-            max_attn: fetch("max_attn")?,
-            plus_attn: fetch("plus_attn")?,
-            cum_attn: fetch("cum_attn")?,
-            win_attn: fetch("win_attn")?,
-            vnorm: fetch("vnorm")?,
-            knorm: fetch("knorm")?,
-        };
-        let ki = pf.meta.output_index("kcache")?;
-        let vi = pf.meta.output_index("vcache")?;
-        let mut outs_opt: Vec<Option<Buffer>> = outs.into_iter().map(Some).collect();
-        let mut kc = outs_opt[ki].take().unwrap();
-        let mut vc = outs_opt[vi].take().unwrap();
-        drop(outs_opt);
-
-        // ---- oracle pass (KVzip / KVzip+ baselines only) -------------------
-        let mut oracle: Vec<Option<(Tensor, Tensor)>> = (0..nb).map(|_| None).collect();
-        let mut oracle_us = 0;
-        if policy.needs_oracle() {
-            let t0 = crate::util::now_micros();
-            for (b, t) in toks.iter().enumerate() {
-                oracle[b] = Some(self.oracle_scores(t)?);
-            }
-            oracle_us = crate::util::now_micros() - t0;
-            self.metrics.oracle.lock().unwrap().record(oracle_us);
-        }
-
-        // ---- prune after prefill -------------------------------------------
-        let t0 = crate::util::now_micros();
-        let mut caches: Vec<PagedKvCache> =
-            (0..nb).map(|_| PagedKvCache::new(layers, heads, t_max)).collect();
-        for b in 0..nb {
-            caches[b].fill(lens[b] as usize);
-            let view = stats.view(b, oracle[b].as_ref());
-            policy.prefill_prune(&view, lens[b] as usize, &mut caches[b]);
-        }
-        let mut policy_us = crate::util::now_micros() - t0;
-
-        // ---- score buffers (threshold policies prune during decode) --------
-        let tau = policy.decode_threshold();
-        let dstat = policy.decode_stat();
-        let window = self.window();
-        let mut sbufs: Vec<ScoreBuffer> = (0..nb)
-            .map(|b| {
-                let mut sb = ScoreBuffer::new(window, layers, heads);
-                if tau.is_some() {
-                    let view = stats.view(b, None);
-                    sb.seed_from_prefill(lens[b] as usize, |l, h, pos| {
-                        view.row(dstat, l, h)[pos]
-                    });
-                }
-                sb
-            })
-            .collect();
-
-        // ---- decode loop -----------------------------------------------------
-        let mut samplers: Vec<Sampler> =
-            (0..nb).map(|b| Sampler::new(sp.seed.wrapping_add(b as u64 * 7919))).collect();
-        let mut generated: Vec<Vec<i32>> = vec![vec![]; nb];
-        let mut done = vec![false; nb];
-        let mut evictions = vec![0usize; nb];
-        let mut cur = vec![self.tok.pad as i32; db];
-        let mut pos: Vec<usize> = (0..db).map(|b| {
-            if b < nb { lens[b] as usize } else { t_max - 1 }
-        }).collect();
-
-        // first token comes from the prefill logits
-        for b in 0..nb {
-            let t = samplers[b].sample(logits0.row(&[b]), sp);
-            if self.tok.is_stop(t, sp.stop_at_newline) {
-                done[b] = true;
-            } else {
-                generated[b].push(t);
-                cur[b] = t;
-            }
-        }
-
-        let mask_dims = [layers, db, heads, t_max];
-        let mut mask = vec![0.0f32; layers * db * heads * t_max];
-        let rebuild_mask =
-            |mask: &mut Vec<f32>, caches: &[PagedKvCache]| {
-                for (b, cache) in caches.iter().enumerate() {
-                    let m = cache.mask_f32(); // [L, H, t_max]
-                    for l in 0..layers {
-                        for h in 0..heads {
-                            let src = &m[(l * heads + h) * t_max..][..t_max];
-                            let off = ((l * db + b) * heads + h) * t_max;
-                            mask[off..off + t_max].copy_from_slice(src);
-                        }
-                    }
-                }
-            };
-        rebuild_mask(&mut mask, &caches);
-        let mut mask_dirty = true;
-
-        let t_dec = crate::util::now_micros();
-        let mut steps = 0usize;
-        let mut mask_buf: Option<Buffer> = None;
-        while steps < sp.max_new.saturating_sub(1) && done.iter().any(|d| !d) {
-            // stop sequences that would overflow the cache
-            for b in 0..nb {
-                if !done[b] && pos[b] >= t_max {
-                    done[b] = true;
-                }
-            }
-            if done.iter().all(|d| *d) {
-                break;
-            }
-            let pos_i32: Vec<i32> =
-                pos.iter().map(|&p| (p.min(t_max - 1)) as i32).collect();
-            if mask_dirty {
-                mask_buf = Some(self.rt.upload_f32(&mask, &mask_dims)?);
-                mask_dirty = false;
-            }
-            let outs = self.rt.exec(
-                &dec,
-                &[
-                    Arg::I32(&cur, &[db]),
-                    Arg::I32(&pos_i32, &[db]),
-                    Arg::Buf(&kc),
-                    Arg::Buf(&vc),
-                    Arg::Buf(mask_buf.as_ref().unwrap()),
-                ],
-            )?;
-            let li = dec.meta.output_index("logits")?;
-            let logits = self.rt.fetch_f32(&outs[li], &dec.meta.outputs[li].shape)?;
-            let scores = if tau.is_some() {
-                let name = match dstat {
-                    Stat::ScoreLin => "score_lin",
-                    _ => "score_mlp",
-                };
-                let i = dec.meta.output_index(name)?;
-                Some(self.rt.fetch_f32(&outs[i], &dec.meta.outputs[i].shape)?)
-            } else {
-                None
-            };
-            let ki = dec.meta.output_index("kcache")?;
-            let vi = dec.meta.output_index("vcache")?;
-            let mut outs_opt: Vec<Option<Buffer>> = outs.into_iter().map(Some).collect();
-            kc = outs_opt[ki].take().unwrap();
-            vc = outs_opt[vi].take().unwrap();
-            drop(outs_opt);
-
-            for b in 0..nb {
-                if done[b] {
-                    continue;
-                }
-                // the token we just fed occupies pos[b]
-                caches[b].fill((pos[b] + 1).min(t_max));
-                if let (Some(tau), Some(sc)) = (tau, scores.as_ref()) {
-                    // sc is [L, B, H]: collect this sequence's row
-                    let mut v = Vec::with_capacity(layers * heads);
-                    for l in 0..layers {
-                        for h in 0..heads {
-                            v.push(sc.at(&[l, b, h]));
-                        }
-                    }
-                    let t0 = crate::util::now_micros();
-                    evictions[b] += sbufs[b].push_and_evict(pos[b], v, tau, &mut caches[b]);
-                    policy_us += crate::util::now_micros() - t0;
-                }
-                if caches[b].take_dirty() {
-                    mask_dirty = true;
-                }
-                let t = samplers[b].sample(logits.row(&[b]), sp);
-                pos[b] += 1;
-                if self.tok.is_stop(t, sp.stop_at_newline)
-                    || generated[b].len() + 1 >= sp.max_new
-                {
-                    done[b] = true;
-                } else {
-                    generated[b].push(t);
-                    cur[b] = t;
-                }
-            }
-            if mask_dirty {
-                rebuild_mask(&mut mask, &caches);
-            }
-            steps += 1;
-        }
-        let decode_us = crate::util::now_micros() - t_dec;
-        if steps > 0 {
-            self.metrics.decode_step.lock().unwrap().record(decode_us / steps as u64);
-        }
-
-        // ---- results ----------------------------------------------------------
-        let mut results = vec![];
-        for b in 0..nb {
-            let st = caches[b].stats();
-            self.metrics.note_request(generated[b].len(), st.compression());
-            results.push(GenResult {
-                text: self.tok.decode(&generated[b]),
-                prompt_len: lens[b] as usize,
-                tokens_out: generated[b].len(),
-                compression: st.compression(),
-                prefill_us,
-                oracle_us,
-                decode_us,
-                policy_us,
-                decode_evictions: evictions[b],
-            });
-        }
-        Ok(results)
     }
 }

@@ -1,9 +1,14 @@
 //! L3 coordinator: the serving-system contribution (vLLM-router-shaped).
 //!
-//! * [`engine`] — prefill → prune → masked-decode generation over the PJRT
-//!   artifacts, single or slot-batched.
-//! * [`batcher`] — request queue + continuous batcher: groups compatible
-//!   requests (same policy) into decode groups within a latency deadline.
+//! * [`engine`] — prefill → prune → masked-decode generation over the
+//!   execution backend, exposed as step-level sessions: a [`Sequence`]
+//!   state object plus [`Engine::prefill`] / [`Engine::decode_step`]
+//!   primitives emitting [`StepEvent`]s. `generate`/`generate_batch` are
+//!   thin loops over the same primitives.
+//! * [`batcher`] — request queue + continuous batcher: sequences join a
+//!   running decode group whenever a slot frees (per-request sampling
+//!   params and [`crate::policies::PolicySpec`]), stream token events, and
+//!   can be cancelled mid-decode.
 //! * [`sampler`] — greedy / temperature / top-k / top-p sampling.
 //!
 //! KV cache pruning is a first-class feature of the serving path: the
@@ -15,6 +20,6 @@ pub mod batcher;
 pub mod engine;
 pub mod sampler;
 
-pub use batcher::{Batcher, BatcherConfig, Request, Response};
-pub use engine::{Engine, GenResult};
+pub use batcher::{Batcher, BatcherConfig, Request, Response, SeqEvent};
+pub use engine::{DoneReason, Engine, GenResult, Sequence, StepEvent};
 pub use sampler::{Sampler, SamplingParams};

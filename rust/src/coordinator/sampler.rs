@@ -1,6 +1,7 @@
 //! Token sampling: greedy and temperature / top-k / top-p (the Qwen3
 //! reasoning settings from paper §4.3: T=0.6, top-p=0.95, top-k=20).
 
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -39,6 +40,34 @@ impl SamplingParams {
             max_new,
             stop_at_newline: false,
         }
+    }
+
+    /// Build from a request object's sampling fields (`max_new`, `greedy`,
+    /// `temperature`, `top_k`, `top_p`, `seed`, `stop_newline`) — absent
+    /// fields take the greedy defaults, matching the serving protocol.
+    pub fn from_json(j: &Json) -> SamplingParams {
+        let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(32);
+        let greedy = j.get("greedy").and_then(|v| v.as_bool()).unwrap_or(true);
+        let seed = j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+        let mut sp = if greedy {
+            SamplingParams::greedy(max_new)
+        } else {
+            SamplingParams::reasoning(max_new, seed)
+        };
+        sp.seed = seed;
+        if let Some(t) = j.get("temperature").and_then(|v| v.as_f64()) {
+            sp.temperature = t as f32;
+        }
+        if let Some(k) = j.get("top_k").and_then(|v| v.as_usize()) {
+            sp.top_k = k;
+        }
+        if let Some(p) = j.get("top_p").and_then(|v| v.as_f64()) {
+            sp.top_p = p as f32;
+        }
+        if let Some(b) = j.get("stop_newline").and_then(|v| v.as_bool()) {
+            sp.stop_at_newline = b;
+        }
+        sp
     }
 }
 

@@ -5,6 +5,7 @@
 //!   generate --prompt ... [--policy kvzap_mlp:-4] [--max-new 32]
 //!   eval --suite ruler|longbench|aime [--policy ...] [--samples N] [--ctx T]
 //!   serve [--addr host:port] [--policy ...]
+//!   policies                     pruning-policy catalog (params + defaults)
 //!   flops                        Appendix-B overhead table (Table 3)
 //!   metrics-demo                 quick built-in load test printing metrics
 
@@ -12,7 +13,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 use kvzap::coordinator::{Engine, SamplingParams};
-use kvzap::policies;
+use kvzap::policies::spec::PolicySpec;
 use kvzap::runtime::Runtime;
 use kvzap::server::{Server, ServerConfig};
 use kvzap::util::rng::Rng;
@@ -62,17 +63,46 @@ fn main() -> Result<()> {
         "generate" => generate(&args),
         "eval" => eval(&args),
         "serve" => serve(&args),
+        "policies" => policies_catalog(&args),
         "flops" => flops(),
         "metrics-demo" => metrics_demo(&args),
         _ => {
             eprintln!(
-                "usage: kvzap <info|generate|eval|serve|flops|metrics-demo> [--key value ...]\n\
-                 policies: {}",
-                policies::POLICY_NAMES.join(", ")
+                "usage: kvzap <info|generate|eval|serve|policies|flops|metrics-demo> \
+                 [--key value ...]\n\
+                 run `kvzap policies` for the pruning-policy catalog"
             );
             Ok(())
         }
     }
+}
+
+/// The policy catalog: every PolicySpec kind with its string forms,
+/// parameters and defaults (same data the server's {"cmd":"policies"}
+/// returns; `--json` prints that wire form).
+fn policies_catalog(args: &Args) -> Result<()> {
+    if args.kv.contains_key("json") {
+        println!("{}", kvzap::policies::spec::catalog_json().dump());
+        return Ok(());
+    }
+    println!("{:<14} {:<52} {}", "kind", "string forms", "parameters (default)");
+    for info in kvzap::policies::spec::CATALOG {
+        let params: Vec<String> =
+            info.params.iter().map(|p| format!("{}={}", p.name, p.default)).collect();
+        println!(
+            "{:<14} {:<52} {}",
+            info.kind,
+            info.string_forms.join(", "),
+            if params.is_empty() { "-".to_string() } else { params.join(", ") }
+        );
+        println!("{:<14} {}", "", info.doc);
+    }
+    println!(
+        "\nstring form: <name>[:<param>[:<param2>]], e.g. kvzap_mlp:-4, \
+         streaming_llm:0.3:8\nstructured form (server): {}",
+        PolicySpec::parse("kvzap_mlp:-4").unwrap().to_json().dump()
+    );
+    Ok(())
 }
 
 fn load_engine() -> Result<Arc<Engine>> {
@@ -104,8 +134,7 @@ fn generate(args: &Args) -> Result<()> {
     let engine = load_engine()?;
     let prompt = args.get("prompt", "AAQX = 90210. the sky was clear. Q AAQX\nA ");
     let spec = args.get("policy", "kvzap_mlp:-4");
-    let policy = policies::by_name(&spec, engine.window())
-        .ok_or_else(|| anyhow!("unknown policy {spec}"))?;
+    let policy = PolicySpec::parse(&spec)?.build(engine.window());
     let sp = SamplingParams::greedy(args.usize("max-new", 32));
     let r = engine.generate(&prompt, policy.as_ref(), &sp)?;
     println!("text: {:?}", r.text);
@@ -127,8 +156,7 @@ fn eval(args: &Args) -> Result<()> {
     let spec = args.get("policy", "kvzap_mlp:-4");
     let samples = args.usize("samples", 5);
     let ctx = args.usize("ctx", 248);
-    let policy = policies::by_name(&spec, engine.window())
-        .ok_or_else(|| anyhow!("unknown policy {spec}"))?;
+    let policy = PolicySpec::parse(&spec)?.build(engine.window());
     let mut rng = Rng::new(args.usize("seed", 42) as u64);
 
     let mut total = 0;
@@ -229,7 +257,7 @@ fn metrics_demo(args: &Args) -> Result<()> {
     let engine = load_engine()?;
     let n = args.usize("requests", 8);
     let spec = args.get("policy", "kvzap_mlp:-4");
-    let policy = policies::by_name(&spec, engine.window()).unwrap();
+    let policy = PolicySpec::parse(&spec)?.build(engine.window());
     let mut rng = Rng::new(7);
     for i in 0..n {
         let t = workload::ruler_instance("niah_single_1", 200, &mut rng.fork(i as u64));

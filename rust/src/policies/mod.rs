@@ -15,8 +15,10 @@
 //!   Fig. 5 (right) threshold-vs-top-k ablation.
 
 pub mod score_buffer;
+pub mod spec;
 
 pub use score_buffer::ScoreBuffer;
+pub use spec::{PolicySpec, Surrogate};
 
 use crate::kvcache::PagedKvCache;
 use crate::runtime::Tensor;
@@ -484,57 +486,21 @@ impl PrunePolicy for RandomPress {
 // ---------------------------------------------------------------------------
 // Registry used by the CLI / server / benches
 
-/// Instantiate a policy by name, e.g. "kvzap_mlp:-4.0", "h2o:0.5",
-/// "full". The parameter after ':' is τ for threshold policies and the
-/// keep-fraction for budget policies.
+/// Instantiate a policy from the compact string form, e.g.
+/// "kvzap_mlp:-4.0", "h2o:0.5", "full" — a thin convenience wrapper over
+/// [`PolicySpec::parse`] + [`PolicySpec::build`]. New code should carry a
+/// typed [`PolicySpec`] instead of a string; this stays for callers that
+/// only ever see CLI/bench flag strings.
 pub fn by_name(spec: &str, window: usize) -> Option<Box<dyn PrunePolicy>> {
-    let (name, param) = match spec.split_once(':') {
-        Some((n, p)) => (n, p.parse::<f64>().ok()?),
-        None => (spec, f64::NAN),
-    };
-    let frac = if param.is_nan() { 0.5 } else { param };
-    Some(match name {
-        "full" => Box::new(NoPress),
-        "kvzap_mlp" => Box::new(KVzap::mlp(param as f32, window)),
-        "kvzap_linear" => Box::new(KVzap::linear(param as f32, window)),
-        "kvzap_mlp_topk" => Box::new(kvzap_topk(true, frac, window, false)),
-        "kvzap_linear_topk" => Box::new(kvzap_topk(false, frac, window, false)),
-        "kvzap_mlp_toplayer" => Box::new(kvzap_topk(true, frac, window, true)),
-        "kvzip" => Box::new(kvzip_oracle(frac, window)),
-        "kvzip_plus" => Box::new(kvzip_plus_oracle(frac, window)),
-        "h2o" => Box::new(h2o(frac, window)),
-        "snapkv" => Box::new(snapkv(frac, window)),
-        "adakv" => Box::new(adakv(frac, window)),
-        "tova" => Box::new(tova(frac, window)),
-        "observed_attn" => Box::new(observed_attention(frac, window)),
-        "expected_attn" => Box::new(expected_attention(frac, window)),
-        "knorm" => Box::new(knorm(frac, window)),
-        "streaming_llm" => Box::new(StreamingLlm { keep_frac: frac, sinks: 4 }),
-        "random" => Box::new(RandomPress { keep_frac: frac, seed: 0, window }),
-        _ => return None,
-    })
+    PolicySpec::parse(spec).ok().map(|s| s.build(window))
 }
 
-/// All baseline family names (for `--help` and the bench sweeps).
-pub const POLICY_NAMES: &[&str] = &[
-    "full",
-    "kvzap_mlp",
-    "kvzap_linear",
-    "kvzap_mlp_topk",
-    "kvzap_linear_topk",
-    "kvzap_mlp_toplayer",
-    "kvzip",
-    "kvzip_plus",
-    "h2o",
-    "snapkv",
-    "adakv",
-    "tova",
-    "observed_attn",
-    "expected_attn",
-    "knorm",
-    "streaming_llm",
-    "random",
-];
+/// All accepted string-form policy names, derived from [`spec::CATALOG`]
+/// so there is a single source of truth (for bench sweeps; rich
+/// client-facing introspection is [`spec::CATALOG`] / `kvzap policies`).
+pub fn policy_names() -> Vec<&'static str> {
+    spec::CATALOG.iter().flat_map(|info| info.string_forms.iter().copied()).collect()
+}
 
 #[cfg(test)]
 mod tests {
@@ -621,8 +587,10 @@ mod tests {
 
     #[test]
     fn registry_instantiates_all() {
-        for name in POLICY_NAMES {
-            let spec = if *name == "full" { (*name).to_string() } else { format!("{name}:0.5") };
+        let names = policy_names();
+        assert!(names.len() >= 18, "catalog lost string forms: {names:?}");
+        for name in names {
+            let spec = if name == "full" { name.to_string() } else { format!("{name}:0.5") };
             assert!(by_name(&spec, 16).is_some(), "{name}");
         }
         assert!(by_name("nope", 16).is_none());

@@ -1,0 +1,736 @@
+//! Typed policy specifications — the press-style public policy API.
+//!
+//! [`PolicySpec`] is the single source of truth for "which pruning policy,
+//! with which parameters". It replaces the stringly-typed `policy: String`
+//! plumbing: clients (CLI flags, server requests, bench sweeps) either
+//! parse the compact string form (`"kvzap_mlp:-4"`) or send a structured
+//! JSON object (`{"kind": "kvzap", "surrogate": "mlp", "tau": -4.0}`), and
+//! everything downstream carries the typed value. The spec round-trips
+//! through [`PolicySpec::parse`] / `Display` and through
+//! [`PolicySpec::to_json`] / [`PolicySpec::from_json`], and
+//! [`PolicySpec::build`] instantiates the runnable [`PrunePolicy`].
+//!
+//! [`CATALOG`] describes every variant with its parameters and defaults —
+//! the server's `{"cmd": "policies"}` introspection and the `kvzap
+//! policies` CLI subcommand render it, so the protocol is discoverable
+//! without reading this file.
+
+use std::fmt;
+
+use anyhow::{anyhow, Result};
+
+use super::{
+    adakv, expected_attention, h2o, knorm, kvzap_topk, kvzip_oracle, kvzip_plus_oracle,
+    observed_attention, snapkv, tova, KVzap, NoPress, PrunePolicy, RandomPress, StreamingLlm,
+};
+use crate::util::json::Json;
+
+/// Which surrogate scorer drives a KVzap variant (paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Surrogate {
+    Linear,
+    Mlp,
+}
+
+impl Surrogate {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Surrogate::Linear => "linear",
+            Surrogate::Mlp => "mlp",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Surrogate> {
+        match s {
+            "linear" => Ok(Surrogate::Linear),
+            "mlp" => Ok(Surrogate::Mlp),
+            _ => Err(anyhow!("unknown surrogate '{s}' (expected 'linear' or 'mlp')")),
+        }
+    }
+}
+
+pub const DEFAULT_TAU: f64 = -4.0;
+pub const DEFAULT_KEEP_FRAC: f64 = 0.5;
+pub const DEFAULT_SINKS: usize = 4;
+
+/// A fully-specified pruning policy configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    /// Keep the full KV cache (no pruning).
+    Full,
+    /// KVzap thresholding (paper §3.3): evict below τ, decode-capable.
+    Kvzap { surrogate: Surrogate, tau: f64 },
+    /// Fixed-ratio top-k on the KVzap surrogate (Fig. 5 right ablation).
+    KvzapTopk { surrogate: Surrogate, keep_frac: f64, per_layer: bool },
+    /// KVzip oracle (double-pass) budget policy; `plus` uses s+.
+    Kvzip { plus: bool, keep_frac: f64 },
+    /// H2O: cumulative-attention budget, per head.
+    H2o { keep_frac: f64 },
+    /// SnapKV: windowed-attention budget, per head.
+    SnapKv { keep_frac: f64 },
+    /// AdaKV: windowed-attention budget pooled per layer.
+    AdaKv { keep_frac: f64 },
+    /// TOVA: max-attention budget, per head.
+    Tova { keep_frac: f64 },
+    /// Observed attention: max-attention budget, global pool.
+    ObservedAttn { keep_frac: f64 },
+    /// Expected attention: forward-looking attention budget, per head.
+    ExpectedAttn { keep_frac: f64 },
+    /// Knorm: keep the smallest key norms, per head.
+    Knorm { keep_frac: f64 },
+    /// StreamingLLM: attention sinks + recency, no scores.
+    StreamingLlm { keep_frac: f64, sinks: usize },
+    /// Random eviction (sanity-check lower bound).
+    Random { keep_frac: f64, seed: u64 },
+}
+
+impl PolicySpec {
+    /// Canonical kind tag (the `"kind"` field of the JSON form).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PolicySpec::Full => "full",
+            PolicySpec::Kvzap { .. } => "kvzap",
+            PolicySpec::KvzapTopk { .. } => "kvzap_topk",
+            PolicySpec::Kvzip { .. } => "kvzip",
+            PolicySpec::H2o { .. } => "h2o",
+            PolicySpec::SnapKv { .. } => "snapkv",
+            PolicySpec::AdaKv { .. } => "adakv",
+            PolicySpec::Tova { .. } => "tova",
+            PolicySpec::ObservedAttn { .. } => "observed_attn",
+            PolicySpec::ExpectedAttn { .. } => "expected_attn",
+            PolicySpec::Knorm { .. } => "knorm",
+            PolicySpec::StreamingLlm { .. } => "streaming_llm",
+            PolicySpec::Random { .. } => "random",
+        }
+    }
+
+    /// Parse the compact string form, e.g. `"kvzap_mlp:-4"`, `"h2o:0.5"`,
+    /// `"full"`. Parameters after `:` are τ for threshold policies and the
+    /// keep-fraction for budget policies; `streaming_llm` and `random`
+    /// accept a second parameter (sinks / seed).
+    pub fn parse(spec: &str) -> Result<PolicySpec> {
+        let mut it = spec.split(':');
+        let name = it.next().unwrap_or("");
+        let params: Vec<&str> = it.collect();
+        let num = |i: usize, default: f64| -> Result<f64> {
+            match params.get(i) {
+                None => Ok(default),
+                Some(s) => s
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|v| v.is_finite())
+                    .ok_or_else(|| anyhow!("policy '{name}': bad numeric parameter '{s}'")),
+            }
+        };
+        let max_params = |n: usize| -> Result<()> {
+            if params.len() > n {
+                Err(anyhow!("policy '{name}' takes at most {n} parameter(s), got '{spec}'"))
+            } else {
+                Ok(())
+            }
+        };
+        let keep = |i: usize| -> Result<f64> {
+            let v = num(i, DEFAULT_KEEP_FRAC)?;
+            check_keep_frac(name, v)?;
+            Ok(v)
+        };
+        let spec = match name {
+            "full" => {
+                max_params(0)?;
+                PolicySpec::Full
+            }
+            "kvzap_mlp" | "kvzap_linear" => {
+                max_params(1)?;
+                PolicySpec::Kvzap {
+                    surrogate: surrogate_of(name),
+                    tau: num(0, DEFAULT_TAU)?,
+                }
+            }
+            "kvzap_mlp_topk" | "kvzap_linear_topk" => {
+                max_params(1)?;
+                PolicySpec::KvzapTopk {
+                    surrogate: surrogate_of(name),
+                    keep_frac: keep(0)?,
+                    per_layer: false,
+                }
+            }
+            "kvzap_mlp_toplayer" | "kvzap_linear_toplayer" => {
+                max_params(1)?;
+                PolicySpec::KvzapTopk {
+                    surrogate: surrogate_of(name),
+                    keep_frac: keep(0)?,
+                    per_layer: true,
+                }
+            }
+            "kvzip" => {
+                max_params(1)?;
+                PolicySpec::Kvzip { plus: false, keep_frac: keep(0)? }
+            }
+            "kvzip_plus" => {
+                max_params(1)?;
+                PolicySpec::Kvzip { plus: true, keep_frac: keep(0)? }
+            }
+            "h2o" => {
+                max_params(1)?;
+                PolicySpec::H2o { keep_frac: keep(0)? }
+            }
+            "snapkv" => {
+                max_params(1)?;
+                PolicySpec::SnapKv { keep_frac: keep(0)? }
+            }
+            "adakv" => {
+                max_params(1)?;
+                PolicySpec::AdaKv { keep_frac: keep(0)? }
+            }
+            "tova" => {
+                max_params(1)?;
+                PolicySpec::Tova { keep_frac: keep(0)? }
+            }
+            "observed_attn" => {
+                max_params(1)?;
+                PolicySpec::ObservedAttn { keep_frac: keep(0)? }
+            }
+            "expected_attn" => {
+                max_params(1)?;
+                PolicySpec::ExpectedAttn { keep_frac: keep(0)? }
+            }
+            "knorm" => {
+                max_params(1)?;
+                PolicySpec::Knorm { keep_frac: keep(0)? }
+            }
+            "streaming_llm" => {
+                max_params(2)?;
+                PolicySpec::StreamingLlm {
+                    keep_frac: keep(0)?,
+                    sinks: check_count(name, "sinks", num(1, DEFAULT_SINKS as f64)?)? as usize,
+                }
+            }
+            "random" => {
+                max_params(2)?;
+                PolicySpec::Random {
+                    keep_frac: keep(0)?,
+                    seed: check_count(name, "seed", num(1, 0.0)?)?,
+                }
+            }
+            _ => return Err(anyhow!("unknown policy '{name}'")),
+        };
+        Ok(spec)
+    }
+
+    /// Parse either form a client may send: a JSON string (compact form)
+    /// or a structured object with a `"kind"` field.
+    pub fn from_json(j: &Json) -> Result<PolicySpec> {
+        let obj = match j {
+            Json::Str(s) => return PolicySpec::parse(s),
+            Json::Obj(_) => j,
+            _ => return Err(anyhow!("policy must be a string or an object")),
+        };
+        let kind = obj
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow!("policy object missing string field 'kind'"))?;
+        let num = |key: &str, default: f64| -> Result<f64> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|x| x.is_finite())
+                    .ok_or_else(|| anyhow!("policy '{kind}': field '{key}' must be a number")),
+            }
+        };
+        let keep = |key: &str| -> Result<f64> {
+            let v = num(key, DEFAULT_KEEP_FRAC)?;
+            check_keep_frac(kind, v)?;
+            Ok(v)
+        };
+        let surrogate = || -> Result<Surrogate> {
+            match obj.get("surrogate") {
+                None => Ok(Surrogate::Mlp),
+                Some(v) => Surrogate::parse(
+                    v.as_str().ok_or_else(|| anyhow!("'surrogate' must be a string"))?,
+                ),
+            }
+        };
+        let spec = match kind {
+            "full" => PolicySpec::Full,
+            "kvzap" => PolicySpec::Kvzap { surrogate: surrogate()?, tau: num("tau", DEFAULT_TAU)? },
+            "kvzap_topk" => PolicySpec::KvzapTopk {
+                surrogate: surrogate()?,
+                keep_frac: keep("keep_frac")?,
+                per_layer: obj.get("per_layer").and_then(|v| v.as_bool()).unwrap_or(false),
+            },
+            "kvzip" => PolicySpec::Kvzip {
+                plus: obj.get("plus").and_then(|v| v.as_bool()).unwrap_or(false),
+                keep_frac: keep("keep_frac")?,
+            },
+            "h2o" => PolicySpec::H2o { keep_frac: keep("keep_frac")? },
+            "snapkv" => PolicySpec::SnapKv { keep_frac: keep("keep_frac")? },
+            "adakv" => PolicySpec::AdaKv { keep_frac: keep("keep_frac")? },
+            "tova" => PolicySpec::Tova { keep_frac: keep("keep_frac")? },
+            "observed_attn" => PolicySpec::ObservedAttn { keep_frac: keep("keep_frac")? },
+            "expected_attn" => PolicySpec::ExpectedAttn { keep_frac: keep("keep_frac")? },
+            "knorm" => PolicySpec::Knorm { keep_frac: keep("keep_frac")? },
+            "streaming_llm" => PolicySpec::StreamingLlm {
+                keep_frac: keep("keep_frac")?,
+                sinks: check_count(kind, "sinks", num("sinks", DEFAULT_SINKS as f64)?)? as usize,
+            },
+            "random" => PolicySpec::Random {
+                keep_frac: keep("keep_frac")?,
+                seed: check_count(kind, "seed", num("seed", 0.0)?)?,
+            },
+            _ => return Err(anyhow!("unknown policy kind '{kind}'")),
+        };
+        Ok(spec)
+    }
+
+    /// Structured JSON form (canonical: always carries every field).
+    pub fn to_json(&self) -> Json {
+        let kind = Json::str(self.kind());
+        match *self {
+            PolicySpec::Full => Json::obj(vec![("kind", kind)]),
+            PolicySpec::Kvzap { surrogate, tau } => Json::obj(vec![
+                ("kind", kind),
+                ("surrogate", Json::str(surrogate.as_str())),
+                ("tau", Json::num(tau)),
+            ]),
+            PolicySpec::KvzapTopk { surrogate, keep_frac, per_layer } => Json::obj(vec![
+                ("kind", kind),
+                ("surrogate", Json::str(surrogate.as_str())),
+                ("keep_frac", Json::num(keep_frac)),
+                ("per_layer", Json::Bool(per_layer)),
+            ]),
+            PolicySpec::Kvzip { plus, keep_frac } => Json::obj(vec![
+                ("kind", kind),
+                ("plus", Json::Bool(plus)),
+                ("keep_frac", Json::num(keep_frac)),
+            ]),
+            PolicySpec::H2o { keep_frac }
+            | PolicySpec::SnapKv { keep_frac }
+            | PolicySpec::AdaKv { keep_frac }
+            | PolicySpec::Tova { keep_frac }
+            | PolicySpec::ObservedAttn { keep_frac }
+            | PolicySpec::ExpectedAttn { keep_frac }
+            | PolicySpec::Knorm { keep_frac } => {
+                Json::obj(vec![("kind", kind), ("keep_frac", Json::num(keep_frac))])
+            }
+            PolicySpec::StreamingLlm { keep_frac, sinks } => Json::obj(vec![
+                ("kind", kind),
+                ("keep_frac", Json::num(keep_frac)),
+                ("sinks", Json::num(sinks as f64)),
+            ]),
+            PolicySpec::Random { keep_frac, seed } => Json::obj(vec![
+                ("kind", kind),
+                ("keep_frac", Json::num(keep_frac)),
+                ("seed", Json::num(seed as f64)),
+            ]),
+        }
+    }
+
+    /// Instantiate the runnable policy. `window` is the engine's sliding
+    /// window (manifest `w`).
+    pub fn build(&self, window: usize) -> Box<dyn PrunePolicy> {
+        match *self {
+            PolicySpec::Full => Box::new(NoPress),
+            PolicySpec::Kvzap { surrogate, tau } => Box::new(match surrogate {
+                Surrogate::Mlp => KVzap::mlp(tau as f32, window),
+                Surrogate::Linear => KVzap::linear(tau as f32, window),
+            }),
+            PolicySpec::KvzapTopk { surrogate, keep_frac, per_layer } => Box::new(kvzap_topk(
+                matches!(surrogate, Surrogate::Mlp),
+                keep_frac,
+                window,
+                per_layer,
+            )),
+            PolicySpec::Kvzip { plus, keep_frac } => Box::new(if plus {
+                kvzip_plus_oracle(keep_frac, window)
+            } else {
+                kvzip_oracle(keep_frac, window)
+            }),
+            PolicySpec::H2o { keep_frac } => Box::new(h2o(keep_frac, window)),
+            PolicySpec::SnapKv { keep_frac } => Box::new(snapkv(keep_frac, window)),
+            PolicySpec::AdaKv { keep_frac } => Box::new(adakv(keep_frac, window)),
+            PolicySpec::Tova { keep_frac } => Box::new(tova(keep_frac, window)),
+            PolicySpec::ObservedAttn { keep_frac } => {
+                Box::new(observed_attention(keep_frac, window))
+            }
+            PolicySpec::ExpectedAttn { keep_frac } => {
+                Box::new(expected_attention(keep_frac, window))
+            }
+            PolicySpec::Knorm { keep_frac } => Box::new(knorm(keep_frac, window)),
+            PolicySpec::StreamingLlm { keep_frac, sinks } => {
+                Box::new(StreamingLlm { keep_frac, sinks })
+            }
+            PolicySpec::Random { keep_frac, seed } => {
+                Box::new(RandomPress { keep_frac, seed, window })
+            }
+        }
+    }
+}
+
+fn surrogate_of(name: &str) -> Surrogate {
+    if name.starts_with("kvzap_mlp") {
+        Surrogate::Mlp
+    } else {
+        Surrogate::Linear
+    }
+}
+
+fn check_keep_frac(name: &str, v: f64) -> Result<()> {
+    if (0.0..=1.0).contains(&v) {
+        Ok(())
+    } else {
+        Err(anyhow!("policy '{name}': keep fraction {v} outside [0, 1]"))
+    }
+}
+
+/// Count-like parameters (sinks, seed) must be non-negative integers —
+/// `as usize`/`as u64` would otherwise silently saturate or truncate.
+fn check_count(name: &str, field: &str, v: f64) -> Result<u64> {
+    if v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64 {
+        Ok(v as u64)
+    } else {
+        Err(anyhow!("policy '{name}': '{field}' must be a non-negative integer, got {v}"))
+    }
+}
+
+impl fmt::Display for PolicySpec {
+    /// Canonical compact string form; `parse(x.to_string()) == x`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            PolicySpec::Full => write!(f, "full"),
+            PolicySpec::Kvzap { surrogate, tau } => {
+                write!(f, "kvzap_{}:{}", surrogate.as_str(), tau)
+            }
+            PolicySpec::KvzapTopk { surrogate, keep_frac, per_layer } => write!(
+                f,
+                "kvzap_{}_{}:{}",
+                surrogate.as_str(),
+                if per_layer { "toplayer" } else { "topk" },
+                keep_frac
+            ),
+            PolicySpec::Kvzip { plus, keep_frac } => {
+                write!(f, "kvzip{}:{}", if plus { "_plus" } else { "" }, keep_frac)
+            }
+            PolicySpec::H2o { keep_frac } => write!(f, "h2o:{keep_frac}"),
+            PolicySpec::SnapKv { keep_frac } => write!(f, "snapkv:{keep_frac}"),
+            PolicySpec::AdaKv { keep_frac } => write!(f, "adakv:{keep_frac}"),
+            PolicySpec::Tova { keep_frac } => write!(f, "tova:{keep_frac}"),
+            PolicySpec::ObservedAttn { keep_frac } => write!(f, "observed_attn:{keep_frac}"),
+            PolicySpec::ExpectedAttn { keep_frac } => write!(f, "expected_attn:{keep_frac}"),
+            PolicySpec::Knorm { keep_frac } => write!(f, "knorm:{keep_frac}"),
+            PolicySpec::StreamingLlm { keep_frac, sinks } => {
+                if sinks == DEFAULT_SINKS {
+                    write!(f, "streaming_llm:{keep_frac}")
+                } else {
+                    write!(f, "streaming_llm:{keep_frac}:{sinks}")
+                }
+            }
+            PolicySpec::Random { keep_frac, seed } => {
+                if seed == 0 {
+                    write!(f, "random:{keep_frac}")
+                } else {
+                    write!(f, "random:{keep_frac}:{seed}")
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Introspection catalog
+
+/// One tunable parameter of a policy kind.
+pub struct PolicyParam {
+    pub name: &'static str,
+    pub default: f64,
+    pub doc: &'static str,
+}
+
+/// One policy kind: its structured tag, accepted string forms, parameters.
+pub struct PolicyInfo {
+    pub kind: &'static str,
+    pub string_forms: &'static [&'static str],
+    pub params: &'static [PolicyParam],
+    pub doc: &'static str,
+}
+
+const P_TAU: PolicyParam =
+    PolicyParam { name: "tau", default: DEFAULT_TAU, doc: "log s+ eviction threshold" };
+const P_KEEP: PolicyParam = PolicyParam {
+    name: "keep_frac",
+    default: DEFAULT_KEEP_FRAC,
+    doc: "fraction of prompt KV pairs to keep, in (0, 1]",
+};
+const P_SINKS: PolicyParam = PolicyParam {
+    name: "sinks",
+    default: 4.0, // == DEFAULT_SINKS
+    doc: "always-kept leading attention-sink tokens",
+};
+const P_SEED: PolicyParam =
+    PolicyParam { name: "seed", default: 0.0, doc: "rng seed for the eviction pattern" };
+
+/// Every policy kind the stack understands, with parameters and defaults.
+pub const CATALOG: &[PolicyInfo] = &[
+    PolicyInfo {
+        kind: "full",
+        string_forms: &["full"],
+        params: &[],
+        doc: "keep the full KV cache (no pruning)",
+    },
+    PolicyInfo {
+        kind: "kvzap",
+        string_forms: &["kvzap_mlp", "kvzap_linear"],
+        params: &[P_TAU],
+        doc: "KVzap thresholding (surrogate: mlp|linear); prunes during decode",
+    },
+    PolicyInfo {
+        kind: "kvzap_topk",
+        string_forms: &[
+            "kvzap_mlp_topk",
+            "kvzap_linear_topk",
+            "kvzap_mlp_toplayer",
+            "kvzap_linear_toplayer",
+        ],
+        params: &[P_KEEP],
+        doc: "fixed-ratio top-k on KVzap surrogate scores (per_layer pools per layer)",
+    },
+    PolicyInfo {
+        kind: "kvzip",
+        string_forms: &["kvzip", "kvzip_plus"],
+        params: &[P_KEEP],
+        doc: "KVzip oracle budget policy (double prefill pass; plus uses s+)",
+    },
+    PolicyInfo {
+        kind: "h2o",
+        string_forms: &["h2o"],
+        params: &[P_KEEP],
+        doc: "heavy-hitter oracle: cumulative attention, per-head budget",
+    },
+    PolicyInfo {
+        kind: "snapkv",
+        string_forms: &["snapkv"],
+        params: &[P_KEEP],
+        doc: "SnapKV: observation-window attention, per-head budget",
+    },
+    PolicyInfo {
+        kind: "adakv",
+        string_forms: &["adakv"],
+        params: &[P_KEEP],
+        doc: "AdaKV: observation-window attention, budget pooled per layer",
+    },
+    PolicyInfo {
+        kind: "tova",
+        string_forms: &["tova"],
+        params: &[P_KEEP],
+        doc: "TOVA: max attention, per-head budget",
+    },
+    PolicyInfo {
+        kind: "observed_attn",
+        string_forms: &["observed_attn"],
+        params: &[P_KEEP],
+        doc: "observed attention: max attention, global budget pool",
+    },
+    PolicyInfo {
+        kind: "expected_attn",
+        string_forms: &["expected_attn"],
+        params: &[P_KEEP],
+        doc: "expected attention: forward-looking attention, per-head budget",
+    },
+    PolicyInfo {
+        kind: "knorm",
+        string_forms: &["knorm"],
+        params: &[P_KEEP],
+        doc: "key-norm heuristic: keep the smallest ||k||, per-head budget",
+    },
+    PolicyInfo {
+        kind: "streaming_llm",
+        string_forms: &["streaming_llm"],
+        params: &[P_KEEP, P_SINKS],
+        doc: "StreamingLLM: attention sinks + recency window, score-free",
+    },
+    PolicyInfo {
+        kind: "random",
+        string_forms: &["random"],
+        params: &[P_KEEP, P_SEED],
+        doc: "random eviction (sanity-check lower bound)",
+    },
+];
+
+/// The catalog as JSON (served by `{"cmd": "policies"}`).
+pub fn catalog_json() -> Json {
+    Json::Arr(
+        CATALOG
+            .iter()
+            .map(|info| {
+                Json::obj(vec![
+                    ("kind", Json::str(info.kind)),
+                    (
+                        "string_forms",
+                        Json::Arr(info.string_forms.iter().map(|s| Json::str(*s)).collect()),
+                    ),
+                    (
+                        "params",
+                        Json::Arr(
+                            info.params
+                                .iter()
+                                .map(|p| {
+                                    Json::obj(vec![
+                                        ("name", Json::str(p.name)),
+                                        ("default", Json::num(p.default)),
+                                        ("doc", Json::str(p.doc)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("doc", Json::str(info.doc)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_specs() -> Vec<PolicySpec> {
+        vec![
+            PolicySpec::Full,
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0 },
+            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -6.5 },
+            PolicySpec::KvzapTopk {
+                surrogate: Surrogate::Mlp,
+                keep_frac: 0.5,
+                per_layer: false,
+            },
+            PolicySpec::KvzapTopk {
+                surrogate: Surrogate::Linear,
+                keep_frac: 0.25,
+                per_layer: true,
+            },
+            PolicySpec::Kvzip { plus: false, keep_frac: 0.5 },
+            PolicySpec::Kvzip { plus: true, keep_frac: 0.75 },
+            PolicySpec::H2o { keep_frac: 0.5 },
+            PolicySpec::SnapKv { keep_frac: 0.4 },
+            PolicySpec::AdaKv { keep_frac: 0.6 },
+            PolicySpec::Tova { keep_frac: 0.8 },
+            PolicySpec::ObservedAttn { keep_frac: 0.3 },
+            PolicySpec::ExpectedAttn { keep_frac: 0.7 },
+            PolicySpec::Knorm { keep_frac: 0.2 },
+            PolicySpec::StreamingLlm { keep_frac: 0.3, sinks: 4 },
+            PolicySpec::StreamingLlm { keep_frac: 0.3, sinks: 8 },
+            PolicySpec::Random { keep_frac: 0.5, seed: 0 },
+            PolicySpec::Random { keep_frac: 0.5, seed: 7 },
+        ]
+    }
+
+    #[test]
+    fn string_round_trip_every_variant() {
+        for spec in sample_specs() {
+            let s = spec.to_string();
+            let back = PolicySpec::parse(&s).unwrap_or_else(|e| panic!("parse '{s}': {e}"));
+            assert_eq!(back, spec, "string round trip via '{s}'");
+        }
+    }
+
+    #[test]
+    fn json_round_trip_every_variant() {
+        for spec in sample_specs() {
+            let j = spec.to_json();
+            // through the actual codec, not just the in-memory value
+            let wire = Json::parse(&j.dump()).unwrap();
+            let back = PolicySpec::from_json(&wire)
+                .unwrap_or_else(|e| panic!("from_json {}: {e}", j.dump()));
+            assert_eq!(back, spec, "json round trip via {}", j.dump());
+        }
+    }
+
+    #[test]
+    fn json_string_form_accepted() {
+        let spec = PolicySpec::from_json(&Json::str("kvzap_mlp:-4")).unwrap();
+        assert_eq!(spec, PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0 });
+    }
+
+    #[test]
+    fn structured_matches_string_form() {
+        let j = Json::parse(r#"{"kind": "kvzap", "surrogate": "mlp", "tau": -4.0}"#).unwrap();
+        assert_eq!(PolicySpec::from_json(&j).unwrap(), PolicySpec::parse("kvzap_mlp:-4").unwrap());
+        let j = Json::parse(r#"{"kind": "h2o", "keep_frac": 0.5}"#).unwrap();
+        assert_eq!(PolicySpec::from_json(&j).unwrap(), PolicySpec::parse("h2o:0.5").unwrap());
+    }
+
+    #[test]
+    fn defaults_applied() {
+        assert_eq!(
+            PolicySpec::parse("kvzap_mlp").unwrap(),
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU }
+        );
+        let j = Json::parse(r#"{"kind": "kvzap"}"#).unwrap();
+        assert_eq!(
+            PolicySpec::from_json(&j).unwrap(),
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU }
+        );
+        assert_eq!(
+            PolicySpec::parse("streaming_llm").unwrap(),
+            PolicySpec::StreamingLlm { keep_frac: DEFAULT_KEEP_FRAC, sinks: DEFAULT_SINKS }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "kvzap_mlp:",       // empty parameter
+            "kvzap_mlp:abc",    // non-numeric τ
+            "kvzap_mlp:nan",    // non-finite τ
+            "nope",             // unknown kind
+            "nope:0.5",         // unknown kind with param
+            "h2o:-0.1",         // keep fraction out of range
+            "h2o:1.5",          // keep fraction out of range
+            "full:0.5",         // full takes no parameter
+            "h2o:0.5:9",        // too many parameters
+            "streaming_llm:0.3:-3", // negative sinks
+            "random:0.5:1.9",   // fractional seed
+            "",                 // empty
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+        for bad in [
+            r#"{"nokinds": 1}"#,
+            r#"{"kind": "nope"}"#,
+            r#"{"kind": "kvzap", "tau": "x"}"#,
+            r#"{"kind": "kvzap", "surrogate": "quadratic"}"#,
+            r#"{"kind": "h2o", "keep_frac": 1.5}"#,
+            r#"[1, 2]"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(PolicySpec::from_json(&j).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn build_every_catalog_kind() {
+        for spec in sample_specs() {
+            let pol = spec.build(16);
+            let _ = pol.name();
+        }
+    }
+
+    #[test]
+    fn catalog_covers_every_string_form() {
+        // every advertised string form parses (with a sensible parameter)
+        for info in CATALOG {
+            for form in info.string_forms {
+                let with_param = if info.params.is_empty() {
+                    (*form).to_string()
+                } else {
+                    format!("{form}:0.5")
+                };
+                let spec = PolicySpec::parse(&with_param)
+                    .unwrap_or_else(|e| panic!("catalog form '{with_param}': {e}"));
+                assert_eq!(spec.kind(), info.kind);
+            }
+        }
+        assert!(catalog_json().as_arr().unwrap().len() == CATALOG.len());
+    }
+}

@@ -1,25 +1,55 @@
-//! JSON-lines TCP serving frontend.
+//! JSON-lines TCP serving frontend (protocol v2).
 //!
-//! Protocol: one JSON object per line.
-//!   request : {"prompt": str, "policy": str, "max_new": int,
-//!              "greedy": bool?, "temperature": f?, "top_k": int?,
-//!              "top_p": f?, "seed": int?}
-//!   response: {"text": str, "compression": f, "tokens_out": int,
-//!              "e2e_us": int, "error": str?}
-//!   special : {"cmd": "metrics"} -> metrics report; {"cmd": "shutdown"}
+//! One JSON object per line, in both directions.
+//!
+//! Generation request:
+//!   {"prompt": str,                      required
+//!    "policy": str | object,             "kvzap_mlp:-4" or
+//!                                        {"kind": "kvzap", "surrogate":
+//!                                         "mlp", "tau": -4.0} — see
+//!                                        {"cmd": "policies"}
+//!    "max_new": int, "greedy": bool?, "temperature": f?, "top_k": int?,
+//!    "top_p": f?, "seed": int?, "stop_newline": bool?,
+//!    "stream": bool?,                    default false
+//!    "id": str | num?}                   echoed in events; auto-assigned
+//!                                        when absent
+//!
+//! Non-streaming response (back-compatible with protocol v1):
+//!   {"text": str, "compression": f, "tokens_out": int, "e2e_us": int,
+//!    "id"?: as sent, "error"?: str}
+//!
+//! Streaming (`"stream": true`): one line per accepted token, then a
+//! final done line — tokens from concurrent requests interleave, keyed by
+//! id:
+//!   {"event": "token", "id": ..., "token": int, "text": str}
+//!   {"event": "done", "id": ..., "text": str, "compression": f,
+//!    "tokens_out": int, "e2e_us": int,
+//!    "reason": "stop"|"max_tokens"|"cache_full"|"cancelled", "error"?: str}
+//!
+//! Commands:
+//!   {"cmd": "metrics"}            -> {"metrics": str}
+//!   {"cmd": "policies"}           -> {"policies": [catalog...]}
+//!   {"cmd": "cancel", "id": ...}  -> {"ok": bool}; the cancelled stream
+//!                                    receives its done line with reason
+//!                                    "cancelled" and its slot is freed
+//!                                    mid-decode
+//!   {"cmd": "shutdown"}           -> {"ok": true}; stops the server
 //!
 //! Connections are handled by a small thread-per-connection frontend; all
-//! generation funnels through the shared [`Batcher`] so concurrent clients
-//! get batched together (the continuous-batching path).
+//! generation funnels through the shared [`Batcher`], whose continuous
+//! scheduler lets requests join a running decode group whenever a slot
+//! frees (each request keeps its own sampling params and policy).
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Batcher, Engine, Request, SamplingParams};
+use crate::coordinator::{Batcher, Engine, Request, SamplingParams, SeqEvent};
+use crate::policies::{spec, PolicySpec};
 use crate::util::json::Json;
 
 pub struct ServerConfig {
@@ -40,48 +70,88 @@ impl Default for ServerConfig {
     }
 }
 
-pub fn parse_request(line: &str, default_policy: &str) -> Result<(String, String, SamplingParams)> {
+/// A fully-parsed generation request.
+pub struct ParsedRequest {
+    pub prompt: String,
+    pub policy: PolicySpec,
+    pub sp: SamplingParams,
+    pub stream: bool,
+    /// Client-chosen id (string or number), echoed in responses/events.
+    pub id: Option<Json>,
+}
+
+pub fn parse_request(line: &str, default_policy: &str) -> Result<ParsedRequest> {
     let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    parse_request_json(&j, default_policy)
+}
+
+pub fn parse_request_json(j: &Json, default_policy: &str) -> Result<ParsedRequest> {
     let prompt = j
         .get("prompt")
         .and_then(|p| p.as_str())
         .context("missing 'prompt'")?
         .to_string();
-    let policy = j
-        .get("policy")
-        .and_then(|p| p.as_str())
-        .unwrap_or(default_policy)
-        .to_string();
-    let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(32);
-    let greedy = j.get("greedy").and_then(|v| v.as_bool()).unwrap_or(true);
-    let mut sp = if greedy {
-        SamplingParams::greedy(max_new)
-    } else {
-        SamplingParams::reasoning(max_new, j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64)
+    let policy = match j.get("policy") {
+        Some(p) => PolicySpec::from_json(p).map_err(|e| anyhow::anyhow!("bad 'policy': {e:#}"))?,
+        None => PolicySpec::parse(default_policy)
+            .map_err(|e| anyhow::anyhow!("bad default policy: {e:#}"))?,
     };
-    if let Some(t) = j.get("temperature").and_then(|v| v.as_f64()) {
-        sp.temperature = t as f32;
+    let sp = SamplingParams::from_json(j);
+    let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+    let id = j.get("id").cloned();
+    if let Some(idj) = &id {
+        if !matches!(idj, Json::Str(_) | Json::Num(_)) {
+            anyhow::bail!("'id' must be a string or a number");
+        }
     }
-    if let Some(k) = j.get("top_k").and_then(|v| v.as_usize()) {
-        sp.top_k = k;
-    }
-    if let Some(p) = j.get("top_p").and_then(|v| v.as_f64()) {
-        sp.top_p = p as f32;
-    }
-    Ok((prompt, policy, sp))
+    Ok(ParsedRequest { prompt, policy, sp, stream, id })
 }
 
+/// Non-streaming response body — the exact protocol-v1 shape, plus the
+/// request id when (and only when) the client supplied one.
 pub fn response_json(r: &crate::coordinator::Response) -> String {
+    response_json_with_id(r, None)
+}
+
+pub fn response_json_with_id(r: &crate::coordinator::Response, id: Option<&Json>) -> String {
     let mut pairs = vec![
         ("text", Json::str(r.text.clone())),
         ("compression", Json::num(r.compression)),
         ("tokens_out", Json::num(r.tokens_out as f64)),
         ("e2e_us", Json::num(r.e2e_us as f64)),
     ];
+    if let Some(id) = id {
+        pairs.push(("id", id.clone()));
+    }
     if let Some(e) = &r.error {
         pairs.push(("error", Json::str(e.clone())));
     }
     Json::obj(pairs).dump()
+}
+
+fn done_event_json(r: &crate::coordinator::Response, id: &Json) -> Json {
+    let mut pairs = vec![
+        ("event", Json::str("done")),
+        ("id", id.clone()),
+        ("text", Json::str(r.text.clone())),
+        ("compression", Json::num(r.compression)),
+        ("tokens_out", Json::num(r.tokens_out as f64)),
+        ("e2e_us", Json::num(r.e2e_us as f64)),
+    ];
+    if let Some(reason) = &r.reason {
+        pairs.push(("reason", Json::str(reason.clone())));
+    }
+    if let Some(e) = &r.error {
+        pairs.push(("error", Json::str(e.clone())));
+    }
+    Json::obj(pairs)
+}
+
+type SharedWriter = Arc<Mutex<TcpStream>>;
+
+fn write_line(writer: &SharedWriter, j: &Json) -> std::io::Result<()> {
+    let mut w = writer.lock().unwrap();
+    writeln!(w, "{}", j.dump())
 }
 
 pub struct Server {
@@ -103,32 +173,45 @@ impl Server {
         Server { engine, batcher, cfg, stop: Arc::new(AtomicBool::new(false)) }
     }
 
-    /// Blocking accept loop. Returns when a client sends {"cmd":"shutdown"}.
+    /// Blocking accept loop. Returns when a client sends {"cmd":"shutdown"}
+    /// (the shutdown handler wakes the blocking accept with a loopback
+    /// connection — no polling). Finished connection threads are reaped on
+    /// every accept instead of accumulating.
     pub fn serve(&self) -> Result<()> {
         let listener = TcpListener::bind(&self.cfg.addr)
             .with_context(|| format!("bind {}", self.cfg.addr))?;
-        listener.set_nonblocking(true)?;
         eprintln!("[kvzap] serving on {}", self.cfg.addr);
-        let mut handles = vec![];
+        let mut handles: Vec<std::thread::JoinHandle<()>> = vec![];
         while !self.stop.load(Ordering::Relaxed) {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    let batcher = self.batcher.clone();
-                    let engine = self.engine.clone();
-                    let stop = self.stop.clone();
-                    let default_policy = self.cfg.default_policy.clone();
-                    handles.push(std::thread::spawn(move || {
-                        let _ = handle_conn(stream, batcher, engine, stop, default_policy);
-                    }));
+            let (stream, _) = match listener.accept() {
+                Ok(s) => s,
+                Err(e) => {
+                    if self.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    return Err(e.into());
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
-                }
-                Err(e) => return Err(e.into()),
+            };
+            if self.stop.load(Ordering::Relaxed) {
+                break; // woken by the shutdown handler
             }
+            handles.retain(|h| !h.is_finished());
+            let batcher = self.batcher.clone();
+            let engine = self.engine.clone();
+            let stop = self.stop.clone();
+            let addr = self.cfg.addr.clone();
+            let default_policy = self.cfg.default_policy.clone();
+            handles.push(std::thread::spawn(move || {
+                let _ = handle_conn(stream, batcher, engine, stop, addr, default_policy);
+            }));
         }
+        // Join only finished connection threads: a client idling on an
+        // open connection must not block shutdown (its thread parks in a
+        // blocking read and exits when the process or the peer does).
         for h in handles {
-            let _ = h.join();
+            if h.is_finished() {
+                let _ = h.join();
+            }
         }
         Ok(())
     }
@@ -139,44 +222,158 @@ fn handle_conn(
     batcher: Arc<Batcher>,
     engine: Arc<Engine>,
     stop: Arc<AtomicBool>,
+    addr: String,
     default_policy: String,
 ) -> Result<()> {
-    let mut writer = stream.try_clone()?;
+    let writer: SharedWriter = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
+    // client-visible id -> batcher id, for {"cmd": "cancel"}; entries are
+    // removed when their request completes, so the map stays bounded by
+    // the number of in-flight requests
+    let ids: Arc<Mutex<HashMap<String, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    let mut pumps: Vec<std::thread::JoinHandle<()>> = vec![];
+    let mut result: Result<()> = Ok(());
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                result = Err(e.into());
+                break;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
-        if let Ok(j) = Json::parse(&line) {
-            match j.get("cmd").and_then(|c| c.as_str()) {
-                Some("metrics") => {
-                    let rep = Json::obj(vec![("metrics", Json::str(engine.metrics.report()))]);
-                    writeln!(writer, "{}", rep.dump())?;
-                    continue;
-                }
-                Some("shutdown") => {
-                    stop.store(true, Ordering::Relaxed);
-                    writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).dump())?;
-                    return Ok(());
-                }
-                _ => {}
+        let j = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                write_line(&writer, &Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]))?;
+                continue;
             }
+        };
+        match j.get("cmd").and_then(|c| c.as_str()) {
+            Some("metrics") => {
+                write_line(
+                    &writer,
+                    &Json::obj(vec![("metrics", Json::str(engine.metrics.report()))]),
+                )?;
+                continue;
+            }
+            Some("policies") => {
+                write_line(&writer, &Json::obj(vec![("policies", spec::catalog_json())]))?;
+                continue;
+            }
+            Some("cancel") => {
+                let ok = j
+                    .get("id")
+                    .map(|idj| idj.dump())
+                    .and_then(|key| ids.lock().unwrap().get(&key).copied())
+                    .map(|bid| batcher.cancel(bid).is_ok())
+                    .unwrap_or(false);
+                let mut pairs = vec![("ok", Json::Bool(ok))];
+                if !ok {
+                    pairs.push(("error", Json::str("unknown request id")));
+                }
+                write_line(&writer, &Json::obj(pairs))?;
+                continue;
+            }
+            Some("shutdown") => {
+                stop.store(true, Ordering::Relaxed);
+                write_line(&writer, &Json::obj(vec![("ok", Json::Bool(true))]))?;
+                // wake the blocking accept so serve() can exit
+                let _ = TcpStream::connect(&addr);
+                break;
+            }
+            Some(other) => {
+                write_line(
+                    &writer,
+                    &Json::obj(vec![("error", Json::str(format!("unknown cmd '{other}'")))]),
+                )?;
+                continue;
+            }
+            None => {}
         }
-        match parse_request(&line, &default_policy) {
-            Ok((prompt, policy, sp)) => {
+        match parse_request_json(&j, &default_policy) {
+            Ok(preq) => {
                 let (tx, rx) = mpsc::channel();
-                batcher.submit(Request { prompt, policy, sp, resp: tx })?;
-                let resp = rx.recv()?;
-                writeln!(writer, "{}", response_json(&resp))?;
+                let client_id = preq.id.clone();
+                let stream_flag = preq.stream;
+                match batcher.submit(Request {
+                    prompt: preq.prompt,
+                    policy: preq.policy,
+                    sp: preq.sp,
+                    stream: stream_flag,
+                    events: tx,
+                }) {
+                    Ok(bid) => {
+                        let id_json =
+                            client_id.clone().unwrap_or_else(|| Json::num(bid as f64));
+                        let id_key = id_json.dump();
+                        ids.lock().unwrap().insert(id_key.clone(), bid);
+                        if stream_flag {
+                            let w = writer.clone();
+                            let ids = ids.clone();
+                            pumps.push(std::thread::spawn(move || {
+                                pump_stream(rx, w, id_json);
+                                ids.lock().unwrap().remove(&id_key);
+                            }));
+                        } else {
+                            // block for the final response (v1 behavior)
+                            let resp = loop {
+                                match rx.recv() {
+                                    Ok(SeqEvent::Done(r)) => break r,
+                                    Ok(SeqEvent::Token { .. }) => continue,
+                                    Err(_) => {
+                                        anyhow::bail!("batcher dropped the request")
+                                    }
+                                }
+                            };
+                            ids.lock().unwrap().remove(&id_key);
+                            let body = response_json_with_id(&resp, client_id.as_ref());
+                            let mut w = writer.lock().unwrap();
+                            writeln!(w, "{body}")?;
+                        }
+                    }
+                    Err(e) => {
+                        write_line(
+                            &writer,
+                            &Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+                        )?;
+                    }
+                }
             }
             Err(e) => {
-                let err = Json::obj(vec![("error", Json::str(format!("{e:#}")))]);
-                writeln!(writer, "{}", err.dump())?;
+                write_line(&writer, &Json::obj(vec![("error", Json::str(format!("{e:#}")))]))?;
             }
         }
     }
-    Ok(())
+    for p in pumps {
+        let _ = p.join();
+    }
+    result
+}
+
+/// Forward one streaming request's events to the shared connection writer.
+fn pump_stream(rx: mpsc::Receiver<SeqEvent>, writer: SharedWriter, id: Json) {
+    for ev in rx.iter() {
+        match ev {
+            SeqEvent::Token { token, text } => {
+                let line = Json::obj(vec![
+                    ("event", Json::str("token")),
+                    ("id", id.clone()),
+                    ("token", Json::num(token as f64)),
+                    ("text", Json::str(text)),
+                ]);
+                if write_line(&writer, &line).is_err() {
+                    return;
+                }
+            }
+            SeqEvent::Done(r) => {
+                let _ = write_line(&writer, &done_event_json(&r, &id));
+                return;
+            }
+        }
+    }
 }
 
 /// Minimal blocking client (used by examples and integration tests).
@@ -191,16 +388,61 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
-    pub fn request(&mut self, body: &Json) -> Result<Json> {
+    /// Send a request line without waiting for the reply (streaming use).
+    pub fn send(&mut self, body: &Json) -> Result<()> {
         writeln!(self.writer, "{}", body.dump())?;
+        Ok(())
+    }
+
+    /// Read the next protocol line as JSON.
+    pub fn read_event(&mut self) -> Result<Json> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        loop {
+            line.clear();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 {
+                anyhow::bail!("connection closed");
+            }
+            if !line.trim().is_empty() {
+                break;
+            }
+        }
         Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
     }
 
+    /// Blocking request/response (non-streaming bodies).
+    pub fn request(&mut self, body: &Json) -> Result<Json> {
+        self.send(body)?;
+        self.read_event()
+    }
+
+    /// Stream a request to completion: `on_token` runs per token text
+    /// fragment; returns the final `"done"` event. Lines that are not
+    /// events for this stream (e.g. command acks) are skipped.
+    pub fn stream(&mut self, body: &Json, mut on_token: impl FnMut(&str)) -> Result<Json> {
+        self.send(body)?;
+        loop {
+            let ev = self.read_event()?;
+            match ev.get("event").and_then(|e| e.as_str()) {
+                Some("token") => {
+                    if let Some(t) = ev.get("text").and_then(|t| t.as_str()) {
+                        on_token(t);
+                    }
+                }
+                Some("done") => return Ok(ev),
+                _ => {}
+            }
+        }
+    }
+
+    /// Cancel an in-flight request by its id (the ack line arrives
+    /// interleaved with any open stream on this connection).
+    pub fn cancel(&mut self, id: &Json) -> Result<()> {
+        self.send(&Json::obj(vec![("cmd", Json::str("cancel")), ("id", id.clone())]))
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
-        writeln!(self.writer, "{}", Json::obj(vec![("cmd", Json::str("shutdown"))]).dump())?;
-        Ok(())
+        self.send(&Json::obj(vec![("cmd", Json::str("shutdown"))]))
     }
 }
 
@@ -210,28 +452,80 @@ mod tests {
 
     #[test]
     fn parse_request_defaults() {
-        let (p, pol, sp) =
-            parse_request(r#"{"prompt": "hi", "max_new": 7}"#, "kvzap_mlp:-4").unwrap();
-        assert_eq!(p, "hi");
-        assert_eq!(pol, "kvzap_mlp:-4");
-        assert_eq!(sp.max_new, 7);
-        assert!(sp.greedy);
+        let preq = parse_request(r#"{"prompt": "hi", "max_new": 7}"#, "kvzap_mlp:-4").unwrap();
+        assert_eq!(preq.prompt, "hi");
+        assert_eq!(preq.policy, PolicySpec::parse("kvzap_mlp:-4").unwrap());
+        assert_eq!(preq.sp.max_new, 7);
+        assert!(preq.sp.greedy);
+        assert!(!preq.stream);
+        assert!(preq.id.is_none());
     }
 
     #[test]
     fn parse_request_sampling_overrides() {
-        let (_, _, sp) = parse_request(
+        let preq = parse_request(
             r#"{"prompt":"x","greedy":false,"temperature":0.8,"top_k":5,"top_p":0.9,"seed":3}"#,
             "full",
         )
         .unwrap();
-        assert!(!sp.greedy);
-        assert!((sp.temperature - 0.8).abs() < 1e-6);
-        assert_eq!(sp.top_k, 5);
+        assert!(!preq.sp.greedy);
+        assert!((preq.sp.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(preq.sp.top_k, 5);
+        assert_eq!(preq.sp.seed, 3);
     }
 
     #[test]
     fn parse_request_rejects_missing_prompt() {
         assert!(parse_request(r#"{"max_new": 2}"#, "full").is_err());
+    }
+
+    #[test]
+    fn parse_request_string_and_structured_policy_agree() {
+        let a = parse_request(r#"{"prompt":"x","policy":"kvzap_mlp:-4"}"#, "full").unwrap();
+        let b = parse_request(
+            r#"{"prompt":"x","policy":{"kind":"kvzap","surrogate":"mlp","tau":-4.0}}"#,
+            "full",
+        )
+        .unwrap();
+        assert_eq!(a.policy, b.policy);
+        let a = parse_request(r#"{"prompt":"x","policy":"streaming_llm:0.3:8"}"#, "full").unwrap();
+        let b = parse_request(
+            r#"{"prompt":"x","policy":{"kind":"streaming_llm","keep_frac":0.3,"sinks":8}}"#,
+            "full",
+        )
+        .unwrap();
+        assert_eq!(a.policy, b.policy);
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_policy() {
+        assert!(parse_request(r#"{"prompt":"x","policy":"kvzap_mlp:"}"#, "full").is_err());
+        assert!(parse_request(r#"{"prompt":"x","policy":{"kind":"nope"}}"#, "full").is_err());
+        assert!(parse_request(r#"{"prompt":"x","policy":[1]}"#, "full").is_err());
+        assert!(parse_request(r#"{"prompt":"x","id":[1]}"#, "full").is_err());
+    }
+
+    #[test]
+    fn parse_request_stream_and_id() {
+        let preq =
+            parse_request(r#"{"prompt":"x","stream":true,"id":"req-1"}"#, "full").unwrap();
+        assert!(preq.stream);
+        assert_eq!(preq.id, Some(Json::str("req-1")));
+    }
+
+    #[test]
+    fn response_shape_is_v1_compatible_without_id() {
+        let r = crate::coordinator::Response {
+            text: "ok".into(),
+            compression: 0.5,
+            tokens_out: 2,
+            e2e_us: 10,
+            error: None,
+            reason: Some("stop".into()),
+        };
+        let j = Json::parse(&response_json(&r)).unwrap();
+        let keys: Vec<&str> =
+            j.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+        assert_eq!(keys, vec!["compression", "e2e_us", "text", "tokens_out"]);
     }
 }
