@@ -1,0 +1,241 @@
+//! Decode-path data-movement benchmark: device-resident KV cache vs the
+//! pre-refactor host repack path, swept over group size and t_max.
+//!
+//! Per step the repack path re-packs every sequence's dense
+//! `[L, H, t_max, d_head]` caches + keep-mask into the group buffer,
+//! uploads them, executes the legacy decode artifact, and fetches both
+//! caches back (exactly what `Engine::decode_step` did before the
+//! resident refactor). The resident path scatters once at join and then
+//! moves only token/pos scalars up and one `[L, H, d_head]` row per
+//! sequence down. Emits `BENCH_decode.json` at the repo root to seed the
+//! perf trajectory.
+//!
+//!     cargo bench --bench bench_decode            # full sweep
+//!     cargo bench --bench bench_decode -- --quick # CI smoke subset
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use kvzap::bench_support::BenchArgs;
+use kvzap::runtime::{Arg, Runtime};
+
+/// Walk up from cwd to the repo root (marked by ROADMAP.md) so the JSON
+/// lands in the same place no matter which directory cargo runs us from.
+fn repo_root() -> PathBuf {
+    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if d.join("ROADMAP.md").exists() {
+            return d;
+        }
+        if !d.pop() {
+            return ".".into();
+        }
+    }
+}
+
+struct Row {
+    t_max: usize,
+    group: usize,
+    resident_tok_s: f64,
+    repack_tok_s: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let quick = args.flag("quick");
+    let t_maxes: Vec<usize> = if quick { vec![512, 2048] } else { vec![512, 2048, 8192] };
+    let groups: Vec<usize> = if quick { vec![1, 4] } else { vec![1, 2, 4, 8] };
+    let base_steps = args.usize("steps", if quick { 6 } else { 24 });
+
+    let mut rows: Vec<Row> = vec![];
+    println!(
+        "{:>6} {:>6} {:>16} {:>16} {:>9}",
+        "t_max", "group", "resident tok/s", "repack tok/s", "speedup"
+    );
+    for &tm in &t_maxes {
+        let rt = Arc::new(Runtime::reference_with_t_max(tm));
+        let man = rt.manifest.clone();
+        let (l, h, d) = (man.model.n_layers, man.model.n_kv_heads, man.model.d_head);
+
+        // one prefill seeds every slot's host KV copy (b=1, shared rows)
+        let pf = rt.artifact("prefill_b1_t128")?;
+        let pt = pf.meta.t;
+        let prompt = "AB = 1234. CD = 5678. the needle is 42.";
+        let mut toks = vec![0i32; pt];
+        toks[0] = 1;
+        for (i, b) in prompt.bytes().enumerate() {
+            toks[i + 1] = b as i32;
+        }
+        let n = prompt.len() + 1;
+        let lens = [n as i32];
+        let pouts = rt.exec(&pf, &[Arg::I32(&toks, &[1, pt]), Arg::I32(&lens, &[1])])?;
+        let ki = pf.meta.output_index("kcache")?;
+        let vi = pf.meta.output_index("vcache")?;
+        let seq_k = rt.fetch_f32(&pouts[ki], &pf.meta.outputs[ki].shape)?.data;
+        let seq_v = rt.fetch_f32(&pouts[vi], &pf.meta.outputs[vi].shape)?.data;
+        let mut slot_mask = vec![0.0f32; l * h * tm];
+        for li in 0..l {
+            for hi in 0..h {
+                for p in 0..n {
+                    slot_mask[(li * h + hi) * tm + p] = 1.0;
+                }
+            }
+        }
+
+        for &g in &groups {
+            let bucket = man
+                .decode_bucket(g)
+                .ok_or_else(|| anyhow::anyhow!("no decode bucket for {g}"))?;
+            let dec = rt.artifact(&bucket)?;
+            let db = dec.meta.batch;
+            // larger caches move (and compute) more per step: keep the
+            // wall time bounded by scaling the step count down
+            let steps = (base_steps * 512 / tm).max(3);
+
+            // ---- resident leg: scatter once, then row-only traffic ------
+            let hd = rt.kv_alloc(db)?;
+            for s in 0..g {
+                rt.kv_scatter(&hd, s, &seq_k, &seq_v)?;
+                rt.kv_write_mask(&hd, s, &slot_mask)?;
+            }
+            let mut cur = vec![0i32; db];
+            let mut pos = vec![(tm - 1) as i32; db];
+            for s in 0..g {
+                cur[s] = b'4' as i32;
+                pos[s] = n as i32;
+            }
+            let li_r = dec.meta.resident_output_index("logits")?;
+            let li = dec.meta.output_index("logits")?;
+            let mut k_row = vec![0.0f32; hd.row_elems()];
+            let mut v_row = vec![0.0f32; hd.row_elems()];
+            // warmup step
+            rt.exec_decode_resident(&dec, &cur, &pos, &hd)?;
+            for s in 0..g {
+                pos[s] += 1;
+            }
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                let outs = rt.exec_decode_resident(&dec, &cur, &pos, &hd)?;
+                let _ = rt.fetch_f32(&outs[li_r], &dec.meta.outputs[li].shape)?;
+                for s in 0..g {
+                    rt.kv_fetch_row(&hd, s, pos[s] as usize, &mut k_row, &mut v_row)?;
+                    pos[s] += 1;
+                }
+            }
+            let resident_tok_s = (steps * g) as f64 / t0.elapsed().as_secs_f64();
+            rt.kv_free(&hd);
+
+            // ---- repack leg: the pre-refactor per-step round-trip -------
+            let head_len = tm * d;
+            let mut seqs_k: Vec<Vec<f32>> = (0..g).map(|_| seq_k.clone()).collect();
+            let mut seqs_v: Vec<Vec<f32>> = (0..g).map(|_| seq_v.clone()).collect();
+            let mut pos = vec![(tm - 1) as i32; db];
+            for s in 0..g {
+                pos[s] = n as i32;
+            }
+            let cache_dims = [l, db, h, tm, d];
+            // per-sequence mask, grown by each decode fill (what the old
+            // engine rebuilt from PagedKvCache every step)
+            let mut live_mask = slot_mask.clone();
+            let mut kc = vec![0.0f32; l * db * h * head_len];
+            let mut vc = vec![0.0f32; l * db * h * head_len];
+            let mut mask = vec![0.0f32; l * db * h * tm];
+            let mut step = |seqs_k: &mut [Vec<f32>],
+                            seqs_v: &mut [Vec<f32>],
+                            pos: &mut [i32]|
+             -> anyhow::Result<()> {
+                for (s, (sk, sv)) in seqs_k.iter().zip(seqs_v.iter()).enumerate() {
+                    for li in 0..l {
+                        for hi in 0..h {
+                            let so = (li * h + hi) * head_len;
+                            let go = ((li * db + s) * h + hi) * head_len;
+                            kc[go..go + head_len].copy_from_slice(&sk[so..so + head_len]);
+                            vc[go..go + head_len].copy_from_slice(&sv[so..so + head_len]);
+                            let sm = (li * h + hi) * tm;
+                            let gm = ((li * db + s) * h + hi) * tm;
+                            mask[gm..gm + tm].copy_from_slice(&live_mask[sm..sm + tm]);
+                        }
+                    }
+                }
+                let kb = rt.upload_f32(&kc, &cache_dims)?;
+                let vb = rt.upload_f32(&vc, &cache_dims)?;
+                let mb = rt.upload_f32(&mask, &[l, db, h, tm])?;
+                let outs = rt.exec(
+                    &dec,
+                    &[
+                        Arg::I32(&cur, &[db]),
+                        Arg::I32(pos, &[db]),
+                        Arg::Buf(&kb),
+                        Arg::Buf(&vb),
+                        Arg::Buf(&mb),
+                    ],
+                )?;
+                let _ = rt.fetch_f32(&outs[li], &dec.meta.outputs[li].shape)?;
+                let ko = dec.meta.output_index("kcache")?;
+                let vo = dec.meta.output_index("vcache")?;
+                let kc_out = rt.fetch_f32(&outs[ko], &dec.meta.outputs[ko].shape)?;
+                let vc_out = rt.fetch_f32(&outs[vo], &dec.meta.outputs[vo].shape)?;
+                let p_new = pos[0] as usize;
+                for (s, (sk, sv)) in seqs_k.iter_mut().zip(seqs_v.iter_mut()).enumerate() {
+                    let p = pos[s] as usize;
+                    for li in 0..l {
+                        for hi in 0..h {
+                            let so = (li * h + hi) * head_len + p * d;
+                            let go = ((li * db + s) * h + hi) * head_len + p * d;
+                            sk[so..so + d].copy_from_slice(&kc_out.data[go..go + d]);
+                            sv[so..so + d].copy_from_slice(&vc_out.data[go..go + d]);
+                        }
+                    }
+                    pos[s] += 1;
+                }
+                // the decoded position becomes attendable next step
+                for li in 0..l {
+                    for hi in 0..h {
+                        live_mask[(li * h + hi) * tm + p_new] = 1.0;
+                    }
+                }
+                Ok(())
+            };
+            step(&mut seqs_k, &mut seqs_v, &mut pos)?; // warmup
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                step(&mut seqs_k, &mut seqs_v, &mut pos)?;
+            }
+            let repack_tok_s = (steps * g) as f64 / t0.elapsed().as_secs_f64();
+
+            println!(
+                "{:>6} {:>6} {:>16.1} {:>16.1} {:>8.2}x",
+                tm,
+                g,
+                resident_tok_s,
+                repack_tok_s,
+                resident_tok_s / repack_tok_s
+            );
+            rows.push(Row { t_max: tm, group: g, resident_tok_s, repack_tok_s });
+        }
+    }
+
+    // JSON seed for the perf trajectory
+    let mut items: Vec<String> = vec![];
+    for r in &rows {
+        items.push(format!(
+            "{{\"t_max\": {}, \"group\": {}, \"resident_tok_s\": {:.2}, \"repack_tok_s\": {:.2}, \"speedup\": {:.3}}}",
+            r.t_max,
+            r.group,
+            r.resident_tok_s,
+            r.repack_tok_s,
+            r.resident_tok_s / r.repack_tok_s
+        ));
+    }
+    let body = format!(
+        "{{\"bench\": \"decode\", \"backend\": \"{}\", \"quick\": {}, \"rows\": [{}]}}\n",
+        "reference",
+        quick,
+        items.join(", ")
+    );
+    let path = repo_root().join("BENCH_decode.json");
+    std::fs::write(&path, body)?;
+    eprintln!("  wrote {}", path.display());
+    Ok(())
+}

@@ -133,6 +133,11 @@ impl Batcher {
 
     fn run(engine: Arc<Engine>, cfg: BatcherConfig, rx: Receiver<Msg>) {
         let mut slots: Vec<Slot> = vec![];
+        // the scheduler's persistent decode session: the backend-resident
+        // group KV cache lives here across steps, so sequences only pay a
+        // scatter when they join and the steady-state step moves one KV
+        // row per sequence
+        let mut group = engine.decode_group();
         let mut waiting: VecDeque<Pending> = VecDeque::new();
         // ids cancelled before their Submit was processed
         let mut cancelled: HashSet<u64> = HashSet::new();
@@ -186,7 +191,7 @@ impl Batcher {
             let step = {
                 let mut live: Vec<&mut Sequence> =
                     slots.iter_mut().map(|s| &mut s.seq).collect();
-                engine.decode_step(&mut live)
+                engine.decode_step(&mut group, &mut live)
             };
             match step {
                 Ok(events) => dispatch(&mut slots, events),

@@ -21,12 +21,16 @@
 //! The engine is backend-generic: it only sees the [`Runtime`] facade and
 //! opaque [`Buffer`]s, so the same code path drives the hermetic reference
 //! backend and the PJRT artifacts. Data movement per decode step (see
-//! DESIGN.md §Perf): each sequence keeps a host copy of its KV rows; the
-//! step packs the group's rows + keep-masks, executes the decode bucket,
-//! and copies back only the one new KV row per sequence. (Keeping the
-//! group cache device-resident across steps when membership is unchanged
-//! is an open perf item — see ROADMAP.)
+//! DESIGN.md §Perf): the group KV cache is *backend-resident* behind a
+//! [`DecodeGroup`] handle. A sequence pays one full-slot scatter when it
+//! joins a slot; after that a steady-state step uploads nothing but the
+//! token/pos scalars, the backend writes the new KV row in place, and the
+//! engine fetches only that `[L, H, d_head]` row back into the sequence's
+//! host snapshot (`O(L·H·d_head)` per sequence per token instead of the
+//! old `O(L·H·t_max·d_head)` repack round-trip). The keep-mask is
+//! re-uploaded per slot only when `PagedKvCache` reports evictions.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -35,8 +39,13 @@ use super::sampler::{Sampler, SamplingParams};
 use crate::kvcache::PagedKvCache;
 use crate::metrics::EngineMetrics;
 use crate::policies::{PrefillView, PrunePolicy, ScoreBuffer, Stat};
-use crate::runtime::{Arg, Runtime, Tensor};
+use crate::runtime::{Arg, KvHandle, Runtime, Tensor};
 use crate::workload::ByteTokenizer;
+
+/// Global sequence-identity counter: slot residency is tracked by this
+/// nonce, not the caller-chosen `Sequence::id`, so id reuse across
+/// requests can never alias a stale resident slot.
+static NEXT_UID: AtomicU64 = AtomicU64::new(1);
 
 pub struct Engine {
     pub rt: Arc<Runtime>,
@@ -97,8 +106,18 @@ pub enum StepEvent {
     /// A new token was accepted into the sequence. `text` is its decoded
     /// byte (the tokenizer is byte-level); `evicted` counts KV pairs the
     /// threshold policy removed at this step (Algorithm 1's delayed
-    /// eviction).
-    Token { id: u64, token: i32, text: String, evicted: usize },
+    /// eviction). `kv_up_bytes`/`kv_down_bytes` account this sequence's KV
+    /// traffic for the step: a join costs one full-slot scatter (+ mask),
+    /// an eviction step one mask refresh, and a steady-state step only the
+    /// decoded-row fetch.
+    Token {
+        id: u64,
+        token: i32,
+        text: String,
+        evicted: usize,
+        kv_up_bytes: u64,
+        kv_down_bytes: u64,
+    },
     /// The sequence finished; no more events will follow for `id`.
     Done { id: u64, reason: DoneReason },
 }
@@ -109,6 +128,9 @@ pub enum StepEvent {
 /// with any other live sequences until [`Sequence::is_done`].
 pub struct Sequence {
     pub id: u64,
+    /// Process-unique identity nonce (see [`NEXT_UID`]); slot residency in
+    /// a [`DecodeGroup`] is keyed by this.
+    uid: u64,
     pub sp: SamplingParams,
     /// Human-readable policy label (set at prefill; for logs/metrics).
     pub policy_name: String,
@@ -127,8 +149,10 @@ pub struct Sequence {
     /// Which surrogate drives decode-time scores.
     dstat: Stat,
     sampler: Sampler,
-    /// Host copy of this sequence's KV rows, `[L, H, t_max, D]` — lets the
-    /// sequence join a decode group in any slot at any step.
+    /// Host snapshot of this sequence's KV rows, `[L, H, t_max, D]` — lets
+    /// the sequence join a decode group in any slot at any step. Written
+    /// once at prefill and kept fresh by the per-step decoded-row fetch,
+    /// so leaving a group needs no bulk gather.
     k: Vec<f32>,
     v: Vec<f32>,
     done: Option<DoneReason>,
@@ -160,6 +184,11 @@ impl Sequence {
     /// Removed fraction of this sequence's KV cache so far.
     pub fn compression(&self) -> f64 {
         self.cache.stats().compression()
+    }
+
+    /// Full cache accounting (kept/filled/blocks) for this sequence.
+    pub fn cache_stats(&self) -> crate::kvcache::CacheStats {
+        self.cache.stats()
     }
 
     /// Mark the sequence as cancelled; it will be skipped by subsequent
@@ -204,9 +233,49 @@ impl PrefillStats {
     }
 }
 
+/// A persistent decode-group session: owns the backend-resident KV cache
+/// handle and tracks which sequence occupies each slot. Create one with
+/// [`Engine::decode_group`] and pass it to every [`Engine::decode_step`]
+/// of the same scheduling loop; membership changes (join/leave between
+/// steps) are reconciled against it — a sequence pays a full-slot scatter
+/// only when it (re)joins, and the group cache is reallocated only when
+/// the decode bucket (slot capacity) changes.
+pub struct DecodeGroup {
+    rt: Arc<Runtime>,
+    handle: Option<KvHandle>,
+    /// Resident sequence uid per slot (0 = vacant).
+    slots: Vec<u64>,
+}
+
+impl DecodeGroup {
+    /// Current slot capacity (the resident decode bucket's batch size).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Free the backend cache; the next step reallocates and re-scatters.
+    pub fn reset(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.rt.kv_free(&h);
+        }
+        self.slots.clear();
+    }
+}
+
+impl Drop for DecodeGroup {
+    fn drop(&mut self) {
+        self.reset();
+    }
+}
+
 impl Engine {
     pub fn new(rt: Arc<Runtime>) -> Engine {
         Engine { rt, tok: ByteTokenizer::default(), metrics: EngineMetrics::default() }
+    }
+
+    /// A fresh (empty) decode-group session for [`Engine::decode_step`].
+    pub fn decode_group(&self) -> DecodeGroup {
+        DecodeGroup { rt: self.rt.clone(), handle: None, slots: vec![] }
     }
 
     pub fn window(&self) -> usize {
@@ -226,6 +295,7 @@ impl Engine {
         let seed = sp.seed;
         Sequence {
             id,
+            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
             toks: self.tok.encode(prompt, self.max_prompt()),
             generated: vec![],
             pos: 0,
@@ -331,6 +401,8 @@ impl Engine {
                 token: t,
                 text: self.tok.decode(&[t]),
                 evicted: 0,
+                kv_up_bytes: 0,
+                kv_down_bytes: 0,
             });
             if seq.generated.len() >= seq.sp.max_new {
                 seq.done = Some(DoneReason::MaxTokens);
@@ -341,11 +413,18 @@ impl Engine {
     }
 
     /// Advance every live sequence in `seqs` by one decode step. The
-    /// sequences share one decode-bucket execution (slot-batched); done or
-    /// not-yet-prefilled sequences are skipped, so a scheduler can pass a
-    /// stable set while membership changes between steps. Returns the
-    /// step's events in sequence order.
-    pub fn decode_step(&self, seqs: &mut [&mut Sequence]) -> Result<Vec<StepEvent>> {
+    /// sequences share one decode-bucket execution (slot-batched) over
+    /// `group`'s backend-resident KV cache; done or not-yet-prefilled
+    /// sequences are skipped, so a scheduler can pass a stable set while
+    /// membership changes between steps. A sequence absent from `seqs`
+    /// vacates its slot (its host KV snapshot is already current) and
+    /// re-scatters if it later rejoins. Returns the step's events in
+    /// sequence order.
+    pub fn decode_step(
+        &self,
+        group: &mut DecodeGroup,
+        seqs: &mut [&mut Sequence],
+    ) -> Result<Vec<StepEvent>> {
         let man = &self.rt.manifest;
         let (layers, heads, t_max, d_head) = (
             man.model.n_layers,
@@ -374,49 +453,70 @@ impl Engine {
         let db = dec.meta.batch;
 
         let t0 = crate::util::now_micros();
-        // pack the group: per-sequence host KV rows + keep-masks
-        let head_len = t_max * d_head;
-        let mut kc = vec![0.0f32; layers * db * heads * head_len];
-        let mut vc = vec![0.0f32; layers * db * heads * head_len];
-        let mut mask = vec![0.0f32; layers * db * heads * t_max];
+        // ---- reconcile slot residency against the resident group --------
+        // bucket change (group grew/shrunk past a capacity step): the old
+        // allocation cannot be reused — free it and re-scatter everyone
+        if group.handle.as_ref().map(|h| h.batch) != Some(db) {
+            group.reset();
+            group.handle = Some(self.rt.kv_alloc(db)?);
+            group.slots = vec![0; db];
+        }
+        let handle = group.handle.as_ref().unwrap();
+        let slots = &mut group.slots;
+        // vacate slots whose occupant is not in this step's active set
+        // (zero mask built lazily: steady-state steps never vacate)
+        let mut zero_mask: Option<Vec<f32>> = None;
+        for s in 0..db {
+            if slots[s] != 0 && !active.iter().any(|&si| seqs[si].uid == slots[s]) {
+                slots[s] = 0;
+                let zm =
+                    zero_mask.get_or_insert_with(|| vec![0.0f32; handle.mask_elems()]);
+                self.rt.kv_write_mask(handle, s, zm)?;
+            }
+        }
+        // per-sequence KV transfer attribution for this step's events
+        let mut kv_up = vec![0u64; seqs.len()];
+        let mut kv_down = vec![0u64; seqs.len()];
+        // residents keep their slot; newcomers scatter into free ones
+        let mut slot_of = vec![usize::MAX; seqs.len()];
+        for &si in &active {
+            if let Some(s) = slots.iter().position(|&u| u == seqs[si].uid) {
+                slot_of[si] = s;
+            }
+        }
+        for &si in &active {
+            let seq = &mut *seqs[si];
+            if slot_of[si] != usize::MAX {
+                // resident: refresh the mask only when evictions dirtied it
+                if seq.cache.take_dirty() {
+                    let m = seq.cache.mask_f32();
+                    self.rt.kv_write_mask(handle, slot_of[si], &m)?;
+                    kv_up[si] += 4 * m.len() as u64;
+                }
+                continue;
+            }
+            let s = slots.iter().position(|&u| u == 0).expect("free slot (db >= nb)");
+            self.rt.kv_scatter(handle, s, &seq.k, &seq.v)?;
+            let m = seq.cache.mask_f32();
+            self.rt.kv_write_mask(handle, s, &m)?;
+            seq.cache.take_dirty(); // the upload covered any pending change
+            kv_up[si] += 4 * (seq.k.len() + seq.v.len() + m.len()) as u64;
+            slots[s] = seq.uid;
+            slot_of[si] = s;
+        }
+
+        // ---- one resident step over the whole group ---------------------
         let mut cur = vec![self.tok.pad as i32; db];
         let mut pos_i32 = vec![(t_max - 1) as i32; db];
-        for (slot, &si) in active.iter().enumerate() {
-            let seq = &*seqs[si];
-            let m = seq.cache.mask_f32(); // [L, H, t_max]
-            for l in 0..layers {
-                for h in 0..heads {
-                    let s_off = (l * heads + h) * head_len;
-                    let g_off = ((l * db + slot) * heads + h) * head_len;
-                    kc[g_off..g_off + head_len]
-                        .copy_from_slice(&seq.k[s_off..s_off + head_len]);
-                    vc[g_off..g_off + head_len]
-                        .copy_from_slice(&seq.v[s_off..s_off + head_len]);
-                    let sm = (l * heads + h) * t_max;
-                    let gm = ((l * db + slot) * heads + h) * t_max;
-                    mask[gm..gm + t_max].copy_from_slice(&m[sm..sm + t_max]);
-                }
-            }
-            cur[slot] = seq.cur;
-            pos_i32[slot] = seq.pos as i32;
+        for &si in &active {
+            cur[slot_of[si]] = seqs[si].cur;
+            pos_i32[slot_of[si]] = seqs[si].pos as i32;
         }
-        let cache_dims = [layers, db, heads, t_max, d_head];
-        let kc_buf = self.rt.upload_f32(&kc, &cache_dims)?;
-        let vc_buf = self.rt.upload_f32(&vc, &cache_dims)?;
-        let mask_buf = self.rt.upload_f32(&mask, &[layers, db, heads, t_max])?;
-        let outs = self.rt.exec(
-            &dec,
-            &[
-                Arg::I32(&cur, &[db]),
-                Arg::I32(&pos_i32, &[db]),
-                Arg::Buf(&kc_buf),
-                Arg::Buf(&vc_buf),
-                Arg::Buf(&mask_buf),
-            ],
-        )?;
+        let outs = self.rt.exec_decode_resident(&dec, &cur, &pos_i32, handle)?;
         let fetch = |name: &str| -> Result<Tensor> {
-            let i = dec.meta.output_index(name)?;
-            self.rt.fetch_f32(&outs[i], &dec.meta.outputs[i].shape)
+            let oi = dec.meta.output_index(name)?; // manifest shape
+            let ri = dec.meta.resident_output_index(name)?; // resident position
+            self.rt.fetch_f32(&outs[ri], &dec.meta.outputs[oi].shape)
         };
         let logits = fetch("logits")?;
         let need_lin = active
@@ -427,24 +527,27 @@ impl Engine {
             .any(|&i| seqs[i].tau.is_some() && seqs[i].dstat != Stat::ScoreLin);
         let sc_lin = if need_lin { Some(fetch("score_lin")?) } else { None };
         let sc_mlp = if need_mlp { Some(fetch("score_mlp")?) } else { None };
-        let kc_out = fetch("kcache")?;
-        let vc_out = fetch("vcache")?;
 
-        for (slot, &si) in active.iter().enumerate() {
+        let mut k_row = vec![0.0f32; handle.row_elems()];
+        let mut v_row = vec![0.0f32; handle.row_elems()];
+        for &si in &active {
+            let slot = slot_of[si];
             let seq = &mut *seqs[si];
-            // copy back the one KV row this step wrote for this sequence
+            // fetch the one KV row this step wrote into the sequence's host
+            // snapshot — the only per-step KV transfer
             let p = seq.pos;
+            self.rt.kv_fetch_row(handle, slot, p, &mut k_row, &mut v_row)?;
+            kv_down[si] += 4 * (k_row.len() + v_row.len()) as u64;
             for l in 0..layers {
                 for h in 0..heads {
-                    let s_off = (l * heads + h) * head_len + p * d_head;
-                    let g_off = ((l * db + slot) * heads + h) * head_len + p * d_head;
-                    seq.k[s_off..s_off + d_head]
-                        .copy_from_slice(&kc_out.data[g_off..g_off + d_head]);
-                    seq.v[s_off..s_off + d_head]
-                        .copy_from_slice(&vc_out.data[g_off..g_off + d_head]);
+                    let dst = (l * heads + h) * (t_max * d_head) + p * d_head;
+                    let src = (l * heads + h) * d_head;
+                    seq.k[dst..dst + d_head].copy_from_slice(&k_row[src..src + d_head]);
+                    seq.v[dst..dst + d_head].copy_from_slice(&v_row[src..src + d_head]);
                 }
             }
-            // the token we just fed occupies pos
+            // the token we just fed occupies pos (the backend mirrors this
+            // fill in the resident mask, so it is not a dirty change)
             seq.cache.fill((seq.pos + 1).min(t_max));
             let mut evicted = 0usize;
             if let Some(tau) = seq.tau {
@@ -484,11 +587,23 @@ impl Engine {
                     token: t,
                     text: self.tok.decode(&[t]),
                     evicted,
+                    kv_up_bytes: kv_up[si],
+                    kv_down_bytes: kv_down[si],
                 });
             }
         }
         let dt = crate::util::now_micros() - t0;
         self.metrics.decode_step.lock().unwrap().record(dt);
+        self.metrics
+            .step_kv_up
+            .lock()
+            .unwrap()
+            .record(kv_up.iter().sum::<u64>());
+        self.metrics
+            .step_kv_down
+            .lock()
+            .unwrap()
+            .record(kv_down.iter().sum::<u64>());
         for &si in &active {
             seqs[si].decode_us += dt;
         }
@@ -552,13 +667,14 @@ impl Engine {
         for seq in seqs.iter_mut() {
             self.prefill(seq, policy)?;
         }
+        let mut group = self.decode_group();
         loop {
             let mut live: Vec<&mut Sequence> =
                 seqs.iter_mut().filter(|s| !s.is_done()).collect();
             if live.is_empty() {
                 break;
             }
-            self.decode_step(&mut live)?;
+            self.decode_step(&mut group, &mut live)?;
         }
         Ok(seqs.iter().map(|s| self.finish(s)).collect())
     }
@@ -635,16 +751,18 @@ impl Engine {
         policy.prefill_prune(&stats.view(0, oracle.as_ref()), n, &mut cache);
         let compression = cache.stats().compression();
 
-        let ki = pf.meta.output_index("kcache")?;
-        let vi = pf.meta.output_index("vcache")?;
-        let mut outs_opt: Vec<Option<crate::runtime::Buffer>> =
-            outs.into_iter().map(Some).collect();
-        let mut kc = outs_opt[ki].take().unwrap();
-        let mut vc = outs_opt[vi].take().unwrap();
-        drop(outs_opt);
-
+        // resident B=1 teacher-forcing session: scatter the prefill cache
+        // once; each step appends its row in place on the backend (the fed
+        // answer tokens become attendable without any mask re-upload)
         let dec = self.rt.artifact(&man.decode_bucket(1).unwrap())?;
-        let mut mask = cache.mask_f32();
+        let mut group = self.decode_group();
+        group.handle = Some(self.rt.kv_alloc(dec.meta.batch)?);
+        group.slots = vec![0; dec.meta.batch];
+        let handle = group.handle.as_ref().unwrap();
+        let kc = fetch("kcache")?;
+        let vc = fetch("vcache")?;
+        self.rt.kv_scatter(handle, 0, &kc.data, &vc.data)?;
+        self.rt.kv_write_mask(handle, 0, &cache.mask_f32())?;
 
         // NLL of answer byte i under logits from step i-1 (teacher forcing).
         let mut nll = 0.0f64;
@@ -657,33 +775,11 @@ impl Engine {
             if pos >= t_max || i == ans.len() - 1 {
                 break;
             }
-            // previously fed answer tokens become attendable
-            if i > 0 {
-                for l in 0..layers {
-                    for h in 0..heads {
-                        mask[(l * heads + h) * t_max + pos - 1] = 1.0;
-                    }
-                }
-            }
-            let mask_buf = self.rt.upload_f32(&mask, &[layers, 1, heads, t_max])?;
-            let outs = self.rt.exec(
-                &dec,
-                &[
-                    Arg::I32(&[a], &[1]),
-                    Arg::I32(&[pos as i32], &[1]),
-                    Arg::Buf(&kc),
-                    Arg::Buf(&vc),
-                    Arg::Buf(&mask_buf),
-                ],
-            )?;
+            let outs =
+                self.rt.exec_decode_resident(&dec, &[a], &[pos as i32], handle)?;
             let li = dec.meta.output_index("logits")?;
-            logits = self.rt.fetch_f32(&outs[li], &dec.meta.outputs[li].shape)?;
-            let ki = dec.meta.output_index("kcache")?;
-            let vi = dec.meta.output_index("vcache")?;
-            let mut o: Vec<Option<crate::runtime::Buffer>> =
-                outs.into_iter().map(Some).collect();
-            kc = o[ki].take().unwrap();
-            vc = o[vi].take().unwrap();
+            let ri = dec.meta.resident_output_index("logits")?;
+            logits = self.rt.fetch_f32(&outs[ri], &dec.meta.outputs[li].shape)?;
         }
         Ok((nll / count.max(1) as f64, compression))
     }

@@ -3,8 +3,9 @@
 //! * [`engine`] — prefill → prune → masked-decode generation over the
 //!   execution backend, exposed as step-level sessions: a [`Sequence`]
 //!   state object plus [`Engine::prefill`] / [`Engine::decode_step`]
-//!   primitives emitting [`StepEvent`]s. `generate`/`generate_batch` are
-//!   thin loops over the same primitives.
+//!   primitives emitting [`StepEvent`]s, stepping a [`DecodeGroup`] whose
+//!   KV cache stays backend-resident across steps.
+//!   `generate`/`generate_batch` are thin loops over the same primitives.
 //! * [`batcher`] — request queue + continuous batcher: sequences join a
 //!   running decode group whenever a slot frees (per-request sampling
 //!   params and [`crate::policies::PolicySpec`]), stream token events, and
@@ -21,5 +22,5 @@ pub mod engine;
 pub mod sampler;
 
 pub use batcher::{Batcher, BatcherConfig, Request, Response, SeqEvent};
-pub use engine::{DoneReason, Engine, GenResult, Sequence, StepEvent};
+pub use engine::{DecodeGroup, DoneReason, Engine, GenResult, Sequence, StepEvent};
 pub use sampler::{Sampler, SamplingParams};

@@ -67,7 +67,11 @@ pub struct PagedKvCache {
     freed_blocks: usize,
     pool: Option<Arc<BlockPool>>,
     pool_blocks: usize,
-    /// Dirty flag so the coordinator only re-uploads the mask on change.
+    /// Dirty flag so the coordinator only re-uploads the mask when it
+    /// changed in a way the backend cannot mirror itself. Evictions set
+    /// it; `fill` does not — the resident decode path marks each decoded
+    /// position attendable on its own (see runtime/backend.rs), so a
+    /// no-eviction sequence performs zero mask uploads after its join.
     dirty: bool,
 }
 
@@ -126,6 +130,9 @@ impl PagedKvCache {
         } else {
             self.kept[word] &= !bit;
             self.kept_count[head] -= 1;
+            // evictions are the unpredictable mask changes (fills are
+            // mirrored by the resident decode path itself)
+            self.dirty = true;
             // Block reclamation: did this empty the whole block?
             let b0 = pos / BLOCK_SLOTS * BLOCK_SLOTS;
             let b1 = (b0 + BLOCK_SLOTS).min(self.t_max);
@@ -137,7 +144,6 @@ impl PagedKvCache {
                 }
             }
         }
-        self.dirty = true;
     }
 
     /// Mark positions [len, new_len) filled (kept) in every head.
@@ -201,7 +207,11 @@ impl PagedKvCache {
         out
     }
 
-    /// True if the mask changed since the last `take_dirty` call.
+    /// True if the mask changed since the last `take_dirty` call in a way
+    /// the backend cannot mirror itself, i.e. by evictions. (`fill` does
+    /// not set it: the resident decode step marks its own position
+    /// attendable on the backend side.) The engine consumes this to skip
+    /// the per-slot mask upload on no-eviction steps.
     pub fn take_dirty(&mut self) -> bool {
         std::mem::take(&mut self.dirty)
     }
@@ -295,6 +305,19 @@ mod tests {
         assert!(!c.fill(80)); // would need a 5th
         c.release();
         assert_eq!(pool.free(), 4);
+    }
+
+    #[test]
+    fn dirty_tracks_evictions_not_fills() {
+        let mut c = PagedKvCache::new(1, 1, 64);
+        assert!(c.take_dirty(), "fresh cache starts dirty (initial upload)");
+        c.fill(10);
+        assert!(!c.take_dirty(), "fills are backend-mirrored, not dirty");
+        c.evict(0, 0, 3);
+        assert!(c.take_dirty());
+        assert!(!c.take_dirty(), "take_dirty clears the flag");
+        c.fill(12);
+        assert!(!c.take_dirty());
     }
 
     #[test]

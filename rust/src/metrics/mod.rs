@@ -1,9 +1,82 @@
-//! Serving metrics: latency histograms + throughput/compression counters.
+//! Serving metrics: latency histograms, throughput/compression counters,
+//! and host↔device transfer accounting.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::histogram::Histogram;
+
+/// Host↔device transfer accounting, maintained by the `Runtime` facade so
+/// both backends are measured identically: each op is charged its
+/// *logical contract* bytes (a `kv_fetch_row` is one `[L, H, D]` row, a
+/// `kv_write_mask` one slot mask), which is exactly what the reference
+/// backend physically moves. The KV-specific counters isolate cache
+/// traffic from model I/O (tokens in, logits out) — the device-resident
+/// decode path is the difference between `kv_bytes_up/down` staying flat
+/// and growing by the full dense cache every step. Caveat: the interim
+/// PJRT implementation physically moves more than the contract on two ops
+/// (whole-cache shadow sync behind row fetches, per-step mask re-upload —
+/// see runtime/pjrt.rs module docs); those extras are not yet counted, so
+/// on that backend the counters are a lower bound until the decode
+/// artifact grows mask-state/row-gather outputs.
+#[derive(Default)]
+pub struct TransferCounters {
+    /// KV rows + keep-masks scattered into backend-owned group caches.
+    pub kv_bytes_up: AtomicU64,
+    /// KV rows/slots gathered from group caches back to the host.
+    pub kv_bytes_down: AtomicU64,
+    /// Per-slot keep-mask update ops (joins + post-eviction refreshes).
+    pub mask_uploads: AtomicU64,
+    /// All host→device bytes (tokens, caches, masks, …).
+    pub bytes_up: AtomicU64,
+    /// All device→host bytes (fetched outputs, gathered KV).
+    pub bytes_down: AtomicU64,
+    /// Resident decode-step executions.
+    pub decode_steps: AtomicU64,
+}
+
+impl TransferCounters {
+    pub fn add_up(&self, bytes: u64) {
+        self.bytes_up.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_down(&self, bytes: u64) {
+        self.bytes_down.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_kv_up(&self, bytes: u64) {
+        self.kv_bytes_up.fetch_add(bytes, Ordering::Relaxed);
+        self.bytes_up.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_kv_down(&self, bytes: u64) {
+        self.kv_bytes_down.fetch_add(bytes, Ordering::Relaxed);
+        self.bytes_down.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            kv_bytes_up: self.kv_bytes_up.load(Ordering::Relaxed),
+            kv_bytes_down: self.kv_bytes_down.load(Ordering::Relaxed),
+            mask_uploads: self.mask_uploads.load(Ordering::Relaxed),
+            bytes_up: self.bytes_up.load(Ordering::Relaxed),
+            bytes_down: self.bytes_down.load(Ordering::Relaxed),
+            decode_steps: self.decode_steps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A consistent-enough point-in-time copy of [`TransferCounters`] (tests
+/// diff two snapshots around a region of interest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub kv_bytes_up: u64,
+    pub kv_bytes_down: u64,
+    pub mask_uploads: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub decode_steps: u64,
+}
 
 #[derive(Default)]
 pub struct EngineMetrics {
@@ -13,6 +86,11 @@ pub struct EngineMetrics {
     pub oracle: Mutex<Histogram>,
     /// Per decode step latency (µs).
     pub decode_step: Mutex<Histogram>,
+    /// KV bytes uploaded per decode step (joins + mask refreshes; zero in
+    /// steady state with the resident cache).
+    pub step_kv_up: Mutex<Histogram>,
+    /// KV bytes fetched per decode step (one decoded row per sequence).
+    pub step_kv_down: Mutex<Histogram>,
     /// End-to-end request latency (µs), recorded by the batcher.
     pub e2e: Mutex<Histogram>,
     pub requests: AtomicU64,
@@ -40,12 +118,14 @@ impl EngineMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens_out={} mean_compression={:.3}\n  prefill {}\n  decode_step {}\n  e2e {}",
+            "requests={} tokens_out={} mean_compression={:.3}\n  prefill {}\n  decode_step {}\n  step_kv_up {}\n  step_kv_down {}\n  e2e {}",
             self.requests.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
             self.mean_compression(),
             self.prefill.lock().unwrap().summary("us"),
             self.decode_step.lock().unwrap().summary("us"),
+            self.step_kv_up.lock().unwrap().summary("B"),
+            self.step_kv_down.lock().unwrap().summary("B"),
             self.e2e.lock().unwrap().summary("us"),
         )
     }
@@ -63,5 +143,21 @@ mod tests {
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
         assert_eq!(m.tokens_out.load(Ordering::Relaxed), 30);
         assert!((m.mean_compression() - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transfer_counters_roll_up() {
+        let t = TransferCounters::default();
+        t.add_up(10);
+        t.add_down(20);
+        t.add_kv_up(100);
+        t.add_kv_down(200);
+        t.mask_uploads.fetch_add(1, Ordering::Relaxed);
+        let s = t.snapshot();
+        assert_eq!(s.kv_bytes_up, 100);
+        assert_eq!(s.kv_bytes_down, 200);
+        assert_eq!(s.bytes_up, 110, "kv uploads count toward the total");
+        assert_eq!(s.bytes_down, 220);
+        assert_eq!(s.mask_uploads, 1);
     }
 }

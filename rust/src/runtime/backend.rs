@@ -1,19 +1,52 @@
 //! The execution-backend abstraction.
 //!
 //! A [`Backend`] executes manifest artifacts (prefill / decode /
-//! kvzip_score) over opaque device [`Buffer`]s. Two implementations:
+//! kvzip_score) over opaque device [`Buffer`]s, and — since the
+//! device-resident KV refactor — *owns* the decode-group KV cache between
+//! steps behind a [`KvHandle`]. Two implementations:
 //!
 //! * [`crate::runtime::reference`] — pure-Rust CPU reference (hermetic,
 //!   default): the model forward runs in-process from a deterministic
-//!   in-code weight set; buffers are host tensors.
+//!   in-code weight set; buffers are host tensors and the group cache is a
+//!   flat in-place-mutated allocation.
 //! * [`crate::runtime::pjrt`] (`--features pjrt`) — loads AOT HLO-text
 //!   artifacts and executes them on the PJRT CPU client; buffers are
-//!   device-resident `PjRtBuffer`s, so the KV cache never touches the host
-//!   between decode steps.
+//!   device-resident `PjRtBuffer`s, and the group KV cache is threaded
+//!   from one decode execution into the next without touching the host.
+//!
+//! ## KV-handle lifecycle
+//!
+//! The per-token host↔device round-trip of the original engine (re-upload
+//! the dense `[L, B, H, t_max, d_head]` caches plus keep-mask every decode
+//! step, fetch them back after) is replaced by backend-owned state:
+//!
+//! 1. **alloc** — [`Backend::kv_alloc`] reserves a zeroed group cache
+//!    (`k`/`v` of `[L, B, H, t_max, d_head]` plus a `[L, B, H, t_max]`
+//!    keep-mask) and returns an opaque [`KvHandle`].
+//! 2. **scatter** — when a sequence joins a slot,
+//!    [`Backend::kv_scatter`] writes its host `[L, H, t_max, d_head]` KV
+//!    rows into that slot, and [`Backend::kv_write_mask`] installs its
+//!    keep-mask. This is the only full-slot upload a sequence ever pays.
+//! 3. **step** — [`Backend::exec_decode_resident`] runs one decode step
+//!    *in place*: the new KV row for each slot is written into the
+//!    resident cache at its position, and that position is marked
+//!    attendable in the slot's mask (mirroring `PagedKvCache::fill`), so
+//!    steady-state decode uploads nothing but the token/pos scalars.
+//!    Cache outputs are *not* returned; see
+//!    [`crate::runtime::manifest::ArtifactMeta::resident_output_index`].
+//! 4. **mask-update** — [`Backend::kv_write_mask`] re-uploads one slot's
+//!    mask only when the coordinator's `PagedKvCache` reports evictions
+//!    (its dirty flag); a no-eviction policy performs zero mask updates
+//!    after the join.
+//! 5. **gather** — [`Backend::kv_fetch_row`] copies the one decoded
+//!    `[L, H, d_head]` row per step back to the sequence's host snapshot
+//!    (keeping join/leave free of bulk syncs), and [`Backend::kv_gather`]
+//!    fetches a whole slot on demand (snapshots, debugging).
 //!
 //! The trait is object-safe: the engine, batcher, server and benches hold a
 //! `Runtime` facade over `Box<dyn Backend>` and are generic over backends
-//! without generics infecting their signatures.
+//! without generics infecting their signatures. Transfer byte-accounting
+//! lives in the facade (`Runtime`), not in the backends.
 
 use anyhow::{anyhow, Result};
 
@@ -51,7 +84,42 @@ impl Buffer {
     }
 }
 
-/// An execution backend: runs artifacts, moves data on/off the "device".
+/// Opaque handle to a backend-owned decode-group KV cache (k/v of
+/// `[layers, batch, heads, t_max, d_head]` plus a `[layers, batch, heads,
+/// t_max]` keep-mask). Created by [`Backend::kv_alloc`]; the dims are
+/// recorded so callers and backends can size and validate transfers.
+/// Not `Clone`: the owner (the engine's `DecodeGroup`) frees it via
+/// [`Backend::kv_free`].
+#[derive(Debug)]
+pub struct KvHandle {
+    pub(crate) id: u64,
+    pub layers: usize,
+    pub batch: usize,
+    pub heads: usize,
+    pub t_max: usize,
+    pub d_head: usize,
+}
+
+impl KvHandle {
+    /// f32 element count of one slot's k (or v) rows: `[L, H, t_max, D]`.
+    pub fn slot_elems(&self) -> usize {
+        self.layers * self.heads * self.t_max * self.d_head
+    }
+
+    /// f32 element count of one slot's keep-mask: `[L, H, t_max]`.
+    pub fn mask_elems(&self) -> usize {
+        self.layers * self.heads * self.t_max
+    }
+
+    /// f32 element count of one decoded row in one slot: `[L, H, D]`.
+    pub fn row_elems(&self) -> usize {
+        self.layers * self.heads * self.d_head
+    }
+}
+
+/// An execution backend: runs artifacts, moves data on/off the "device",
+/// and owns decode-group KV caches between steps (see module docs for the
+/// handle lifecycle).
 pub trait Backend: Send + Sync {
     /// Short backend identifier ("reference" / "pjrt").
     fn name(&self) -> &'static str;
@@ -67,4 +135,60 @@ pub trait Backend: Send + Sync {
 
     /// Fetch an output buffer to the host as an f32 tensor.
     fn fetch_f32(&self, buf: &Buffer, shape: &[usize]) -> Result<Tensor>;
+
+    // ---- backend-owned KV cache (device-resident decode) ----------------
+
+    /// Allocate a zeroed group KV cache (k, v, keep-mask) for `batch`
+    /// decode slots.
+    fn kv_alloc(
+        &self,
+        layers: usize,
+        batch: usize,
+        heads: usize,
+        t_max: usize,
+        d_head: usize,
+    ) -> Result<KvHandle>;
+
+    /// Release a group cache. Unknown/already-freed handles are a no-op.
+    fn kv_free(&self, h: &KvHandle);
+
+    /// Write one sequence's KV rows into slot `slot` (join). `k`/`v` are
+    /// host `[L, H, t_max, D]` f32 rows.
+    fn kv_scatter(&self, h: &KvHandle, slot: usize, k: &[f32], v: &[f32]) -> Result<()>;
+
+    /// Install slot `slot`'s keep-mask (`[L, H, t_max]` f32, 1.0 =
+    /// attendable). Called on join and after evictions; steady-state
+    /// decode never calls it (the backend marks the decoded position
+    /// attendable itself).
+    fn kv_write_mask(&self, h: &KvHandle, slot: usize, mask: &[f32]) -> Result<()>;
+
+    /// Copy the decoded KV row at `pos` of slot `slot` to the host:
+    /// `k_row`/`v_row` are `[L, H, D]` f32. This is the only per-step KV
+    /// transfer of the resident decode path.
+    fn kv_fetch_row(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        pos: usize,
+        k_row: &mut [f32],
+        v_row: &mut [f32],
+    ) -> Result<()>;
+
+    /// Fetch slot `slot`'s full KV rows back to the host (`[L, H, t_max,
+    /// D]` each) — snapshot/leave path, not used during steady decode.
+    fn kv_gather(&self, h: &KvHandle, slot: usize, k: &mut [f32], v: &mut [f32]) -> Result<()>;
+
+    /// One decode step over the resident group cache `h`: `tokens`/`pos`
+    /// are `[batch]`. The new KV row of every slot is written in place at
+    /// its `pos` and that position becomes attendable in the slot's mask.
+    /// Returns the decode artifact's outputs in manifest order *minus* the
+    /// `kcache`/`vcache` entries (which stay resident) — index them with
+    /// [`ArtifactMeta::resident_output_index`].
+    fn exec_decode_resident(
+        &self,
+        meta: &ArtifactMeta,
+        tokens: &[i32],
+        pos: &[i32],
+        h: &KvHandle,
+    ) -> Result<Vec<Buffer>>;
 }

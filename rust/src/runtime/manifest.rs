@@ -66,6 +66,29 @@ impl ArtifactMeta {
             .position(|o| o.name == name)
             .ok_or_else(|| anyhow!("artifact {} has no output '{name}'", self.name))
     }
+
+    /// Output index in a *resident* decode result
+    /// ([`crate::runtime::Backend::exec_decode_resident`]): manifest
+    /// output order with the `kcache`/`vcache` entries removed, since those
+    /// stay backend-resident and are never returned.
+    pub fn resident_output_index(&self, name: &str) -> Result<usize> {
+        if name == "kcache" || name == "vcache" {
+            return Err(anyhow!(
+                "artifact {}: '{name}' stays backend-resident (use kv_fetch_row/kv_gather)",
+                self.name
+            ));
+        }
+        let mut idx = 0;
+        for o in &self.outputs {
+            if o.name == name {
+                return Ok(idx);
+            }
+            if o.name != "kcache" && o.name != "vcache" {
+                idx += 1;
+            }
+        }
+        Err(anyhow!("artifact {} has no output '{name}'", self.name))
+    }
 }
 
 #[derive(Debug, Clone)]

@@ -26,13 +26,16 @@ pub mod reference;
 pub mod tensor;
 
 use std::collections::HashMap;
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-pub use backend::{Arg, Backend, Buffer};
+pub use backend::{Arg, Backend, Buffer, KvHandle};
 pub use manifest::{ArtifactMeta, Manifest};
 pub use tensor::Tensor;
+
+use crate::metrics::TransferCounters;
 
 /// A resolved artifact handle: the manifest metadata the engine indexes
 /// outputs by. Compilation state (for backends that compile) lives in the
@@ -45,6 +48,9 @@ pub struct Runtime {
     pub manifest: Manifest,
     backend: Box<dyn Backend>,
     exes: Mutex<HashMap<String, Arc<Executable>>>,
+    /// Host↔device transfer accounting; every upload/fetch/KV op below
+    /// rolls its byte count in here (see `metrics::TransferCounters`).
+    pub transfer: TransferCounters,
 }
 
 impl Runtime {
@@ -54,6 +60,18 @@ impl Runtime {
             manifest: reference::reference_manifest(),
             backend: Box::new(reference::ReferenceBackend::new()),
             exes: Mutex::new(HashMap::new()),
+            transfer: TransferCounters::default(),
+        }
+    }
+
+    /// The reference runtime with a non-default cache capacity — the
+    /// decode bench sweeps `t_max` to measure how transfer volume scales.
+    pub fn reference_with_t_max(t_max: usize) -> Runtime {
+        Runtime {
+            manifest: reference::reference_manifest_with(t_max),
+            backend: Box::new(reference::ReferenceBackend::with_t_max(t_max)),
+            exes: Mutex::new(HashMap::new()),
+            transfer: TransferCounters::default(),
         }
     }
 
@@ -63,7 +81,12 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         let backend = pjrt::PjrtBackend::load(&dir, &manifest)?;
-        Ok(Runtime { manifest, backend: Box::new(backend), exes: Mutex::new(HashMap::new()) })
+        Ok(Runtime {
+            manifest,
+            backend: Box::new(backend),
+            exes: Mutex::new(HashMap::new()),
+            transfer: TransferCounters::default(),
+        })
     }
 
     /// Best available backend: PJRT when compiled in and artifacts exist,
@@ -114,16 +137,78 @@ impl Runtime {
     }
 
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        self.transfer.add_up(4 * data.len() as u64);
         self.backend.upload_f32(data, dims)
     }
 
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        self.transfer.add_up(4 * data.len() as u64);
         self.backend.upload_i32(data, dims)
     }
 
     /// Fetch an output buffer to the host as an f32 tensor.
     pub fn fetch_f32(&self, buf: &Buffer, shape: &[usize]) -> Result<Tensor> {
+        self.transfer.add_down(4 * shape.iter().product::<usize>() as u64);
         self.backend.fetch_f32(buf, shape)
+    }
+
+    // ---- backend-owned KV cache (see backend.rs module docs) ------------
+
+    /// Allocate a zeroed decode-group KV cache on the backend.
+    pub fn kv_alloc(&self, batch: usize) -> Result<KvHandle> {
+        let m = &self.manifest.model;
+        self.backend.kv_alloc(m.n_layers, batch, m.n_kv_heads, m.t_max, m.d_head)
+    }
+
+    pub fn kv_free(&self, h: &KvHandle) {
+        self.backend.kv_free(h);
+    }
+
+    /// Scatter one sequence's `[L, H, t_max, D]` KV rows into `slot`.
+    pub fn kv_scatter(&self, h: &KvHandle, slot: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        self.transfer.add_kv_up(4 * (k.len() + v.len()) as u64);
+        self.backend.kv_scatter(h, slot, k, v)
+    }
+
+    /// Install `slot`'s keep-mask (`[L, H, t_max]`).
+    pub fn kv_write_mask(&self, h: &KvHandle, slot: usize, mask: &[f32]) -> Result<()> {
+        self.transfer.mask_uploads.fetch_add(1, Ordering::Relaxed);
+        self.transfer.add_kv_up(4 * mask.len() as u64);
+        self.backend.kv_write_mask(h, slot, mask)
+    }
+
+    /// Fetch the decoded `[L, H, D]` row at `pos` of `slot` to the host.
+    pub fn kv_fetch_row(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        pos: usize,
+        k_row: &mut [f32],
+        v_row: &mut [f32],
+    ) -> Result<()> {
+        self.transfer.add_kv_down(4 * (k_row.len() + v_row.len()) as u64);
+        self.backend.kv_fetch_row(h, slot, pos, k_row, v_row)
+    }
+
+    /// Fetch `slot`'s full `[L, H, t_max, D]` KV rows to the host.
+    pub fn kv_gather(&self, h: &KvHandle, slot: usize, k: &mut [f32], v: &mut [f32]) -> Result<()> {
+        self.transfer.add_kv_down(4 * (k.len() + v.len()) as u64);
+        self.backend.kv_gather(h, slot, k, v)
+    }
+
+    /// One decode step over the resident group `h`. Returns the artifact
+    /// outputs minus the resident `kcache`/`vcache` — index with
+    /// [`ArtifactMeta::resident_output_index`].
+    pub fn exec_decode_resident(
+        &self,
+        exe: &Executable,
+        tokens: &[i32],
+        pos: &[i32],
+        h: &KvHandle,
+    ) -> Result<Vec<Buffer>> {
+        self.transfer.add_up(4 * (tokens.len() + pos.len()) as u64);
+        self.transfer.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.backend.exec_decode_resident(&exe.meta, tokens, pos, h)
     }
 }
 

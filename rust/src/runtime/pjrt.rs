@@ -12,17 +12,55 @@
 //!
 //! Building with this feature requires the vendored `xla` crate — see the
 //! commented dependency in rust/Cargo.toml.
+//!
+//! ## Device-resident decode groups
+//!
+//! The KV-handle ops keep a decode group's `kcache`/`vcache` as
+//! `PjRtBuffer`s threaded from one decode execution into the next: the
+//! artifact's cache *outputs* become the next step's cache *inputs*, so
+//! steady-state decode moves no KV bytes over the host boundary. Host
+//! shadows back the buffers for scatter/gather (PJRT has no partial-update
+//! API, so a join re-uploads the group after syncing decoded rows back).
+//! Two artifact-shaped costs remain until the decode artifact grows
+//! dedicated outputs: the keep-mask is a plain input re-uploaded each step
+//! from its host shadow, and row fetches sync the whole cache to the
+//! shadows (once per step — a freshness flag dedups the per-sequence
+//! calls). NOTE: the `Runtime` facade counts *logical contract* bytes
+//! (one row per `kv_fetch_row`, nothing for the in-exec mask upload), so
+//! on this backend the counters under-report the interim physical traffic
+//! until the artifact revision (mask-state + row-gather outputs) lands —
+//! see the doc on `metrics::TransferCounters`.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, XlaComputation};
 
-use super::backend::{Arg, Backend, Buffer, BufferRepr};
+use super::backend::{Arg, Backend, Buffer, BufferRepr, KvHandle};
 use super::manifest::{ArtifactMeta, Manifest};
 use super::tensor::Tensor;
+
+/// One decode group: device-resident k/v plus host shadows and the
+/// keep-mask shadow (see module docs).
+struct PjrtKvGroup {
+    /// Device caches; `None` until the first resident step uploads the
+    /// shadows (and after any scatter invalidates them).
+    dk: Option<PjRtBuffer>,
+    dv: Option<PjRtBuffer>,
+    /// Host shadows `[L, B, H, t_max, D]`: authoritative whenever the
+    /// device buffers are `None`.
+    hk: Vec<f32>,
+    hv: Vec<f32>,
+    /// True while the shadows match the device buffers (or the device
+    /// buffers are absent). Cleared by each resident exec; lets the
+    /// per-sequence row fetches of one step share a single device sync.
+    host_fresh: bool,
+    /// Keep-mask host shadow `[L, B, H, t_max]`.
+    mask: Vec<f32>,
+}
 
 pub struct PjrtBackend {
     client: PjRtClient,
@@ -31,6 +69,8 @@ pub struct PjrtBackend {
     /// every execute call after the data inputs.
     weights: Vec<PjRtBuffer>,
     exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    kv: Mutex<HashMap<u64, PjrtKvGroup>>,
+    next_kv: AtomicU64,
 }
 
 impl PjrtBackend {
@@ -55,7 +95,40 @@ impl PjrtBackend {
                 .map_err(|e| anyhow!("upload weight {}: {e:?}", w.name))?;
             weights.push(buf);
         }
-        Ok(PjrtBackend { client, dir, weights, exes: Mutex::new(HashMap::new()) })
+        Ok(PjrtBackend {
+            client,
+            dir,
+            weights,
+            exes: Mutex::new(HashMap::new()),
+            kv: Mutex::new(HashMap::new()),
+            next_kv: AtomicU64::new(1),
+        })
+    }
+
+    /// Refresh the host shadows from the device buffers if they are stale
+    /// (one device round-trip shared by all of a step's row fetches).
+    fn refresh_shadows(g: &mut PjrtKvGroup) -> Result<()> {
+        if g.host_fresh {
+            return Ok(());
+        }
+        if let (Some(dk), Some(dv)) = (&g.dk, &g.dv) {
+            let lk: Literal = dk.to_literal_sync().map_err(|e| anyhow!("kv fetch k: {e:?}"))?;
+            let lv: Literal = dv.to_literal_sync().map_err(|e| anyhow!("kv fetch v: {e:?}"))?;
+            g.hk = lk.to_vec::<f32>().map_err(|e| anyhow!("kv to_vec k: {e:?}"))?;
+            g.hv = lv.to_vec::<f32>().map_err(|e| anyhow!("kv to_vec v: {e:?}"))?;
+        }
+        g.host_fresh = true;
+        Ok(())
+    }
+
+    /// Pull the device caches back into the host shadows (so a scatter can
+    /// read-modify-write without losing decoded rows), leaving the group
+    /// host-authoritative.
+    fn kv_sync_to_host(g: &mut PjrtKvGroup) -> Result<()> {
+        Self::refresh_shadows(g)?;
+        g.dk = None;
+        g.dv = None;
+        Ok(())
     }
 
     /// Compile-on-demand with caching, keyed by artifact name.
@@ -164,5 +237,200 @@ impl Backend for PjrtBackend {
             device(buf, "fetch")?.to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
         let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
         Tensor::new(data, shape.to_vec())
+    }
+
+    // ---- backend-owned KV cache -----------------------------------------
+
+    fn kv_alloc(
+        &self,
+        layers: usize,
+        batch: usize,
+        heads: usize,
+        t_max: usize,
+        d_head: usize,
+    ) -> Result<KvHandle> {
+        let id = self.next_kv.fetch_add(1, Ordering::Relaxed);
+        let elems = layers * batch * heads * t_max * d_head;
+        self.kv.lock().unwrap().insert(
+            id,
+            PjrtKvGroup {
+                dk: None,
+                dv: None,
+                hk: vec![0.0; elems],
+                hv: vec![0.0; elems],
+                host_fresh: true,
+                mask: vec![0.0; layers * batch * heads * t_max],
+            },
+        );
+        Ok(KvHandle { id, layers, batch, heads, t_max, d_head })
+    }
+
+    fn kv_free(&self, h: &KvHandle) {
+        self.kv.lock().unwrap().remove(&h.id);
+    }
+
+    fn kv_scatter(&self, h: &KvHandle, slot: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        if k.len() != h.slot_elems() || v.len() != h.slot_elems() {
+            return Err(anyhow!("kv_scatter: rows have {} elems, want {}", k.len(), h.slot_elems()));
+        }
+        let mut kv = self.kv.lock().unwrap();
+        let g = kv.get_mut(&h.id).ok_or_else(|| anyhow!("kv handle {} unknown", h.id))?;
+        Self::kv_sync_to_host(g)?;
+        let chunk = h.t_max * h.d_head;
+        for l in 0..h.layers {
+            for hh in 0..h.heads {
+                let src = (l * h.heads + hh) * chunk;
+                let dst = ((l * h.batch + slot) * h.heads + hh) * chunk;
+                g.hk[dst..dst + chunk].copy_from_slice(&k[src..src + chunk]);
+                g.hv[dst..dst + chunk].copy_from_slice(&v[src..src + chunk]);
+            }
+        }
+        Ok(())
+    }
+
+    fn kv_write_mask(&self, h: &KvHandle, slot: usize, mask: &[f32]) -> Result<()> {
+        if mask.len() != h.mask_elems() {
+            return Err(anyhow!("kv_write_mask: {} elems, want {}", mask.len(), h.mask_elems()));
+        }
+        let mut kv = self.kv.lock().unwrap();
+        let g = kv.get_mut(&h.id).ok_or_else(|| anyhow!("kv handle {} unknown", h.id))?;
+        for l in 0..h.layers {
+            for hh in 0..h.heads {
+                let src = (l * h.heads + hh) * h.t_max;
+                let dst = ((l * h.batch + slot) * h.heads + hh) * h.t_max;
+                g.mask[dst..dst + h.t_max].copy_from_slice(&mask[src..src + h.t_max]);
+            }
+        }
+        Ok(())
+    }
+
+    fn kv_fetch_row(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        pos: usize,
+        k_row: &mut [f32],
+        v_row: &mut [f32],
+    ) -> Result<()> {
+        let mut kv = self.kv.lock().unwrap();
+        let g = kv.get_mut(&h.id).ok_or_else(|| anyhow!("kv handle {} unknown", h.id))?;
+        // No row-slice fetch in the PJRT API: refresh the shadows (one sync
+        // shared by every row fetch of this step — the device copy stays
+        // authoritative) and slice from them.
+        Self::refresh_shadows(g)?;
+        let d = h.d_head;
+        for l in 0..h.layers {
+            for hh in 0..h.heads {
+                let src = (((l * h.batch + slot) * h.heads + hh) * h.t_max + pos) * d;
+                let dst = (l * h.heads + hh) * d;
+                k_row[dst..dst + d].copy_from_slice(&g.hk[src..src + d]);
+                v_row[dst..dst + d].copy_from_slice(&g.hv[src..src + d]);
+            }
+        }
+        Ok(())
+    }
+
+    fn kv_gather(&self, h: &KvHandle, slot: usize, k: &mut [f32], v: &mut [f32]) -> Result<()> {
+        let mut kv = self.kv.lock().unwrap();
+        let g = kv.get_mut(&h.id).ok_or_else(|| anyhow!("kv handle {} unknown", h.id))?;
+        Self::refresh_shadows(g)?;
+        let chunk = h.t_max * h.d_head;
+        for l in 0..h.layers {
+            for hh in 0..h.heads {
+                let src = ((l * h.batch + slot) * h.heads + hh) * chunk;
+                let dst = (l * h.heads + hh) * chunk;
+                k[dst..dst + chunk].copy_from_slice(&g.hk[src..src + chunk]);
+                v[dst..dst + chunk].copy_from_slice(&g.hv[src..src + chunk]);
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_decode_resident(
+        &self,
+        meta: &ArtifactMeta,
+        tokens: &[i32],
+        pos: &[i32],
+        h: &KvHandle,
+    ) -> Result<Vec<Buffer>> {
+        self.compile(meta)?;
+        let b = meta.batch;
+        let mut kv = self.kv.lock().unwrap();
+        let g = kv.get_mut(&h.id).ok_or_else(|| anyhow!("kv handle {} unknown", h.id))?;
+        // (re)materialize the device caches from the shadows if a scatter
+        // invalidated them (or this is the first step)
+        if g.dk.is_none() {
+            let dims = [h.layers, h.batch, h.heads, h.t_max, h.d_head];
+            g.dk = Some(
+                self.client
+                    .buffer_from_host_buffer(&g.hk, &dims, None)
+                    .map_err(|e| anyhow!("kv upload k: {e:?}"))?,
+            );
+            g.dv = Some(
+                self.client
+                    .buffer_from_host_buffer(&g.hv, &dims, None)
+                    .map_err(|e| anyhow!("kv upload v: {e:?}"))?,
+            );
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(tokens, &[b], None)
+            .map_err(|e| anyhow!("upload tokens: {e:?}"))?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(pos, &[b], None)
+            .map_err(|e| anyhow!("upload pos: {e:?}"))?;
+        let mask_buf = self
+            .client
+            .buffer_from_host_buffer(&g.mask, &[h.layers, h.batch, h.heads, h.t_max], None)
+            .map_err(|e| anyhow!("upload mask: {e:?}"))?;
+        let mut refs: Vec<&PjRtBuffer> = vec![
+            &tok_buf,
+            &pos_buf,
+            g.dk.as_ref().unwrap(),
+            g.dv.as_ref().unwrap(),
+            &mask_buf,
+        ];
+        refs.extend(self.weights.iter());
+        let mut outs = {
+            let exes = self.exes.lock().unwrap();
+            let exe = exes.get(&meta.name).expect("compiled above");
+            exe.execute_b(&refs).map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?
+        };
+        let replica = outs
+            .pop()
+            .ok_or_else(|| anyhow!("no replica outputs from {}", meta.name))?;
+        if replica.len() != meta.outputs.len() {
+            return Err(anyhow!(
+                "artifact {}: {} outputs returned, manifest says {}",
+                meta.name,
+                replica.len(),
+                meta.outputs.len()
+            ));
+        }
+        // cache outputs stay resident (they are next step's inputs); the
+        // rest go back to the caller in resident output order
+        let mut rest = vec![];
+        for (spec, buf) in meta.outputs.iter().zip(replica.into_iter()) {
+            match spec.name.as_str() {
+                "kcache" => g.dk = Some(buf),
+                "vcache" => g.dv = Some(buf),
+                _ => rest.push(Buffer(BufferRepr::Pjrt(buf))),
+            }
+        }
+        // the step rewrote the device caches: shadows are stale until the
+        // next refresh (shared by this step's row fetches)
+        g.host_fresh = false;
+        // the decoded rows are attendable from the next step on (mirrors
+        // PagedKvCache::fill)
+        for s in 0..b {
+            let p = (pos[s].max(0) as usize).min(h.t_max - 1);
+            for l in 0..h.layers {
+                for hh in 0..h.heads {
+                    g.mask[((l * h.batch + s) * h.heads + hh) * h.t_max + p] = 1.0;
+                }
+            }
+        }
+        Ok(rest)
     }
 }

@@ -38,9 +38,13 @@
 
 #![allow(clippy::needless_range_loop)]
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
 use anyhow::{anyhow, Result};
 
-use super::backend::{Arg, Backend, Buffer, BufferRepr};
+use super::backend::{Arg, Backend, Buffer, BufferRepr, KvHandle};
 use super::manifest::{ArtifactMeta, Buckets, IoSpec, Manifest, ModelDims, SpecialTokens};
 use super::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -56,6 +60,8 @@ const GRP: usize = HQ / HKV;
 const D: usize = 8; // head dim
 const HALF: usize = D / 2;
 const DSUR: usize = 8; // surrogate MLP hidden width
+/// Default cache capacity; [`ReferenceBackend::with_t_max`] overrides it
+/// (the decode cost model scales with t_max, which the decode bench sweeps).
 const T_MAX: usize = 512;
 const D_INT: usize = 64; // reported for the flops table; FFN is identity
 pub const WINDOW: usize = 16;
@@ -526,6 +532,7 @@ struct DecodeScratch {
 #[allow(clippy::too_many_arguments)]
 fn decode_slot(
     w: &RefWeights,
+    t_max: usize,
     token: i32,
     pos: usize,
     slot: usize,
@@ -536,14 +543,14 @@ fn decode_slot(
     out: &mut DecodeScratch,
 ) {
     let b = token.clamp(0, V as i32 - 1) as usize;
-    let pos = pos.min(T_MAX - 1);
+    let pos = pos.min(t_max - 1);
     let mut h = [0.0f32; DM];
     h.copy_from_slice(&w.emb[b * DM..b * DM + DM]);
     let (cos, sin) = rope_angles(pos as f32);
     let scale = 1.0 / (D as f32).sqrt();
     let mut x = [0.0f32; DM];
-    let mut row = vec![0.0f32; T_MAX + 1];
-    let mut keep = vec![0usize; T_MAX + 1];
+    let mut row = vec![0.0f32; t_max + 1];
+    let mut keep = vec![0usize; t_max + 1];
 
     for l in 0..L {
         // surrogate scores from the layer input
@@ -601,24 +608,24 @@ fn decode_slot(
 
         let mut attn_out = [0.0f32; HQ * D];
         for kv in 0..HKV {
-            let mbase = ((l * batch + slot) * HKV + kv) * T_MAX;
+            let mbase = ((l * batch + slot) * HKV + kv) * t_max;
             let cbase = mbase * D;
             // attendable positions: masked cache rows + the appended new KV
             let mut nkeep = 0;
-            for s in 0..T_MAX {
+            for s in 0..t_max {
                 if mask[mbase + s] > 0.0 {
                     keep[nkeep] = s;
                     nkeep += 1;
                 }
             }
-            keep[nkeep] = T_MAX; // virtual appended row
+            keep[nkeep] = t_max; // virtual appended row
             nkeep += 1;
             for g in 0..GRP {
                 let qh = kv * GRP + g;
                 let qv = &q[qh * D..qh * D + D];
                 let mut m = f32::NEG_INFINITY;
                 for (i, &s) in keep[..nkeep].iter().enumerate() {
-                    let sc = if s == T_MAX {
+                    let sc = if s == t_max {
                         dot8(qv, &kn[kv * D..kv * D + D])
                     } else {
                         dot8(qv, &kc[cbase + s * D..cbase + s * D + D])
@@ -637,7 +644,7 @@ fn decode_slot(
                 let inv = 1.0 / sum;
                 for (i, &s) in keep[..nkeep].iter().enumerate() {
                     let a = row[i] * inv;
-                    let vrow = if s == T_MAX {
+                    let vrow = if s == t_max {
                         &vn[kv * D..kv * D + D]
                     } else {
                         &vc[cbase + s * D..cbase + s * D + D]
@@ -645,7 +652,7 @@ fn decode_slot(
                     for d in 0..D {
                         attn_out[qh * D + d] += a * vrow[d];
                     }
-                    out.attn_row[((l * batch + slot) * HKV + kv) * (T_MAX + 1) + s] += a;
+                    out.attn_row[((l * batch + slot) * HKV + kv) * (t_max + 1) + s] += a;
                 }
             }
             // vnorm statistic for the new KV pair
@@ -686,25 +693,62 @@ fn decode_slot(
 
 // ----------------------------------------------------------- backend plumbing
 
+/// One backend-owned decode-group cache: k/v `[L, B, H, t_max, D]` plus
+/// keep-mask `[L, B, H, t_max]`, mutated in place by the resident decode
+/// path (no per-step cloning — the group layout is identical to what the
+/// decode artifact consumes, so `decode_slot` runs directly on it).
+struct RefKvGroup {
+    batch: usize,
+    t_max: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    mask: Vec<f32>,
+}
+
 pub struct ReferenceBackend {
     w: RefWeights,
+    t_max: usize,
+    kv: Mutex<HashMap<u64, Arc<Mutex<RefKvGroup>>>>,
+    next_kv: AtomicU64,
 }
 
 impl ReferenceBackend {
     pub fn new() -> ReferenceBackend {
-        ReferenceBackend { w: gen_weights() }
+        Self::with_t_max(T_MAX)
+    }
+
+    /// A reference backend with a non-default cache capacity (the decode
+    /// bench sweeps t_max; the model semantics are unchanged).
+    pub fn with_t_max(t_max: usize) -> ReferenceBackend {
+        assert!(t_max >= *PREFILL_T.iter().max().unwrap(), "t_max below the prefill buckets");
+        ReferenceBackend {
+            w: gen_weights(),
+            t_max,
+            kv: Mutex::new(HashMap::new()),
+            next_kv: AtomicU64::new(1),
+        }
+    }
+
+    fn group(&self, h: &KvHandle) -> Result<Arc<Mutex<RefKvGroup>>> {
+        self.kv
+            .lock()
+            .unwrap()
+            .get(&h.id)
+            .cloned()
+            .ok_or_else(|| anyhow!("kv handle {} unknown (freed?)", h.id))
     }
 
     fn exec_prefill(&self, meta: &ArtifactMeta, data: &[Arg]) -> Result<Vec<Buffer>> {
+        let t_max = self.t_max;
         let (b, t) = (meta.batch, meta.t);
         let tokens = arg_i32(data, 0, b * t)?;
         let lens = arg_i32(data, 1, b)?;
         let mut logits = vec![0.0f32; b * V];
-        let mut kcache = vec![0.0f32; L * b * HKV * T_MAX * D];
-        let mut vcache = vec![0.0f32; L * b * HKV * T_MAX * D];
-        let mut stats: Vec<Vec<f32>> = (0..8).map(|_| vec![0.0f32; L * b * HKV * T_MAX]).collect();
+        let mut kcache = vec![0.0f32; L * b * HKV * t_max * D];
+        let mut vcache = vec![0.0f32; L * b * HKV * t_max * D];
+        let mut stats: Vec<Vec<f32>> = (0..8).map(|_| vec![0.0f32; L * b * HKV * t_max]).collect();
         for s in 0..b {
-            let n = (lens[s].max(1) as usize).min(t).min(T_MAX);
+            let n = (lens[s].max(1) as usize).min(t).min(t_max);
             let one = prefill_one(&self.w, &tokens[s * t..s * t + n], 0);
             logits[s * V..s * V + V].copy_from_slice(&one.logits);
             let srcs = [
@@ -721,10 +765,10 @@ impl ReferenceBackend {
                 for kv in 0..HKV {
                     let src = (l * HKV + kv) * n;
                     for (st, out) in srcs.iter().zip(stats.iter_mut()) {
-                        let dst = ((l * b + s) * HKV + kv) * T_MAX;
+                        let dst = ((l * b + s) * HKV + kv) * t_max;
                         out[dst..dst + n].copy_from_slice(&st[src..src + n]);
                     }
-                    let cdst = (((l * b + s) * HKV + kv) * T_MAX) * D;
+                    let cdst = (((l * b + s) * HKV + kv) * t_max) * D;
                     kcache[cdst..cdst + n * D].copy_from_slice(&one.k[src * D..(src + n) * D]);
                     vcache[cdst..cdst + n * D].copy_from_slice(&one.v[src * D..(src + n) * D]);
                 }
@@ -732,41 +776,51 @@ impl ReferenceBackend {
         }
         let mut outs = vec![
             host(logits, vec![b, V])?,
-            host(kcache, vec![L, b, HKV, T_MAX, D])?,
-            host(vcache, vec![L, b, HKV, T_MAX, D])?,
+            host(kcache, vec![L, b, HKV, t_max, D])?,
+            host(vcache, vec![L, b, HKV, t_max, D])?,
         ];
         for st in stats {
-            outs.push(host(st, vec![L, b, HKV, T_MAX])?);
+            outs.push(host(st, vec![L, b, HKV, t_max])?);
         }
         Ok(outs)
     }
 
+    fn decode_scratch(&self, b: usize) -> DecodeScratch {
+        DecodeScratch {
+            logits: vec![0.0; b * V],
+            score_lin: vec![0.0; L * b * HKV],
+            score_mlp: vec![0.0; L * b * HKV],
+            vnorm: vec![0.0; L * b * HKV],
+            attn_row: vec![0.0; L * b * HKV * (self.t_max + 1)],
+        }
+    }
+
+    /// Legacy buffer-threading decode (`rt.exec` on a decode artifact):
+    /// inputs are immutable buffers, so the caches are cloned per step.
+    /// The resident path ([`Self::exec_decode_resident`]) mutates the
+    /// backend-owned group in place instead and is what the engine uses.
     fn exec_decode(&self, meta: &ArtifactMeta, data: &[Arg]) -> Result<Vec<Buffer>> {
+        let t_max = self.t_max;
         let b = meta.batch;
         let tokens = arg_i32(data, 0, b)?;
         let pos = arg_i32(data, 1, b)?;
         let kc_in = arg_buf(data, 2)?;
         let vc_in = arg_buf(data, 3)?;
         let mask = arg_buf(data, 4)?;
-        let cache_len = L * b * HKV * T_MAX * D;
+        let cache_len = L * b * HKV * t_max * D;
         if kc_in.data.len() != cache_len || vc_in.data.len() != cache_len {
             return Err(anyhow!("decode_b{b}: cache buffer has wrong size"));
         }
-        if mask.data.len() != L * b * HKV * T_MAX {
+        if mask.data.len() != L * b * HKV * t_max {
             return Err(anyhow!("decode_b{b}: mask buffer has wrong size"));
         }
         let mut kc = kc_in.data.clone();
         let mut vc = vc_in.data.clone();
-        let mut scratch = DecodeScratch {
-            logits: vec![0.0; b * V],
-            score_lin: vec![0.0; L * b * HKV],
-            score_mlp: vec![0.0; L * b * HKV],
-            vnorm: vec![0.0; L * b * HKV],
-            attn_row: vec![0.0; L * b * HKV * (T_MAX + 1)],
-        };
+        let mut scratch = self.decode_scratch(b);
         for s in 0..b {
             decode_slot(
                 &self.w,
+                t_max,
                 tokens[s],
                 pos[s].max(0) as usize,
                 s,
@@ -779,12 +833,12 @@ impl ReferenceBackend {
         }
         Ok(vec![
             host(scratch.logits, vec![b, V])?,
-            host(kc, vec![L, b, HKV, T_MAX, D])?,
-            host(vc, vec![L, b, HKV, T_MAX, D])?,
+            host(kc, vec![L, b, HKV, t_max, D])?,
+            host(vc, vec![L, b, HKV, t_max, D])?,
             host(scratch.score_lin, vec![L, b, HKV])?,
             host(scratch.score_mlp, vec![L, b, HKV])?,
             host(scratch.vnorm, vec![L, b, HKV])?,
-            host(scratch.attn_row, vec![L, b, HKV, T_MAX + 1])?,
+            host(scratch.attn_row, vec![L, b, HKV, t_max + 1])?,
         ])
     }
 
@@ -867,6 +921,190 @@ impl Backend for ReferenceBackend {
         }
         Tensor::new(t.data.clone(), shape.to_vec())
     }
+
+    // ---- backend-owned KV cache -----------------------------------------
+
+    fn kv_alloc(
+        &self,
+        layers: usize,
+        batch: usize,
+        heads: usize,
+        t_max: usize,
+        d_head: usize,
+    ) -> Result<KvHandle> {
+        if (layers, heads, d_head) != (L, HKV, D) || t_max != self.t_max {
+            return Err(anyhow!(
+                "kv_alloc: dims [{layers}, {batch}, {heads}, {t_max}, {d_head}] do not match \
+                 the reference model [{L}, _, {HKV}, {}, {D}]",
+                self.t_max
+            ));
+        }
+        let id = self.next_kv.fetch_add(1, Ordering::Relaxed);
+        let elems = layers * batch * heads * t_max * d_head;
+        self.kv.lock().unwrap().insert(
+            id,
+            Arc::new(Mutex::new(RefKvGroup {
+                batch,
+                t_max,
+                k: vec![0.0; elems],
+                v: vec![0.0; elems],
+                mask: vec![0.0; layers * batch * heads * t_max],
+            })),
+        );
+        Ok(KvHandle { id, layers, batch, heads, t_max, d_head })
+    }
+
+    fn kv_free(&self, h: &KvHandle) {
+        self.kv.lock().unwrap().remove(&h.id);
+    }
+
+    fn kv_scatter(&self, h: &KvHandle, slot: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        if k.len() != h.slot_elems() || v.len() != h.slot_elems() {
+            return Err(anyhow!("kv_scatter: rows have {} elems, want {}", k.len(), h.slot_elems()));
+        }
+        let g = self.group(h)?;
+        let mut g = g.lock().unwrap();
+        check_slot(&g, h, slot)?;
+        let chunk = h.t_max * h.d_head;
+        for l in 0..h.layers {
+            for hh in 0..h.heads {
+                let src = (l * h.heads + hh) * chunk;
+                let dst = ((l * g.batch + slot) * h.heads + hh) * chunk;
+                g.k[dst..dst + chunk].copy_from_slice(&k[src..src + chunk]);
+                g.v[dst..dst + chunk].copy_from_slice(&v[src..src + chunk]);
+            }
+        }
+        Ok(())
+    }
+
+    fn kv_write_mask(&self, h: &KvHandle, slot: usize, mask: &[f32]) -> Result<()> {
+        if mask.len() != h.mask_elems() {
+            return Err(anyhow!("kv_write_mask: {} elems, want {}", mask.len(), h.mask_elems()));
+        }
+        let g = self.group(h)?;
+        let mut g = g.lock().unwrap();
+        check_slot(&g, h, slot)?;
+        for l in 0..h.layers {
+            for hh in 0..h.heads {
+                let src = (l * h.heads + hh) * h.t_max;
+                let dst = ((l * g.batch + slot) * h.heads + hh) * h.t_max;
+                g.mask[dst..dst + h.t_max].copy_from_slice(&mask[src..src + h.t_max]);
+            }
+        }
+        Ok(())
+    }
+
+    fn kv_fetch_row(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        pos: usize,
+        k_row: &mut [f32],
+        v_row: &mut [f32],
+    ) -> Result<()> {
+        if k_row.len() != h.row_elems() || v_row.len() != h.row_elems() {
+            return Err(anyhow!("kv_fetch_row: {} elems, want {}", k_row.len(), h.row_elems()));
+        }
+        if pos >= h.t_max {
+            return Err(anyhow!("kv_fetch_row: pos {pos} >= t_max {}", h.t_max));
+        }
+        let g = self.group(h)?;
+        let g = g.lock().unwrap();
+        check_slot(&g, h, slot)?;
+        let d = h.d_head;
+        for l in 0..h.layers {
+            for hh in 0..h.heads {
+                let src = (((l * g.batch + slot) * h.heads + hh) * h.t_max + pos) * d;
+                let dst = (l * h.heads + hh) * d;
+                k_row[dst..dst + d].copy_from_slice(&g.k[src..src + d]);
+                v_row[dst..dst + d].copy_from_slice(&g.v[src..src + d]);
+            }
+        }
+        Ok(())
+    }
+
+    fn kv_gather(&self, h: &KvHandle, slot: usize, k: &mut [f32], v: &mut [f32]) -> Result<()> {
+        if k.len() != h.slot_elems() || v.len() != h.slot_elems() {
+            return Err(anyhow!("kv_gather: {} elems, want {}", k.len(), h.slot_elems()));
+        }
+        let g = self.group(h)?;
+        let g = g.lock().unwrap();
+        check_slot(&g, h, slot)?;
+        let chunk = h.t_max * h.d_head;
+        for l in 0..h.layers {
+            for hh in 0..h.heads {
+                let src = ((l * g.batch + slot) * h.heads + hh) * chunk;
+                let dst = (l * h.heads + hh) * chunk;
+                k[dst..dst + chunk].copy_from_slice(&g.k[src..src + chunk]);
+                v[dst..dst + chunk].copy_from_slice(&g.v[src..src + chunk]);
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_decode_resident(
+        &self,
+        meta: &ArtifactMeta,
+        tokens: &[i32],
+        pos: &[i32],
+        h: &KvHandle,
+    ) -> Result<Vec<Buffer>> {
+        let t_max = self.t_max;
+        let b = meta.batch;
+        if meta.kind != "decode" {
+            return Err(anyhow!("exec_decode_resident on non-decode artifact {}", meta.name));
+        }
+        if tokens.len() != b || pos.len() != b || h.batch != b {
+            return Err(anyhow!(
+                "exec_decode_resident: batch mismatch (artifact {b}, tokens {}, handle {})",
+                tokens.len(),
+                h.batch
+            ));
+        }
+        let g = self.group(h)?;
+        let mut g = g.lock().unwrap();
+        let mut scratch = self.decode_scratch(b);
+        let RefKvGroup { k, v, mask, .. } = &mut *g;
+        for s in 0..b {
+            decode_slot(
+                &self.w,
+                t_max,
+                tokens[s],
+                pos[s].max(0) as usize,
+                s,
+                b,
+                k,
+                v,
+                mask,
+                &mut scratch,
+            );
+        }
+        // the decoded row is attendable from the next step on (mirrors
+        // PagedKvCache::fill — joins overwrite vacant-slot leftovers)
+        for s in 0..b {
+            let p = (pos[s].max(0) as usize).min(t_max - 1);
+            for l in 0..L {
+                for hh in 0..HKV {
+                    mask[((l * b + s) * HKV + hh) * t_max + p] = 1.0;
+                }
+            }
+        }
+        Ok(vec![
+            host(scratch.logits, vec![b, V])?,
+            host(scratch.score_lin, vec![L, b, HKV])?,
+            host(scratch.score_mlp, vec![L, b, HKV])?,
+            host(scratch.vnorm, vec![L, b, HKV])?,
+            host(scratch.attn_row, vec![L, b, HKV, t_max + 1])?,
+        ])
+    }
+}
+
+fn check_slot(g: &RefKvGroup, h: &KvHandle, slot: usize) -> Result<()> {
+    debug_assert_eq!(g.t_max, h.t_max);
+    if slot >= g.batch {
+        return Err(anyhow!("slot {slot} out of range (batch {})", g.batch));
+    }
+    Ok(())
 }
 
 // ------------------------------------------------------------------- manifest
@@ -880,17 +1118,23 @@ fn io(name: &str, shape: Vec<usize>, dtype: &str) -> IoSpec {
 /// resolution, output indexing, benches) is exercised identically on both
 /// backends.
 pub fn reference_manifest() -> Manifest {
+    reference_manifest_with(T_MAX)
+}
+
+/// The reference manifest with a non-default cache capacity (pair with
+/// [`ReferenceBackend::with_t_max`]).
+pub fn reference_manifest_with(t_max: usize) -> Manifest {
     let mut artifacts = std::collections::HashMap::new();
     let stat_outputs = |b: usize| -> Vec<IoSpec> {
         let mut outs = vec![
             io("logits", vec![b, V], "f32"),
-            io("kcache", vec![L, b, HKV, T_MAX, D], "f32"),
-            io("vcache", vec![L, b, HKV, T_MAX, D], "f32"),
+            io("kcache", vec![L, b, HKV, t_max, D], "f32"),
+            io("vcache", vec![L, b, HKV, t_max, D], "f32"),
         ];
         for name in
             ["score_lin", "score_mlp", "max_attn", "plus_attn", "cum_attn", "win_attn", "vnorm", "knorm"]
         {
-            outs.push(io(name, vec![L, b, HKV, T_MAX], "f32"));
+            outs.push(io(name, vec![L, b, HKV, t_max], "f32"));
         }
         outs
     };
@@ -920,22 +1164,22 @@ pub fn reference_manifest() -> Manifest {
                 file: format!("{name}.builtin"),
                 kind: "decode".into(),
                 batch: b,
-                t: T_MAX,
+                t: t_max,
                 inputs: vec![
                     io("tokens", vec![b], "i32"),
                     io("pos", vec![b], "i32"),
-                    io("kcache", vec![L, b, HKV, T_MAX, D], "f32"),
-                    io("vcache", vec![L, b, HKV, T_MAX, D], "f32"),
-                    io("mask", vec![L, b, HKV, T_MAX], "f32"),
+                    io("kcache", vec![L, b, HKV, t_max, D], "f32"),
+                    io("vcache", vec![L, b, HKV, t_max, D], "f32"),
+                    io("mask", vec![L, b, HKV, t_max], "f32"),
                 ],
                 outputs: vec![
                     io("logits", vec![b, V], "f32"),
-                    io("kcache", vec![L, b, HKV, T_MAX, D], "f32"),
-                    io("vcache", vec![L, b, HKV, T_MAX, D], "f32"),
+                    io("kcache", vec![L, b, HKV, t_max, D], "f32"),
+                    io("vcache", vec![L, b, HKV, t_max, D], "f32"),
                     io("score_lin", vec![L, b, HKV], "f32"),
                     io("score_mlp", vec![L, b, HKV], "f32"),
                     io("vnorm", vec![L, b, HKV], "f32"),
-                    io("attn_row", vec![L, b, HKV, T_MAX + 1], "f32"),
+                    io("attn_row", vec![L, b, HKV, t_max + 1], "f32"),
                 ],
             },
         );
@@ -976,7 +1220,7 @@ pub fn reference_manifest() -> Manifest {
             d_head: D,
             d_int: D_INT,
             d_surrogate: DSUR,
-            t_max: T_MAX,
+            t_max,
         },
         special: SpecialTokens { pad: 0, bos: 1, eos: 2, sep: 3 },
         window: WINDOW,
@@ -1113,6 +1357,116 @@ mod tests {
         assert_ne!(l1.data, l2.data);
     }
 
+    /// The resident decode path must be bit-identical to the legacy
+    /// buffer-threading exec: same logits, same surrogate scores, same new
+    /// KV row — and the implicit mask fill must reproduce the host-side
+    /// mask update across a second step.
+    #[test]
+    fn resident_decode_matches_legacy_exec_bitwise() {
+        let be = ReferenceBackend::new();
+        let man = reference_manifest();
+        let t = 128;
+        let mut toks = vec![0i32; t];
+        toks[0] = 1;
+        for (i, b) in "KQ = 41. pad pad".bytes().enumerate() {
+            toks[i + 1] = b as i32;
+        }
+        let n = 17usize;
+        let lens = [n as i32];
+        let outs = exec(&be, &man, "prefill_b1_t128", &[
+            Arg::I32(&toks, &[1, t]),
+            Arg::I32(&lens, &[1]),
+        ]);
+        let kc0 = outs[1].host_f32().unwrap().data.clone();
+        let vc0 = outs[2].host_f32().unwrap().data.clone();
+        let mut mask = vec![0.0f32; L * HKV * T_MAX];
+        for l in 0..L {
+            for h in 0..HKV {
+                for p in 0..n {
+                    mask[(l * HKV + h) * T_MAX + p] = 1.0;
+                }
+            }
+        }
+        let dec = man.artifacts.get("decode_b1").unwrap();
+        let steps = [(b'4' as i32, n), (b'1' as i32, n + 1)];
+
+        // legacy: thread buffers, update the mask by hand between steps
+        let mut legacy_logits = vec![];
+        let mut legacy_kc = kc0.clone();
+        let mut legacy_sl = vec![];
+        {
+            let mut kc = be.upload_f32(&kc0, &[L, 1, HKV, T_MAX, D]).unwrap();
+            let mut vc = be.upload_f32(&vc0, &[L, 1, HKV, T_MAX, D]).unwrap();
+            let mut m = mask.clone();
+            for (i, &(tok, pos)) in steps.iter().enumerate() {
+                if i > 0 {
+                    for l in 0..L {
+                        for h in 0..HKV {
+                            m[(l * HKV + h) * T_MAX + pos - 1] = 1.0;
+                        }
+                    }
+                }
+                let mb = be.upload_f32(&m, &[L, 1, HKV, T_MAX]).unwrap();
+                let douts = be
+                    .exec(dec, &[
+                        Arg::I32(&[tok], &[1]),
+                        Arg::I32(&[pos as i32], &[1]),
+                        Arg::Buf(&kc),
+                        Arg::Buf(&vc),
+                        Arg::Buf(&mb),
+                    ])
+                    .unwrap();
+                legacy_logits.push(douts[0].host_f32().unwrap().data.clone());
+                legacy_sl.push(douts[3].host_f32().unwrap().data.clone());
+                legacy_kc = douts[1].host_f32().unwrap().data.clone();
+                let mut it = douts.into_iter();
+                let _ = it.next(); // logits (already cloned)
+                kc = it.next().unwrap();
+                vc = it.next().unwrap();
+            }
+        }
+
+        // resident: scatter once, step twice — no mask traffic after join
+        let h = be.kv_alloc(L, 1, HKV, T_MAX, D).unwrap();
+        be.kv_scatter(&h, 0, &kc0, &vc0).unwrap();
+        be.kv_write_mask(&h, 0, &mask).unwrap();
+        for (i, &(tok, pos)) in steps.iter().enumerate() {
+            let routs = be
+                .exec_decode_resident(dec, &[tok], &[pos as i32], &h)
+                .unwrap();
+            assert_eq!(
+                routs[0].host_f32().unwrap().data,
+                legacy_logits[i],
+                "step {i}: resident logits must match the legacy path bit-for-bit"
+            );
+            assert_eq!(
+                routs[1].host_f32().unwrap().data,
+                legacy_sl[i],
+                "step {i}: resident score_lin must match"
+            );
+        }
+        // the in-place rows equal the legacy returned cache rows
+        let mut k_row = vec![0.0f32; L * HKV * D];
+        let mut v_row = vec![0.0f32; L * HKV * D];
+        for &(_, pos) in &steps {
+            be.kv_fetch_row(&h, 0, pos, &mut k_row, &mut v_row).unwrap();
+            for l in 0..L {
+                for hh in 0..HKV {
+                    let g = ((l * HKV + hh) * T_MAX + pos) * D;
+                    let r = (l * HKV + hh) * D;
+                    assert_eq!(&k_row[r..r + D], &legacy_kc[g..g + D]);
+                }
+            }
+        }
+        // gather returns the full slot including the prefill rows
+        let mut kg = vec![0.0f32; h.slot_elems()];
+        let mut vg = vec![0.0f32; h.slot_elems()];
+        be.kv_gather(&h, 0, &mut kg, &mut vg).unwrap();
+        assert_eq!(kg[..n * D], kc0[..n * D]);
+        be.kv_free(&h);
+        assert!(be.kv_scatter(&h, 0, &kc0, &vc0).is_err(), "freed handle rejected");
+    }
+
     #[test]
     fn kvzip_oracle_scores_cover_prompt_only() {
         let be = ReferenceBackend::new();
@@ -1145,5 +1499,23 @@ mod tests {
         let dec = man.artifacts.get("decode_b8").unwrap();
         assert_eq!(dec.inputs.len(), 5);
         assert_eq!(dec.output_index("score_mlp").unwrap(), 4);
+        // resident-decode indexing skips the cache outputs
+        assert_eq!(dec.resident_output_index("logits").unwrap(), 0);
+        assert_eq!(dec.resident_output_index("score_lin").unwrap(), 1);
+        assert_eq!(dec.resident_output_index("score_mlp").unwrap(), 2);
+        assert!(dec.resident_output_index("kcache").is_err());
+    }
+
+    #[test]
+    fn t_max_parameterization_scales_shapes() {
+        let man = reference_manifest_with(2048);
+        assert_eq!(man.model.t_max, 2048);
+        let dec = man.artifacts.get("decode_b4").unwrap();
+        assert_eq!(dec.inputs[2].shape, vec![L, 4, HKV, 2048, D]);
+        let be = ReferenceBackend::with_t_max(2048);
+        let h = be.kv_alloc(L, 1, HKV, 2048, D).unwrap();
+        assert_eq!(h.slot_elems(), L * HKV * 2048 * D);
+        be.kv_free(&h);
+        assert!(be.kv_alloc(L, 1, HKV, 512, D).is_err(), "t_max mismatch rejected");
     }
 }

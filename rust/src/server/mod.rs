@@ -28,6 +28,15 @@
 //!
 //! Commands:
 //!   {"cmd": "metrics"}            -> {"metrics": str}
+//!   {"cmd": "stats"}              -> {"stats": {...}} structured counters:
+//!                                    requests/tokens_out/mean_compression
+//!                                    plus host<->device transfer accounting
+//!                                    (kv_bytes_up, kv_bytes_down,
+//!                                    mask_uploads, bytes_up, bytes_down,
+//!                                    decode_steps, backend) — the
+//!                                    device-resident KV cache shows up
+//!                                    here as kv_bytes staying flat while
+//!                                    decode_steps grows
 //!   {"cmd": "policies"}           -> {"policies": [catalog...]}
 //!   {"cmd": "cancel", "id": ...}  -> {"ok": bool}; the cancelled stream
 //!                                    receives its done line with reason
@@ -127,6 +136,30 @@ pub fn response_json_with_id(r: &crate::coordinator::Response, id: Option<&Json>
         pairs.push(("error", Json::str(e.clone())));
     }
     Json::obj(pairs).dump()
+}
+
+/// Structured engine/runtime counters for {"cmd": "stats"}.
+pub fn stats_json(engine: &Engine) -> Json {
+    let t = engine.rt.transfer.snapshot();
+    let m = &engine.metrics;
+    Json::obj(vec![
+        ("backend", Json::str(engine.rt.backend_name())),
+        (
+            "requests",
+            Json::num(m.requests.load(std::sync::atomic::Ordering::Relaxed) as f64),
+        ),
+        (
+            "tokens_out",
+            Json::num(m.tokens_out.load(std::sync::atomic::Ordering::Relaxed) as f64),
+        ),
+        ("mean_compression", Json::num(m.mean_compression())),
+        ("decode_steps", Json::num(t.decode_steps as f64)),
+        ("kv_bytes_up", Json::num(t.kv_bytes_up as f64)),
+        ("kv_bytes_down", Json::num(t.kv_bytes_down as f64)),
+        ("mask_uploads", Json::num(t.mask_uploads as f64)),
+        ("bytes_up", Json::num(t.bytes_up as f64)),
+        ("bytes_down", Json::num(t.bytes_down as f64)),
+    ])
 }
 
 fn done_event_json(r: &crate::coordinator::Response, id: &Json) -> Json {
@@ -257,6 +290,10 @@ fn handle_conn(
                     &writer,
                     &Json::obj(vec![("metrics", Json::str(engine.metrics.report()))]),
                 )?;
+                continue;
+            }
+            Some("stats") => {
+                write_line(&writer, &Json::obj(vec![("stats", stats_json(&engine))]))?;
                 continue;
             }
             Some("policies") => {

@@ -197,27 +197,207 @@ fn sequence_joining_mid_decode_matches_single() {
     let r1 = e.generate(&t1.prompt, policy.as_ref(), &sp).unwrap();
     let r2 = e.generate(&t2.prompt, policy.as_ref(), &sp).unwrap();
 
-    // session API: s1 decodes alone for three steps, then s2 joins
+    // session API: s1 decodes alone for three steps, then s2 joins — the
+    // persistent DecodeGroup reallocates when the bucket grows and s1's
+    // resident rows survive the re-scatter
+    let mut group = e.decode_group();
     let mut s1 = e.sequence(1, &t1.prompt, sp.clone());
     e.prefill(&mut s1, policy.as_ref()).unwrap();
     for _ in 0..3 {
-        let mut group = vec![&mut s1];
-        e.decode_step(&mut group).unwrap();
+        let mut set = vec![&mut s1];
+        e.decode_step(&mut group, &mut set).unwrap();
     }
     let mut s2 = e.sequence(2, &t2.prompt, sp.clone());
     e.prefill(&mut s2, policy.as_ref()).unwrap();
     while !s1.is_done() || !s2.is_done() {
-        let mut group: Vec<&mut Sequence> = vec![];
+        let mut set: Vec<&mut Sequence> = vec![];
         if !s1.is_done() {
-            group.push(&mut s1);
+            set.push(&mut s1);
         }
         if !s2.is_done() {
-            group.push(&mut s2);
+            set.push(&mut s2);
         }
-        e.decode_step(&mut group).unwrap();
+        e.decode_step(&mut group, &mut set).unwrap();
     }
     assert_eq!(e.finish(&s1).text, r1.text, "joined sequence must match single decode");
     assert_eq!(e.finish(&s2).text, r2.text, "late joiner must match single decode");
+}
+
+/// Device-resident KV cache accounting: with a no-eviction policy, a
+/// steady-state decode step transfers only the decoded `[L, H, d_head]`
+/// row per sequence — zero KV uploads and zero mask updates after the
+/// join. (Uses a private engine so other tests' traffic cannot leak into
+/// the counters.)
+#[test]
+fn resident_decode_transfers_only_the_decoded_row() {
+    let e = Engine::new(Arc::new(Runtime::reference()));
+    let mut rng = Rng::new(77);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let policy = policies::by_name("full", e.window()).unwrap();
+    let mut sp = SamplingParams::greedy(40);
+    sp.stop_at_newline = false;
+    let mut s = e.sequence(1, &task.prompt, sp);
+    e.prefill(&mut s, policy.as_ref()).unwrap();
+
+    let mut group = e.decode_group();
+    let mut set = vec![&mut s];
+    e.decode_step(&mut group, &mut set).unwrap();
+    let m = &e.rt.manifest.model;
+    let row_bytes = 4 * 2 * (m.n_layers * m.n_kv_heads * m.d_head) as u64;
+    let slot_bytes = 4 * 2 * (m.n_layers * m.n_kv_heads * m.t_max * m.d_head) as u64;
+    let after_join = e.rt.transfer.snapshot();
+    assert_eq!(after_join.mask_uploads, 1, "the join installs the mask exactly once");
+    assert_eq!(
+        after_join.kv_bytes_up,
+        slot_bytes + 4 * (m.n_layers * m.n_kv_heads * m.t_max) as u64,
+        "the join scatters the full slot plus its mask"
+    );
+    assert_eq!(after_join.kv_bytes_down, row_bytes, "the join step fetches one row");
+
+    let mut steps = 0u64;
+    for _ in 0..10 {
+        if s.is_done() {
+            break;
+        }
+        let mut set = vec![&mut s];
+        e.decode_step(&mut group, &mut set).unwrap();
+        steps += 1;
+    }
+    assert!(steps >= 4, "expected several live steady-state steps, got {steps}");
+    let now = e.rt.transfer.snapshot();
+    assert_eq!(
+        now.mask_uploads, after_join.mask_uploads,
+        "a no-eviction policy performs zero mask uploads after prefill/join"
+    );
+    assert_eq!(
+        now.kv_bytes_up, after_join.kv_bytes_up,
+        "steady-state decode uploads zero KV bytes"
+    );
+    assert_eq!(
+        now.kv_bytes_down - after_join.kv_bytes_down,
+        steps * row_bytes,
+        "each step transfers exactly the decoded row per sequence"
+    );
+    assert_eq!(now.decode_steps, steps + 1);
+}
+
+/// An evicting policy refreshes a slot's mask exactly when the previous
+/// step's evictions dirtied it (dirty-flag threading) — the upload count
+/// is predicted exactly by replaying the protocol against the observed
+/// per-step evictions.
+#[test]
+fn resident_decode_mask_refreshes_track_evictions() {
+    let e = Engine::new(Arc::new(Runtime::reference()));
+    let mut rng = Rng::new(78);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    // tau=100 evicts every token the moment it leaves the decode window
+    let policy = policies::by_name("kvzap_mlp:100", e.window()).unwrap();
+    let mut sp = SamplingParams::greedy(60);
+    sp.stop_at_newline = false;
+    let mut s = e.sequence(1, &task.prompt, sp);
+    e.prefill(&mut s, policy.as_ref()).unwrap();
+    let mut group = e.decode_group();
+    let mut expected_uploads = 0u64;
+    let mut pending_dirty = true; // prefill pruning dirtied the mask
+    let mut total_evicted = 0usize;
+    let mut joined = false;
+    for _ in 0..(e.window() + 8) {
+        if s.is_done() {
+            break;
+        }
+        // protocol replay: the join installs the mask (consuming any
+        // pending dirt); afterwards a refresh happens at the start of a
+        // step iff the previous step evicted
+        if !joined || pending_dirty {
+            expected_uploads += 1;
+        }
+        joined = true;
+        pending_dirty = false;
+        let before = s.decode_evictions;
+        let mut set = vec![&mut s];
+        e.decode_step(&mut group, &mut set).unwrap();
+        if s.decode_evictions > before {
+            pending_dirty = true;
+            total_evicted += s.decode_evictions - before;
+        }
+    }
+    assert!(total_evicted > 0, "the aggressive threshold must evict during decode");
+    let snap = e.rt.transfer.snapshot();
+    assert_eq!(
+        snap.mask_uploads, expected_uploads,
+        "mask uploads must be driven by the dirty flag, not by step count"
+    );
+}
+
+/// Join/leave/rejoin equivalence on the resident-cache path: a sequence
+/// that joins a running group mid-decode, leaves for a few steps and
+/// rejoins must produce bit-identical text and CacheStats to the same
+/// sequence decoded solo (extends the PR 2 mid-decode join test).
+#[test]
+fn sequence_leaving_and_rejoining_matches_solo() {
+    let e = engine();
+    let mut rng = Rng::new(55);
+    let t1 = workload::ruler_instance("niah_single_1", 200, &mut rng.fork(1));
+    let t2 = workload::ruler_instance("niah_single_2", 180, &mut rng.fork(2));
+    let policy = policies::by_name("kvzap_mlp:-4", e.window()).unwrap();
+    let mut sp = SamplingParams::greedy(12);
+    sp.stop_at_newline = false;
+
+    // solo references via the same session API
+    let solo = |prompt: &str, id: u64| {
+        let mut g = e.decode_group();
+        let mut s = e.sequence(id, prompt, sp.clone());
+        e.prefill(&mut s, policy.as_ref()).unwrap();
+        while !s.is_done() {
+            let mut set = vec![&mut s];
+            e.decode_step(&mut g, &mut set).unwrap();
+        }
+        (e.finish(&s).text, s.cache_stats())
+    };
+    let (text1, stats1) = solo(&t1.prompt, 91);
+    let (text2, stats2) = solo(&t2.prompt, 92);
+
+    // interleaved run: s1+s2 together, s1 leaves, s2 alone (bucket shrinks
+    // to b1 — full realloc), s1 rejoins (bucket grows back)
+    let mut group = e.decode_group();
+    let mut s1 = e.sequence(1, &t1.prompt, sp.clone());
+    let mut s2 = e.sequence(2, &t2.prompt, sp.clone());
+    e.prefill(&mut s1, policy.as_ref()).unwrap();
+    e.prefill(&mut s2, policy.as_ref()).unwrap();
+    for _ in 0..2 {
+        let mut set: Vec<&mut Sequence> = vec![];
+        if !s1.is_done() {
+            set.push(&mut s1);
+        }
+        if !s2.is_done() {
+            set.push(&mut s2);
+        }
+        if set.is_empty() {
+            break;
+        }
+        e.decode_step(&mut group, &mut set).unwrap();
+    }
+    for _ in 0..3 {
+        if s2.is_done() {
+            break;
+        }
+        let mut set = vec![&mut s2];
+        e.decode_step(&mut group, &mut set).unwrap();
+    }
+    while !s1.is_done() || !s2.is_done() {
+        let mut set: Vec<&mut Sequence> = vec![];
+        if !s1.is_done() {
+            set.push(&mut s1);
+        }
+        if !s2.is_done() {
+            set.push(&mut s2);
+        }
+        e.decode_step(&mut group, &mut set).unwrap();
+    }
+    assert_eq!(e.finish(&s1).text, text1, "leave/rejoin must not change s1's tokens");
+    assert_eq!(e.finish(&s2).text, text2, "shrink/grow reallocs must not change s2's tokens");
+    assert_eq!(s1.cache_stats(), stats1, "s1 CacheStats must match the solo run");
+    assert_eq!(s2.cache_stats(), stats2, "s2 CacheStats must match the solo run");
 }
 
 // ---------------------------------------------------------------------------
@@ -357,6 +537,13 @@ fn server_round_trip() {
     assert!(resp.get("error").is_none(), "{resp:?}");
     assert!(resp.get("text").is_some());
     assert!(resp.get("compression").and_then(|c| c.as_f64()).is_some());
+    // structured stats: transfer accounting is visible over the protocol
+    let stats = c.request(&Json::obj(vec![("cmd", Json::str("stats"))])).unwrap();
+    let s = stats.get("stats").expect("stats object");
+    assert_eq!(s.get("backend").and_then(|b| b.as_str()), Some("reference"));
+    assert!(s.get("requests").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+    assert!(s.get("kv_bytes_up").and_then(|v| v.as_f64()).is_some());
+    assert!(s.get("mask_uploads").and_then(|v| v.as_f64()).is_some());
     c.shutdown().unwrap();
     let _ = h.join();
 }
