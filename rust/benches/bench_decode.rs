@@ -13,26 +13,11 @@
 //!     cargo bench --bench bench_decode            # full sweep
 //!     cargo bench --bench bench_decode -- --quick # CI smoke subset
 
-use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use kvzap::bench_support::BenchArgs;
+use kvzap::bench_support::{write_bench_json, BenchArgs};
 use kvzap::runtime::{Arg, Runtime};
-
-/// Walk up from cwd to the repo root (marked by ROADMAP.md) so the JSON
-/// lands in the same place no matter which directory cargo runs us from.
-fn repo_root() -> PathBuf {
-    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
-    loop {
-        if d.join("ROADMAP.md").exists() {
-            return d;
-        }
-        if !d.pop() {
-            return ".".into();
-        }
-    }
-}
 
 struct Row {
     t_max: usize,
@@ -228,14 +213,6 @@ fn main() -> anyhow::Result<()> {
             r.resident_tok_s / r.repack_tok_s
         ));
     }
-    let body = format!(
-        "{{\"bench\": \"decode\", \"backend\": \"{}\", \"quick\": {}, \"rows\": [{}]}}\n",
-        "reference",
-        quick,
-        items.join(", ")
-    );
-    let path = repo_root().join("BENCH_decode.json");
-    std::fs::write(&path, body)?;
-    eprintln!("  wrote {}", path.display());
+    write_bench_json("decode", "reference", quick, &items)?;
     Ok(())
 }

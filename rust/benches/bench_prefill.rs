@@ -1,0 +1,164 @@
+//! Prefill throughput benchmark: the blocked + worker-pool reference
+//! compute path vs the scalar path, swept over context length × thread
+//! count × attention block size.
+//!
+//! `threads = 1` is the scalar reference path (naive kernels, inline);
+//! `threads = 0` means auto (`std::thread::available_parallelism`). The
+//! two paths are bitwise identical (enforced by the integration suite), so
+//! every speedup reported here is pure compute-path win, not a numerics
+//! trade. Emits `BENCH_prefill.json` at the repo root (same shape as
+//! `BENCH_decode.json`); each row carries `tok_s` plus `speedup` relative
+//! to the scalar run at the same (context, block size).
+//!
+//!     cargo bench --bench bench_prefill            # full sweep
+//!     cargo bench --bench bench_prefill -- --quick # CI smoke subset
+//!     cargo bench --bench bench_prefill -- --ctx 2048 --threads 8
+//!
+//! The headline number is the `t=2048`, auto-thread row: the parallel
+//! blocked path must clear 2x over scalar there (ROADMAP perf item).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use kvzap::bench_support::{write_bench_json, BenchArgs};
+use kvzap::runtime::{Arg, ParallelConfig, Runtime};
+
+struct Row {
+    t: usize,
+    threads: usize,
+    block_rows: usize,
+    tok_s: f64,
+    speedup: f64,
+}
+
+/// Deterministic prompt with the workload mix the reference model cares
+/// about (salient needles in filler): exercises realistic mask/stat paths.
+fn prompt_tokens(t: usize) -> (Vec<i32>, usize) {
+    let mut toks = vec![0i32; t];
+    toks[0] = 1; // BOS
+    let body = "KEY7 = 90210. the sky was clear over the bay. ";
+    for (i, tok) in toks.iter_mut().enumerate().skip(1) {
+        *tok = body.as_bytes()[(i - 1) % body.len()] as i32;
+    }
+    (toks, t)
+}
+
+fn time_prefill(rt: &Runtime, want_t: usize, warmup: usize, iters: usize) -> anyhow::Result<f64> {
+    // resolve through the bucket grid so arbitrary --ctx values round up
+    let bucket = rt
+        .manifest
+        .prefill_bucket(want_t, 1)
+        .ok_or_else(|| anyhow::anyhow!("no prefill bucket for context {want_t}"))?;
+    let pf = rt.artifact(&bucket)?;
+    let t = pf.meta.t;
+    let (toks, n) = prompt_tokens(t);
+    let lens = [n as i32];
+    let args = [Arg::I32(&toks, &[1, t]), Arg::I32(&lens, &[1])];
+    for _ in 0..warmup {
+        let _ = rt.exec(&pf, &args)?;
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let outs = rt.exec(&pf, &args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        drop(outs);
+        if dt < best {
+            best = dt;
+        }
+    }
+    Ok(n as f64 / best)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let quick = args.flag("quick");
+    let auto = ParallelConfig::auto().threads;
+    let ctxs: Vec<usize> = match args.usize("ctx", 0) {
+        0 if quick => vec![512, 2048],
+        0 => vec![512, 1024, 2048],
+        // custom contexts round up to the bucket grid (powers of two
+        // above the 512 seed bucket)
+        c => vec![c.max(512).next_power_of_two()],
+    };
+    let mut threads: Vec<usize> = match args.usize("threads", 0) {
+        0 if quick => vec![1, auto],
+        0 => {
+            let mut ts = vec![1, 2, auto];
+            ts.sort_unstable();
+            ts.dedup();
+            ts
+        }
+        t => vec![1, t],
+    };
+    threads.dedup();
+    let blocks: Vec<usize> = if quick { vec![64] } else { vec![32, 64, 128] };
+    let iters = args.usize("iters", if quick { 2 } else { 3 });
+
+    let mut rows: Vec<Row> = vec![];
+    // scalar tok/s per (ctx, block) — the speedup denominator
+    let mut base: HashMap<(usize, usize), f64> = HashMap::new();
+    println!(
+        "{:>6} {:>8} {:>11} {:>14} {:>9}",
+        "t", "threads", "block_rows", "prefill tok/s", "speedup"
+    );
+    for &t in &ctxs {
+        for &br in &blocks {
+            // block sweep only matters off the scalar path; keep the grid
+            // small by sweeping blocks at the max context only
+            if br != 64 && t != *ctxs.iter().max().unwrap() {
+                continue;
+            }
+            for &th in &threads {
+                let mut cfg = ParallelConfig::with_threads(th);
+                cfg.block_rows = br;
+                let rt = Arc::new(Runtime::reference_with_options(t.max(512), cfg));
+                let tok_s = time_prefill(&rt, t, 1, iters)?;
+                if th == 1 {
+                    base.insert((t, br), tok_s);
+                }
+                let speedup = tok_s / base.get(&(t, br)).copied().unwrap_or(tok_s);
+                println!("{t:>6} {th:>8} {br:>11} {tok_s:>14.1} {speedup:>8.2}x");
+                rows.push(Row { t, threads: th, block_rows: br, tok_s, speedup });
+            }
+        }
+    }
+
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"t\": {}, \"threads\": {}, \"block_rows\": {}, \"tok_s\": {:.2}, \"speedup\": {:.3}}}",
+                r.t, r.threads, r.block_rows, r.tok_s, r.speedup
+            )
+        })
+        .collect();
+    write_bench_json("prefill", "reference", quick, &items)?;
+
+    // headline: largest context, auto threads, default block
+    if let Some(head) = rows
+        .iter()
+        .filter(|r| r.threads > 1 && r.block_rows == 64)
+        .max_by(|a, b| (a.t, a.threads).cmp(&(b.t, b.threads)))
+    {
+        println!(
+            "\nheadline: t={} threads={} -> {:.2}x over scalar (target >= 2x at t=2048)",
+            head.t, head.threads, head.speedup
+        );
+        // acceptance enforcement: `-- --assert-speedup 2` turns the bar
+        // into a hard failure (used for the recorded acceptance run; the
+        // CI --quick smoke stays an availability check)
+        let bar = args.str("assert-speedup", "");
+        if let Ok(bar) = bar.parse::<f64>() {
+            if head.speedup < bar {
+                anyhow::bail!(
+                    "headline speedup {:.2}x at t={} below the asserted {bar}x bar",
+                    head.speedup,
+                    head.t
+                );
+            }
+        }
+    }
+    Ok(())
+}

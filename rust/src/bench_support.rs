@@ -69,8 +69,41 @@ pub fn results_dir() -> PathBuf {
 /// otherwise — so every bench target runs from a fresh checkout.
 pub fn load_engine() -> Result<Arc<Engine>> {
     let rt = crate::runtime::Runtime::auto()?;
-    eprintln!("[kvzap] backend: {}", rt.backend_name());
+    eprintln!("[kvzap] backend: {}", rt.backend_desc());
     Ok(Arc::new(Engine::new(Arc::new(rt))))
+}
+
+/// Walk up from cwd to the repo root (marked by ROADMAP.md) so bench
+/// artifacts land in the same place no matter which directory cargo runs
+/// the target from.
+pub fn repo_root() -> PathBuf {
+    let mut d = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if d.join("ROADMAP.md").exists() {
+            return d;
+        }
+        if !d.pop() {
+            return ".".into();
+        }
+    }
+}
+
+/// Write one `BENCH_<name>.json` perf-trajectory seed at the repo root:
+/// `{"bench": name, "backend": ..., "quick": ..., "rows": [...]}` where
+/// each row is a pre-rendered JSON object (all `BENCH_*.json` files share
+/// this shape — see docs/BENCHMARKS.md).
+pub fn write_bench_json(name: &str, backend: &str, quick: bool, rows: &[String]) -> Result<()> {
+    let body = format!(
+        "{{\"bench\": \"{}\", \"backend\": \"{}\", \"quick\": {}, \"rows\": [{}]}}\n",
+        name,
+        backend,
+        quick,
+        rows.join(", ")
+    );
+    let path = repo_root().join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, body)?;
+    eprintln!("  wrote {}", path.display());
+    Ok(())
 }
 
 /// Threshold sweep for KVzap policies, derived from the oracle log-score

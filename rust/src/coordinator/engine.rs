@@ -21,7 +21,7 @@
 //! The engine is backend-generic: it only sees the [`Runtime`] facade and
 //! opaque [`Buffer`]s, so the same code path drives the hermetic reference
 //! backend and the PJRT artifacts. Data movement per decode step (see
-//! DESIGN.md §Perf): the group KV cache is *backend-resident* behind a
+//! docs/ARCHITECTURE.md): the group KV cache is *backend-resident* behind a
 //! [`DecodeGroup`] handle. A sequence pays one full-slot scatter when it
 //! joins a slot; after that a steady-state step uploads nothing but the
 //! token/pos scalars, the backend writes the new KV row in place, and the
@@ -29,6 +29,27 @@
 //! host snapshot (`O(L·H·d_head)` per sequence per token instead of the
 //! old `O(L·H·t_max·d_head)` repack round-trip). The keep-mask is
 //! re-uploaded per slot only when `PagedKvCache` reports evictions.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use kvzap::coordinator::{Engine, SamplingParams};
+//! use kvzap::policies::PolicySpec;
+//! use kvzap::runtime::Runtime;
+//!
+//! let engine = Engine::new(Arc::new(Runtime::reference()));
+//! let policy = PolicySpec::parse("kvzap_mlp:-4").unwrap().build(engine.window());
+//! // step-level session: prefill once, then step until done
+//! let mut seq = engine.sequence(1, "KEY = 90210. Q KEY\nA ", SamplingParams::greedy(8));
+//! engine.prefill(&mut seq, policy.as_ref()).unwrap();
+//! let mut group = engine.decode_group();
+//! while !seq.is_done() {
+//!     engine.decode_step(&mut group, &mut [&mut seq]).unwrap();
+//! }
+//! let result = engine.finish(&seq);
+//! println!("{} (compression {:.2})", result.text, result.compression);
+//! ```
+
+#![warn(missing_docs)]
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -47,9 +68,17 @@ use crate::workload::ByteTokenizer;
 /// requests can never alias a stale resident slot.
 static NEXT_UID: AtomicU64 = AtomicU64::new(1);
 
+/// The generation engine: owns the runtime handle, tokenizer and metrics,
+/// and exposes the step-level session API ([`Engine::sequence`] →
+/// [`Engine::prefill`] → [`Engine::decode_step`]) plus the
+/// [`Engine::generate`]/[`Engine::generate_batch`] convenience loops. See
+/// the module docs for a full session example.
 pub struct Engine {
+    /// Execution runtime (reference or PJRT backend behind the facade).
     pub rt: Arc<Runtime>,
+    /// Byte-level tokenizer shared by every request.
     pub tok: ByteTokenizer,
+    /// Rolling latency/throughput/compression histograms.
     pub metrics: EngineMetrics,
 }
 
@@ -60,18 +89,28 @@ fn nll_of(logits: &[f32], target: i32) -> f64 {
     lse - logits[target as usize] as f64
 }
 
+/// Everything one finished generation produced ([`Engine::finish`]).
 #[derive(Debug, Clone)]
 pub struct GenResult {
+    /// Decoded output text (byte-level tokens concatenated).
     pub text: String,
+    /// Prompt length in tokens, BOS included.
     pub prompt_len: usize,
+    /// Number of accepted output tokens.
     pub tokens_out: usize,
     /// Removed fraction of the KV cache at end of generation (the paper's
     /// "compression ratio (removed fraction)", Table 2).
     pub compression: f64,
+    /// Wall-clock µs spent in the prefill execution.
     pub prefill_us: u64,
+    /// Wall-clock µs spent in the KVzip oracle double pass (0 unless the
+    /// policy needs it).
     pub oracle_us: u64,
+    /// Wall-clock µs spent in decode steps (shared steps count fully).
     pub decode_us: u64,
+    /// Wall-clock µs spent scoring/evicting inside the policy.
     pub policy_us: u64,
+    /// KV pairs evicted during decode (Algorithm 1's delayed eviction).
     pub decode_evictions: usize,
 }
 
@@ -90,6 +129,7 @@ pub enum DoneReason {
 }
 
 impl DoneReason {
+    /// Wire name of the reason (the v2 protocol's `"reason"` field).
     pub fn as_str(self) -> &'static str {
         match self {
             DoneReason::Stop => "stop",
@@ -127,10 +167,12 @@ pub enum StepEvent {
 /// [`Engine::prefill`] once, then pass to [`Engine::decode_step`] together
 /// with any other live sequences until [`Sequence::is_done`].
 pub struct Sequence {
+    /// Caller-chosen request id, echoed on every [`StepEvent`].
     pub id: u64,
     /// Process-unique identity nonce (see [`NEXT_UID`]); slot residency in
     /// a [`DecodeGroup`] is keyed by this.
     uid: u64,
+    /// Per-sequence sampling parameters (greedy/top-k, budget, stops).
     pub sp: SamplingParams,
     /// Human-readable policy label (set at prefill; for logs/metrics).
     pub policy_name: String,
@@ -157,26 +199,35 @@ pub struct Sequence {
     v: Vec<f32>,
     done: Option<DoneReason>,
     prefilled: bool,
+    /// KV pairs evicted during decode so far.
     pub decode_evictions: usize,
+    /// Wall-clock µs spent in this sequence's prefill execution.
     pub prefill_us: u64,
+    /// Wall-clock µs spent in the KVzip oracle pass (0 unless needed).
     pub oracle_us: u64,
+    /// Wall-clock µs of decode steps this sequence participated in.
     pub decode_us: u64,
+    /// Wall-clock µs spent scoring/evicting inside the policy.
     pub policy_us: u64,
 }
 
 impl Sequence {
+    /// Whether the sequence finished (see [`Sequence::done_reason`]).
     pub fn is_done(&self) -> bool {
         self.done.is_some()
     }
 
+    /// Why the sequence finished, if it has.
     pub fn done_reason(&self) -> Option<DoneReason> {
         self.done
     }
 
+    /// Prompt length in tokens, BOS included.
     pub fn prompt_len(&self) -> usize {
         self.toks.len()
     }
 
+    /// Number of accepted output tokens so far.
     pub fn tokens_out(&self) -> usize {
         self.generated.len()
     }
@@ -269,6 +320,8 @@ impl Drop for DecodeGroup {
 }
 
 impl Engine {
+    /// An engine over `rt` with fresh metrics (cheap; the weights and
+    /// backend live inside the runtime).
     pub fn new(rt: Arc<Runtime>) -> Engine {
         Engine { rt, tok: ByteTokenizer::default(), metrics: EngineMetrics::default() }
     }
@@ -278,6 +331,7 @@ impl Engine {
         DecodeGroup { rt: self.rt.clone(), handle: None, slots: vec![] }
     }
 
+    /// The policy sliding-window size `w` (manifest-level constant).
     pub fn window(&self) -> usize {
         self.rt.manifest.window
     }

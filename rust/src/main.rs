@@ -111,7 +111,7 @@ fn load_engine() -> Result<Arc<Engine>> {
 
 fn info() -> Result<()> {
     let rt = Runtime::auto()?;
-    println!("backend: {}", rt.backend_name());
+    println!("backend: {}", rt.backend_desc());
     let m = &rt.manifest;
     println!("zap-lm: L={} Dh={} Hq={} Hkv={} D={} Dint={} t_max={}",
         m.model.n_layers, m.model.d_model, m.model.n_q_heads, m.model.n_kv_heads,

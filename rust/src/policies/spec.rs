@@ -14,6 +14,18 @@
 //! the server's `{"cmd": "policies"}` introspection and the `kvzap
 //! policies` CLI subcommand render it, so the protocol is discoverable
 //! without reading this file.
+//!
+//! ```
+//! use kvzap::policies::{PolicySpec, PrunePolicy};
+//!
+//! let spec = PolicySpec::parse("kvzap_mlp:-4").unwrap();
+//! assert_eq!(spec.kind(), "kvzap");
+//! assert_eq!(spec.to_string(), "kvzap_mlp:-4");
+//! let policy = spec.build(16); // runnable PrunePolicy for window w=16
+//! assert!(!policy.name().is_empty());
+//! ```
+
+#![warn(missing_docs)]
 
 use std::fmt;
 
@@ -28,11 +40,15 @@ use crate::util::json::Json;
 /// Which surrogate scorer drives a KVzap variant (paper §3.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Surrogate {
+    /// Single linear head over the hidden state (`score_lin`).
     Linear,
+    /// Two-layer gelu MLP head (`score_mlp`, the paper's default).
     Mlp,
 }
 
 impl Surrogate {
+    /// Wire name of the surrogate (`"linear"` / `"mlp"`), as used in both
+    /// the string and JSON policy forms.
     pub fn as_str(self) -> &'static str {
         match self {
             Surrogate::Linear => "linear",
@@ -49,8 +65,11 @@ impl Surrogate {
     }
 }
 
+/// Default KVzap eviction threshold τ (log s+ units) when a spec omits it.
 pub const DEFAULT_TAU: f64 = -4.0;
+/// Default keep-fraction for budget policies when a spec omits it.
 pub const DEFAULT_KEEP_FRAC: f64 = 0.5;
+/// Default number of always-kept attention-sink tokens (StreamingLLM).
 pub const DEFAULT_SINKS: usize = 4;
 
 /// A fully-specified pruning policy configuration.
@@ -441,16 +460,23 @@ impl fmt::Display for PolicySpec {
 
 /// One tunable parameter of a policy kind.
 pub struct PolicyParam {
+    /// Parameter name as it appears in the JSON form.
     pub name: &'static str,
+    /// Value used when the spec omits the parameter.
     pub default: f64,
+    /// One-line human-readable description.
     pub doc: &'static str,
 }
 
 /// One policy kind: its structured tag, accepted string forms, parameters.
 pub struct PolicyInfo {
+    /// Canonical kind tag (matches [`PolicySpec::kind`]).
     pub kind: &'static str,
+    /// Accepted compact string spellings (e.g. `kvzap_mlp`, `kvzap_lin`).
     pub string_forms: &'static [&'static str],
+    /// Tunable parameters with defaults.
     pub params: &'static [PolicyParam],
+    /// One-line human-readable description.
     pub doc: &'static str,
 }
 

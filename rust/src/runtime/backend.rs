@@ -48,14 +48,31 @@
 //! without generics infecting their signatures. Transfer byte-accounting
 //! lives in the facade (`Runtime`), not in the backends.
 
+#![warn(missing_docs)]
+
 use anyhow::{anyhow, Result};
 
 use super::manifest::ArtifactMeta;
 use super::tensor::Tensor;
 
-/// An argument to an artifact execution.
+/// An argument to an artifact execution, in manifest input order.
+///
+/// ```
+/// use kvzap::runtime::{Arg, Runtime};
+///
+/// let rt = Runtime::reference();
+/// let pf = rt.artifact("prefill_b1_t128").unwrap();
+/// let toks = [1i32; 128];
+/// let lens = [1i32];
+/// let outs = rt
+///     .exec(&pf, &[Arg::I32(&toks, &[1, 128]), Arg::I32(&lens, &[1])])
+///     .unwrap();
+/// assert_eq!(outs.len(), pf.meta.outputs.len());
+/// ```
 pub enum Arg<'a> {
+    /// Host f32 data with its shape (uploaded by the backend as needed).
     F32(&'a [f32], &'a [usize]),
+    /// Host i32 data with its shape (token ids, positions, lengths).
     I32(&'a [i32], &'a [usize]),
     /// A buffer from a previous execution (e.g. the KV cache).
     Buf(&'a Buffer),
@@ -90,13 +107,30 @@ impl Buffer {
 /// recorded so callers and backends can size and validate transfers.
 /// Not `Clone`: the owner (the engine's `DecodeGroup`) frees it via
 /// [`Backend::kv_free`].
+///
+/// ```no_run
+/// use kvzap::runtime::Runtime;
+///
+/// let rt = Runtime::reference();
+/// let h = rt.kv_alloc(4).unwrap();          // 4-slot decode group
+/// assert_eq!(h.batch, 4);
+/// let mut k = vec![0.0f32; h.slot_elems()]; // one slot's K rows
+/// let mut v = vec![0.0f32; h.slot_elems()];
+/// rt.kv_gather(&h, 0, &mut k, &mut v).unwrap();
+/// rt.kv_free(&h);
+/// ```
 #[derive(Debug)]
 pub struct KvHandle {
     pub(crate) id: u64,
+    /// Model layer count `L` of the cached rows.
     pub layers: usize,
+    /// Group slot capacity `B` (the decode bucket batch size).
     pub batch: usize,
+    /// KV head count `H` per layer.
     pub heads: usize,
+    /// Cache row capacity per head (positions).
     pub t_max: usize,
+    /// Head dimension `D` of each row.
     pub d_head: usize,
 }
 
@@ -124,13 +158,22 @@ pub trait Backend: Send + Sync {
     /// Short backend identifier ("reference" / "pjrt").
     fn name(&self) -> &'static str;
 
+    /// Human-readable description of the backend's execution mode; the
+    /// default is just [`Backend::name`]. The reference backend reports
+    /// its parallel configuration here.
+    fn describe(&self) -> String {
+        self.name().to_string()
+    }
+
     /// Execute one artifact. `data` holds the artifact's data inputs in
     /// manifest input order (weights, if any, are the backend's concern).
     /// Returns one buffer per manifest output.
     fn exec(&self, meta: &ArtifactMeta, data: &[Arg]) -> Result<Vec<Buffer>>;
 
+    /// Upload host f32 data of shape `dims` into a backend [`Buffer`].
     fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer>;
 
+    /// Upload host i32 data of shape `dims` into a backend [`Buffer`].
     fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer>;
 
     /// Fetch an output buffer to the host as an f32 tensor.

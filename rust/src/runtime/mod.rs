@@ -19,7 +19,9 @@
 //! when artifacts are built.
 
 pub mod backend;
+pub mod kernels;
 pub mod manifest;
+pub mod parallel;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod reference;
@@ -33,6 +35,7 @@ use anyhow::{anyhow, Result};
 
 pub use backend::{Arg, Backend, Buffer, KvHandle};
 pub use manifest::{ArtifactMeta, Manifest};
+pub use parallel::ParallelConfig;
 pub use tensor::Tensor;
 
 use crate::metrics::TransferCounters;
@@ -67,9 +70,24 @@ impl Runtime {
     /// The reference runtime with a non-default cache capacity — the
     /// decode bench sweeps `t_max` to measure how transfer volume scales.
     pub fn reference_with_t_max(t_max: usize) -> Runtime {
+        Self::reference_with_options(t_max, ParallelConfig::from_env())
+    }
+
+    /// The reference runtime with explicit capacity *and* parallelism —
+    /// the prefill bench sweeps thread counts and block sizes through
+    /// here, and the equivalence tests pin both paths.
+    ///
+    /// ```
+    /// use kvzap::runtime::{ParallelConfig, Runtime};
+    ///
+    /// let scalar = Runtime::reference_with_options(512, ParallelConfig::scalar());
+    /// let parallel = Runtime::reference_with_options(512, ParallelConfig::with_threads(2));
+    /// assert_eq!(scalar.manifest.model.t_max, parallel.manifest.model.t_max);
+    /// ```
+    pub fn reference_with_options(t_max: usize, cfg: ParallelConfig) -> Runtime {
         Runtime {
             manifest: reference::reference_manifest_with(t_max),
-            backend: Box::new(reference::ReferenceBackend::with_t_max(t_max)),
+            backend: Box::new(reference::ReferenceBackend::with_options(t_max, cfg)),
             exes: Mutex::new(HashMap::new()),
             transfer: TransferCounters::default(),
         }
@@ -104,6 +122,12 @@ impl Runtime {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Human-readable backend description (name + compute-path details,
+    /// e.g. `reference (blocked, threads=8, block_rows=64)`).
+    pub fn backend_desc(&self) -> String {
+        self.backend.describe()
     }
 
     /// Resolve an artifact by bucket name (cached).

@@ -1,0 +1,366 @@
+//! Worker-pool parallel driver for the reference backend.
+//!
+//! The hermetic backend is the tier-1 workhorse: every test and bench runs
+//! on it, so its throughput gates every sweep. This module provides the
+//! two pieces the compute core needs to scale on host CPUs **without any
+//! new dependencies**:
+//!
+//! * [`ParallelConfig`] — thread count + kernel block sizes, auto-detected
+//!   from [`std::thread::available_parallelism`] and overridable via the
+//!   `KVZAP_THREADS` / `KVZAP_BLOCK_ROWS` environment variables. Threaded
+//!   through `Runtime::reference*` constructors so the engine, batcher,
+//!   server and benches all pick it up.
+//! * [`WorkerPool`] — a persistent pool of `threads - 1` workers plus the
+//!   submitting thread, exposing one operation: [`WorkerPool::run`], a
+//!   parallel-for over `n` independent work items. Items are claimed from
+//!   an atomic counter so imbalanced units (attention row-blocks grow with
+//!   the query index) self-balance.
+//!
+//! ## Determinism contract
+//!
+//! `run(n, f)` promises nothing about *which* thread executes an item —
+//! callers must only submit items whose outputs are disjoint and whose
+//! per-item computation is independent of thread assignment. The reference
+//! backend's prefill/decode drivers are built so every floating-point
+//! reduction happens either inside one item or in a fixed-order serial
+//! merge afterwards; that is what makes `threads ∈ {1, 2, 8}` produce
+//! bitwise-identical artifacts (see the equivalence tests in
+//! `tests/integration.rs`).
+//!
+//! The pool runs one job at a time (submissions serialize on an internal
+//! lock); a panicking item is caught on the worker and re-raised on the
+//! submitting thread once the job drains.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Default query-row block size for the blocked prefill kernels (rows per
+/// attention work unit, and the boundary grid for the fixed-order stat
+/// merge). Changing it changes the (deterministic) summation grouping of
+/// the per-position statistics; thread count never does.
+pub const DEFAULT_BLOCK_ROWS: usize = 64;
+
+/// Parallel execution configuration for the reference backend.
+///
+/// `threads == 1` selects the *scalar path*: the untuned naive kernels
+/// run inline on the calling thread, kept as the bitwise-equivalence
+/// oracle for the blocked kernels. `threads > 1` selects the blocked
+/// kernels (transposed-layout scores, panel matmul) plus the worker pool.
+/// Note the scalar path shares this PR's `fast_exp` and block-grid stat
+/// merge — it is bitwise identical to the *parallel* path at equal
+/// `block_rows`, not to the pre-rewrite backend (whose outputs differ by
+/// ~1e-5 relative; see the module docs in `runtime/reference.rs`).
+///
+/// # Examples
+///
+/// ```
+/// use kvzap::runtime::ParallelConfig;
+///
+/// let scalar = ParallelConfig::scalar();
+/// assert_eq!(scalar.threads, 1);
+///
+/// let four = ParallelConfig::with_threads(4);
+/// assert_eq!(four.threads, 4);
+/// assert_eq!(four.block_rows, ParallelConfig::auto().block_rows);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Total threads used per execution (submitter included). `1` = the
+    /// scalar reference path, no pool.
+    pub threads: usize,
+    /// Query rows per attention work unit (also the stat-merge grid).
+    pub block_rows: usize,
+}
+
+impl ParallelConfig {
+    /// The scalar reference path: one thread, naive kernels.
+    pub fn scalar() -> ParallelConfig {
+        ParallelConfig { threads: 1, block_rows: DEFAULT_BLOCK_ROWS }
+    }
+
+    /// Blocked + parallel with an explicit thread count (0 means auto).
+    pub fn with_threads(threads: usize) -> ParallelConfig {
+        let t = if threads == 0 { detected_parallelism() } else { threads };
+        ParallelConfig { threads: t.max(1), block_rows: DEFAULT_BLOCK_ROWS }
+    }
+
+    /// Auto-detected parallelism (`std::thread::available_parallelism`).
+    pub fn auto() -> ParallelConfig {
+        ParallelConfig::with_threads(0)
+    }
+
+    /// [`ParallelConfig::auto`] with `KVZAP_THREADS` / `KVZAP_BLOCK_ROWS`
+    /// environment overrides — what `Runtime::reference()` uses, so CI can
+    /// pin the whole tier-1 suite to either path.
+    pub fn from_env() -> ParallelConfig {
+        let mut cfg = match std::env::var("KVZAP_THREADS").ok().and_then(|v| v.parse().ok()) {
+            Some(0) | None => ParallelConfig::auto(),
+            Some(t) => ParallelConfig::with_threads(t),
+        };
+        if let Some(br) = std::env::var("KVZAP_BLOCK_ROWS").ok().and_then(|v| v.parse().ok()) {
+            if br > 0 {
+                cfg.block_rows = br;
+            }
+        }
+        cfg
+    }
+}
+
+fn detected_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+// ------------------------------------------------------------------ the pool
+
+/// Lifetime-erased borrow of the job closure. Valid strictly between job
+/// submission and the submitter observing `remaining == 0 && active == 0`
+/// (the submitter does not return before that, so workers never outlive
+/// the real borrow despite the `'static` lie).
+#[derive(Clone, Copy)]
+struct RawTask(&'static (dyn Fn(usize) + Sync));
+
+struct PoolState {
+    /// Monotone job id; workers adopt a job at most once.
+    epoch: u64,
+    task: Option<RawTask>,
+    n: usize,
+    /// Items not yet finished executing.
+    remaining: usize,
+    /// Workers currently inside the claim loop of the live job.
+    active: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here for the next job.
+    work_cv: Condvar,
+    /// The submitter parks here for job completion.
+    done_cv: Condvar,
+    /// Next unclaimed item index of the live job.
+    next: AtomicUsize,
+}
+
+/// A persistent worker pool executing one parallel-for job at a time.
+/// Construction is cheap for `threads <= 1` (no threads are spawned and
+/// [`WorkerPool::run`] degenerates to an inline loop).
+pub struct WorkerPool {
+    shared: std::sync::Arc<PoolShared>,
+    /// Serializes submissions (one job at a time).
+    submit: Mutex<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// A pool for `cfg.threads` total threads (spawns `threads - 1`
+    /// workers; the submitting thread participates in every job).
+    pub fn new(cfg: &ParallelConfig) -> WorkerPool {
+        let shared = std::sync::Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                task: None,
+                n: 0,
+                remaining: 0,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let workers = (1..cfg.threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("kvzap-ref-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn reference-backend worker")
+            })
+            .collect();
+        WorkerPool { shared, submit: Mutex::new(()), workers }
+    }
+
+    /// Number of threads that execute a job (workers + submitter).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Execute `f(0) .. f(n-1)` across the pool and the calling thread,
+    /// returning when all items completed. Items must have disjoint
+    /// outputs; claim order is unspecified. With no workers (or `n <= 1`)
+    /// the items run inline in index order.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let _job = self.submit.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // erase the borrow lifetime; `run` does not return before every
+            // claimed item finished, which bounds all worker accesses
+            let static_f: &'static (dyn Fn(usize) + Sync) =
+                unsafe { std::mem::transmute(f) };
+            st.task = Some(RawTask(static_f));
+            st.epoch += 1;
+            st.n = n;
+            st.remaining = n;
+            st.panicked = false;
+            self.shared.next.store(0, Ordering::SeqCst);
+            self.shared.work_cv.notify_all();
+        }
+        // the submitter works too
+        claim_items(&self.shared, f, n);
+        let panicked;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 || st.active > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.task = None;
+            panicked = st.panicked;
+        }
+        if panicked {
+            panic!("a reference-backend worker item panicked");
+        }
+    }
+}
+
+/// Claim-and-execute loop shared by workers and the submitter. Each
+/// executed item decrements `remaining`; the caller that finishes the last
+/// item wakes the submitter.
+fn claim_items(shared: &PoolShared, f: &(dyn Fn(usize) + Sync), n: usize) {
+    loop {
+        let i = shared.next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            return;
+        }
+        let ok = catch_unwind(AssertUnwindSafe(|| f(i))).is_ok();
+        let mut st = shared.state.lock().unwrap();
+        if !ok {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 && st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let (task, n) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.task.is_some() && st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    st.active += 1;
+                    break;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            (st.task.expect("live job after adoption"), st.n)
+        };
+        claim_items(shared, task.0, n);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.remaining == 0 && st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn inline_when_single_threaded() {
+        let pool = WorkerPool::new(&ParallelConfig::scalar());
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(17, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 17);
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once_across_threads() {
+        let pool = WorkerPool::new(&ParallelConfig::with_threads(4));
+        assert_eq!(pool.threads(), 4);
+        for round in 0..50 {
+            let n = 1 + (round % 97);
+            let marks: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run(n, &|i| {
+                marks[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, m) in marks.iter().enumerate() {
+                assert_eq!(m.load(Ordering::Relaxed), 1, "item {i} of round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_land() {
+        let pool = WorkerPool::new(&ParallelConfig::with_threads(3));
+        let out: Vec<Mutex<usize>> = (0..256).map(|_| Mutex::new(0)).collect();
+        pool.run(256, &|i| {
+            *out[i].lock().unwrap() = i * i;
+        });
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(*o.lock().unwrap(), i * i);
+        }
+    }
+
+    #[test]
+    fn env_and_explicit_configs() {
+        assert_eq!(ParallelConfig::scalar().threads, 1);
+        assert!(ParallelConfig::auto().threads >= 1);
+        assert_eq!(ParallelConfig::with_threads(8).threads, 8);
+        assert_eq!(ParallelConfig::with_threads(0).threads, ParallelConfig::auto().threads);
+    }
+
+    #[test]
+    fn pool_survives_item_panic() {
+        let pool = WorkerPool::new(&ParallelConfig::with_threads(2));
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate to the submitter");
+        // the pool still works afterwards
+        let hits = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+}

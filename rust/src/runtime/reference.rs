@@ -35,6 +35,27 @@
 //! Anything numeric here is mirrored 1:1 by the tuning prototype that set
 //! the gain constants; change the constants together with the margins
 //! documented on the integration tests.
+//!
+//! ## Compute core: scalar vs blocked-parallel
+//!
+//! The forward passes are organized as **work units with a fixed-order
+//! merge** and driven by [`super::parallel::WorkerPool`]:
+//!
+//! * prefill — units are `(kv head, query group, query row-block)` for
+//!   attention plus `(kv head, query group, position-block)` for the
+//!   Eq. 3 value-norm table; per-position statistics accumulate into
+//!   per-unit partials that are merged serially in a fixed order, so the
+//!   emitted bits never depend on the thread count.
+//! * resident/legacy decode — units are group slots (each slot's cache
+//!   rows and scratch are disjoint `split_at_mut` views).
+//!
+//! [`super::parallel::ParallelConfig::threads`] `== 1` selects the
+//! *scalar path* (the original naive kernels, run inline); `> 1` selects
+//! the cache-blocked transposed-layout kernels in [`super::kernels`].
+//! Both paths share the same unit decomposition, merge order and
+//! [`super::kernels::fast_exp`], and the blocked kernels preserve
+//! per-output reduction order — which is why the integration suite can
+//! assert the two paths (and any thread count) are **bitwise identical**.
 
 #![allow(clippy::needless_range_loop)]
 
@@ -45,7 +66,9 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, Result};
 
 use super::backend::{Arg, Backend, Buffer, BufferRepr, KvHandle};
+use super::kernels::{self, fast_exp};
 use super::manifest::{ArtifactMeta, Buckets, IoSpec, Manifest, ModelDims, SpecialTokens};
+use super::parallel::{ParallelConfig, WorkerPool};
 use super::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -212,24 +235,6 @@ fn gen_weights() -> RefWeights {
 
 // --------------------------------------------------------------- math helpers
 
-/// out [n,b] = x [n,a] @ w [a,b] (row-major, f32 accumulation).
-fn matmul(x: &[f32], w: &[f32], n: usize, a: usize, b: usize, out: &mut [f32]) {
-    out[..n * b].fill(0.0);
-    for i in 0..n {
-        for k in 0..a {
-            let xv = x[i * a + k];
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[k * b..k * b + b];
-            let orow = &mut out[i * b..i * b + b];
-            for j in 0..b {
-                orow[j] += xv * wrow[j];
-            }
-        }
-    }
-}
-
 fn rmsnorm_row(x: &[f32], out: &mut [f32]) {
     let mut ms = 0.0f32;
     for &v in x {
@@ -261,14 +266,6 @@ fn apply_rope(x: &mut [f32], cos: &[f32; HALF], sin: &[f32; HALF]) {
         x[i] = x1 * cos[i] - x2 * sin[i];
         x[i + HALF] = x1 * sin[i] + x2 * cos[i];
     }
-}
-
-fn dot8(a: &[f32], b: &[f32]) -> f32 {
-    let mut s = 0.0;
-    for i in 0..D {
-        s += a[i] * b[i];
-    }
-    s
 }
 
 fn norm(xs: &[f32]) -> f32 {
@@ -314,10 +311,153 @@ struct PrefillOut {
     knorm: Vec<f32>,
 }
 
+/// Kernel selection + worker pool, threaded from the backend into the
+/// prefill/decode drivers (`cfg.threads == 1` ⇒ scalar path, inline).
+struct ParCtx<'a> {
+    cfg: ParallelConfig,
+    pool: &'a WorkerPool,
+}
+
+/// Per-unit partial statistics of one `(kv, g, row-block)` attention unit:
+/// everything the original inner loop accumulated across queries, reduced
+/// over this unit's rows only. Arrays cover positions `s < len` (the last
+/// query row of the unit attends that far); the serial fixed-order merge
+/// folds them into the `[L, H, n]` outputs.
+struct UnitStats {
+    len: usize,
+    maxp: Vec<f32>,
+    maxn: Vec<f32>,
+    cum: Vec<f32>,
+    win: Vec<f32>,
+}
+
+impl UnitStats {
+    fn new(len: usize) -> UnitStats {
+        UnitStats {
+            len,
+            maxp: vec![0.0; len],
+            maxn: vec![0.0; len],
+            cum: vec![0.0; len],
+            win: vec![0.0; len],
+        }
+    }
+}
+
+/// Carve `buf` into consecutive disjoint mutable chunks (one per work
+/// unit), each behind a `Mutex<Option<..>>` cell a pool worker can take.
+fn carve<'a>(
+    mut buf: &'a mut [f32],
+    sizes: impl Iterator<Item = usize>,
+) -> Vec<Mutex<Option<&'a mut [f32]>>> {
+    let mut out = Vec::new();
+    for sz in sizes {
+        let (head, tail) = buf.split_at_mut(sz);
+        out.push(Mutex::new(Some(head)));
+        buf = tail;
+    }
+    out
+}
+
+/// One attention work unit: queries `j0..j1` of query head `kv*GRP + g`.
+/// Computes softmax rows, the attention output rows (disjoint per unit)
+/// and the unit's partial statistics. The score kernel is the only
+/// scalar/blocked divergence (`kt` panel vs strided dot) and both sum the
+/// head dim in ascending order, so the unit's output bits are identical on
+/// either path.
+#[allow(clippy::too_many_arguments)]
+fn attn_unit(
+    w: &RefWeights,
+    kv: usize,
+    g: usize,
+    j0: usize,
+    j1: usize,
+    n: usize,
+    qk_buf: &[f32],
+    kbuf: &[f32],
+    kt: Option<&[f32]>,
+    vbuf: &[f32],
+    hnorm_inv: &[f32],
+    stats_from: usize,
+    win_from: usize,
+    rows: &mut [f32],
+    st: &mut UnitStats,
+) {
+    let qh = kv * GRP + g;
+    let mut row = vec![0.0f32; j1];
+    for j in j0..j1 {
+        let jp1 = j + 1;
+        let q = &qk_buf[j * HQ * D + qh * D..j * HQ * D + qh * D + D];
+        match kt {
+            Some(kt) => kernels::scores_from_kt(
+                q,
+                &kt[kv * D * n..(kv + 1) * D * n],
+                n,
+                D,
+                jp1,
+                &mut row,
+            ),
+            None => {
+                for s in 0..jp1 {
+                    let k = &kbuf[s * HKV * D + kv * D..s * HKV * D + kv * D + D];
+                    row[s] = kernels::dot(q, k, D);
+                }
+            }
+        }
+        let mut m = f32::NEG_INFINITY;
+        for &sc in &row[..jp1] {
+            if sc > m {
+                m = sc;
+            }
+        }
+        for r in &mut row[..jp1] {
+            *r = fast_exp(*r - m);
+        }
+        let mut sum = 0.0f32;
+        for &e in &row[..jp1] {
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for r in &mut row[..jp1] {
+            *r *= inv;
+        }
+        let orow = &mut rows[(j - j0) * D..(j - j0) * D + D];
+        for s in 0..jp1 {
+            let a = row[s];
+            let vrow = &vbuf[s * HKV * D + kv * D..s * HKV * D + kv * D + D];
+            for d in 0..D {
+                orow[d] += a * vrow[d];
+            }
+        }
+        if j >= stats_from {
+            for s in 0..jp1 {
+                if row[s] > st.maxp[s] {
+                    st.maxp[s] = row[s];
+                }
+            }
+            let hi = hnorm_inv[j];
+            for s in 0..jp1 {
+                let an = row[s] * hi;
+                if an > st.maxn[s] {
+                    st.maxn[s] = an;
+                }
+            }
+            for s in 0..jp1 {
+                st.cum[s] += row[s];
+            }
+        }
+        if j >= win_from {
+            for s in 0..jp1 {
+                st.win[s] += row[s];
+            }
+        }
+    }
+}
+
 /// Causal GQA prefill with statistics over `toks` (true content only —
 /// bucket padding is the caller's concern). `stats_from` restricts the
 /// max/maxn statistics to queries >= stats_from (the KVzip oracle pass).
-fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize) -> PrefillOut {
+/// See the module docs for the scalar/blocked work-unit structure.
+fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize, par: &ParCtx) -> PrefillOut {
     let n = toks.len();
     let win_from = n.saturating_sub(OBS_WINDOW);
     let lhn = L * HKV * n;
@@ -342,21 +482,27 @@ fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize) -> PrefillOut {
         h[j * DM..j * DM + DM].copy_from_slice(&w.emb[b * DM..b * DM + DM]);
     }
 
+    let blocked = par.cfg.threads > 1;
+    let br = par.cfg.block_rows.max(1);
+    let njb = n.div_ceil(br);
+    // threads == 1 is the scalar path: naive kernels, inline execution
+    let mm: fn(&[f32], &[f32], usize, usize, usize, &mut [f32]) =
+        if blocked { kernels::matmul_blocked } else { kernels::matmul };
+
     let mut x = vec![0.0f32; n * DM];
     let mut qk_buf = vec![0.0f32; n * HQ * D]; // reused for q then o
     let mut kbuf = vec![0.0f32; n * HKV * D];
     let mut vbuf = vec![0.0f32; n * HKV * D];
     let mut tmp = vec![0.0f32; n * DSUR.max(HKV)];
-    let mut row = vec![0.0f32; n];
     let mut hnorm_inv = vec![0.0f32; n];
-    let mut maxn = vec![0.0f32; GRP * n];
-    let mut vng = vec![0.0f32; GRP * n];
+    let mut maxn = vec![0.0f32; HKV * GRP * n];
+    let mut vng = vec![0.0f32; HKV * GRP * n];
     let mut attn_out = vec![0.0f32; HQ * n * D];
 
     for l in 0..L {
         let sbase = l * HKV * n;
         // surrogate scores from the layer *input* hidden states
-        matmul(&h, &w.w_sl, n, DM, HKV, &mut tmp[..n * HKV]);
+        mm(&h, &w.w_sl, n, DM, HKV, &mut tmp[..n * HKV]);
         for j in 0..n {
             for hh in 0..HKV {
                 out.score_lin[sbase + hh * n + j] = tmp[j * HKV + hh] + w.b_sl[hh];
@@ -364,13 +510,13 @@ fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize) -> PrefillOut {
         }
         {
             let mut z = vec![0.0f32; n * DSUR];
-            matmul(&h, &w.w1, n, DM, DSUR, &mut z);
+            mm(&h, &w.w1, n, DM, DSUR, &mut z);
             for j in 0..n {
                 for m in 0..DSUR {
                     z[j * DSUR + m] = gelu(z[j * DSUR + m] + w.b1[m]);
                 }
             }
-            matmul(&z, &w.w2, n, DSUR, HKV, &mut tmp[..n * HKV]);
+            mm(&z, &w.w2, n, DSUR, HKV, &mut tmp[..n * HKV]);
             for j in 0..n {
                 for hh in 0..HKV {
                     out.score_mlp[sbase + hh * n + j] = tmp[j * HKV + hh] + w.b2[hh];
@@ -385,9 +531,9 @@ fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize) -> PrefillOut {
         for j in 0..n {
             rmsnorm_row(&h[j * DM..j * DM + DM], &mut x[j * DM..j * DM + DM]);
         }
-        matmul(&x, &w.wq, n, DM, HQ * D, &mut qk_buf);
-        matmul(&x, &w.wk, n, DM, HKV * D, &mut kbuf);
-        matmul(&x, &w.wv, n, DM, HKV * D, &mut vbuf);
+        mm(&x, &w.wq, n, DM, HQ * D, &mut qk_buf);
+        mm(&x, &w.wk, n, DM, HKV * D, &mut kbuf);
+        mm(&x, &w.wv, n, DM, HKV * D, &mut vbuf);
         let scale = 1.0 / (D as f32).sqrt();
         for j in 0..n {
             let (cos, sin) = rope_angles(j as f32);
@@ -407,58 +553,105 @@ fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize) -> PrefillOut {
             }
         }
 
-        // attention + statistics, per kv head
+        // attention + statistics as parallel work units: attention units
+        // are (kv, g, query row-block), value-norm units are (kv, g,
+        // position-block); outputs are disjoint carved slices and the
+        // statistics land in per-unit partials
         attn_out.fill(0.0);
-        for kv in 0..HKV {
-            maxn[..GRP * n].fill(0.0);
-            for g in 0..GRP {
-                let qh = kv * GRP + g;
-                for s in 0..n {
-                    vng[g * n + s] =
-                        vnorm_one(w, qh, &vbuf[s * HKV * D + kv * D..s * HKV * D + kv * D + D]);
-                }
+        maxn.fill(0.0);
+        let kt: Option<Vec<f32>> = if blocked {
+            // transposed [D, n] key panels per kv head for the blocked
+            // score kernel (contiguous position lanes)
+            let mut buf = vec![0.0f32; HKV * D * n];
+            for kv in 0..HKV {
+                let panel = &mut buf[kv * D * n..(kv + 1) * D * n];
+                kernels::pack_kt(&kbuf, kv * D, HKV * D, n, D, panel);
             }
+            Some(buf)
+        } else {
+            None
+        };
+        let n_units = HKV * GRP * njb;
+        let stats_cells: Vec<Mutex<Option<UnitStats>>> =
+            (0..n_units).map(|_| Mutex::new(None)).collect();
+        {
+            let block_of = |u: usize| {
+                let j0 = (u % njb) * br;
+                (j0, (j0 + br).min(n))
+            };
+            let attn_slices = carve(
+                &mut attn_out,
+                (0..n_units).map(|u| {
+                    let (j0, j1) = block_of(u);
+                    (j1 - j0) * D
+                }),
+            );
+            let vng_slices = carve(
+                &mut vng,
+                (0..n_units).map(|u| {
+                    let (s0, s1) = block_of(u);
+                    s1 - s0
+                }),
+            );
+            let kt_ref = kt.as_deref();
+            let (qk, kb, vb, hn) = (&qk_buf, &kbuf, &vbuf, &hnorm_inv);
+            let worker = |u: usize| {
+                if u < n_units {
+                    let kv = u / (GRP * njb);
+                    let g = (u / njb) % GRP;
+                    let (j0, j1) = block_of(u);
+                    let rows = attn_slices[u].lock().unwrap().take().unwrap();
+                    let mut st = UnitStats::new(j1);
+                    attn_unit(
+                        w,
+                        kv,
+                        g,
+                        j0,
+                        j1,
+                        n,
+                        qk,
+                        kb,
+                        kt_ref,
+                        vb,
+                        hn,
+                        stats_from,
+                        win_from,
+                        rows,
+                        &mut st,
+                    );
+                    *stats_cells[u].lock().unwrap() = Some(st);
+                } else {
+                    let v = u - n_units;
+                    let kv = v / (GRP * njb);
+                    let g = (v / njb) % GRP;
+                    let (s0, s1) = block_of(v);
+                    let chunk = vng_slices[v].lock().unwrap().take().unwrap();
+                    for (i, s) in (s0..s1).enumerate() {
+                        let vrow = &vb[s * HKV * D + kv * D..s * HKV * D + kv * D + D];
+                        chunk[i] = vnorm_one(w, kv * GRP + g, vrow);
+                    }
+                }
+            };
+            par.pool.run(2 * n_units, &worker);
+        }
+        // fixed-order serial merge of the unit partials (g asc, row-block
+        // asc per kv head): this order — never the thread schedule —
+        // defines the floating-point grouping of the statistics
+        for kv in 0..HKV {
             for g in 0..GRP {
-                let qh = kv * GRP + g;
-                for j in 0..n {
-                    let q = &qk_buf[j * HQ * D + qh * D..j * HQ * D + qh * D + D];
-                    let mut m = f32::NEG_INFINITY;
-                    for s in 0..=j {
-                        let sc = dot8(q, &kbuf[s * HKV * D + kv * D..s * HKV * D + kv * D + D]);
-                        row[s] = sc;
-                        if sc > m {
-                            m = sc;
+                let gbase = (kv * GRP + g) * n;
+                for jb in 0..njb {
+                    let cell = (kv * GRP + g) * njb + jb;
+                    let st = stats_cells[cell].lock().unwrap().take().unwrap();
+                    let mi0 = sbase + kv * n;
+                    for s in 0..st.len {
+                        if st.maxp[s] > out.max_attn[mi0 + s] {
+                            out.max_attn[mi0 + s] = st.maxp[s];
                         }
-                    }
-                    let mut sum = 0.0f32;
-                    for s in 0..=j {
-                        let e = (row[s] - m).exp();
-                        row[s] = e;
-                        sum += e;
-                    }
-                    let inv = 1.0 / sum;
-                    let stats_q = j >= stats_from;
-                    let win_q = j >= win_from;
-                    for s in 0..=j {
-                        let a = row[s] * inv;
-                        let vrow = &vbuf[s * HKV * D + kv * D..s * HKV * D + kv * D + D];
-                        let orow = &mut attn_out[qh * n * D + j * D..qh * n * D + j * D + D];
-                        for d in 0..D {
-                            orow[d] += a * vrow[d];
-                        }
-                        if stats_q {
-                            let mi = sbase + kv * n + s;
-                            if a > out.max_attn[mi] {
-                                out.max_attn[mi] = a;
-                            }
-                            let an = a * hnorm_inv[j];
-                            if an > maxn[g * n + s] {
-                                maxn[g * n + s] = an;
-                            }
-                            out.cum_attn[mi] += a;
-                        }
-                        if win_q {
-                            out.win_attn[sbase + kv * n + s] += a;
+                        out.cum_attn[mi0 + s] += st.cum[s];
+                        out.win_attn[mi0 + s] += st.win[s];
+                        if st.maxn[s] > maxn[gbase + s] {
+                            maxn[gbase + s] = st.maxn[s];
                         }
                     }
                 }
@@ -467,8 +660,9 @@ fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize) -> PrefillOut {
                 let mut plus = 0.0f32;
                 let mut vn = 0.0f32;
                 for g in 0..GRP {
-                    plus = plus.max(maxn[g * n + s] * vng[g * n + s]);
-                    vn = vn.max(vng[g * n + s]);
+                    let gi = (kv * GRP + g) * n + s;
+                    plus = plus.max(maxn[gi] * vng[gi]);
+                    vn = vn.max(vng[gi]);
                 }
                 out.plus_attn[sbase + kv * n + s] = plus;
                 out.vnorm[sbase + kv * n + s] = vn;
@@ -491,7 +685,7 @@ fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize) -> PrefillOut {
             }
         }
         let mut delta = vec![0.0f32; n * DM];
-        matmul(&x[..n * HQ * D], &w.wo, n, HQ * D, DM, &mut delta);
+        mm(&x[..n * HQ * D], &w.wo, n, HQ * D, DM, &mut delta);
         for i in 0..n * DM {
             h[i] += delta[i];
         }
@@ -524,24 +718,48 @@ struct DecodeScratch {
     attn_row: Vec<f32>, // [L, B, HKV, T_MAX + 1]
 }
 
-/// One masked decode step for one batch slot, against the dense padded
-/// cache. Mirrors kernels/ref.py::decode_attention_ref: row `pos` of the
-/// cache is written *after* attending (the new KV participates via a
-/// virtual appended row, exactly the static-shape S = t_max + 1 trick the
-/// decode artifact uses).
-#[allow(clippy::too_many_arguments)]
-fn decode_slot(
-    w: &RefWeights,
-    t_max: usize,
-    token: i32,
-    pos: usize,
-    slot: usize,
-    batch: usize,
-    kc: &mut [f32],
-    vc: &mut [f32],
-    mask: &[f32],
-    out: &mut DecodeScratch,
-) {
+/// One decode slot's disjoint mutable views into the group cache and
+/// scratch — the unit of work the parallel decode driver hands a thread.
+/// Cache/mask/attn-row chunks are ordered `(layer, kv head)`; the
+/// surrogate chunks are ordered by layer. Built with `split`/`chunks_mut`,
+/// so concurrent slots never alias.
+struct SlotViews<'a> {
+    kc: Vec<&'a mut [f32]>,        // L*HKV × [t_max * D]
+    vc: Vec<&'a mut [f32]>,        // L*HKV × [t_max * D]
+    mask: Vec<&'a [f32]>,          // L*HKV × [t_max]
+    logits: &'a mut [f32],         // [V]
+    score_lin: Vec<&'a mut [f32]>, // L × [HKV]
+    score_mlp: Vec<&'a mut [f32]>, // L × [HKV]
+    vnorm: Vec<&'a mut [f32]>,     // L × [HKV]
+    attn_row: Vec<&'a mut [f32]>,  // L*HKV × [t_max + 1]
+}
+
+/// Split a `[L, B, inner, chunk]`-shaped flat buffer into per-slot chunk
+/// lists (each list ordered `(l, inner)`-major), so slots can be decoded
+/// concurrently without aliasing.
+fn carve_slots_mut(buf: &mut [f32], b: usize, inner: usize, chunk: usize) -> Vec<Vec<&mut [f32]>> {
+    let mut out: Vec<Vec<&mut [f32]>> = (0..b).map(|_| Vec::new()).collect();
+    for (i, c) in buf.chunks_mut(chunk).enumerate() {
+        out[(i / inner) % b].push(c);
+    }
+    out
+}
+
+/// Immutable sibling of [`carve_slots_mut`].
+fn carve_slots_ref(buf: &[f32], b: usize, inner: usize, chunk: usize) -> Vec<Vec<&[f32]>> {
+    let mut out: Vec<Vec<&[f32]>> = (0..b).map(|_| Vec::new()).collect();
+    for (i, c) in buf.chunks(chunk).enumerate() {
+        out[(i / inner) % b].push(c);
+    }
+    out
+}
+
+/// One masked decode step for one batch slot, against that slot's views of
+/// the dense padded cache. Mirrors kernels/ref.py::decode_attention_ref:
+/// row `pos` of the cache is written *after* attending (the new KV
+/// participates via a virtual appended row, exactly the static-shape
+/// S = t_max + 1 trick the decode artifact uses).
+fn decode_slot(w: &RefWeights, t_max: usize, token: i32, pos: usize, sv: &mut SlotViews) {
     let b = token.clamp(0, V as i32 - 1) as usize;
     let pos = pos.min(t_max - 1);
     let mut h = [0.0f32; DM];
@@ -559,7 +777,7 @@ fn decode_slot(
             for i in 0..DM {
                 lin += h[i] * w.w_sl[i * HKV + hh];
             }
-            out.score_lin[(l * batch + slot) * HKV + hh] = lin;
+            sv.score_lin[l][hh] = lin;
         }
         {
             let mut z = [0.0f32; DSUR];
@@ -575,7 +793,7 @@ fn decode_slot(
                 for m in 0..DSUR {
                     mlp += z[m] * w.w2[m * HKV + hh];
                 }
-                out.score_mlp[(l * batch + slot) * HKV + hh] = mlp;
+                sv.score_mlp[l][hh] = mlp;
             }
         }
 
@@ -608,12 +826,15 @@ fn decode_slot(
 
         let mut attn_out = [0.0f32; HQ * D];
         for kv in 0..HKV {
-            let mbase = ((l * batch + slot) * HKV + kv) * t_max;
-            let cbase = mbase * D;
+            let lh = l * HKV + kv;
+            let kc = &mut *sv.kc[lh];
+            let vc = &mut *sv.vc[lh];
+            let mask = sv.mask[lh];
+            let ar = &mut *sv.attn_row[lh];
             // attendable positions: masked cache rows + the appended new KV
             let mut nkeep = 0;
             for s in 0..t_max {
-                if mask[mbase + s] > 0.0 {
+                if mask[s] > 0.0 {
                     keep[nkeep] = s;
                     nkeep += 1;
                 }
@@ -626,9 +847,9 @@ fn decode_slot(
                 let mut m = f32::NEG_INFINITY;
                 for (i, &s) in keep[..nkeep].iter().enumerate() {
                     let sc = if s == t_max {
-                        dot8(qv, &kn[kv * D..kv * D + D])
+                        kernels::dot(qv, &kn[kv * D..kv * D + D], D)
                     } else {
-                        dot8(qv, &kc[cbase + s * D..cbase + s * D + D])
+                        kernels::dot(qv, &kc[s * D..s * D + D], D)
                     };
                     row[i] = sc;
                     if sc > m {
@@ -636,9 +857,9 @@ fn decode_slot(
                     }
                 }
                 let mut sum = 0.0f32;
-                for i in 0..nkeep {
-                    let e = (row[i] - m).exp();
-                    row[i] = e;
+                for r in &mut row[..nkeep] {
+                    let e = fast_exp(*r - m);
+                    *r = e;
                     sum += e;
                 }
                 let inv = 1.0 / sum;
@@ -647,12 +868,12 @@ fn decode_slot(
                     let vrow = if s == t_max {
                         &vn[kv * D..kv * D + D]
                     } else {
-                        &vc[cbase + s * D..cbase + s * D + D]
+                        &vc[s * D..s * D + D]
                     };
                     for d in 0..D {
                         attn_out[qh * D + d] += a * vrow[d];
                     }
-                    out.attn_row[((l * batch + slot) * HKV + kv) * (t_max + 1) + s] += a;
+                    ar[s] += a;
                 }
             }
             // vnorm statistic for the new KV pair
@@ -660,10 +881,10 @@ fn decode_slot(
             for g in 0..GRP {
                 vmax = vmax.max(vnorm_one(w, kv * GRP + g, &vn[kv * D..kv * D + D]));
             }
-            out.vnorm[(l * batch + slot) * HKV + kv] = vmax;
+            sv.vnorm[l][kv] = vmax;
             // write the new KV into its true cache slot
-            kc[cbase + pos * D..cbase + pos * D + D].copy_from_slice(&kn[kv * D..kv * D + D]);
-            vc[cbase + pos * D..cbase + pos * D + D].copy_from_slice(&vn[kv * D..kv * D + D]);
+            kc[pos * D..pos * D + D].copy_from_slice(&kn[kv * D..kv * D + D]);
+            vc[pos * D..pos * D + D].copy_from_slice(&vn[kv * D..kv * D + D]);
         }
         for qh in 0..HQ {
             for d in 0..D {
@@ -686,7 +907,7 @@ fn decode_slot(
             continue;
         }
         for b in 0..V {
-            out.logits[slot * V + b] += hv * w.w_out[i * V + b];
+            sv.logits[b] += hv * w.w_out[i * V + b];
         }
     }
 }
@@ -708,24 +929,106 @@ struct RefKvGroup {
 pub struct ReferenceBackend {
     w: RefWeights,
     t_max: usize,
+    cfg: ParallelConfig,
+    pool: WorkerPool,
     kv: Mutex<HashMap<u64, Arc<Mutex<RefKvGroup>>>>,
     next_kv: AtomicU64,
 }
 
 impl ReferenceBackend {
+    /// Default capacity, parallelism from the environment
+    /// ([`ParallelConfig::from_env`]: auto threads unless `KVZAP_THREADS`
+    /// pins them).
     pub fn new() -> ReferenceBackend {
-        Self::with_t_max(T_MAX)
+        Self::with_options(T_MAX, ParallelConfig::from_env())
     }
 
     /// A reference backend with a non-default cache capacity (the decode
     /// bench sweeps t_max; the model semantics are unchanged).
     pub fn with_t_max(t_max: usize) -> ReferenceBackend {
+        Self::with_options(t_max, ParallelConfig::from_env())
+    }
+
+    /// Full control over capacity and the parallel/blocked compute path —
+    /// `cfg.threads == 1` is the scalar reference path, anything larger
+    /// runs the blocked kernels over a persistent worker pool. Outputs are
+    /// bitwise identical across configs with equal `block_rows`.
+    pub fn with_options(t_max: usize, cfg: ParallelConfig) -> ReferenceBackend {
         assert!(t_max >= *PREFILL_T.iter().max().unwrap(), "t_max below the prefill buckets");
         ReferenceBackend {
             w: gen_weights(),
             t_max,
+            cfg,
+            pool: WorkerPool::new(&cfg),
             kv: Mutex::new(HashMap::new()),
             next_kv: AtomicU64::new(1),
+        }
+    }
+
+    /// The active parallel configuration.
+    pub fn parallel_config(&self) -> ParallelConfig {
+        self.cfg
+    }
+
+    fn par(&self) -> ParCtx<'_> {
+        ParCtx { cfg: self.cfg, pool: &self.pool }
+    }
+
+    /// Decode every slot of one group step, in parallel across slots when
+    /// the config allows (slots are disjoint carved views; per-slot math
+    /// is identical either way, so thread count never changes the bits).
+    #[allow(clippy::too_many_arguments)]
+    fn decode_group_run(
+        &self,
+        b: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        kc: &mut [f32],
+        vc: &mut [f32],
+        mask: &[f32],
+        scratch: &mut DecodeScratch,
+    ) {
+        let t_max = self.t_max;
+        let kviews = carve_slots_mut(kc, b, HKV, t_max * D);
+        let vviews = carve_slots_mut(vc, b, HKV, t_max * D);
+        let mviews = carve_slots_ref(mask, b, HKV, t_max);
+        let lviews = carve_slots_mut(&mut scratch.logits, b, 1, V);
+        let slviews = carve_slots_mut(&mut scratch.score_lin, b, 1, HKV);
+        let smviews = carve_slots_mut(&mut scratch.score_mlp, b, 1, HKV);
+        let vnviews = carve_slots_mut(&mut scratch.vnorm, b, 1, HKV);
+        let arviews = carve_slots_mut(&mut scratch.attn_row, b, HKV, t_max + 1);
+        let mut slots: Vec<SlotViews> = kviews
+            .into_iter()
+            .zip(vviews)
+            .zip(mviews)
+            .zip(lviews)
+            .zip(slviews)
+            .zip(smviews)
+            .zip(vnviews)
+            .zip(arviews)
+            .map(|(((((((kc, vc), mask), mut l), sl), sm), vn), ar)| SlotViews {
+                kc,
+                vc,
+                mask,
+                logits: l.pop().expect("one logits chunk per slot"),
+                score_lin: sl,
+                score_mlp: sm,
+                vnorm: vn,
+                attn_row: ar,
+            })
+            .collect();
+        if self.cfg.threads > 1 && b > 1 {
+            let work: Vec<Mutex<Option<SlotViews>>> =
+                slots.into_iter().map(|s| Mutex::new(Some(s))).collect();
+            let w = &self.w;
+            self.pool.run(b, &|s| {
+                let mut sv = work[s].lock().unwrap().take().unwrap();
+                decode_slot(w, t_max, tokens[s], pos[s].max(0) as usize, &mut sv);
+            });
+        } else {
+            for (s, sv) in slots.iter_mut().enumerate() {
+                decode_slot(&self.w, t_max, tokens[s], pos[s].max(0) as usize, sv);
+            }
         }
     }
 
@@ -749,7 +1052,7 @@ impl ReferenceBackend {
         let mut stats: Vec<Vec<f32>> = (0..8).map(|_| vec![0.0f32; L * b * HKV * t_max]).collect();
         for s in 0..b {
             let n = (lens[s].max(1) as usize).min(t).min(t_max);
-            let one = prefill_one(&self.w, &tokens[s * t..s * t + n], 0);
+            let one = prefill_one(&self.w, &tokens[s * t..s * t + n], 0, &self.par());
             logits[s * V..s * V + V].copy_from_slice(&one.logits);
             let srcs = [
                 &one.score_lin,
@@ -817,20 +1120,7 @@ impl ReferenceBackend {
         let mut kc = kc_in.data.clone();
         let mut vc = vc_in.data.clone();
         let mut scratch = self.decode_scratch(b);
-        for s in 0..b {
-            decode_slot(
-                &self.w,
-                t_max,
-                tokens[s],
-                pos[s].max(0) as usize,
-                s,
-                b,
-                &mut kc,
-                &mut vc,
-                &mask.data,
-                &mut scratch,
-            );
-        }
+        self.decode_group_run(b, tokens, pos, &mut kc, &mut vc, &mask.data, &mut scratch);
         Ok(vec![
             host(scratch.logits, vec![b, V])?,
             host(kc, vec![L, b, HKV, t_max, D])?,
@@ -852,7 +1142,7 @@ impl ReferenceBackend {
         let mut tok2 = Vec::with_capacity(2 * n);
         tok2.extend_from_slice(&tokens[..n]);
         tok2.extend_from_slice(&tokens[..n]);
-        let one = prefill_one(&self.w, &tok2, n);
+        let one = prefill_one(&self.w, &tok2, n, &self.par());
         let mut s = vec![0.0f32; L * HKV * t];
         let mut sp = vec![0.0f32; L * HKV * t];
         for l in 0..L {
@@ -895,6 +1185,17 @@ fn arg_buf<'a>(data: &'a [Arg], i: usize) -> Result<&'a Tensor> {
 impl Backend for ReferenceBackend {
     fn name(&self) -> &'static str {
         "reference"
+    }
+
+    fn describe(&self) -> String {
+        if self.cfg.threads > 1 {
+            format!(
+                "reference (blocked, threads={}, block_rows={})",
+                self.cfg.threads, self.cfg.block_rows
+            )
+        } else {
+            "reference (scalar)".to_string()
+        }
     }
 
     fn exec(&self, meta: &ArtifactMeta, data: &[Arg]) -> Result<Vec<Buffer>> {
@@ -1065,20 +1366,7 @@ impl Backend for ReferenceBackend {
         let mut g = g.lock().unwrap();
         let mut scratch = self.decode_scratch(b);
         let RefKvGroup { k, v, mask, .. } = &mut *g;
-        for s in 0..b {
-            decode_slot(
-                &self.w,
-                t_max,
-                tokens[s],
-                pos[s].max(0) as usize,
-                s,
-                b,
-                k,
-                v,
-                mask,
-                &mut scratch,
-            );
-        }
+        self.decode_group_run(b, tokens, pos, k, v, mask, &mut scratch);
         // the decoded row is attendable from the next step on (mirrors
         // PagedKvCache::fill — joins overwrite vacant-slot leftovers)
         for s in 0..b {
@@ -1121,10 +1409,28 @@ pub fn reference_manifest() -> Manifest {
     reference_manifest_with(T_MAX)
 }
 
+/// Bucket grid for a given capacity: the fixed seed buckets plus
+/// power-of-two extensions up to `t_max`, so long-context sweeps (the
+/// prefill bench) can prefill `t_max`-sized prompts in one pass. Applied
+/// to the kvzip oracle grid too, preserving the engine invariant
+/// `max_prompt() <= max(kvzip_t)` — every admitted prompt stays
+/// oracle-scorable.
+fn extend_ts(seed: &[usize], t_max: usize) -> Vec<usize> {
+    let mut ts = seed.to_vec();
+    let mut t = 1024;
+    while t <= t_max {
+        ts.push(t);
+        t *= 2;
+    }
+    ts
+}
+
 /// The reference manifest with a non-default cache capacity (pair with
 /// [`ReferenceBackend::with_t_max`]).
 pub fn reference_manifest_with(t_max: usize) -> Manifest {
     let mut artifacts = std::collections::HashMap::new();
+    let prefill_t = extend_ts(&PREFILL_T, t_max);
+    let kvzip_t = extend_ts(&KVZIP_T, t_max);
     let stat_outputs = |b: usize| -> Vec<IoSpec> {
         let mut outs = vec![
             io("logits", vec![b, V], "f32"),
@@ -1139,7 +1445,7 @@ pub fn reference_manifest_with(t_max: usize) -> Manifest {
         outs
     };
     for &b in &PREFILL_B {
-        for &t in &PREFILL_T {
+        for &t in &prefill_t {
             let name = format!("prefill_b{b}_t{t}");
             artifacts.insert(
                 name.clone(),
@@ -1184,7 +1490,7 @@ pub fn reference_manifest_with(t_max: usize) -> Manifest {
             },
         );
     }
-    for &t in &KVZIP_T {
+    for &t in &kvzip_t {
         let name = format!("kvzip_score_t{t}");
         artifacts.insert(
             name.clone(),
@@ -1226,10 +1532,10 @@ pub fn reference_manifest_with(t_max: usize) -> Manifest {
         window: WINDOW,
         obs_window: OBS_WINDOW,
         buckets: Buckets {
-            prefill_t: PREFILL_T.to_vec(),
+            prefill_t,
             prefill_b: PREFILL_B.to_vec(),
             decode_b: DECODE_B.to_vec(),
-            kvzip_t: KVZIP_T.to_vec(),
+            kvzip_t,
         },
         artifacts,
         weights: vec![],
@@ -1258,11 +1564,17 @@ mod tests {
         assert_eq!(a.w_out, b.w_out);
     }
 
+    fn scalar_prefill(w: &RefWeights, toks: &[i32], stats_from: usize) -> PrefillOut {
+        let cfg = ParallelConfig::scalar();
+        let pool = WorkerPool::new(&cfg);
+        prefill_one(w, toks, stats_from, &ParCtx { cfg, pool: &pool })
+    }
+
     #[test]
     fn surrogate_scores_are_salience_bimodal() {
         let w = gen_weights();
         // "a1" -> filler then digit
-        let one = prefill_one(&w, &[1, b'a' as i32, b'1' as i32], 0);
+        let one = scalar_prefill(&w, &[1, b'a' as i32, b'1' as i32], 0);
         // layer 0, head 0: positions BOS(salient), 'a'(filler), '1'(salient)
         let lin = &one.score_lin[0..3];
         assert!((lin[0] - (SUR_BIAS + SUR_GAIN * G_SAL)).abs() < 1e-4, "{lin:?}");
