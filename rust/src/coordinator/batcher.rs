@@ -1,7 +1,7 @@
 //! Continuous batcher: the request-level scheduler in front of the engine.
 //!
-//! Requests enter a queue; the scheduler thread keeps a set of slots (up
-//! to `max_batch`) and advances all resident sequences one token per
+//! Requests enter a queue; the scheduler keeps a set of slots (up to
+//! `max_batch`) and advances all resident sequences one token per
 //! iteration via [`Engine::decode_step`]. Between steps it admits queued
 //! requests into free slots — a sequence joins a *running* decode group
 //! the moment a slot opens, each with its own [`SamplingParams`] and
@@ -9,6 +9,20 @@
 //! scheduler could only start identical requests together). Cancellation
 //! frees a slot mid-decode. tokio is unavailable offline — the runtime is
 //! std threads + mpsc channels (DESIGN.md §7).
+//!
+//! The scheduling logic itself lives in [`SchedCore`], a synchronous
+//! deterministic state machine (submit/cancel intake, slot admission,
+//! one shared decode step, reaping). Two drivers exist:
+//!
+//! * [`Batcher`] — the production driver: a thread that blocks on an mpsc
+//!   queue, applies the batch-forming grace window, and calls
+//!   [`SchedCore::step`] in a loop.
+//! * the simulation harness ([`crate::simharness`]) — drives the same
+//!   core one discrete step at a time with no threads or timing, and uses
+//!   the step-level hooks ([`SchedCore::admit_waiting`],
+//!   [`SchedCore::decode_once`], [`SchedCore::live`],
+//!   [`SchedCore::group`]) to observe scheduler state between phases and
+//!   check invariants.
 //!
 //! Per-request progress flows over the request's `events` channel:
 //! [`SeqEvent::Token`] per accepted token (streaming requests only), then
@@ -23,7 +37,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::engine::{Engine, Sequence, StepEvent};
+use super::engine::{DecodeGroup, Engine, Sequence, StepEvent};
 use super::sampler::SamplingParams;
 use crate::policies::PolicySpec;
 
@@ -97,6 +111,209 @@ struct Slot {
     seq: Sequence,
 }
 
+/// The deterministic scheduling core shared by the threaded [`Batcher`]
+/// and the simulation harness: request intake, slot admission (prefill),
+/// one shared decode step over a persistent [`DecodeGroup`], and reaping
+/// of finished sequences. All methods are synchronous; determinism is the
+/// caller's to keep (same submit/cancel sequence at the same step
+/// boundaries → same token streams, bit for bit).
+pub struct SchedCore {
+    engine: Arc<Engine>,
+    max_batch: usize,
+    /// The scheduler's persistent decode session: the backend-resident
+    /// group KV cache lives here across steps, so sequences only pay a
+    /// scatter when they join and the steady-state step moves one KV row
+    /// per sequence.
+    group: DecodeGroup,
+    slots: Vec<Slot>,
+    waiting: VecDeque<Pending>,
+    /// Ids cancelled before their Submit was processed.
+    cancelled: HashSet<u64>,
+}
+
+impl SchedCore {
+    /// A fresh scheduler over `engine`. `cfg.max_batch` is clamped so the
+    /// scheduler never forms groups larger than the largest decode bucket.
+    pub fn new(engine: Arc<Engine>, cfg: BatcherConfig) -> SchedCore {
+        let max_bucket =
+            engine.rt.manifest.buckets.decode_b.iter().copied().max().unwrap_or(1);
+        let group = engine.decode_group();
+        SchedCore {
+            engine,
+            max_batch: cfg.max_batch.clamp(1, max_bucket),
+            group,
+            slots: vec![],
+            waiting: VecDeque::new(),
+            cancelled: HashSet::new(),
+        }
+    }
+
+    /// Effective batch cap (after decode-bucket clamping).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Enqueue a request under caller-chosen id `id`; progress arrives on
+    /// `req.events`. Ids must be unique among in-flight requests.
+    pub fn submit(&mut self, id: u64, req: Request) {
+        self.enqueue(Pending { id, req, arrived: Instant::now() });
+    }
+
+    fn enqueue(&mut self, p: Pending) {
+        if self.cancelled.remove(&p.id) {
+            respond_cancelled(&p);
+        } else {
+            self.waiting.push_back(p);
+        }
+    }
+
+    /// Cancel a request: a resident sequence is freed between decode steps
+    /// and its stream receives a final `Done` with reason "cancelled"
+    /// (carrying any partial text); a queued request is answered
+    /// immediately.
+    pub fn cancel(&mut self, id: u64) {
+        if let Some(slot) = self.slots.iter_mut().find(|s| s.id == id) {
+            slot.seq.cancel(); // freed by the next reap pass
+        } else if let Some(i) = self.waiting.iter().position(|p| p.id == id) {
+            let p = self.waiting.remove(i).unwrap();
+            respond_cancelled(&p);
+        } else {
+            // The Submit may still be queued behind us; remember the id so
+            // it is matched on arrival. Ids of already-finished or bogus
+            // requests would linger, so bound the set — dropping ancient
+            // entries only un-cancels requests that no longer exist.
+            if self.cancelled.len() >= 1024 {
+                self.cancelled.clear();
+            }
+            self.cancelled.insert(id);
+        }
+    }
+
+    /// No resident and no queued work.
+    pub fn is_idle(&self) -> bool {
+        self.slots.is_empty() && self.waiting.is_empty()
+    }
+
+    /// Resident plus queued request count (the batch-forming driver stops
+    /// waiting for companions once this reaches [`SchedCore::max_batch`]).
+    pub fn backlog(&self) -> usize {
+        self.slots.len() + self.waiting.len()
+    }
+
+    /// Slot-resident sequences in slot order, with their request ids.
+    /// Includes sequences that finished but have not been reaped yet.
+    pub fn live(&self) -> impl Iterator<Item = (u64, &Sequence)> + '_ {
+        self.slots.iter().map(|s| (s.id, &s.seq))
+    }
+
+    /// The persistent decode-group session (slot residency, capacity).
+    pub fn group(&self) -> &DecodeGroup {
+        &self.group
+    }
+
+    /// Move queued requests into free slots: build the policy, prefill,
+    /// and stream the first token. A sequence admitted here decodes
+    /// together with whatever is already mid-flight. Returns the ids
+    /// admitted (prefill failures are answered with an error response and
+    /// not included).
+    pub fn admit_waiting(&mut self) -> Vec<u64> {
+        let engine = self.engine.clone();
+        let mut admitted = vec![];
+        while self.slots.len() < self.max_batch && !self.waiting.is_empty() {
+            let p = self.waiting.pop_front().unwrap();
+            let policy = p.req.policy.build(engine.window());
+            let mut seq = engine.sequence(p.id, &p.req.prompt, p.req.sp.clone());
+            match engine.prefill(&mut seq, policy.as_ref()) {
+                Ok(events) => {
+                    let mut slot = Slot { id: p.id, req: p.req, arrived: p.arrived, seq };
+                    dispatch(std::slice::from_mut(&mut slot), &events);
+                    admitted.push(slot.id);
+                    self.slots.push(slot);
+                }
+                Err(e) => {
+                    let _ = p.req.events.send(SeqEvent::Done(error_response(
+                        p.arrived.elapsed().as_micros() as u64,
+                        format!("{e:#}"),
+                    )));
+                }
+            }
+        }
+        admitted
+    }
+
+    /// Send final responses for finished sequences and free their slots.
+    /// Returns the ids reaped.
+    pub fn reap_finished(&mut self) -> Vec<u64> {
+        let mut finished = vec![];
+        let mut i = 0;
+        while i < self.slots.len() {
+            if self.slots[i].seq.is_done() {
+                let slot = self.slots.remove(i);
+                let r = self.engine.finish(&slot.seq);
+                let e2e = slot.arrived.elapsed().as_micros() as u64;
+                self.engine.metrics.e2e.lock().unwrap().record(e2e);
+                let _ = slot.req.events.send(SeqEvent::Done(Response {
+                    text: r.text,
+                    compression: r.compression,
+                    tokens_out: r.tokens_out,
+                    e2e_us: e2e,
+                    error: None,
+                    reason: slot.seq.done_reason().map(|d| d.as_str().to_string()),
+                }));
+                finished.push(slot.id);
+            } else {
+                i += 1;
+            }
+        }
+        finished
+    }
+
+    /// Advance every resident sequence by one shared decode step and
+    /// forward token events to streaming requests. Returns the step's
+    /// [`StepEvent`]s. On an engine error every resident request is
+    /// answered with an error response, the slots are drained, and the
+    /// error is returned.
+    pub fn decode_once(&mut self) -> Result<Vec<StepEvent>> {
+        if self.slots.is_empty() {
+            return Ok(vec![]);
+        }
+        let engine = self.engine.clone();
+        let step = {
+            let mut live: Vec<&mut Sequence> =
+                self.slots.iter_mut().map(|s| &mut s.seq).collect();
+            engine.decode_step(&mut self.group, &mut live)
+        };
+        match step {
+            Ok(events) => {
+                dispatch(&mut self.slots, &events);
+                Ok(events)
+            }
+            Err(e) => {
+                for slot in self.slots.drain(..) {
+                    let _ = slot.req.events.send(SeqEvent::Done(error_response(
+                        slot.arrived.elapsed().as_micros() as u64,
+                        format!("{e:#}"),
+                    )));
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// One full scheduler iteration: admit, reap, decode, reap. Engine
+    /// errors were already answered to the affected requests and are
+    /// swallowed here (the production driver keeps serving).
+    pub fn step(&mut self) {
+        self.admit_waiting();
+        self.reap_finished();
+        if self.slots.is_empty() {
+            return;
+        }
+        let _ = self.decode_once();
+        self.reap_finished();
+    }
+}
+
 pub struct Batcher {
     tx: Sender<Msg>,
     next_id: AtomicU64,
@@ -106,10 +323,6 @@ pub struct Batcher {
 impl Batcher {
     pub fn start(engine: Arc<Engine>, cfg: BatcherConfig) -> Batcher {
         let (tx, rx) = mpsc::channel::<Msg>();
-        // never form groups larger than the largest decode bucket
-        let max_bucket =
-            engine.rt.manifest.buckets.decode_b.iter().copied().max().unwrap_or(1);
-        let cfg = BatcherConfig { max_batch: cfg.max_batch.clamp(1, max_bucket), ..cfg };
         let handle = std::thread::spawn(move || Self::run(engine, cfg, rx));
         Batcher { tx, next_id: AtomicU64::new(1), handle: Some(handle) }
     }
@@ -132,36 +345,28 @@ impl Batcher {
     }
 
     fn run(engine: Arc<Engine>, cfg: BatcherConfig, rx: Receiver<Msg>) {
-        let mut slots: Vec<Slot> = vec![];
-        // the scheduler's persistent decode session: the backend-resident
-        // group KV cache lives here across steps, so sequences only pay a
-        // scatter when they join and the steady-state step moves one KV
-        // row per sequence
-        let mut group = engine.decode_group();
-        let mut waiting: VecDeque<Pending> = VecDeque::new();
-        // ids cancelled before their Submit was processed
-        let mut cancelled: HashSet<u64> = HashSet::new();
+        let mut core = SchedCore::new(engine, cfg.clone());
         let mut disconnected = false;
         loop {
             // ---- message intake -------------------------------------------
-            if slots.is_empty() && waiting.is_empty() {
+            if core.is_idle() {
                 if disconnected {
                     return;
                 }
                 match rx.recv() {
-                    Ok(msg) => process(msg, &mut slots, &mut waiting, &mut cancelled),
+                    Ok(msg) => apply(&mut core, msg),
                     Err(_) => return,
                 }
                 // batch-forming grace: give companions up to max_wait_us to
                 // arrive before the first decode step
                 let deadline = Instant::now() + Duration::from_micros(cfg.max_wait_us);
-                while slots.len() + waiting.len() < cfg.max_batch {
+                while core.backlog() < core.max_batch() {
                     let now = Instant::now();
                     if now >= deadline {
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(msg) => process(msg, &mut slots, &mut waiting, &mut cancelled),
+                        Ok(msg) => apply(&mut core, msg),
                         Err(RecvTimeoutError::Timeout) => break,
                         Err(RecvTimeoutError::Disconnected) => {
                             disconnected = true;
@@ -173,7 +378,7 @@ impl Batcher {
                 // drain whatever arrived between steps (the slot-join point)
                 loop {
                     match rx.try_recv() {
-                        Ok(msg) => process(msg, &mut slots, &mut waiting, &mut cancelled),
+                        Ok(msg) => apply(&mut core, msg),
                         Err(TryRecvError::Empty) => break,
                         Err(TryRecvError::Disconnected) => {
                             disconnected = true;
@@ -182,65 +387,15 @@ impl Batcher {
                     }
                 }
             }
-            // ---- admit into free slots, then advance the group ------------
-            admit(&engine, &cfg, &mut slots, &mut waiting);
-            reap(&engine, &mut slots);
-            if slots.is_empty() {
-                continue;
-            }
-            let step = {
-                let mut live: Vec<&mut Sequence> =
-                    slots.iter_mut().map(|s| &mut s.seq).collect();
-                engine.decode_step(&mut group, &mut live)
-            };
-            match step {
-                Ok(events) => dispatch(&mut slots, events),
-                Err(e) => {
-                    for slot in slots.drain(..) {
-                        let _ = slot.req.events.send(SeqEvent::Done(error_response(
-                            slot.arrived.elapsed().as_micros() as u64,
-                            format!("{e:#}"),
-                        )));
-                    }
-                }
-            }
-            reap(&engine, &mut slots);
+            core.step();
         }
     }
 }
 
-fn process(
-    msg: Msg,
-    slots: &mut [Slot],
-    waiting: &mut VecDeque<Pending>,
-    cancelled: &mut HashSet<u64>,
-) {
+fn apply(core: &mut SchedCore, msg: Msg) {
     match msg {
-        Msg::Submit(p) => {
-            if cancelled.remove(&p.id) {
-                respond_cancelled(&p);
-            } else {
-                waiting.push_back(p);
-            }
-        }
-        Msg::Cancel(id) => {
-            if let Some(slot) = slots.iter_mut().find(|s| s.id == id) {
-                slot.seq.cancel(); // freed by the next reap pass
-            } else if let Some(i) = waiting.iter().position(|p| p.id == id) {
-                let p = waiting.remove(i).unwrap();
-                respond_cancelled(&p);
-            } else {
-                // The Submit may still be queued behind us; remember the id
-                // so it is matched on arrival. Ids of already-finished or
-                // bogus requests would linger, so bound the set — dropping
-                // ancient entries only un-cancels requests that no longer
-                // exist.
-                if cancelled.len() >= 1024 {
-                    cancelled.clear();
-                }
-                cancelled.insert(id);
-            }
-        }
+        Msg::Submit(p) => core.enqueue(p),
+        Msg::Cancel(id) => core.cancel(id),
     }
 }
 
@@ -255,73 +410,21 @@ fn respond_cancelled(p: &Pending) {
     }));
 }
 
-/// Move queued requests into free slots: build the policy, prefill, and
-/// stream the first token. A sequence admitted here decodes together with
-/// whatever is already mid-flight.
-fn admit(
-    engine: &Engine,
-    cfg: &BatcherConfig,
-    slots: &mut Vec<Slot>,
-    waiting: &mut VecDeque<Pending>,
-) {
-    while slots.len() < cfg.max_batch && !waiting.is_empty() {
-        let p = waiting.pop_front().unwrap();
-        let policy = p.req.policy.build(engine.window());
-        let mut seq = engine.sequence(p.id, &p.req.prompt, p.req.sp.clone());
-        match engine.prefill(&mut seq, policy.as_ref()) {
-            Ok(events) => {
-                let mut slot = Slot { id: p.id, req: p.req, arrived: p.arrived, seq };
-                forward_tokens(&mut slot, events);
-                slots.push(slot);
-            }
-            Err(e) => {
-                let _ = p.req.events.send(SeqEvent::Done(error_response(
-                    p.arrived.elapsed().as_micros() as u64,
-                    format!("{e:#}"),
-                )));
-            }
-        }
-    }
-}
-
-fn forward_tokens(slot: &mut Slot, events: Vec<StepEvent>) {
-    dispatch(std::slice::from_mut(slot), events);
-}
-
-fn dispatch(slots: &mut [Slot], events: Vec<StepEvent>) {
+fn dispatch(slots: &mut [Slot], events: &[StepEvent]) {
     for ev in events {
         if let StepEvent::Token { id, token, text, .. } = ev {
-            if let Some(slot) = slots.iter_mut().find(|s| s.id == id) {
+            if let Some(slot) = slots.iter_mut().find(|s| s.id == *id) {
                 if slot.req.stream
-                    && slot.req.events.send(SeqEvent::Token { token, text }).is_err()
+                    && slot
+                        .req
+                        .events
+                        .send(SeqEvent::Token { token: *token, text: text.clone() })
+                        .is_err()
                 {
                     // client went away: free the slot at the next reap
                     slot.seq.cancel();
                 }
             }
-        }
-    }
-}
-
-/// Send final responses for finished sequences and free their slots.
-fn reap(engine: &Engine, slots: &mut Vec<Slot>) {
-    let mut i = 0;
-    while i < slots.len() {
-        if slots[i].seq.is_done() {
-            let slot = slots.remove(i);
-            let r = engine.finish(&slot.seq);
-            let e2e = slot.arrived.elapsed().as_micros() as u64;
-            engine.metrics.e2e.lock().unwrap().record(e2e);
-            let _ = slot.req.events.send(SeqEvent::Done(Response {
-                text: r.text,
-                compression: r.compression,
-                tokens_out: r.tokens_out,
-                e2e_us: e2e,
-                error: None,
-                reason: slot.seq.done_reason().map(|d| d.as_str().to_string()),
-            }));
-        } else {
-            i += 1;
         }
     }
 }

@@ -242,6 +242,24 @@ impl Sequence {
         self.cache.stats()
     }
 
+    /// Process-unique identity nonce; slot residency in a [`DecodeGroup`]
+    /// is keyed by this (see [`DecodeGroup::resident_uids`]).
+    pub fn uid(&self) -> u64 {
+        self.uid
+    }
+
+    /// Next cache position to be written by decode (== tokens fed so far).
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Read-only view of this sequence's paged KV cache bookkeeping — the
+    /// per-head kept bitsets and the eviction dirty flag. The simulation
+    /// harness uses this to check accounting invariants after every step.
+    pub fn cache(&self) -> &PagedKvCache {
+        &self.cache
+    }
+
     /// Mark the sequence as cancelled; it will be skipped by subsequent
     /// decode steps. No-op when the sequence already finished.
     pub fn cancel(&mut self) {
@@ -302,6 +320,19 @@ impl DecodeGroup {
     /// Current slot capacity (the resident decode bucket's batch size).
     pub fn capacity(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Resident sequence uid per slot (0 = vacant), in slot order. A
+    /// finished sequence keeps its slot until a later step vacates it, so
+    /// entries here can name sequences that already completed.
+    pub fn resident_uids(&self) -> &[u64] {
+        &self.slots
+    }
+
+    /// The backend cache handle, if one is allocated (crate-internal: the
+    /// simulation harness uses it to inject accounting faults).
+    pub(crate) fn kv_handle(&self) -> Option<&KvHandle> {
+        self.handle.as_ref()
     }
 
     /// Free the backend cache; the next step reallocates and re-scatters.

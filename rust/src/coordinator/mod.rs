@@ -21,6 +21,6 @@ pub mod batcher;
 pub mod engine;
 pub mod sampler;
 
-pub use batcher::{Batcher, BatcherConfig, Request, Response, SeqEvent};
+pub use batcher::{Batcher, BatcherConfig, Request, Response, SchedCore, SeqEvent};
 pub use engine::{DecodeGroup, DoneReason, Engine, GenResult, Sequence, StepEvent};
 pub use sampler::{Sampler, SamplingParams};

@@ -216,6 +216,13 @@ impl PagedKvCache {
         std::mem::take(&mut self.dirty)
     }
 
+    /// Non-consuming view of the dirty flag (see [`PagedKvCache::take_dirty`]).
+    /// The simulation harness reads this to predict whether the engine's
+    /// next resident decode step will re-upload this sequence's mask.
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
     pub fn kept_in_head(&self, l: usize, h: usize) -> usize {
         self.kept_count[self.idx(l, h)]
     }

@@ -29,7 +29,9 @@
 //! * **L1/L2** (build-time python, optional): Pallas attention/scorer
 //!   kernels inside a GQA transformer, AOT-lowered to HLO-text artifacts.
 //! * **L3** (this crate): the serving coordinator — [`coordinator`],
-//!   [`kvcache`], [`policies`], [`server`] — plus the [`runtime`] backends.
+//!   [`kvcache`], [`policies`], [`server`] — plus the [`runtime`] backends
+//!   and the [`simharness`] scenario fuzzer that gates them (see
+//!   docs/TESTING.md).
 
 pub mod analysis;
 pub mod bench_support;
@@ -39,6 +41,7 @@ pub mod metrics;
 pub mod policies;
 pub mod runtime;
 pub mod server;
+pub mod simharness;
 pub mod util;
 pub mod workload;
 

@@ -8,6 +8,12 @@
 //!   policies                     pruning-policy catalog (params + defaults)
 //!   flops                        Appendix-B overhead table (Table 3)
 //!   metrics-demo                 quick built-in load test printing metrics
+//!   simulate [--seed S|A..B] [--steps K] [--clients N] [--max-batch B]
+//!            [--quick] [--no-solo] [--check-threads] [--threads T]
+//!            [--spec-file PATH] [--fault-step K]
+//!                                deterministic multi-client scenario fuzzer
+//!                                with invariant checking (docs/TESTING.md);
+//!                                exits non-zero when an invariant fires
 
 use std::sync::Arc;
 
@@ -66,15 +72,127 @@ fn main() -> Result<()> {
         "policies" => policies_catalog(&args),
         "flops" => flops(),
         "metrics-demo" => metrics_demo(&args),
+        "simulate" => simulate(&args),
         _ => {
             eprintln!(
-                "usage: kvzap <info|generate|eval|serve|policies|flops|metrics-demo> \
+                "usage: kvzap <info|generate|eval|serve|policies|flops|metrics-demo|simulate> \
                  [--key value ...]\n\
                  run `kvzap policies` for the pruning-policy catalog"
             );
             Ok(())
         }
     }
+}
+
+/// The simulation harness front-end: run seeded scenarios (or a replayed
+/// spec file) against the invariant registry; on a violation print the
+/// replay line, write the minimized scenario to SIM_FAILURE.json, and exit
+/// non-zero (the CI lane fails on any fired invariant).
+fn simulate(args: &Args) -> Result<()> {
+    use kvzap::simharness::{
+        replay_line, simulate as run_one, thread_traces_match, Fault, ScenarioSpec, SimOptions,
+    };
+    let quick = args.kv.contains_key("quick");
+    let threads = match args.kv.get("threads") {
+        None => None,
+        Some(v) => {
+            Some(v.parse().map_err(|_| anyhow!("bad --threads '{v}' (want a count)"))?)
+        }
+    };
+    let fault = match args.kv.get("fault-step") {
+        None => None,
+        Some(v) => {
+            let step =
+                v.parse().map_err(|_| anyhow!("bad --fault-step '{v}' (want a step)"))?;
+            Some(Fault::PhantomRowFetch { step })
+        }
+    };
+    let opts = SimOptions {
+        threads,
+        check_solo: !args.kv.contains_key("no-solo"),
+        fault,
+        ..SimOptions::default()
+    };
+    let fail = |f: Box<kvzap::simharness::SimFailure>| -> Result<()> {
+        eprintln!("[kvzap simulate] INVARIANT VIOLATION: {}", f.violation);
+        eprintln!("[kvzap simulate] replay: {}", f.replay);
+        let path = "SIM_FAILURE.json";
+        std::fs::write(path, format!("{}\n", f.minimized_json))?;
+        eprintln!(
+            "[kvzap simulate] minimized scenario ({} clients, {} steps) written to {path}; \
+             replay it with: kvzap simulate --spec-file {path}",
+            f.minimized.clients.len(),
+            f.minimized.steps
+        );
+        std::process::exit(1);
+    };
+    if let Some(path) = args.kv.get("spec-file") {
+        let body = std::fs::read_to_string(path)?;
+        let j = kvzap::util::json::Json::parse(body.trim())
+            .map_err(|e| anyhow!("bad spec file {path}: {e}"))?;
+        let spec = ScenarioSpec::from_json(&j)?;
+        return match run_one(&spec, &opts) {
+            Ok(s) => {
+                if opts.fault.is_some() && !s.fault_injected {
+                    return Err(anyhow!(
+                        "--fault-step never fired (no KV group at that step): the clean \
+                         result is not a passed mutation check"
+                    ));
+                }
+                println!(
+                    "spec {path}: ok ({} clients, {} completed, {} tokens)",
+                    s.clients, s.completed, s.tokens_out
+                );
+                Ok(())
+            }
+            Err(f) => fail(f),
+        };
+    }
+    let steps = args.usize("steps", if quick { 48 } else { 200 });
+    let clients = args.usize("clients", if quick { 5 } else { 6 });
+    let max_batch = args.usize("max-batch", 4);
+    let seed_arg = args.get("seed", if quick { "0..4" } else { "0..8" });
+    let seeds: Vec<u64> = match seed_arg.split_once("..") {
+        Some((a, b)) => {
+            let a: u64 = a.parse().map_err(|_| anyhow!("bad seed range '{seed_arg}'"))?;
+            let b: u64 = b.parse().map_err(|_| anyhow!("bad seed range '{seed_arg}'"))?;
+            (a..b).collect()
+        }
+        None => vec![seed_arg.parse().map_err(|_| anyhow!("bad seed '{seed_arg}'"))?],
+    };
+    if seeds.is_empty() {
+        return Err(anyhow!("empty seed range '{seed_arg}' — nothing would be tested"));
+    }
+    let check_threads = quick || args.kv.contains_key("check-threads");
+    for &seed in &seeds {
+        let spec = ScenarioSpec::generate(seed, steps, clients, max_batch);
+        match run_one(&spec, &opts) {
+            Ok(s) => {
+                if opts.fault.is_some() && !s.fault_injected {
+                    return Err(anyhow!(
+                        "seed {seed}: --fault-step never fired (no KV group at that \
+                         step): the clean result is not a passed mutation check"
+                    ));
+                }
+                println!(
+                    "seed {seed}: ok ({} clients, {} completed, {} cancelled, {} tokens, \
+                     {} steps)",
+                    s.clients, s.completed, s.cancelled, s.tokens_out, s.steps
+                );
+            }
+            Err(f) => return fail(f),
+        }
+        if check_threads {
+            if let Err(e) = thread_traces_match(&spec, 1, 2) {
+                eprintln!("[kvzap simulate] THREAD-INVARIANCE VIOLATION: {e}");
+                eprintln!("[kvzap simulate] replay: {} --check-threads", replay_line(&spec));
+                std::process::exit(1);
+            }
+            println!("seed {seed}: threads 1 vs 2 bitwise identical");
+        }
+    }
+    println!("simulate: {} seed(s) clean", seeds.len());
+    Ok(())
 }
 
 /// The policy catalog: every PolicySpec kind with its string forms,

@@ -1,0 +1,163 @@
+//! In-process (headless) transport for the v2 protocol.
+//!
+//! Runs the exact per-connection loop the TCP frontend runs
+//! (`super::serve_lines`) over in-memory channels instead of a socket:
+//! no ports, no listener, no OS networking. Each [`HeadlessClient`] is one
+//! "connection" — a thread running the protocol loop, fed request lines
+//! through a channel and answering with parsed JSON lines. All generation
+//! still funnels through the shared continuous [`Batcher`], so batching,
+//! streaming, cancellation and error handling behave exactly as they do
+//! over TCP.
+//!
+//! This is what the server error-path tests and the simulation tooling
+//! use: hermetic, deterministic setup/teardown, and no port allocation.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, Read, Write};
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::{serve_lines, ServerConfig};
+use crate::coordinator::{Batcher, BatcherConfig, Engine};
+use crate::util::json::Json;
+
+/// `Read` over a byte channel; EOF when the sending side is dropped.
+struct ChanReader {
+    rx: Receiver<Vec<u8>>,
+    buf: VecDeque<u8>,
+}
+
+impl Read for ChanReader {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        while self.buf.is_empty() {
+            match self.rx.recv() {
+                Ok(bytes) => self.buf.extend(bytes),
+                Err(_) => return Ok(0), // client dropped: EOF
+            }
+        }
+        let n = out.len().min(self.buf.len());
+        for (slot, b) in out.iter_mut().zip(self.buf.drain(..n)) {
+            *slot = b;
+        }
+        Ok(n)
+    }
+}
+
+/// `Write` that forwards each complete line to a string channel.
+struct ChanWriter {
+    tx: Sender<String>,
+    buf: Vec<u8>,
+}
+
+impl Write for ChanWriter {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(data);
+        while let Some(p) = self.buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = self.buf.drain(..=p).collect();
+            let s = String::from_utf8_lossy(&line[..line.len() - 1]).into_owned();
+            if !s.trim().is_empty() {
+                let _ = self.tx.send(s);
+            }
+        }
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The headless server: the shared engine + batcher a set of
+/// [`HeadlessClient`] connections funnel into. `cfg.addr` is unused (there
+/// is no socket); the other [`ServerConfig`] fields mean what they mean
+/// for the TCP frontend.
+pub struct HeadlessServer {
+    engine: Arc<Engine>,
+    batcher: Arc<Batcher>,
+    default_policy: String,
+    stop: Arc<AtomicBool>,
+}
+
+impl HeadlessServer {
+    /// Start the shared batcher; connections attach via
+    /// [`HeadlessServer::connect`].
+    pub fn new(engine: Arc<Engine>, cfg: ServerConfig) -> HeadlessServer {
+        let batcher = Arc::new(Batcher::start(
+            engine.clone(),
+            BatcherConfig { max_batch: cfg.max_batch, max_wait_us: cfg.max_wait_us },
+        ));
+        HeadlessServer {
+            engine,
+            batcher,
+            default_policy: cfg.default_policy,
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Open one in-process protocol connection (its own loop thread).
+    pub fn connect(&self) -> HeadlessClient {
+        let (line_tx, line_rx) = mpsc::channel::<Vec<u8>>();
+        let (resp_tx, resp_rx) = mpsc::channel::<String>();
+        let reader = BufReader::new(ChanReader { rx: line_rx, buf: VecDeque::new() });
+        let writer = Arc::new(Mutex::new(ChanWriter { tx: resp_tx, buf: vec![] }));
+        let batcher = self.batcher.clone();
+        let engine = self.engine.clone();
+        let stop = self.stop.clone();
+        let default_policy = self.default_policy.clone();
+        let handle = std::thread::spawn(move || {
+            let _ = serve_lines(reader, writer, batcher, engine, stop, || {}, &default_policy);
+        });
+        HeadlessClient { tx: line_tx, rx: resp_rx, handle: Some(handle) }
+    }
+}
+
+/// One in-process protocol connection (see [`HeadlessServer::connect`]).
+/// Dropping the client closes the connection (EOF) and joins its loop
+/// thread.
+pub struct HeadlessClient {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<String>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HeadlessClient {
+    /// Send one protocol line (the newline is appended here).
+    pub fn send_line(&self, line: &str) -> Result<()> {
+        let mut bytes = line.as_bytes().to_vec();
+        bytes.push(b'\n');
+        self.tx.send(bytes).map_err(|_| anyhow!("headless connection closed"))
+    }
+
+    /// Read the next protocol line as JSON, waiting up to `timeout`.
+    pub fn recv(&self, timeout: Duration) -> Result<Json> {
+        let line = self
+            .rx
+            .recv_timeout(timeout)
+            .map_err(|e| anyhow!("no response line: {e:?}"))?;
+        Json::parse(&line).map_err(|e| anyhow!("bad response line: {e}"))
+    }
+
+    /// Blocking request/response for lines that produce exactly one reply
+    /// (commands, non-streaming generations, error paths).
+    pub fn request(&self, line: &str) -> Result<Json> {
+        self.send_line(line)?;
+        self.recv(Duration::from_secs(120))
+    }
+}
+
+impl Drop for HeadlessClient {
+    fn drop(&mut self) {
+        // Closing tx EOFs the reader, so the loop thread exits after any
+        // in-flight request of this connection completes.
+        let (dummy, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, dummy));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -48,6 +48,16 @@
 //! generation funnels through the shared [`Batcher`], whose continuous
 //! scheduler lets requests join a running decode group whenever a slot
 //! frees (each request keeps its own sampling params and policy).
+//!
+//! The per-connection protocol loop (`serve_lines`) is generic over the
+//! transport (any `BufRead` in, any `Write` out): the TCP frontend wraps a
+//! socket, and [`headless`] runs the same loop over in-process channels —
+//! no ports, no threads beyond the connection's own — which is what the
+//! error-path tests and tools that embed the server use.
+
+pub mod headless;
+
+pub use headless::{HeadlessClient, HeadlessServer};
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -180,9 +190,7 @@ fn done_event_json(r: &crate::coordinator::Response, id: &Json) -> Json {
     Json::obj(pairs)
 }
 
-type SharedWriter = Arc<Mutex<TcpStream>>;
-
-fn write_line(writer: &SharedWriter, j: &Json) -> std::io::Result<()> {
+fn write_line<W: Write>(writer: &Arc<Mutex<W>>, j: &Json) -> std::io::Result<()> {
     let mut w = writer.lock().unwrap();
     writeln!(w, "{}", j.dump())
 }
@@ -258,8 +266,34 @@ fn handle_conn(
     addr: String,
     default_policy: String,
 ) -> Result<()> {
-    let writer: SharedWriter = Arc::new(Mutex::new(stream.try_clone()?));
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
+    // the shutdown handler wakes the blocking accept with a loopback
+    // connection — no polling
+    let wake = move || {
+        let _ = TcpStream::connect(&addr);
+    };
+    serve_lines(reader, writer, batcher, engine, stop, wake, &default_policy)
+}
+
+/// One connection's protocol-v2 loop over an arbitrary transport: read
+/// JSON lines from `reader`, write response/event lines through the shared
+/// `writer` (streaming pump threads interleave on it). Returns when the
+/// reader reaches EOF, errors, or a `{"cmd": "shutdown"}` arrives (which
+/// also sets `stop` and calls `wake` so a blocking accept loop can exit).
+pub(crate) fn serve_lines<R, W>(
+    reader: R,
+    writer: Arc<Mutex<W>>,
+    batcher: Arc<Batcher>,
+    engine: Arc<Engine>,
+    stop: Arc<AtomicBool>,
+    wake: impl Fn(),
+    default_policy: &str,
+) -> Result<()>
+where
+    R: BufRead,
+    W: Write + Send + 'static,
+{
     // client-visible id -> batcher id, for {"cmd": "cancel"}; entries are
     // removed when their request completes, so the map stays bounded by
     // the number of in-flight requests
@@ -317,8 +351,7 @@ fn handle_conn(
             Some("shutdown") => {
                 stop.store(true, Ordering::Relaxed);
                 write_line(&writer, &Json::obj(vec![("ok", Json::Bool(true))]))?;
-                // wake the blocking accept so serve() can exit
-                let _ = TcpStream::connect(&addr);
+                wake();
                 break;
             }
             Some(other) => {
@@ -330,8 +363,27 @@ fn handle_conn(
             }
             None => {}
         }
-        match parse_request_json(&j, &default_policy) {
+        match parse_request_json(&j, default_policy) {
             Ok(preq) => {
+                // Reject prompts beyond the largest prefill bucket with a
+                // structured error instead of silently truncating (the
+                // tokenizer is byte-level, so tokens = bytes + BOS).
+                let max_prompt = engine.max_prompt();
+                if preq.prompt.len() + 1 > max_prompt {
+                    let mut pairs = vec![(
+                        "error",
+                        Json::str(format!(
+                            "prompt too long: {} tokens (incl. BOS) exceeds the \
+                             max prefill bucket of {max_prompt}",
+                            preq.prompt.len() + 1
+                        )),
+                    )];
+                    if let Some(idj) = &preq.id {
+                        pairs.push(("id", idj.clone()));
+                    }
+                    write_line(&writer, &Json::obj(pairs))?;
+                    continue;
+                }
                 let (tx, rx) = mpsc::channel();
                 let client_id = preq.id.clone();
                 let stream_flag = preq.stream;
@@ -391,7 +443,7 @@ fn handle_conn(
 }
 
 /// Forward one streaming request's events to the shared connection writer.
-fn pump_stream(rx: mpsc::Receiver<SeqEvent>, writer: SharedWriter, id: Json) {
+fn pump_stream<W: Write>(rx: mpsc::Receiver<SeqEvent>, writer: Arc<Mutex<W>>, id: Json) {
     for ev in rx.iter() {
         match ev {
             SeqEvent::Token { token, text } => {

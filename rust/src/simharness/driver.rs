@@ -1,0 +1,778 @@
+//! The deterministic discrete-step simulator.
+//!
+//! [`run_scenario`] replays one [`ScenarioSpec`] against a fresh engine on
+//! the reference backend, driving the same [`SchedCore`] the production
+//! batcher thread runs — but one observable phase at a time (submit/cancel
+//! intake → admission → pre-decode observation → shared decode step →
+//! invariant checks → event drain → reap). Requests enter through the
+//! server's v2 parse path ([`crate::server::parse_request`]), so the
+//! protocol surface (string and structured policy forms, sampling fields,
+//! ids) is exercised on every run.
+//!
+//! After every step the [`super::invariants::registry`] checks the
+//! [`StepObs`]; the first violation stops the run. When the scenario
+//! completes, each client's token stream is optionally replayed solo
+//! (metamorphic faithfulness: co-tenants must never change a sequence's
+//! tokens), and [`thread_traces_match`] re-runs whole scenarios at
+//! different `KVZAP_THREADS` settings to pin bitwise thread invariance.
+//! [`simulate`] wraps a run with the shrink pass
+//! ([`crate::util::propcheck::minimize`] over [`shrink_spec`]) so a
+//! failure is reported as a minimal scenario plus a one-line replay.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{self, Receiver, TryRecvError};
+use std::sync::Arc;
+
+use crate::coordinator::{
+    BatcherConfig, Engine, Request, SchedCore, SeqEvent, Sequence, StepEvent,
+};
+use crate::metrics::TransferSnapshot;
+use crate::policies::PolicySpec;
+use crate::runtime::{ParallelConfig, Runtime};
+use crate::server::{self, ParsedRequest};
+use crate::util::propcheck;
+
+use super::invariants::{registry, BudgetCheck, SeqCheck, StepObs, TransferDelta, Violation};
+use super::scenario::ScenarioSpec;
+
+/// How to run a scenario (orthogonal to the scenario itself).
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Reference-backend thread count: None = environment default,
+    /// Some(1) = the scalar oracle path, Some(n) = blocked parallel.
+    pub threads: Option<usize>,
+    /// Replay every client solo after the run and require identical token
+    /// streams (metamorphic faithfulness).
+    pub check_solo: bool,
+    /// Test-only mutation switch: inject an accounting bug so the
+    /// invariant registry can prove it catches one.
+    pub fault: Option<Fault>,
+    /// Cache capacity for the run's engine.
+    pub t_max: usize,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { threads: None, check_solo: true, fault: None, t_max: 512 }
+    }
+}
+
+/// Deliberate accounting bugs for the mutation self-check: each models a
+/// class of real defect the registry must catch.
+#[derive(Debug, Clone, Copy)]
+pub enum Fault {
+    /// Perform one hidden KV row fetch at the given step — an unaccounted
+    /// transfer, as a backend bug that moves more than the contract would
+    /// produce. Caught by the transfer-accounting invariant.
+    PhantomRowFetch {
+        /// Simulation step at which to inject the rogue fetch.
+        step: usize,
+    },
+}
+
+/// What one scripted client ended up with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientOutcome {
+    /// Accepted token ids, in order.
+    pub tokens: Vec<i32>,
+    /// Concatenated token texts.
+    pub text: String,
+    /// Whether a final Done event arrived.
+    pub done: bool,
+    /// Done reason ("stop" | "max_tokens" | "cache_full" | "cancelled").
+    pub reason: Option<String>,
+    /// Transport/build error, if any.
+    pub error: Option<String>,
+    /// Reported tokens_out from the Done event.
+    pub tokens_out: Option<usize>,
+    /// Final compression as raw f64 bits (exact comparison across runs).
+    pub compression_bits: Option<u64>,
+}
+
+impl ClientOutcome {
+    fn new() -> ClientOutcome {
+        ClientOutcome {
+            tokens: vec![],
+            text: String::new(),
+            done: false,
+            reason: None,
+            error: None,
+            tokens_out: None,
+            compression_bits: None,
+        }
+    }
+}
+
+/// The bit-comparable record of one run: per-client outcomes plus the
+/// engine's final transfer counters (taken before any solo replays).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimTrace {
+    /// One outcome per scripted client, in client order.
+    pub clients: Vec<ClientOutcome>,
+    /// Transfer counters at the end of the scripted steps.
+    pub transfer: TransferSnapshot,
+}
+
+/// Result of one [`run_scenario`] call.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// The run's trace (partial if a violation stopped it early).
+    pub trace: SimTrace,
+    /// First invariant violation, if any.
+    pub violation: Option<Violation>,
+    /// Steps actually executed.
+    pub steps_run: usize,
+    /// Whether a configured [`Fault`] actually performed its injection
+    /// (false when no fault was configured, or when its step had no KV
+    /// group to act on — the caller must not read a clean run as a passed
+    /// mutation check in that case).
+    pub fault_injected: bool,
+}
+
+struct ClientState {
+    rx: Option<Receiver<SeqEvent>>,
+    outcome: ClientOutcome,
+    submitted: bool,
+}
+
+/// Run one scenario to completion (or first violation). Deterministic:
+/// the same spec and options produce the same [`SimTrace`] bit for bit.
+pub fn run_scenario(spec: &ScenarioSpec, opts: &SimOptions) -> SimReport {
+    let pcfg = match opts.threads {
+        None => ParallelConfig::from_env(),
+        Some(1) => ParallelConfig::scalar(),
+        Some(n) => ParallelConfig::with_threads(n),
+    };
+    let rt = Runtime::reference_with_options(opts.t_max, pcfg);
+    let engine = Arc::new(Engine::new(Arc::new(rt)));
+    run_on(engine, spec, opts)
+}
+
+fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimReport {
+    let (layers, heads, t_max, d_head) = {
+        let m = &engine.rt.manifest.model;
+        (m.n_layers, m.n_kv_heads, m.t_max, m.d_head)
+    };
+    let decode_buckets = engine.rt.manifest.buckets.decode_b.clone();
+    let window = engine.window();
+    let invariants = registry();
+
+    let mut core = SchedCore::new(
+        engine.clone(),
+        BatcherConfig { max_batch: spec.max_batch, max_wait_us: 0 },
+    );
+    let mut states: Vec<ClientState> = spec
+        .clients
+        .iter()
+        .map(|_| ClientState { rx: None, outcome: ClientOutcome::new(), submitted: false })
+        .collect();
+    // id -> parsed request (policy/sampling for checks and solo replays)
+    let mut subs: HashMap<u64, ParsedRequest> = HashMap::new();
+    // every uid the scheduler ever held (slot entries may lag reaping)
+    let mut known_uids: HashSet<u64> = HashSet::new();
+
+    let mut violation: Option<Violation> = None;
+    let mut fault_injected = false;
+    let mut steps_run = 0;
+    for t in 0..spec.steps {
+        steps_run = t + 1;
+        // ---- scripted client actions ----------------------------------
+        for (i, c) in spec.clients.iter().enumerate() {
+            let id = (i + 1) as u64;
+            if c.join_step == t && !states[i].submitted {
+                states[i].submitted = true;
+                let line = c.request_json(id).dump();
+                match server::parse_request(&line, "full") {
+                    Ok(preq) => {
+                        let (tx, rx) = mpsc::channel();
+                        core.submit(
+                            id,
+                            Request {
+                                prompt: preq.prompt.clone(),
+                                policy: preq.policy.clone(),
+                                sp: preq.sp.clone(),
+                                stream: true,
+                                events: tx,
+                            },
+                        );
+                        states[i].rx = Some(rx);
+                        subs.insert(id, preq);
+                    }
+                    Err(e) => {
+                        violation = Some(Violation {
+                            step: t,
+                            invariant: "protocol",
+                            detail: format!("client {id}: request rejected: {e:#}"),
+                        });
+                    }
+                }
+            }
+            if c.cancel_step == Some(t) {
+                core.cancel(id);
+            }
+            if c.drop_step == Some(t) {
+                states[i].rx = None; // simulated disconnect
+            }
+        }
+        if violation.is_some() {
+            break;
+        }
+
+        // ---- admission + budget observation ---------------------------
+        let admitted = core.admit_waiting();
+        let mut budgets: Vec<BudgetCheck> = vec![];
+        for (id, seq) in core.live() {
+            if !admitted.contains(&id) {
+                continue;
+            }
+            let frac = match subs.get(&id).map(|p| &p.policy).and_then(budget_of) {
+                Some(f) => f,
+                None => continue,
+            };
+            let st = seq.cache_stats();
+            let n = seq.prompt_len().max(1);
+            budgets.push(BudgetCheck {
+                id,
+                policy: subs[&id].policy.to_string(),
+                keep_frac: frac,
+                kept_frac: st.kept as f64 / st.filled.max(1) as f64,
+                slack: (window as f64 + 2.0) / n as f64 + 0.05,
+            });
+        }
+        core.reap_finished();
+
+        // ---- pre-decode protocol replay (transfer prediction) ---------
+        let residents_before: Vec<u64> = core
+            .group()
+            .resident_uids()
+            .iter()
+            .copied()
+            .filter(|&u| u != 0)
+            .collect();
+        let capacity_before = core.group().capacity();
+        let mut active_uids: Vec<u64> = vec![];
+        let mut dirty_uids: HashSet<u64> = HashSet::new();
+        for (_id, seq) in core.live() {
+            if seq.position() < t_max {
+                active_uids.push(seq.uid());
+                if seq.cache().is_dirty() {
+                    dirty_uids.insert(seq.uid());
+                }
+            }
+        }
+        let expected = predict_transfer(
+            &active_uids,
+            &dirty_uids,
+            &residents_before,
+            capacity_before,
+            &decode_buckets,
+            (layers, heads, t_max, d_head),
+        );
+        let before = engine.rt.transfer.snapshot();
+
+        // ---- the shared decode step -----------------------------------
+        if let Err(e) = core.decode_once() {
+            violation = Some(Violation {
+                step: t,
+                invariant: "engine-error",
+                detail: format!("{e:#}"),
+            });
+            break;
+        }
+        if let Some(Fault::PhantomRowFetch { step }) = opts.fault {
+            if step == t {
+                if let Some(h) = core.group().kv_handle() {
+                    let mut k = vec![0.0f32; h.row_elems()];
+                    let mut v = vec![0.0f32; h.row_elems()];
+                    let _ = engine.rt.kv_fetch_row(h, 0, 0, &mut k, &mut v);
+                    fault_injected = true;
+                }
+            }
+        }
+        let after = engine.rt.transfer.snapshot();
+        let actual = TransferDelta {
+            kv_bytes_up: after.kv_bytes_up - before.kv_bytes_up,
+            kv_bytes_down: after.kv_bytes_down - before.kv_bytes_down,
+            mask_uploads: after.mask_uploads - before.mask_uploads,
+            decode_steps: after.decode_steps - before.decode_steps,
+        };
+
+        // ---- invariant checks -----------------------------------------
+        let seqs: Vec<SeqCheck> = core
+            .live()
+            .map(|(id, seq)| {
+                seq_check(id, seq, subs.get(&id).map(|p| &p.policy), window, layers, heads)
+            })
+            .collect();
+        known_uids.extend(core.live().map(|(_, s)| s.uid()));
+        let obs = StepObs {
+            step: t,
+            seqs,
+            budgets,
+            known_uids: known_uids.iter().copied().collect(),
+            residents: core.group().resident_uids().to_vec(),
+            capacity: core.group().capacity(),
+            expected,
+            actual,
+        };
+        for inv in &invariants {
+            if let Err(detail) = inv.check(&obs) {
+                violation = Some(Violation { step: t, invariant: inv.name(), detail });
+                break;
+            }
+        }
+        if violation.is_some() {
+            break;
+        }
+
+        // ---- event drain + reap ---------------------------------------
+        core.reap_finished();
+        drain(&mut states);
+    }
+    drain(&mut states);
+    let transfer = engine.rt.transfer.snapshot();
+
+    if violation.is_none() {
+        for (i, st) in states.iter().enumerate() {
+            if let Some(e) = &st.outcome.error {
+                violation = Some(Violation {
+                    step: steps_run,
+                    invariant: "request-error",
+                    detail: format!("client {}: {e}", i + 1),
+                });
+                break;
+            }
+        }
+    }
+    if violation.is_none() && opts.check_solo {
+        violation = solo_check(&engine, &subs, &states, steps_run);
+    }
+
+    SimReport {
+        trace: SimTrace {
+            clients: states.into_iter().map(|s| s.outcome).collect(),
+            transfer,
+        },
+        violation,
+        steps_run,
+        fault_injected,
+    }
+}
+
+/// Which budget the policy promises at prefill (None: not a budget policy
+/// with the rank-selection guarantee the harness checks).
+fn budget_of(p: &PolicySpec) -> Option<f64> {
+    match p {
+        PolicySpec::H2o { keep_frac }
+        | PolicySpec::SnapKv { keep_frac }
+        | PolicySpec::AdaKv { keep_frac }
+        | PolicySpec::Knorm { keep_frac }
+        | PolicySpec::Kvzip { keep_frac, .. } => Some(*keep_frac),
+        _ => None,
+    }
+}
+
+/// Replay the device-resident KV protocol for one step: who scatters, who
+/// refreshes a mask, who is vacated, and what the row-only steady state
+/// fetches — producing the exact counter deltas the engine must match.
+fn predict_transfer(
+    active: &[u64],
+    dirty: &HashSet<u64>,
+    residents: &[u64],
+    capacity: usize,
+    decode_buckets: &[usize],
+    dims: (usize, usize, usize, usize),
+) -> TransferDelta {
+    let nb = active.len();
+    if nb == 0 {
+        return TransferDelta::default();
+    }
+    let (layers, heads, t_max, d_head) = dims;
+    let db = match decode_buckets.iter().copied().find(|&b| b >= nb) {
+        Some(b) => b,
+        None => return TransferDelta::default(), // decode_once will error
+    };
+    let resident_set: HashSet<u64> = residents.iter().copied().collect();
+    let (newcomers, vacates, refreshes) = if capacity != db {
+        // bucket change: the group is reset and everyone re-scatters
+        (nb, 0, 0)
+    } else {
+        let newcomers = active.iter().filter(|u| !resident_set.contains(u)).count();
+        let vacates = resident_set.iter().filter(|u| !active.contains(u)).count();
+        let refreshes = active
+            .iter()
+            .filter(|u| resident_set.contains(u) && dirty.contains(u))
+            .count();
+        (newcomers, vacates, refreshes)
+    };
+    let slot_elems = layers * heads * t_max * d_head;
+    let mask_elems = layers * heads * t_max;
+    let row_elems = layers * heads * d_head;
+    let up_elems =
+        newcomers * (2 * slot_elems + mask_elems) + (vacates + refreshes) * mask_elems;
+    TransferDelta {
+        kv_bytes_up: 4 * up_elems as u64,
+        kv_bytes_down: 4 * (nb * 2 * row_elems) as u64,
+        mask_uploads: (newcomers + vacates + refreshes) as u64,
+        decode_steps: 1,
+    }
+}
+
+fn seq_check(
+    id: u64,
+    seq: &Sequence,
+    policy: Option<&PolicySpec>,
+    window: usize,
+    layers: usize,
+    heads: usize,
+) -> SeqCheck {
+    let cache = seq.cache();
+    let st = cache.stats();
+    let len = cache.len();
+    let mask_on = cache.mask_f32().iter().filter(|&&m| m > 0.0).count();
+    let head_sum = (0..layers)
+        .flat_map(|l| (0..heads).map(move |h| (l, h)))
+        .map(|(l, h)| cache.kept_in_head(l, h))
+        .sum();
+    let window_ok = match policy {
+        Some(PolicySpec::Kvzap { .. }) => {
+            let mut ok = true;
+            for p in len.saturating_sub(window)..len {
+                for l in 0..layers {
+                    for h in 0..heads {
+                        if !cache.is_kept(l, h, p) {
+                            ok = false;
+                        }
+                    }
+                }
+            }
+            Some(ok)
+        }
+        _ => None,
+    };
+    SeqCheck {
+        id,
+        uid: seq.uid(),
+        pos: seq.position(),
+        len,
+        t_max: cache.t_max,
+        lh: layers * heads,
+        kept: st.kept,
+        filled: st.filled,
+        compression: st.compression(),
+        mask_on,
+        head_sum,
+        window_ok,
+    }
+}
+
+fn drain(states: &mut [ClientState]) {
+    for st in states.iter_mut() {
+        let mut close = false;
+        if let Some(rx) = &st.rx {
+            loop {
+                match rx.try_recv() {
+                    Ok(SeqEvent::Token { token, text }) => {
+                        st.outcome.tokens.push(token);
+                        st.outcome.text.push_str(&text);
+                    }
+                    Ok(SeqEvent::Done(r)) => {
+                        st.outcome.done = true;
+                        st.outcome.reason = r.reason.clone();
+                        st.outcome.error = r.error.clone();
+                        st.outcome.tokens_out = Some(r.tokens_out);
+                        st.outcome.compression_bits = Some(r.compression.to_bits());
+                        close = true; // exactly one Done per request
+                    }
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            }
+        }
+        if close {
+            st.rx = None;
+        }
+    }
+}
+
+/// Metamorphic faithfulness: every client's interleaved token stream must
+/// be (a prefix of, for cancelled/disconnected/unfinished clients) the
+/// stream the same request produces decoded solo.
+fn solo_check(
+    engine: &Engine,
+    subs: &HashMap<u64, ParsedRequest>,
+    states: &[ClientState],
+    step: usize,
+) -> Option<Violation> {
+    for (i, st) in states.iter().enumerate() {
+        let id = (i + 1) as u64;
+        let preq = match subs.get(&id) {
+            Some(p) => p,
+            None => continue, // never submitted
+        };
+        let out = &st.outcome;
+        // Skip errors (reported separately), never-started clients, and
+        // zero-token cancels — their empty-prefix comparison is vacuous
+        // and a solo replay would cost a full generation for nothing.
+        if out.error.is_some()
+            || (out.tokens.is_empty()
+                && (!out.done || out.reason.as_deref() == Some("cancelled")))
+        {
+            continue;
+        }
+        let (solo_tokens, solo_reason, solo_comp) = match solo_replay(engine, id, preq) {
+            Ok(v) => v,
+            Err(e) => {
+                return Some(Violation {
+                    step,
+                    invariant: "engine-error",
+                    detail: format!("solo replay for client {id}: {e:#}"),
+                })
+            }
+        };
+        let finished = out.done && out.reason.as_deref() != Some("cancelled");
+        let mismatch = if finished {
+            if out.tokens != solo_tokens {
+                Some(format!(
+                    "client {id}: interleaved tokens {:?} != solo {:?}",
+                    out.tokens, solo_tokens
+                ))
+            } else if out.reason.as_deref() != solo_reason.as_deref() {
+                Some(format!(
+                    "client {id}: done reason {:?} != solo {:?}",
+                    out.reason, solo_reason
+                ))
+            } else if out.compression_bits != Some(solo_comp.to_bits()) {
+                Some(format!("client {id}: compression diverged from the solo run"))
+            } else {
+                None
+            }
+        } else if out.tokens.len() > solo_tokens.len()
+            || out.tokens[..] != solo_tokens[..out.tokens.len()]
+        {
+            Some(format!(
+                "client {id}: partial stream {:?} is not a prefix of solo {:?}",
+                out.tokens, solo_tokens
+            ))
+        } else {
+            None
+        };
+        if let Some(detail) = mismatch {
+            return Some(Violation { step, invariant: "metamorphic-faithfulness", detail });
+        }
+    }
+    None
+}
+
+fn solo_replay(
+    engine: &Engine,
+    id: u64,
+    preq: &ParsedRequest,
+) -> anyhow::Result<(Vec<i32>, Option<String>, f64)> {
+    let policy = preq.policy.build(engine.window());
+    let mut seq = engine.sequence(1_000_000 + id, &preq.prompt, preq.sp.clone());
+    let mut tokens = vec![];
+    let events = engine.prefill(&mut seq, policy.as_ref())?;
+    collect_tokens(&events, &mut tokens);
+    let mut group = engine.decode_group();
+    while !seq.is_done() {
+        let events = {
+            let mut set = vec![&mut seq];
+            engine.decode_step(&mut group, &mut set)?
+        };
+        collect_tokens(&events, &mut tokens);
+    }
+    let reason = seq.done_reason().map(|d| d.as_str().to_string());
+    Ok((tokens, reason, engine.finish(&seq).compression))
+}
+
+fn collect_tokens(events: &[StepEvent], out: &mut Vec<i32>) {
+    for ev in events {
+        if let StepEvent::Token { token, .. } = ev {
+            out.push(*token);
+        }
+    }
+}
+
+/// Run `spec` at two thread counts and require bit-identical traces
+/// (tokens, reasons, compressions, transfer counters).
+pub fn thread_traces_match(spec: &ScenarioSpec, a: usize, b: usize) -> Result<(), String> {
+    let base = SimOptions { check_solo: false, ..SimOptions::default() };
+    let ra = run_scenario(spec, &SimOptions { threads: Some(a), ..base.clone() });
+    if let Some(v) = ra.violation {
+        return Err(format!("threads={a}: {v}"));
+    }
+    let rb = run_scenario(spec, &SimOptions { threads: Some(b), ..base });
+    if let Some(v) = rb.violation {
+        return Err(format!("threads={b}: {v}"));
+    }
+    if ra.trace != rb.trace {
+        return Err(format!(
+            "trace diverged between KVZAP_THREADS={a} and KVZAP_THREADS={b}"
+        ));
+    }
+    Ok(())
+}
+
+/// Aggregate counts the CLI prints per clean run.
+#[derive(Debug, Clone)]
+pub struct SimSummary {
+    /// Scenario seed.
+    pub seed: u64,
+    /// Steps executed.
+    pub steps: usize,
+    /// Scripted clients.
+    pub clients: usize,
+    /// Clients whose request finished with a normal reason.
+    pub completed: usize,
+    /// Clients that ended cancelled (script cancels + disconnects).
+    pub cancelled: usize,
+    /// Tokens streamed across all clients.
+    pub tokens_out: usize,
+    /// Whether a configured fault actually fired (see
+    /// [`SimReport::fault_injected`]). A clean run with a configured but
+    /// never-fired fault is NOT a passed mutation check.
+    pub fault_injected: bool,
+}
+
+/// A failed run: the violation, the original replay line, and the shrunk
+/// scenario (as a spec and as replayable JSON).
+#[derive(Debug, Clone)]
+pub struct SimFailure {
+    /// The (first) invariant violation.
+    pub violation: Violation,
+    /// One-line reproduction command for the original scenario.
+    pub replay: String,
+    /// Minimized still-failing scenario.
+    pub minimized: ScenarioSpec,
+    /// `minimized` as JSON for `kvzap simulate --spec-file`.
+    pub minimized_json: String,
+}
+
+/// The single replay line a violation prints: regenerates and re-runs the
+/// originating scenario exactly. Hand-written / shrunk specs (seed 0 or
+/// edited clients) replay via their JSON instead — the CLI writes it to
+/// SIM_FAILURE.json and prints the `--spec-file` form alongside.
+pub fn replay_line(spec: &ScenarioSpec) -> String {
+    format!(
+        "kvzap simulate --seed {} --steps {} --clients {} --max-batch {}",
+        spec.seed,
+        spec.steps,
+        spec.clients.len(),
+        spec.max_batch
+    )
+}
+
+/// Non-default run options rendered as the CLI flags that reproduce them;
+/// appended to [`replay_line`] so the printed command replays the actual
+/// configuration, not the defaults.
+pub fn replay_opts(opts: &SimOptions) -> String {
+    let mut s = String::new();
+    if let Some(t) = opts.threads {
+        s.push_str(&format!(" --threads {t}"));
+    }
+    if !opts.check_solo {
+        s.push_str(" --no-solo");
+    }
+    if let Some(Fault::PhantomRowFetch { step }) = opts.fault {
+        s.push_str(&format!(" --fault-step {step}"));
+    }
+    s
+}
+
+/// Shrink candidates for a failing scenario: fewer clients, fewer steps,
+/// no cancels/disconnects, shorter generations. Every candidate strictly
+/// reduces a measure, so the greedy pass terminates. (Deliberately not
+/// built on `propcheck::shrink_vec`, whose second-half candidate equals
+/// the input for single-element lists — a still-failing 1-client scenario
+/// would then shrink to itself forever.)
+pub fn shrink_spec(s: &ScenarioSpec) -> Vec<ScenarioSpec> {
+    let mut out = vec![];
+    let n = s.clients.len();
+    let with_clients = |clients: Vec<super::scenario::ClientScript>| ScenarioSpec {
+        clients,
+        ..s.clone()
+    };
+    if n > 1 {
+        out.push(with_clients(s.clients[..n / 2].to_vec()));
+        out.push(with_clients(s.clients[n / 2..].to_vec()));
+        if n <= 8 {
+            for i in 0..n {
+                let mut c = s.clients.clone();
+                c.remove(i);
+                out.push(with_clients(c));
+            }
+        }
+    }
+    if s.steps > 8 {
+        let mut half = s.clone();
+        half.steps = s.steps / 2;
+        out.push(half);
+    }
+    if s.clients.iter().any(|c| c.cancel_step.is_some() || c.drop_step.is_some()) {
+        let mut calm = s.clone();
+        for c in calm.clients.iter_mut() {
+            c.cancel_step = None;
+            c.drop_step = None;
+        }
+        out.push(calm);
+    }
+    if s.clients.iter().any(|c| c.max_new > 4) {
+        let mut short = s.clone();
+        for c in short.clients.iter_mut() {
+            c.max_new = (c.max_new / 2).max(2);
+        }
+        out.push(short);
+    }
+    out
+}
+
+/// Run a scenario; on a violation, minimize it and return the failure
+/// package (replay line + shrunk spec). This is what `kvzap simulate`
+/// calls per seed.
+pub fn simulate(spec: &ScenarioSpec, opts: &SimOptions) -> Result<SimSummary, Box<SimFailure>> {
+    let report = run_scenario(spec, opts);
+    match report.violation {
+        None => {
+            let completed = report
+                .trace
+                .clients
+                .iter()
+                .filter(|c| c.done && c.reason.as_deref() != Some("cancelled"))
+                .count();
+            let cancelled = report
+                .trace
+                .clients
+                .iter()
+                .filter(|c| c.reason.as_deref() == Some("cancelled"))
+                .count();
+            let tokens_out =
+                report.trace.clients.iter().map(|c| c.tokens.len()).sum();
+            Ok(SimSummary {
+                seed: spec.seed,
+                steps: report.steps_run,
+                clients: spec.clients.len(),
+                completed,
+                cancelled,
+                tokens_out,
+                fault_injected: report.fault_injected,
+            })
+        }
+        Some(v) => {
+            let msg = v.to_string();
+            let fails = |s: &ScenarioSpec| -> Result<(), String> {
+                match run_scenario(s, opts).violation {
+                    Some(v) => Err(v.to_string()),
+                    None => Ok(()),
+                }
+            };
+            let (minimized, _msg) =
+                propcheck::minimize(spec.clone(), msg, shrink_spec, fails);
+            Err(Box::new(SimFailure {
+                violation: v,
+                replay: format!("{}{}", replay_line(spec), replay_opts(opts)),
+                minimized_json: minimized.to_json().dump(),
+                minimized,
+            }))
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! The invariant registry: what must hold after every scheduler step.
+//!
+//! The driver condenses each step into a [`StepObs`] — per-sequence cache
+//! snapshots, the decode group's slot table, and the *predicted vs
+//! observed* transfer-counter deltas (the prediction replays the
+//! device-resident KV protocol from PR 3: join = full-slot scatter + mask,
+//! eviction = one mask refresh, steady state = row fetch only). Every
+//! [`Invariant`] in [`registry`] then checks one property; the first
+//! failure aborts the run with a [`Violation`] naming the invariant, the
+//! step, and the detail — which the CLI turns into a replay line.
+
+use std::fmt;
+
+/// One invariant failure: enough to reproduce (`step` within the scenario)
+/// and to triage (`invariant` name + detail).
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Simulation step at which the invariant fired (== scenario step for
+    /// per-step invariants; the post-hoc faithfulness check reports the
+    /// scenario's final step).
+    pub step: usize,
+    /// Registry name of the failed invariant.
+    pub invariant: &'static str,
+    /// Human-readable specifics.
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "step {}: [{}] {}", self.step, self.invariant, self.detail)
+    }
+}
+
+/// Transfer-counter movement over one decode step (subset of
+/// [`crate::metrics::TransferSnapshot`] the resident-KV contract pins).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TransferDelta {
+    /// KV + mask bytes scattered into the group cache.
+    pub kv_bytes_up: u64,
+    /// KV bytes fetched back to host (decoded rows).
+    pub kv_bytes_down: u64,
+    /// Per-slot mask installs (joins + vacates + eviction refreshes).
+    pub mask_uploads: u64,
+    /// Resident decode executions.
+    pub decode_steps: u64,
+}
+
+/// Post-step snapshot of one slot-resident sequence's cache accounting.
+#[derive(Debug, Clone)]
+pub struct SeqCheck {
+    /// Request id.
+    pub id: u64,
+    /// Sequence identity nonce (matches the group slot table).
+    pub uid: u64,
+    /// Next decode position.
+    pub pos: usize,
+    /// Filled cache length.
+    pub len: usize,
+    /// Cache capacity.
+    pub t_max: usize,
+    /// layers × kv-heads (filled must equal `len * lh`).
+    pub lh: usize,
+    /// Kept KV pairs per the incremental counters.
+    pub kept: usize,
+    /// Filled KV pairs.
+    pub filled: usize,
+    /// Removed fraction.
+    pub compression: f64,
+    /// Kept KV pairs per the dense mask (`mask_f32` recount).
+    pub mask_on: usize,
+    /// Kept KV pairs per the per-head counters (`kept_in_head` sum).
+    pub head_sum: usize,
+    /// For threshold policies: whether the protected window (the last
+    /// `w` filled positions) is fully kept in every head. None for
+    /// policies without the window guarantee.
+    pub window_ok: Option<bool>,
+}
+
+/// Post-prefill budget accounting for one newly-admitted budget policy.
+#[derive(Debug, Clone)]
+pub struct BudgetCheck {
+    /// Request id.
+    pub id: u64,
+    /// Policy display name.
+    pub policy: String,
+    /// Requested keep fraction.
+    pub keep_frac: f64,
+    /// Achieved keep fraction right after prefill pruning.
+    pub kept_frac: f64,
+    /// Tolerance: window protection + rank ties ((w + 2) / n + 0.05).
+    pub slack: f64,
+}
+
+/// Everything the harness observed around one scheduler step.
+#[derive(Debug, Clone)]
+pub struct StepObs {
+    /// Simulation step index.
+    pub step: usize,
+    /// Post-decode snapshots of every slot-resident sequence.
+    pub seqs: Vec<SeqCheck>,
+    /// Budget checks for sequences admitted this step.
+    pub budgets: Vec<BudgetCheck>,
+    /// Every uid the scheduler has ever held a sequence for, up to and
+    /// including this step. Slot-table entries may lag reaping (a finished
+    /// sequence keeps its slot until a later step vacates it), so the
+    /// conservation check is against this set, not just the live set.
+    pub known_uids: Vec<u64>,
+    /// The decode group's slot table after the step (0 = vacant).
+    pub residents: Vec<u64>,
+    /// The decode group's slot capacity after the step.
+    pub capacity: usize,
+    /// Predicted transfer-counter movement for this step.
+    pub expected: TransferDelta,
+    /// Observed transfer-counter movement for this step.
+    pub actual: TransferDelta,
+}
+
+/// One checkable property over a [`StepObs`].
+pub trait Invariant {
+    /// Stable registry name (printed in violations).
+    fn name(&self) -> &'static str;
+    /// Err(detail) when the invariant fails.
+    fn check(&self, obs: &StepObs) -> Result<(), String>;
+}
+
+/// Slot-table conservation: resident uids are distinct, fit the capacity,
+/// and every one names a sequence the scheduler still holds.
+struct SlotConservation;
+
+impl Invariant for SlotConservation {
+    fn name(&self) -> &'static str {
+        "slot-conservation"
+    }
+
+    fn check(&self, obs: &StepObs) -> Result<(), String> {
+        if obs.residents.len() != obs.capacity {
+            return Err(format!(
+                "slot table has {} entries but capacity is {}",
+                obs.residents.len(),
+                obs.capacity
+            ));
+        }
+        let occupied: Vec<u64> =
+            obs.residents.iter().copied().filter(|&u| u != 0).collect();
+        for (i, u) in occupied.iter().enumerate() {
+            if occupied[..i].contains(u) {
+                return Err(format!("uid {u} occupies two slots"));
+            }
+            if !obs.known_uids.contains(u) {
+                return Err(format!("slot holds uid {u}, which no scheduled sequence ever had"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-sequence cache accounting balances: the incremental counters, the
+/// per-head counters and the dense mask all agree, and the aggregate
+/// stats are internally consistent.
+struct CacheAccounting;
+
+impl Invariant for CacheAccounting {
+    fn name(&self) -> &'static str {
+        "cache-accounting"
+    }
+
+    fn check(&self, obs: &StepObs) -> Result<(), String> {
+        for s in &obs.seqs {
+            if s.mask_on != s.kept {
+                return Err(format!(
+                    "seq {}: mask recount {} != kept counter {}",
+                    s.id, s.mask_on, s.kept
+                ));
+            }
+            if s.head_sum != s.kept {
+                return Err(format!(
+                    "seq {}: per-head sum {} != kept counter {}",
+                    s.id, s.head_sum, s.kept
+                ));
+            }
+            if s.kept > s.filled {
+                return Err(format!("seq {}: kept {} > filled {}", s.id, s.kept, s.filled));
+            }
+            if s.filled != s.len * s.lh {
+                return Err(format!(
+                    "seq {}: filled {} != len {} x heads {}",
+                    s.id, s.filled, s.len, s.lh
+                ));
+            }
+            if s.len != s.pos.min(s.t_max) {
+                return Err(format!(
+                    "seq {}: cache len {} != min(pos {}, t_max {})",
+                    s.id, s.len, s.pos, s.t_max
+                ));
+            }
+            if !(0.0..=1.0).contains(&s.compression) {
+                return Err(format!("seq {}: compression {} outside [0, 1]", s.id, s.compression));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Transfer accounting matches the row-only steady-state contract: the
+/// observed counter deltas equal the protocol replay's prediction.
+struct TransferAccounting;
+
+impl Invariant for TransferAccounting {
+    fn name(&self) -> &'static str {
+        "transfer-accounting"
+    }
+
+    fn check(&self, obs: &StepObs) -> Result<(), String> {
+        if obs.expected != obs.actual {
+            return Err(format!(
+                "expected {:?}, observed {:?} (joins/evictions/steady-state replay disagrees \
+                 with the engine's actual KV traffic)",
+                obs.expected, obs.actual
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Threshold policies never evict the sliding window of the `w` most
+/// recent filled positions.
+struct WindowProtection;
+
+impl Invariant for WindowProtection {
+    fn name(&self) -> &'static str {
+        "window-protection"
+    }
+
+    fn check(&self, obs: &StepObs) -> Result<(), String> {
+        for s in &obs.seqs {
+            if s.window_ok == Some(false) {
+                return Err(format!(
+                    "seq {}: a position inside the protected window was evicted (len {})",
+                    s.id, s.len
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Budget policies land on their keep fraction (± window slack) at
+/// prefill time.
+struct BudgetRespect;
+
+impl Invariant for BudgetRespect {
+    fn name(&self) -> &'static str {
+        "budget-respect"
+    }
+
+    fn check(&self, obs: &StepObs) -> Result<(), String> {
+        for b in &obs.budgets {
+            if (b.kept_frac - b.keep_frac).abs() > b.slack {
+                return Err(format!(
+                    "seq {} ({}): kept {:.3} vs budget {:.3} (slack {:.3})",
+                    b.id, b.policy, b.kept_frac, b.keep_frac, b.slack
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The full registry, in check order.
+pub fn registry() -> Vec<Box<dyn Invariant>> {
+    vec![
+        Box::new(SlotConservation),
+        Box::new(CacheAccounting),
+        Box::new(TransferAccounting),
+        Box::new(WindowProtection),
+        Box::new(BudgetRespect),
+    ]
+}

@@ -1,0 +1,42 @@
+//! Deterministic multi-client simulation harness with invariant checking.
+//!
+//! The paper's claim — pruning "with negligible accuracy loss" — must hold
+//! under *serving* conditions: adversarial interleavings of join / leave /
+//! cancel / evict that no hand-written test enumerates. This module is a
+//! seeded scenario fuzzer over the full request path:
+//!
+//! ```text
+//! v2 request parse (server) → SchedCore (continuous batcher core)
+//!     → Engine sessions (prefill / shared decode_step) → policies
+//!     → PagedKvCache → backend KvHandle (device-resident KV)
+//! ```
+//!
+//! * [`ScenarioSpec::generate`] derives a whole episode from one seed:
+//!   clients with staggered joins, bucket-crossing prompt lengths from the
+//!   workload generators, threshold/budget policy mixes, mid-decode
+//!   cancels and disconnects.
+//! * [`run_scenario`] drives it one discrete step at a time and checks the
+//!   invariant [`registry`] after every step: slot conservation, cache
+//!   accounting balance, the row-only transfer contract, window
+//!   protection, budget respect — then metamorphic faithfulness (solo
+//!   replay) at the end.
+//! * [`thread_traces_match`] re-runs a scenario at different thread counts
+//!   and requires bit-identical traces (the determinism rule every
+//!   backend must satisfy — docs/TESTING.md).
+//! * [`simulate`] adds the shrink pass: a violation is minimized via
+//!   [`crate::util::propcheck::minimize`] and reported with a single
+//!   replay line (`kvzap simulate --seed S --steps K ...`).
+//!
+//! Every run is bitwise reproducible at a fixed seed and thread count;
+//! scenarios run hermetically on the reference backend (tier-1 rule).
+
+pub mod driver;
+pub mod invariants;
+pub mod scenario;
+
+pub use driver::{
+    replay_line, replay_opts, run_scenario, shrink_spec, simulate, thread_traces_match,
+    ClientOutcome, Fault, SimFailure, SimOptions, SimReport, SimSummary, SimTrace,
+};
+pub use invariants::{registry, StepObs, TransferDelta, Violation};
+pub use scenario::{ClientScript, ScenarioSpec};

@@ -1,0 +1,255 @@
+//! Seeded scenario specifications for the simulation harness.
+//!
+//! A [`ScenarioSpec`] is a fully-deterministic description of one
+//! multi-client serving episode: which clients exist, when each joins,
+//! what it asks for (prompt from the [`crate::workload`] generators,
+//! pruning policy from the [`crate::policies::PolicySpec`] mix, sampling
+//! parameters), and which adversarial actions happen when (mid-decode
+//! cancel, client disconnect). Everything derives from one `u64` seed, so
+//! `kvzap simulate --seed S --steps K` regenerates the exact episode; the
+//! JSON round-trip ([`ScenarioSpec::to_json`] / [`ScenarioSpec::from_json`])
+//! replays shrunk scenarios that no longer correspond to any seed.
+
+use anyhow::{anyhow, Result};
+
+use crate::policies::{PolicySpec, Surrogate};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload;
+
+/// One scripted client: a single v2-protocol generation request plus the
+/// step-indexed actions the harness performs on its behalf.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientScript {
+    /// Simulation step at which the request is submitted.
+    pub join_step: usize,
+    /// Prompt text (produced by the workload generators).
+    pub prompt: String,
+    /// Pruning policy for this request.
+    pub policy: PolicySpec,
+    /// Send the policy as a structured JSON object instead of the compact
+    /// string form (both protocol spellings must behave identically).
+    pub structured_policy: bool,
+    /// Token budget (`max_new`).
+    pub max_new: usize,
+    /// Greedy decoding; when false the request samples with the paper's
+    /// reasoning settings seeded by `seed`.
+    pub greedy: bool,
+    /// Sampler seed (kept below 2^32 so the JSON number round-trips).
+    pub seed: u64,
+    /// Stop at the first newline (the task-grammar default).
+    pub stop_newline: bool,
+    /// Cancel the request at this simulation step (mid-decode when it
+    /// lands after admission).
+    pub cancel_step: Option<usize>,
+    /// Stop reading events at this step — a simulated client disconnect;
+    /// the scheduler notices on the next token send and frees the slot.
+    pub drop_step: Option<usize>,
+}
+
+impl ClientScript {
+    /// The v2-protocol request body for this client (always streaming, id
+    /// echoed so cancels can address it).
+    pub fn request_json(&self, id: u64) -> Json {
+        let policy = if self.structured_policy {
+            self.policy.to_json()
+        } else {
+            Json::str(self.policy.to_string())
+        };
+        Json::obj(vec![
+            ("prompt", Json::str(self.prompt.clone())),
+            ("policy", policy),
+            ("max_new", Json::num(self.max_new as f64)),
+            ("greedy", Json::Bool(self.greedy)),
+            ("seed", Json::num(self.seed as f64)),
+            ("stop_newline", Json::Bool(self.stop_newline)),
+            ("stream", Json::Bool(true)),
+            ("id", Json::num(id as f64)),
+        ])
+    }
+
+    /// JSON form (for replaying shrunk scenarios from a file).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("join_step", Json::num(self.join_step as f64)),
+            ("prompt", Json::str(self.prompt.clone())),
+            ("policy", self.policy.to_json()),
+            ("structured_policy", Json::Bool(self.structured_policy)),
+            ("max_new", Json::num(self.max_new as f64)),
+            ("greedy", Json::Bool(self.greedy)),
+            ("seed", Json::num(self.seed as f64)),
+            ("stop_newline", Json::Bool(self.stop_newline)),
+            ("cancel_step", opt_num(self.cancel_step)),
+            ("drop_step", opt_num(self.drop_step)),
+        ])
+    }
+
+    /// Parse the [`ClientScript::to_json`] form.
+    pub fn from_json(j: &Json) -> Result<ClientScript> {
+        let field = |k: &str| j.get(k).ok_or_else(|| anyhow!("client missing '{k}'"));
+        Ok(ClientScript {
+            join_step: field("join_step")?.as_usize().ok_or_else(|| anyhow!("bad join_step"))?,
+            prompt: field("prompt")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad prompt"))?
+                .to_string(),
+            policy: PolicySpec::from_json(field("policy")?)?,
+            structured_policy: field("structured_policy")?.as_bool().unwrap_or(false),
+            max_new: field("max_new")?.as_usize().ok_or_else(|| anyhow!("bad max_new"))?,
+            greedy: field("greedy")?.as_bool().unwrap_or(true),
+            seed: field("seed")?.as_i64().unwrap_or(0) as u64,
+            stop_newline: field("stop_newline")?.as_bool().unwrap_or(true),
+            cancel_step: opt_usize(j.get("cancel_step")),
+            drop_step: opt_usize(j.get("drop_step")),
+        })
+    }
+}
+
+fn opt_num(v: Option<usize>) -> Json {
+    match v {
+        Some(n) => Json::num(n as f64),
+        None => Json::Null,
+    }
+}
+
+fn opt_usize(v: Option<&Json>) -> Option<usize> {
+    match v {
+        None | Some(Json::Null) => None,
+        Some(j) => j.as_usize(),
+    }
+}
+
+/// A deterministic multi-client episode (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Seed this spec was generated from (0 for hand-written specs).
+    pub seed: u64,
+    /// Number of discrete scheduler steps to run.
+    pub steps: usize,
+    /// Continuous-batcher slot cap (clamped to the largest decode bucket).
+    pub max_batch: usize,
+    /// The scripted clients, submitted in index order at their join steps.
+    pub clients: Vec<ClientScript>,
+}
+
+impl ScenarioSpec {
+    /// Generate the episode for `seed`: `n_clients` clients with staggered
+    /// joins over the first half of the run, prompts drawn from the
+    /// ruler/longbench/aime generators at bucket-crossing context lengths,
+    /// policies mixed over the threshold and budget families of
+    /// [`crate::policies::spec::CATALOG`], and a sprinkle of cancels and
+    /// disconnects.
+    pub fn generate(seed: u64, steps: usize, n_clients: usize, max_batch: usize) -> ScenarioSpec {
+        let mut r = Rng::new(seed);
+        let clients =
+            (0..n_clients).map(|i| client_script(&mut r.fork(i as u64), steps)).collect();
+        ScenarioSpec { seed, steps, max_batch, clients }
+    }
+
+    /// JSON form (for replaying shrunk scenarios from a file).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("clients", Json::Arr(self.clients.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    /// Parse the [`ScenarioSpec::to_json`] form.
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        let clients = j
+            .get("clients")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| anyhow!("scenario missing 'clients' array"))?
+            .iter()
+            .map(ClientScript::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ScenarioSpec {
+            seed: j.get("seed").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+            steps: j
+                .get("steps")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("scenario missing 'steps'"))?,
+            max_batch: j.get("max_batch").and_then(|v| v.as_usize()).unwrap_or(4),
+            clients,
+        })
+    }
+}
+
+/// Context-length targets chosen to cross the prefill bucket grid
+/// (128/256/384/512): admission cost and bucket selection both vary.
+const TARGET_LENS: [usize; 5] = [80, 120, 200, 300, 460];
+
+fn client_script(r: &mut Rng, steps: usize) -> ClientScript {
+    let join_step = r.below((steps / 2).max(1));
+    let target = *r.choice(&TARGET_LENS);
+    let (prompt, task_max_new) = match r.below(10) {
+        0..=5 => {
+            let subset = *r.choice(workload::RULER_SUBSETS);
+            let t = workload::ruler_instance(subset, target, r);
+            (t.prompt, t.max_new)
+        }
+        6 | 7 => {
+            let subset = *r.choice(workload::LONGBENCH_SUBSETS);
+            let t = workload::longbench_instance(subset, target, r);
+            (t.prompt, t.max_new)
+        }
+        _ => {
+            let a = workload::aime_instance(r);
+            (a.task.prompt, a.task.max_new.min(48))
+        }
+    };
+    let greedy = r.below(100) < 85;
+    let max_new = match r.below(4) {
+        0 => task_max_new.clamp(2, 48),
+        1 => r.below(6) + 2,
+        2 => r.below(24) + 4,
+        _ => r.below(40) + 8,
+    };
+    let cancel_step = if r.below(100) < 20 { Some(join_step + 1 + r.below(12)) } else { None };
+    let drop_step = if cancel_step.is_none() && r.below(100) < 12 {
+        Some(join_step + 2 + r.below(12))
+    } else {
+        None
+    };
+    ClientScript {
+        join_step,
+        prompt,
+        policy: random_policy(r),
+        structured_policy: r.below(100) < 30,
+        max_new,
+        greedy,
+        seed: r.below(1 << 31) as u64,
+        stop_newline: greedy && r.below(100) < 80,
+        cancel_step,
+        drop_step,
+    }
+}
+
+/// Policy mix: threshold policies (including the decode-evicting tau=100
+/// extreme), the budget family, recency/sink and random baselines, and the
+/// occasional oracle double pass.
+fn random_policy(r: &mut Rng) -> PolicySpec {
+    match r.below(16) {
+        0..=3 => PolicySpec::Kvzap {
+            surrogate: Surrogate::Mlp,
+            tau: *r.choice(&[-8.0, -4.0, -1.0]),
+        },
+        4 => PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: *r.choice(&[-6.0, -4.0]) },
+        5 => PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: 100.0 },
+        6 | 7 => PolicySpec::Full,
+        8 => PolicySpec::H2o { keep_frac: *r.choice(&[0.25, 0.5, 0.75]) },
+        9 => PolicySpec::SnapKv { keep_frac: *r.choice(&[0.25, 0.5, 0.75]) },
+        10 => PolicySpec::AdaKv { keep_frac: *r.choice(&[0.5, 0.75]) },
+        11 => PolicySpec::Knorm { keep_frac: *r.choice(&[0.5, 0.75]) },
+        12 => PolicySpec::StreamingLlm { keep_frac: 0.5, sinks: 4 },
+        13 => PolicySpec::Random { keep_frac: *r.choice(&[0.3, 0.6]), seed: r.below(1000) as u64 },
+        14 => PolicySpec::Kvzip { plus: false, keep_frac: 0.5 },
+        _ => PolicySpec::KvzapTopk {
+            surrogate: Surrogate::Mlp,
+            keep_frac: 0.5,
+            per_layer: false,
+        },
+    }
+}

@@ -5,7 +5,14 @@
 //! closure; on failure it performs greedy shrinking via the user-supplied
 //! `shrink` steps (each yields candidate smaller inputs) and reports the
 //! minimal counterexample. Used by rust/tests/ for the coordinator
-//! invariants (cache accounting, policy monotonicity, batching).
+//! invariants (cache accounting, policy monotonicity, batching) and by the
+//! simulation harness ([`crate::simharness`]) to minimize failing
+//! scenarios.
+//!
+//! Every failure report carries the effective seed and the shrunk input,
+//! and setting `KVZAP_PROP_SEED` (decimal or `0x`-hex) overrides the
+//! built-in seed so a failure printed by CI can be replayed locally from
+//! the test output alone.
 
 use crate::util::rng::Rng;
 
@@ -14,10 +21,61 @@ pub struct Config {
     pub seed: u64,
 }
 
+impl Config {
+    /// The seed a run will actually use: the `KVZAP_PROP_SEED` environment
+    /// override when set (and parseable), the configured seed otherwise.
+    pub fn effective_seed(&self) -> u64 {
+        resolve_seed(std::env::var("KVZAP_PROP_SEED").ok().as_deref(), self.seed)
+    }
+}
+
+/// Seed-resolution rule, split from the environment read so it is testable
+/// without mutating process-global state (tests run multithreaded; a
+/// `set_var` racing a `getenv` elsewhere is undefined behavior on glibc).
+fn resolve_seed(env: Option<&str>, fallback: u64) -> u64 {
+    env.and_then(parse_seed).unwrap_or(fallback)
+}
+
 impl Default for Config {
     fn default() -> Self {
         Config { cases: 128, seed: 0xC0FFEE }
     }
+}
+
+/// Parse a seed value as printed by a failure report: decimal or 0x-hex.
+pub fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Greedy shrink: repeatedly replace `input` with the first still-failing
+/// candidate from `shrink` until none fails. Returns the minimal failing
+/// input and its error. `shrink` must make strict progress (candidates
+/// smaller by some measure) or this loops forever — the same contract the
+/// in-test shrinkers and the scenario shrinker follow.
+pub fn minimize<T: Clone>(
+    input: T,
+    msg: String,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> (T, String) {
+    let mut cur = input;
+    let mut cur_msg = msg;
+    'outer: loop {
+        for cand in shrink(&cur) {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                cur_msg = m;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, cur_msg)
 }
 
 /// Check `prop` over `cases` inputs from `gen`; shrink failures with
@@ -28,26 +86,17 @@ pub fn check_with<T: Clone + std::fmt::Debug>(
     shrink: impl Fn(&T) -> Vec<T>,
     prop: impl Fn(&T) -> Result<(), String>,
 ) {
-    let mut rng = Rng::new(cfg.seed);
+    let seed = cfg.effective_seed();
+    let mut rng = Rng::new(seed);
     for case in 0..cfg.cases {
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
-            // greedy shrink
-            let mut cur = input;
-            let mut cur_msg = msg;
-            'outer: loop {
-                for cand in shrink(&cur) {
-                    if let Err(m) = prop(&cand) {
-                        cur = cand;
-                        cur_msg = m;
-                        continue 'outer;
-                    }
-                }
-                break;
-            }
+            let original = format!("{input:?}");
+            let (cur, cur_msg) = minimize(input, msg, &shrink, &prop);
             panic!(
-                "propcheck failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
-                cfg.seed, cur, cur_msg
+                "propcheck failed (case {case}, seed {seed:#x}):\n  original: {original}\n  \
+                 shrunk: {cur:?}\n  error: {cur_msg}\n  replay: KVZAP_PROP_SEED={seed:#x} \
+                 re-runs this exact input sequence"
             );
         }
     }
@@ -110,5 +159,55 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn seed_parses_decimal_and_hex() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed(" 0xC0FFEE "), Some(0xC0FFEE));
+        assert_eq!(parse_seed("0XFF"), Some(255));
+        assert_eq!(parse_seed("nope"), None);
+        assert_eq!(parse_seed(""), None);
+    }
+
+    #[test]
+    fn env_override_wins_over_configured_seed() {
+        assert_eq!(resolve_seed(Some("0x1234"), 7), 0x1234);
+        assert_eq!(resolve_seed(Some("42"), 7), 42);
+        assert_eq!(resolve_seed(None, 7), 7, "without the env var the config seed is used");
+        assert_eq!(resolve_seed(Some("garbage"), 7), 7, "unparseable overrides are ignored");
+    }
+
+    #[test]
+    fn failure_report_names_the_replay_env_var() {
+        let result = std::panic::catch_unwind(|| {
+            check(4, |r| r.below(10), |_| Err::<(), String>("always".into()));
+        });
+        let payload = result.expect_err("property must fail");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("propcheck failed"), "{msg}");
+        assert!(msg.contains("KVZAP_PROP_SEED"), "replay hint missing: {msg}");
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn minimize_reaches_a_local_minimum() {
+        let (min, msg) = minimize(
+            (0..16u32).collect::<Vec<u32>>(),
+            "too long".into(),
+            |v| shrink_vec(v),
+            |v| {
+                if v.len() < 3 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+        assert_eq!(min.len(), 3, "greedy shrink stops at the smallest failing size");
+        assert_eq!(msg, "too long");
     }
 }

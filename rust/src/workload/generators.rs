@@ -397,9 +397,65 @@ pub fn aime_instance(r: &mut Rng) -> AimeInstance {
 }
 
 /// Parse the final "ANSWER n" line from an AIME generation.
+///
+/// Lenient about the formatting noise simulation runs surfaced: leading /
+/// trailing whitespace around the line or the value and a `\boxed{...}`
+/// wrapper are all accepted. The token after `ANSWER` must still be
+/// separated by whitespace (or be a `\boxed{}` group), so a line like
+/// `ANSWERED 42` never matches.
 pub fn parse_aime_answer(generated: &str) -> Option<String> {
-    generated
-        .lines()
-        .rev()
-        .find_map(|l| l.strip_prefix("ANSWER ").map(|s| s.trim().to_string()))
+    generated.lines().rev().find_map(|l| {
+        let rest = l.trim().strip_prefix("ANSWER")?;
+        if let Some(inner) =
+            rest.trim_start().strip_prefix("\\boxed{").and_then(|r| r.strip_suffix('}'))
+        {
+            let inner = inner.trim();
+            return if inner.is_empty() { None } else { Some(inner.to_string()) };
+        }
+        if !rest.starts_with(char::is_whitespace) {
+            return None;
+        }
+        let rest = rest.trim();
+        if rest.is_empty() {
+            None
+        } else {
+            Some(rest.to_string())
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aime_answer_parsing_is_lenient() {
+        let table: &[(&str, Option<&str>)] = &[
+            // the trained format
+            ("+3 -> 45\nANSWER 45", Some("45")),
+            // whitespace padding around line and value
+            ("  ANSWER   45  ", Some("45")),
+            ("steps\n\tANSWER 7\n", Some("7")),
+            // boxed answers
+            ("ANSWER \\boxed{123}", Some("123")),
+            ("ANSWER \\boxed{ 123 }", Some("123")),
+            ("ANSWER\\boxed{9}", Some("9")),
+            // the last ANSWER line wins
+            ("ANSWER 1\nANSWER 2", Some("2")),
+            // non-answers must not match
+            ("ANSWERED 42", None),
+            ("ANSWER\\frac{12}{5}", None),
+            ("ANSWER", None),
+            ("ANSWER ", None),
+            ("no answer here", None),
+            ("", None),
+        ];
+        for (input, want) in table {
+            assert_eq!(
+                parse_aime_answer(input).as_deref(),
+                *want,
+                "input {input:?}"
+            );
+        }
+    }
 }

@@ -1,0 +1,436 @@
+//! Batcher- and server-level integration tests: continuous batching with
+//! per-request params, cancellation, the v2 streaming protocol over TCP,
+//! the headless in-process transport, and the server error paths.
+//!
+//! Split from the original tests/integration.rs — same tests, same names —
+//! plus the error-path and headless-transport coverage.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{engine, recv_done};
+use kvzap::coordinator::{Batcher, BatcherConfig, Request, SamplingParams};
+use kvzap::policies::{self, PolicySpec};
+use kvzap::server::{Client, HeadlessServer, Server, ServerConfig};
+use kvzap::util::json::Json;
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+// ---------------------------------------------------------------------------
+// Batcher-level
+
+/// Regression test for the group-static batcher bug where the leader's
+/// SamplingParams silently replaced every follower's: two concurrent
+/// requests with different `max_new` must come back with the lengths (and
+/// texts) of their individual runs.
+#[test]
+fn batcher_honors_per_request_sampling_params() {
+    let e = engine();
+    let mut rng = Rng::new(21);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let full = policies::by_name("full", e.window()).unwrap();
+    let sp_short = SamplingParams::greedy(2);
+    let sp_long = SamplingParams::greedy(16);
+    let r_short = e.generate(&task.prompt, full.as_ref(), &sp_short).unwrap();
+    let r_long = e.generate(&task.prompt, full.as_ref(), &sp_long).unwrap();
+    assert_ne!(
+        r_short.tokens_out, r_long.tokens_out,
+        "reference lengths must differ for this regression test to bite"
+    );
+
+    let batcher =
+        Batcher::start(e.clone(), BatcherConfig { max_batch: 4, max_wait_us: 50_000 });
+    let (tx1, rx1) = std::sync::mpsc::channel();
+    let (tx2, rx2) = std::sync::mpsc::channel();
+    batcher
+        .submit(Request {
+            prompt: task.prompt.clone(),
+            policy: PolicySpec::Full,
+            sp: sp_short.clone(),
+            stream: false,
+            events: tx1,
+        })
+        .unwrap();
+    batcher
+        .submit(Request {
+            prompt: task.prompt.clone(),
+            policy: PolicySpec::Full,
+            sp: sp_long.clone(),
+            stream: false,
+            events: tx2,
+        })
+        .unwrap();
+    let d1 = recv_done(&rx1);
+    let d2 = recv_done(&rx2);
+    assert!(d1.error.is_none(), "{:?}", d1.error);
+    assert!(d2.error.is_none(), "{:?}", d2.error);
+    assert_eq!(d1.tokens_out, r_short.tokens_out, "leader max_new must not leak to others");
+    assert_eq!(d2.tokens_out, r_long.tokens_out, "follower max_new must be honored");
+    assert_eq!(d1.text, r_short.text);
+    assert_eq!(d2.text, r_long.text);
+}
+
+/// Cancellation frees the slot between steps and reports its reason; the
+/// batcher keeps serving afterwards.
+#[test]
+fn batcher_cancel_frees_slot_and_reports_reason() {
+    let e = engine();
+    let batcher =
+        Batcher::start(e.clone(), BatcherConfig { max_batch: 2, max_wait_us: 100_000 });
+    let mut rng = Rng::new(22);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let mut sp = SamplingParams::greedy(200);
+    sp.stop_at_newline = false;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let id = batcher
+        .submit(Request {
+            prompt: task.prompt.clone(),
+            policy: PolicySpec::Full,
+            sp,
+            stream: true,
+            events: tx,
+        })
+        .unwrap();
+    // lands during the batch-forming grace window, i.e. mid-schedule
+    batcher.cancel(id).unwrap();
+    let done = recv_done(&rx);
+    assert_eq!(done.reason.as_deref(), Some("cancelled"), "{done:?}");
+    assert!(done.error.is_none());
+    assert!(done.tokens_out < 200);
+    // the slot is reusable: a subsequent request completes normally
+    let (tx2, rx2) = std::sync::mpsc::channel();
+    batcher
+        .submit(Request {
+            prompt: task.prompt.clone(),
+            policy: PolicySpec::Full,
+            sp: SamplingParams::greedy(4),
+            stream: false,
+            events: tx2,
+        })
+        .unwrap();
+    let d2 = recv_done(&rx2);
+    assert!(d2.error.is_none(), "{:?}", d2.error);
+    assert!(d2.tokens_out >= 1);
+}
+
+// ---------------------------------------------------------------------------
+// Server-level (TCP)
+
+#[test]
+fn server_round_trip() {
+    let e = engine();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:7961".into(),
+        default_policy: "kvzap_mlp:-4".into(),
+        max_batch: 2,
+        max_wait_us: 500,
+    };
+    let server = Arc::new(Server::new(e, cfg));
+    let srv = server.clone();
+    let h = std::thread::spawn(move || srv.serve());
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let mut c = Client::connect("127.0.0.1:7961").unwrap();
+    let resp = c
+        .request(&Json::obj(vec![
+            ("prompt", Json::str("XQZA = 12345. filler. Q XQZA\nA ")),
+            ("max_new", Json::num(8.0)),
+        ]))
+        .unwrap();
+    assert!(resp.get("error").is_none(), "{resp:?}");
+    assert!(resp.get("text").is_some());
+    assert!(resp.get("compression").and_then(|v| v.as_f64()).is_some());
+    // structured stats: transfer accounting is visible over the protocol
+    let stats = c.request(&Json::obj(vec![("cmd", Json::str("stats"))])).unwrap();
+    let s = stats.get("stats").expect("stats object");
+    assert_eq!(s.get("backend").and_then(|b| b.as_str()), Some("reference"));
+    assert!(s.get("requests").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+    assert!(s.get("kv_bytes_up").and_then(|v| v.as_f64()).is_some());
+    assert!(s.get("mask_uploads").and_then(|v| v.as_f64()).is_some());
+    c.shutdown().unwrap();
+    let _ = h.join();
+}
+
+/// The v2 protocol end to end: two concurrent clients with different
+/// `max_new` and policies (one string-form, one structured-form) stream
+/// tokens interleaved from the same decode group; one is cancelled
+/// mid-stream and its slot is reused; a plain v1-style body still returns
+/// the exact pre-redesign response shape.
+#[test]
+fn server_v2_streaming_cancel_and_backcompat() {
+    use std::io::{BufRead as _, BufReader, Write as _};
+    use std::net::TcpStream;
+    use std::time::Instant;
+
+    let e = engine();
+    let addr = "127.0.0.1:7963";
+    let cfg = ServerConfig {
+        addr: addr.into(),
+        default_policy: "kvzap_mlp:-4".into(),
+        max_batch: 2,
+        max_wait_us: 100_000,
+    };
+    let server = Arc::new(Server::new(e.clone(), cfg));
+    let srv = server.clone();
+    let h = std::thread::spawn(move || srv.serve());
+    std::thread::sleep(std::time::Duration::from_millis(150));
+
+    let mut rng = Rng::new(44);
+    let t_a = workload::ruler_instance("niah_single_1", 200, &mut rng.fork(0));
+    let t_b = workload::ruler_instance("niah_single_2", 180, &mut rng.fork(1));
+
+    // engine-direct reference for B (same policy the structured form names)
+    let pol_b = policies::by_name("kvzap_linear:-6", e.window()).unwrap();
+    let mut sp_b = SamplingParams::greedy(8);
+    sp_b.stop_at_newline = false;
+    let ref_b = e.generate(&t_b.prompt, pol_b.as_ref(), &sp_b).unwrap();
+
+    // --- conn A: string-form policy, long stream, cancelled mid-way ------
+    let a_stream = TcpStream::connect(addr).unwrap();
+    let mut a_writer = a_stream.try_clone().unwrap();
+    let a_spare = a_stream.try_clone().unwrap(); // for the v1 body later
+    let a_reader = BufReader::new(a_stream);
+    let req_a = Json::obj(vec![
+        ("id", Json::str("a")),
+        ("prompt", Json::str(t_a.prompt.clone())),
+        ("policy", Json::str("kvzap_mlp:-4")),
+        ("max_new", Json::num(200.0)),
+        ("stop_newline", Json::Bool(false)),
+        ("stream", Json::Bool(true)),
+    ]);
+    writeln!(a_writer, "{}", req_a.dump()).unwrap();
+    let (a_sig_tx, a_sig_rx) = std::sync::mpsc::channel::<()>();
+    let a_thread = std::thread::spawn(move || -> (Vec<Instant>, Json, Instant) {
+        let mut token_times = vec![];
+        for line in a_reader.lines() {
+            let line = line.unwrap();
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(&line).unwrap();
+            match j.get("event").and_then(|ev| ev.as_str()) {
+                Some("token") => {
+                    token_times.push(Instant::now());
+                    if token_times.len() == 3 {
+                        let _ = a_sig_tx.send(()); // a few tokens are out
+                    }
+                }
+                Some("done") => return (token_times, j, Instant::now()),
+                _ => {} // cancel ack
+            }
+        }
+        panic!("conn A closed before its done event");
+    });
+
+    // --- conn B: structured-form policy, different max_new, full stream --
+    let (b_sig_tx, b_sig_rx) = std::sync::mpsc::channel::<()>();
+    let b_thread = std::thread::spawn(move || -> (Vec<Instant>, Json, Instant) {
+        let b_stream = TcpStream::connect(addr).unwrap();
+        let mut b_writer = b_stream.try_clone().unwrap();
+        let b_reader = BufReader::new(b_stream);
+        let req_b = Json::obj(vec![
+            ("id", Json::str("b")),
+            ("prompt", Json::str(t_b.prompt.clone())),
+            (
+                "policy",
+                Json::parse(r#"{"kind": "kvzap", "surrogate": "linear", "tau": -6.0}"#)
+                    .unwrap(),
+            ),
+            ("max_new", Json::num(8.0)),
+            ("stop_newline", Json::Bool(false)),
+            ("stream", Json::Bool(true)),
+        ]);
+        writeln!(b_writer, "{}", req_b.dump()).unwrap();
+        let mut token_times = vec![];
+        for line in b_reader.lines() {
+            let line = line.unwrap();
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(&line).unwrap();
+            match j.get("event").and_then(|ev| ev.as_str()) {
+                Some("token") => {
+                    token_times.push(Instant::now());
+                    if token_times.len() == 1 {
+                        let _ = b_sig_tx.send(()); // B's stream has begun
+                    }
+                }
+                Some("done") => return (token_times, j, Instant::now()),
+                _ => {}
+            }
+        }
+        panic!("conn B closed before its done event");
+    });
+
+    // cancel A only once it has streamed a few tokens AND B's stream has
+    // begun — this pins the interleaving deterministically (A's budget of
+    // 200 tokens guarantees it is still mid-stream here)
+    a_sig_rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+    b_sig_rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+    let cancel_cmd =
+        Json::obj(vec![("cmd", Json::str("cancel")), ("id", Json::str("a"))]);
+    writeln!(a_writer, "{}", cancel_cmd.dump()).unwrap();
+
+    let (a_tokens, a_done, a_done_at) = a_thread.join().unwrap();
+    let (b_tokens, b_done, _b_done_at) = b_thread.join().unwrap();
+
+    // A was cancelled mid-stream: partial text, explicit reason
+    assert_eq!(a_done.get("reason").and_then(|r| r.as_str()), Some("cancelled"));
+    assert_eq!(a_done.get("id").and_then(|i| i.as_str()), Some("a"));
+    let a_out = a_done.get("tokens_out").and_then(|t| t.as_usize()).unwrap();
+    assert!((3..200).contains(&a_out), "cancelled after a few tokens, got {a_out}");
+
+    // B streamed to completion and matches its single-run reference — the
+    // structured policy object behaves exactly like the string form
+    assert_eq!(b_done.get("id").and_then(|i| i.as_str()), Some("b"));
+    assert_eq!(
+        b_done.get("text").and_then(|t| t.as_str()).unwrap(),
+        ref_b.text,
+        "structured-form policy stream must match the engine-direct run"
+    );
+    assert_eq!(
+        b_done.get("tokens_out").and_then(|t| t.as_usize()).unwrap(),
+        b_tokens.len(),
+        "one token event per accepted token"
+    );
+    if ref_b.tokens_out == 7 {
+        // the engine-direct run exhausted its budget; the stream must
+        // report the same reason
+        assert_eq!(b_done.get("reason").and_then(|r| r.as_str()), Some("max_tokens"));
+    }
+
+    // interleaving: B's stream started while A was still streaming — with
+    // the old group-static scheduler B's first token could only arrive
+    // after A's stream had fully finished
+    assert!(!a_tokens.is_empty() && !b_tokens.is_empty());
+    assert!(
+        b_tokens[0] < a_done_at,
+        "token streams must interleave (continuous batching, not group-static)"
+    );
+
+    // A's freed slot is reusable immediately: a plain v1-style body on the
+    // same connection (no id, no stream) gets the exact pre-redesign
+    // response shape and the same text as an engine-direct run
+    let ref_a = e
+        .generate(
+            &t_a.prompt,
+            policies::by_name("kvzap_mlp:-4", e.window()).unwrap().as_ref(),
+            &SamplingParams::greedy(4),
+        )
+        .unwrap();
+    let req_v1 = Json::obj(vec![
+        ("prompt", Json::str(t_a.prompt.clone())),
+        ("max_new", Json::num(4.0)),
+    ]);
+    writeln!(a_writer, "{}", req_v1.dump()).unwrap();
+    let mut a_tail = BufReader::new(a_spare);
+    let resp = loop {
+        let mut line = String::new();
+        assert!(a_tail.read_line(&mut line).unwrap() > 0, "conn A closed");
+        if line.trim().is_empty() {
+            continue;
+        }
+        // skip any late cancel ack (even a torn one the joined reader
+        // thread left behind in the kernel buffer)
+        let j = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(_) => continue,
+        };
+        if j.get("text").is_some() {
+            break j;
+        }
+    };
+    let keys: Vec<String> =
+        resp.as_obj().unwrap().keys().cloned().collect();
+    assert_eq!(
+        keys,
+        vec!["compression", "e2e_us", "text", "tokens_out"],
+        "v1 body must return the exact pre-redesign response shape"
+    );
+    assert_eq!(resp.get("text").and_then(|t| t.as_str()).unwrap(), ref_a.text);
+
+    // clean shutdown
+    drop(a_writer);
+    drop(a_tail);
+    let mut c = Client::connect(addr).unwrap();
+    c.shutdown().unwrap();
+    let _ = h.join();
+}
+
+// ---------------------------------------------------------------------------
+// Server-level (headless transport + error paths)
+
+fn headless_server() -> HeadlessServer {
+    HeadlessServer::new(
+        engine(),
+        ServerConfig {
+            addr: String::new(), // unused by the headless transport
+            default_policy: "kvzap_mlp:-4".into(),
+            max_batch: 2,
+            max_wait_us: 500,
+        },
+    )
+}
+
+/// The headless in-process transport runs the same v2 loop as TCP:
+/// commands, generation, stats — and connections share one batcher.
+#[test]
+fn headless_transport_runs_the_v2_protocol() {
+    let srv = headless_server();
+    let c = srv.connect();
+    let r = c.request(r#"{"cmd": "policies"}"#).unwrap();
+    let n = r.get("policies").and_then(|p| p.as_arr()).map(|a| a.len()).unwrap_or(0);
+    assert!(n >= 10, "policy catalog over headless: {n}");
+    let r = c.request(r#"{"prompt": "KEY = 777. filler. Q KEY\nA ", "max_new": 6}"#).unwrap();
+    assert!(r.get("error").is_none(), "{r:?}");
+    assert!(r.get("text").is_some());
+    let stats = c.request(r#"{"cmd": "stats"}"#).unwrap();
+    let s = stats.get("stats").expect("stats object");
+    assert_eq!(s.get("backend").and_then(|b| b.as_str()), Some("reference"));
+    // a second connection shares the same batcher and engine
+    let c2 = srv.connect();
+    let r2 = c2.request(r#"{"prompt": "KEY = 777. filler. Q KEY\nA ", "max_new": 2}"#).unwrap();
+    assert!(r2.get("error").is_none(), "{r2:?}");
+}
+
+/// Malformed JSON, an unknown cmd, a cancel for an unknown id, and an
+/// oversized prompt all return structured errors — and the connection
+/// keeps serving afterwards instead of dropping.
+#[test]
+fn server_error_paths_return_structured_errors() {
+    let srv = headless_server();
+    let c = srv.connect();
+
+    let r = c.request("{not json").unwrap();
+    let msg = r.get("error").and_then(|v| v.as_str()).expect("error field");
+    assert!(msg.contains("bad json"), "{msg}");
+
+    let r = c.request(r#"{"cmd": "frobnicate"}"#).unwrap();
+    let msg = r.get("error").and_then(|v| v.as_str()).expect("error field");
+    assert!(msg.contains("unknown cmd"), "{msg}");
+
+    let r = c.request(r#"{"cmd": "cancel", "id": "ghost"}"#).unwrap();
+    assert_eq!(r.get("ok").and_then(|v| v.as_bool()), Some(false));
+    assert!(r.get("error").is_some(), "cancel of unknown id carries an error: {r:?}");
+
+    // oversized prompt: rejected with a structured error (id echoed), not
+    // silently truncated and not a dropped connection
+    let max_prompt = engine().max_prompt();
+    let huge = "x".repeat(max_prompt + 10);
+    let req = Json::obj(vec![
+        ("prompt", Json::str(huge)),
+        ("max_new", Json::num(2.0)),
+        ("id", Json::str("big")),
+    ]);
+    let r = c.request(&req.dump()).unwrap();
+    let msg = r.get("error").and_then(|v| v.as_str()).expect("error field");
+    assert!(msg.contains("prompt too long"), "{msg}");
+    assert_eq!(r.get("id").and_then(|i| i.as_str()), Some("big"));
+
+    // the connection survived all four: a normal request still works
+    let r = c
+        .request(r#"{"prompt": "XQZA = 12345. filler. Q XQZA\nA ", "max_new": 4}"#)
+        .unwrap();
+    assert!(r.get("error").is_none(), "{r:?}");
+    assert!(r.get("text").is_some());
+}

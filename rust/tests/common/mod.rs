@@ -1,0 +1,68 @@
+//! Shared fixtures and helpers for the integration-test crates.
+//!
+//! Every test binary runs hermetically against the pure-Rust reference
+//! backend ([`kvzap::runtime::reference`]) — no `make artifacts`, no
+//! python, no skipping. See docs/TESTING.md for the tier map and the
+//! determinism rules these tests enforce.
+
+#![allow(dead_code)] // each test crate uses a subset of these helpers
+
+use std::sync::Arc;
+
+use kvzap::coordinator::{Engine, Response, SeqEvent};
+use kvzap::runtime::{Arg, Runtime, Tensor};
+use kvzap::util::rng::Rng;
+
+/// Shared engine over the hermetic reference backend — always available.
+pub fn engine() -> Arc<Engine> {
+    static ENGINE: once_cell::sync::OnceCell<Arc<Engine>> = once_cell::sync::OnceCell::new();
+    ENGINE
+        .get_or_init(|| Arc::new(Engine::new(Arc::new(Runtime::reference()))))
+        .clone()
+}
+
+/// Wait (bounded) for a request's final [`Response`] on its event channel.
+pub fn recv_done(rx: &std::sync::mpsc::Receiver<SeqEvent>) -> Response {
+    loop {
+        match rx
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .expect("batcher must answer")
+        {
+            SeqEvent::Done(r) => return r,
+            SeqEvent::Token { .. } => {}
+        }
+    }
+}
+
+/// Fetch every output of one prefill execution as raw f32 bit patterns.
+pub fn prefill_bits(rt: &Runtime, name: &str, toks: &[i32], n: usize) -> Vec<Vec<u32>> {
+    let pf = rt.artifact(name).unwrap();
+    let t = pf.meta.t;
+    let mut flat = vec![0i32; t];
+    flat[..toks.len().min(t)].copy_from_slice(&toks[..toks.len().min(t)]);
+    let lens = [n as i32];
+    let outs = rt.exec(&pf, &[Arg::I32(&flat, &[1, t]), Arg::I32(&lens, &[1])]).unwrap();
+    outs.iter()
+        .zip(&pf.meta.outputs)
+        .map(|(o, spec)| {
+            rt.fetch_f32(o, &spec.shape).unwrap().data.iter().map(|v| v.to_bits()).collect()
+        })
+        .collect()
+}
+
+/// A deterministic needle-in-haystack token pattern of length `len`.
+pub fn needle_tokens(len: usize) -> Vec<i32> {
+    let mut toks = vec![0i32; len];
+    toks[0] = 1;
+    let body = "AAQX = 90210. the sky was clear. KB7 = 41. Q AAQX\nA ";
+    for (i, tok) in toks.iter_mut().enumerate().skip(1) {
+        *tok = body.as_bytes()[(i - 1) % body.len()] as i32;
+    }
+    toks
+}
+
+/// Random `[l, 1, h, t]` stats tensor for policy property tests.
+pub fn ramp_tensor(l: usize, h: usize, t: usize, rng: &mut Rng) -> Tensor {
+    let data: Vec<f32> = (0..l * h * t).map(|_| rng.f64() as f32).collect();
+    Tensor::new(data, vec![l, 1, h, t]).unwrap()
+}

@@ -1,0 +1,165 @@
+//! Parallel blocked reference backend: scalar/parallel bitwise equivalence
+//! (PR 4). The scalar path (threads=1, naive kernels) is the oracle; the
+//! blocked + worker-pool path must reproduce it bit for bit at any thread
+//! count — same unit decomposition, same fixed-order stat merge, same
+//! fast_exp, and blocked kernels that preserve per-output reduction order.
+//!
+//! Split from the original tests/integration.rs — same tests, same names.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{engine, needle_tokens, prefill_bits};
+use kvzap::coordinator::{Engine, SamplingParams};
+use kvzap::policies;
+use kvzap::runtime::{Arg, ParallelConfig, Runtime};
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+/// Tentpole acceptance: the parallel blocked compute path is bitwise
+/// identical to the scalar path on every prefill output (logits, KV
+/// caches, all eight statistics), across thread counts {1, 2, 8} — i.e.
+/// the thread count never changes a single emitted bit.
+#[test]
+fn parallel_prefill_is_bitwise_identical_to_scalar() {
+    let n = 300; // spans several 64-row blocks, not block-aligned
+    let toks = needle_tokens(n);
+    let scalar = Runtime::reference_with_options(512, ParallelConfig::scalar());
+    let want = prefill_bits(&scalar, "prefill_b1_t384", &toks, n);
+    for threads in [2usize, 8] {
+        let rt = Runtime::reference_with_options(512, ParallelConfig::with_threads(threads));
+        let got = prefill_bits(&rt, "prefill_b1_t384", &toks, n);
+        assert_eq!(want.len(), got.len());
+        for (oi, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a, b, "threads={threads}: prefill output {oi} diverged from scalar");
+        }
+    }
+}
+
+/// The kvzip oracle double pass (2x-length prefill, stats_from = n) is
+/// also thread-invariant.
+#[test]
+fn parallel_kvzip_oracle_matches_scalar_bitwise() {
+    let n = 200;
+    let toks = needle_tokens(n);
+    let lens = [n as i32];
+    let mut runs: Vec<Vec<u32>> = vec![];
+    for threads in [1usize, 4] {
+        let rt = Runtime::reference_with_options(512, ParallelConfig::with_threads(threads));
+        let art = rt.artifact("kvzip_score_t256").unwrap();
+        let t = art.meta.t;
+        let mut flat = vec![0i32; t];
+        flat[..n].copy_from_slice(&toks);
+        let outs = rt.exec(&art, &[Arg::I32(&flat, &[1, t]), Arg::I32(&lens, &[1])]).unwrap();
+        let mut bits = vec![];
+        for (o, spec) in outs.iter().zip(&art.meta.outputs) {
+            bits.extend(rt.fetch_f32(o, &spec.shape).unwrap().data.iter().map(|v| v.to_bits()));
+        }
+        runs.push(bits);
+    }
+    assert_eq!(runs[0], runs[1], "kvzip oracle scores diverged between scalar and parallel");
+}
+
+/// Resident decode: slot-parallel execution must equal the serial scalar
+/// path bit for bit — logits, surrogate scores and the in-place KV rows.
+#[test]
+fn parallel_decode_is_bitwise_identical_to_scalar() {
+    let n = 40usize;
+    let toks = needle_tokens(n);
+    let mut per_cfg: Vec<(Vec<u32>, Vec<u32>)> = vec![];
+    for threads in [1usize, 2, 8] {
+        let rt = Runtime::reference_with_options(512, ParallelConfig::with_threads(threads));
+        let pf = rt.artifact("prefill_b1_t128").unwrap();
+        let t = pf.meta.t;
+        let mut flat = vec![0i32; t];
+        flat[..n].copy_from_slice(&toks);
+        let lens = [n as i32];
+        let pouts = rt.exec(&pf, &[Arg::I32(&flat, &[1, t]), Arg::I32(&lens, &[1])]).unwrap();
+        let ki = pf.meta.output_index("kcache").unwrap();
+        let vi = pf.meta.output_index("vcache").unwrap();
+        let seq_k = rt.fetch_f32(&pouts[ki], &pf.meta.outputs[ki].shape).unwrap().data;
+        let seq_v = rt.fetch_f32(&pouts[vi], &pf.meta.outputs[vi].shape).unwrap().data;
+        let m = &rt.manifest.model;
+        let (l, h, tm) = (m.n_layers, m.n_kv_heads, m.t_max);
+        let mut mask = vec![0.0f32; l * h * tm];
+        for li in 0..l {
+            for hi in 0..h {
+                for p in 0..n {
+                    mask[(li * h + hi) * tm + p] = 1.0;
+                }
+            }
+        }
+        // a 4-slot group, every slot occupied -> slot-parallel on the
+        // parallel configs, serial on scalar
+        let dec = rt.artifact("decode_b4").unwrap();
+        let db = dec.meta.batch;
+        let hd = rt.kv_alloc(db).unwrap();
+        for s in 0..db {
+            rt.kv_scatter(&hd, s, &seq_k, &seq_v).unwrap();
+            rt.kv_write_mask(&hd, s, &mask).unwrap();
+        }
+        let mut logits_bits = vec![];
+        let mut kv_bits = vec![];
+        let mut pos = vec![n as i32; db];
+        let cur: Vec<i32> = (0..db).map(|s| b'0' as i32 + s as i32).collect();
+        for _step in 0..3 {
+            let outs = rt.exec_decode_resident(&dec, &cur, &pos, &hd).unwrap();
+            let li = dec.meta.output_index("logits").unwrap();
+            let ri = dec.meta.resident_output_index("logits").unwrap();
+            let lg = rt.fetch_f32(&outs[ri], &dec.meta.outputs[li].shape).unwrap();
+            logits_bits.extend(lg.data.iter().map(|v| v.to_bits()));
+            let mut k_row = vec![0.0f32; hd.row_elems()];
+            let mut v_row = vec![0.0f32; hd.row_elems()];
+            for s in 0..db {
+                rt.kv_fetch_row(&hd, s, pos[s] as usize, &mut k_row, &mut v_row).unwrap();
+                kv_bits.extend(k_row.iter().chain(v_row.iter()).map(|v| v.to_bits()));
+                pos[s] += 1;
+            }
+        }
+        rt.kv_free(&hd);
+        per_cfg.push((logits_bits, kv_bits));
+    }
+    for (i, threads) in [2usize, 8].iter().enumerate() {
+        assert_eq!(per_cfg[0].0, per_cfg[i + 1].0, "threads={threads}: decode logits diverged");
+        assert_eq!(per_cfg[0].1, per_cfg[i + 1].1, "threads={threads}: decoded KV rows diverged");
+    }
+}
+
+/// End-to-end thread-count determinism at the engine level: full
+/// generation (prefill + prune + batched resident decode) produces the
+/// same text and compression on the scalar and parallel paths.
+#[test]
+fn generation_is_thread_count_invariant() {
+    let mut texts: Vec<(String, String)> = vec![];
+    for threads in [1usize, 4] {
+        let rt = Runtime::reference_with_options(512, ParallelConfig::with_threads(threads));
+        let e = Engine::new(Arc::new(rt));
+        let mut rng = Rng::new(11);
+        let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+        let policy = policies::by_name("kvzap_mlp:-4", e.window()).unwrap();
+        let sp = SamplingParams::greedy(8);
+        let prompts = [task.prompt.as_str(), task.prompt.as_str(), task.prompt.as_str()];
+        let rs = e.generate_batch(&prompts, policy.as_ref(), &sp).unwrap();
+        texts.push((rs[0].text.clone(), format!("{:.6}", rs[0].compression)));
+    }
+    assert_eq!(texts[0], texts[1], "generation must not depend on the thread count");
+}
+
+/// The larger-capacity manifests grow the prefill bucket grid so a
+/// 2048-token context prefills in one pass (what bench_prefill sweeps).
+#[test]
+fn extended_prefill_buckets_resolve_long_contexts() {
+    let rt = Runtime::reference_with_options(2048, ParallelConfig::scalar());
+    assert_eq!(rt.manifest.prefill_bucket(2048, 1).as_deref(), Some("prefill_b1_t2048"));
+    assert_eq!(rt.manifest.prefill_bucket(600, 1).as_deref(), Some("prefill_b1_t1024"));
+    // the kvzip oracle grid grows in lockstep, so every admissible prompt
+    // stays oracle-scorable (max_prompt <= max kvzip bucket)
+    assert_eq!(rt.manifest.kvzip_bucket(2048).as_deref(), Some("kvzip_score_t2048"));
+    assert_eq!(rt.manifest.kvzip_bucket(600).as_deref(), Some("kvzip_score_t1024"));
+    let toks = needle_tokens(1024);
+    let bits = prefill_bits(&rt, "prefill_b1_t1024", &toks, 1024);
+    assert!(!bits[0].is_empty(), "long-context prefill executes");
+    // default manifest is unchanged
+    assert_eq!(engine().rt.manifest.buckets.prefill_t, vec![128, 256, 384, 512]);
+}

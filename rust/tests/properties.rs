@@ -1,0 +1,398 @@
+//! Property tests over the coordinator substrates: ScoreBuffer (Algorithm
+//! 1's delayed eviction), PagedKvCache accounting, block-pool residency,
+//! and the byte tokenizer round-trip.
+//!
+//! Split from the original tests/integration.rs — same tests, same names.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::ramp_tensor;
+use kvzap::kvcache::{BlockPool, PagedKvCache};
+use kvzap::policies::{self, PrefillView, PrunePolicy, ScoreBuffer};
+use kvzap::util::propcheck::{check, check_with, shrink_vec, Config};
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+// ---------------------------------------------------------------------------
+// ScoreBuffer: Algorithm 1's delayed eviction (property tests)
+
+/// The sliding window of the `w` most recent decoded positions is never
+/// evicted, regardless of scores or threshold.
+#[test]
+fn prop_scorebuffer_window_never_evicted() {
+    check(
+        60,
+        |r| {
+            let w = r.below(12) + 2;
+            let n = r.below(80) + w + 1;
+            let tau = (r.f64() * 200.0 - 100.0) as f32;
+            let scores: Vec<f32> =
+                (0..n * 4).map(|_| (r.f64() * 20.0 - 10.0) as f32).collect();
+            (w, n, tau, scores)
+        },
+        |&(w, n, tau, ref scores)| {
+            let mut cache = PagedKvCache::new(2, 2, 256);
+            let mut buf = ScoreBuffer::new(w, 2, 2);
+            for i in 0..n {
+                cache.fill(i + 1);
+                buf.push_and_evict(i, scores[i * 4..(i + 1) * 4].to_vec(), tau, &mut cache);
+                for p in i.saturating_sub(w - 1)..=i {
+                    for l in 0..2 {
+                        for h in 0..2 {
+                            if !cache.is_kept(l, h, p) {
+                                return Err(format!(
+                                    "in-window pos {p} evicted at step {i} (w={w} tau={tau})"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Decode-time eviction matches an oracle recomputation on random score
+/// streams: position i ends up evicted in head (l, h) iff it left the
+/// window (i + w < n) and its score fell below tau.
+#[test]
+fn prop_scorebuffer_matches_oracle_recomputation() {
+    check(
+        60,
+        |r| {
+            let w = r.below(10) + 2;
+            let n = r.below(100) + 1;
+            let tau = (r.f64() * 12.0 - 6.0) as f32;
+            let scores: Vec<f32> =
+                (0..n * 4).map(|_| (r.f64() * 20.0 - 10.0) as f32).collect();
+            (w, n, tau, scores)
+        },
+        |&(w, n, tau, ref scores)| {
+            let mut cache = PagedKvCache::new(2, 2, 256);
+            let mut buf = ScoreBuffer::new(w, 2, 2);
+            for i in 0..n {
+                cache.fill(i + 1);
+                buf.push_and_evict(i, scores[i * 4..(i + 1) * 4].to_vec(), tau, &mut cache);
+            }
+            for i in 0..n {
+                for l in 0..2 {
+                    for h in 0..2 {
+                        let evicted = i + w < n && scores[i * 4 + l * 2 + h] < tau;
+                        if cache.is_kept(l, h, i) != !evicted {
+                            return Err(format!(
+                                "pos {i} head ({l},{h}): kept={} oracle_evicted={evicted} \
+                                 (w={w} n={n} tau={tau})",
+                                cache.is_kept(l, h, i)
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Thresholding is monotone in tau: anything evicted at a lower threshold
+/// is also evicted at a higher one (on the same score stream).
+#[test]
+fn prop_scorebuffer_thresholding_monotone_in_tau() {
+    check(
+        40,
+        |r| {
+            let w = r.below(8) + 2;
+            let n = r.below(60) + w + 1;
+            let a = r.f64() * 12.0 - 6.0;
+            let b = r.f64() * 12.0 - 6.0;
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            let scores: Vec<f32> =
+                (0..n * 4).map(|_| (r.f64() * 20.0 - 10.0) as f32).collect();
+            (w, n, lo as f32, hi as f32, scores)
+        },
+        |&(w, n, lo, hi, ref scores)| {
+            let run = |tau: f32| -> PagedKvCache {
+                let mut cache = PagedKvCache::new(2, 2, 256);
+                let mut buf = ScoreBuffer::new(w, 2, 2);
+                for i in 0..n {
+                    cache.fill(i + 1);
+                    buf.push_and_evict(i, scores[i * 4..(i + 1) * 4].to_vec(), tau, &mut cache);
+                }
+                cache
+            };
+            let (clo, chi) = (run(lo), run(hi));
+            if clo.stats().kept < chi.stats().kept {
+                return Err(format!(
+                    "higher tau kept more: {} (tau={lo}) vs {} (tau={hi})",
+                    clo.stats().kept,
+                    chi.stats().kept
+                ));
+            }
+            for i in 0..n {
+                for l in 0..2 {
+                    for h in 0..2 {
+                        if !clo.is_kept(l, h, i) && chi.is_kept(l, h, i) {
+                            return Err(format!(
+                                "pos {i} ({l},{h}) evicted at tau={lo} but kept at tau={hi}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// PagedKvCache invariants (property tests)
+
+#[test]
+fn prop_budget_policies_meet_budget() {
+    check(
+        40,
+        |r| {
+            (
+                r.below(4) + 1,                   // layers
+                r.below(3) + 1,                   // heads
+                r.below(200) + 40,                // prompt len
+                [0.25, 0.5, 0.75][r.below(3)],    // keep frac
+                r.next_u64(),
+            )
+        },
+        |&(l, h, n, frac, seed)| {
+            let mut rng = Rng::new(seed);
+            let t = ramp_tensor(l, h, 256, &mut rng);
+            let view = PrefillView {
+                b: 0,
+                score_lin: &t, score_mlp: &t, max_attn: &t, plus_attn: &t,
+                cum_attn: &t, win_attn: &t, vnorm: &t, knorm: &t,
+                oracle_s: Some(&t), oracle_s_plus: Some(&t),
+            };
+            for spec in ["h2o", "snapkv", "adakv", "kvzip", "knorm"] {
+                let pol = policies::by_name(&format!("{spec}:{frac}"), 8).unwrap();
+                let mut cache = PagedKvCache::new(l, h, 256);
+                cache.fill(n);
+                pol.prefill_prune(&view, n, &mut cache);
+                let s = cache.stats();
+                let kept_frac = s.kept as f64 / s.filled as f64;
+                // budget ± window slack
+                let slack = (8.0 + 2.0) / n as f64;
+                if (kept_frac - frac).abs() > slack + 0.05 {
+                    return Err(format!(
+                        "{spec}: kept {kept_frac:.3} vs budget {frac} (l={l} h={h} n={n})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_window_always_protected() {
+    check(
+        40,
+        |r| (r.below(150) + 30, r.next_u64(), [-100.0f32, 0.0, 100.0][r.below(3)]),
+        |&(n, seed, tau)| {
+            let mut rng = Rng::new(seed);
+            let t = ramp_tensor(2, 2, 256, &mut rng);
+            let view = PrefillView {
+                b: 0,
+                score_lin: &t, score_mlp: &t, max_attn: &t, plus_attn: &t,
+                cum_attn: &t, win_attn: &t, vnorm: &t, knorm: &t,
+                oracle_s: None, oracle_s_plus: None,
+            };
+            let window = 8;
+            let pol = policies::KVzap::mlp(tau, window);
+            let mut cache = PagedKvCache::new(2, 2, 256);
+            cache.fill(n);
+            pol.prefill_prune(&view, n, &mut cache);
+            for l in 0..2 {
+                for h in 0..2 {
+                    for pos in n.saturating_sub(window)..n {
+                        if !cache.is_kept(l, h, pos) {
+                            return Err(format!("window pos {pos} evicted (n={n})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_accounting_consistent() {
+    check_with(
+        Config { cases: 60, seed: 0xFEED },
+        |r| {
+            let n = r.below(120) + 16;
+            let evictions: Vec<(usize, usize, usize)> = (0..r.below(200))
+                .map(|_| (r.below(2), r.below(2), r.below(n)))
+                .collect();
+            (n, evictions)
+        },
+        |(n, ev)| {
+            vec![(*n, shrink_vec(ev).pop().unwrap_or_default())]
+        },
+        |(n, evictions)| {
+            let mut cache = PagedKvCache::new(2, 2, 256);
+            cache.fill(*n);
+            let mut expect = std::collections::HashSet::new();
+            for &(l, h, p) in evictions {
+                cache.evict(l, h, p);
+                expect.insert((l, h, p));
+            }
+            let s = cache.stats();
+            let want_kept = 2 * 2 * n - expect.len();
+            if s.kept != want_kept {
+                return Err(format!("kept {} want {}", s.kept, want_kept));
+            }
+            // mask agrees
+            let mask = cache.mask_f32();
+            let on = mask.iter().filter(|&&m| m > 0.0).count();
+            if on != want_kept {
+                return Err(format!("mask on {} want {}", on, want_kept));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// retain/evict/fill vs CacheStats.compression() and the position-wise
+/// mask_f32 round-trip, against a brute-force mirror of the kept set.
+#[test]
+fn prop_cache_retain_fill_mask_roundtrip() {
+    check_with(
+        Config { cases: 50, seed: 0xCAFE },
+        |r| {
+            let n = r.below(100) + 10;
+            let grow = r.below(20);
+            let modulus = r.below(5) + 2;
+            let evictions: Vec<(usize, usize, usize)> = (0..r.below(100))
+                .map(|_| (r.below(2), r.below(3), r.below(n + grow)))
+                .collect();
+            (n, grow, modulus, evictions)
+        },
+        |(n, grow, modulus, ev)| {
+            vec![(*n, *grow, *modulus, shrink_vec(ev).pop().unwrap_or_default())]
+        },
+        |&(n, grow, modulus, ref evictions)| {
+            let (layers, heads, t_max) = (2usize, 3usize, 160usize);
+            let mut cache = PagedKvCache::new(layers, heads, t_max);
+            let mut mirror = vec![false; layers * heads * t_max];
+            cache.fill(n);
+            for l in 0..layers {
+                for h in 0..heads {
+                    for p in 0..n {
+                        mirror[(l * heads + h) * t_max + p] = true;
+                    }
+                }
+            }
+            // retain a modular pattern on head (0, 0)
+            cache.retain(0, 0, n, |p| p % modulus == 0);
+            for p in 0..n {
+                if p % modulus != 0 {
+                    mirror[p] = false;
+                }
+            }
+            // grow the cache (decode fills), then apply random evictions
+            cache.fill(n + grow);
+            for l in 0..layers {
+                for h in 0..heads {
+                    for p in n..n + grow {
+                        mirror[(l * heads + h) * t_max + p] = true;
+                    }
+                }
+            }
+            for &(l, h, p) in evictions {
+                cache.evict(l, h, p);
+                if p < n + grow {
+                    mirror[(l * heads + h) * t_max + p] = false;
+                }
+            }
+            // position-wise agreement: is_kept == mask_f32 == mirror
+            let mask = cache.mask_f32();
+            for l in 0..layers {
+                for h in 0..heads {
+                    for p in 0..t_max {
+                        let i = (l * heads + h) * t_max + p;
+                        if mirror[i] != cache.is_kept(l, h, p) {
+                            return Err(format!("is_kept mismatch at ({l},{h},{p})"));
+                        }
+                        if mirror[i] != (mask[i] > 0.0) {
+                            return Err(format!("mask mismatch at ({l},{h},{p})"));
+                        }
+                    }
+                }
+            }
+            // aggregate accounting
+            let kept = mirror.iter().filter(|&&k| k).count();
+            let s = cache.stats();
+            if s.kept != kept {
+                return Err(format!("stats.kept {} want {kept}", s.kept));
+            }
+            if s.filled != layers * heads * (n + grow) {
+                return Err(format!("stats.filled {}", s.filled));
+            }
+            let want_comp = 1.0 - kept as f64 / s.filled as f64;
+            if (s.compression() - want_comp).abs() > 1e-12 {
+                return Err(format!("compression {} want {want_comp}", s.compression()));
+            }
+            // per-head counts sum to the total
+            let sum: usize = (0..layers)
+                .flat_map(|l| (0..heads).map(move |h| (l, h)))
+                .map(|(l, h)| cache.kept_in_head(l, h))
+                .sum();
+            if sum != kept {
+                return Err(format!("kept_in_head sum {sum} want {kept}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Block-pool accounting: blocks freed by whole-block eviction return to
+/// the pool immediately, and everything is released on drop (`with_pool`).
+#[test]
+fn pool_blocks_released_on_eviction_and_drop() {
+    let pool = Arc::new(BlockPool::new(64));
+    {
+        let mut c = PagedKvCache::new(2, 2, 256).with_pool(pool.clone());
+        assert!(c.fill(40)); // ceil(40/16) = 3 blocks x 4 heads = 12
+        assert_eq!(pool.used(), 12);
+        for p in 0..16 {
+            c.evict(0, 0, p); // empties block 0 of head (0, 0)
+        }
+        assert_eq!(pool.used(), 11, "whole-block eviction returns the block");
+        assert_eq!(c.stats().freed_blocks, 1);
+    }
+    assert_eq!(pool.free(), 64, "drop releases all residency");
+    assert_eq!(pool.used(), 0);
+}
+
+#[test]
+fn prop_tokenizer_roundtrip() {
+    check(
+        80,
+        |r| {
+            let n = r.below(100);
+            (0..n)
+                .map(|_| (r.below(94) + 32) as u8 as char)
+                .collect::<String>()
+        },
+        |s| {
+            let t = workload::ByteTokenizer::default();
+            let ids = t.encode(s, 512);
+            let back = t.decode(&ids[1..]);
+            if &back == s {
+                Ok(())
+            } else {
+                Err(format!("{s:?} -> {back:?}"))
+            }
+        },
+    );
+}

@@ -1,0 +1,124 @@
+//! Simulation-harness tests: clean seeded runs, bitwise reproducibility,
+//! thread-count invariance, the scenario JSON round-trip, and the mutation
+//! self-check (a deliberately injected accounting bug must be caught by
+//! the invariant registry and minimized to a replayable scenario).
+
+use kvzap::policies::PolicySpec;
+use kvzap::simharness::{
+    run_scenario, simulate, thread_traces_match, ClientScript, Fault, ScenarioSpec,
+    SimOptions,
+};
+use kvzap::util::json::Json;
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+/// Seeded scenarios run clean: every per-step invariant holds and every
+/// client's interleaved stream matches its solo replay.
+#[test]
+fn simulate_small_scenarios_run_clean() {
+    for seed in 0..3u64 {
+        let spec = ScenarioSpec::generate(seed, 36, 4, 3);
+        let report = run_scenario(&spec, &SimOptions::default());
+        assert!(
+            report.violation.is_none(),
+            "seed {seed}: {}",
+            report.violation.unwrap()
+        );
+        assert_eq!(report.steps_run, 36);
+    }
+}
+
+/// The same spec and options produce the same trace, bit for bit
+/// (tokens, reasons, compression bits, transfer counters).
+#[test]
+fn simulate_is_bitwise_reproducible() {
+    let spec = ScenarioSpec::generate(7, 30, 4, 4);
+    let opts = SimOptions { check_solo: false, ..SimOptions::default() };
+    let a = run_scenario(&spec, &opts);
+    let b = run_scenario(&spec, &opts);
+    assert!(a.violation.is_none(), "{}", a.violation.unwrap());
+    assert!(b.violation.is_none(), "{}", b.violation.unwrap());
+    assert_eq!(a.trace, b.trace, "fixed seed + fixed threads must be bitwise reproducible");
+}
+
+/// Replaying a scenario at KVZAP_THREADS=1 vs 2 yields identical traces —
+/// the determinism rule every backend must satisfy (docs/TESTING.md).
+#[test]
+fn simulate_thread_count_invariant() {
+    let spec = ScenarioSpec::generate(11, 28, 3, 4);
+    thread_traces_match(&spec, 1, 2).unwrap();
+}
+
+/// ScenarioSpec round-trips through its JSON form (what --spec-file
+/// replays after a shrink).
+#[test]
+fn scenario_spec_json_roundtrip() {
+    let spec = ScenarioSpec::generate(3, 40, 5, 4);
+    let dumped = spec.to_json().dump();
+    let parsed = ScenarioSpec::from_json(&Json::parse(&dumped).unwrap()).unwrap();
+    assert_eq!(spec, parsed);
+}
+
+/// Mutation self-check: inject a phantom KV transfer mid-run and require
+/// the transfer-accounting invariant to fire, produce a replay line, and
+/// minimize to a still-failing, still-replayable scenario.
+#[test]
+fn injected_accounting_bug_is_caught_and_minimized() {
+    let mut rng = Rng::new(77);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let client = ClientScript {
+        join_step: 0,
+        prompt: task.prompt,
+        policy: PolicySpec::Full,
+        structured_policy: false,
+        max_new: 24,
+        greedy: true,
+        seed: 1,
+        stop_newline: false,
+        cancel_step: None,
+        drop_step: None,
+    };
+    let spec = ScenarioSpec { seed: 0, steps: 20, max_batch: 2, clients: vec![client] };
+    let opts = SimOptions {
+        check_solo: false,
+        fault: Some(Fault::PhantomRowFetch { step: 5 }),
+        ..SimOptions::default()
+    };
+
+    // sanity: without the fault the scenario is clean
+    let clean = run_scenario(&spec, &SimOptions { fault: None, ..opts.clone() });
+    assert!(clean.violation.is_none(), "{}", clean.violation.unwrap());
+
+    let failure = simulate(&spec, &opts).expect_err("the injected bug must be caught");
+    assert_eq!(
+        failure.violation.invariant, "transfer-accounting",
+        "unexpected invariant: {}",
+        failure.violation
+    );
+    assert_eq!(failure.violation.step, 5, "caught at the injection step");
+    assert!(failure.replay.starts_with("kvzap simulate --seed"), "{}", failure.replay);
+    assert!(
+        failure.replay.contains("--fault-step 5") && failure.replay.contains("--no-solo"),
+        "the replay line must carry the run options: {}",
+        failure.replay
+    );
+
+    // the minimized scenario replays from its JSON and still fails
+    let parsed =
+        ScenarioSpec::from_json(&Json::parse(&failure.minimized_json).unwrap()).unwrap();
+    assert_eq!(parsed, failure.minimized);
+    let replayed = run_scenario(&parsed, &opts);
+    let v = replayed.violation.expect("minimized scenario must still fail");
+    assert_eq!(v.invariant, "transfer-accounting");
+}
+
+/// The clean-run summary counts what the trace shows.
+#[test]
+fn simulate_summary_counts_clients() {
+    let spec = ScenarioSpec::generate(5, 30, 3, 4);
+    let opts = SimOptions { check_solo: false, ..SimOptions::default() };
+    let summary = simulate(&spec, &opts).expect("seed 5 runs clean");
+    assert_eq!(summary.clients, 3);
+    assert_eq!(summary.seed, 5);
+    assert!(summary.completed + summary.cancelled <= summary.clients);
+}
