@@ -1,0 +1,24 @@
+//! In-repo KVpress-style leaderboard: the full policy-catalog sweep.
+//!
+//! Every cataloged policy kind × RULER/LongBench/AIME × compression target
+//! (τ for threshold kinds, keep-fraction for budget kinds), emitted as
+//! `BENCH_leaderboard.json` plus per-suite accuracy/compression frontier
+//! tables. Fails loudly if any cataloged kind is skipped.
+//!
+//!     cargo bench --bench bench_leaderboard -- [--quick] [--samples N]
+//!         [--ctx T] [--seed S]
+
+use kvzap::bench_support::{load_engine, BenchArgs};
+use kvzap::leaderboard::{run, LeaderboardConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let engine = load_engine()?;
+    let mut cfg = LeaderboardConfig::new(args.flag("quick"));
+    cfg.samples = args.usize("samples", cfg.samples);
+    cfg.ctx = args.usize("ctx", cfg.ctx);
+    cfg.seed = args.usize("seed", cfg.seed as usize) as u64;
+    let rows = run(&engine, &cfg)?;
+    println!("leaderboard: {} rows", rows.len());
+    Ok(())
+}

@@ -190,6 +190,11 @@ pub struct Sequence {
     tau: Option<f32>,
     /// Which surrogate drives decode-time scores.
     dstat: Stat,
+    /// Optional agreement gate `(stat, gate_tau)`: decode eviction also
+    /// requires the gate stat below `gate_tau` (Fast-KVzip). The sequence
+    /// then buffers margins `max(score - tau, gate - gate_tau)` against an
+    /// effective threshold of 0.
+    gate: Option<(Stat, f32)>,
     sampler: Sampler,
     /// Host snapshot of this sequence's KV rows, `[L, H, t_max, D]` — lets
     /// the sequence join a decode group in any slot at any step. Written
@@ -389,6 +394,7 @@ impl Engine {
             sbuf: ScoreBuffer::new(self.window(), layers, heads),
             tau: None,
             dstat: Stat::ScoreMlp,
+            gate: None,
             sampler: Sampler::new(seed),
             sp,
             policy_name: String::new(),
@@ -462,10 +468,23 @@ impl Engine {
         policy.prefill_prune(&stats.view(0, oracle.as_ref()), n, &mut seq.cache);
         seq.tau = policy.decode_threshold();
         seq.dstat = policy.decode_stat();
-        if seq.tau.is_some() {
+        seq.gate = policy.decode_gate();
+        if let Some(tau) = seq.tau {
             let view = stats.view(0, None);
             let dstat = seq.dstat;
-            seq.sbuf.seed_from_prefill(n, |l, h, pos| view.row(dstat, l, h)[pos]);
+            match seq.gate {
+                None => {
+                    seq.sbuf.seed_from_prefill(n, |l, h, pos| view.row(dstat, l, h)[pos]);
+                }
+                // gated sequences buffer margins: evict-iff-both-below
+                // is exactly max(score - tau, gate - gate_tau) < 0
+                Some((gstat, gtau)) => {
+                    seq.sbuf.seed_from_prefill(n, |l, h, pos| {
+                        (view.row(dstat, l, h)[pos] - tau)
+                            .max(view.row(gstat, l, h)[pos] - gtau)
+                    });
+                }
+            }
         }
         seq.policy_us = crate::util::now_micros() - t0;
         seq.policy_name = policy.name();
@@ -604,12 +623,19 @@ impl Engine {
             self.rt.fetch_f32(&outs[ri], &dec.meta.outputs[oi].shape)
         };
         let logits = fetch("logits")?;
-        let need_lin = active
-            .iter()
-            .any(|&i| seqs[i].tau.is_some() && seqs[i].dstat == Stat::ScoreLin);
-        let need_mlp = active
-            .iter()
-            .any(|&i| seqs[i].tau.is_some() && seqs[i].dstat != Stat::ScoreLin);
+        // decode-time surrogate fetches: score_lin serves Stat::ScoreLin,
+        // score_mlp serves everything else; a gated sequence may need both
+        let is_lin = |st: Stat| st == Stat::ScoreLin;
+        let need_lin = active.iter().any(|&i| {
+            let s = &seqs[i];
+            s.tau.is_some()
+                && (is_lin(s.dstat) || s.gate.is_some_and(|(g, _)| is_lin(g)))
+        });
+        let need_mlp = active.iter().any(|&i| {
+            let s = &seqs[i];
+            s.tau.is_some()
+                && (!is_lin(s.dstat) || s.gate.is_some_and(|(g, _)| !is_lin(g)))
+        });
         let sc_lin = if need_lin { Some(fetch("score_lin")?) } else { None };
         let sc_mlp = if need_mlp { Some(fetch("score_mlp")?) } else { None };
 
@@ -636,21 +662,34 @@ impl Engine {
             seq.cache.fill((seq.pos + 1).min(t_max));
             let mut evicted = 0usize;
             if let Some(tau) = seq.tau {
-                let sc = if seq.dstat == Stat::ScoreLin {
-                    sc_lin.as_ref()
-                } else {
-                    sc_mlp.as_ref()
+                let pick = |st: Stat| {
+                    if is_lin(st) {
+                        sc_lin.as_ref()
+                    } else {
+                        sc_mlp.as_ref()
+                    }
                 };
-                let sc = sc.expect("decode scores fetched for threshold policies");
-                // sc is [L, B, H]: collect this sequence's row
+                let sc = pick(seq.dstat)
+                    .expect("decode scores fetched for threshold policies");
+                // gated sequences buffer margins against threshold 0 (the
+                // same transform prefill seeding applies — see above)
+                let gate = seq
+                    .gate
+                    .map(|(gstat, gtau)| (pick(gstat).expect("gate scores fetched"), gtau));
+                let eff_tau = if gate.is_some() { 0.0 } else { tau };
+                // score tensors are [L, B, H]: collect this sequence's row
                 let mut v = Vec::with_capacity(layers * heads);
                 for l in 0..layers {
                     for h in 0..heads {
-                        v.push(sc.at(&[l, slot, h]));
+                        let s = sc.at(&[l, slot, h]);
+                        v.push(match gate {
+                            None => s,
+                            Some((g, gtau)) => (s - tau).max(g.at(&[l, slot, h]) - gtau),
+                        });
                     }
                 }
                 let tp = crate::util::now_micros();
-                evicted = seq.sbuf.push_and_evict(seq.pos, v, tau, &mut seq.cache);
+                evicted = seq.sbuf.push_and_evict(seq.pos, v, eff_tau, &mut seq.cache);
                 seq.decode_evictions += evicted;
                 seq.policy_us += crate::util::now_micros() - tp;
             }

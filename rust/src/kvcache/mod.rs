@@ -175,10 +175,15 @@ impl PagedKvCache {
     }
 
     /// Evict one KV pair (no-op if already evicted / never filled).
-    pub fn evict(&mut self, l: usize, h: usize, pos: usize) {
-        if pos < self.len {
+    /// Returns true only on a kept -> evicted transition, so callers that
+    /// count evictions (the decode ScoreBuffer) don't double-count pairs
+    /// that prefill pruning already removed.
+    pub fn evict(&mut self, l: usize, h: usize, pos: usize) -> bool {
+        if pos < self.len && self.is_kept(l, h, pos) {
             self.set_kept(l, h, pos, false);
+            return true;
         }
+        false
     }
 
     /// Apply a per-head keep decision over the prompt region [0, upto):
@@ -331,8 +336,9 @@ mod tests {
     fn double_evict_idempotent() {
         let mut c = PagedKvCache::new(1, 1, 32);
         c.fill(10);
-        c.evict(0, 0, 3);
-        c.evict(0, 0, 3);
+        assert!(c.evict(0, 0, 3), "first evict is a kept -> evicted transition");
+        assert!(!c.evict(0, 0, 3), "second evict is a no-op");
+        assert!(!c.evict(0, 0, 20), "beyond len is a no-op");
         assert_eq!(c.kept_in_head(0, 0), 9);
     }
 }

@@ -1,0 +1,240 @@
+//! In-repo KVpress-style leaderboard: every cataloged policy × workload
+//! suite × compression target, in one sweep.
+//!
+//! The paper's headline claim is a leaderboard ranking (KVzap vs KVzip,
+//! H2O, SnapKV, Keyformer, Fast-KVzip, ExpectedAttention, ...). This
+//! module reproduces that comparison in-repo: it walks [`CATALOG`], sweeps
+//! each policy kind over the RULER/LongBench/AIME generators and a set of
+//! compression targets (τ values for threshold policies, keep-fractions
+//! for budget policies), and emits one `BENCH_leaderboard.json` with
+//! accuracy, answer-NLL, compression-ratio and scoring-overhead columns
+//! per (policy, suite) cell. The sweep is CATALOG-driven, so a policy
+//! registered in [`crate::policies::spec`] joins the leaderboard with no
+//! further wiring — and [`run`] fails loudly if any cataloged kind ends up
+//! with zero rows (no silently-skipped policy; the CI `--quick` lane
+//! relies on this).
+//!
+//! Drive it via `kvzap leaderboard [--quick]` or
+//! `cargo bench --bench bench_leaderboard`.
+
+use anyhow::{anyhow, Result};
+
+use crate::bench_support::{
+    aggregate, default_taus, eval_policy, print_frontier, write_bench_json, KEEP_FRACS,
+};
+use crate::coordinator::Engine;
+use crate::policies::spec::{PolicyInfo, CATALOG};
+use crate::workload;
+
+/// Sweep configuration (defaults via [`LeaderboardConfig::new`]).
+pub struct LeaderboardConfig {
+    /// Smoke mode: one subset per suite, one sample, one target per kind.
+    pub quick: bool,
+    /// Samples per (policy, subset) cell.
+    pub samples: usize,
+    /// Prompt context budget (bytes) for the ruler/longbench generators.
+    pub ctx: usize,
+    /// Base rng seed (forked per subset/sample inside the eval).
+    pub seed: u64,
+}
+
+impl LeaderboardConfig {
+    /// Default configuration for `quick` (CI smoke) or full mode.
+    pub fn new(quick: bool) -> LeaderboardConfig {
+        LeaderboardConfig {
+            quick,
+            samples: if quick { 1 } else { 3 },
+            ctx: if quick { 160 } else { 248 },
+            seed: 0,
+        }
+    }
+}
+
+/// One leaderboard cell: a policy spec evaluated over one suite.
+#[derive(Debug, Clone)]
+pub struct LeaderboardRow {
+    /// Catalog kind tag (`"kvzap"`, `"keyformer"`, ...).
+    pub kind: &'static str,
+    /// Full policy spec string (kind + swept parameter).
+    pub policy: String,
+    /// Workload suite (`"ruler"` / `"longbench"` / `"aime"`).
+    pub suite: &'static str,
+    /// Mean exact-match accuracy across the suite's subsets.
+    pub accuracy: f64,
+    /// Mean teacher-forced answer NLL (nats/byte, lower = better).
+    pub nll: f64,
+    /// Mean removed fraction of the KV cache.
+    pub compression: f64,
+    /// Mean prefill wall-clock µs per sample.
+    pub prefill_us: f64,
+    /// Mean decode wall-clock µs per sample.
+    pub decode_us: f64,
+    /// Mean scoring overhead µs per sample: policy scoring/eviction time
+    /// plus the KVzip oracle double pass where the policy needs one.
+    pub scoring_us: f64,
+}
+
+/// The spec strings swept for one catalog kind: τ values for threshold
+/// kinds (first parameter `tau`), keep-fractions for budget kinds. Quick
+/// mode picks one mid-sweep target per kind.
+fn specs_for(info: &PolicyInfo, taus: &[f64], quick: bool) -> Vec<String> {
+    let form = info.string_forms[0];
+    if info.params.is_empty() {
+        return vec![form.to_string()];
+    }
+    let is_threshold = info.params[0].name == "tau";
+    let targets: Vec<f64> = if is_threshold {
+        if quick {
+            vec![taus[taus.len() / 2]]
+        } else {
+            taus.to_vec()
+        }
+    } else if quick {
+        vec![0.5]
+    } else {
+        KEEP_FRACS.to_vec()
+    };
+    targets.iter().map(|t| format!("{form}:{t}")).collect()
+}
+
+/// Run the full sweep; one row per (cataloged policy spec, suite).
+pub fn sweep(engine: &Engine, cfg: &LeaderboardConfig) -> Result<Vec<LeaderboardRow>> {
+    let taus = default_taus(engine);
+    let mut rows = vec![];
+    for info in CATALOG {
+        for spec in specs_for(info, &taus, cfg.quick) {
+            for &suite in workload::SUITES {
+                let subsets = workload::eval_subsets(suite, cfg.quick);
+                eprintln!("  [leaderboard] {spec} x {suite} ({} subsets)", subsets.len());
+                let cells =
+                    eval_policy(engine, suite, subsets, &spec, cfg.samples, cfg.ctx, cfg.seed)?;
+                let (acc, comp, nll) = aggregate(&cells);
+                let n = cells.len() as f64;
+                let mean = |f: fn(&crate::bench_support::EvalRow) -> f64| {
+                    cells.iter().map(f).sum::<f64>() / n
+                };
+                rows.push(LeaderboardRow {
+                    kind: info.kind,
+                    policy: spec.clone(),
+                    suite,
+                    accuracy: acc,
+                    nll,
+                    compression: comp,
+                    prefill_us: mean(|r| r.prefill_us),
+                    decode_us: mean(|r| r.decode_us),
+                    scoring_us: mean(|r| r.policy_us + r.oracle_us),
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Fail if any cataloged policy kind produced zero rows — a silently
+/// skipped policy would otherwise just vanish from the leaderboard.
+pub fn assert_coverage(rows: &[LeaderboardRow]) -> Result<()> {
+    let missing: Vec<&str> = CATALOG
+        .iter()
+        .map(|info| info.kind)
+        .filter(|kind| !rows.iter().any(|r| r.kind == *kind))
+        .collect();
+    if missing.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("leaderboard skipped catalog kinds: {missing:?}"))
+    }
+}
+
+fn render_row(r: &LeaderboardRow) -> String {
+    format!(
+        "{{\"kind\": \"{}\", \"policy\": \"{}\", \"suite\": \"{}\", \"accuracy\": {:.4}, \
+         \"nll\": {:.4}, \"compression\": {:.4}, \"prefill_us\": {:.1}, \"decode_us\": {:.1}, \
+         \"scoring_us\": {:.1}}}",
+        r.kind,
+        r.policy,
+        r.suite,
+        r.accuracy,
+        r.nll,
+        r.compression,
+        r.prefill_us,
+        r.decode_us,
+        r.scoring_us
+    )
+}
+
+/// Sweep, verify catalog coverage, write `BENCH_leaderboard.json`, and
+/// print per-suite frontier tables. Returns the rows for callers that
+/// want to post-process (tests, future report generators).
+pub fn run(engine: &Engine, cfg: &LeaderboardConfig) -> Result<Vec<LeaderboardRow>> {
+    let rows = sweep(engine, cfg)?;
+    assert_coverage(&rows)?;
+    let rendered: Vec<String> = rows.iter().map(render_row).collect();
+    write_bench_json("leaderboard", engine.rt.backend_name(), cfg.quick, &rendered)?;
+    for &suite in workload::SUITES {
+        let points: Vec<(String, f64, f64, f64)> = rows
+            .iter()
+            .filter(|r| r.suite == suite)
+            .map(|r| (r.policy.clone(), r.compression, r.accuracy, r.nll))
+            .collect();
+        print_frontier(&format!("leaderboard: {suite}"), &points);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_cover_every_catalog_kind_and_parse() {
+        let taus = vec![-8.0, -6.0, -4.0, -3.0];
+        for quick in [true, false] {
+            for info in CATALOG {
+                let specs = specs_for(info, &taus, quick);
+                assert!(!specs.is_empty(), "{}: no specs", info.kind);
+                for s in specs {
+                    let parsed = crate::policies::PolicySpec::parse(&s)
+                        .unwrap_or_else(|e| panic!("{}: '{s}': {e}", info.kind));
+                    assert_eq!(parsed.kind(), info.kind, "spec '{s}'");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coverage_check_catches_missing_kind() {
+        let row = LeaderboardRow {
+            kind: "full",
+            policy: "full".into(),
+            suite: "ruler",
+            accuracy: 1.0,
+            nll: 0.0,
+            compression: 0.0,
+            prefill_us: 0.0,
+            decode_us: 0.0,
+            scoring_us: 0.0,
+        };
+        let err = assert_coverage(&[row]).unwrap_err().to_string();
+        assert!(err.contains("keyformer"), "{err}");
+        assert!(err.contains("fastkvzip"), "{err}");
+    }
+
+    #[test]
+    fn rows_render_as_json_objects() {
+        let row = LeaderboardRow {
+            kind: "h2o",
+            policy: "h2o:0.5".into(),
+            suite: "ruler",
+            accuracy: 0.5,
+            nll: 1.25,
+            compression: 0.4,
+            prefill_us: 100.0,
+            decode_us: 200.0,
+            scoring_us: 3.5,
+        };
+        let j = crate::util::json::Json::parse(&render_row(&row)).unwrap();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("h2o"));
+        assert_eq!(j.get("accuracy").and_then(|v| v.as_f64()), Some(0.5));
+        assert_eq!(j.get("scoring_us").and_then(|v| v.as_f64()), Some(3.5));
+    }
+}

@@ -37,6 +37,7 @@ pub mod analysis;
 pub mod bench_support;
 pub mod coordinator;
 pub mod kvcache;
+pub mod leaderboard;
 pub mod metrics;
 pub mod policies;
 pub mod runtime;

@@ -4,6 +4,10 @@
 //!   info                         manifest + artifact summary
 //!   generate --prompt ... [--policy kvzap_mlp:-4] [--max-new 32]
 //!   eval --suite ruler|longbench|aime [--policy ...] [--samples N] [--ctx T]
+//!   leaderboard [--quick] [--samples N] [--ctx T] [--seed S]
+//!                                full policy-catalog sweep over every suite;
+//!                                writes BENCH_leaderboard.json and prints
+//!                                per-suite accuracy/compression frontiers
 //!   serve [--addr host:port] [--policy ...]
 //!   policies                     pruning-policy catalog (params + defaults)
 //!   flops                        Appendix-B overhead table (Table 3)
@@ -68,6 +72,7 @@ fn main() -> Result<()> {
         "info" => info(),
         "generate" => generate(&args),
         "eval" => eval(&args),
+        "leaderboard" => leaderboard(&args),
         "serve" => serve(&args),
         "policies" => policies_catalog(&args),
         "flops" => flops(),
@@ -75,8 +80,8 @@ fn main() -> Result<()> {
         "simulate" => simulate(&args),
         _ => {
             eprintln!(
-                "usage: kvzap <info|generate|eval|serve|policies|flops|metrics-demo|simulate> \
-                 [--key value ...]\n\
+                "usage: kvzap <info|generate|eval|leaderboard|serve|policies|flops|metrics-demo|\
+                 simulate> [--key value ...]\n\
                  run `kvzap policies` for the pruning-policy catalog"
             );
             Ok(())
@@ -329,6 +334,27 @@ fn eval(args: &Args) -> Result<()> {
         1.0 / (1.0 - comp_sum / total as f64).max(1e-9)
     );
     println!("{}", engine.metrics.report());
+    Ok(())
+}
+
+/// The full-sweep leaderboard bench: every cataloged policy × suite ×
+/// compression target, one BENCH_leaderboard.json + per-suite frontier
+/// tables. `--quick` is the hermetic CI smoke lane (one subset per suite,
+/// one target per kind) which still must cover every catalog kind.
+fn leaderboard(args: &Args) -> Result<()> {
+    use kvzap::leaderboard::{run, LeaderboardConfig};
+    let engine = load_engine()?;
+    let mut cfg = LeaderboardConfig::new(args.kv.contains_key("quick"));
+    cfg.samples = args.usize("samples", cfg.samples);
+    cfg.ctx = args.usize("ctx", cfg.ctx);
+    cfg.seed = args.usize("seed", cfg.seed as usize) as u64;
+    let rows = run(&engine, &cfg)?;
+    println!("leaderboard: {} rows across {} policies", rows.len(), {
+        let mut p: Vec<&str> = rows.iter().map(|r| r.policy.as_str()).collect();
+        p.sort_unstable();
+        p.dedup();
+        p.len()
+    });
     Ok(())
 }
 

@@ -14,9 +14,11 @@
 //!   (KVzip). These match the paper's fixed-budget comparisons and the
 //!   Fig. 5 (right) threshold-vs-top-k ablation.
 
+pub mod rivals;
 pub mod score_buffer;
 pub mod spec;
 
+pub use rivals::{expected_attention_vnorm, keyformer, FastKvzip};
 pub use score_buffer::ScoreBuffer;
 pub use spec::{PolicySpec, Surrogate};
 
@@ -109,6 +111,15 @@ pub trait PrunePolicy: Send + Sync {
         Stat::ScoreMlp
     }
 
+    /// Secondary decode-time gate: `Some((stat, gate_tau))` makes decode
+    /// eviction require *both* the primary score below `decode_threshold`
+    /// and the gate stat below `gate_tau` (Fast-KVzip-style agreement
+    /// gating). Only the per-step surrogate outputs ([`Stat::ScoreLin`] /
+    /// [`Stat::ScoreMlp`]) are available at decode time.
+    fn decode_gate(&self) -> Option<(Stat, f32)> {
+        None
+    }
+
     /// Whether the KVzip oracle double-pass must be run for this policy.
     fn needs_oracle(&self) -> bool {
         false
@@ -196,6 +207,17 @@ pub enum Granularity {
     Global,
 }
 
+/// How a secondary statistic is folded into a [`BudgetPolicy`] score.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Blend {
+    /// Convex mix: `(1 - f) * base + f * other` (Keyformer's key-token
+    /// score blends accumulated and peak attention).
+    Mix(f64),
+    /// Multiplicative rescale: `base * other` (ExpectedAttention's
+    /// value-norm weighting — attention mass times output magnitude).
+    Product,
+}
+
 /// Generic score-rank budget policy: keep the `keep_frac` highest-scoring
 /// pairs at `granularity`, always keeping the protected window.
 pub struct BudgetPolicy {
@@ -210,11 +232,21 @@ pub struct BudgetPolicy {
     /// Always keep the first `sink` tokens (StreamingLLM attention sinks).
     pub sinks: usize,
     pub needs_oracle: bool,
+    /// Optional second statistic folded into the base score before
+    /// ranking (Keyformer mix, ExpectedAttention value-norm product).
+    pub blend: Option<(Stat, Blend)>,
 }
 
 impl BudgetPolicy {
     fn score(&self, view: &PrefillView, l: usize, h: usize, p: usize) -> f64 {
-        let v = view.row(self.stat, l, h)[p] as f64;
+        let base = view.row(self.stat, l, h)[p] as f64;
+        let v = match self.blend {
+            None => base,
+            Some((stat, Blend::Mix(f))) => {
+                (1.0 - f) * base + f * view.row(stat, l, h)[p] as f64
+            }
+            Some((stat, Blend::Product)) => base * view.row(stat, l, h)[p] as f64,
+        };
         if self.invert {
             -v
         } else {
@@ -304,6 +336,7 @@ pub fn kvzip_oracle(keep_frac: f64, window: usize) -> BudgetPolicy {
         invert: false,
         sinks: 0,
         needs_oracle: true,
+        blend: None,
     }
 }
 
@@ -317,6 +350,7 @@ pub fn kvzip_plus_oracle(keep_frac: f64, window: usize) -> BudgetPolicy {
         invert: false,
         sinks: 0,
         needs_oracle: true,
+        blend: None,
     }
 }
 
@@ -330,6 +364,7 @@ pub fn h2o(keep_frac: f64, window: usize) -> BudgetPolicy {
         invert: false,
         sinks: 0,
         needs_oracle: false,
+        blend: None,
     }
 }
 
@@ -343,6 +378,7 @@ pub fn snapkv(keep_frac: f64, window: usize) -> BudgetPolicy {
         invert: false,
         sinks: 0,
         needs_oracle: false,
+        blend: None,
     }
 }
 
@@ -356,6 +392,7 @@ pub fn adakv(keep_frac: f64, window: usize) -> BudgetPolicy {
         invert: false,
         sinks: 0,
         needs_oracle: false,
+        blend: None,
     }
 }
 
@@ -369,6 +406,7 @@ pub fn tova(keep_frac: f64, window: usize) -> BudgetPolicy {
         invert: false,
         sinks: 0,
         needs_oracle: false,
+        blend: None,
     }
 }
 
@@ -382,6 +420,7 @@ pub fn observed_attention(keep_frac: f64, window: usize) -> BudgetPolicy {
         invert: false,
         sinks: 0,
         needs_oracle: false,
+        blend: None,
     }
 }
 
@@ -395,6 +434,7 @@ pub fn expected_attention(keep_frac: f64, window: usize) -> BudgetPolicy {
         invert: false,
         sinks: 0,
         needs_oracle: false,
+        blend: None,
     }
 }
 
@@ -408,6 +448,7 @@ pub fn knorm(keep_frac: f64, window: usize) -> BudgetPolicy {
         invert: true, // keep the smallest key norms
         sinks: 0,
         needs_oracle: false,
+        blend: None,
     }
 }
 
@@ -427,6 +468,7 @@ pub fn kvzap_topk(mlp: bool, keep_frac: f64, window: usize, per_layer: bool) -> 
         invert: false,
         sinks: 0,
         needs_oracle: false,
+        blend: None,
     }
 }
 
@@ -565,6 +607,7 @@ mod tests {
                 invert: false,
                 sinks: 0,
                 needs_oracle: false,
+                blend: None,
             };
             pol.prefill_prune(&view, 60, &mut cache);
             let s = cache.stats();
@@ -588,7 +631,7 @@ mod tests {
     #[test]
     fn registry_instantiates_all() {
         let names = policy_names();
-        assert!(names.len() >= 18, "catalog lost string forms: {names:?}");
+        assert!(names.len() >= 21, "catalog lost string forms: {names:?}");
         for name in names {
             let spec = if name == "full" { name.to_string() } else { format!("{name}:0.5") };
             assert!(by_name(&spec, 16).is_some(), "{name}");

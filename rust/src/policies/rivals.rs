@@ -1,0 +1,184 @@
+//! Rival pruning policies from the leaderboard the paper compares against.
+//!
+//! Three presses that KVzap's headline claim is measured against (see
+//! PAPERS.md and the `kvzap leaderboard` bench):
+//!
+//! * [`keyformer`] — Keyformer-style key-token sparsification: rank by a
+//!   convex mix of accumulated attention ([`Stat::CumAttn`], persistent
+//!   "heavy hitters") and peak attention ([`Stat::MaxAttn`], sharply
+//!   attended key tokens), per head.
+//! * [`FastKvzip`] — Fast-KVzip-style *gated* eviction: a pair is evicted
+//!   only when the MLP surrogate **and** the cheap linear surrogate agree
+//!   it is prunable, both at prefill and (via [`PrunePolicy::decode_gate`])
+//!   during decoding. Agreement gating trades a little recall for far
+//!   fewer faithful-answer regressions on disagreement positions.
+//! * [`expected_attention_vnorm`] — ExpectedAttention-style budget press:
+//!   forecast attention mass ([`Stat::PlusAttn`]) rescaled by the value
+//!   norm ([`Stat::VNorm`]), so a pair's rank reflects the magnitude of
+//!   its contribution to the attention output, not just its weight.
+
+use super::{protected, Blend, BudgetPolicy, Granularity, PrefillView, PrunePolicy, Stat};
+use crate::kvcache::PagedKvCache;
+
+/// Keyformer-style key-token press: per-head budget over
+/// `(1 - mix) * cum_attn + mix * max_attn`.
+pub fn keyformer(keep_frac: f64, mix: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: format!("keyformer_mix{mix}"),
+        stat: Stat::CumAttn,
+        keep_frac,
+        granularity: Granularity::PerHead,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: false,
+        blend: Some((Stat::MaxAttn, Blend::Mix(mix))),
+    }
+}
+
+/// ExpectedAttention-style press: per-head budget over
+/// `plus_attn * vnorm` (predicted attention weight times value magnitude).
+pub fn expected_attention_vnorm(keep_frac: f64, window: usize) -> BudgetPolicy {
+    BudgetPolicy {
+        label: "expected_attn_vnorm".into(),
+        stat: Stat::PlusAttn,
+        keep_frac,
+        granularity: Granularity::PerHead,
+        window,
+        invert: false,
+        sinks: 0,
+        needs_oracle: false,
+        blend: Some((Stat::VNorm, Blend::Product)),
+    }
+}
+
+/// Fast-KVzip-style gated threshold press, decode-capable.
+///
+/// A pair survives prefill if it is window-protected, its MLP surrogate
+/// score clears `tau`, *or* its linear surrogate score clears `gate_tau`
+/// (eviction needs both surrogates to agree the pair is prunable). During
+/// decoding the same rule applies through the engine's gated
+/// [`super::ScoreBuffer`] margin: evict iff
+/// `mlp < tau && lin < gate_tau` once the pair ages out of the window.
+pub struct FastKvzip {
+    /// Primary (MLP surrogate) eviction threshold.
+    pub tau: f32,
+    /// Agreement threshold on the linear surrogate.
+    pub gate_tau: f32,
+    /// Sliding-window size (positions this recent are never evicted).
+    pub window: usize,
+}
+
+impl PrunePolicy for FastKvzip {
+    fn name(&self) -> String {
+        format!("fastkvzip_tau{}_gate{}", self.tau, self.gate_tau)
+    }
+
+    fn prefill_prune(&self, view: &PrefillView, prompt_len: usize, cache: &mut PagedKvCache) {
+        for l in 0..cache.layers {
+            for h in 0..cache.heads {
+                let mlp = view.row(Stat::ScoreMlp, l, h);
+                let lin = view.row(Stat::ScoreLin, l, h);
+                cache.retain(l, h, prompt_len, |p| {
+                    protected(p, prompt_len, self.window)
+                        || mlp[p] >= self.tau
+                        || lin[p] >= self.gate_tau
+                });
+            }
+        }
+    }
+
+    fn decode_threshold(&self) -> Option<f32> {
+        Some(self.tau)
+    }
+
+    fn decode_stat(&self) -> Stat {
+        Stat::ScoreMlp
+    }
+
+    fn decode_gate(&self) -> Option<(Stat, f32)> {
+        Some((Stat::ScoreLin, self.gate_tau))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    /// View where mlp = position, lin = t - 1 - position (they disagree).
+    fn opposed_view(tensors: &(Tensor, Tensor)) -> PrefillView {
+        PrefillView {
+            b: 0,
+            score_lin: &tensors.1,
+            score_mlp: &tensors.0,
+            max_attn: &tensors.0,
+            plus_attn: &tensors.0,
+            cum_attn: &tensors.1,
+            win_attn: &tensors.0,
+            vnorm: &tensors.1,
+            knorm: &tensors.0,
+            oracle_s: None,
+            oracle_s_plus: None,
+        }
+    }
+
+    fn opposed_tensors(t: usize) -> (Tensor, Tensor) {
+        let up: Vec<f32> = (0..t).map(|p| p as f32).collect();
+        let down: Vec<f32> = (0..t).map(|p| (t - 1 - p) as f32).collect();
+        (
+            Tensor::new(up, vec![1, 1, 1, t]).unwrap(),
+            Tensor::new(down, vec![1, 1, 1, t]).unwrap(),
+        )
+    }
+
+    #[test]
+    fn fastkvzip_evicts_only_when_both_surrogates_agree() {
+        let tensors = opposed_tensors(64);
+        let view = opposed_view(&tensors);
+        let mut cache = PagedKvCache::new(1, 1, 64);
+        cache.fill(48);
+        // mlp = p, lin = 63 - p: with tau = 30 and gate = 30, eviction
+        // needs p < 30 && 63 - p < 30, i.e. 33 < p < 30 — impossible.
+        FastKvzip { tau: 30.0, gate_tau: 30.0, window: 4 }.prefill_prune(&view, 48, &mut cache);
+        for p in 0..48 {
+            assert!(cache.is_kept(0, 0, p), "pos {p} wrongly evicted");
+        }
+        // raise the gate so the low-mlp prefix loses its second vote
+        let mut cache = PagedKvCache::new(1, 1, 64);
+        cache.fill(48);
+        FastKvzip { tau: 30.0, gate_tau: 1000.0, window: 4 }.prefill_prune(&view, 48, &mut cache);
+        assert!(!cache.is_kept(0, 0, 10)); // mlp 10 < 30, lin 53 < 1000
+        assert!(cache.is_kept(0, 0, 35)); // mlp 35 >= 30
+        assert!(cache.is_kept(0, 0, 46)); // window-protected
+    }
+
+    #[test]
+    fn keyformer_mix_interpolates_between_cum_and_max_attn() {
+        let tensors = opposed_tensors(32);
+        let view = opposed_view(&tensors);
+        // cum_attn descends, max_attn ascends. mix = 0 ranks purely by
+        // cum_attn (early positions win); mix = 1 purely by max_attn.
+        let mut early = PagedKvCache::new(1, 1, 32);
+        early.fill(32);
+        keyformer(0.25, 0.0, 0).prefill_prune(&view, 32, &mut early);
+        assert!(early.is_kept(0, 0, 0) && !early.is_kept(0, 0, 31));
+
+        let mut late = PagedKvCache::new(1, 1, 32);
+        late.fill(32);
+        keyformer(0.25, 1.0, 0).prefill_prune(&view, 32, &mut late);
+        assert!(!late.is_kept(0, 0, 0) && late.is_kept(0, 0, 31));
+    }
+
+    #[test]
+    fn expected_attention_vnorm_ranks_by_product() {
+        // plus_attn = p, vnorm = t - 1 - p: product peaks mid-sequence.
+        let tensors = opposed_tensors(32);
+        let view = opposed_view(&tensors);
+        let mut cache = PagedKvCache::new(1, 1, 32);
+        cache.fill(32);
+        expected_attention_vnorm(0.25, 0).prefill_prune(&view, 32, &mut cache);
+        assert!(cache.is_kept(0, 0, 15) && cache.is_kept(0, 0, 16)); // peak
+        assert!(!cache.is_kept(0, 0, 0) && !cache.is_kept(0, 0, 31)); // ends
+    }
+}

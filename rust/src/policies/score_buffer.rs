@@ -43,7 +43,9 @@ impl ScoreBuffer {
     }
 
     /// Push the new position's scores; apply the deferred eviction for any
-    /// position that just left the window. Returns the number of evictions.
+    /// position that just left the window. Returns the number of kept ->
+    /// evicted transitions; positions already gone (e.g. pruned at prefill
+    /// when the policy window is narrower than this ring) don't count.
     pub fn push_and_evict(
         &mut self,
         pos: usize,
@@ -58,8 +60,7 @@ impl ScoreBuffer {
             let (old_pos, old_scores) = self.ring.pop_front().unwrap();
             for l in 0..self.layers {
                 for h in 0..self.heads {
-                    if old_scores[l * self.heads + h] < tau {
-                        cache.evict(l, h, old_pos);
+                    if old_scores[l * self.heads + h] < tau && cache.evict(l, h, old_pos) {
                         evicted += 1;
                     }
                 }
@@ -112,6 +113,34 @@ mod tests {
         for pos in 0..8 {
             assert!(cache.is_kept(0, 0, pos));
         }
+    }
+
+    /// Regression: a position pruned at *prefill* (policy window narrower
+    /// than the engine ring, so the ring still carries it) must not bump
+    /// the eviction count when its deferred decision fires — the simharness
+    /// cache-accounting invariant consumes these counts.
+    #[test]
+    fn already_evicted_positions_do_not_recount() {
+        let mut cache = PagedKvCache::new(1, 1, 64);
+        cache.fill(10);
+        let mut buf = ScoreBuffer::new(4, 1, 1);
+        buf.seed_from_prefill(10, |_, _, _| -9.0); // everything below τ
+        // prefill pruning already removed position 6 (pre-pruned prompt)
+        assert!(cache.evict(0, 0, 6));
+        let kept_before = cache.kept_in_head(0, 0);
+
+        // one decode step pushes position 6 out of the window: its score
+        // is below τ but it is already gone — count must stay 0
+        cache.fill(11);
+        let n = buf.push_and_evict(10, vec![1.0], -5.0, &mut cache);
+        assert_eq!(n, 0, "already-evicted position must not be re-counted");
+        assert_eq!(cache.kept_in_head(0, 0), kept_before);
+
+        // the next exit (position 7, still kept) counts exactly once
+        cache.fill(12);
+        let n = buf.push_and_evict(11, vec![1.0], -5.0, &mut cache);
+        assert_eq!(n, 1);
+        assert!(!cache.is_kept(0, 0, 7));
     }
 
     #[test]

@@ -32,8 +32,9 @@ use std::fmt;
 use anyhow::{anyhow, Result};
 
 use super::{
-    adakv, expected_attention, h2o, knorm, kvzap_topk, kvzip_oracle, kvzip_plus_oracle,
-    observed_attention, snapkv, tova, KVzap, NoPress, PrunePolicy, RandomPress, StreamingLlm,
+    adakv, expected_attention, expected_attention_vnorm, h2o, keyformer, knorm, kvzap_topk,
+    kvzip_oracle, kvzip_plus_oracle, observed_attention, snapkv, tova, FastKvzip, KVzap,
+    NoPress, PrunePolicy, RandomPress, StreamingLlm,
 };
 use crate::util::json::Json;
 
@@ -71,6 +72,8 @@ pub const DEFAULT_TAU: f64 = -4.0;
 pub const DEFAULT_KEEP_FRAC: f64 = 0.5;
 /// Default number of always-kept attention-sink tokens (StreamingLLM).
 pub const DEFAULT_SINKS: usize = 4;
+/// Default Keyformer mix weight (max-attn share of the key-token score).
+pub const DEFAULT_MIX: f64 = 0.5;
 
 /// A fully-specified pruning policy configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -101,6 +104,13 @@ pub enum PolicySpec {
     StreamingLlm { keep_frac: f64, sinks: usize },
     /// Random eviction (sanity-check lower bound).
     Random { keep_frac: f64, seed: u64 },
+    /// Keyformer: cum/max-attention key-token mix, per-head budget.
+    Keyformer { keep_frac: f64, mix: f64 },
+    /// Fast-KVzip: gated thresholding — eviction needs the MLP score
+    /// below `tau` *and* the linear score below `gate_tau`; decode-capable.
+    FastKvzip { tau: f64, gate_tau: f64 },
+    /// Expected attention rescaled by value norm, per-head budget.
+    ExpectedAttnVnorm { keep_frac: f64 },
 }
 
 impl PolicySpec {
@@ -120,6 +130,9 @@ impl PolicySpec {
             PolicySpec::Knorm { .. } => "knorm",
             PolicySpec::StreamingLlm { .. } => "streaming_llm",
             PolicySpec::Random { .. } => "random",
+            PolicySpec::Keyformer { .. } => "keyformer",
+            PolicySpec::FastKvzip { .. } => "fastkvzip",
+            PolicySpec::ExpectedAttnVnorm { .. } => "expected_attn_vnorm",
         }
     }
 
@@ -231,6 +244,23 @@ impl PolicySpec {
                     seed: check_count(name, "seed", num(1, 0.0)?)?,
                 }
             }
+            "keyformer" => {
+                max_params(2)?;
+                PolicySpec::Keyformer {
+                    keep_frac: keep(0)?,
+                    mix: check_mix(name, num(1, DEFAULT_MIX)?)?,
+                }
+            }
+            "fastkvzip" => {
+                max_params(2)?;
+                let tau = num(0, DEFAULT_TAU)?;
+                // the agreement gate follows τ unless set explicitly
+                PolicySpec::FastKvzip { tau, gate_tau: num(1, tau)? }
+            }
+            "expected_attn_vnorm" => {
+                max_params(1)?;
+                PolicySpec::ExpectedAttnVnorm { keep_frac: keep(0)? }
+            }
             _ => return Err(anyhow!("unknown policy '{name}'")),
         };
         Ok(spec)
@@ -297,6 +327,17 @@ impl PolicySpec {
                 keep_frac: keep("keep_frac")?,
                 seed: check_count(kind, "seed", num("seed", 0.0)?)?,
             },
+            "keyformer" => PolicySpec::Keyformer {
+                keep_frac: keep("keep_frac")?,
+                mix: check_mix(kind, num("mix", DEFAULT_MIX)?)?,
+            },
+            "fastkvzip" => {
+                let tau = num("tau", DEFAULT_TAU)?;
+                PolicySpec::FastKvzip { tau, gate_tau: num("gate_tau", tau)? }
+            }
+            "expected_attn_vnorm" => {
+                PolicySpec::ExpectedAttnVnorm { keep_frac: keep("keep_frac")? }
+            }
             _ => return Err(anyhow!("unknown policy kind '{kind}'")),
         };
         Ok(spec)
@@ -329,9 +370,20 @@ impl PolicySpec {
             | PolicySpec::Tova { keep_frac }
             | PolicySpec::ObservedAttn { keep_frac }
             | PolicySpec::ExpectedAttn { keep_frac }
+            | PolicySpec::ExpectedAttnVnorm { keep_frac }
             | PolicySpec::Knorm { keep_frac } => {
                 Json::obj(vec![("kind", kind), ("keep_frac", Json::num(keep_frac))])
             }
+            PolicySpec::Keyformer { keep_frac, mix } => Json::obj(vec![
+                ("kind", kind),
+                ("keep_frac", Json::num(keep_frac)),
+                ("mix", Json::num(mix)),
+            ]),
+            PolicySpec::FastKvzip { tau, gate_tau } => Json::obj(vec![
+                ("kind", kind),
+                ("tau", Json::num(tau)),
+                ("gate_tau", Json::num(gate_tau)),
+            ]),
             PolicySpec::StreamingLlm { keep_frac, sinks } => Json::obj(vec![
                 ("kind", kind),
                 ("keep_frac", Json::num(keep_frac)),
@@ -382,6 +434,15 @@ impl PolicySpec {
             PolicySpec::Random { keep_frac, seed } => {
                 Box::new(RandomPress { keep_frac, seed, window })
             }
+            PolicySpec::Keyformer { keep_frac, mix } => {
+                Box::new(keyformer(keep_frac, mix, window))
+            }
+            PolicySpec::FastKvzip { tau, gate_tau } => {
+                Box::new(FastKvzip { tau: tau as f32, gate_tau: gate_tau as f32, window })
+            }
+            PolicySpec::ExpectedAttnVnorm { keep_frac } => {
+                Box::new(expected_attention_vnorm(keep_frac, window))
+            }
         }
     }
 }
@@ -395,10 +456,21 @@ fn surrogate_of(name: &str) -> Surrogate {
 }
 
 fn check_keep_frac(name: &str, v: f64) -> Result<()> {
-    if (0.0..=1.0).contains(&v) {
+    // strictly positive: a zero budget keeps nothing beyond the forced
+    // window, which every caller treats as a spec error, not a policy
+    if v > 0.0 && v <= 1.0 {
         Ok(())
     } else {
-        Err(anyhow!("policy '{name}': keep fraction {v} outside [0, 1]"))
+        Err(anyhow!("policy '{name}': keep fraction {v} outside (0, 1]"))
+    }
+}
+
+/// Keyformer's mix must be a proper interpolation weight.
+fn check_mix(name: &str, v: f64) -> Result<f64> {
+    if (0.0..=1.0).contains(&v) {
+        Ok(v)
+    } else {
+        Err(anyhow!("policy '{name}': mix {v} outside [0, 1]"))
     }
 }
 
@@ -451,6 +523,23 @@ impl fmt::Display for PolicySpec {
                     write!(f, "random:{keep_frac}:{seed}")
                 }
             }
+            PolicySpec::Keyformer { keep_frac, mix } => {
+                if mix == DEFAULT_MIX {
+                    write!(f, "keyformer:{keep_frac}")
+                } else {
+                    write!(f, "keyformer:{keep_frac}:{mix}")
+                }
+            }
+            PolicySpec::FastKvzip { tau, gate_tau } => {
+                if gate_tau == tau {
+                    write!(f, "fastkvzip:{tau}")
+                } else {
+                    write!(f, "fastkvzip:{tau}:{gate_tau}")
+                }
+            }
+            PolicySpec::ExpectedAttnVnorm { keep_frac } => {
+                write!(f, "expected_attn_vnorm:{keep_frac}")
+            }
         }
     }
 }
@@ -494,6 +583,16 @@ const P_SINKS: PolicyParam = PolicyParam {
 };
 const P_SEED: PolicyParam =
     PolicyParam { name: "seed", default: 0.0, doc: "rng seed for the eviction pattern" };
+const P_MIX: PolicyParam = PolicyParam {
+    name: "mix",
+    default: DEFAULT_MIX,
+    doc: "max-attn share of the key-token score, in [0, 1]",
+};
+const P_GATE: PolicyParam = PolicyParam {
+    name: "gate_tau",
+    default: DEFAULT_TAU, // when omitted it follows tau
+    doc: "linear-surrogate agreement threshold (defaults to tau)",
+};
 
 /// Every policy kind the stack understands, with parameters and defaults.
 pub const CATALOG: &[PolicyInfo] = &[
@@ -508,6 +607,12 @@ pub const CATALOG: &[PolicyInfo] = &[
         string_forms: &["kvzap_mlp", "kvzap_linear"],
         params: &[P_TAU],
         doc: "KVzap thresholding (surrogate: mlp|linear); prunes during decode",
+    },
+    PolicyInfo {
+        kind: "fastkvzip",
+        string_forms: &["fastkvzip"],
+        params: &[P_TAU, P_GATE],
+        doc: "Fast-KVzip rival: gated thresholding (mlp AND linear agree); prunes during decode",
     },
     PolicyInfo {
         kind: "kvzap_topk",
@@ -531,6 +636,12 @@ pub const CATALOG: &[PolicyInfo] = &[
         string_forms: &["h2o"],
         params: &[P_KEEP],
         doc: "heavy-hitter oracle: cumulative attention, per-head budget",
+    },
+    PolicyInfo {
+        kind: "keyformer",
+        string_forms: &["keyformer"],
+        params: &[P_KEEP, P_MIX],
+        doc: "Keyformer rival: cum/max-attention key-token mix, per-head budget",
     },
     PolicyInfo {
         kind: "snapkv",
@@ -561,6 +672,12 @@ pub const CATALOG: &[PolicyInfo] = &[
         string_forms: &["expected_attn"],
         params: &[P_KEEP],
         doc: "expected attention: forward-looking attention, per-head budget",
+    },
+    PolicyInfo {
+        kind: "expected_attn_vnorm",
+        string_forms: &["expected_attn_vnorm"],
+        params: &[P_KEEP],
+        doc: "ExpectedAttention rival: forecast attention x value norm, per-head budget",
     },
     PolicyInfo {
         kind: "knorm",
@@ -648,6 +765,11 @@ mod tests {
             PolicySpec::StreamingLlm { keep_frac: 0.3, sinks: 8 },
             PolicySpec::Random { keep_frac: 0.5, seed: 0 },
             PolicySpec::Random { keep_frac: 0.5, seed: 7 },
+            PolicySpec::Keyformer { keep_frac: 0.5, mix: DEFAULT_MIX },
+            PolicySpec::Keyformer { keep_frac: 0.25, mix: 1.0 },
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0 },
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -7.5 },
+            PolicySpec::ExpectedAttnVnorm { keep_frac: 0.35 },
         ]
     }
 
@@ -684,6 +806,16 @@ mod tests {
         assert_eq!(PolicySpec::from_json(&j).unwrap(), PolicySpec::parse("kvzap_mlp:-4").unwrap());
         let j = Json::parse(r#"{"kind": "h2o", "keep_frac": 0.5}"#).unwrap();
         assert_eq!(PolicySpec::from_json(&j).unwrap(), PolicySpec::parse("h2o:0.5").unwrap());
+        let j = Json::parse(r#"{"kind": "fastkvzip", "tau": -4.0}"#).unwrap();
+        assert_eq!(
+            PolicySpec::from_json(&j).unwrap(),
+            PolicySpec::parse("fastkvzip:-4").unwrap()
+        );
+        let j = Json::parse(r#"{"kind": "keyformer", "keep_frac": 0.5, "mix": 0.25}"#).unwrap();
+        assert_eq!(
+            PolicySpec::from_json(&j).unwrap(),
+            PolicySpec::parse("keyformer:0.5:0.25").unwrap()
+        );
     }
 
     #[test]
@@ -713,6 +845,10 @@ mod tests {
             "nope:0.5",         // unknown kind with param
             "h2o:-0.1",         // keep fraction out of range
             "h2o:1.5",          // keep fraction out of range
+            "h2o:0",            // keep fraction must be strictly positive
+            "keyformer:0.5:1.5", // mix out of range
+            "keyformer:0.5:-0.1", // mix out of range
+            "expected_attn_vnorm:0", // keep fraction must be strictly positive
             "full:0.5",         // full takes no parameter
             "h2o:0.5:9",        // too many parameters
             "streaming_llm:0.3:-3", // negative sinks
@@ -727,10 +863,46 @@ mod tests {
             r#"{"kind": "kvzap", "tau": "x"}"#,
             r#"{"kind": "kvzap", "surrogate": "quadratic"}"#,
             r#"{"kind": "h2o", "keep_frac": 1.5}"#,
+            r#"{"kind": "h2o", "keep_frac": 0}"#,
+            r#"{"kind": "keyformer", "mix": 2.0}"#,
             r#"[1, 2]"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(PolicySpec::from_json(&j).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    /// Non-finite τ / gate / keep / mix values must be rejected on both
+    /// wire forms: a NaN τ makes every `< tau` comparison false, so decode
+    /// pruning would silently never fire. JSON text cannot spell NaN, so
+    /// the structured cases are built programmatically.
+    #[test]
+    fn non_finite_params_rejected_on_both_wire_forms() {
+        for bad in [
+            "kvzap_mlp:nan",
+            "kvzap_mlp:inf",
+            "kvzap_linear:-inf",
+            "fastkvzip:nan",
+            "fastkvzip:-4:inf",
+            "h2o:nan",
+            "keyformer:0.5:nan",
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+        let cases = [
+            ("kvzap", "tau", f64::NAN),
+            ("kvzap", "tau", f64::INFINITY),
+            ("fastkvzip", "tau", f64::NAN),
+            ("fastkvzip", "gate_tau", f64::NEG_INFINITY),
+            ("h2o", "keep_frac", f64::NAN),
+            ("keyformer", "mix", f64::NAN),
+        ];
+        for (kind, field, v) in cases {
+            let j = Json::obj(vec![("kind", Json::str(kind)), (field, Json::num(v))]);
+            assert!(
+                PolicySpec::from_json(&j).is_err(),
+                "{kind} with {field} = {v} must be rejected"
+            );
         }
     }
 

@@ -367,6 +367,8 @@ fn budget_of(p: &PolicySpec) -> Option<f64> {
         | PolicySpec::SnapKv { keep_frac }
         | PolicySpec::AdaKv { keep_frac }
         | PolicySpec::Knorm { keep_frac }
+        | PolicySpec::Keyformer { keep_frac, .. }
+        | PolicySpec::ExpectedAttnVnorm { keep_frac }
         | PolicySpec::Kvzip { keep_frac, .. } => Some(*keep_frac),
         _ => None,
     }
@@ -435,7 +437,7 @@ fn seq_check(
         .map(|(l, h)| cache.kept_in_head(l, h))
         .sum();
     let window_ok = match policy {
-        Some(PolicySpec::Kvzap { .. }) => {
+        Some(PolicySpec::Kvzap { .. }) | Some(PolicySpec::FastKvzip { .. }) => {
             let mut ok = true;
             for p in len.saturating_sub(window)..len {
                 for l in 0..layers {

@@ -228,10 +228,11 @@ fn client_script(r: &mut Rng, steps: usize) -> ClientScript {
 }
 
 /// Policy mix: threshold policies (including the decode-evicting tau=100
-/// extreme), the budget family, recency/sink and random baselines, and the
-/// occasional oracle double pass.
+/// extreme), the budget family, recency/sink and random baselines, the
+/// occasional oracle double pass, and the rival zoo (keyformer blends,
+/// the gated fastkvzip decode path, the value-norm budget press).
 fn random_policy(r: &mut Rng) -> PolicySpec {
-    match r.below(16) {
+    match r.below(19) {
         0..=3 => PolicySpec::Kvzap {
             surrogate: Surrogate::Mlp,
             tau: *r.choice(&[-8.0, -4.0, -1.0]),
@@ -246,10 +247,21 @@ fn random_policy(r: &mut Rng) -> PolicySpec {
         12 => PolicySpec::StreamingLlm { keep_frac: 0.5, sinks: 4 },
         13 => PolicySpec::Random { keep_frac: *r.choice(&[0.3, 0.6]), seed: r.below(1000) as u64 },
         14 => PolicySpec::Kvzip { plus: false, keep_frac: 0.5 },
-        _ => PolicySpec::KvzapTopk {
+        15 => PolicySpec::KvzapTopk {
             surrogate: Surrogate::Mlp,
             keep_frac: 0.5,
             per_layer: false,
         },
+        16 => PolicySpec::Keyformer {
+            keep_frac: *r.choice(&[0.25, 0.5, 0.75]),
+            mix: *r.choice(&[0.0, 0.5, 1.0]),
+        },
+        17 => {
+            // include the decode-evicting tau=100 extreme so the gated
+            // decode path (both surrogates must agree) gets fuzzed too
+            let tau = *r.choice(&[-4.0, 100.0]);
+            PolicySpec::FastKvzip { tau, gate_tau: *r.choice(&[tau, -4.0]) }
+        }
+        _ => PolicySpec::ExpectedAttnVnorm { keep_frac: *r.choice(&[0.5, 0.75]) },
     }
 }

@@ -52,7 +52,9 @@ impl Histogram {
     pub fn record(&mut self, v: u64) {
         self.buckets[Self::index(v)] += 1;
         self.count += 1;
-        self.sum += v;
+        // saturating: a long simulate run recording large values would
+        // otherwise overflow the u64 sum (a panic in debug builds)
+        self.sum = self.sum.saturating_add(v);
         self.max = self.max.max(v);
         self.min = self.min.min(v);
     }
@@ -73,9 +75,21 @@ impl Histogram {
         self.max
     }
 
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
     pub fn percentile(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;
+        }
+        if p <= 0.0 {
+            // p0 is the observed minimum, not bucket 0's lower edge
+            return self.min;
         }
         let target = ((p / 100.0) * self.count as f64).ceil() as u64;
         let mut seen = 0;
@@ -125,6 +139,70 @@ mod tests {
     fn empty_is_zero() {
         let h = Histogram::new();
         assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.percentile(0.0), 0);
+        assert_eq!(h.min(), 0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn p0_is_the_observed_minimum() {
+        let mut h = Histogram::new();
+        for v in [700u64, 40, 9000] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), 40);
+        assert_eq!(h.min(), 40);
+    }
+
+    #[test]
+    fn sum_saturates_instead_of_overflowing() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX); // would overflow the running sum without saturation
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), u64::MAX);
+        assert!(h.mean().is_finite());
+    }
+
+    /// Property: percentiles are non-decreasing in p and clamped to
+    /// [min, max], over random value sets spanning every bucket regime.
+    #[test]
+    fn percentile_monotone_property() {
+        use crate::util::propcheck;
+        propcheck::check(
+            96,
+            |r| {
+                (0..r.below(40) + 1)
+                    .map(|_| match r.below(4) {
+                        0 => r.below(MINOR) as u64,
+                        1 => r.below(4096) as u64,
+                        2 => r.below(1 << 30) as u64,
+                        _ => u64::MAX - r.below(1024) as u64,
+                    })
+                    .collect::<Vec<u64>>()
+            },
+            |vals| {
+                let mut h = Histogram::new();
+                for &v in vals {
+                    h.record(v);
+                }
+                if h.percentile(0.0) != h.min() {
+                    return Err(format!("p0 {} != min {}", h.percentile(0.0), h.min()));
+                }
+                let ps = [0.0, 1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0];
+                let mut prev = 0u64;
+                for p in ps {
+                    let v = h.percentile(p);
+                    if v < prev {
+                        return Err(format!("p{p} = {v} < previous {prev}"));
+                    }
+                    if v < h.min() || v > h.max() {
+                        return Err(format!("p{p} = {v} outside [{}, {}]", h.min(), h.max()));
+                    }
+                    prev = v;
+                }
+                Ok(())
+            },
+        );
     }
 }

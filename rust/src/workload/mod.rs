@@ -53,6 +53,25 @@ pub const RULER_SUBSETS: &[&str] = &[
     "qa_2",
 ];
 
+/// Evaluation suites the leaderboard and eval benches sweep.
+pub const SUITES: &[&str] = &["ruler", "longbench", "aime"];
+
+/// Representative subsets per suite for full-sweep evals; `quick` narrows
+/// to one subset per suite (the hermetic CI smoke lane). The full RULER /
+/// LongBench lists stay available as [`RULER_SUBSETS`] /
+/// [`LONGBENCH_SUBSETS`] for exhaustive runs.
+pub fn eval_subsets(suite: &str, quick: bool) -> &'static [&'static str] {
+    match (suite, quick) {
+        ("ruler", true) => &["niah_single_1"],
+        ("ruler", false) => &["niah_single_1", "niah_multikey_1", "qa_1"],
+        ("longbench", true) => &["trec"],
+        ("longbench", false) => &["trec", "lcc", "sdqa"],
+        // aime has a single generator (chain-of-thought arithmetic)
+        ("aime", _) => &["aime"],
+        _ => &[],
+    }
+}
+
 pub const LONGBENCH_SUBSETS: &[&str] = &[
     "sdqa",
     "mdqa",

@@ -1,0 +1,130 @@
+//! Policy-zoo integration tests over the reference backend: every
+//! cataloged policy kind prunes deterministically and honours the
+//! protected window, `keep_frac = 1` budget presses are metamorphically
+//! equivalent to no pruning, and the Fast-KVzip gated decode path
+//! degenerates to its two limits (never-evict, and plain KVzap when the
+//! gate always agrees).
+
+mod common;
+
+use common::engine;
+use kvzap::coordinator::SamplingParams;
+use kvzap::policies::spec::CATALOG;
+use kvzap::policies::PolicySpec;
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+/// A representative spec string for one catalog kind: the first string
+/// form with mid-range parameters (0.5 reads as keep-fraction for budget
+/// kinds and as a τ for threshold kinds — both parse).
+fn mid_spec(kind_form: &str, has_params: bool) -> String {
+    if has_params {
+        format!("{kind_form}:0.5")
+    } else {
+        kind_form.to_string()
+    }
+}
+
+#[test]
+fn every_catalog_policy_is_deterministic_and_protects_the_window() {
+    let e = engine();
+    let w = e.window();
+    let mut rng = Rng::new(11);
+    let task = workload::ruler_instance("niah_single_1", 220, &mut rng);
+    let sp = SamplingParams::greedy(6);
+    for info in CATALOG {
+        let spec = mid_spec(info.string_forms[0], !info.params.is_empty());
+        let policy = PolicySpec::parse(&spec).unwrap().build(w);
+
+        // generation is bit-deterministic per policy
+        let a = e.generate(&task.prompt, policy.as_ref(), &sp).unwrap();
+        let b = e.generate(&task.prompt, policy.as_ref(), &sp).unwrap();
+        assert_eq!(a.text, b.text, "{spec}: text must be deterministic");
+        assert_eq!(
+            a.compression.to_bits(),
+            b.compression.to_bits(),
+            "{spec}: compression must be deterministic"
+        );
+
+        // the protected window survives prefill pruning for every policy
+        let mut s = e.sequence(1, &task.prompt, sp.clone());
+        e.prefill(&mut s, policy.as_ref()).unwrap();
+        let cache = s.cache();
+        let n = s.prompt_len();
+        assert!(n > w + 2, "prompt too short to exercise the window");
+        for p in n.saturating_sub(w)..n {
+            for l in 0..cache.layers {
+                for h in 0..cache.heads {
+                    assert!(
+                        cache.is_kept(l, h, p),
+                        "{spec}: window position {p}/{n} evicted at (l={l}, h={h})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Metamorphic relation: a budget press told to keep everything must be
+/// indistinguishable from the full cache — same text, zero compression.
+#[test]
+fn keep_frac_one_budget_presses_match_full() {
+    let e = engine();
+    let mut rng = Rng::new(12);
+    let task = workload::ruler_instance("niah_multikey_1", 220, &mut rng);
+    let sp = SamplingParams::greedy(8);
+    let full = PolicySpec::parse("full").unwrap().build(e.window());
+    let reference = e.generate(&task.prompt, full.as_ref(), &sp).unwrap();
+    for info in CATALOG {
+        if !info.params.iter().any(|p| p.name == "keep_frac") {
+            continue;
+        }
+        let spec = format!("{}:1", info.string_forms[0]);
+        let policy = PolicySpec::parse(&spec).unwrap().build(e.window());
+        let r = e.generate(&task.prompt, policy.as_ref(), &sp).unwrap();
+        assert_eq!(r.compression, 0.0, "{spec}: keep_frac=1 must not evict");
+        assert_eq!(r.decode_evictions, 0, "{spec}: budget presses never decode-evict");
+        assert_eq!(r.text, reference.text, "{spec}: keep_frac=1 must match full");
+    }
+}
+
+/// A gate threshold no score can undercut makes Fast-KVzip a no-op even
+/// with an evict-everything primary τ: eviction requires *both* surrogates
+/// to agree.
+#[test]
+fn fastkvzip_unreachable_gate_never_evicts() {
+    let e = engine();
+    let mut rng = Rng::new(13);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let mut sp = SamplingParams::greedy(e.window() + 8);
+    sp.stop_at_newline = false;
+    let full = PolicySpec::parse("full").unwrap().build(e.window());
+    let gated = PolicySpec::parse("fastkvzip:100:-10000").unwrap().build(e.window());
+    let a = e.generate(&task.prompt, full.as_ref(), &sp).unwrap();
+    let b = e.generate(&task.prompt, gated.as_ref(), &sp).unwrap();
+    assert_eq!(b.compression, 0.0, "gate at -10000 must veto every eviction");
+    assert_eq!(b.decode_evictions, 0);
+    assert_eq!(a.text, b.text);
+}
+
+/// With the gate at the same (extreme) τ as the primary, the gate always
+/// agrees and Fast-KVzip degenerates to plain KVzap-mlp — bitwise: same
+/// text, same compression, same decode eviction count. This drives the
+/// whole gated decode path (margin seeding at prefill, both-surrogate
+/// fetch, deferred agreement eviction) end to end.
+#[test]
+fn fastkvzip_agreeing_gate_matches_plain_kvzap() {
+    let e = engine();
+    let mut rng = Rng::new(14);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let mut sp = SamplingParams::greedy(e.window() + 8);
+    sp.stop_at_newline = false;
+    let plain = PolicySpec::parse("kvzap_mlp:100").unwrap().build(e.window());
+    let gated = PolicySpec::parse("fastkvzip:100:100").unwrap().build(e.window());
+    let a = e.generate(&task.prompt, plain.as_ref(), &sp).unwrap();
+    let b = e.generate(&task.prompt, gated.as_ref(), &sp).unwrap();
+    assert_eq!(a.text, b.text, "agreeing gate must not change decoding");
+    assert_eq!(a.compression.to_bits(), b.compression.to_bits());
+    assert_eq!(a.decode_evictions, b.decode_evictions);
+    assert!(a.decode_evictions > 0, "tau=100 must actually evict during decode");
+}
