@@ -131,6 +131,14 @@ pub struct EvalRow {
     /// reported alongside exact match (lower = better).
     pub nll: f64,
     pub compression: f64,
+    /// Mean steady-state KV footprint in bytes after prefill pruning:
+    /// resident fp32 blocks plus the quantized side tier (the x-axis of
+    /// the accuracy-vs-bytes frontier).
+    pub kv_bytes: f64,
+    /// Mean KV entries parked in the quantized side tier at steady state.
+    pub demoted: f64,
+    /// Mean side-tier entries rehydrated before answer scoring.
+    pub rehydrated: f64,
     pub prefill_us: f64,
     pub decode_us: f64,
     pub policy_us: f64,
@@ -156,6 +164,7 @@ pub fn eval_policy(
         let mut ok = 0usize;
         let mut comp = 0.0;
         let mut nll_sum = 0.0;
+        let (mut bytes, mut dem, mut reh) = (0.0, 0.0, 0.0);
         let (mut pf, mut dc, mut pol, mut orc) = (0.0, 0.0, 0.0, 0.0);
         for i in 0..samples {
             let mut r = rng.fork(i as u64);
@@ -173,9 +182,12 @@ pub fn eval_policy(
             } else {
                 task.score(&res.text)
             };
-            let (sample_nll, _) =
-                engine.score_answer(&task.prompt, &task.answer, policy.as_ref())?;
-            nll_sum += sample_nll;
+            let score =
+                engine.score_answer_full(&task.prompt, &task.answer, policy.as_ref())?;
+            nll_sum += score.nll;
+            bytes += score.kv_bytes as f64;
+            dem += score.demoted as f64;
+            reh += score.rehydrated as f64;
             ok += correct as usize;
             comp += res.compression;
             pf += res.prefill_us as f64;
@@ -191,6 +203,9 @@ pub fn eval_policy(
             accuracy: ok as f64 / n,
             nll: nll_sum / n,
             compression: comp / n,
+            kv_bytes: bytes / n,
+            demoted: dem / n,
+            rehydrated: reh / n,
             prefill_us: pf / n,
             decode_us: dc / n,
             policy_us: pol / n,
@@ -255,12 +270,42 @@ pub fn print_frontier(title: &str, points: &[(String, f64, f64, f64)]) {
     sorted.sort_by(|a, b| a.1.total_cmp(&b.1));
     for (name, comp, acc, nll) in sorted {
         println!(
-            "{:<32} {:>11.3} {:>9.2}x {:>7.1} {:>10.3}",
+            "{:<32} {:>11.3} {:>9} {:>7.1} {:>10.3}",
             name,
             comp,
-            1.0 / (1.0 - comp).max(1e-9),
+            format!("{:.2}x", compression_factor(comp)),
             100.0 * acc,
             nll
         );
+    }
+}
+
+/// Compression factor for a mean removed fraction, with the same
+/// convention as [`crate::kvcache::CacheStats::factor`]: a fully-pruned
+/// cache is infinitely compressed (`inf`), never clamped to a finite
+/// value that would under-report the most aggressive settings.
+pub fn compression_factor(compression: f64) -> f64 {
+    if compression >= 1.0 {
+        f64::INFINITY
+    } else {
+        1.0 / (1.0 - compression)
+    }
+}
+
+/// Print the accuracy-vs-bytes frontier: policy -> (steady-state KV
+/// bytes, accuracy, answer-NLL), cheapest first. Bytes are the idle
+/// footprint after prefill pruning — resident fp32 blocks plus the
+/// quantized side tier — so a demotion policy and its drop-only
+/// counterpart land on comparable x positions.
+pub fn print_bytes_frontier(title: &str, points: &[(String, f64, f64, f64)]) {
+    println!("\n== {title}");
+    println!(
+        "{:<40} {:>10} {:>8} {:>10}",
+        "policy", "kv bytes", "acc %", "ans NLL"
+    );
+    let mut sorted = points.to_vec();
+    sorted.sort_by(|a, b| a.1.total_cmp(&b.1));
+    for (name, bytes, acc, nll) in sorted {
+        println!("{:<40} {:>10.0} {:>8.1} {:>10.3}", name, bytes, 100.0 * acc, nll);
     }
 }

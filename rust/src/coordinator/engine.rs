@@ -57,9 +57,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use super::sampler::{Sampler, SamplingParams};
-use crate::kvcache::PagedKvCache;
+use crate::kvcache::{PagedKvCache, TierConfig};
 use crate::metrics::EngineMetrics;
 use crate::policies::{PrefillView, PrunePolicy, ScoreBuffer, Stat};
+use crate::runtime::kernels::{quant_roundtrip, QuantBits};
 use crate::runtime::{Arg, KvHandle, Runtime, Tensor};
 use crate::workload::ByteTokenizer;
 
@@ -112,6 +113,10 @@ pub struct GenResult {
     pub policy_us: u64,
     /// KV pairs evicted during decode (Algorithm 1's delayed eviction).
     pub decode_evictions: usize,
+    /// KV pairs demoted to the quantized side tier during decode.
+    pub decode_demotions: usize,
+    /// Demoted KV pairs rehydrated back to residency during decode.
+    pub decode_rehydrations: usize,
 }
 
 /// Why a sequence stopped generating.
@@ -146,15 +151,21 @@ pub enum StepEvent {
     /// A new token was accepted into the sequence. `text` is its decoded
     /// byte (the tokenizer is byte-level); `evicted` counts KV pairs the
     /// threshold policy removed at this step (Algorithm 1's delayed
-    /// eviction). `kv_up_bytes`/`kv_down_bytes` account this sequence's KV
+    /// eviction), `demoted` the pairs it quantized into the side tier
+    /// instead, and `rehydrated` the demoted pairs brought back to
+    /// residency (score rebound / window re-entry).
+    /// `kv_up_bytes`/`kv_down_bytes` account this sequence's KV
     /// traffic for the step: a join costs one full-slot scatter (+ mask),
     /// an eviction step one mask refresh, and a steady-state step only the
-    /// decoded-row fetch.
+    /// decoded-row fetch. Demotions and rehydrations are device-local and
+    /// contribute no transfer bytes.
     Token {
         id: u64,
         token: i32,
         text: String,
         evicted: usize,
+        demoted: usize,
+        rehydrated: usize,
         kv_up_bytes: u64,
         kv_down_bytes: u64,
     },
@@ -195,6 +206,16 @@ pub struct Sequence {
     /// then buffers margins `max(score - tau, gate - gate_tau)` against an
     /// effective threshold of 0.
     gate: Option<(Stat, f32)>,
+    /// Demotion floor in the *buffered-score space* (raw stat, or gated
+    /// margin when `gate` is set): window-exiting scores in `[floor, τ)`
+    /// demote to the quantized side tier instead of dropping. `None`
+    /// disables the tier for this sequence (drop-only decode).
+    floor: Option<f32>,
+    /// Per-head ledger of demoted positions and their buffered-space
+    /// scores, indexed `l * heads + h` — the rehydration scan compares
+    /// these against each step's incoming score (rebound rule) and the
+    /// window start (re-entry backstop).
+    demoted_scores: Vec<Vec<(usize, f32)>>,
     sampler: Sampler,
     /// Host snapshot of this sequence's KV rows, `[L, H, t_max, D]` — lets
     /// the sequence join a decode group in any slot at any step. Written
@@ -206,6 +227,10 @@ pub struct Sequence {
     prefilled: bool,
     /// KV pairs evicted during decode so far.
     pub decode_evictions: usize,
+    /// KV pairs demoted to the quantized side tier during decode so far.
+    pub decode_demotions: usize,
+    /// Demoted pairs rehydrated back to residency during decode so far.
+    pub decode_rehydrations: usize,
     /// Wall-clock µs spent in this sequence's prefill execution.
     pub prefill_us: u64,
     /// Wall-clock µs spent in the KVzip oracle pass (0 unless needed).
@@ -265,6 +290,13 @@ impl Sequence {
         &self.cache
     }
 
+    /// Demoted positions the engine's rehydration ledger tracks, summed
+    /// over heads. Must always equal `cache().stats().demoted` — the
+    /// simulation harness checks this tier-conservation invariant.
+    pub fn tracked_demoted(&self) -> usize {
+        self.demoted_scores.iter().map(|v| v.len()).sum()
+    }
+
     /// Mark the sequence as cancelled; it will be skipped by subsequent
     /// decode steps. No-op when the sequence already finished.
     pub fn cancel(&mut self) {
@@ -272,6 +304,27 @@ impl Sequence {
             self.done = Some(DoneReason::Cancelled);
         }
     }
+}
+
+/// Round-trip one position's K and V rows of a `[L, H, t_max, D]` host
+/// snapshot through the tier's quantizer, in place. A demoted row must
+/// read back exactly the lossy values the side tier stores, so a later
+/// group-join scatter reproduces the backend's rehydrated state bitwise.
+#[allow(clippy::too_many_arguments)]
+fn roundtrip_snapshot_row(
+    k: &mut [f32],
+    v: &mut [f32],
+    tier: TierConfig,
+    heads: usize,
+    t_max: usize,
+    d_head: usize,
+    l: usize,
+    h: usize,
+    pos: usize,
+) {
+    let at = (l * heads + h) * (t_max * d_head) + pos * d_head;
+    quant_roundtrip(&mut k[at..at + d_head], tier.group, tier.bits);
+    quant_roundtrip(&mut v[at..at + d_head], tier.group, tier.bits);
 }
 
 struct PrefillStats {
@@ -377,6 +430,17 @@ impl Engine {
         *self.rt.manifest.buckets.prefill_t.iter().max().unwrap()
     }
 
+    /// Tier configuration for the quantized demotion side pool every
+    /// engine cache carries: int8, group-8 over the model head dim. The
+    /// tier stays empty unless a two-threshold policy demotes into it.
+    pub fn tier_config(&self) -> TierConfig {
+        TierConfig {
+            d_head: self.rt.manifest.model.d_head,
+            bits: QuantBits::Int8,
+            group: 8,
+        }
+    }
+
     /// Create a fresh (not yet prefilled) sequence for `prompt`.
     pub fn sequence(&self, id: u64, prompt: &str, sp: SamplingParams) -> Sequence {
         let man = &self.rt.manifest;
@@ -390,11 +454,13 @@ impl Engine {
             generated: vec![],
             pos: 0,
             cur: self.tok.pad as i32,
-            cache: PagedKvCache::new(layers, heads, t_max),
+            cache: PagedKvCache::new_tiered(layers, heads, t_max, self.tier_config()),
             sbuf: ScoreBuffer::new(self.window(), layers, heads),
             tau: None,
             dstat: Stat::ScoreMlp,
             gate: None,
+            floor: None,
+            demoted_scores: vec![Vec::new(); layers * heads],
             sampler: Sampler::new(seed),
             sp,
             policy_name: String::new(),
@@ -403,6 +469,8 @@ impl Engine {
             done: None,
             prefilled: false,
             decode_evictions: 0,
+            decode_demotions: 0,
+            decode_rehydrations: 0,
             prefill_us: 0,
             oracle_us: 0,
             decode_us: 0,
@@ -486,6 +554,41 @@ impl Engine {
                 }
             }
         }
+        // two-threshold policies: express the demotion floor in the same
+        // space the score buffer holds — the raw stat, or the gated margin
+        // (compared against an effective threshold of 0, so the band
+        // `[floor, τ)` maps to margins `[floor - τ, 0)`)
+        seq.floor = match (policy.decode_floor(), seq.tau, seq.gate) {
+            (Some(fl), Some(tau), Some(_)) => Some(fl - tau),
+            (fl, _, _) => fl,
+        };
+        // prefill pruning may have demoted prompt positions: remember
+        // their buffered-space scores for rebound rehydration, and
+        // round-trip the host snapshot rows so a group join scatters
+        // exactly the lossy values the quantized side tier stores
+        if seq.cache.stats().demoted > 0 {
+            let view = stats.view(0, None);
+            let (dstat, tier) = (seq.dstat, seq.cache.tier());
+            let (heads, t_max, d) =
+                (man.model.n_kv_heads, man.model.t_max, man.model.d_head);
+            for l in 0..man.model.n_layers {
+                for h in 0..heads {
+                    for p in seq.cache.demoted_positions(l, h) {
+                        let s = view.row(dstat, l, h)[p];
+                        let s = match (seq.gate, seq.tau) {
+                            (Some((gstat, gtau)), Some(tau)) => {
+                                (s - tau).max(view.row(gstat, l, h)[p] - gtau)
+                            }
+                            _ => s,
+                        };
+                        seq.demoted_scores[l * heads + h].push((p, s));
+                        roundtrip_snapshot_row(
+                            &mut seq.k, &mut seq.v, tier, heads, t_max, d, l, h, p,
+                        );
+                    }
+                }
+            }
+        }
         seq.policy_us = crate::util::now_micros() - t0;
         seq.policy_name = policy.name();
         seq.prefilled = true;
@@ -505,6 +608,8 @@ impl Engine {
                 token: t,
                 text: self.tok.decode(&[t]),
                 evicted: 0,
+                demoted: 0,
+                rehydrated: 0,
                 kv_up_bytes: 0,
                 kv_down_bytes: 0,
             });
@@ -607,6 +712,21 @@ impl Engine {
             kv_up[si] += 4 * (seq.k.len() + seq.v.len() + m.len()) as u64;
             slots[s] = seq.uid;
             slot_of[si] = s;
+            // the scatter purged this slot's side-tier entries on the
+            // backend: re-demote every tracked position. The snapshot rows
+            // were round-tripped at demotion time and quantization is
+            // stable under re-encoding, so this reproduces the quantized
+            // payloads bitwise (device-local, no transfer bytes).
+            if seq.cache.stats().demoted > 0 {
+                let tier = seq.cache.tier();
+                for l in 0..layers {
+                    for h in 0..heads {
+                        for p in seq.cache.demoted_positions(l, h) {
+                            self.rt.kv_demote(handle, s, l, h, p, tier.bits, tier.group)?;
+                        }
+                    }
+                }
+            }
         }
 
         // ---- one resident step over the whole group ---------------------
@@ -661,6 +781,8 @@ impl Engine {
             // fill in the resident mask, so it is not a dirty change)
             seq.cache.fill((seq.pos + 1).min(t_max));
             let mut evicted = 0usize;
+            let mut demoted = 0usize;
+            let mut rehydrated = 0usize;
             if let Some(tau) = seq.tau {
                 let pick = |st: Stat| {
                     if is_lin(st) {
@@ -689,8 +811,55 @@ impl Engine {
                     }
                 }
                 let tp = crate::util::now_micros();
-                evicted = seq.sbuf.push_and_evict(seq.pos, v, eff_tau, &mut seq.cache);
+                // rehydration scan: a demoted position returns to residency
+                // when the step's incoming score for its head dips *below*
+                // its stored score (rebound — it now outranks live traffic)
+                // or when it would re-enter the protected window (backstop;
+                // vacuous in normal flow since demotion never targets the
+                // window). Device-local; the mask refresh rides the
+                // existing dirty-flag path next step.
+                if seq.tracked_demoted() > 0 {
+                    let wstart = (seq.pos + 1).saturating_sub(self.window());
+                    for l in 0..layers {
+                        for h in 0..heads {
+                            let lh = l * heads + h;
+                            let incoming = v[lh];
+                            let mut i = 0;
+                            while i < seq.demoted_scores[lh].len() {
+                                let (p, stored) = seq.demoted_scores[lh][i];
+                                if (stored > incoming || p >= wstart)
+                                    && seq.cache.rehydrate(l, h, p)
+                                {
+                                    self.rt.kv_rehydrate(handle, slot, l, h, p)?;
+                                    seq.demoted_scores[lh].swap_remove(i);
+                                    rehydrated += 1;
+                                } else {
+                                    i += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                let (ev, dem) = seq.sbuf.push_and_evict_tiered(
+                    seq.pos,
+                    v,
+                    eff_tau,
+                    seq.floor,
+                    &mut seq.cache,
+                );
+                evicted = ev;
+                demoted = dem.len();
+                let tier = seq.cache.tier();
+                for &(l, h, p, s) in &dem {
+                    seq.demoted_scores[l * heads + h].push((p, s));
+                    roundtrip_snapshot_row(
+                        &mut seq.k, &mut seq.v, tier, heads, t_max, d_head, l, h, p,
+                    );
+                    self.rt.kv_demote(handle, slot, l, h, p, tier.bits, tier.group)?;
+                }
                 seq.decode_evictions += evicted;
+                seq.decode_demotions += demoted;
+                seq.decode_rehydrations += rehydrated;
                 seq.policy_us += crate::util::now_micros() - tp;
             }
             let t = seq.sampler.sample(logits.row(&[slot]), &seq.sp);
@@ -711,6 +880,8 @@ impl Engine {
                     token: t,
                     text: self.tok.decode(&[t]),
                     evicted,
+                    demoted,
+                    rehydrated,
                     kv_up_bytes: kv_up[si],
                     kv_down_bytes: kv_down[si],
                 });
@@ -748,6 +919,8 @@ impl Engine {
             decode_us: seq.decode_us,
             policy_us: seq.policy_us,
             decode_evictions: seq.decode_evictions,
+            decode_demotions: seq.decode_demotions,
+            decode_rehydrations: seq.decode_rehydrations,
         }
     }
 
@@ -828,12 +1001,36 @@ impl Engine {
     /// metric the benches report alongside exact-match accuracy — it
     /// degrades gracefully as pruning removes needed KV pairs, so the
     /// policy ranking is measurable at any model quality.
+    ///
+    /// Shorthand for [`Engine::score_answer_full`] returning only
+    /// `(nll, compression)`.
     pub fn score_answer(
         &self,
         prompt: &str,
         answer: &str,
         policy: &dyn PrunePolicy,
     ) -> Result<(f64, f64)> {
+        let a = self.score_answer_full(prompt, answer, policy)?;
+        Ok((a.nll, a.compression))
+    }
+
+    /// Teacher-forced answer scoring with tier accounting (see
+    /// [`Engine::score_answer`] for the metric itself).
+    ///
+    /// Two-threshold policies demote part of the prompt into the
+    /// quantized side tier at prefill. This scorer prices the cache at
+    /// that *steady state* (`kv_bytes`, `compression` — what the pairs
+    /// cost while the request idles between prefill and answer), then
+    /// rehydrates every demoted position before teacher-forcing the
+    /// answer: the band returns with int8 round-trip error instead of
+    /// being gone, which is the tier's faithfulness story on the
+    /// accuracy-vs-bytes frontier.
+    pub fn score_answer_full(
+        &self,
+        prompt: &str,
+        answer: &str,
+        policy: &dyn PrunePolicy,
+    ) -> Result<AnswerScore> {
         let man = &self.rt.manifest;
         let (layers, heads, t_max) =
             (man.model.n_layers, man.model.n_kv_heads, man.model.t_max);
@@ -870,10 +1067,37 @@ impl Engine {
         } else {
             None
         };
-        let mut cache = PagedKvCache::new(layers, heads, t_max);
+        let mut cache = PagedKvCache::new_tiered(layers, heads, t_max, self.tier_config());
         cache.fill(n);
         policy.prefill_prune(&stats.view(0, oracle.as_ref()), n, &mut cache);
-        let compression = cache.stats().compression();
+        // price the cache at its post-prune steady state, *before*
+        // answer-time rehydration brings the demoted band back
+        let steady = cache.stats();
+        let compression = steady.compression();
+
+        // answer-time rehydration: round-trip every demoted row in the
+        // fetched prefill KV through the tier's quantizer (the side tier
+        // stores int8; the answer must attend to what it stored, not the
+        // original f32), then rehydrate so the band is attendable
+        let mut kc = fetch("kcache")?;
+        let mut vc = fetch("vcache")?;
+        let mut rehydrated = 0usize;
+        if steady.demoted > 0 {
+            let tier = cache.tier();
+            let d = man.model.d_head;
+            for l in 0..layers {
+                for h in 0..heads {
+                    for p in cache.demoted_positions(l, h) {
+                        roundtrip_snapshot_row(
+                            &mut kc.data, &mut vc.data, tier, heads, t_max, d, l, h, p,
+                        );
+                        if cache.rehydrate(l, h, p) {
+                            rehydrated += 1;
+                        }
+                    }
+                }
+            }
+        }
 
         // resident B=1 teacher-forcing session: scatter the prefill cache
         // once; each step appends its row in place on the backend (the fed
@@ -883,8 +1107,6 @@ impl Engine {
         group.handle = Some(self.rt.kv_alloc(dec.meta.batch)?);
         group.slots = vec![0; dec.meta.batch];
         let handle = group.handle.as_ref().unwrap();
-        let kc = fetch("kcache")?;
-        let vc = fetch("vcache")?;
         self.rt.kv_scatter(handle, 0, &kc.data, &vc.data)?;
         self.rt.kv_write_mask(handle, 0, &cache.mask_f32())?;
 
@@ -905,6 +1127,89 @@ impl Engine {
             let ri = dec.meta.resident_output_index("logits")?;
             logits = self.rt.fetch_f32(&outs[ri], &dec.meta.outputs[li].shape)?;
         }
-        Ok((nll / count.max(1) as f64, compression))
+        Ok(AnswerScore {
+            nll: nll / count.max(1) as f64,
+            compression,
+            kv_bytes: steady.kv_bytes(),
+            demoted: steady.demoted,
+            rehydrated,
+        })
+    }
+}
+
+/// Result of [`Engine::score_answer_full`]: the teacher-forced quality
+/// metric plus the steady-state tier accounting behind the leaderboard's
+/// accuracy-vs-bytes frontier.
+#[derive(Debug, Clone, Copy)]
+pub struct AnswerScore {
+    /// Mean NLL of the answer in nats/byte (lower is better).
+    pub nll: f64,
+    /// Removed fraction at the post-prune steady state (demoted pairs
+    /// count as removed — they left the resident f32 tier).
+    pub compression: f64,
+    /// Total cache bytes at the steady state: block-granular resident f32
+    /// plus per-entry quantized side-tier bytes.
+    pub kv_bytes: usize,
+    /// Prompt positions the policy demoted into the side tier.
+    pub demoted: usize,
+    /// Demoted positions rehydrated before the answer was scored.
+    pub rehydrated: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+    use crate::workload;
+    use std::sync::Arc;
+
+    /// Both rehydration triggers, forced deterministically by seeding the
+    /// ledger by hand (white-box: the natural decode flow only reaches
+    /// them on data-dependent score rebounds). One demoted entry deep in
+    /// the prompt carries a `+inf` stored score — any real incoming score
+    /// sits below it, so the *rebound* rule must rehydrate it. A second
+    /// entry at the window edge carries `-inf` — rebound can never fire,
+    /// so only the *window re-entry backstop* can bring it home. One
+    /// decode step must recover both, drain the ledger, and restore the
+    /// cache's kept bits.
+    #[test]
+    fn forced_rehydration_rebound_and_window_backstop() {
+        let e = Engine::new(Arc::new(Runtime::reference()));
+        let mut rng = Rng::new(5);
+        let task = workload::ruler_instance("niah_single_1", 180, &mut rng);
+        // tau = -1000 keeps everything, so no natural demotion competes
+        // with the two hand-planted entries; the floor arms the tier path.
+        let policy = policies::by_name("kvzap_mlp:-1000:floor=-1000", e.window()).unwrap();
+        let mut sp = SamplingParams::greedy(4);
+        sp.stop_at_newline = false;
+        let mut s = e.sequence(1, &task.prompt, sp);
+        e.prefill(&mut s, policy.as_ref()).unwrap();
+        assert_eq!(s.cache.stats().demoted, 0, "tau=-1000 must not demote naturally");
+        assert!(s.floor.is_some(), "the floor must arm the tiered decode path");
+
+        let heads = e.rt.manifest.model.n_kv_heads;
+        let edge = s.pos - 1; // inside the protected window
+        assert!(s.cache.demote(0, 0, 0), "manual demotion deep in the prompt");
+        s.demoted_scores[0].push((0, f32::MAX));
+        assert!(s.cache.demote(0, heads - 1, edge), "manual demotion at the window edge");
+        s.demoted_scores[heads - 1].push((edge, f32::MIN));
+        assert_eq!(s.tracked_demoted(), 2);
+        assert_eq!(s.cache.stats().demoted, 2);
+
+        let mut group = e.decode_group();
+        let mut set = vec![&mut s];
+        e.decode_step(&mut group, &mut set).unwrap();
+        assert_eq!(
+            s.decode_rehydrations, 2,
+            "rebound and window backstop must both fire on the first step"
+        );
+        assert_eq!(s.tracked_demoted(), 0, "the ledger drains");
+        assert_eq!(s.cache.stats().demoted, 0, "the side tier empties");
+        assert_eq!(s.cache.stats().side_bytes, 0);
+        assert!(s.cache.is_kept(0, 0, 0), "rebound entry is resident again");
+        assert!(s.cache.is_kept(0, heads - 1, edge), "backstop entry is resident again");
+        assert_eq!(s.decode_demotions, 0, "tau=-1000 demotes nothing on its own");
     }
 }

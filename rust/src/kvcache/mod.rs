@@ -1,4 +1,5 @@
-//! Paged KV cache manager with per-head variable lengths.
+//! Paged KV cache manager with per-head variable lengths and a two-tier
+//! position lifecycle.
 //!
 //! The paper's §5 implementation challenge: KVzap's per-head thresholding
 //! produces *non-uniform cache lengths across heads*, which a production
@@ -6,34 +7,100 @@
 //! needs static shapes, so the device-side cache stays a dense
 //! `[L, H, t_max]` buffer with a keep-mask; everything vLLM's block manager
 //! would do — block tables, free lists, residency accounting, freed-memory
-//! reporting — lives here (DESIGN.md §4). Eviction flips mask bits; when
-//! every slot of a block is evicted (or never filled) the block is returned
-//! to the [`BlockPool`].
+//! reporting — lives here (DESIGN.md §4).
+//!
+//! Every filled position is in exactly one of three states:
+//!
+//! ```text
+//!   kept ──demote()──▶ demoted ──drop_demoted()──▶ dropped
+//!     │                   │
+//!     │                rehydrate()
+//!     │                   ▼
+//!     │◀──────────────── kept
+//!     └────evict()──────────────────────────────▶ dropped
+//! ```
+//!
+//! *kept* positions are attendable and charged to the resident
+//! [`BlockPool`] in [`BLOCK_SLOTS`]-sized blocks; *demoted* positions are
+//! masked off but retained as a quantized side-pool payload (charged in
+//! bytes, see [`TierConfig`]) so they can be rehydrated; *dropped*
+//! positions are gone. Eviction flips mask bits; when every slot of a
+//! block is evicted or demoted the block is returned to the pool, and a
+//! rehydrate re-charges it.
 
 pub mod pool;
 
 pub use pool::BlockPool;
 
+use crate::runtime::kernels::{quant_row_bytes, QuantBits};
 use std::sync::Arc;
 
 /// Slots per block (vLLM's default block size is 16).
 pub const BLOCK_SLOTS: usize = 16;
 
+/// Shape and encoding of the demoted (quantized) tier for one cache.
+///
+/// `d_head == 0` disables the tier: [`PagedKvCache::demote`] refuses and
+/// byte accounting reports zero (the pre-tier behavior).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierConfig {
+    /// Channels per K (and per V) row; 0 disables the demoted tier.
+    pub d_head: usize,
+    /// Code width of the quantized payload.
+    pub bits: QuantBits,
+    /// Channels per quantization group (scale + zero point stored per
+    /// group, see `runtime::kernels::quantize_row`).
+    pub group: usize,
+}
+
+impl TierConfig {
+    /// A disabled tier (demotion refused, zero byte accounting).
+    pub fn disabled() -> TierConfig {
+        TierConfig { d_head: 0, bits: QuantBits::Int8, group: 8 }
+    }
+
+    /// Whether demotion is available.
+    pub fn enabled(&self) -> bool {
+        self.d_head > 0
+    }
+
+    /// Side-pool bytes one demoted position costs in one head: quantized
+    /// K row + quantized V row, each with per-group scale/zero overhead.
+    pub fn bytes_per_entry(&self) -> usize {
+        2 * quant_row_bytes(self.d_head, self.group, self.bits)
+    }
+
+    /// Resident-tier bytes one charged block represents (f32 K + V rows
+    /// for [`BLOCK_SLOTS`] positions of one head).
+    pub fn resident_block_bytes(&self) -> usize {
+        BLOCK_SLOTS * 2 * self.d_head * 4
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CacheStats {
-    /// KV pairs currently kept (filled and not evicted), summed over heads.
+    /// KV pairs currently kept (filled, attendable), summed over heads.
     pub kept: usize,
+    /// KV pairs currently demoted to the quantized side tier.
+    pub demoted: usize,
     /// KV pairs ever filled (prompt + decoded), summed over heads.
     pub filled: usize,
-    /// Blocks currently resident (≥1 kept slot).
+    /// Blocks currently charged to the resident pool (≥1 kept slot).
     pub resident_blocks: usize,
-    /// Blocks freed by eviction (were resident, now empty).
+    /// Blocks freed so far by eviction/demotion (cumulative).
     pub freed_blocks: usize,
+    /// Resident-tier bytes: charged blocks at full f32 K+V width
+    /// (allocation-granular, so partially-kept blocks price honestly).
+    pub resident_bytes: usize,
+    /// Demoted-tier bytes: quantized payload + per-group parameters.
+    pub side_bytes: usize,
 }
 
 impl CacheStats {
     /// Removed fraction — the paper's "compression ratio (removed
-    /// fraction)" from Table 2.
+    /// fraction)" from Table 2. Demoted positions count as removed (they
+    /// are not attendable); the bytes they still occupy show up in
+    /// [`CacheStats::kv_bytes`] instead.
     pub fn compression(&self) -> f64 {
         if self.filled == 0 {
             0.0
@@ -42,13 +109,30 @@ impl CacheStats {
         }
     }
 
-    /// Compression factor (e.g. 0.75 removed -> 4.0x).
+    /// Compression factor (e.g. 0.75 removed -> 4.0x). A fully-pruned
+    /// cache (`kept == 0` with `filled > 0`) is infinitely compressed —
+    /// reporting 1.0 here would make the most aggressive policy setting
+    /// read as "no compression" in the leaderboard.
     pub fn factor(&self) -> f64 {
-        if self.filled == 0 || self.kept == 0 {
+        if self.filled == 0 {
             1.0
+        } else if self.kept == 0 {
+            f64::INFINITY
         } else {
             self.filled as f64 / self.kept as f64
         }
+    }
+
+    /// Positions dropped outright (never demoted, or demoted then dropped).
+    pub fn dropped(&self) -> usize {
+        self.filled - self.kept - self.demoted
+    }
+
+    /// Total cache footprint in bytes across both tiers. This is the
+    /// honest memory axis for the leaderboard frontier: a demoted
+    /// position is cheaper than a kept one but not free.
+    pub fn kv_bytes(&self) -> usize {
+        self.resident_bytes + self.side_bytes
     }
 }
 
@@ -59,36 +143,64 @@ pub struct PagedKvCache {
     pub t_max: usize,
     /// kept[l][h] is a t_max bitset (true = attendable).
     kept: Vec<u64>,
+    /// demoted[l][h] is a t_max bitset (true = in the quantized side tier).
+    /// Disjoint from `kept` by construction.
+    demoted: Vec<u64>,
     words_per_head: usize,
     /// Highest filled position + 1 (same across heads: decode always fills).
     len: usize,
     /// Per-(l,h) kept count, maintained incrementally.
     kept_count: Vec<usize>,
+    /// Per-(l,h) demoted count, maintained incrementally.
+    demoted_count: Vec<usize>,
+    /// resident[l][h] is a per-block bitset: true = charged to the pool.
+    resident: Vec<u64>,
+    block_words: usize,
     freed_blocks: usize,
     pool: Option<Arc<BlockPool>>,
     pool_blocks: usize,
+    /// Side pool charged in bytes per demoted entry (admission control for
+    /// the quantized tier); byte count maintained even without a pool.
+    side_pool: Option<Arc<BlockPool>>,
+    side_bytes: usize,
+    tier: TierConfig,
     /// Dirty flag so the coordinator only re-uploads the mask when it
-    /// changed in a way the backend cannot mirror itself. Evictions set
-    /// it; `fill` does not — the resident decode path marks each decoded
-    /// position attendable on its own (see runtime/backend.rs), so a
-    /// no-eviction sequence performs zero mask uploads after its join.
+    /// changed in a way the backend cannot mirror itself. Evictions,
+    /// demotions and rehydrations set it; `fill` does not — the resident
+    /// decode path marks each decoded position attendable on its own (see
+    /// runtime/backend.rs), so a no-eviction sequence performs zero mask
+    /// uploads after its join.
     dirty: bool,
 }
 
 impl PagedKvCache {
     pub fn new(layers: usize, heads: usize, t_max: usize) -> PagedKvCache {
+        PagedKvCache::new_tiered(layers, heads, t_max, TierConfig::disabled())
+    }
+
+    /// A cache with an enabled demoted tier (the engine path: `d_head`
+    /// from the model, int8/int4 groupwise encoding).
+    pub fn new_tiered(layers: usize, heads: usize, t_max: usize, tier: TierConfig) -> PagedKvCache {
         let words_per_head = t_max.div_ceil(64);
+        let block_words = t_max.div_ceil(BLOCK_SLOTS).div_ceil(64);
         PagedKvCache {
             layers,
             heads,
             t_max,
             kept: vec![0; layers * heads * words_per_head],
+            demoted: vec![0; layers * heads * words_per_head],
             words_per_head,
             len: 0,
             kept_count: vec![0; layers * heads],
+            demoted_count: vec![0; layers * heads],
+            resident: vec![0; layers * heads * block_words],
+            block_words,
             freed_blocks: 0,
             pool: None,
             pool_blocks: 0,
+            side_pool: None,
+            side_bytes: 0,
+            tier,
             dirty: true,
         }
     }
@@ -97,6 +209,18 @@ impl PagedKvCache {
     pub fn with_pool(mut self, pool: Arc<BlockPool>) -> PagedKvCache {
         self.pool = Some(pool);
         self
+    }
+
+    /// Attach a shared side pool (byte-denominated); demotions are charged
+    /// against it and refused when it is exhausted.
+    pub fn with_side_pool(mut self, pool: Arc<BlockPool>) -> PagedKvCache {
+        self.side_pool = Some(pool);
+        self
+    }
+
+    /// The demoted-tier configuration this cache was built with.
+    pub fn tier(&self) -> TierConfig {
+        self.tier
     }
 
     fn idx(&self, l: usize, h: usize) -> usize {
@@ -116,6 +240,48 @@ impl PagedKvCache {
         self.kept[base + pos / 64] >> (pos % 64) & 1 == 1
     }
 
+    /// True if `(l, h, pos)` currently sits in the quantized side tier.
+    pub fn is_demoted(&self, l: usize, h: usize, pos: usize) -> bool {
+        let base = self.idx(l, h) * self.words_per_head;
+        self.demoted[base + pos / 64] >> (pos % 64) & 1 == 1
+    }
+
+    fn set_demoted_bit(&mut self, l: usize, h: usize, pos: usize, val: bool) {
+        let head = self.idx(l, h);
+        let word = head * self.words_per_head + pos / 64;
+        let bit = 1u64 << (pos % 64);
+        if val {
+            debug_assert!(self.demoted[word] & bit == 0);
+            self.demoted[word] |= bit;
+            self.demoted_count[head] += 1;
+        } else {
+            debug_assert!(self.demoted[word] & bit != 0);
+            self.demoted[word] &= !bit;
+            self.demoted_count[head] -= 1;
+        }
+    }
+
+    fn block_resident(&self, l: usize, h: usize, b: usize) -> bool {
+        let base = self.idx(l, h) * self.block_words;
+        self.resident[base + b / 64] >> (b % 64) & 1 == 1
+    }
+
+    fn set_block_resident(&mut self, l: usize, h: usize, b: usize, val: bool) {
+        let base = self.idx(l, h) * self.block_words;
+        let bit = 1u64 << (b % 64);
+        if val {
+            self.resident[base + b / 64] |= bit;
+        } else {
+            self.resident[base + b / 64] &= !bit;
+        }
+    }
+
+    fn kept_in_block(&self, l: usize, h: usize, b: usize) -> usize {
+        let b0 = b * BLOCK_SLOTS;
+        let b1 = (b0 + BLOCK_SLOTS).min(self.t_max);
+        (b0..b1).filter(|&p| self.is_kept(l, h, p)).count()
+    }
+
     fn set_kept(&mut self, l: usize, h: usize, pos: usize, val: bool) {
         let head = self.idx(l, h);
         let word = head * self.words_per_head + pos / 64;
@@ -125,6 +291,10 @@ impl PagedKvCache {
             return;
         }
         if val {
+            debug_assert!(
+                self.block_resident(l, h, pos / BLOCK_SLOTS),
+                "set_kept(true) into an uncharged block"
+            );
             self.kept[word] |= bit;
             self.kept_count[head] += 1;
         } else {
@@ -134,13 +304,13 @@ impl PagedKvCache {
             // mirrored by the resident decode path itself)
             self.dirty = true;
             // Block reclamation: did this empty the whole block?
-            let b0 = pos / BLOCK_SLOTS * BLOCK_SLOTS;
-            let b1 = (b0 + BLOCK_SLOTS).min(self.t_max);
-            if (b0..b1).all(|p| !self.is_kept(l, h, p)) {
+            let b = pos / BLOCK_SLOTS;
+            if self.kept_in_block(l, h, b) == 0 && self.block_resident(l, h, b) {
+                self.set_block_resident(l, h, b, false);
                 self.freed_blocks += 1;
+                self.pool_blocks -= 1;
                 if let Some(pool) = &self.pool {
                     pool.release(1);
-                    self.pool_blocks -= 1;
                 }
             }
         }
@@ -153,18 +323,27 @@ impl PagedKvCache {
         if new_len <= self.len {
             return true;
         }
-        // Charge new blocks to the pool before mutating.
+        // Charge exactly the not-currently-resident blocks the new range
+        // touches (a freed partial tail block is re-charged here).
+        let b0 = self.len / BLOCK_SLOTS;
+        let b1 = new_len.div_ceil(BLOCK_SLOTS);
+        let mut need = 0;
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                need += (b0..b1).filter(|&b| !self.block_resident(l, h, b)).count();
+            }
+        }
         if let Some(pool) = &self.pool {
-            let old_blocks = self.len.div_ceil(BLOCK_SLOTS);
-            let new_blocks = new_len.div_ceil(BLOCK_SLOTS);
-            let need = (new_blocks - old_blocks) * self.layers * self.heads;
             if !pool.try_alloc(need) {
                 return false;
             }
-            self.pool_blocks += need;
         }
+        self.pool_blocks += need;
         for l in 0..self.layers {
             for h in 0..self.heads {
+                for b in b0..b1 {
+                    self.set_block_resident(l, h, b, true);
+                }
                 for pos in self.len..new_len {
                     self.set_kept(l, h, pos, true);
                 }
@@ -174,10 +353,11 @@ impl PagedKvCache {
         true
     }
 
-    /// Evict one KV pair (no-op if already evicted / never filled).
-    /// Returns true only on a kept -> evicted transition, so callers that
+    /// Evict one KV pair outright (no-op if not currently kept).
+    /// Returns true only on a kept -> dropped transition, so callers that
     /// count evictions (the decode ScoreBuffer) don't double-count pairs
-    /// that prefill pruning already removed.
+    /// that prefill pruning already removed. Demoted positions are not
+    /// touched — use [`PagedKvCache::drop_demoted`] for that edge.
     pub fn evict(&mut self, l: usize, h: usize, pos: usize) -> bool {
         if pos < self.len && self.is_kept(l, h, pos) {
             self.set_kept(l, h, pos, false);
@@ -186,8 +366,76 @@ impl PagedKvCache {
         false
     }
 
+    /// Demote one kept KV pair into the quantized side tier: it stops
+    /// being attendable (mask off, resident block reclaimable) but its
+    /// side-pool bytes are charged so it can be rehydrated later.
+    /// Returns false — leaving the position kept — if the tier is
+    /// disabled, the position is not kept, or the side pool is exhausted
+    /// (callers fall back to a plain [`PagedKvCache::evict`]).
+    pub fn demote(&mut self, l: usize, h: usize, pos: usize) -> bool {
+        if !self.tier.enabled() || pos >= self.len || !self.is_kept(l, h, pos) {
+            return false;
+        }
+        let bytes = self.tier.bytes_per_entry();
+        if let Some(sp) = &self.side_pool {
+            if !sp.try_alloc(bytes) {
+                return false;
+            }
+        }
+        self.side_bytes += bytes;
+        self.set_demoted_bit(l, h, pos, true);
+        self.set_kept(l, h, pos, false);
+        true
+    }
+
+    /// Rehydrate one demoted KV pair back to kept (score rebound or
+    /// window re-entry). Re-charges the resident block if reclamation
+    /// freed it; returns false — leaving the position demoted — if the
+    /// position is not demoted or the resident pool is exhausted.
+    pub fn rehydrate(&mut self, l: usize, h: usize, pos: usize) -> bool {
+        if pos >= self.len || !self.is_demoted(l, h, pos) {
+            return false;
+        }
+        let b = pos / BLOCK_SLOTS;
+        if !self.block_resident(l, h, b) {
+            if let Some(pool) = &self.pool {
+                if !pool.try_alloc(1) {
+                    return false;
+                }
+            }
+            self.set_block_resident(l, h, b, true);
+            self.pool_blocks += 1;
+        }
+        self.set_demoted_bit(l, h, pos, false);
+        let bytes = self.tier.bytes_per_entry();
+        self.side_bytes -= bytes;
+        if let Some(sp) = &self.side_pool {
+            sp.release(bytes);
+        }
+        self.set_kept(l, h, pos, true);
+        // mask 0 -> 1 is a change the backend cannot mirror itself
+        self.dirty = true;
+        true
+    }
+
+    /// Drop a demoted KV pair for good (demoted -> dropped), releasing its
+    /// side-pool bytes. Returns true on the transition.
+    pub fn drop_demoted(&mut self, l: usize, h: usize, pos: usize) -> bool {
+        if pos >= self.len || !self.is_demoted(l, h, pos) {
+            return false;
+        }
+        self.set_demoted_bit(l, h, pos, false);
+        let bytes = self.tier.bytes_per_entry();
+        self.side_bytes -= bytes;
+        if let Some(sp) = &self.side_pool {
+            sp.release(bytes);
+        }
+        true
+    }
+
     /// Apply a per-head keep decision over the prompt region [0, upto):
-    /// keep position p iff `keep(p)`.
+    /// keep position p iff `keep(p)`. Drop-only (budget policies have no
+    /// demotion band); demoted positions are untouched.
     pub fn retain(&mut self, l: usize, h: usize, upto: usize, keep: impl Fn(usize) -> bool) {
         for pos in 0..upto.min(self.len) {
             if !keep(pos) {
@@ -196,7 +444,8 @@ impl PagedKvCache {
         }
     }
 
-    /// Dense f32 mask `[L, H, t_max]` for the decode artifact.
+    /// Dense f32 mask `[L, H, t_max]` for the decode artifact. Demoted
+    /// positions read 0.0 — they are not attendable until rehydrated.
     pub fn mask_f32(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.layers * self.heads * self.t_max];
         for l in 0..self.layers {
@@ -213,10 +462,10 @@ impl PagedKvCache {
     }
 
     /// True if the mask changed since the last `take_dirty` call in a way
-    /// the backend cannot mirror itself, i.e. by evictions. (`fill` does
-    /// not set it: the resident decode step marks its own position
-    /// attendable on the backend side.) The engine consumes this to skip
-    /// the per-slot mask upload on no-eviction steps.
+    /// the backend cannot mirror itself, i.e. by evictions, demotions or
+    /// rehydrations. (`fill` does not set it: the resident decode step
+    /// marks its own position attendable on the backend side.) The engine
+    /// consumes this to skip the per-slot mask upload on no-change steps.
     pub fn take_dirty(&mut self) -> bool {
         std::mem::take(&mut self.dirty)
     }
@@ -232,30 +481,118 @@ impl PagedKvCache {
         self.kept_count[self.idx(l, h)]
     }
 
-    pub fn stats(&self) -> CacheStats {
-        let kept: usize = self.kept_count.iter().sum();
-        let filled = self.len * self.layers * self.heads;
-        let mut resident = 0;
+    /// Demoted entries currently held for one head.
+    pub fn demoted_in_head(&self, l: usize, h: usize) -> usize {
+        self.demoted_count[self.idx(l, h)]
+    }
+
+    /// Positions currently demoted in one head, ascending.
+    pub fn demoted_positions(&self, l: usize, h: usize) -> Vec<usize> {
+        (0..self.len).filter(|&p| self.is_demoted(l, h, p)).collect()
+    }
+
+    /// Demoted entries at positions `>= from`, summed over heads — the
+    /// window re-entry probe: for window-protected policies this must be
+    /// 0 at `from = len - window` after every step.
+    pub fn demoted_at_or_after(&self, from: usize) -> usize {
+        let mut n = 0;
         for l in 0..self.layers {
             for h in 0..self.heads {
-                for b in 0..self.len.div_ceil(BLOCK_SLOTS) {
-                    let b0 = b * BLOCK_SLOTS;
-                    let b1 = (b0 + BLOCK_SLOTS).min(self.t_max);
-                    if (b0..b1).any(|p| self.is_kept(l, h, p)) {
-                        resident += 1;
+                n += (from..self.len).filter(|&p| self.is_demoted(l, h, p)).count();
+            }
+        }
+        n
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            kept: self.kept_count.iter().sum(),
+            demoted: self.demoted_count.iter().sum(),
+            filled: self.len * self.layers * self.heads,
+            resident_blocks: self.pool_blocks,
+            freed_blocks: self.freed_blocks,
+            resident_bytes: self.pool_blocks * self.tier.resident_block_bytes(),
+            side_bytes: self.side_bytes,
+        }
+    }
+
+    /// Authoritative tier/pool recount for the simulation harness: checks
+    /// that the incremental counters match the bitsets, that kept/demoted
+    /// are disjoint and inside `[0, len)`, and that a block is charged iff
+    /// it has a kept slot. Returns a description of the first mismatch.
+    pub fn accounting_ok(&self) -> Result<(), String> {
+        let mut kept_total = 0;
+        let mut demoted_total = 0;
+        let mut resident_total = 0;
+        for l in 0..self.layers {
+            for h in 0..self.heads {
+                let head = self.idx(l, h);
+                let mut kept = 0;
+                let mut demoted = 0;
+                for p in 0..self.t_max {
+                    let k = self.is_kept(l, h, p);
+                    let d = self.is_demoted(l, h, p);
+                    if k && d {
+                        return Err(format!("({l},{h},{p}) both kept and demoted"));
                     }
+                    if (k || d) && p >= self.len {
+                        return Err(format!("({l},{h},{p}) marked beyond len {}", self.len));
+                    }
+                    kept += k as usize;
+                    demoted += d as usize;
+                }
+                if kept != self.kept_count[head] {
+                    return Err(format!(
+                        "({l},{h}) kept recount {kept} != counter {}",
+                        self.kept_count[head]
+                    ));
+                }
+                if demoted != self.demoted_count[head] {
+                    return Err(format!(
+                        "({l},{h}) demoted recount {demoted} != counter {}",
+                        self.demoted_count[head]
+                    ));
+                }
+                kept_total += kept;
+                demoted_total += demoted;
+                for b in 0..self.t_max.div_ceil(BLOCK_SLOTS) {
+                    let charged = self.block_resident(l, h, b);
+                    let occupied = self.kept_in_block(l, h, b) > 0;
+                    if charged != occupied {
+                        return Err(format!(
+                            "({l},{h}) block {b}: charged={charged} but kept-in-block>0={occupied}"
+                        ));
+                    }
+                    resident_total += charged as usize;
                 }
             }
         }
-        CacheStats { kept, filled, resident_blocks: resident, freed_blocks: self.freed_blocks }
+        if resident_total != self.pool_blocks {
+            return Err(format!(
+                "resident recount {resident_total} != pool_blocks {}",
+                self.pool_blocks
+            ));
+        }
+        let want_side = demoted_total * self.tier.bytes_per_entry();
+        if want_side != self.side_bytes {
+            return Err(format!("side bytes {} != {demoted_total} entries", self.side_bytes));
+        }
+        let _ = kept_total;
+        Ok(())
     }
 
-    /// Release all pool blocks (sequence finished).
+    /// Release all pool charges (sequence finished): resident blocks and
+    /// demoted-tier bytes both go back to their pools.
     pub fn release(&mut self) {
         if let Some(pool) = &self.pool {
             pool.release(self.pool_blocks);
-            self.pool_blocks = 0;
         }
+        self.pool_blocks = 0;
+        self.resident.fill(0);
+        if let Some(sp) = &self.side_pool {
+            sp.release(self.side_bytes);
+        }
+        self.side_bytes = 0;
     }
 }
 
@@ -268,6 +605,10 @@ impl Drop for PagedKvCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn tier() -> TierConfig {
+        TierConfig { d_head: 16, bits: QuantBits::Int8, group: 8 }
+    }
 
     #[test]
     fn fill_and_evict_accounting() {
@@ -286,6 +627,7 @@ mod tests {
         assert_eq!(s.kept, 40 * 4 - 16);
         assert_eq!(s.freed_blocks, 1);
         assert!(s.compression() > 0.0);
+        c.accounting_ok().unwrap();
     }
 
     #[test]
@@ -340,5 +682,111 @@ mod tests {
         assert!(!c.evict(0, 0, 3), "second evict is a no-op");
         assert!(!c.evict(0, 0, 20), "beyond len is a no-op");
         assert_eq!(c.kept_in_head(0, 0), 9);
+    }
+
+    #[test]
+    fn demote_rehydrate_lifecycle() {
+        let mut c = PagedKvCache::new_tiered(1, 1, 64, tier());
+        c.fill(20);
+        let bpe = tier().bytes_per_entry();
+        assert!(c.demote(0, 0, 3));
+        assert!(!c.demote(0, 0, 3), "demote is kept-only");
+        assert!(!c.evict(0, 0, 3), "evict must not touch demoted positions");
+        let s = c.stats();
+        assert_eq!((s.kept, s.demoted, s.dropped()), (19, 1, 0));
+        assert_eq!(s.side_bytes, bpe);
+        assert!(!c.is_kept(0, 0, 3) && c.is_demoted(0, 0, 3));
+        assert_eq!(c.mask_f32()[3], 0.0, "demoted is not attendable");
+        c.take_dirty();
+
+        assert!(c.rehydrate(0, 0, 3));
+        assert!(!c.rehydrate(0, 0, 3), "rehydrate is demoted-only");
+        let s = c.stats();
+        assert_eq!((s.kept, s.demoted, s.side_bytes), (20, 0, 0));
+        assert!(c.is_kept(0, 0, 3));
+        assert!(c.is_dirty(), "rehydration re-dirties the mask");
+        c.accounting_ok().unwrap();
+    }
+
+    #[test]
+    fn demote_disabled_without_tier() {
+        let mut c = PagedKvCache::new(1, 1, 32);
+        c.fill(10);
+        assert!(!c.demote(0, 0, 3), "disabled tier refuses demotion");
+        assert!(c.is_kept(0, 0, 3));
+    }
+
+    #[test]
+    fn demoting_whole_block_frees_it_and_rehydrate_recharges() {
+        let pool = Arc::new(BlockPool::new(4));
+        let mut c = PagedKvCache::new_tiered(1, 1, 64, tier()).with_pool(pool.clone());
+        assert!(c.fill(64));
+        assert_eq!(pool.free(), 0);
+        for pos in 0..16 {
+            assert!(c.demote(0, 0, pos));
+        }
+        assert_eq!(pool.free(), 1, "fully-demoted block returns to the pool");
+        assert_eq!(c.stats().freed_blocks, 1);
+
+        // the freed block can be claimed by someone else -> rehydrate fails
+        assert!(pool.try_alloc(1));
+        assert!(!c.rehydrate(0, 0, 0), "no resident block available");
+        assert!(c.is_demoted(0, 0, 0), "failed rehydrate leaves the entry demoted");
+        pool.release(1);
+
+        assert!(c.rehydrate(0, 0, 0));
+        assert_eq!(pool.free(), 0, "rehydrate re-charges the block");
+        let s = c.stats();
+        assert_eq!((s.kept, s.demoted), (49, 15));
+        c.accounting_ok().unwrap();
+    }
+
+    #[test]
+    fn side_pool_admission_control() {
+        let bpe = tier().bytes_per_entry();
+        let side = Arc::new(BlockPool::new(2 * bpe)); // room for two entries
+        let mut c = PagedKvCache::new_tiered(1, 1, 64, tier()).with_side_pool(side.clone());
+        c.fill(10);
+        assert!(c.demote(0, 0, 0));
+        assert!(c.demote(0, 0, 1));
+        assert!(!c.demote(0, 0, 2), "side pool exhausted -> demotion refused");
+        assert!(c.is_kept(0, 0, 2), "refused demotion leaves the entry kept");
+        assert!(c.drop_demoted(0, 0, 0), "demoted -> dropped frees side bytes");
+        assert_eq!(side.free(), bpe);
+        assert!(c.demote(0, 0, 2));
+        let s = c.stats();
+        assert_eq!((s.kept, s.demoted, s.dropped()), (7, 2, 1));
+        c.release();
+        assert_eq!(side.free(), 2 * bpe);
+    }
+
+    #[test]
+    fn fill_into_freed_tail_block_recharges() {
+        let pool = Arc::new(BlockPool::new(8));
+        let mut c = PagedKvCache::new(1, 1, 128).with_pool(pool.clone());
+        assert!(c.fill(20)); // blocks 0,1
+        assert_eq!(pool.free(), 6);
+        for pos in 16..20 {
+            c.evict(0, 0, pos);
+        }
+        assert_eq!(pool.free(), 7, "emptied tail block freed");
+        assert!(c.fill(25), "extend into the freed tail block");
+        assert_eq!(pool.free(), 6, "tail block re-charged exactly once");
+        c.accounting_ok().unwrap();
+    }
+
+    #[test]
+    fn factor_of_fully_pruned_head_is_infinite() {
+        let mut c = PagedKvCache::new(1, 1, 32);
+        c.fill(10);
+        for pos in 0..10 {
+            c.evict(0, 0, pos);
+        }
+        let s = c.stats();
+        assert_eq!(s.kept, 0);
+        assert!(s.factor().is_infinite(), "kept==0, filled>0 must read as infinite factor");
+        assert_eq!(s.compression(), 1.0);
+        let empty = PagedKvCache::new(1, 1, 32).stats();
+        assert_eq!(empty.factor(), 1.0, "empty cache stays neutral");
     }
 }

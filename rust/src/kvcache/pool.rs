@@ -1,16 +1,28 @@
 //! Shared block pool: global KV memory accounting across sequences
 //! (the vLLM block-allocator role — admission control for the batcher).
+//!
+//! The same counter type backs both tiers of the cache: the resident
+//! pool is denominated in blocks of [`crate::kvcache::BLOCK_SLOTS`]
+//! f32 KV rows, the demoted side pool in *bytes* of quantized payload
+//! (see [`crate::kvcache::TierConfig`]). Only the unit differs; the
+//! admission-control contract is identical.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 pub struct BlockPool {
     total: usize,
     free: AtomicUsize,
+    /// Units that `release` had to discard because they would have pushed
+    /// `free` past `total`. Always 0 in a correct system; counted (rather
+    /// than asserted away) so release builds clamp instead of silently
+    /// corrupting the free counter, and the simulation harness can fail
+    /// loudly on any nonzero value.
+    over_release: AtomicUsize,
 }
 
 impl BlockPool {
     pub fn new(total: usize) -> BlockPool {
-        BlockPool { total, free: AtomicUsize::new(total) }
+        BlockPool { total, free: AtomicUsize::new(total), over_release: AtomicUsize::new(0) }
     }
 
     pub fn total(&self) -> usize {
@@ -23,6 +35,11 @@ impl BlockPool {
 
     pub fn used(&self) -> usize {
         self.total - self.free()
+    }
+
+    /// Cumulative units discarded by over-releases (see field docs).
+    pub fn over_released(&self) -> usize {
+        self.over_release.load(Ordering::Relaxed)
     }
 
     /// Try to reserve `n` blocks; false (and no change) if unavailable.
@@ -44,9 +61,26 @@ impl BlockPool {
         }
     }
 
+    /// Return `n` units to the pool. Saturates at `total`: an over-release
+    /// (an accounting bug upstream) clamps `free` to `total` and counts the
+    /// excess in [`BlockPool::over_released`] instead of corrupting the
+    /// counter. Debug builds still assert so tests catch the bug at source.
     pub fn release(&self, n: usize) {
-        let prev = self.free.fetch_add(n, Ordering::AcqRel);
-        debug_assert!(prev + n <= self.total, "pool over-release");
+        let mut cur = self.free.load(Ordering::Relaxed);
+        loop {
+            let want = (cur + n).min(self.total);
+            match self.free.compare_exchange_weak(cur, want, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => {
+                    let excess = (cur + n) - want;
+                    if excess > 0 {
+                        self.over_release.fetch_add(excess, Ordering::Relaxed);
+                        debug_assert!(false, "pool over-release by {excess}");
+                    }
+                    return;
+                }
+                Err(c) => cur = c,
+            }
+        }
     }
 }
 
@@ -84,5 +118,18 @@ mod tests {
         let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(total, 1000);
         assert_eq!(p.free(), 0);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "pool over-release"))]
+    fn over_release_clamps_and_counts() {
+        let p = BlockPool::new(4);
+        assert!(p.try_alloc(3));
+        p.release(5); // 2 over: free would be 6 > total 4
+        assert_eq!(p.free(), 4, "free clamps to total");
+        assert_eq!(p.over_released(), 2, "excess is counted, not absorbed");
+        p.release(1); // further over-release keeps counting
+        assert_eq!(p.free(), 4);
+        assert_eq!(p.over_released(), 3);
     }
 }

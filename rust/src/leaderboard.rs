@@ -6,13 +6,18 @@
 //! module reproduces that comparison in-repo: it walks [`CATALOG`], sweeps
 //! each policy kind over the RULER/LongBench/AIME generators and a set of
 //! compression targets (τ values for threshold policies, keep-fractions
-//! for budget policies), and emits one `BENCH_leaderboard.json` with
-//! accuracy, answer-NLL, compression-ratio and scoring-overhead columns
-//! per (policy, suite) cell. The sweep is CATALOG-driven, so a policy
-//! registered in [`crate::policies::spec`] joins the leaderboard with no
-//! further wiring — and [`run`] fails loudly if any cataloged kind ends up
-//! with zero rows (no silently-skipped policy; the CI `--quick` lane
-//! relies on this).
+//! for budget policies, and two-threshold `:floor=` variants for kinds
+//! with a demotion band), and emits one `BENCH_leaderboard.json` with
+//! accuracy, answer-NLL, compression-ratio, steady-state KV-bytes,
+//! side-tier and scoring-overhead columns per (policy, suite) cell. The
+//! sweep is CATALOG-driven, so a policy registered in
+//! [`crate::policies::spec`] joins the leaderboard with no further wiring
+//! — and [`run`] fails loudly if any cataloged kind ends up with zero
+//! rows, or if a swept tiered spec never demotes (no silently-skipped
+//! policy and no silently-empty demotion band; the CI `--quick` lane
+//! relies on both). Alongside the classic compression frontier, [`run`]
+//! prints an accuracy-vs-bytes frontier per suite and a dominance report
+//! pairing each tiered spec against its drop-at-floor counterpart.
 //!
 //! Drive it via `kvzap leaderboard [--quick]` or
 //! `cargo bench --bench bench_leaderboard`.
@@ -20,7 +25,8 @@
 use anyhow::{anyhow, Result};
 
 use crate::bench_support::{
-    aggregate, default_taus, eval_policy, print_frontier, write_bench_json, KEEP_FRACS,
+    aggregate, default_taus, eval_policy, print_bytes_frontier, print_frontier,
+    write_bench_json, KEEP_FRACS,
 };
 use crate::coordinator::Engine;
 use crate::policies::spec::{PolicyInfo, CATALOG};
@@ -65,6 +71,13 @@ pub struct LeaderboardRow {
     pub nll: f64,
     /// Mean removed fraction of the KV cache.
     pub compression: f64,
+    /// Mean steady-state KV footprint in bytes (resident fp32 blocks +
+    /// quantized side tier) — the x-axis of the accuracy-vs-bytes
+    /// frontier.
+    pub kv_bytes: f64,
+    /// Mean KV entries held in the quantized side tier at steady state
+    /// (non-zero only for two-threshold `:floor=` specs).
+    pub demoted: f64,
     /// Mean prefill wall-clock µs per sample.
     pub prefill_us: f64,
     /// Mean decode wall-clock µs per sample.
@@ -77,6 +90,12 @@ pub struct LeaderboardRow {
 /// The spec strings swept for one catalog kind: τ values for threshold
 /// kinds (first parameter `tau`), keep-fractions for budget kinds. Quick
 /// mode picks one mid-sweep target per kind.
+///
+/// Kinds that accept a `floor` parameter additionally sweep two-threshold
+/// `:floor=` variants pairing each τ with the deepest swept τ as the
+/// demotion floor — and the plain drop-only spec at that floor always
+/// joins the sweep too, so every tiered point has the drop-at-floor
+/// counterpart it must dominate on the bytes axis.
 fn specs_for(info: &PolicyInfo, taus: &[f64], quick: bool) -> Vec<String> {
     let form = info.string_forms[0];
     if info.params.is_empty() {
@@ -94,7 +113,17 @@ fn specs_for(info: &PolicyInfo, taus: &[f64], quick: bool) -> Vec<String> {
     } else {
         KEEP_FRACS.to_vec()
     };
-    targets.iter().map(|t| format!("{form}:{t}")).collect()
+    let mut specs: Vec<String> = targets.iter().map(|t| format!("{form}:{t}")).collect();
+    if is_threshold && info.params.iter().any(|p| p.name == "floor") {
+        let floor = taus[0];
+        if !targets.contains(&floor) {
+            specs.insert(0, format!("{form}:{floor}"));
+        }
+        for t in targets.iter().filter(|&&t| t > floor) {
+            specs.push(format!("{form}:{t}:floor={floor}"));
+        }
+    }
+    specs
 }
 
 /// Run the full sweep; one row per (cataloged policy spec, suite).
@@ -120,6 +149,8 @@ pub fn sweep(engine: &Engine, cfg: &LeaderboardConfig) -> Result<Vec<Leaderboard
                     accuracy: acc,
                     nll,
                     compression: comp,
+                    kv_bytes: mean(|r| r.kv_bytes),
+                    demoted: mean(|r| r.demoted),
                     prefill_us: mean(|r| r.prefill_us),
                     decode_us: mean(|r| r.decode_us),
                     scoring_us: mean(|r| r.policy_us + r.oracle_us),
@@ -145,29 +176,117 @@ pub fn assert_coverage(rows: &[LeaderboardRow]) -> Result<()> {
     }
 }
 
+/// Fail if any swept two-threshold `:floor=` spec never parked a single
+/// entry in the quantized side tier on any suite — an always-empty
+/// demotion band means the tiered plumbing silently degenerated to
+/// drop-only (the CI `--quick` lane relies on this firing).
+pub fn assert_tiered_coverage(rows: &[LeaderboardRow]) -> Result<()> {
+    let mut empty: Vec<&str> = vec![];
+    for r in rows.iter().filter(|r| r.policy.contains(":floor=")) {
+        if empty.contains(&r.policy.as_str()) {
+            continue;
+        }
+        let demoted_somewhere =
+            rows.iter().any(|o| o.policy == r.policy && o.demoted > 0.0);
+        if !demoted_somewhere {
+            empty.push(&r.policy);
+        }
+    }
+    if empty.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("tiered specs with an always-empty demotion band: {empty:?}"))
+    }
+}
+
+/// One tiered-vs-drop-only comparison on the accuracy-vs-bytes frontier:
+/// the two-threshold spec `form:τ:floor=f` against the plain drop-only
+/// spec `form:f` that retains the same score band (resident, in fp32).
+/// The tiered point holds the `[f, τ)` band in int8 side entries instead
+/// of fp32 blocks, so it should reach the same accuracy at strictly
+/// fewer bytes — [`DominancePair::dominates`] checks exactly that.
+#[derive(Debug, Clone)]
+pub struct DominancePair {
+    /// The two-threshold spec string.
+    pub tiered: String,
+    /// The drop-only spec at τ' = floor (same retained band, all fp32).
+    pub drop_at_floor: String,
+    /// Mean steady-state bytes for the tiered spec.
+    pub tiered_bytes: f64,
+    /// Mean steady-state bytes for the drop-only counterpart.
+    pub drop_bytes: f64,
+    /// Mean accuracy for the tiered spec.
+    pub tiered_acc: f64,
+    /// Mean accuracy for the drop-only counterpart.
+    pub drop_acc: f64,
+    /// Mean answer NLL for the tiered spec.
+    pub tiered_nll: f64,
+    /// Mean answer NLL for the drop-only counterpart.
+    pub drop_nll: f64,
+}
+
+impl DominancePair {
+    /// Strict dominance on the (accuracy ↑, bytes ↓) plane: no accuracy
+    /// lost and strictly fewer bytes than keeping the band resident.
+    pub fn dominates(&self) -> bool {
+        self.tiered_acc >= self.drop_acc && self.tiered_bytes < self.drop_bytes
+    }
+}
+
+/// Pair every two-threshold row on `suite` with its drop-at-floor
+/// counterpart from the same sweep (specs_for always co-schedules it).
+pub fn dominance_pairs(rows: &[LeaderboardRow], suite: &str) -> Vec<DominancePair> {
+    let mut pairs = vec![];
+    for r in rows.iter().filter(|r| r.suite == suite) {
+        let Some((base, floor)) = r.policy.split_once(":floor=") else { continue };
+        let Some((form, _tau)) = base.rsplit_once(':') else { continue };
+        let floor_spec = format!("{form}:{floor}");
+        if let Some(d) =
+            rows.iter().find(|d| d.suite == suite && d.policy == floor_spec)
+        {
+            pairs.push(DominancePair {
+                tiered: r.policy.clone(),
+                drop_at_floor: floor_spec,
+                tiered_bytes: r.kv_bytes,
+                drop_bytes: d.kv_bytes,
+                tiered_acc: r.accuracy,
+                drop_acc: d.accuracy,
+                tiered_nll: r.nll,
+                drop_nll: d.nll,
+            });
+        }
+    }
+    pairs
+}
+
 fn render_row(r: &LeaderboardRow) -> String {
     format!(
         "{{\"kind\": \"{}\", \"policy\": \"{}\", \"suite\": \"{}\", \"accuracy\": {:.4}, \
-         \"nll\": {:.4}, \"compression\": {:.4}, \"prefill_us\": {:.1}, \"decode_us\": {:.1}, \
-         \"scoring_us\": {:.1}}}",
+         \"nll\": {:.4}, \"compression\": {:.4}, \"kv_bytes\": {:.1}, \"demoted\": {:.2}, \
+         \"prefill_us\": {:.1}, \"decode_us\": {:.1}, \"scoring_us\": {:.1}}}",
         r.kind,
         r.policy,
         r.suite,
         r.accuracy,
         r.nll,
         r.compression,
+        r.kv_bytes,
+        r.demoted,
         r.prefill_us,
         r.decode_us,
         r.scoring_us
     )
 }
 
-/// Sweep, verify catalog coverage, write `BENCH_leaderboard.json`, and
-/// print per-suite frontier tables. Returns the rows for callers that
-/// want to post-process (tests, future report generators).
+/// Sweep, verify catalog + tiered coverage, write
+/// `BENCH_leaderboard.json`, and print per-suite frontier tables — the
+/// classic compression frontier plus the accuracy-vs-bytes frontier with
+/// a tiered-vs-drop-at-floor dominance report. Returns the rows for
+/// callers that want to post-process (tests, future report generators).
 pub fn run(engine: &Engine, cfg: &LeaderboardConfig) -> Result<Vec<LeaderboardRow>> {
     let rows = sweep(engine, cfg)?;
     assert_coverage(&rows)?;
+    assert_tiered_coverage(&rows)?;
     let rendered: Vec<String> = rows.iter().map(render_row).collect();
     write_bench_json("leaderboard", engine.rt.backend_name(), cfg.quick, &rendered)?;
     for &suite in workload::SUITES {
@@ -177,6 +296,34 @@ pub fn run(engine: &Engine, cfg: &LeaderboardConfig) -> Result<Vec<LeaderboardRo
             .map(|r| (r.policy.clone(), r.compression, r.accuracy, r.nll))
             .collect();
         print_frontier(&format!("leaderboard: {suite}"), &points);
+        let bytes_points: Vec<(String, f64, f64, f64)> = rows
+            .iter()
+            .filter(|r| r.suite == suite)
+            .map(|r| (r.policy.clone(), r.kv_bytes, r.accuracy, r.nll))
+            .collect();
+        print_bytes_frontier(
+            &format!("leaderboard: {suite} (accuracy vs bytes)"),
+            &bytes_points,
+        );
+        let pairs = dominance_pairs(&rows, suite);
+        if !pairs.is_empty() {
+            println!("\n== dominance: {suite} (tiered vs drop-at-floor)");
+            for p in pairs {
+                println!(
+                    "{:<40} vs {:<20} {:>8.0} vs {:>8.0} bytes, acc {:>5.1}% vs {:>5.1}%, \
+                     nll {:.3} vs {:.3} -> {}",
+                    p.tiered,
+                    p.drop_at_floor,
+                    p.tiered_bytes,
+                    p.drop_bytes,
+                    100.0 * p.tiered_acc,
+                    100.0 * p.drop_acc,
+                    p.tiered_nll,
+                    p.drop_nll,
+                    if p.dominates() { "DOMINATES" } else { "dominated/mixed" }
+                );
+            }
+        }
     }
     Ok(rows)
 }
@@ -184,6 +331,22 @@ pub fn run(engine: &Engine, cfg: &LeaderboardConfig) -> Result<Vec<LeaderboardRo
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn row(policy: &str, suite: &'static str, acc: f64, bytes: f64, dem: f64) -> LeaderboardRow {
+        LeaderboardRow {
+            kind: "kvzap",
+            policy: policy.into(),
+            suite,
+            accuracy: acc,
+            nll: 1.0,
+            compression: 0.5,
+            kv_bytes: bytes,
+            demoted: dem,
+            prefill_us: 0.0,
+            decode_us: 0.0,
+            scoring_us: 0.0,
+        }
+    }
 
     #[test]
     fn specs_cover_every_catalog_kind_and_parse() {
@@ -202,39 +365,95 @@ mod tests {
     }
 
     #[test]
+    fn floor_kinds_sweep_tiered_specs_with_drop_at_floor_counterpart() {
+        let taus = vec![-8.0, -6.0, -4.0, -3.0];
+        for info in CATALOG {
+            let has_floor = info.params.iter().any(|p| p.name == "floor");
+            for quick in [true, false] {
+                let specs = specs_for(info, &taus, quick);
+                let tiered: Vec<&String> =
+                    specs.iter().filter(|s| s.contains(":floor=")).collect();
+                if !has_floor {
+                    assert!(tiered.is_empty(), "{}: unexpected tiered specs", info.kind);
+                    continue;
+                }
+                assert!(!tiered.is_empty(), "{}: no tiered specs swept", info.kind);
+                for t in tiered {
+                    // every tiered spec's drop-at-floor counterpart is
+                    // co-scheduled so the dominance pair exists in-sweep
+                    let (base, floor) = t.split_once(":floor=").unwrap();
+                    let (form, _) = base.rsplit_once(':').unwrap();
+                    let counterpart = format!("{form}:{floor}");
+                    assert!(
+                        specs.contains(&counterpart),
+                        "{}: '{t}' swept without '{counterpart}'",
+                        info.kind
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn coverage_check_catches_missing_kind() {
-        let row = LeaderboardRow {
-            kind: "full",
-            policy: "full".into(),
-            suite: "ruler",
-            accuracy: 1.0,
-            nll: 0.0,
-            compression: 0.0,
-            prefill_us: 0.0,
-            decode_us: 0.0,
-            scoring_us: 0.0,
-        };
-        let err = assert_coverage(&[row]).unwrap_err().to_string();
+        let mut r = row("full", "ruler", 1.0, 0.0, 0.0);
+        r.kind = "full";
+        let err = assert_coverage(&[r]).unwrap_err().to_string();
         assert!(err.contains("keyformer"), "{err}");
         assert!(err.contains("fastkvzip"), "{err}");
     }
 
     #[test]
+    fn tiered_coverage_check_catches_empty_demotion_band() {
+        let ok = vec![
+            row("kvzap_mlp:-4:floor=-8", "ruler", 0.5, 100.0, 0.0),
+            row("kvzap_mlp:-4:floor=-8", "longbench", 0.5, 100.0, 3.0),
+        ];
+        assert_tiered_coverage(&ok).unwrap();
+        let bad = vec![row("kvzap_mlp:-4:floor=-8", "ruler", 0.5, 100.0, 0.0)];
+        let err = assert_tiered_coverage(&bad).unwrap_err().to_string();
+        assert!(err.contains("kvzap_mlp:-4:floor=-8"), "{err}");
+        // drop-only rows never trip the check
+        assert_tiered_coverage(&[row("kvzap_mlp:-4", "ruler", 0.5, 100.0, 0.0)]).unwrap();
+    }
+
+    #[test]
+    fn dominance_pairs_match_tiered_rows_to_drop_at_floor() {
+        let rows = vec![
+            row("kvzap_mlp:-4", "ruler", 0.5, 80.0, 0.0),
+            row("kvzap_mlp:-8", "ruler", 0.75, 200.0, 0.0),
+            row("kvzap_mlp:-4:floor=-8", "ruler", 0.75, 140.0, 6.0),
+            // same specs on another suite must not cross-pair
+            row("kvzap_mlp:-8", "longbench", 0.9, 999.0, 0.0),
+        ];
+        let pairs = dominance_pairs(&rows, "ruler");
+        assert_eq!(pairs.len(), 1);
+        let p = &pairs[0];
+        assert_eq!(p.tiered, "kvzap_mlp:-4:floor=-8");
+        assert_eq!(p.drop_at_floor, "kvzap_mlp:-8");
+        assert_eq!(p.drop_bytes, 200.0);
+        assert!(p.dominates(), "equal accuracy at fewer bytes dominates");
+        // losing accuracy or gaining bytes breaks dominance
+        let mut worse = p.clone();
+        worse.tiered_acc = 0.5;
+        assert!(!worse.dominates());
+        let mut heavier = p.clone();
+        heavier.tiered_bytes = 200.0;
+        assert!(!heavier.dominates());
+    }
+
+    #[test]
     fn rows_render_as_json_objects() {
-        let row = LeaderboardRow {
-            kind: "h2o",
-            policy: "h2o:0.5".into(),
-            suite: "ruler",
-            accuracy: 0.5,
-            nll: 1.25,
-            compression: 0.4,
-            prefill_us: 100.0,
-            decode_us: 200.0,
-            scoring_us: 3.5,
-        };
-        let j = crate::util::json::Json::parse(&render_row(&row)).unwrap();
+        let mut r = row("h2o:0.5", "ruler", 0.5, 4096.0, 12.0);
+        r.kind = "h2o";
+        r.nll = 1.25;
+        r.compression = 0.4;
+        r.scoring_us = 3.5;
+        let j = crate::util::json::Json::parse(&render_row(&r)).unwrap();
         assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("h2o"));
         assert_eq!(j.get("accuracy").and_then(|v| v.as_f64()), Some(0.5));
+        assert_eq!(j.get("kv_bytes").and_then(|v| v.as_f64()), Some(4096.0));
+        assert_eq!(j.get("demoted").and_then(|v| v.as_f64()), Some(12.0));
         assert_eq!(j.get("scoring_us").and_then(|v| v.as_f64()), Some(3.5));
     }
 }

@@ -14,9 +14,11 @@
 //!   metrics-demo                 quick built-in load test printing metrics
 //!   simulate [--seed S|A..B] [--steps K] [--clients N] [--max-batch B]
 //!            [--quick] [--no-solo] [--check-threads] [--threads T]
-//!            [--spec-file PATH] [--fault-step K]
+//!            [--spec-file PATH] [--fault-step K] [--tiered]
 //!                                deterministic multi-client scenario fuzzer
 //!                                with invariant checking (docs/TESTING.md);
+//!                                --tiered scripts demotion-heavy episodes
+//!                                (two-threshold policies only);
 //!                                exits non-zero when an invariant fires
 
 use std::sync::Arc;
@@ -118,9 +120,14 @@ fn simulate(args: &Args) -> Result<()> {
         fault,
         ..SimOptions::default()
     };
-    let fail = |f: Box<kvzap::simharness::SimFailure>| -> Result<()> {
+    let tiered = args.kv.contains_key("tiered");
+    let fail = move |f: Box<kvzap::simharness::SimFailure>| -> Result<()> {
         eprintln!("[kvzap simulate] INVARIANT VIOLATION: {}", f.violation);
-        eprintln!("[kvzap simulate] replay: {}", f.replay);
+        eprintln!(
+            "[kvzap simulate] replay: {}{}",
+            f.replay,
+            if tiered { " --tiered" } else { "" }
+        );
         let path = "SIM_FAILURE.json";
         std::fs::write(path, format!("{}\n", f.minimized_json))?;
         eprintln!(
@@ -170,7 +177,11 @@ fn simulate(args: &Args) -> Result<()> {
     }
     let check_threads = quick || args.kv.contains_key("check-threads");
     for &seed in &seeds {
-        let spec = ScenarioSpec::generate(seed, steps, clients, max_batch);
+        let spec = if tiered {
+            ScenarioSpec::generate_tiered(seed, steps, clients, max_batch)
+        } else {
+            ScenarioSpec::generate(seed, steps, clients, max_batch)
+        };
         match run_one(&spec, &opts) {
             Ok(s) => {
                 if opts.fault.is_some() && !s.fault_injected {

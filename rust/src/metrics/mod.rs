@@ -33,6 +33,16 @@ pub struct TransferCounters {
     pub bytes_down: AtomicU64,
     /// Resident decode-step executions.
     pub decode_steps: AtomicU64,
+    /// Demote ops into the quantized side tier (device-local: these move
+    /// no host↔device bytes, so they are counted apart from the bytes_*
+    /// totals; the bytes they *store* accrue in `tier_bytes_stored`).
+    pub demotes: AtomicU64,
+    /// Rehydrate ops out of the quantized side tier (device-local).
+    pub rehydrates: AtomicU64,
+    /// Cumulative quantized bytes written into side pools by demote ops.
+    pub tier_bytes_stored: AtomicU64,
+    /// Cumulative quantized bytes freed by rehydrate/drop ops.
+    pub tier_bytes_freed: AtomicU64,
 }
 
 impl TransferCounters {
@@ -54,6 +64,18 @@ impl TransferCounters {
         self.bytes_down.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Record one demote op storing `bytes` of quantized payload.
+    pub fn note_demote(&self, bytes: u64) {
+        self.demotes.fetch_add(1, Ordering::Relaxed);
+        self.tier_bytes_stored.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record one rehydrate (or drop) op freeing `bytes` of payload.
+    pub fn note_rehydrate(&self, bytes: u64) {
+        self.rehydrates.fetch_add(1, Ordering::Relaxed);
+        self.tier_bytes_freed.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
             kv_bytes_up: self.kv_bytes_up.load(Ordering::Relaxed),
@@ -62,6 +84,10 @@ impl TransferCounters {
             bytes_up: self.bytes_up.load(Ordering::Relaxed),
             bytes_down: self.bytes_down.load(Ordering::Relaxed),
             decode_steps: self.decode_steps.load(Ordering::Relaxed),
+            demotes: self.demotes.load(Ordering::Relaxed),
+            rehydrates: self.rehydrates.load(Ordering::Relaxed),
+            tier_bytes_stored: self.tier_bytes_stored.load(Ordering::Relaxed),
+            tier_bytes_freed: self.tier_bytes_freed.load(Ordering::Relaxed),
         }
     }
 }
@@ -76,6 +102,10 @@ pub struct TransferSnapshot {
     pub bytes_up: u64,
     pub bytes_down: u64,
     pub decode_steps: u64,
+    pub demotes: u64,
+    pub rehydrates: u64,
+    pub tier_bytes_stored: u64,
+    pub tier_bytes_freed: u64,
 }
 
 #[derive(Default)]

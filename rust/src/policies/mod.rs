@@ -120,6 +120,15 @@ pub trait PrunePolicy: Send + Sync {
         None
     }
 
+    /// Demotion floor τ_floor for the quantized side tier. When set,
+    /// positions whose score lands in `[floor, decode_threshold)` are
+    /// *demoted* (quantized into the side pool, rehydratable) instead of
+    /// dropped — only scores below the floor are truly evicted. `None`
+    /// (the default) disables the tier: pure drop-at-τ behaviour.
+    fn decode_floor(&self) -> Option<f32> {
+        None
+    }
+
     /// Whether the KVzip oracle double-pass must be run for this policy.
     fn needs_oracle(&self) -> bool {
         false
@@ -151,21 +160,33 @@ impl PrunePolicy for NoPress {
 pub struct KVzap {
     pub mlp: bool,
     pub tau: f32,
+    /// Demotion floor τ_floor ≤ τ: scores in `[floor, τ)` demote to the
+    /// quantized side tier instead of dropping. `None` = drop-only.
+    pub floor: Option<f32>,
     pub window: usize,
 }
 
 impl KVzap {
     pub fn linear(tau: f32, window: usize) -> Self {
-        KVzap { mlp: false, tau, window }
+        KVzap { mlp: false, tau, floor: None, window }
     }
     pub fn mlp(tau: f32, window: usize) -> Self {
-        KVzap { mlp: true, tau, window }
+        KVzap { mlp: true, tau, floor: None, window }
+    }
+    /// Set (or clear) the demotion floor — builder-style.
+    pub fn with_floor(mut self, floor: Option<f32>) -> Self {
+        self.floor = floor;
+        self
     }
 }
 
 impl PrunePolicy for KVzap {
     fn name(&self) -> String {
-        format!("kvzap_{}_tau{}", if self.mlp { "mlp" } else { "linear" }, self.tau)
+        let mut n = format!("kvzap_{}_tau{}", if self.mlp { "mlp" } else { "linear" }, self.tau);
+        if let Some(fl) = self.floor {
+            n.push_str(&format!("_floor{fl}"));
+        }
+        n
     }
 
     fn prefill_prune(&self, view: &PrefillView, prompt_len: usize, cache: &mut PagedKvCache) {
@@ -173,9 +194,26 @@ impl PrunePolicy for KVzap {
         for l in 0..cache.layers {
             for h in 0..cache.heads {
                 let scores = view.row(stat, l, h);
-                cache.retain(l, h, prompt_len, |p| {
-                    protected(p, prompt_len, self.window) || scores[p] >= self.tau
-                });
+                match self.floor {
+                    // drop-only: the original single-threshold retain path
+                    None => cache.retain(l, h, prompt_len, |p| {
+                        protected(p, prompt_len, self.window) || scores[p] >= self.tau
+                    }),
+                    // tiered: [floor, τ) demotes (falling back to evict
+                    // when the tier is disabled or the side pool is full),
+                    // below the floor drops outright
+                    Some(floor) => {
+                        for p in 0..prompt_len {
+                            if protected(p, prompt_len, self.window) || scores[p] >= self.tau {
+                                continue;
+                            }
+                            if scores[p] >= floor && cache.demote(l, h, p) {
+                                continue;
+                            }
+                            cache.evict(l, h, p);
+                        }
+                    }
+                }
             }
         }
     }
@@ -190,6 +228,10 @@ impl PrunePolicy for KVzap {
         } else {
             Stat::ScoreLin
         }
+    }
+
+    fn decode_floor(&self) -> Option<f32> {
+        self.floor
     }
 }
 

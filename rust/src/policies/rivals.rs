@@ -65,13 +65,21 @@ pub struct FastKvzip {
     pub tau: f32,
     /// Agreement threshold on the linear surrogate.
     pub gate_tau: f32,
+    /// Demotion floor τ_floor ≤ τ on the primary score: evictable pairs
+    /// with `mlp ∈ [floor, τ)` demote to the quantized side tier instead
+    /// of dropping. `None` = drop-only.
+    pub floor: Option<f32>,
     /// Sliding-window size (positions this recent are never evicted).
     pub window: usize,
 }
 
 impl PrunePolicy for FastKvzip {
     fn name(&self) -> String {
-        format!("fastkvzip_tau{}_gate{}", self.tau, self.gate_tau)
+        let mut n = format!("fastkvzip_tau{}_gate{}", self.tau, self.gate_tau);
+        if let Some(fl) = self.floor {
+            n.push_str(&format!("_floor{fl}"));
+        }
+        n
     }
 
     fn prefill_prune(&self, view: &PrefillView, prompt_len: usize, cache: &mut PagedKvCache) {
@@ -79,11 +87,27 @@ impl PrunePolicy for FastKvzip {
             for h in 0..cache.heads {
                 let mlp = view.row(Stat::ScoreMlp, l, h);
                 let lin = view.row(Stat::ScoreLin, l, h);
-                cache.retain(l, h, prompt_len, |p| {
-                    protected(p, prompt_len, self.window)
-                        || mlp[p] >= self.tau
-                        || lin[p] >= self.gate_tau
-                });
+                match self.floor {
+                    None => cache.retain(l, h, prompt_len, |p| {
+                        protected(p, prompt_len, self.window)
+                            || mlp[p] >= self.tau
+                            || lin[p] >= self.gate_tau
+                    }),
+                    Some(floor) => {
+                        for p in 0..prompt_len {
+                            if protected(p, prompt_len, self.window)
+                                || mlp[p] >= self.tau
+                                || lin[p] >= self.gate_tau
+                            {
+                                continue;
+                            }
+                            if mlp[p] >= floor && cache.demote(l, h, p) {
+                                continue;
+                            }
+                            cache.evict(l, h, p);
+                        }
+                    }
+                }
             }
         }
     }
@@ -98,6 +122,10 @@ impl PrunePolicy for FastKvzip {
 
     fn decode_gate(&self) -> Option<(Stat, f32)> {
         Some((Stat::ScoreLin, self.gate_tau))
+    }
+
+    fn decode_floor(&self) -> Option<f32> {
+        self.floor
     }
 }
 
@@ -140,14 +168,16 @@ mod tests {
         cache.fill(48);
         // mlp = p, lin = 63 - p: with tau = 30 and gate = 30, eviction
         // needs p < 30 && 63 - p < 30, i.e. 33 < p < 30 — impossible.
-        FastKvzip { tau: 30.0, gate_tau: 30.0, window: 4 }.prefill_prune(&view, 48, &mut cache);
+        FastKvzip { tau: 30.0, gate_tau: 30.0, floor: None, window: 4 }
+            .prefill_prune(&view, 48, &mut cache);
         for p in 0..48 {
             assert!(cache.is_kept(0, 0, p), "pos {p} wrongly evicted");
         }
         // raise the gate so the low-mlp prefix loses its second vote
         let mut cache = PagedKvCache::new(1, 1, 64);
         cache.fill(48);
-        FastKvzip { tau: 30.0, gate_tau: 1000.0, window: 4 }.prefill_prune(&view, 48, &mut cache);
+        FastKvzip { tau: 30.0, gate_tau: 1000.0, floor: None, window: 4 }
+            .prefill_prune(&view, 48, &mut cache);
         assert!(!cache.is_kept(0, 0, 10)); // mlp 10 < 30, lin 53 < 1000
         assert!(cache.is_kept(0, 0, 35)); // mlp 35 >= 30
         assert!(cache.is_kept(0, 0, 46)); // window-protected

@@ -53,20 +53,52 @@ impl ScoreBuffer {
         tau: f32,
         cache: &mut PagedKvCache,
     ) -> usize {
+        self.push_and_evict_tiered(pos, scores, tau, None, cache).0
+    }
+
+    /// [`Self::push_and_evict`] with a demotion floor: an exiting position
+    /// whose score lands in `[floor, tau)` is *demoted* into the cache's
+    /// quantized side tier (when the cache accepts it — tier enabled and
+    /// side pool not exhausted; otherwise it falls back to eviction)
+    /// instead of dropped. Only scores below the floor drop outright.
+    ///
+    /// Returns `(evicted, demoted)` where `demoted` lists
+    /// `(l, h, pos, score)` for every kept -> demoted transition, so the
+    /// engine can mirror each one (score bookkeeping for rehydration, host
+    /// snapshot round-trip, backend `kv_demote`).
+    pub fn push_and_evict_tiered(
+        &mut self,
+        pos: usize,
+        scores: Vec<f32>,
+        tau: f32,
+        floor: Option<f32>,
+        cache: &mut PagedKvCache,
+    ) -> (usize, Vec<(usize, usize, usize, f32)>) {
         debug_assert_eq!(scores.len(), self.layers * self.heads);
         self.ring.push_back((pos, scores));
         let mut evicted = 0;
+        let mut demoted = vec![];
         while self.ring.len() > self.window {
             let (old_pos, old_scores) = self.ring.pop_front().unwrap();
             for l in 0..self.layers {
                 for h in 0..self.heads {
-                    if old_scores[l * self.heads + h] < tau && cache.evict(l, h, old_pos) {
+                    let s = old_scores[l * self.heads + h];
+                    if s >= tau {
+                        continue;
+                    }
+                    if let Some(fl) = floor {
+                        if s >= fl && cache.demote(l, h, old_pos) {
+                            demoted.push((l, h, old_pos, s));
+                            continue;
+                        }
+                    }
+                    if cache.evict(l, h, old_pos) {
                         evicted += 1;
                     }
                 }
             }
         }
-        evicted
+        (evicted, demoted)
     }
 
     pub fn len(&self) -> usize {
@@ -141,6 +173,36 @@ mod tests {
         let n = buf.push_and_evict(11, vec![1.0], -5.0, &mut cache);
         assert_eq!(n, 1);
         assert!(!cache.is_kept(0, 0, 7));
+    }
+
+    /// Tiered window exit sorts each expelled position into its tier:
+    /// below the floor drops, `[floor, τ)` demotes, `>= τ` stays kept.
+    #[test]
+    fn tiered_window_exit_splits_drop_demote_keep() {
+        use crate::kvcache::TierConfig;
+        use crate::runtime::kernels::QuantBits;
+        let tier = TierConfig { d_head: 8, bits: QuantBits::Int8, group: 8 };
+        let mut cache = PagedKvCache::new_tiered(1, 1, 64, tier);
+        cache.fill(4);
+        let (tau, floor) = (-4.0, Some(-8.0));
+        let mut buf = ScoreBuffer::new(1, 1, 1);
+        // window 1: each push expels the previous position's decision
+        let (e, d) = buf.push_and_evict_tiered(0, vec![-10.0], tau, floor, &mut cache);
+        assert_eq!((e, d.len()), (0, 0), "first entry still inside the window");
+        // expels pos 0 (score -10, below the floor) -> dropped
+        let (e, d) = buf.push_and_evict_tiered(1, vec![-6.0], tau, floor, &mut cache);
+        assert_eq!((e, d.len()), (1, 0));
+        // expels pos 1 (score -6, inside [floor, tau)) -> demoted
+        let (e, d) = buf.push_and_evict_tiered(2, vec![-2.0], tau, floor, &mut cache);
+        assert_eq!((e, d.len()), (0, 1));
+        assert_eq!(d[0], (0, 0, 1, -6.0));
+        // expels pos 2 (score -2 >= tau) -> kept
+        let (e, d) = buf.push_and_evict_tiered(3, vec![1.0], tau, floor, &mut cache);
+        assert_eq!((e, d.len()), (0, 0));
+        assert!(!cache.is_kept(0, 0, 0) && !cache.is_demoted(0, 0, 0));
+        assert!(cache.is_demoted(0, 0, 1) && !cache.is_kept(0, 0, 1));
+        assert!(cache.is_kept(0, 0, 2) && cache.is_kept(0, 0, 3));
+        cache.accounting_ok().unwrap();
     }
 
     #[test]

@@ -5,7 +5,19 @@
 //! plumbing: clients (CLI flags, server requests, bench sweeps) either
 //! parse the compact string form (`"kvzap_mlp:-4"`) or send a structured
 //! JSON object (`{"kind": "kvzap", "surrogate": "mlp", "tau": -4.0}`), and
-//! everything downstream carries the typed value. The spec round-trips
+//! everything downstream carries the typed value.
+//!
+//! Threshold policies (`kvzap_*`, `fastkvzip`) additionally accept a
+//! **two-threshold** form for the tiered demotion path: a trailing
+//! `:floor=<value>` segment (string form) or a `"floor"` field (JSON)
+//! sets τ_floor ≤ τ — scores in `[floor, τ)` are demoted into the
+//! quantized side tier instead of dropped, and only scores below the
+//! floor are truly evicted. Threshold positions also accept `qNN`
+//! quantile sugar over the reference surrogate score distribution
+//! (`kvzap_mlp:q50:floor=q90`): in the τ position `qNN` is the NN-th
+//! score quantile; in the floor position it spares the top NN% of the
+//! sub-τ mass, i.e. resolves to the (100−NN)-th quantile. `qNN` is
+//! input-only sugar — canonical forms always carry resolved floats. The spec round-trips
 //! through [`PolicySpec::parse`] / `Display` and through
 //! [`PolicySpec::to_json`] / [`PolicySpec::from_json`], and
 //! [`PolicySpec::build`] instantiates the runnable [`PrunePolicy`].
@@ -75,13 +87,44 @@ pub const DEFAULT_SINKS: usize = 4;
 /// Default Keyformer mix weight (max-attn share of the key-token score).
 pub const DEFAULT_MIX: f64 = 0.5;
 
+/// Deciles of the reference surrogate score distribution (log s+ units),
+/// backing the `qNN` threshold sugar. Pinned as a static table — the
+/// reference model's weights are deterministic, so these are stable wire
+/// constants, not a per-run calibration.
+pub const SCORE_QUANTILES: &[(&str, f64)] = &[
+    ("q10", -10.0),
+    ("q20", -9.0),
+    ("q30", -8.0),
+    ("q40", -7.0),
+    ("q50", -6.0),
+    ("q60", -5.0),
+    ("q70", -4.0),
+    ("q80", -3.0),
+    ("q90", -2.0),
+];
+
+/// Resolve `qNN` sugar in a τ position: the NN-th score quantile.
+fn quantile(tag: &str) -> Option<f64> {
+    SCORE_QUANTILES.iter().find(|(t, _)| *t == tag).map(|&(_, v)| v)
+}
+
+/// Resolve `qNN` sugar in a floor position: `floor=qNN` spares the top
+/// NN% of the sub-τ score mass, so it resolves to the (100−NN)-th
+/// quantile (`floor=q90` → the q10 value, a *low* floor sparing most).
+fn complement_quantile(tag: &str) -> Option<f64> {
+    let i = SCORE_QUANTILES.iter().position(|(t, _)| *t == tag)?;
+    Some(SCORE_QUANTILES[SCORE_QUANTILES.len() - 1 - i].1)
+}
+
 /// A fully-specified pruning policy configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub enum PolicySpec {
     /// Keep the full KV cache (no pruning).
     Full,
     /// KVzap thresholding (paper §3.3): evict below τ, decode-capable.
-    Kvzap { surrogate: Surrogate, tau: f64 },
+    /// With `floor` set, scores in `[floor, τ)` demote to the quantized
+    /// side tier instead of dropping (two-threshold tiered form).
+    Kvzap { surrogate: Surrogate, tau: f64, floor: Option<f64> },
     /// Fixed-ratio top-k on the KVzap surrogate (Fig. 5 right ablation).
     KvzapTopk { surrogate: Surrogate, keep_frac: f64, per_layer: bool },
     /// KVzip oracle (double-pass) budget policy; `plus` uses s+.
@@ -108,7 +151,8 @@ pub enum PolicySpec {
     Keyformer { keep_frac: f64, mix: f64 },
     /// Fast-KVzip: gated thresholding — eviction needs the MLP score
     /// below `tau` *and* the linear score below `gate_tau`; decode-capable.
-    FastKvzip { tau: f64, gate_tau: f64 },
+    /// `floor` enables the same tiered demotion band as [`Self::Kvzap`].
+    FastKvzip { tau: f64, gate_tau: f64, floor: Option<f64> },
     /// Expected attention rescaled by value norm, per-head budget.
     ExpectedAttnVnorm { keep_frac: f64 },
 }
@@ -139,11 +183,27 @@ impl PolicySpec {
     /// Parse the compact string form, e.g. `"kvzap_mlp:-4"`, `"h2o:0.5"`,
     /// `"full"`. Parameters after `:` are τ for threshold policies and the
     /// keep-fraction for budget policies; `streaming_llm` and `random`
-    /// accept a second parameter (sinks / seed).
+    /// accept a second parameter (sinks / seed). Threshold policies accept
+    /// a trailing `:floor=<raw|qNN>` segment and `qNN` quantile sugar in τ
+    /// positions (`"kvzap_mlp:q50:floor=q90"`) — see the module docs.
     pub fn parse(spec: &str) -> Result<PolicySpec> {
         let mut it = spec.split(':');
         let name = it.next().unwrap_or("");
-        let params: Vec<&str> = it.collect();
+        let mut params: Vec<&str> = it.collect();
+        // the two-threshold floor rides as a named trailing segment so the
+        // positional parameters keep their one-threshold meaning
+        let mut floor_seg: Option<&str> = None;
+        if let Some(rest) = params.last().and_then(|s| s.strip_prefix("floor=")) {
+            floor_seg = Some(rest);
+            params.pop();
+        }
+        if floor_seg.is_some()
+            && !matches!(name, "kvzap_mlp" | "kvzap_linear" | "fastkvzip")
+        {
+            return Err(anyhow!(
+                "policy '{name}' does not take a ':floor=' parameter (threshold policies only)"
+            ));
+        }
         let num = |i: usize, default: f64| -> Result<f64> {
             match params.get(i) {
                 None => Ok(default),
@@ -166,6 +226,12 @@ impl PolicySpec {
             check_keep_frac(name, v)?;
             Ok(v)
         };
+        let tau_at = |i: usize, default: f64| -> Result<f64> {
+            match params.get(i) {
+                None => Ok(default),
+                Some(s) => tau_param(name, s),
+            }
+        };
         let spec = match name {
             "full" => {
                 max_params(0)?;
@@ -173,9 +239,11 @@ impl PolicySpec {
             }
             "kvzap_mlp" | "kvzap_linear" => {
                 max_params(1)?;
+                let tau = tau_at(0, DEFAULT_TAU)?;
                 PolicySpec::Kvzap {
                     surrogate: surrogate_of(name),
-                    tau: num(0, DEFAULT_TAU)?,
+                    tau,
+                    floor: floor_seg.map(|s| floor_param(name, s, tau)).transpose()?,
                 }
             }
             "kvzap_mlp_topk" | "kvzap_linear_topk" => {
@@ -253,9 +321,13 @@ impl PolicySpec {
             }
             "fastkvzip" => {
                 max_params(2)?;
-                let tau = num(0, DEFAULT_TAU)?;
-                // the agreement gate follows τ unless set explicitly
-                PolicySpec::FastKvzip { tau, gate_tau: num(1, tau)? }
+                let tau = tau_at(0, DEFAULT_TAU)?;
+                PolicySpec::FastKvzip {
+                    tau,
+                    // the agreement gate follows τ unless set explicitly
+                    gate_tau: tau_at(1, tau)?,
+                    floor: floor_seg.map(|s| floor_param(name, s, tau)).transpose()?,
+                }
             }
             "expected_attn_vnorm" => {
                 max_params(1)?;
@@ -300,9 +372,40 @@ impl PolicySpec {
                 ),
             }
         };
+        // τ-like fields accept a number or "qNN" quantile-sugar string
+        let thresh = |key: &str, default: f64| -> Result<f64> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(v) => match v.as_str() {
+                    Some(tag) => tau_param(kind, tag),
+                    None => v.as_f64().filter(|x| x.is_finite()).ok_or_else(|| {
+                        anyhow!("policy '{kind}': field '{key}' must be a number or q10..q90")
+                    }),
+                },
+            }
+        };
+        let floor_field = |tau: f64| -> Result<Option<f64>> {
+            match obj.get("floor") {
+                None => Ok(None),
+                Some(v) => match v.as_str() {
+                    Some(tag) => floor_param(kind, tag, tau).map(Some),
+                    None => {
+                        let f = v.as_f64().filter(|x| x.is_finite()).ok_or_else(|| {
+                            anyhow!(
+                                "policy '{kind}': field 'floor' must be a number or q10..q90"
+                            )
+                        })?;
+                        check_floor(kind, f, tau).map(Some)
+                    }
+                },
+            }
+        };
         let spec = match kind {
             "full" => PolicySpec::Full,
-            "kvzap" => PolicySpec::Kvzap { surrogate: surrogate()?, tau: num("tau", DEFAULT_TAU)? },
+            "kvzap" => {
+                let tau = thresh("tau", DEFAULT_TAU)?;
+                PolicySpec::Kvzap { surrogate: surrogate()?, tau, floor: floor_field(tau)? }
+            }
             "kvzap_topk" => PolicySpec::KvzapTopk {
                 surrogate: surrogate()?,
                 keep_frac: keep("keep_frac")?,
@@ -332,8 +435,12 @@ impl PolicySpec {
                 mix: check_mix(kind, num("mix", DEFAULT_MIX)?)?,
             },
             "fastkvzip" => {
-                let tau = num("tau", DEFAULT_TAU)?;
-                PolicySpec::FastKvzip { tau, gate_tau: num("gate_tau", tau)? }
+                let tau = thresh("tau", DEFAULT_TAU)?;
+                PolicySpec::FastKvzip {
+                    tau,
+                    gate_tau: thresh("gate_tau", tau)?,
+                    floor: floor_field(tau)?,
+                }
             }
             "expected_attn_vnorm" => {
                 PolicySpec::ExpectedAttnVnorm { keep_frac: keep("keep_frac")? }
@@ -348,11 +455,17 @@ impl PolicySpec {
         let kind = Json::str(self.kind());
         match *self {
             PolicySpec::Full => Json::obj(vec![("kind", kind)]),
-            PolicySpec::Kvzap { surrogate, tau } => Json::obj(vec![
-                ("kind", kind),
-                ("surrogate", Json::str(surrogate.as_str())),
-                ("tau", Json::num(tau)),
-            ]),
+            PolicySpec::Kvzap { surrogate, tau, floor } => {
+                let mut fields = vec![
+                    ("kind", kind),
+                    ("surrogate", Json::str(surrogate.as_str())),
+                    ("tau", Json::num(tau)),
+                ];
+                if let Some(f) = floor {
+                    fields.push(("floor", Json::num(f)));
+                }
+                Json::obj(fields)
+            }
             PolicySpec::KvzapTopk { surrogate, keep_frac, per_layer } => Json::obj(vec![
                 ("kind", kind),
                 ("surrogate", Json::str(surrogate.as_str())),
@@ -379,11 +492,14 @@ impl PolicySpec {
                 ("keep_frac", Json::num(keep_frac)),
                 ("mix", Json::num(mix)),
             ]),
-            PolicySpec::FastKvzip { tau, gate_tau } => Json::obj(vec![
-                ("kind", kind),
-                ("tau", Json::num(tau)),
-                ("gate_tau", Json::num(gate_tau)),
-            ]),
+            PolicySpec::FastKvzip { tau, gate_tau, floor } => {
+                let mut fields =
+                    vec![("kind", kind), ("tau", Json::num(tau)), ("gate_tau", Json::num(gate_tau))];
+                if let Some(f) = floor {
+                    fields.push(("floor", Json::num(f)));
+                }
+                Json::obj(fields)
+            }
             PolicySpec::StreamingLlm { keep_frac, sinks } => Json::obj(vec![
                 ("kind", kind),
                 ("keep_frac", Json::num(keep_frac)),
@@ -402,10 +518,13 @@ impl PolicySpec {
     pub fn build(&self, window: usize) -> Box<dyn PrunePolicy> {
         match *self {
             PolicySpec::Full => Box::new(NoPress),
-            PolicySpec::Kvzap { surrogate, tau } => Box::new(match surrogate {
-                Surrogate::Mlp => KVzap::mlp(tau as f32, window),
-                Surrogate::Linear => KVzap::linear(tau as f32, window),
-            }),
+            PolicySpec::Kvzap { surrogate, tau, floor } => Box::new(
+                match surrogate {
+                    Surrogate::Mlp => KVzap::mlp(tau as f32, window),
+                    Surrogate::Linear => KVzap::linear(tau as f32, window),
+                }
+                .with_floor(floor.map(|f| f as f32)),
+            ),
             PolicySpec::KvzapTopk { surrogate, keep_frac, per_layer } => Box::new(kvzap_topk(
                 matches!(surrogate, Surrogate::Mlp),
                 keep_frac,
@@ -437,9 +556,12 @@ impl PolicySpec {
             PolicySpec::Keyformer { keep_frac, mix } => {
                 Box::new(keyformer(keep_frac, mix, window))
             }
-            PolicySpec::FastKvzip { tau, gate_tau } => {
-                Box::new(FastKvzip { tau: tau as f32, gate_tau: gate_tau as f32, window })
-            }
+            PolicySpec::FastKvzip { tau, gate_tau, floor } => Box::new(FastKvzip {
+                tau: tau as f32,
+                gate_tau: gate_tau as f32,
+                floor: floor.map(|f| f as f32),
+                window,
+            }),
             PolicySpec::ExpectedAttnVnorm { keep_frac } => {
                 Box::new(expected_attention_vnorm(keep_frac, window))
             }
@@ -452,6 +574,41 @@ fn surrogate_of(name: &str) -> Surrogate {
         Surrogate::Mlp
     } else {
         Surrogate::Linear
+    }
+}
+
+/// A τ-position threshold: a finite float or `qNN` quantile sugar.
+fn tau_param(name: &str, s: &str) -> Result<f64> {
+    if let Some(v) = quantile(s) {
+        return Ok(v);
+    }
+    s.parse::<f64>().ok().filter(|v| v.is_finite()).ok_or_else(|| {
+        anyhow!("policy '{name}': bad threshold '{s}' (expected a finite number or q10..q90)")
+    })
+}
+
+/// A floor-position threshold: a finite float, or `qNN` sugar resolving
+/// to the complementary quantile. Must land at or below τ.
+fn floor_param(name: &str, s: &str, tau: f64) -> Result<f64> {
+    let v = if s.starts_with('q') {
+        complement_quantile(s).ok_or_else(|| {
+            anyhow!("policy '{name}': bad floor quantile '{s}' (expected q10..q90)")
+        })?
+    } else {
+        s.parse::<f64>().ok().filter(|v| v.is_finite()).ok_or_else(|| {
+            anyhow!("policy '{name}': bad floor '{s}' (expected a finite number or q10..q90)")
+        })?
+    };
+    check_floor(name, v, tau)
+}
+
+/// The demotion floor must sit at or below τ — a floor above τ would
+/// claim to demote positions the τ test already keeps.
+fn check_floor(name: &str, floor: f64, tau: f64) -> Result<f64> {
+    if floor <= tau {
+        Ok(floor)
+    } else {
+        Err(anyhow!("policy '{name}': floor {floor} above tau {tau} (need floor <= tau)"))
     }
 }
 
@@ -489,8 +646,12 @@ impl fmt::Display for PolicySpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match *self {
             PolicySpec::Full => write!(f, "full"),
-            PolicySpec::Kvzap { surrogate, tau } => {
-                write!(f, "kvzap_{}:{}", surrogate.as_str(), tau)
+            PolicySpec::Kvzap { surrogate, tau, floor } => {
+                write!(f, "kvzap_{}:{}", surrogate.as_str(), tau)?;
+                if let Some(fl) = floor {
+                    write!(f, ":floor={fl}")?;
+                }
+                Ok(())
             }
             PolicySpec::KvzapTopk { surrogate, keep_frac, per_layer } => write!(
                 f,
@@ -530,12 +691,16 @@ impl fmt::Display for PolicySpec {
                     write!(f, "keyformer:{keep_frac}:{mix}")
                 }
             }
-            PolicySpec::FastKvzip { tau, gate_tau } => {
+            PolicySpec::FastKvzip { tau, gate_tau, floor } => {
                 if gate_tau == tau {
-                    write!(f, "fastkvzip:{tau}")
+                    write!(f, "fastkvzip:{tau}")?;
                 } else {
-                    write!(f, "fastkvzip:{tau}:{gate_tau}")
+                    write!(f, "fastkvzip:{tau}:{gate_tau}")?;
                 }
+                if let Some(fl) = floor {
+                    write!(f, ":floor={fl}")?;
+                }
+                Ok(())
             }
             PolicySpec::ExpectedAttnVnorm { keep_frac } => {
                 write!(f, "expected_attn_vnorm:{keep_frac}")
@@ -593,6 +758,12 @@ const P_GATE: PolicyParam = PolicyParam {
     default: DEFAULT_TAU, // when omitted it follows tau
     doc: "linear-surrogate agreement threshold (defaults to tau)",
 };
+const P_FLOOR: PolicyParam = PolicyParam {
+    name: "floor",
+    // when omitted the demote band is empty — equivalent to floor == tau
+    default: DEFAULT_TAU,
+    doc: "demotion floor <= tau: scores in [floor, tau) quantize to the side tier instead of dropping",
+};
 
 /// Every policy kind the stack understands, with parameters and defaults.
 pub const CATALOG: &[PolicyInfo] = &[
@@ -605,14 +776,16 @@ pub const CATALOG: &[PolicyInfo] = &[
     PolicyInfo {
         kind: "kvzap",
         string_forms: &["kvzap_mlp", "kvzap_linear"],
-        params: &[P_TAU],
-        doc: "KVzap thresholding (surrogate: mlp|linear); prunes during decode",
+        params: &[P_TAU, P_FLOOR],
+        doc: "KVzap thresholding (surrogate: mlp|linear); prunes during decode; \
+              ':floor=' enables the tiered demotion band",
     },
     PolicyInfo {
         kind: "fastkvzip",
         string_forms: &["fastkvzip"],
-        params: &[P_TAU, P_GATE],
-        doc: "Fast-KVzip rival: gated thresholding (mlp AND linear agree); prunes during decode",
+        params: &[P_TAU, P_GATE, P_FLOOR],
+        doc: "Fast-KVzip rival: gated thresholding (mlp AND linear agree); prunes during decode; \
+              ':floor=' enables the tiered demotion band",
     },
     PolicyInfo {
         kind: "kvzap_topk",
@@ -740,8 +913,10 @@ mod tests {
     fn sample_specs() -> Vec<PolicySpec> {
         vec![
             PolicySpec::Full,
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0 },
-            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -6.5 },
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: None },
+            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -6.5, floor: None },
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: Some(-9.0) },
+            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -2.0, floor: Some(-2.0) },
             PolicySpec::KvzapTopk {
                 surrogate: Surrogate::Mlp,
                 keep_frac: 0.5,
@@ -767,8 +942,10 @@ mod tests {
             PolicySpec::Random { keep_frac: 0.5, seed: 7 },
             PolicySpec::Keyformer { keep_frac: 0.5, mix: DEFAULT_MIX },
             PolicySpec::Keyformer { keep_frac: 0.25, mix: 1.0 },
-            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0 },
-            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -7.5 },
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0, floor: None },
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -7.5, floor: None },
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0, floor: Some(-10.0) },
+            PolicySpec::FastKvzip { tau: -3.0, gate_tau: -5.0, floor: Some(-8.5) },
             PolicySpec::ExpectedAttnVnorm { keep_frac: 0.35 },
         ]
     }
@@ -797,7 +974,81 @@ mod tests {
     #[test]
     fn json_string_form_accepted() {
         let spec = PolicySpec::from_json(&Json::str("kvzap_mlp:-4")).unwrap();
-        assert_eq!(spec, PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0 });
+        assert_eq!(spec, PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: None });
+    }
+
+    #[test]
+    fn two_threshold_and_quantile_sugar_parse() {
+        // qNN in the τ position is a direct decile lookup
+        assert_eq!(
+            PolicySpec::parse("kvzap_mlp:q50").unwrap(),
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -6.0, floor: None }
+        );
+        // floor=qNN spares the top NN% of sub-τ mass → complementary decile
+        assert_eq!(
+            PolicySpec::parse("kvzap_mlp:q50:floor=q90").unwrap(),
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -6.0, floor: Some(-10.0) }
+        );
+        // raw floats work in both positions
+        assert_eq!(
+            PolicySpec::parse("kvzap_linear:-4:floor=-9").unwrap(),
+            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -4.0, floor: Some(-9.0) }
+        );
+        // fastkvzip: floor rides after the optional gate, and the bare
+        // floor form leaves τ at its default
+        assert_eq!(
+            PolicySpec::parse("fastkvzip:-4:-5:floor=q80").unwrap(),
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -5.0, floor: Some(-9.0) }
+        );
+        assert_eq!(
+            PolicySpec::parse("kvzap_mlp:floor=q90").unwrap(),
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU, floor: Some(-10.0) }
+        );
+    }
+
+    #[test]
+    fn two_threshold_json_forms() {
+        let j = Json::parse(r#"{"kind": "kvzap", "tau": -4.0, "floor": -9.0}"#).unwrap();
+        assert_eq!(
+            PolicySpec::from_json(&j).unwrap(),
+            PolicySpec::parse("kvzap_mlp:-4:floor=-9").unwrap()
+        );
+        // quantile sugar as JSON strings, both fields
+        let j = Json::parse(r#"{"kind": "kvzap", "tau": "q50", "floor": "q90"}"#).unwrap();
+        assert_eq!(
+            PolicySpec::from_json(&j).unwrap(),
+            PolicySpec::parse("kvzap_mlp:q50:floor=q90").unwrap()
+        );
+        let j = Json::parse(r#"{"kind": "fastkvzip", "tau": -4.0, "floor": "q80"}"#).unwrap();
+        assert_eq!(
+            PolicySpec::from_json(&j).unwrap(),
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0, floor: Some(-9.0) }
+        );
+    }
+
+    #[test]
+    fn two_threshold_rejects_bad_forms() {
+        for bad in [
+            "kvzap_mlp:-8:floor=-4",   // floor above τ
+            "kvzap_mlp:-4:floor=q00",  // unknown quantile tag
+            "kvzap_mlp:q55",           // unknown quantile tag in τ position
+            "kvzap_mlp:-4:floor=nan",  // non-finite floor
+            "kvzap_mlp:-4:floor=",     // empty floor
+            "h2o:0.5:floor=-4",        // budget policies take no floor
+            "full:floor=-4",           // no-op policy takes no floor
+            "kvzap_mlp:floor=-2:-8",   // floor must be the trailing segment
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+        for bad in [
+            r#"{"kind": "kvzap", "tau": -8.0, "floor": -4.0}"#,
+            r#"{"kind": "kvzap", "floor": "q5"}"#,
+            r#"{"kind": "kvzap", "floor": "x"}"#,
+            r#"{"kind": "fastkvzip", "tau": "q99"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(PolicySpec::from_json(&j).is_err(), "'{bad}' must be rejected");
+        }
     }
 
     #[test]
@@ -822,12 +1073,12 @@ mod tests {
     fn defaults_applied() {
         assert_eq!(
             PolicySpec::parse("kvzap_mlp").unwrap(),
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU }
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU, floor: None }
         );
         let j = Json::parse(r#"{"kind": "kvzap"}"#).unwrap();
         assert_eq!(
             PolicySpec::from_json(&j).unwrap(),
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU }
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU, floor: None }
         );
         assert_eq!(
             PolicySpec::parse("streaming_llm").unwrap(),

@@ -52,6 +52,7 @@
 
 use anyhow::{anyhow, Result};
 
+use super::kernels::QuantBits;
 use super::manifest::ArtifactMeta;
 use super::tensor::Tensor;
 
@@ -234,4 +235,59 @@ pub trait Backend: Send + Sync {
         pos: &[i32],
         h: &KvHandle,
     ) -> Result<Vec<Buffer>>;
+
+    // ---- demoted (quantized) KV tier -------------------------------------
+
+    /// Demote position `pos` of `(l, head)` in `slot` into the backend's
+    /// quantized side pool: the resident `[D]` K/V rows are encoded
+    /// groupwise (`bits` codes, `group` channels per scale/zero pair —
+    /// see `runtime::kernels::quantize_row`) and the resident rows are
+    /// replaced by their lossy round-trip, so a later
+    /// [`Backend::kv_rehydrate`] (or a host-side re-scatter of a
+    /// round-tripped snapshot) reproduces the same values bit-for-bit.
+    /// Both ops are device-local: no host↔device bytes move. Returns the
+    /// side-pool bytes the entry occupies. Backends without a quantized
+    /// tier report an error (the engine only demotes when the policy asks
+    /// for it, so drop-only serving works everywhere).
+    fn kv_demote(
+        &self,
+        _h: &KvHandle,
+        _slot: usize,
+        _l: usize,
+        _head: usize,
+        _pos: usize,
+        _bits: QuantBits,
+        _group: usize,
+    ) -> Result<usize> {
+        Err(anyhow!("backend '{}' does not support the demoted KV tier", self.name()))
+    }
+
+    /// Rehydrate a previously demoted entry: decode the side-pool payload
+    /// back into the resident K/V rows at `(l, head, pos)` of `slot` and
+    /// drop the side-pool entry. Returns the side-pool bytes freed.
+    fn kv_rehydrate(
+        &self,
+        _h: &KvHandle,
+        _slot: usize,
+        _l: usize,
+        _head: usize,
+        _pos: usize,
+    ) -> Result<usize> {
+        Err(anyhow!("backend '{}' does not support the demoted KV tier", self.name()))
+    }
+
+    /// Drop a demoted entry without rehydrating it (sequence left the
+    /// group or the entry fell below the hard floor). Unknown entries are
+    /// a no-op so slot-reuse cleanup can be unconditional. Returns the
+    /// side-pool bytes freed (0 if absent).
+    fn kv_drop_demoted(
+        &self,
+        _h: &KvHandle,
+        _slot: usize,
+        _l: usize,
+        _head: usize,
+        _pos: usize,
+    ) -> Result<usize> {
+        Ok(0)
+    }
 }

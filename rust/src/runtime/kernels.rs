@@ -151,6 +151,176 @@ pub fn fast_exp(x: f32) -> f32 {
     y * f32::from_bits(((n as i32 + 127) << 23) as u32)
 }
 
+// ------------------------------------------------------------ quantization
+//
+// Lossy per-group affine quantization for the demoted KV tier (the
+// ROADMAP "demote, don't just drop" item). A demoted position's K and V
+// rows are stored as unsigned codes plus one (scale, zero) pair per
+// `group` contiguous channels: `x ≈ zero + scale * code`. The scalar
+// encoder below is the oracle; the backend op and the engine's host-
+// snapshot round-trip both call it, so a demote → rehydrate cycle is
+// bitwise reproducible everywhere the row is materialized.
+
+/// Code width for the demoted-tier payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantBits {
+    /// 8-bit codes, one byte per channel.
+    Int8,
+    /// 4-bit codes, two channels per byte (per-group byte-aligned).
+    Int4,
+}
+
+impl QuantBits {
+    /// Largest representable code (number of levels minus one).
+    pub fn max_code(self) -> u32 {
+        match self {
+            QuantBits::Int8 => 255,
+            QuantBits::Int4 => 15,
+        }
+    }
+
+    /// Packed bytes needed for `n` codes. Int4 packs two codes per byte
+    /// and pads the last byte, so groups stay byte-aligned.
+    pub fn code_bytes(self, n: usize) -> usize {
+        match self {
+            QuantBits::Int8 => n,
+            QuantBits::Int4 => n.div_ceil(2),
+        }
+    }
+
+    /// Wire/debug name (`int8` / `int4`).
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantBits::Int8 => "int8",
+            QuantBits::Int4 => "int4",
+        }
+    }
+}
+
+/// One quantized channel row (K or V of a single position in one head):
+/// packed codes plus per-group affine parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantRow {
+    /// Packed codes, groups byte-aligned in order.
+    pub codes: Vec<u8>,
+    /// Per-group scale (0.0 for constant groups).
+    pub scales: Vec<f32>,
+    /// Per-group zero point (the group minimum).
+    pub zeros: Vec<f32>,
+}
+
+/// Side-pool bytes one quantized row occupies: packed codes plus
+/// 8 bytes (f32 scale + f32 zero) per group. This is the unit the
+/// demoted-tier byte accounting charges (see `kvcache::TierConfig`).
+pub fn quant_row_bytes(d: usize, group: usize, bits: QuantBits) -> usize {
+    let g = group.max(1);
+    let mut bytes = 0;
+    let mut i = 0;
+    while i < d {
+        let n = g.min(d - i);
+        bytes += bits.code_bytes(n) + 8;
+        i += n;
+    }
+    bytes
+}
+
+/// Quantize one group of channels, appending packed codes to `codes`.
+/// Returns `(scale, zero)`. Constant (or empty) groups encode with
+/// scale 0 and reproduce exactly on dequantization.
+pub fn quantize_group(xs: &[f32], bits: QuantBits, codes: &mut Vec<u8>) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let levels = bits.max_code() as f32;
+    let mut scale = if hi > lo { (hi - lo) / levels } else { 0.0 };
+    if !scale.is_finite() {
+        scale = 0.0; // degenerate range: encode everything at the zero point
+    }
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    match bits {
+        QuantBits::Int8 => {
+            for &x in xs {
+                codes.push(((x - lo) * inv).round().clamp(0.0, levels) as u8);
+            }
+        }
+        QuantBits::Int4 => {
+            let mut pending: Option<u8> = None;
+            for &x in xs {
+                let q = ((x - lo) * inv).round().clamp(0.0, levels) as u8;
+                match pending.take() {
+                    None => pending = Some(q),
+                    Some(lo_nib) => codes.push(lo_nib | (q << 4)),
+                }
+            }
+            if let Some(lo_nib) = pending {
+                codes.push(lo_nib);
+            }
+        }
+    }
+    (scale, lo)
+}
+
+/// Decode one group previously packed by [`quantize_group`] into `out`.
+pub fn dequantize_group(packed: &[u8], bits: QuantBits, scale: f32, zero: f32, out: &mut [f32]) {
+    match bits {
+        QuantBits::Int8 => {
+            for (o, &c) in out.iter_mut().zip(packed.iter()) {
+                *o = zero + scale * c as f32;
+            }
+        }
+        QuantBits::Int4 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let byte = packed[i / 2];
+                let c = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                *o = zero + scale * c as f32;
+            }
+        }
+    }
+}
+
+/// Quantize a full channel row groupwise (the demoted-tier encoder).
+pub fn quantize_row(row: &[f32], group: usize, bits: QuantBits) -> QuantRow {
+    let g = group.max(1);
+    let n_groups = row.len().div_ceil(g).max(1);
+    let mut qr = QuantRow {
+        codes: Vec::with_capacity(bits.code_bytes(row.len()) + n_groups),
+        scales: Vec::with_capacity(n_groups),
+        zeros: Vec::with_capacity(n_groups),
+    };
+    for chunk in row.chunks(g) {
+        let (s, z) = quantize_group(chunk, bits, &mut qr.codes);
+        qr.scales.push(s);
+        qr.zeros.push(z);
+    }
+    qr
+}
+
+/// Decode a [`QuantRow`] into `out` (`out.len()` must match the encoded
+/// row length for the same `group`/`bits`).
+pub fn dequantize_row(qr: &QuantRow, group: usize, bits: QuantBits, out: &mut [f32]) {
+    let g = group.max(1);
+    let mut byte = 0;
+    for (gi, chunk) in out.chunks_mut(g).enumerate() {
+        let nb = bits.code_bytes(chunk.len());
+        dequantize_group(&qr.codes[byte..byte + nb], bits, qr.scales[gi], qr.zeros[gi], chunk);
+        byte += nb;
+    }
+}
+
+/// In-place lossy round-trip `x ← dequant(quant(x))`. The engine applies
+/// this to its host KV snapshot when a position is demoted so a later
+/// rejoin-scatter uploads exactly what a backend rehydrate would produce.
+pub fn quant_roundtrip(row: &mut [f32], group: usize, bits: QuantBits) {
+    let qr = quantize_row(row, group, bits);
+    dequantize_row(&qr, group, bits, row);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,5 +427,82 @@ mod tests {
         }
         assert!(worst < 5e-7, "max relative error {worst}");
         assert!(fast_exp(-200.0) >= 0.0 && fast_exp(-200.0) < 1e-37);
+    }
+
+    /// Property: groupwise quantization round-trips within half a step per
+    /// element (`|x - x̂| ≤ scale/2` plus float slack), for both widths,
+    /// over random rows / group sizes including non-divisible tails.
+    #[test]
+    fn quant_roundtrip_error_bounded() {
+        let mut rng = Rng::new(0x0_11A7);
+        for bits in [QuantBits::Int8, QuantBits::Int4] {
+            for case in 0..200 {
+                let d = 1 + rng.below(65) as usize;
+                let group = 1 + rng.below(17) as usize;
+                let row = rand_vec(&mut rng, d);
+                let qr = quantize_row(&row, group, bits);
+                assert_eq!(qr.codes.len(), {
+                    let mut n = 0;
+                    for c in row.chunks(group) {
+                        n += bits.code_bytes(c.len());
+                    }
+                    n
+                });
+                assert_eq!(quant_row_bytes(d, group, bits), qr.codes.len() + 8 * qr.scales.len());
+                let mut out = vec![0.0f32; d];
+                dequantize_row(&qr, group, bits, &mut out);
+                for (gi, chunk) in row.chunks(group).enumerate() {
+                    let bound = qr.scales[gi] * 0.5 + qr.scales[gi].abs() * 1e-5 + 1e-6;
+                    for (j, &x) in chunk.iter().enumerate() {
+                        let got = out[gi * group + j];
+                        assert!(
+                            (x - got).abs() <= bound,
+                            "{} case {case} d={d} g={group}: |{x} - {got}| > {bound}",
+                            bits.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Constant groups (scale 0) reproduce exactly, and int8 is never a
+    /// worse approximation than int4 on the same group.
+    #[test]
+    fn quant_constant_exact_and_width_monotone() {
+        let row = vec![-3.25f32; 12];
+        for bits in [QuantBits::Int8, QuantBits::Int4] {
+            let mut out = row.clone();
+            quant_roundtrip(&mut out, 8, bits);
+            assert_eq!(out, row, "{}: constant group must be exact", bits.name());
+        }
+        let mut rng = Rng::new(0x0_11A8);
+        for _ in 0..100 {
+            let row = rand_vec(&mut rng, 16);
+            let err = |bits: QuantBits| {
+                let mut out = row.clone();
+                quant_roundtrip(&mut out, 16, bits);
+                row.iter().zip(&out).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max)
+            };
+            assert!(err(QuantBits::Int8) <= err(QuantBits::Int4) + 1e-6);
+        }
+    }
+
+    /// The engine/backend contract: re-encoding an already round-tripped
+    /// row is (near-)stable — a second round-trip moves nothing by more
+    /// than float slack, so demote → rehydrate → demote cycles do not
+    /// drift the cache contents.
+    #[test]
+    fn quant_roundtrip_stable_under_reencoding() {
+        let mut rng = Rng::new(0x0_11A9);
+        for _ in 0..100 {
+            let mut row = rand_vec(&mut rng, 24);
+            quant_roundtrip(&mut row, 8, QuantBits::Int8);
+            let once = row.clone();
+            quant_roundtrip(&mut row, 8, QuantBits::Int8);
+            for (a, b) in once.iter().zip(&row) {
+                assert!((a - b).abs() <= (a.abs() + 1.0) * 1e-4, "{a} vs {b}");
+            }
+        }
     }
 }

@@ -220,6 +220,40 @@ impl Runtime {
         self.backend.kv_gather(h, slot, k, v)
     }
 
+    /// Demote `(l, head, pos)` of `slot` into the backend's quantized side
+    /// tier (see `Backend::kv_demote`). Device-local — no transfer bytes
+    /// are charged; the stored payload size rolls into the tier counters.
+    #[allow(clippy::too_many_arguments)]
+    pub fn kv_demote(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        l: usize,
+        head: usize,
+        pos: usize,
+        bits: kernels::QuantBits,
+        group: usize,
+    ) -> Result<usize> {
+        let bytes = self.backend.kv_demote(h, slot, l, head, pos, bits, group)?;
+        self.transfer.note_demote(bytes as u64);
+        Ok(bytes)
+    }
+
+    /// Rehydrate a demoted entry back into the resident rows of `slot`
+    /// (see `Backend::kv_rehydrate`). Device-local.
+    pub fn kv_rehydrate(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        l: usize,
+        head: usize,
+        pos: usize,
+    ) -> Result<usize> {
+        let bytes = self.backend.kv_rehydrate(h, slot, l, head, pos)?;
+        self.transfer.note_rehydrate(bytes as u64);
+        Ok(bytes)
+    }
+
     /// One decode step over the resident group `h`. Returns the artifact
     /// outputs minus the resident `kcache`/`vcache` — index with
     /// [`ArtifactMeta::resident_output_index`].

@@ -926,12 +926,28 @@ struct RefKvGroup {
     mask: Vec<f32>,
 }
 
+/// One demoted entry in the backend's quantized side pool: the groupwise
+/// codes for the K and V `[D]` rows of a single `(slot, l, head, pos)`.
+struct SideEntry {
+    k: kernels::QuantRow,
+    v: kernels::QuantRow,
+    bits: kernels::QuantBits,
+    group: usize,
+    bytes: usize,
+}
+
+/// Side-pool key: (kv handle id, slot, layer, head, pos).
+type SideKey = (u64, usize, usize, usize, usize);
+
 pub struct ReferenceBackend {
     w: RefWeights,
     t_max: usize,
     cfg: ParallelConfig,
     pool: WorkerPool,
     kv: Mutex<HashMap<u64, Arc<Mutex<RefKvGroup>>>>,
+    /// Quantized demoted-tier payloads (see [`Backend::kv_demote`]).
+    /// Entries die with their handle (kv_free) or slot reuse (kv_scatter).
+    side: Mutex<HashMap<SideKey, SideEntry>>,
     next_kv: AtomicU64,
 }
 
@@ -961,6 +977,7 @@ impl ReferenceBackend {
             cfg,
             pool: WorkerPool::new(&cfg),
             kv: Mutex::new(HashMap::new()),
+            side: Mutex::new(HashMap::new()),
             next_kv: AtomicU64::new(1),
         }
     }
@@ -1257,12 +1274,17 @@ impl Backend for ReferenceBackend {
 
     fn kv_free(&self, h: &KvHandle) {
         self.kv.lock().unwrap().remove(&h.id);
+        self.side.lock().unwrap().retain(|key, _| key.0 != h.id);
     }
 
     fn kv_scatter(&self, h: &KvHandle, slot: usize, k: &[f32], v: &[f32]) -> Result<()> {
         if k.len() != h.slot_elems() || v.len() != h.slot_elems() {
             return Err(anyhow!("kv_scatter: rows have {} elems, want {}", k.len(), h.slot_elems()));
         }
+        // a scatter re-seats the slot: any demoted payload left by the
+        // previous occupant is stale (the joining sequence re-demotes its
+        // own entries after the scatter)
+        self.side.lock().unwrap().retain(|key, _| !(key.0 == h.id && key.1 == slot));
         let g = self.group(h)?;
         let mut g = g.lock().unwrap();
         check_slot(&g, h, slot)?;
@@ -1385,6 +1407,92 @@ impl Backend for ReferenceBackend {
             host(scratch.attn_row, vec![L, b, HKV, t_max + 1])?,
         ])
     }
+
+    // ---- demoted (quantized) KV tier -------------------------------------
+
+    fn kv_demote(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        l: usize,
+        head: usize,
+        pos: usize,
+        bits: kernels::QuantBits,
+        group: usize,
+    ) -> Result<usize> {
+        check_lhp(h, l, head, pos)?;
+        let g = self.group(h)?;
+        let mut g = g.lock().unwrap();
+        check_slot(&g, h, slot)?;
+        let d = h.d_head;
+        let base = (((l * g.batch + slot) * h.heads + head) * h.t_max + pos) * d;
+        let kq = kernels::quantize_row(&g.k[base..base + d], group, bits);
+        let vq = kernels::quantize_row(&g.v[base..base + d], group, bits);
+        // leave the lossy round-trip in the resident rows so host-side
+        // snapshot round-trips and a later rehydrate agree bit-for-bit
+        kernels::dequantize_row(&kq, group, bits, &mut g.k[base..base + d]);
+        kernels::dequantize_row(&vq, group, bits, &mut g.v[base..base + d]);
+        let bytes = 2 * kernels::quant_row_bytes(d, group, bits);
+        self.side
+            .lock()
+            .unwrap()
+            .insert((h.id, slot, l, head, pos), SideEntry { k: kq, v: vq, bits, group, bytes });
+        Ok(bytes)
+    }
+
+    fn kv_rehydrate(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        l: usize,
+        head: usize,
+        pos: usize,
+    ) -> Result<usize> {
+        check_lhp(h, l, head, pos)?;
+        let e = self
+            .side
+            .lock()
+            .unwrap()
+            .remove(&(h.id, slot, l, head, pos))
+            .ok_or_else(|| anyhow!("kv_rehydrate: no demoted entry at ({slot},{l},{head},{pos})"))?;
+        let g = self.group(h)?;
+        let mut g = g.lock().unwrap();
+        check_slot(&g, h, slot)?;
+        let d = h.d_head;
+        let base = (((l * g.batch + slot) * h.heads + head) * h.t_max + pos) * d;
+        kernels::dequantize_row(&e.k, e.group, e.bits, &mut g.k[base..base + d]);
+        kernels::dequantize_row(&e.v, e.group, e.bits, &mut g.v[base..base + d]);
+        Ok(e.bytes)
+    }
+
+    fn kv_drop_demoted(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        l: usize,
+        head: usize,
+        pos: usize,
+    ) -> Result<usize> {
+        Ok(self
+            .side
+            .lock()
+            .unwrap()
+            .remove(&(h.id, slot, l, head, pos))
+            .map(|e| e.bytes)
+            .unwrap_or(0))
+    }
+}
+
+fn check_lhp(h: &KvHandle, l: usize, head: usize, pos: usize) -> Result<()> {
+    if l >= h.layers || head >= h.heads || pos >= h.t_max {
+        return Err(anyhow!(
+            "demoted-tier op out of range: ({l},{head},{pos}) vs [{},{},{}]",
+            h.layers,
+            h.heads,
+            h.t_max
+        ));
+    }
+    Ok(())
 }
 
 fn check_slot(g: &RefKvGroup, h: &KvHandle, slot: usize) -> Result<()> {

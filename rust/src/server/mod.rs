@@ -169,6 +169,12 @@ pub fn stats_json(engine: &Engine) -> Json {
         ("mask_uploads", Json::num(t.mask_uploads as f64)),
         ("bytes_up", Json::num(t.bytes_up as f64)),
         ("bytes_down", Json::num(t.bytes_down as f64)),
+        // quantized side-tier activity (device-local, so disjoint from
+        // the bytes_up/bytes_down transfer totals above)
+        ("demotes", Json::num(t.demotes as f64)),
+        ("rehydrates", Json::num(t.rehydrates as f64)),
+        ("tier_bytes_stored", Json::num(t.tier_bytes_stored as f64)),
+        ("tier_bytes_freed", Json::num(t.tier_bytes_freed as f64)),
     ])
 }
 

@@ -465,6 +465,11 @@ fn seq_check(
         mask_on,
         head_sum,
         window_ok,
+        demoted: st.demoted,
+        side_bytes: st.side_bytes,
+        tracked_demoted: seq.tracked_demoted(),
+        demoted_in_window: cache.demoted_at_or_after(len.saturating_sub(window)),
+        accounting_err: cache.accounting_ok().err(),
     }
 }
 

@@ -74,6 +74,23 @@ pub struct SeqCheck {
     /// `w` filled positions) is fully kept in every head. None for
     /// policies without the window guarantee.
     pub window_ok: Option<bool>,
+    /// KV pairs currently demoted to the quantized side tier.
+    pub demoted: usize,
+    /// Side-tier bytes currently charged for those entries.
+    pub side_bytes: usize,
+    /// Demoted positions the engine's rehydration ledger tracks (must
+    /// equal `demoted`, or rebound rehydration silently leaks entries).
+    pub tracked_demoted: usize,
+    /// Demoted entries inside the protected window (last `w` filled
+    /// positions). Must be 0: demotion never targets the window, and the
+    /// re-entry backstop rehydrates anything the window grows over.
+    pub demoted_in_window: usize,
+    /// Full bitset/counter/pool recount ([`accounting_ok`]'s error, if
+    /// any) — kept, demoted, resident-block and byte accounting all
+    /// balance after every step.
+    ///
+    /// [`accounting_ok`]: crate::kvcache::PagedKvCache::accounting_ok
+    pub accounting_err: Option<String>,
 }
 
 /// Post-prefill budget accounting for one newly-admitted budget policy.
@@ -244,6 +261,52 @@ impl Invariant for WindowProtection {
     }
 }
 
+/// The quantized side tier stays conserved: the cache's own recount
+/// balances, the engine's rehydration ledger tracks exactly the demoted
+/// set, tier membership is disjoint (kept + demoted ≤ filled), and no
+/// demoted entry sits inside the protected window.
+struct TierConservation;
+
+impl Invariant for TierConservation {
+    fn name(&self) -> &'static str {
+        "tier-conservation"
+    }
+
+    fn check(&self, obs: &StepObs) -> Result<(), String> {
+        for s in &obs.seqs {
+            if let Some(e) = &s.accounting_err {
+                return Err(format!("seq {}: cache accounting broken: {e}", s.id));
+            }
+            if s.tracked_demoted != s.demoted {
+                return Err(format!(
+                    "seq {}: engine ledger tracks {} demoted entries but the cache holds {}",
+                    s.id, s.tracked_demoted, s.demoted
+                ));
+            }
+            if s.kept + s.demoted > s.filled {
+                return Err(format!(
+                    "seq {}: kept {} + demoted {} > filled {}",
+                    s.id, s.kept, s.demoted, s.filled
+                ));
+            }
+            if s.demoted == 0 && s.side_bytes != 0 {
+                return Err(format!(
+                    "seq {}: {} side bytes charged with nothing demoted",
+                    s.id, s.side_bytes
+                ));
+            }
+            if s.demoted_in_window > 0 {
+                return Err(format!(
+                    "seq {}: {} demoted entries inside the protected window \
+                     (re-entry backstop failed to rehydrate)",
+                    s.id, s.demoted_in_window
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Budget policies land on their keep fraction (± window slack) at
 /// prefill time.
 struct BudgetRespect;
@@ -271,6 +334,7 @@ pub fn registry() -> Vec<Box<dyn Invariant>> {
     vec![
         Box::new(SlotConservation),
         Box::new(CacheAccounting),
+        Box::new(TierConservation),
         Box::new(TransferAccounting),
         Box::new(WindowProtection),
         Box::new(BudgetRespect),

@@ -146,6 +146,43 @@ impl ScenarioSpec {
         ScenarioSpec { seed, steps, max_batch, clients }
     }
 
+    /// A demotion-heavy episode for the tier invariants: every client runs
+    /// a two-threshold tiered policy with an aggressive τ and a deep
+    /// floor, so the demote band is as wide as possible and long
+    /// generations keep the demote → rehydrate (score rebound) and
+    /// window-growth churn going. No cancels or disconnects — slot churn
+    /// is [`ScenarioSpec::generate`]'s job; this one maximizes side-tier
+    /// traffic per step.
+    pub fn generate_tiered(
+        seed: u64,
+        steps: usize,
+        n_clients: usize,
+        max_batch: usize,
+    ) -> ScenarioSpec {
+        let mut r = Rng::new(seed);
+        let clients = (0..n_clients)
+            .map(|i| {
+                let r = &mut r.fork(i as u64);
+                let target = *r.choice(&TARGET_LENS);
+                let subset = *r.choice(workload::RULER_SUBSETS);
+                let t = workload::ruler_instance(subset, target, r);
+                ClientScript {
+                    join_step: r.below((steps / 4).max(1)),
+                    prompt: t.prompt,
+                    policy: tiered_policy(r),
+                    structured_policy: r.below(100) < 30,
+                    max_new: r.below(32) + 16,
+                    greedy: true,
+                    seed: r.below(1 << 31) as u64,
+                    stop_newline: false,
+                    cancel_step: None,
+                    drop_step: None,
+                }
+            })
+            .collect();
+        ScenarioSpec { seed, steps, max_batch, clients }
+    }
+
     /// JSON form (for replaying shrunk scenarios from a file).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -229,16 +266,22 @@ fn client_script(r: &mut Rng, steps: usize) -> ClientScript {
 
 /// Policy mix: threshold policies (including the decode-evicting tau=100
 /// extreme), the budget family, recency/sink and random baselines, the
-/// occasional oracle double pass, and the rival zoo (keyformer blends,
-/// the gated fastkvzip decode path, the value-norm budget press).
+/// occasional oracle double pass, the rival zoo (keyformer blends, the
+/// gated fastkvzip decode path, the value-norm budget press), and the
+/// two-threshold tiered forms that exercise demote/rehydrate churn.
 fn random_policy(r: &mut Rng) -> PolicySpec {
-    match r.below(19) {
+    match r.below(21) {
         0..=3 => PolicySpec::Kvzap {
             surrogate: Surrogate::Mlp,
             tau: *r.choice(&[-8.0, -4.0, -1.0]),
+            floor: None,
         },
-        4 => PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: *r.choice(&[-6.0, -4.0]) },
-        5 => PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: 100.0 },
+        4 => PolicySpec::Kvzap {
+            surrogate: Surrogate::Linear,
+            tau: *r.choice(&[-6.0, -4.0]),
+            floor: None,
+        },
+        5 => PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: 100.0, floor: None },
         6 | 7 => PolicySpec::Full,
         8 => PolicySpec::H2o { keep_frac: *r.choice(&[0.25, 0.5, 0.75]) },
         9 => PolicySpec::SnapKv { keep_frac: *r.choice(&[0.25, 0.5, 0.75]) },
@@ -260,8 +303,52 @@ fn random_policy(r: &mut Rng) -> PolicySpec {
             // include the decode-evicting tau=100 extreme so the gated
             // decode path (both surrogates must agree) gets fuzzed too
             let tau = *r.choice(&[-4.0, 100.0]);
-            PolicySpec::FastKvzip { tau, gate_tau: *r.choice(&[tau, -4.0]) }
+            PolicySpec::FastKvzip { tau, gate_tau: *r.choice(&[tau, -4.0]), floor: None }
         }
-        _ => PolicySpec::ExpectedAttnVnorm { keep_frac: *r.choice(&[0.5, 0.75]) },
+        18 => PolicySpec::ExpectedAttnVnorm { keep_frac: *r.choice(&[0.5, 0.75]) },
+        19 => {
+            // tiered KVzap: an aggressive τ with a deep floor maximises
+            // the demote band (and decode-time rehydration churn)
+            let tau = *r.choice(&[-4.0, -1.0, 100.0]);
+            PolicySpec::Kvzap {
+                surrogate: Surrogate::Mlp,
+                tau,
+                floor: Some(*r.choice(&[-10.0, -8.0])),
+            }
+        }
+        _ => {
+            let tau = *r.choice(&[-4.0, 100.0]);
+            PolicySpec::FastKvzip {
+                tau,
+                gate_tau: *r.choice(&[tau, -4.0]),
+                floor: Some(-9.0),
+            }
+        }
+    }
+}
+
+/// Tiered-only policy mix for [`ScenarioSpec::generate_tiered`]: wide
+/// demote bands (τ up to the evict-everything extreme, floors near the
+/// bottom of the score range) across both two-threshold families.
+fn tiered_policy(r: &mut Rng) -> PolicySpec {
+    match r.below(3) {
+        0 => PolicySpec::Kvzap {
+            surrogate: Surrogate::Mlp,
+            tau: *r.choice(&[-1.0, 100.0]),
+            floor: Some(*r.choice(&[-10.0, -8.0])),
+        },
+        1 => PolicySpec::Kvzap {
+            surrogate: Surrogate::Linear,
+            tau: *r.choice(&[-2.0, 100.0]),
+            floor: Some(-9.0),
+        },
+        _ => {
+            let tau = *r.choice(&[-1.0, 100.0]);
+            PolicySpec::FastKvzip {
+                tau,
+                gate_tau: *r.choice(&[tau, -1.0]),
+                floor: Some(*r.choice(&[-10.0, -8.0])),
+            }
+        }
     }
 }

@@ -168,6 +168,93 @@ fn kvzap_pruned_generation_matches_full_cache_on_ruler_niah() {
 }
 
 // ---------------------------------------------------------------------------
+// Tiered demotion (two-threshold policies)
+
+/// Metamorphic pin: `floor = τ` makes the demotion band empty, so the
+/// tiered path must be *bitwise* identical to the drop-only policy at the
+/// same τ — same tokens, same compression, same cache accounting, same
+/// teacher-forced NLL, and zero demotions/rehydrations end to end.
+#[test]
+fn tiered_floor_equal_tau_is_bitwise_identical_to_drop_only() {
+    let e = engine();
+    let mut rng = Rng::new(21);
+    let task = workload::ruler_instance("niah_single_1", 220, &mut rng);
+    let sp = SamplingParams::greedy(10);
+    for (drop_spec, tier_spec) in [
+        ("kvzap_mlp:-4", "kvzap_mlp:-4:floor=-4"),
+        ("fastkvzip:-4", "fastkvzip:-4:floor=-4"),
+    ] {
+        let drop = policies::by_name(drop_spec, e.window()).unwrap();
+        let tier = policies::by_name(tier_spec, e.window()).unwrap();
+        let rd = e.generate(&task.prompt, drop.as_ref(), &sp).unwrap();
+        let rt = e.generate(&task.prompt, tier.as_ref(), &sp).unwrap();
+        assert_eq!(rd.text, rt.text, "{tier_spec}: tokens diverged from {drop_spec}");
+        assert_eq!(rd.compression, rt.compression, "{tier_spec}: compression diverged");
+        assert_eq!(rd.decode_evictions, rt.decode_evictions, "{tier_spec}");
+        assert_eq!(rt.decode_demotions, 0, "{tier_spec}: empty band must never demote");
+        assert_eq!(rt.decode_rehydrations, 0, "{tier_spec}");
+        let ad = e.score_answer_full(&task.prompt, &task.answer, drop.as_ref()).unwrap();
+        let at = e.score_answer_full(&task.prompt, &task.answer, tier.as_ref()).unwrap();
+        assert_eq!(ad.nll, at.nll, "{tier_spec}: answer NLL must match bitwise");
+        assert_eq!(ad.kv_bytes, at.kv_bytes, "{tier_spec}: same bytes with an empty band");
+        assert_eq!(at.demoted, 0, "{tier_spec}");
+        assert_eq!(at.rehydrated, 0, "{tier_spec}");
+    }
+}
+
+/// A deep floor under an aggressive τ routes window-exiting positions
+/// into the quantized side tier instead of dropping them, both at prefill
+/// (via `score_answer_full`'s steady state) and during decode — and the
+/// side tier prices the band cheaper than keeping it resident: the tiered
+/// steady state takes strictly fewer bytes than drop-at-floor while
+/// holding strictly more information than drop-at-τ.
+#[test]
+fn tiered_policy_demotes_into_side_tier_and_undercuts_drop_at_floor() {
+    let e = engine();
+    let mut rng = Rng::new(22);
+    let task = workload::ruler_instance("niah_multikey_1", 220, &mut rng);
+    let tiered = policies::by_name("kvzap_mlp:-1:floor=-8", e.window()).unwrap();
+    let a_tier = e.score_answer_full(&task.prompt, &task.answer, tiered.as_ref()).unwrap();
+    assert!(a_tier.demoted > 0, "the [-8, -1) band must land in the side tier");
+    assert_eq!(a_tier.rehydrated, a_tier.demoted, "answer scoring rehydrates the band");
+
+    // the bytes win, in its purest form: demote *everything* outside the
+    // protected window (τ=+∞, bottomless floor) vs keeping everything
+    // resident (drop-only at the same bottomless τ). Every fully-banded
+    // 16-slot block frees 1024 resident bytes and charges 16 × 32 = 512
+    // side bytes, so the tiered footprint must come in strictly under —
+    // this is the structural half-price guarantee the leaderboard's
+    // dominance report generalizes to mid-τ pairs.
+    let band_all = policies::by_name("kvzap_mlp:100:floor=-1e30", e.window()).unwrap();
+    let keep_all = policies::by_name("kvzap_mlp:-1e30", e.window()).unwrap();
+    let a_band = e.score_answer_full(&task.prompt, &task.answer, band_all.as_ref()).unwrap();
+    let a_keep = e.score_answer_full(&task.prompt, &task.answer, keep_all.as_ref()).unwrap();
+    assert_eq!(a_keep.demoted, 0, "drop-only never demotes");
+    assert!(a_band.demoted > 0, "everything outside the window demotes");
+    assert!(
+        a_band.kv_bytes < a_keep.kv_bytes,
+        "int8 side entries must undercut resident fp32 blocks: tiered {} vs resident {}",
+        a_band.kv_bytes,
+        a_keep.kv_bytes
+    );
+
+    // decode-time: an aggressive τ with a bottomless floor demotes every
+    // window-exiting position instead of evicting it
+    let all_demote = policies::by_name("kvzap_mlp:100:floor=-1e30", e.window()).unwrap();
+    let a = workload::aime_instance(&mut rng);
+    let r = e
+        .generate(&a.task.prompt, all_demote.as_ref(), &SamplingParams::greedy(40))
+        .unwrap();
+    if r.tokens_out > e.window() + 2 {
+        assert!(r.decode_demotions > 0, "decode-time demotions expected");
+        assert_eq!(
+            r.decode_evictions, 0,
+            "nothing scores below -1e30, so the band absorbs every exit"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Step-level session API (Sequence / prefill / decode_step)
 
 /// A sequence that joins a running decode group mid-flight must produce

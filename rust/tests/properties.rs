@@ -355,6 +355,72 @@ fn prop_cache_retain_fill_mask_roundtrip() {
     );
 }
 
+/// `retain` is extensionally equal to the per-position `evict` loop it
+/// batches: identical kept bits, mask, aggregate stats (including block
+/// reclamation) and pool residency on every random keep pattern. The
+/// prefill prune path goes through `retain` while decode eviction goes
+/// through `evict` — if the two ever diverge, prefill and decode would
+/// disagree about what the cache holds.
+#[test]
+fn prop_retain_equals_per_position_evict_loop() {
+    check(
+        60,
+        |r| {
+            let layers = r.below(2) + 1;
+            let heads = r.below(3) + 1;
+            let n = r.below(120) + 8;
+            let l = r.below(layers);
+            let h = r.below(heads);
+            let keep: Vec<bool> = (0..n).map(|_| r.below(3) > 0).collect();
+            (layers, heads, n, l, h, keep)
+        },
+        |&(layers, heads, n, l, h, ref keep)| {
+            let pool_a = Arc::new(BlockPool::new(256));
+            let pool_b = Arc::new(BlockPool::new(256));
+            let mut a = PagedKvCache::new(layers, heads, 160).with_pool(pool_a.clone());
+            let mut b = PagedKvCache::new(layers, heads, 160).with_pool(pool_b.clone());
+            a.fill(n);
+            b.fill(n);
+            a.retain(l, h, n, |p| keep[p]);
+            for p in 0..n {
+                if !keep[p] {
+                    b.evict(l, h, p);
+                }
+            }
+            if a.stats() != b.stats() {
+                return Err(format!(
+                    "stats diverged: retain {:?} vs evict loop {:?}",
+                    a.stats(),
+                    b.stats()
+                ));
+            }
+            if a.mask_f32() != b.mask_f32() {
+                return Err("mask diverged".into());
+            }
+            for ll in 0..layers {
+                for hh in 0..heads {
+                    for p in 0..n {
+                        if a.is_kept(ll, hh, p) != b.is_kept(ll, hh, p) {
+                            return Err(format!("is_kept diverged at ({ll},{hh},{p})"));
+                        }
+                    }
+                    if a.kept_in_head(ll, hh) != b.kept_in_head(ll, hh) {
+                        return Err(format!("kept_in_head diverged at ({ll},{hh})"));
+                    }
+                }
+            }
+            if pool_a.used() != pool_b.used() {
+                return Err(format!(
+                    "pool residency diverged: {} vs {}",
+                    pool_a.used(),
+                    pool_b.used()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Block-pool accounting: blocks freed by whole-block eviction return to
 /// the pool immediately, and everything is released on drop (`with_pool`).
 #[test]

@@ -112,6 +112,34 @@ fn injected_accounting_bug_is_caught_and_minimized() {
     assert_eq!(v.invariant, "transfer-accounting");
 }
 
+/// Demotion-heavy scripted episodes (tiered two-threshold policies only)
+/// run clean under the full registry — tier conservation, the window
+/// re-entry backstop, accounting balance, transfer prediction, and the
+/// solo-replay faithfulness check all hold through demote/rehydrate churn.
+#[test]
+fn simulate_tiered_scenarios_run_clean() {
+    for seed in 0..2u64 {
+        let spec = ScenarioSpec::generate_tiered(seed, 32, 3, 3);
+        assert!(
+            spec.clients.iter().all(|c| {
+                matches!(
+                    &c.policy,
+                    PolicySpec::Kvzap { floor: Some(_), .. }
+                        | PolicySpec::FastKvzip { floor: Some(_), .. }
+                )
+            }),
+            "tiered episodes script two-threshold policies exclusively"
+        );
+        let report = run_scenario(&spec, &SimOptions::default());
+        assert!(
+            report.violation.is_none(),
+            "seed {seed}: {}",
+            report.violation.unwrap()
+        );
+        assert_eq!(report.steps_run, 32);
+    }
+}
+
 /// The clean-run summary counts what the trace shows.
 #[test]
 fn simulate_summary_counts_clients() {
