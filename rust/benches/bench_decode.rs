@@ -12,6 +12,10 @@
 //!
 //!     cargo bench --bench bench_decode            # full sweep
 //!     cargo bench --bench bench_decode -- --quick # CI smoke subset
+//!
+//! `--assert-speedup <factor>` makes the headline row (largest t_max,
+//! largest group) a hard gate: the resident path must clear `<factor>`x
+//! over the repack path or the bench exits nonzero.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -214,5 +218,26 @@ fn main() -> anyhow::Result<()> {
         ));
     }
     write_bench_json("decode", "reference", quick, &items)?;
+
+    // resident-vs-repack gate: `-- --assert-speedup 2` turns the headline
+    // ratio (largest t_max, largest group) into a hard failure
+    if let Ok(bar) = args.str("assert-speedup", "").parse::<f64>() {
+        if let Some(head) =
+            rows.iter().max_by(|a, b| (a.t_max, a.group).cmp(&(b.t_max, b.group)))
+        {
+            let sp = head.resident_tok_s / head.repack_tok_s;
+            println!(
+                "\ndecode gate: t_max={} group={} resident/repack {sp:.2}x (bar {bar}x)",
+                head.t_max, head.group
+            );
+            if sp < bar {
+                anyhow::bail!(
+                    "resident/repack speedup {sp:.2}x at t_max={} group={} below the asserted {bar}x bar",
+                    head.t_max,
+                    head.group
+                );
+            }
+        }
+    }
     Ok(())
 }

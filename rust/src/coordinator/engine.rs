@@ -117,6 +117,9 @@ pub struct GenResult {
     pub decode_demotions: usize,
     /// Demoted KV pairs rehydrated back to residency during decode.
     pub decode_rehydrations: usize,
+    /// Demoted rows attended in place (quantized, no rehydrate) during
+    /// decode, summed over steps.
+    pub decode_quant_attends: usize,
 }
 
 /// Why a sequence stopped generating.
@@ -231,6 +234,9 @@ pub struct Sequence {
     pub decode_demotions: usize,
     /// Demoted pairs rehydrated back to residency during decode so far.
     pub decode_rehydrations: usize,
+    /// Demoted rows attended in place by the quantized decode path so far
+    /// (each step counts every side entry it read).
+    pub decode_quant_attends: usize,
     /// Wall-clock µs spent in this sequence's prefill execution.
     pub prefill_us: u64,
     /// Wall-clock µs spent in the KVzip oracle pass (0 unless needed).
@@ -434,11 +440,14 @@ impl Engine {
     /// engine cache carries: int8, group-8 over the model head dim. The
     /// tier stays empty unless a two-threshold policy demotes into it.
     pub fn tier_config(&self) -> TierConfig {
-        TierConfig {
-            d_head: self.rt.manifest.model.d_head,
-            bits: QuantBits::Int8,
-            group: 8,
-        }
+        self.tier_config_bits(QuantBits::Int8)
+    }
+
+    /// Tier configuration at a caller-chosen code width. Prefill swaps a
+    /// sequence's cache to the policy's [`PrunePolicy::tier_bits`] width
+    /// through this before any fill/prune bookkeeping lands in it.
+    pub fn tier_config_bits(&self, bits: QuantBits) -> TierConfig {
+        TierConfig { d_head: self.rt.manifest.model.d_head, bits, group: 8 }
     }
 
     /// Create a fresh (not yet prefilled) sequence for `prompt`.
@@ -471,6 +480,7 @@ impl Engine {
             decode_evictions: 0,
             decode_demotions: 0,
             decode_rehydrations: 0,
+            decode_quant_attends: 0,
             prefill_us: 0,
             oracle_us: 0,
             decode_us: 0,
@@ -529,6 +539,19 @@ impl Engine {
         } else {
             None
         };
+
+        // the policy picks the side tier's code width: rebuild this
+        // sequence's cache at that width before any fill/prune bookkeeping
+        // lands in it (the default sequence cache is int8)
+        let bits = policy.tier_bits();
+        if seq.cache.tier().bits != bits {
+            seq.cache = PagedKvCache::new_tiered(
+                man.model.n_layers,
+                man.model.n_kv_heads,
+                man.model.t_max,
+                self.tier_config_bits(bits),
+            );
+        }
 
         // prune after prefill + seed the decode score window
         let t0 = crate::util::now_micros();
@@ -627,8 +650,12 @@ impl Engine {
     /// sequences are skipped, so a scheduler can pass a stable set while
     /// membership changes between steps. A sequence absent from `seqs`
     /// vacates its slot (its host KV snapshot is already current) and
-    /// re-scatters if it later rejoins. Returns the step's events in
-    /// sequence order.
+    /// re-scatters if it later rejoins. Demoted side-tier rows contribute
+    /// to attention directly in quantized form
+    /// ([`Runtime::exec_decode_resident_quant`]); the rehydration scan
+    /// only *promotes* hot rows (score rebound / window re-entry), it is
+    /// not required for a demoted row to be attendable. Returns the
+    /// step's events in sequence order.
     pub fn decode_step(
         &self,
         group: &mut DecodeGroup,
@@ -681,6 +708,11 @@ impl Engine {
                 let zm =
                     zero_mask.get_or_insert_with(|| vec![0.0f32; handle.mask_elems()]);
                 self.rt.kv_write_mask(handle, s, zm)?;
+                // side-tier entries bypass the resident mask on the
+                // quantized decode path, so a vacated slot must purge them
+                // too — a stale band must never be attended (or counted)
+                // under the next occupant
+                self.rt.kv_drop_slot(handle, s)?;
             }
         }
         // per-sequence KV transfer attribution for this step's events
@@ -736,7 +768,16 @@ impl Engine {
             cur[slot_of[si]] = seqs[si].cur;
             pos_i32[slot_of[si]] = seqs[si].pos as i32;
         }
-        let outs = self.rt.exec_decode_resident(&dec, &cur, &pos_i32, handle)?;
+        // demoted rows contribute to attention directly in quantized form
+        // (dequantize-in-register on the backend); rehydration below is an
+        // optimization that promotes hot rows, not a correctness gate
+        let (outs, qstats) =
+            self.rt.exec_decode_resident_quant(&dec, &cur, &pos_i32, handle)?;
+        let q_rows: u64 = qstats.iter().map(|s| s.rows as u64).sum();
+        let q_bytes: u64 = qstats.iter().map(|s| s.bytes as u64).sum();
+        if q_rows > 0 || q_bytes > 0 {
+            self.metrics.note_quant_attend(q_rows, q_bytes);
+        }
         let fetch = |name: &str| -> Result<Tensor> {
             let oi = dec.meta.output_index(name)?; // manifest shape
             let ri = dec.meta.resident_output_index(name)?; // resident position
@@ -780,6 +821,12 @@ impl Engine {
             // the token we just fed occupies pos (the backend mirrors this
             // fill in the resident mask, so it is not a dirty change)
             seq.cache.fill((seq.pos + 1).min(t_max));
+            // credit the side rows the backend attended for this slot
+            let qa = qstats.get(slot).copied().unwrap_or_default();
+            if qa.rows > 0 {
+                seq.cache.note_quant_attend(qa.rows);
+                seq.decode_quant_attends += qa.rows;
+            }
             let mut evicted = 0usize;
             let mut demoted = 0usize;
             let mut rehydrated = 0usize;
@@ -921,6 +968,7 @@ impl Engine {
             decode_evictions: seq.decode_evictions,
             decode_demotions: seq.decode_demotions,
             decode_rehydrations: seq.decode_rehydrations,
+            decode_quant_attends: seq.decode_quant_attends,
         }
     }
 
@@ -1067,7 +1115,12 @@ impl Engine {
         } else {
             None
         };
-        let mut cache = PagedKvCache::new_tiered(layers, heads, t_max, self.tier_config());
+        let mut cache = PagedKvCache::new_tiered(
+            layers,
+            heads,
+            t_max,
+            self.tier_config_bits(policy.tier_bits()),
+        );
         cache.fill(n);
         policy.prefill_prune(&stats.view(0, oracle.as_ref()), n, &mut cache);
         // price the cache at its post-prune steady state, *before*
@@ -1211,5 +1264,114 @@ mod tests {
         assert!(s.cache.is_kept(0, 0, 0), "rebound entry is resident again");
         assert!(s.cache.is_kept(0, heads - 1, edge), "backstop entry is resident again");
         assert_eq!(s.decode_demotions, 0, "tau=-1000 demotes nothing on its own");
+    }
+
+    /// A prefilled sequence with a hand-planted demoted band deep in the
+    /// prompt: stored scores of `f32::MIN` mean the rebound rule can never
+    /// fire, and positions 1..=3 stay far below the window start for the
+    /// whole budget, so the backstop never fires either — the band stays
+    /// demoted for every decode step (attended only via the quantized
+    /// side path). Snapshot rows are round-tripped exactly as the natural
+    /// demotion flow does, so group-join scatters stay consistent.
+    fn demoted_band_seq(e: &Engine, seed: u64, max_new: usize) -> Sequence {
+        let mut rng = Rng::new(seed);
+        let task = workload::ruler_instance("niah_single_1", 180, &mut rng);
+        let policy = policies::by_name("kvzap_mlp:-1000:floor=-1000", e.window()).unwrap();
+        let mut sp = SamplingParams::greedy(max_new);
+        sp.stop_at_newline = false;
+        let mut s = e.sequence(7, &task.prompt, sp);
+        e.prefill(&mut s, policy.as_ref()).unwrap();
+        assert_eq!(s.cache.stats().demoted, 0, "tau=-1000 must not demote naturally");
+        let man = &e.rt.manifest;
+        let (heads, t_max, d) =
+            (man.model.n_kv_heads, man.model.t_max, man.model.d_head);
+        let tier = s.cache.tier();
+        for l in 0..man.model.n_layers {
+            for h in 0..heads {
+                for p in 1..4 {
+                    assert!(s.cache.demote(l, h, p));
+                    s.demoted_scores[l * heads + h].push((p, f32::MIN));
+                    roundtrip_snapshot_row(&mut s.k, &mut s.v, tier, heads, t_max, d, l, h, p);
+                }
+            }
+        }
+        s
+    }
+
+    /// The quantized decode path's steady-state contract: a sequence with
+    /// a demoted band performs ZERO rehydrations while decoding — the band
+    /// is attended in place, in quantized form, every step — and the
+    /// white-box counters (sequence, cache telemetry, engine metrics,
+    /// runtime transfer) all agree on exactly how many rows that was.
+    #[test]
+    fn steady_state_decode_attends_quantized_rows_without_rehydration() {
+        let e = Engine::new(Arc::new(Runtime::reference()));
+        let mut s = demoted_band_seq(&e, 11, 6);
+        let band = s.tracked_demoted();
+        assert!(band > 0);
+        let bpe = s.cache.tier().bytes_per_entry();
+
+        let mut group = e.decode_group();
+        let mut steps = 0usize;
+        while !s.is_done() {
+            let mut set = vec![&mut s];
+            e.decode_step(&mut group, &mut set).unwrap();
+            steps += 1;
+        }
+        assert!(steps >= 1, "at least one decode step must have executed");
+        assert_eq!(s.decode_rehydrations, 0, "steady state performs no kv_rehydrate");
+        assert_eq!(s.cache.stats().demoted, band, "the band stays demoted");
+        assert_eq!(
+            s.decode_quant_attends,
+            steps * band,
+            "every step attends the whole band in place"
+        );
+        assert_eq!(s.cache.quant_attended_rows(), steps * band);
+        assert_eq!(s.cache.stats().quant_attended_bytes, steps * band * bpe);
+        let snap = e.rt.transfer.snapshot();
+        assert_eq!(snap.quant_attend_rows, (steps * band) as u64);
+        assert_eq!(snap.quant_attend_bytes, (steps * band * bpe) as u64);
+    }
+
+    /// Output agreement with the old rehydrate-everything contract: twin
+    /// sequences share a seed and the same hand-planted band; twin B
+    /// rehydrates every demoted row (its lossy round-tripped payload is
+    /// already in the snapshot) before decoding, twin A attends the band
+    /// in quantized form. Both must generate the same text — the side
+    /// entries dequantize to exactly the values twin B holds resident, so
+    /// only float summation order differs.
+    #[test]
+    fn quant_attend_generation_matches_rehydrate_everything() {
+        let e = Engine::new(Arc::new(Runtime::reference()));
+        let mut a = demoted_band_seq(&e, 13, 8);
+        let mut b = demoted_band_seq(&e, 13, 8);
+        let heads = e.rt.manifest.model.n_kv_heads;
+        for l in 0..e.rt.manifest.model.n_layers {
+            for h in 0..heads {
+                for (p, _) in std::mem::take(&mut b.demoted_scores[l * heads + h]) {
+                    assert!(b.cache.rehydrate(l, h, p));
+                }
+            }
+        }
+        assert_eq!(b.cache.stats().demoted, 0, "twin B starts fully rehydrated");
+
+        let mut ga = e.decode_group();
+        while !a.is_done() {
+            let mut set = vec![&mut a];
+            e.decode_step(&mut ga, &mut set).unwrap();
+        }
+        let mut gb = e.decode_group();
+        while !b.is_done() {
+            let mut set = vec![&mut b];
+            e.decode_step(&mut gb, &mut set).unwrap();
+        }
+        assert!(a.decode_quant_attends > 0, "twin A served the band in place");
+        assert_eq!(a.decode_rehydrations, 0);
+        assert_eq!(b.decode_quant_attends, 0, "twin B has no side entries left");
+        assert_eq!(
+            e.finish(&a).text,
+            e.finish(&b).text,
+            "quant-attend decode must match the rehydrate-everything path"
+        );
     }
 }

@@ -94,6 +94,12 @@ pub struct CacheStats {
     pub resident_bytes: usize,
     /// Demoted-tier bytes: quantized payload + per-group parameters.
     pub side_bytes: usize,
+    /// Cumulative demoted entries attended in place (no rehydrate) by the
+    /// quantized decode path.
+    pub quant_attended_rows: usize,
+    /// Cumulative quantized bytes those in-place attends read
+    /// (rows × [`TierConfig::bytes_per_entry`]).
+    pub quant_attended_bytes: usize,
 }
 
 impl CacheStats {
@@ -163,6 +169,10 @@ pub struct PagedKvCache {
     /// the quantized tier); byte count maintained even without a pool.
     side_pool: Option<Arc<BlockPool>>,
     side_bytes: usize,
+    /// Cumulative demoted entries the quantized decode path attended in
+    /// place (see [`PagedKvCache::note_quant_attend`]). Pure telemetry —
+    /// no pool charge moves, so `accounting_ok` ignores it.
+    quant_attended_rows: usize,
     tier: TierConfig,
     /// Dirty flag so the coordinator only re-uploads the mask when it
     /// changed in a way the backend cannot mirror itself. Evictions,
@@ -200,6 +210,7 @@ impl PagedKvCache {
             pool_blocks: 0,
             side_pool: None,
             side_bytes: 0,
+            quant_attended_rows: 0,
             tier,
             dirty: true,
         }
@@ -504,6 +515,19 @@ impl PagedKvCache {
         n
     }
 
+    /// Record that the quantized decode path attended `rows` of this
+    /// sequence's demoted entries in place this step. Telemetry only: no
+    /// tier state changes (the entries stay demoted, their bytes stay
+    /// charged to the side pool), so resident accounting is untouched.
+    pub fn note_quant_attend(&mut self, rows: usize) {
+        self.quant_attended_rows += rows;
+    }
+
+    /// Cumulative quant-attended rows (see [`PagedKvCache::note_quant_attend`]).
+    pub fn quant_attended_rows(&self) -> usize {
+        self.quant_attended_rows
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             kept: self.kept_count.iter().sum(),
@@ -513,6 +537,8 @@ impl PagedKvCache {
             freed_blocks: self.freed_blocks,
             resident_bytes: self.pool_blocks * self.tier.resident_block_bytes(),
             side_bytes: self.side_bytes,
+            quant_attended_rows: self.quant_attended_rows,
+            quant_attended_bytes: self.quant_attended_rows * self.tier.bytes_per_entry(),
         }
     }
 
@@ -705,6 +731,25 @@ mod tests {
         assert_eq!((s.kept, s.demoted, s.side_bytes), (20, 0, 0));
         assert!(c.is_kept(0, 0, 3));
         assert!(c.is_dirty(), "rehydration re-dirties the mask");
+        c.accounting_ok().unwrap();
+    }
+
+    #[test]
+    fn quant_attend_is_telemetry_only() {
+        let mut c = PagedKvCache::new_tiered(1, 1, 64, tier());
+        c.fill(20);
+        assert!(c.demote(0, 0, 3));
+        let before = c.stats();
+        c.note_quant_attend(5);
+        c.note_quant_attend(2);
+        let s = c.stats();
+        assert_eq!(s.quant_attended_rows, 7);
+        assert_eq!(s.quant_attended_bytes, 7 * tier().bytes_per_entry());
+        assert_eq!(
+            (s.kept, s.demoted, s.side_bytes, s.resident_blocks),
+            (before.kept, before.demoted, before.side_bytes, before.resident_blocks),
+            "quant attends must not move tier state"
+        );
         c.accounting_ok().unwrap();
     }
 

@@ -78,6 +78,9 @@ pub struct LeaderboardRow {
     /// Mean KV entries held in the quantized side tier at steady state
     /// (non-zero only for two-threshold `:floor=` specs).
     pub demoted: f64,
+    /// Side-tier code width the spec runs at (8/4/2; 8 for drop-only
+    /// specs, whose band is empty).
+    pub quant_bits: u8,
     /// Mean prefill wall-clock µs per sample.
     pub prefill_us: f64,
     /// Mean decode wall-clock µs per sample.
@@ -95,7 +98,10 @@ pub struct LeaderboardRow {
 /// `:floor=` variants pairing each τ with the deepest swept τ as the
 /// demotion floor — and the plain drop-only spec at that floor always
 /// joins the sweep too, so every tiered point has the drop-at-floor
-/// counterpart it must dominate on the bytes axis.
+/// counterpart it must dominate on the bytes axis. Kinds that also accept
+/// a `bits` parameter sweep every side-tier code width (int8 canonical,
+/// `:bits=4`, `:bits=2`) per tiered point, putting the width trade-off
+/// (side-pool bytes vs round-trip error) directly on the bytes frontier.
 fn specs_for(info: &PolicyInfo, taus: &[f64], quick: bool) -> Vec<String> {
     let form = info.string_forms[0];
     if info.params.is_empty() {
@@ -119,11 +125,27 @@ fn specs_for(info: &PolicyInfo, taus: &[f64], quick: bool) -> Vec<String> {
         if !targets.contains(&floor) {
             specs.insert(0, format!("{form}:{floor}"));
         }
+        let widths: &[&str] = if info.params.iter().any(|p| p.name == "bits") {
+            &["", ":bits=4", ":bits=2"]
+        } else {
+            &[""]
+        };
         for t in targets.iter().filter(|&&t| t > floor) {
-            specs.push(format!("{form}:{t}:floor={floor}"));
+            for w in widths {
+                specs.push(format!("{form}:{t}:floor={floor}{w}"));
+            }
         }
     }
     specs
+}
+
+/// Side-tier code width carried by a spec string: the trailing `:bits=`
+/// segment when present, else the int8 default (also what drop-only specs
+/// report — their band is empty, so the width is nominal).
+fn spec_quant_bits(spec: &str) -> u8 {
+    spec.split_once(":bits=")
+        .and_then(|(_, b)| b.parse::<u8>().ok())
+        .unwrap_or(8)
 }
 
 /// Run the full sweep; one row per (cataloged policy spec, suite).
@@ -151,6 +173,7 @@ pub fn sweep(engine: &Engine, cfg: &LeaderboardConfig) -> Result<Vec<Leaderboard
                     compression: comp,
                     kv_bytes: mean(|r| r.kv_bytes),
                     demoted: mean(|r| r.demoted),
+                    quant_bits: spec_quant_bits(&spec),
                     prefill_us: mean(|r| r.prefill_us),
                     decode_us: mean(|r| r.decode_us),
                     scoring_us: mean(|r| r.policy_us + r.oracle_us),
@@ -200,15 +223,21 @@ pub fn assert_tiered_coverage(rows: &[LeaderboardRow]) -> Result<()> {
 }
 
 /// One tiered-vs-drop-only comparison on the accuracy-vs-bytes frontier:
-/// the two-threshold spec `form:τ:floor=f` against the plain drop-only
-/// spec `form:f` that retains the same score band (resident, in fp32).
-/// The tiered point holds the `[f, τ)` band in int8 side entries instead
-/// of fp32 blocks, so it should reach the same accuracy at strictly
-/// fewer bytes — [`DominancePair::dominates`] checks exactly that.
+/// the two-threshold spec `form:τ:floor=f[:bits=b]` against the plain
+/// drop-only spec `form:f` that retains the same score band (resident, in
+/// fp32). The tiered point holds the `[f, τ)` band in quantized side
+/// entries instead of fp32 blocks, so it should reach the same accuracy at
+/// strictly fewer bytes — [`DominancePair::dominates`] checks exactly
+/// that. Every swept code width pairs against the *same* drop-at-floor
+/// counterpart, so the report reads as a width ladder: narrower codes buy
+/// fewer bytes against the same fp32 baseline at (ideally) no accuracy
+/// cost.
 #[derive(Debug, Clone)]
 pub struct DominancePair {
     /// The two-threshold spec string.
     pub tiered: String,
+    /// Side-tier code width of the tiered spec (8/4/2).
+    pub quant_bits: u8,
     /// The drop-only spec at τ' = floor (same retained band, all fp32).
     pub drop_at_floor: String,
     /// Mean steady-state bytes for the tiered spec.
@@ -240,12 +269,17 @@ pub fn dominance_pairs(rows: &[LeaderboardRow], suite: &str) -> Vec<DominancePai
     for r in rows.iter().filter(|r| r.suite == suite) {
         let Some((base, floor)) = r.policy.split_once(":floor=") else { continue };
         let Some((form, _tau)) = base.rsplit_once(':') else { continue };
+        // a trailing ":bits=" segment belongs to the tiered spec, not the
+        // floor value — every code width pairs against the same fp32
+        // drop-at-floor counterpart
+        let floor = floor.split_once(":bits=").map_or(floor, |(f, _)| f);
         let floor_spec = format!("{form}:{floor}");
         if let Some(d) =
             rows.iter().find(|d| d.suite == suite && d.policy == floor_spec)
         {
             pairs.push(DominancePair {
                 tiered: r.policy.clone(),
+                quant_bits: r.quant_bits,
                 drop_at_floor: floor_spec,
                 tiered_bytes: r.kv_bytes,
                 drop_bytes: d.kv_bytes,
@@ -263,7 +297,7 @@ fn render_row(r: &LeaderboardRow) -> String {
     format!(
         "{{\"kind\": \"{}\", \"policy\": \"{}\", \"suite\": \"{}\", \"accuracy\": {:.4}, \
          \"nll\": {:.4}, \"compression\": {:.4}, \"kv_bytes\": {:.1}, \"demoted\": {:.2}, \
-         \"prefill_us\": {:.1}, \"decode_us\": {:.1}, \"scoring_us\": {:.1}}}",
+         \"quant_bits\": {}, \"prefill_us\": {:.1}, \"decode_us\": {:.1}, \"scoring_us\": {:.1}}}",
         r.kind,
         r.policy,
         r.suite,
@@ -272,6 +306,7 @@ fn render_row(r: &LeaderboardRow) -> String {
         r.compression,
         r.kv_bytes,
         r.demoted,
+        r.quant_bits,
         r.prefill_us,
         r.decode_us,
         r.scoring_us
@@ -310,9 +345,10 @@ pub fn run(engine: &Engine, cfg: &LeaderboardConfig) -> Result<Vec<LeaderboardRo
             println!("\n== dominance: {suite} (tiered vs drop-at-floor)");
             for p in pairs {
                 println!(
-                    "{:<40} vs {:<20} {:>8.0} vs {:>8.0} bytes, acc {:>5.1}% vs {:>5.1}%, \
+                    "{:<40} [int{}] vs {:<20} {:>8.0} vs {:>8.0} bytes, acc {:>5.1}% vs {:>5.1}%, \
                      nll {:.3} vs {:.3} -> {}",
                     p.tiered,
+                    p.quant_bits,
                     p.drop_at_floor,
                     p.tiered_bytes,
                     p.drop_bytes,
@@ -335,6 +371,7 @@ mod tests {
     fn row(policy: &str, suite: &'static str, acc: f64, bytes: f64, dem: f64) -> LeaderboardRow {
         LeaderboardRow {
             kind: "kvzap",
+            quant_bits: spec_quant_bits(policy),
             policy: policy.into(),
             suite,
             accuracy: acc,
@@ -378,17 +415,31 @@ mod tests {
                     continue;
                 }
                 assert!(!tiered.is_empty(), "{}: no tiered specs swept", info.kind);
-                for t in tiered {
+                for t in &tiered {
                     // every tiered spec's drop-at-floor counterpart is
                     // co-scheduled so the dominance pair exists in-sweep
                     let (base, floor) = t.split_once(":floor=").unwrap();
                     let (form, _) = base.rsplit_once(':').unwrap();
+                    let floor = floor.split_once(":bits=").map_or(floor, |(f, _)| f);
                     let counterpart = format!("{form}:{floor}");
                     assert!(
                         specs.contains(&counterpart),
                         "{}: '{t}' swept without '{counterpart}'",
                         info.kind
                     );
+                }
+                // bits-capable kinds ladder every tiered point across the
+                // swept code widths (int8 canonical has no suffix)
+                if info.params.iter().any(|p| p.name == "bits") {
+                    for w in [8u8, 4, 2] {
+                        assert!(
+                            tiered.iter().any(|s| spec_quant_bits(s) == w),
+                            "{}: no tiered spec at int{w}",
+                            info.kind
+                        );
+                    }
+                    let n_tiered = tiered.len();
+                    assert_eq!(n_tiered % 3, 0, "{}: widths unevenly swept", info.kind);
                 }
             }
         }
@@ -432,6 +483,7 @@ mod tests {
         assert_eq!(p.tiered, "kvzap_mlp:-4:floor=-8");
         assert_eq!(p.drop_at_floor, "kvzap_mlp:-8");
         assert_eq!(p.drop_bytes, 200.0);
+        assert_eq!(p.quant_bits, 8);
         assert!(p.dominates(), "equal accuracy at fewer bytes dominates");
         // losing accuracy or gaining bytes breaks dominance
         let mut worse = p.clone();
@@ -440,6 +492,25 @@ mod tests {
         let mut heavier = p.clone();
         heavier.tiered_bytes = 200.0;
         assert!(!heavier.dominates());
+    }
+
+    #[test]
+    fn dominance_pairs_ladder_code_widths_against_one_counterpart() {
+        let rows = vec![
+            row("kvzap_mlp:-8", "ruler", 0.75, 200.0, 0.0),
+            row("kvzap_mlp:-4:floor=-8", "ruler", 0.75, 140.0, 6.0),
+            row("kvzap_mlp:-4:floor=-8:bits=4", "ruler", 0.74, 110.0, 6.0),
+            row("kvzap_mlp:-4:floor=-8:bits=2", "ruler", 0.70, 95.0, 6.0),
+        ];
+        let pairs = dominance_pairs(&rows, "ruler");
+        assert_eq!(pairs.len(), 3, "every width pairs");
+        for p in &pairs {
+            // the ":bits=" suffix never leaks into the floor counterpart
+            assert_eq!(p.drop_at_floor, "kvzap_mlp:-8", "tiered {}", p.tiered);
+            assert_eq!(p.drop_bytes, 200.0);
+        }
+        let widths: Vec<u8> = pairs.iter().map(|p| p.quant_bits).collect();
+        assert_eq!(widths, vec![8, 4, 2]);
     }
 
     #[test]
@@ -454,6 +525,15 @@ mod tests {
         assert_eq!(j.get("accuracy").and_then(|v| v.as_f64()), Some(0.5));
         assert_eq!(j.get("kv_bytes").and_then(|v| v.as_f64()), Some(4096.0));
         assert_eq!(j.get("demoted").and_then(|v| v.as_f64()), Some(12.0));
+        assert_eq!(j.get("quant_bits").and_then(|v| v.as_f64()), Some(8.0));
         assert_eq!(j.get("scoring_us").and_then(|v| v.as_f64()), Some(3.5));
+    }
+
+    #[test]
+    fn spec_quant_bits_reads_the_trailing_segment() {
+        assert_eq!(spec_quant_bits("kvzap_mlp:-4"), 8);
+        assert_eq!(spec_quant_bits("kvzap_mlp:-4:floor=-8"), 8);
+        assert_eq!(spec_quant_bits("kvzap_mlp:-4:floor=-8:bits=4"), 4);
+        assert_eq!(spec_quant_bits("fastkvzip:-4:floor=-8:bits=2"), 2);
     }
 }

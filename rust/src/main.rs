@@ -14,7 +14,8 @@
 //!   metrics-demo                 quick built-in load test printing metrics
 //!   simulate [--seed S|A..B] [--steps K] [--clients N] [--max-batch B]
 //!            [--quick] [--no-solo] [--check-threads] [--threads T]
-//!            [--spec-file PATH] [--fault-step K] [--tiered]
+//!            [--spec-file PATH] [--fault-step K] [--fault-quant-step K]
+//!            [--tiered]
 //!                                deterministic multi-client scenario fuzzer
 //!                                with invariant checking (docs/TESTING.md);
 //!                                --tiered scripts demotion-heavy episodes
@@ -106,13 +107,25 @@ fn simulate(args: &Args) -> Result<()> {
             Some(v.parse().map_err(|_| anyhow!("bad --threads '{v}' (want a count)"))?)
         }
     };
-    let fault = match args.kv.get("fault-step") {
-        None => None,
-        Some(v) => {
+    let fault = match (args.kv.get("fault-step"), args.kv.get("fault-quant-step")) {
+        (Some(_), Some(_)) => {
+            return Err(anyhow!(
+                "--fault-step and --fault-quant-step are mutually exclusive \
+                 (one injected bug per mutation run)"
+            ))
+        }
+        (Some(v), None) => {
             let step =
                 v.parse().map_err(|_| anyhow!("bad --fault-step '{v}' (want a step)"))?;
             Some(Fault::PhantomRowFetch { step })
         }
+        (None, Some(v)) => {
+            let step = v
+                .parse()
+                .map_err(|_| anyhow!("bad --fault-quant-step '{v}' (want a step)"))?;
+            Some(Fault::PhantomQuantAttend { step })
+        }
+        (None, None) => None,
     };
     let opts = SimOptions {
         threads,

@@ -43,6 +43,14 @@ pub struct TransferCounters {
     pub tier_bytes_stored: AtomicU64,
     /// Cumulative quantized bytes freed by rehydrate/drop ops.
     pub tier_bytes_freed: AtomicU64,
+    /// Side-tier rows attended *in place* (dequantize-in-register) by the
+    /// quantized decode path. Device-local like demotes/rehydrates: these
+    /// rows cost compute, not host↔device transfer, so they never touch
+    /// the `bytes_*` totals.
+    pub quant_attend_rows: AtomicU64,
+    /// Quantized payload bytes read by quant-attended rows (rows × the
+    /// side tier's per-entry footprint).
+    pub quant_attend_bytes: AtomicU64,
 }
 
 impl TransferCounters {
@@ -76,6 +84,12 @@ impl TransferCounters {
         self.tier_bytes_freed.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Record side-tier rows attended in place by a quantized decode step.
+    pub fn note_quant_attend(&self, rows: u64, bytes: u64) {
+        self.quant_attend_rows.fetch_add(rows, Ordering::Relaxed);
+        self.quant_attend_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
             kv_bytes_up: self.kv_bytes_up.load(Ordering::Relaxed),
@@ -88,6 +102,8 @@ impl TransferCounters {
             rehydrates: self.rehydrates.load(Ordering::Relaxed),
             tier_bytes_stored: self.tier_bytes_stored.load(Ordering::Relaxed),
             tier_bytes_freed: self.tier_bytes_freed.load(Ordering::Relaxed),
+            quant_attend_rows: self.quant_attend_rows.load(Ordering::Relaxed),
+            quant_attend_bytes: self.quant_attend_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -106,6 +122,8 @@ pub struct TransferSnapshot {
     pub rehydrates: u64,
     pub tier_bytes_stored: u64,
     pub tier_bytes_freed: u64,
+    pub quant_attend_rows: u64,
+    pub quant_attend_bytes: u64,
 }
 
 #[derive(Default)]
@@ -125,6 +143,11 @@ pub struct EngineMetrics {
     pub e2e: Mutex<Histogram>,
     pub requests: AtomicU64,
     pub tokens_out: AtomicU64,
+    /// Side-tier rows attended in place (no rehydrate) across all decode
+    /// steps — the steady-state *compute* footprint of the demoted tier.
+    pub quant_attend_rows: AtomicU64,
+    /// Quantized payload bytes read by those in-place attends.
+    pub quant_attend_bytes: AtomicU64,
     /// Sum of per-request compression ratios ×1e6 (for a cheap mean).
     compression_micro: AtomicU64,
 }
@@ -146,12 +169,20 @@ impl EngineMetrics {
         }
     }
 
+    /// Record side-tier rows a decode step attended without rehydration.
+    pub fn note_quant_attend(&self, rows: u64, bytes: u64) {
+        self.quant_attend_rows.fetch_add(rows, Ordering::Relaxed);
+        self.quant_attend_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens_out={} mean_compression={:.3}\n  prefill {}\n  decode_step {}\n  step_kv_up {}\n  step_kv_down {}\n  e2e {}",
+            "requests={} tokens_out={} mean_compression={:.3} quant_attend_rows={} quant_attend_bytes={}\n  prefill {}\n  decode_step {}\n  step_kv_up {}\n  step_kv_down {}\n  e2e {}",
             self.requests.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
             self.mean_compression(),
+            self.quant_attend_rows.load(Ordering::Relaxed),
+            self.quant_attend_bytes.load(Ordering::Relaxed),
             self.prefill.lock().unwrap().summary("us"),
             self.decode_step.lock().unwrap().summary("us"),
             self.step_kv_up.lock().unwrap().summary("B"),
@@ -183,11 +214,15 @@ mod tests {
         t.add_kv_up(100);
         t.add_kv_down(200);
         t.mask_uploads.fetch_add(1, Ordering::Relaxed);
+        t.note_quant_attend(7, 70);
         let s = t.snapshot();
         assert_eq!(s.kv_bytes_up, 100);
         assert_eq!(s.kv_bytes_down, 200);
         assert_eq!(s.bytes_up, 110, "kv uploads count toward the total");
         assert_eq!(s.bytes_down, 220);
         assert_eq!(s.mask_uploads, 1);
+        assert_eq!(s.quant_attend_rows, 7);
+        assert_eq!(s.quant_attend_bytes, 70);
+        assert_eq!(s.bytes_up, 110, "quant attends are device-local");
     }
 }

@@ -23,6 +23,7 @@ pub use score_buffer::ScoreBuffer;
 pub use spec::{PolicySpec, Surrogate};
 
 use crate::kvcache::PagedKvCache;
+use crate::runtime::kernels::QuantBits;
 use crate::runtime::Tensor;
 use crate::util::rng::Rng;
 
@@ -129,6 +130,14 @@ pub trait PrunePolicy: Send + Sync {
         None
     }
 
+    /// Code width of the quantized side tier this policy demotes into.
+    /// Only consulted when [`PrunePolicy::decode_floor`] is set; narrower
+    /// widths trade side-pool bytes for round-trip error. The engine sizes
+    /// each sequence's [`crate::kvcache::TierConfig`] from this.
+    fn tier_bits(&self) -> QuantBits {
+        QuantBits::Int8
+    }
+
     /// Whether the KVzip oracle double-pass must be run for this policy.
     fn needs_oracle(&self) -> bool {
         false
@@ -163,19 +172,27 @@ pub struct KVzap {
     /// Demotion floor τ_floor ≤ τ: scores in `[floor, τ)` demote to the
     /// quantized side tier instead of dropping. `None` = drop-only.
     pub floor: Option<f32>,
+    /// Code width of the side tier demoted entries land in (int8 default;
+    /// int4/int2 shrink the bytes axis at higher round-trip error).
+    pub bits: QuantBits,
     pub window: usize,
 }
 
 impl KVzap {
     pub fn linear(tau: f32, window: usize) -> Self {
-        KVzap { mlp: false, tau, floor: None, window }
+        KVzap { mlp: false, tau, floor: None, bits: QuantBits::Int8, window }
     }
     pub fn mlp(tau: f32, window: usize) -> Self {
-        KVzap { mlp: true, tau, floor: None, window }
+        KVzap { mlp: true, tau, floor: None, bits: QuantBits::Int8, window }
     }
     /// Set (or clear) the demotion floor — builder-style.
     pub fn with_floor(mut self, floor: Option<f32>) -> Self {
         self.floor = floor;
+        self
+    }
+    /// Set the side-tier code width — builder-style.
+    pub fn with_bits(mut self, bits: QuantBits) -> Self {
+        self.bits = bits;
         self
     }
 }
@@ -185,6 +202,9 @@ impl PrunePolicy for KVzap {
         let mut n = format!("kvzap_{}_tau{}", if self.mlp { "mlp" } else { "linear" }, self.tau);
         if let Some(fl) = self.floor {
             n.push_str(&format!("_floor{fl}"));
+            if self.bits != QuantBits::Int8 {
+                n.push_str(&format!("_{}", self.bits.name()));
+            }
         }
         n
     }
@@ -232,6 +252,10 @@ impl PrunePolicy for KVzap {
 
     fn decode_floor(&self) -> Option<f32> {
         self.floor
+    }
+
+    fn tier_bits(&self) -> QuantBits {
+        self.bits
     }
 }
 

@@ -19,6 +19,7 @@
 
 use super::{protected, Blend, BudgetPolicy, Granularity, PrefillView, PrunePolicy, Stat};
 use crate::kvcache::PagedKvCache;
+use crate::runtime::kernels::QuantBits;
 
 /// Keyformer-style key-token press: per-head budget over
 /// `(1 - mix) * cum_attn + mix * max_attn`.
@@ -69,6 +70,8 @@ pub struct FastKvzip {
     /// with `mlp ∈ [floor, τ)` demote to the quantized side tier instead
     /// of dropping. `None` = drop-only.
     pub floor: Option<f32>,
+    /// Code width of the side tier (only meaningful with a floor).
+    pub bits: QuantBits,
     /// Sliding-window size (positions this recent are never evicted).
     pub window: usize,
 }
@@ -78,6 +81,9 @@ impl PrunePolicy for FastKvzip {
         let mut n = format!("fastkvzip_tau{}_gate{}", self.tau, self.gate_tau);
         if let Some(fl) = self.floor {
             n.push_str(&format!("_floor{fl}"));
+            if self.bits != QuantBits::Int8 {
+                n.push_str(&format!("_{}", self.bits.name()));
+            }
         }
         n
     }
@@ -127,6 +133,10 @@ impl PrunePolicy for FastKvzip {
     fn decode_floor(&self) -> Option<f32> {
         self.floor
     }
+
+    fn tier_bits(&self) -> QuantBits {
+        self.bits
+    }
 }
 
 #[cfg(test)]
@@ -168,7 +178,7 @@ mod tests {
         cache.fill(48);
         // mlp = p, lin = 63 - p: with tau = 30 and gate = 30, eviction
         // needs p < 30 && 63 - p < 30, i.e. 33 < p < 30 — impossible.
-        FastKvzip { tau: 30.0, gate_tau: 30.0, floor: None, window: 4 }
+        FastKvzip { tau: 30.0, gate_tau: 30.0, floor: None, bits: QuantBits::Int8, window: 4 }
             .prefill_prune(&view, 48, &mut cache);
         for p in 0..48 {
             assert!(cache.is_kept(0, 0, p), "pos {p} wrongly evicted");
@@ -176,7 +186,7 @@ mod tests {
         // raise the gate so the low-mlp prefix loses its second vote
         let mut cache = PagedKvCache::new(1, 1, 64);
         cache.fill(48);
-        FastKvzip { tau: 30.0, gate_tau: 1000.0, floor: None, window: 4 }
+        FastKvzip { tau: 30.0, gate_tau: 1000.0, floor: None, bits: QuantBits::Int8, window: 4 }
             .prefill_prune(&view, 48, &mut cache);
         assert!(!cache.is_kept(0, 0, 10)); // mlp 10 < 30, lin 53 < 1000
         assert!(cache.is_kept(0, 0, 35)); // mlp 35 >= 30

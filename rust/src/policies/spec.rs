@@ -12,7 +12,10 @@
 //! `:floor=<value>` segment (string form) or a `"floor"` field (JSON)
 //! sets τ_floor ≤ τ — scores in `[floor, τ)` are demoted into the
 //! quantized side tier instead of dropped, and only scores below the
-//! floor are truly evicted. Threshold positions also accept `qNN`
+//! floor are truly evicted. A further trailing `:bits=<8|4|2>` segment
+//! (JSON: `"bits"`) picks the tier's code width — int8 default, int4/int2
+//! trade side-pool bytes for round-trip error; the canonical order is
+//! `form:τ:floor=<f>:bits=<b>`. Threshold positions also accept `qNN`
 //! quantile sugar over the reference surrogate score distribution
 //! (`kvzap_mlp:q50:floor=q90`): in the τ position `qNN` is the NN-th
 //! score quantile; in the floor position it spares the top NN% of the
@@ -48,6 +51,7 @@ use super::{
     kvzip_oracle, kvzip_plus_oracle, observed_attention, snapkv, tova, FastKvzip, KVzap,
     NoPress, PrunePolicy, RandomPress, StreamingLlm,
 };
+use crate::runtime::kernels::QuantBits;
 use crate::util::json::Json;
 
 /// Which surrogate scorer drives a KVzap variant (paper §3.2).
@@ -123,8 +127,9 @@ pub enum PolicySpec {
     Full,
     /// KVzap thresholding (paper §3.3): evict below τ, decode-capable.
     /// With `floor` set, scores in `[floor, τ)` demote to the quantized
-    /// side tier instead of dropping (two-threshold tiered form).
-    Kvzap { surrogate: Surrogate, tau: f64, floor: Option<f64> },
+    /// side tier instead of dropping (two-threshold tiered form); `bits`
+    /// picks the tier's code width (int8 default, `:bits=4|2` narrows it).
+    Kvzap { surrogate: Surrogate, tau: f64, floor: Option<f64>, bits: QuantBits },
     /// Fixed-ratio top-k on the KVzap surrogate (Fig. 5 right ablation).
     KvzapTopk { surrogate: Surrogate, keep_frac: f64, per_layer: bool },
     /// KVzip oracle (double-pass) budget policy; `plus` uses s+.
@@ -151,8 +156,8 @@ pub enum PolicySpec {
     Keyformer { keep_frac: f64, mix: f64 },
     /// Fast-KVzip: gated thresholding — eviction needs the MLP score
     /// below `tau` *and* the linear score below `gate_tau`; decode-capable.
-    /// `floor` enables the same tiered demotion band as [`Self::Kvzap`].
-    FastKvzip { tau: f64, gate_tau: f64, floor: Option<f64> },
+    /// `floor`/`bits` enable the same tiered demotion band as [`Self::Kvzap`].
+    FastKvzip { tau: f64, gate_tau: f64, floor: Option<f64>, bits: QuantBits },
     /// Expected attention rescaled by value norm, per-head budget.
     ExpectedAttnVnorm { keep_frac: f64 },
 }
@@ -190,8 +195,14 @@ impl PolicySpec {
         let mut it = spec.split(':');
         let name = it.next().unwrap_or("");
         let mut params: Vec<&str> = it.collect();
-        // the two-threshold floor rides as a named trailing segment so the
-        // positional parameters keep their one-threshold meaning
+        // the two-threshold floor (and its optional code width) ride as
+        // named trailing segments so the positional parameters keep their
+        // one-threshold meaning; canonical order is `...:floor=f:bits=b`
+        let mut bits_seg: Option<&str> = None;
+        if let Some(rest) = params.last().and_then(|s| s.strip_prefix("bits=")) {
+            bits_seg = Some(rest);
+            params.pop();
+        }
         let mut floor_seg: Option<&str> = None;
         if let Some(rest) = params.last().and_then(|s| s.strip_prefix("floor=")) {
             floor_seg = Some(rest);
@@ -204,6 +215,13 @@ impl PolicySpec {
                 "policy '{name}' does not take a ':floor=' parameter (threshold policies only)"
             ));
         }
+        if bits_seg.is_some() && floor_seg.is_none() {
+            return Err(anyhow!(
+                "policy '{name}': ':bits=' needs a ':floor=' demotion band to apply to \
+                 (canonical order is ':floor=<f>:bits=<8|4|2>')"
+            ));
+        }
+        let bits = bits_seg.map(|s| bits_param(name, s)).transpose()?.unwrap_or(QuantBits::Int8);
         let num = |i: usize, default: f64| -> Result<f64> {
             match params.get(i) {
                 None => Ok(default),
@@ -244,6 +262,7 @@ impl PolicySpec {
                     surrogate: surrogate_of(name),
                     tau,
                     floor: floor_seg.map(|s| floor_param(name, s, tau)).transpose()?,
+                    bits,
                 }
             }
             "kvzap_mlp_topk" | "kvzap_linear_topk" => {
@@ -327,6 +346,7 @@ impl PolicySpec {
                     // the agreement gate follows τ unless set explicitly
                     gate_tau: tau_at(1, tau)?,
                     floor: floor_seg.map(|s| floor_param(name, s, tau)).transpose()?,
+                    bits,
                 }
             }
             "expected_attn_vnorm" => {
@@ -400,11 +420,28 @@ impl PolicySpec {
                 },
             }
         };
+        let bits_field = |floor: &Option<f64>| -> Result<QuantBits> {
+            match obj.get("bits") {
+                None => Ok(QuantBits::Int8),
+                Some(_) if floor.is_none() => Err(anyhow!(
+                    "policy '{kind}': 'bits' needs a 'floor' demotion band to apply to"
+                )),
+                Some(v) => {
+                    let w = v.as_f64().filter(|x| x.fract() == 0.0).ok_or_else(|| {
+                        anyhow!("policy '{kind}': field 'bits' must be 8, 4 or 2")
+                    })?;
+                    QuantBits::from_width(w as u64)
+                        .ok_or_else(|| anyhow!("policy '{kind}': bad code width {w} (want 8|4|2)"))
+                }
+            }
+        };
         let spec = match kind {
             "full" => PolicySpec::Full,
             "kvzap" => {
                 let tau = thresh("tau", DEFAULT_TAU)?;
-                PolicySpec::Kvzap { surrogate: surrogate()?, tau, floor: floor_field(tau)? }
+                let floor = floor_field(tau)?;
+                let bits = bits_field(&floor)?;
+                PolicySpec::Kvzap { surrogate: surrogate()?, tau, floor, bits }
             }
             "kvzap_topk" => PolicySpec::KvzapTopk {
                 surrogate: surrogate()?,
@@ -436,11 +473,9 @@ impl PolicySpec {
             },
             "fastkvzip" => {
                 let tau = thresh("tau", DEFAULT_TAU)?;
-                PolicySpec::FastKvzip {
-                    tau,
-                    gate_tau: thresh("gate_tau", tau)?,
-                    floor: floor_field(tau)?,
-                }
+                let floor = floor_field(tau)?;
+                let bits = bits_field(&floor)?;
+                PolicySpec::FastKvzip { tau, gate_tau: thresh("gate_tau", tau)?, floor, bits }
             }
             "expected_attn_vnorm" => {
                 PolicySpec::ExpectedAttnVnorm { keep_frac: keep("keep_frac")? }
@@ -455,7 +490,7 @@ impl PolicySpec {
         let kind = Json::str(self.kind());
         match *self {
             PolicySpec::Full => Json::obj(vec![("kind", kind)]),
-            PolicySpec::Kvzap { surrogate, tau, floor } => {
+            PolicySpec::Kvzap { surrogate, tau, floor, bits } => {
                 let mut fields = vec![
                     ("kind", kind),
                     ("surrogate", Json::str(surrogate.as_str())),
@@ -463,6 +498,9 @@ impl PolicySpec {
                 ];
                 if let Some(f) = floor {
                     fields.push(("floor", Json::num(f)));
+                    if bits != QuantBits::Int8 {
+                        fields.push(("bits", Json::num(bits.width() as f64)));
+                    }
                 }
                 Json::obj(fields)
             }
@@ -492,11 +530,14 @@ impl PolicySpec {
                 ("keep_frac", Json::num(keep_frac)),
                 ("mix", Json::num(mix)),
             ]),
-            PolicySpec::FastKvzip { tau, gate_tau, floor } => {
+            PolicySpec::FastKvzip { tau, gate_tau, floor, bits } => {
                 let mut fields =
                     vec![("kind", kind), ("tau", Json::num(tau)), ("gate_tau", Json::num(gate_tau))];
                 if let Some(f) = floor {
                     fields.push(("floor", Json::num(f)));
+                    if bits != QuantBits::Int8 {
+                        fields.push(("bits", Json::num(bits.width() as f64)));
+                    }
                 }
                 Json::obj(fields)
             }
@@ -518,12 +559,13 @@ impl PolicySpec {
     pub fn build(&self, window: usize) -> Box<dyn PrunePolicy> {
         match *self {
             PolicySpec::Full => Box::new(NoPress),
-            PolicySpec::Kvzap { surrogate, tau, floor } => Box::new(
+            PolicySpec::Kvzap { surrogate, tau, floor, bits } => Box::new(
                 match surrogate {
                     Surrogate::Mlp => KVzap::mlp(tau as f32, window),
                     Surrogate::Linear => KVzap::linear(tau as f32, window),
                 }
-                .with_floor(floor.map(|f| f as f32)),
+                .with_floor(floor.map(|f| f as f32))
+                .with_bits(bits),
             ),
             PolicySpec::KvzapTopk { surrogate, keep_frac, per_layer } => Box::new(kvzap_topk(
                 matches!(surrogate, Surrogate::Mlp),
@@ -556,10 +598,11 @@ impl PolicySpec {
             PolicySpec::Keyformer { keep_frac, mix } => {
                 Box::new(keyformer(keep_frac, mix, window))
             }
-            PolicySpec::FastKvzip { tau, gate_tau, floor } => Box::new(FastKvzip {
+            PolicySpec::FastKvzip { tau, gate_tau, floor, bits } => Box::new(FastKvzip {
                 tau: tau as f32,
                 gate_tau: gate_tau as f32,
                 floor: floor.map(|f| f as f32),
+                bits,
                 window,
             }),
             PolicySpec::ExpectedAttnVnorm { keep_frac } => {
@@ -600,6 +643,13 @@ fn floor_param(name: &str, s: &str, tau: f64) -> Result<f64> {
         })?
     };
     check_floor(name, v, tau)
+}
+
+/// A `bits=` code width: 8, 4 or 2 (the [`QuantBits`] wire widths).
+fn bits_param(name: &str, s: &str) -> Result<QuantBits> {
+    s.parse::<u64>().ok().and_then(QuantBits::from_width).ok_or_else(|| {
+        anyhow!("policy '{name}': bad code width '{s}' (expected bits=8, bits=4 or bits=2)")
+    })
 }
 
 /// The demotion floor must sit at or below τ — a floor above τ would
@@ -646,10 +696,13 @@ impl fmt::Display for PolicySpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match *self {
             PolicySpec::Full => write!(f, "full"),
-            PolicySpec::Kvzap { surrogate, tau, floor } => {
+            PolicySpec::Kvzap { surrogate, tau, floor, bits } => {
                 write!(f, "kvzap_{}:{}", surrogate.as_str(), tau)?;
                 if let Some(fl) = floor {
                     write!(f, ":floor={fl}")?;
+                    if bits != QuantBits::Int8 {
+                        write!(f, ":bits={}", bits.width())?;
+                    }
                 }
                 Ok(())
             }
@@ -691,7 +744,7 @@ impl fmt::Display for PolicySpec {
                     write!(f, "keyformer:{keep_frac}:{mix}")
                 }
             }
-            PolicySpec::FastKvzip { tau, gate_tau, floor } => {
+            PolicySpec::FastKvzip { tau, gate_tau, floor, bits } => {
                 if gate_tau == tau {
                     write!(f, "fastkvzip:{tau}")?;
                 } else {
@@ -699,6 +752,9 @@ impl fmt::Display for PolicySpec {
                 }
                 if let Some(fl) = floor {
                     write!(f, ":floor={fl}")?;
+                    if bits != QuantBits::Int8 {
+                        write!(f, ":bits={}", bits.width())?;
+                    }
                 }
                 Ok(())
             }
@@ -764,6 +820,11 @@ const P_FLOOR: PolicyParam = PolicyParam {
     default: DEFAULT_TAU,
     doc: "demotion floor <= tau: scores in [floor, tau) quantize to the side tier instead of dropping",
 };
+const P_BITS: PolicyParam = PolicyParam {
+    name: "bits",
+    default: 8.0,
+    doc: "side-tier code width (8|4|2); narrower widths shrink side-pool bytes at higher round-trip error",
+};
 
 /// Every policy kind the stack understands, with parameters and defaults.
 pub const CATALOG: &[PolicyInfo] = &[
@@ -776,16 +837,16 @@ pub const CATALOG: &[PolicyInfo] = &[
     PolicyInfo {
         kind: "kvzap",
         string_forms: &["kvzap_mlp", "kvzap_linear"],
-        params: &[P_TAU, P_FLOOR],
+        params: &[P_TAU, P_FLOOR, P_BITS],
         doc: "KVzap thresholding (surrogate: mlp|linear); prunes during decode; \
-              ':floor=' enables the tiered demotion band",
+              ':floor=' enables the tiered demotion band, ':bits=' its code width",
     },
     PolicyInfo {
         kind: "fastkvzip",
         string_forms: &["fastkvzip"],
-        params: &[P_TAU, P_GATE, P_FLOOR],
+        params: &[P_TAU, P_GATE, P_FLOOR, P_BITS],
         doc: "Fast-KVzip rival: gated thresholding (mlp AND linear agree); prunes during decode; \
-              ':floor=' enables the tiered demotion band",
+              ':floor=' enables the tiered demotion band, ':bits=' its code width",
     },
     PolicyInfo {
         kind: "kvzap_topk",
@@ -913,10 +974,12 @@ mod tests {
     fn sample_specs() -> Vec<PolicySpec> {
         vec![
             PolicySpec::Full,
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: None },
-            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -6.5, floor: None },
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: Some(-9.0) },
-            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -2.0, floor: Some(-2.0) },
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: None, bits: QuantBits::Int8 },
+            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -6.5, floor: None, bits: QuantBits::Int8 },
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: Some(-9.0), bits: QuantBits::Int8 },
+            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -2.0, floor: Some(-2.0), bits: QuantBits::Int8 },
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: Some(-9.0), bits: QuantBits::Int4 },
+            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -4.0, floor: Some(-7.0), bits: QuantBits::Int2 },
             PolicySpec::KvzapTopk {
                 surrogate: Surrogate::Mlp,
                 keep_frac: 0.5,
@@ -942,10 +1005,11 @@ mod tests {
             PolicySpec::Random { keep_frac: 0.5, seed: 7 },
             PolicySpec::Keyformer { keep_frac: 0.5, mix: DEFAULT_MIX },
             PolicySpec::Keyformer { keep_frac: 0.25, mix: 1.0 },
-            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0, floor: None },
-            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -7.5, floor: None },
-            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0, floor: Some(-10.0) },
-            PolicySpec::FastKvzip { tau: -3.0, gate_tau: -5.0, floor: Some(-8.5) },
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0, floor: None, bits: QuantBits::Int8 },
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -7.5, floor: None, bits: QuantBits::Int8 },
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0, floor: Some(-10.0), bits: QuantBits::Int8 },
+            PolicySpec::FastKvzip { tau: -3.0, gate_tau: -5.0, floor: Some(-8.5), bits: QuantBits::Int8 },
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -5.0, floor: Some(-9.0), bits: QuantBits::Int4 },
             PolicySpec::ExpectedAttnVnorm { keep_frac: 0.35 },
         ]
     }
@@ -974,7 +1038,7 @@ mod tests {
     #[test]
     fn json_string_form_accepted() {
         let spec = PolicySpec::from_json(&Json::str("kvzap_mlp:-4")).unwrap();
-        assert_eq!(spec, PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: None });
+        assert_eq!(spec, PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -4.0, floor: None, bits: QuantBits::Int8 });
     }
 
     #[test]
@@ -982,28 +1046,83 @@ mod tests {
         // qNN in the τ position is a direct decile lookup
         assert_eq!(
             PolicySpec::parse("kvzap_mlp:q50").unwrap(),
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -6.0, floor: None }
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -6.0, floor: None, bits: QuantBits::Int8 }
         );
         // floor=qNN spares the top NN% of sub-τ mass → complementary decile
         assert_eq!(
             PolicySpec::parse("kvzap_mlp:q50:floor=q90").unwrap(),
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -6.0, floor: Some(-10.0) }
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: -6.0, floor: Some(-10.0), bits: QuantBits::Int8 }
         );
         // raw floats work in both positions
         assert_eq!(
             PolicySpec::parse("kvzap_linear:-4:floor=-9").unwrap(),
-            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -4.0, floor: Some(-9.0) }
+            PolicySpec::Kvzap { surrogate: Surrogate::Linear, tau: -4.0, floor: Some(-9.0), bits: QuantBits::Int8 }
         );
         // fastkvzip: floor rides after the optional gate, and the bare
         // floor form leaves τ at its default
         assert_eq!(
             PolicySpec::parse("fastkvzip:-4:-5:floor=q80").unwrap(),
-            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -5.0, floor: Some(-9.0) }
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -5.0, floor: Some(-9.0), bits: QuantBits::Int8 }
         );
         assert_eq!(
             PolicySpec::parse("kvzap_mlp:floor=q90").unwrap(),
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU, floor: Some(-10.0) }
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU, floor: Some(-10.0), bits: QuantBits::Int8 }
         );
+    }
+
+    #[test]
+    fn bits_segment_parses_and_round_trips() {
+        // string form, canonical trailing order form:τ:floor=f:bits=b
+        assert_eq!(
+            PolicySpec::parse("kvzap_mlp:-4:floor=-9:bits=4").unwrap(),
+            PolicySpec::Kvzap {
+                surrogate: Surrogate::Mlp,
+                tau: -4.0,
+                floor: Some(-9.0),
+                bits: QuantBits::Int4
+            }
+        );
+        // quantile sugar composes with bits
+        assert_eq!(
+            PolicySpec::parse("fastkvzip:-4:-5:floor=q80:bits=2").unwrap(),
+            PolicySpec::FastKvzip {
+                tau: -4.0,
+                gate_tau: -5.0,
+                floor: Some(-9.0),
+                bits: QuantBits::Int2
+            }
+        );
+        // bits=8 is the default and canonicalizes away
+        let spec = PolicySpec::parse("kvzap_mlp:-4:floor=-9:bits=8").unwrap();
+        assert_eq!(spec.to_string(), "kvzap_mlp:-4:floor=-9");
+        // JSON form
+        let j = Json::parse(r#"{"kind": "kvzap", "tau": -4.0, "floor": -9.0, "bits": 4}"#).unwrap();
+        assert_eq!(
+            PolicySpec::from_json(&j).unwrap(),
+            PolicySpec::parse("kvzap_mlp:-4:floor=-9:bits=4").unwrap()
+        );
+    }
+
+    #[test]
+    fn bits_segment_rejects_bad_forms() {
+        for bad in [
+            "kvzap_mlp:-4:bits=4",          // bits without a floor band
+            "kvzap_mlp:-4:floor=-9:bits=3", // unsupported width
+            "kvzap_mlp:-4:floor=-9:bits=",  // empty width
+            "kvzap_mlp:-4:bits=4:floor=-9", // wrong trailing order
+            "h2o:0.5:bits=4",               // budget policies take no bits
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+        for bad in [
+            r#"{"kind": "kvzap", "tau": -4.0, "bits": 4}"#,
+            r#"{"kind": "kvzap", "tau": -4.0, "floor": -9.0, "bits": 3}"#,
+            r#"{"kind": "kvzap", "tau": -4.0, "floor": -9.0, "bits": 4.5}"#,
+            r#"{"kind": "fastkvzip", "bits": 2}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(PolicySpec::from_json(&j).is_err(), "'{bad}' must be rejected");
+        }
     }
 
     #[test]
@@ -1022,7 +1141,7 @@ mod tests {
         let j = Json::parse(r#"{"kind": "fastkvzip", "tau": -4.0, "floor": "q80"}"#).unwrap();
         assert_eq!(
             PolicySpec::from_json(&j).unwrap(),
-            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0, floor: Some(-9.0) }
+            PolicySpec::FastKvzip { tau: -4.0, gate_tau: -4.0, floor: Some(-9.0), bits: QuantBits::Int8 }
         );
     }
 
@@ -1073,12 +1192,12 @@ mod tests {
     fn defaults_applied() {
         assert_eq!(
             PolicySpec::parse("kvzap_mlp").unwrap(),
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU, floor: None }
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU, floor: None, bits: QuantBits::Int8 }
         );
         let j = Json::parse(r#"{"kind": "kvzap"}"#).unwrap();
         assert_eq!(
             PolicySpec::from_json(&j).unwrap(),
-            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU, floor: None }
+            PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: DEFAULT_TAU, floor: None, bits: QuantBits::Int8 }
         );
         assert_eq!(
             PolicySpec::parse("streaming_llm").unwrap(),

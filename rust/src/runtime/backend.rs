@@ -236,6 +236,30 @@ pub trait Backend: Send + Sync {
         h: &KvHandle,
     ) -> Result<Vec<Buffer>>;
 
+    /// [`Backend::exec_decode_resident`], but every slot additionally
+    /// attends its demoted side-tier entries *in quantized form*: codes
+    /// are dequantized in-register inside the score/value loops and the
+    /// rows join the softmax after the appended new-KV row, so demoted
+    /// positions contribute to attention with **zero** `kv_rehydrate`
+    /// calls and zero transfer bytes. Returns the same outputs plus one
+    /// [`QuantAttendStat`] per slot (rows/bytes attended this step).
+    ///
+    /// The default delegates to the plain resident step with zero stats —
+    /// correct for backends without a quantized tier (nothing is ever
+    /// demoted there, so there is nothing to attend), and for tier-capable
+    /// backends that have not implemented fused quantized compute yet
+    /// (their engines keep rehydrating for correctness).
+    fn exec_decode_resident_quant(
+        &self,
+        meta: &ArtifactMeta,
+        tokens: &[i32],
+        pos: &[i32],
+        h: &KvHandle,
+    ) -> Result<(Vec<Buffer>, Vec<QuantAttendStat>)> {
+        let outs = self.exec_decode_resident(meta, tokens, pos, h)?;
+        Ok((outs, vec![QuantAttendStat::default(); h.batch]))
+    }
+
     // ---- demoted (quantized) KV tier -------------------------------------
 
     /// Demote position `pos` of `(l, head)` in `slot` into the backend's
@@ -290,4 +314,25 @@ pub trait Backend: Send + Sync {
     ) -> Result<usize> {
         Ok(0)
     }
+
+    /// Drop **every** demoted entry parked under `slot` — the vacate-path
+    /// bulk sibling of [`Backend::kv_drop_demoted`]. The engine calls it
+    /// when a sequence leaves its decode slot, so a stale occupant's side
+    /// entries can never be quant-attended by (or counted against) the
+    /// next occupant. Returns the number of entries purged; no-op (0) on
+    /// backends without a quantized tier.
+    fn kv_drop_slot(&self, _h: &KvHandle, _slot: usize) -> Result<usize> {
+        Ok(0)
+    }
+}
+
+/// Per-slot accounting of one quant-attended decode step: how many
+/// demoted side-tier entries joined the softmax and how many side-pool
+/// bytes they occupy. Device-local compute — never charged as transfer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QuantAttendStat {
+    /// Side entries attended this step (one per demoted `(l, head, pos)`).
+    pub rows: usize,
+    /// Side-pool bytes backing those entries.
+    pub bytes: usize,
 }

@@ -151,6 +151,399 @@ pub fn fast_exp(x: f32) -> f32 {
     y * f32::from_bits(((n as i32 + 127) << 23) as u32)
 }
 
+// ------------------------------------------------------------ SIMD dispatch
+//
+// Explicit-vector variants of the hot microkernels (AVX2 on x86_64, NEON
+// on aarch64) behind runtime feature detection. Every vector kernel here
+// is **bitwise identical** to its scalar blocked counterpart: the panel
+// matmul and the kt score kernel keep one independent accumulator per
+// output lane with the same ascending-k reduction order (separate mul
+// then add — never FMA, which would contract the rounding), and the
+// vector `fast_exp` is a lane-for-lane transcription of the scalar
+// polynomial. That makes `KVZAP_SIMD=scalar` vs `=auto` a bitwise no-op
+// on every prefill output, which the parity property tests and the
+// engine-level generation-invariance test pin down.
+
+/// Requested SIMD mode (the `KVZAP_SIMD` override, threaded through
+/// `ParallelConfig`). Resolution to an executable [`SimdLevel`] happens
+/// at backend construction via [`SimdMode::resolve`]; asking for an ISA
+/// the host lacks degrades to scalar rather than erroring, so one config
+/// works across machines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Pick the best supported level (AVX2 → NEON → scalar).
+    Auto,
+    /// Force AVX2 (scalar if the host lacks it).
+    Avx2,
+    /// Force NEON (scalar on non-aarch64 hosts).
+    Neon,
+    /// Force the scalar blocked path (the SIMD oracle).
+    Scalar,
+}
+
+impl SimdMode {
+    /// Parse the `KVZAP_SIMD` value (`auto|avx2|neon|scalar`).
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "" => Some(SimdMode::Auto),
+            "avx2" => Some(SimdMode::Avx2),
+            "neon" => Some(SimdMode::Neon),
+            "scalar" => Some(SimdMode::Scalar),
+            _ => None,
+        }
+    }
+
+    /// Wire/debug name of the requested mode.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Avx2 => "avx2",
+            SimdMode::Neon => "neon",
+            SimdMode::Scalar => "scalar",
+        }
+    }
+
+    /// Resolve the request against what the host actually supports.
+    pub fn resolve(self) -> SimdLevel {
+        match self {
+            SimdMode::Scalar => SimdLevel::Scalar,
+            SimdMode::Avx2 => {
+                if avx2_available() {
+                    SimdLevel::Avx2
+                } else {
+                    SimdLevel::Scalar
+                }
+            }
+            SimdMode::Neon => {
+                if neon_available() {
+                    SimdLevel::Neon
+                } else {
+                    SimdLevel::Scalar
+                }
+            }
+            SimdMode::Auto => {
+                if avx2_available() {
+                    SimdLevel::Avx2
+                } else if neon_available() {
+                    SimdLevel::Neon
+                } else {
+                    SimdLevel::Scalar
+                }
+            }
+        }
+    }
+}
+
+/// A resolved, executable SIMD level (host-verified — dispatch on this is
+/// branch-only, no feature re-detection on the hot path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Scalar blocked kernels (the oracle).
+    Scalar,
+    /// 8-lane AVX2 (x86_64, runtime-detected).
+    Avx2,
+    /// 4-lane NEON, 2x unrolled (aarch64).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Tag for `Backend::describe()` / bench JSON (`scalar|avx2|neon`).
+    pub fn tag(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Whether this level actually vectorizes (i.e. is not the scalar
+    /// fallback). The bench `--assert-speedup` gate degrades to a no-op
+    /// when `Auto` resolves to scalar — no red builds on plain hosts.
+    pub fn is_vector(self) -> bool {
+        self != SimdLevel::Scalar
+    }
+}
+
+/// Runtime AVX2 support (false off x86_64).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Runtime NEON support (false off aarch64).
+pub fn neon_available() -> bool {
+    #[cfg(target_arch = "aarch64")]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        false
+    }
+}
+
+/// Level-dispatched blocked matmul over a row range (see
+/// [`matmul_block_rows`]). Bitwise identical across every level.
+pub fn matmul_block_rows_level(
+    x: &[f32],
+    w: &[f32],
+    rows: std::ops::Range<usize>,
+    a: usize,
+    b: usize,
+    out: &mut [f32],
+    level: SimdLevel,
+) {
+    match level {
+        SimdLevel::Scalar => matmul_block_rows(x, w, rows, a, b, out),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            for i in rows {
+                let xrow = &x[i * a..i * a + a];
+                let orow = &mut out[i * b..i * b + b];
+                let mut j0 = 0;
+                while j0 + MM_LANES <= b {
+                    // SAFETY: level Avx2 only resolves when the host
+                    // reports avx2 (see SimdMode::resolve).
+                    unsafe { matmul_panel8_avx2(xrow, w, b, j0, orow) };
+                    j0 += MM_LANES;
+                }
+                matmul_panel_tail(xrow, w, b, j0, orow);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            for i in rows {
+                let xrow = &x[i * a..i * a + a];
+                let orow = &mut out[i * b..i * b + b];
+                let mut j0 = 0;
+                while j0 + MM_LANES <= b {
+                    // SAFETY: level Neon only resolves on aarch64.
+                    unsafe { matmul_panel8_neon(xrow, w, b, j0, orow) };
+                    j0 += MM_LANES;
+                }
+                matmul_panel_tail(xrow, w, b, j0, orow);
+            }
+        }
+        #[allow(unreachable_patterns)]
+        _ => matmul_block_rows(x, w, rows, a, b, out),
+    }
+}
+
+/// Scalar tail for the last (< [`MM_LANES`]-wide) column panel of a row —
+/// the same accumulator loop [`matmul_block_rows`] runs.
+fn matmul_panel_tail(xrow: &[f32], w: &[f32], b: usize, j0: usize, orow: &mut [f32]) {
+    if j0 >= b {
+        return;
+    }
+    let jn = b - j0;
+    let mut acc = [0.0f32; MM_LANES];
+    for (k, &xv) in xrow.iter().enumerate() {
+        let wrow = &w[k * b + j0..k * b + j0 + jn];
+        for c in 0..jn {
+            acc[c] += xv * wrow[c];
+        }
+    }
+    orow[j0..j0 + jn].copy_from_slice(&acc[..jn]);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_panel8_avx2(xrow: &[f32], w: &[f32], b: usize, j0: usize, orow: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let mut acc = _mm256_setzero_ps();
+    for (k, &xv) in xrow.iter().enumerate() {
+        let xvv = _mm256_set1_ps(xv);
+        let wv = _mm256_loadu_ps(w.as_ptr().add(k * b + j0));
+        // mul then add (not FMA): each lane runs the exact scalar op
+        // sequence acc[c] += xv * w[k*b+j0+c]
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xvv, wv));
+    }
+    _mm256_storeu_ps(orow.as_mut_ptr().add(j0), acc);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn matmul_panel8_neon(xrow: &[f32], w: &[f32], b: usize, j0: usize, orow: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    for (k, &xv) in xrow.iter().enumerate() {
+        let xvv = vdupq_n_f32(xv);
+        let p = w.as_ptr().add(k * b + j0);
+        acc0 = vaddq_f32(acc0, vmulq_f32(xvv, vld1q_f32(p)));
+        acc1 = vaddq_f32(acc1, vmulq_f32(xvv, vld1q_f32(p.add(4))));
+    }
+    vst1q_f32(orow.as_mut_ptr().add(j0), acc0);
+    vst1q_f32(orow.as_mut_ptr().add(j0 + 4), acc1);
+}
+
+/// Level-dispatched transposed score kernel (see [`scores_from_kt`]).
+/// The vector paths run the identical `row[s] += q[dd] * panel[s]`
+/// update per lane in the same `dd` order — bitwise identical to scalar.
+pub fn scores_from_kt_level(
+    q: &[f32],
+    kt: &[f32],
+    n_ctx: usize,
+    d: usize,
+    len: usize,
+    row: &mut [f32],
+    level: SimdLevel,
+) {
+    if level == SimdLevel::Scalar {
+        return scores_from_kt(q, kt, n_ctx, d, len, row);
+    }
+    row[..len].fill(0.0);
+    for dd in 0..d {
+        let qv = q[dd];
+        let panel = &kt[dd * n_ctx..dd * n_ctx + len];
+        let r = &mut row[..len];
+        axpy_level(qv, panel, r, level);
+    }
+}
+
+/// `r[i] += qv * x[i]` with the level's vector width (exact per element).
+fn axpy_level(qv: f32, x: &[f32], r: &mut [f32], level: SimdLevel) {
+    let n = x.len().min(r.len());
+    let mut i = 0;
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            while i + 8 <= n {
+                // SAFETY: Avx2 level implies host support; bounds checked.
+                unsafe { axpy8_avx2(qv, x.as_ptr().add(i), r.as_mut_ptr().add(i)) };
+                i += 8;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            while i + 8 <= n {
+                // SAFETY: Neon level implies aarch64; bounds checked.
+                unsafe { axpy8_neon(qv, x.as_ptr().add(i), r.as_mut_ptr().add(i)) };
+                i += 8;
+            }
+        }
+        _ => {}
+    }
+    for j in i..n {
+        r[j] += qv * x[j];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy8_avx2(qv: f32, x: *const f32, r: *mut f32) {
+    use std::arch::x86_64::*;
+    let acc = _mm256_add_ps(_mm256_loadu_ps(r), _mm256_mul_ps(_mm256_set1_ps(qv), _mm256_loadu_ps(x)));
+    _mm256_storeu_ps(r, acc);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy8_neon(qv: f32, x: *const f32, r: *mut f32) {
+    use std::arch::aarch64::*;
+    let qvv = vdupq_n_f32(qv);
+    vst1q_f32(r, vaddq_f32(vld1q_f32(r), vmulq_f32(qvv, vld1q_f32(x))));
+    vst1q_f32(r.add(4), vaddq_f32(vld1q_f32(r.add(4)), vmulq_f32(qvv, vld1q_f32(x.add(4)))));
+}
+
+/// Vectorized softmax numerator: `row[i] = fast_exp(row[i] - m)` for a
+/// whole row. The vector lanes run the exact scalar [`fast_exp`] op
+/// sequence (clamp, floor-based range reduction, Horner polynomial,
+/// exponent-bit scaling) — elementwise, so bitwise identical per lane.
+pub fn fast_exp_sub_rows(row: &mut [f32], m: f32, level: SimdLevel) {
+    let n = row.len();
+    let mut i = 0;
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            while i + 8 <= n {
+                // SAFETY: Avx2 level implies host support; bounds checked.
+                unsafe { fast_exp_sub8_avx2(row.as_mut_ptr().add(i), m) };
+                i += 8;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            while i + 4 <= n {
+                // SAFETY: Neon level implies aarch64; bounds checked.
+                unsafe { fast_exp_sub4_neon(row.as_mut_ptr().add(i), m) };
+                i += 4;
+            }
+        }
+        _ => {}
+    }
+    for r in &mut row[i..n] {
+        *r = fast_exp(*r - m);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::excessive_precision)]
+unsafe fn fast_exp_sub8_avx2(p: *mut f32, m: f32) {
+    use std::arch::x86_64::*;
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    const LN2_HI: f32 = 0.693_359_4;
+    const LN2_LO: f32 = -2.121_944_4e-4;
+    let x = _mm256_sub_ps(_mm256_loadu_ps(p), _mm256_set1_ps(m));
+    let x = _mm256_max_ps(_mm256_min_ps(x, _mm256_set1_ps(88.0)), _mm256_set1_ps(-87.0));
+    let n = _mm256_floor_ps(_mm256_add_ps(
+        _mm256_mul_ps(x, _mm256_set1_ps(LOG2E)),
+        _mm256_set1_ps(0.5),
+    ));
+    let xr = _mm256_sub_ps(
+        _mm256_sub_ps(x, _mm256_mul_ps(n, _mm256_set1_ps(LN2_HI))),
+        _mm256_mul_ps(n, _mm256_set1_ps(LN2_LO)),
+    );
+    let mut pl = _mm256_set1_ps(1.987_569_1e-4);
+    for c in [1.398_199_9e-3f32, 8.333_452e-3, 4.166_579_6e-2, 1.666_666_5e-1, 5.000_000_1e-1] {
+        pl = _mm256_add_ps(_mm256_mul_ps(pl, xr), _mm256_set1_ps(c));
+    }
+    let y = _mm256_add_ps(
+        _mm256_add_ps(_mm256_mul_ps(_mm256_mul_ps(pl, xr), xr), xr),
+        _mm256_set1_ps(1.0),
+    );
+    // 2^n through the exponent bits, like the scalar path
+    let two_n = _mm256_castsi256_ps(_mm256_slli_epi32(
+        _mm256_add_epi32(_mm256_cvtps_epi32(n), _mm256_set1_epi32(127)),
+        23,
+    ));
+    _mm256_storeu_ps(p, _mm256_mul_ps(y, two_n));
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::excessive_precision)]
+unsafe fn fast_exp_sub4_neon(p: *mut f32, m: f32) {
+    use std::arch::aarch64::*;
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    const LN2_HI: f32 = 0.693_359_4;
+    const LN2_LO: f32 = -2.121_944_4e-4;
+    let x = vsubq_f32(vld1q_f32(p), vdupq_n_f32(m));
+    let x = vmaxq_f32(vminq_f32(x, vdupq_n_f32(88.0)), vdupq_n_f32(-87.0));
+    let n = vrndmq_f32(vaddq_f32(vmulq_f32(x, vdupq_n_f32(LOG2E)), vdupq_n_f32(0.5)));
+    let xr = vsubq_f32(
+        vsubq_f32(x, vmulq_f32(n, vdupq_n_f32(LN2_HI))),
+        vmulq_f32(n, vdupq_n_f32(LN2_LO)),
+    );
+    let mut pl = vdupq_n_f32(1.987_569_1e-4);
+    for c in [1.398_199_9e-3f32, 8.333_452e-3, 4.166_579_6e-2, 1.666_666_5e-1, 5.000_000_1e-1] {
+        pl = vaddq_f32(vmulq_f32(pl, xr), vdupq_n_f32(c));
+    }
+    let y = vaddq_f32(vaddq_f32(vmulq_f32(vmulq_f32(pl, xr), xr), xr), vdupq_n_f32(1.0));
+    let two_n = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
+        vcvtq_s32_f32(n),
+        vdupq_n_s32(127),
+    )));
+    vst1q_f32(p, vmulq_f32(y, two_n));
+}
+
 // ------------------------------------------------------------ quantization
 //
 // Lossy per-group affine quantization for the demoted KV tier (the
@@ -168,6 +561,8 @@ pub enum QuantBits {
     Int8,
     /// 4-bit codes, two channels per byte (per-group byte-aligned).
     Int4,
+    /// 2-bit codes, four channels per byte (per-group byte-aligned).
+    Int2,
 }
 
 impl QuantBits {
@@ -176,23 +571,62 @@ impl QuantBits {
         match self {
             QuantBits::Int8 => 255,
             QuantBits::Int4 => 15,
+            QuantBits::Int2 => 3,
         }
     }
 
     /// Packed bytes needed for `n` codes. Int4 packs two codes per byte
-    /// and pads the last byte, so groups stay byte-aligned.
+    /// (Int2 four) and pads the last byte, so groups stay byte-aligned.
     pub fn code_bytes(self, n: usize) -> usize {
         match self {
             QuantBits::Int8 => n,
             QuantBits::Int4 => n.div_ceil(2),
+            QuantBits::Int2 => n.div_ceil(4),
         }
     }
 
-    /// Wire/debug name (`int8` / `int4`).
+    /// Wire/debug name (`int8` / `int4` / `int2`).
     pub fn name(self) -> &'static str {
         match self {
             QuantBits::Int8 => "int8",
             QuantBits::Int4 => "int4",
+            QuantBits::Int2 => "int2",
+        }
+    }
+
+    /// Code width in bits (the `:bits=` wire value).
+    pub fn width(self) -> u64 {
+        match self {
+            QuantBits::Int8 => 8,
+            QuantBits::Int4 => 4,
+            QuantBits::Int2 => 2,
+        }
+    }
+
+    /// Parse a `:bits=` wire value (`8|4|2`).
+    pub fn from_width(w: u64) -> Option<QuantBits> {
+        match w {
+            8 => Some(QuantBits::Int8),
+            4 => Some(QuantBits::Int4),
+            2 => Some(QuantBits::Int2),
+            _ => None,
+        }
+    }
+
+    /// Unpack code `i` of a group packed by [`quantize_group`].
+    /// Sub-byte widths store earlier channels in the low bits.
+    pub fn code_at(self, packed: &[u8], i: usize) -> u8 {
+        match self {
+            QuantBits::Int8 => packed[i],
+            QuantBits::Int4 => {
+                let byte = packed[i / 2];
+                if i % 2 == 0 {
+                    byte & 0x0F
+                } else {
+                    byte >> 4
+                }
+            }
+            QuantBits::Int2 => (packed[i / 4] >> (2 * (i % 4))) & 0x3,
         }
     }
 }
@@ -262,6 +696,23 @@ pub fn quantize_group(xs: &[f32], bits: QuantBits, codes: &mut Vec<u8>) -> (f32,
                 codes.push(lo_nib);
             }
         }
+        QuantBits::Int2 => {
+            let mut cur = 0u8;
+            let mut cnt = 0u32;
+            for &x in xs {
+                let q = ((x - lo) * inv).round().clamp(0.0, levels) as u8;
+                cur |= q << (2 * cnt);
+                cnt += 1;
+                if cnt == 4 {
+                    codes.push(cur);
+                    cur = 0;
+                    cnt = 0;
+                }
+            }
+            if cnt > 0 {
+                codes.push(cur);
+            }
+        }
     }
     (scale, lo)
 }
@@ -274,11 +725,9 @@ pub fn dequantize_group(packed: &[u8], bits: QuantBits, scale: f32, zero: f32, o
                 *o = zero + scale * c as f32;
             }
         }
-        QuantBits::Int4 => {
+        QuantBits::Int4 | QuantBits::Int2 => {
             for (i, o) in out.iter_mut().enumerate() {
-                let byte = packed[i / 2];
-                let c = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-                *o = zero + scale * c as f32;
+                *o = zero + scale * bits.code_at(packed, i) as f32;
             }
         }
     }
@@ -319,6 +768,66 @@ pub fn dequantize_row(qr: &QuantRow, group: usize, bits: QuantBits, out: &mut [f
 pub fn quant_roundtrip(row: &mut [f32], group: usize, bits: QuantBits) {
     let qr = quantize_row(row, group, bits);
     dequantize_row(&qr, group, bits, row);
+}
+
+// ------------------------------------------------------------ quant compute
+//
+// Attend directly over demoted-tier rows without rehydrating: the codes
+// are decoded in-register inside the dot/accumulate loops, so a quant-
+// attended position never touches the resident fp32 cache or the
+// transfer path. Accumulation is ordered (ascending channel), matching
+// what the scalar decode kernel would do over the dequantized row — so
+// `score_from_quant(q, quantize_row(k)) == dot(q, dequant(k))` bitwise,
+// which the property tests pin down.
+
+/// Fused score kernel over a quantized K row: `Σ_i q[i] · (zero_g +
+/// scale_g · code_i)`, dequantize-in-register, ordered accumulation.
+pub fn score_from_quant(q: &[f32], kq: &QuantRow, group: usize, bits: QuantBits, d: usize) -> f32 {
+    let g = group.max(1);
+    let mut s = 0.0f32;
+    let mut byte = 0;
+    let mut gi = 0;
+    let mut i = 0;
+    while i < d {
+        let n = g.min(d - i);
+        let (scale, zero) = (kq.scales[gi], kq.zeros[gi]);
+        let packed = &kq.codes[byte..byte + bits.code_bytes(n)];
+        for j in 0..n {
+            s += q[i + j] * (zero + scale * bits.code_at(packed, j) as f32);
+        }
+        byte += bits.code_bytes(n);
+        gi += 1;
+        i += n;
+    }
+    s
+}
+
+/// Fused value accumulate over a quantized V row: `out[i] += w ·
+/// (zero_g + scale_g · code_i)` — the attention-weighted sum a quant-
+/// attended position contributes without materializing the fp32 row.
+pub fn axpy_from_quant(
+    w: f32,
+    vq: &QuantRow,
+    group: usize,
+    bits: QuantBits,
+    d: usize,
+    out: &mut [f32],
+) {
+    let g = group.max(1);
+    let mut byte = 0;
+    let mut gi = 0;
+    let mut i = 0;
+    while i < d {
+        let n = g.min(d - i);
+        let (scale, zero) = (vq.scales[gi], vq.zeros[gi]);
+        let packed = &vq.codes[byte..byte + bits.code_bytes(n)];
+        for j in 0..n {
+            out[i + j] += w * (zero + scale * bits.code_at(packed, j) as f32);
+        }
+        byte += bits.code_bytes(n);
+        gi += 1;
+        i += n;
+    }
 }
 
 #[cfg(test)]
@@ -435,7 +944,7 @@ mod tests {
     #[test]
     fn quant_roundtrip_error_bounded() {
         let mut rng = Rng::new(0x0_11A7);
-        for bits in [QuantBits::Int8, QuantBits::Int4] {
+        for bits in [QuantBits::Int8, QuantBits::Int4, QuantBits::Int2] {
             for case in 0..200 {
                 let d = 1 + rng.below(65) as usize;
                 let group = 1 + rng.below(17) as usize;
@@ -466,12 +975,12 @@ mod tests {
         }
     }
 
-    /// Constant groups (scale 0) reproduce exactly, and int8 is never a
-    /// worse approximation than int4 on the same group.
+    /// Constant groups (scale 0) reproduce exactly, and a wider code is
+    /// never a worse approximation than a narrower one on the same group.
     #[test]
     fn quant_constant_exact_and_width_monotone() {
         let row = vec![-3.25f32; 12];
-        for bits in [QuantBits::Int8, QuantBits::Int4] {
+        for bits in [QuantBits::Int8, QuantBits::Int4, QuantBits::Int2] {
             let mut out = row.clone();
             quant_roundtrip(&mut out, 8, bits);
             assert_eq!(out, row, "{}: constant group must be exact", bits.name());
@@ -485,6 +994,152 @@ mod tests {
                 row.iter().zip(&out).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max)
             };
             assert!(err(QuantBits::Int8) <= err(QuantBits::Int4) + 1e-6);
+            assert!(err(QuantBits::Int4) <= err(QuantBits::Int2) + 1e-6);
+        }
+    }
+
+    /// `width`/`from_width`/`name` round-trip for every code width, and
+    /// `code_at` inverts the packer for sub-byte widths over awkward
+    /// (non-multiple-of-pack) group lengths.
+    #[test]
+    fn quant_bits_wire_round_trip_and_code_at() {
+        for bits in [QuantBits::Int8, QuantBits::Int4, QuantBits::Int2] {
+            assert_eq!(QuantBits::from_width(bits.width()), Some(bits));
+        }
+        assert_eq!(QuantBits::from_width(3), None);
+        let mut rng = Rng::new(0x0_11AA);
+        for bits in [QuantBits::Int8, QuantBits::Int4, QuantBits::Int2] {
+            for _ in 0..50 {
+                let n = 1 + rng.below(19) as usize;
+                let xs = rand_vec(&mut rng, n);
+                let mut codes = vec![];
+                let (scale, zero) = quantize_group(&xs, bits, &mut codes);
+                let mut out = vec![0.0f32; n];
+                dequantize_group(&codes, bits, scale, zero, &mut out);
+                for (i, &o) in out.iter().enumerate() {
+                    let c = bits.code_at(&codes, i);
+                    assert!(c as u32 <= bits.max_code());
+                    assert_eq!(o.to_bits(), (zero + scale * c as f32).to_bits());
+                }
+            }
+        }
+    }
+
+    /// Fused quant-compute parity: attending over a quantized row is
+    /// bitwise what the scalar decode path computes over the dequantized
+    /// row (same ascending-channel accumulation order) — for score and
+    /// value-accumulate, every width, non-aligned d/group shapes.
+    #[test]
+    fn quant_compute_matches_dequantized_bitwise() {
+        let mut rng = Rng::new(0x0_11AB);
+        for bits in [QuantBits::Int8, QuantBits::Int4, QuantBits::Int2] {
+            for _ in 0..100 {
+                let d = 1 + rng.below(33) as usize;
+                let group = 1 + rng.below(13) as usize;
+                let k = rand_vec(&mut rng, d);
+                let v = rand_vec(&mut rng, d);
+                let q = rand_vec(&mut rng, d);
+                let kq = quantize_row(&k, group, bits);
+                let vq = quantize_row(&v, group, bits);
+                let mut kd = vec![0.0f32; d];
+                let mut vd = vec![0.0f32; d];
+                dequantize_row(&kq, group, bits, &mut kd);
+                dequantize_row(&vq, group, bits, &mut vd);
+
+                let got = score_from_quant(&q, &kq, group, bits, d);
+                let want = dot(&q, &kd, d);
+                assert_eq!(got.to_bits(), want.to_bits(), "{} score d={d} g={group}", bits.name());
+
+                let w = 0.371f32;
+                let mut got_v = rand_vec(&mut rng, d);
+                let mut want_v = got_v.clone();
+                axpy_from_quant(w, &vq, group, bits, d, &mut got_v);
+                for (o, &x) in want_v.iter_mut().zip(&vd) {
+                    *o += w * x;
+                }
+                for i in 0..d {
+                    assert_eq!(got_v[i].to_bits(), want_v[i].to_bits(), "{} axpy", bits.name());
+                }
+            }
+        }
+    }
+
+    /// SIMD-vs-scalar parity propcheck: for whatever level the host
+    /// resolves under `auto`, the vector panel matmul, score kernel, and
+    /// softmax-row `fast_exp` are bitwise identical to the scalar blocked
+    /// oracle over random non-aligned shapes (tails included). On hosts
+    /// where auto resolves to scalar this degenerates to a self-check.
+    #[test]
+    fn simd_kernels_match_scalar_bitwise() {
+        let level = SimdMode::Auto.resolve();
+        let mut rng = Rng::new(0x51_3D);
+        for case in 0..120 {
+            let n = 1 + rng.below(24) as usize;
+            let a = 1 + rng.below(40) as usize;
+            let b = 1 + rng.below(40) as usize;
+            let x = rand_vec(&mut rng, n * a);
+            let w = rand_vec(&mut rng, a * b);
+            let mut scalar = vec![0.0f32; n * b];
+            let mut vector = vec![3.0f32; n * b];
+            matmul_block_rows(&x, &w, 0..n, a, b, &mut scalar);
+            matmul_block_rows_level(&x, &w, 0..n, a, b, &mut vector, level);
+            for i in 0..n * b {
+                assert_eq!(
+                    scalar[i].to_bits(),
+                    vector[i].to_bits(),
+                    "{} case {case} ({n}x{a}x{b}) elem {i}",
+                    level.tag()
+                );
+            }
+        }
+        for case in 0..120 {
+            let d = 1 + rng.below(12) as usize;
+            let n_ctx = 1 + rng.below(150) as usize;
+            let len = 1 + rng.below(n_ctx);
+            let q = rand_vec(&mut rng, d);
+            let kt = rand_vec(&mut rng, d * n_ctx);
+            let mut scalar = vec![0.0f32; len];
+            let mut vector = vec![5.0f32; len];
+            scores_from_kt(&q, &kt, n_ctx, d, len, &mut scalar);
+            scores_from_kt_level(&q, &kt, n_ctx, d, len, &mut vector, level);
+            for s in 0..len {
+                assert_eq!(scalar[s].to_bits(), vector[s].to_bits(), "case {case} pos {s}");
+            }
+        }
+        for case in 0..120 {
+            let len = 1 + rng.below(90) as usize;
+            let row = rand_vec(&mut rng, len);
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut scalar = row.clone();
+            for r in &mut scalar {
+                *r = fast_exp(*r - m);
+            }
+            let mut vector = row.clone();
+            fast_exp_sub_rows(&mut vector, m, level);
+            for i in 0..len {
+                assert_eq!(scalar[i].to_bits(), vector[i].to_bits(), "case {case} elem {i}");
+            }
+        }
+    }
+
+    /// Dispatch resolution: scalar is always honored, forced ISA modes
+    /// degrade to scalar (never panic) off-host, and `auto` picks a
+    /// vector level exactly when one is available.
+    #[test]
+    fn simd_mode_resolution_and_parsing() {
+        assert_eq!(SimdMode::parse("auto"), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("AVX2"), Some(SimdMode::Avx2));
+        assert_eq!(SimdMode::parse(" neon "), Some(SimdMode::Neon));
+        assert_eq!(SimdMode::parse("scalar"), Some(SimdMode::Scalar));
+        assert_eq!(SimdMode::parse("sse9"), None);
+        assert_eq!(SimdMode::Scalar.resolve(), SimdLevel::Scalar);
+        let auto = SimdMode::Auto.resolve();
+        assert_eq!(auto.is_vector(), avx2_available() || neon_available());
+        if !avx2_available() {
+            assert_eq!(SimdMode::Avx2.resolve(), SimdLevel::Scalar);
+        }
+        if !neon_available() {
+            assert_eq!(SimdMode::Neon.resolve(), SimdLevel::Scalar);
         }
     }
 

@@ -268,6 +268,38 @@ impl Runtime {
         self.transfer.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.backend.exec_decode_resident(&exe.meta, tokens, pos, h)
     }
+
+    /// Quantized-attend decode step: like [`Runtime::exec_decode_resident`]
+    /// but demoted side entries contribute to attention in place (see
+    /// `Backend::exec_decode_resident_quant`). Charges the same upload
+    /// bytes as the plain step — quant-attended rows are device-local and
+    /// roll into the `quant_attend_*` counters, never `bytes_*`.
+    pub fn exec_decode_resident_quant(
+        &self,
+        exe: &Executable,
+        tokens: &[i32],
+        pos: &[i32],
+        h: &KvHandle,
+    ) -> Result<(Vec<Buffer>, Vec<backend::QuantAttendStat>)> {
+        self.transfer.add_up(4 * (tokens.len() + pos.len()) as u64);
+        self.transfer.decode_steps.fetch_add(1, Ordering::Relaxed);
+        let (outs, stats) = self.backend.exec_decode_resident_quant(&exe.meta, tokens, pos, h)?;
+        let rows: u64 = stats.iter().map(|s| s.rows as u64).sum();
+        let bytes: u64 = stats.iter().map(|s| s.bytes as u64).sum();
+        if rows > 0 || bytes > 0 {
+            self.transfer.note_quant_attend(rows, bytes);
+        }
+        Ok((outs, stats))
+    }
+
+    /// Purge every demoted side entry belonging to `slot` (vacate path —
+    /// a freed slot must never quant-attend stale payloads). Device-local;
+    /// returns the number of entries purged. Per-entry byte accounting
+    /// stays with the engine's ledger, which drops entries it tracks via
+    /// [`Runtime::kv_demote`]'s recorded sizes.
+    pub fn kv_drop_slot(&self, h: &KvHandle, slot: usize) -> Result<usize> {
+        self.backend.kv_drop_slot(h, slot)
+    }
 }
 
 #[cfg(test)]

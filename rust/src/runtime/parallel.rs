@@ -36,6 +36,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use super::kernels::SimdMode;
+
 /// Default query-row block size for the blocked prefill kernels (rows per
 /// attention work unit, and the boundary grid for the fixed-order stat
 /// merge). Changing it changes the (deterministic) summation grouping of
@@ -72,18 +74,32 @@ pub struct ParallelConfig {
     pub threads: usize,
     /// Query rows per attention work unit (also the stat-merge grid).
     pub block_rows: usize,
+    /// Requested SIMD mode for the blocked kernels (the `KVZAP_SIMD`
+    /// override). Resolved to a host-supported level at backend
+    /// construction; the `threads == 1` naive path ignores it entirely,
+    /// so the semantic oracle stays scalar no matter what is requested.
+    pub simd: SimdMode,
 }
 
 impl ParallelConfig {
     /// The scalar reference path: one thread, naive kernels.
     pub fn scalar() -> ParallelConfig {
-        ParallelConfig { threads: 1, block_rows: DEFAULT_BLOCK_ROWS }
+        ParallelConfig {
+            threads: 1,
+            block_rows: DEFAULT_BLOCK_ROWS,
+            simd: SimdMode::Scalar,
+        }
     }
 
     /// Blocked + parallel with an explicit thread count (0 means auto).
+    /// SIMD defaults to `auto` (best available level, scalar fallback).
     pub fn with_threads(threads: usize) -> ParallelConfig {
         let t = if threads == 0 { detected_parallelism() } else { threads };
-        ParallelConfig { threads: t.max(1), block_rows: DEFAULT_BLOCK_ROWS }
+        ParallelConfig {
+            threads: t.max(1),
+            block_rows: DEFAULT_BLOCK_ROWS,
+            simd: SimdMode::Auto,
+        }
     }
 
     /// Auto-detected parallelism (`std::thread::available_parallelism`).
@@ -91,9 +107,15 @@ impl ParallelConfig {
         ParallelConfig::with_threads(0)
     }
 
+    /// Same config with an explicit SIMD mode (builder style).
+    pub fn with_simd(mut self, simd: SimdMode) -> ParallelConfig {
+        self.simd = simd;
+        self
+    }
+
     /// [`ParallelConfig::auto`] with `KVZAP_THREADS` / `KVZAP_BLOCK_ROWS`
-    /// environment overrides — what `Runtime::reference()` uses, so CI can
-    /// pin the whole tier-1 suite to either path.
+    /// / `KVZAP_SIMD` environment overrides — what `Runtime::reference()`
+    /// uses, so CI can pin the whole tier-1 suite to any path.
     pub fn from_env() -> ParallelConfig {
         let mut cfg = match std::env::var("KVZAP_THREADS").ok().and_then(|v| v.parse().ok()) {
             Some(0) | None => ParallelConfig::auto(),
@@ -102,6 +124,14 @@ impl ParallelConfig {
         if let Some(br) = std::env::var("KVZAP_BLOCK_ROWS").ok().and_then(|v| v.parse().ok()) {
             if br > 0 {
                 cfg.block_rows = br;
+            }
+        }
+        if let Ok(s) = std::env::var("KVZAP_SIMD") {
+            match SimdMode::parse(&s) {
+                Some(m) => cfg.simd = m,
+                None => eprintln!(
+                    "[kvzap] ignoring unknown KVZAP_SIMD='{s}' (want auto|avx2|neon|scalar)"
+                ),
             }
         }
         cfg
@@ -343,6 +373,12 @@ mod tests {
         assert!(ParallelConfig::auto().threads >= 1);
         assert_eq!(ParallelConfig::with_threads(8).threads, 8);
         assert_eq!(ParallelConfig::with_threads(0).threads, ParallelConfig::auto().threads);
+        assert_eq!(ParallelConfig::scalar().simd, SimdMode::Scalar);
+        assert_eq!(ParallelConfig::auto().simd, SimdMode::Auto);
+        assert_eq!(
+            ParallelConfig::auto().with_simd(SimdMode::Scalar).simd,
+            SimdMode::Scalar
+        );
     }
 
     #[test]

@@ -65,8 +65,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use super::backend::{Arg, Backend, Buffer, BufferRepr, KvHandle};
-use super::kernels::{self, fast_exp};
+use super::backend::{Arg, Backend, Buffer, BufferRepr, KvHandle, QuantAttendStat};
+use super::kernels::{self, fast_exp, SimdLevel};
 use super::manifest::{ArtifactMeta, Buckets, IoSpec, Manifest, ModelDims, SpecialTokens};
 use super::parallel::{ParallelConfig, WorkerPool};
 use super::tensor::Tensor;
@@ -313,9 +313,13 @@ struct PrefillOut {
 
 /// Kernel selection + worker pool, threaded from the backend into the
 /// prefill/decode drivers (`cfg.threads == 1` ⇒ scalar path, inline).
+/// `simd` is the host-resolved level for the blocked kernels; the scalar
+/// naive path never consults it (the backend forces `Scalar` when
+/// `threads == 1`, keeping the semantic oracle untouched).
 struct ParCtx<'a> {
     cfg: ParallelConfig,
     pool: &'a WorkerPool,
+    simd: SimdLevel,
 }
 
 /// Per-unit partial statistics of one `(kv, g, row-block)` attention unit:
@@ -379,6 +383,7 @@ fn attn_unit(
     hnorm_inv: &[f32],
     stats_from: usize,
     win_from: usize,
+    simd: SimdLevel,
     rows: &mut [f32],
     st: &mut UnitStats,
 ) {
@@ -388,13 +393,14 @@ fn attn_unit(
         let jp1 = j + 1;
         let q = &qk_buf[j * HQ * D + qh * D..j * HQ * D + qh * D + D];
         match kt {
-            Some(kt) => kernels::scores_from_kt(
+            Some(kt) => kernels::scores_from_kt_level(
                 q,
                 &kt[kv * D * n..(kv + 1) * D * n],
                 n,
                 D,
                 jp1,
                 &mut row,
+                simd,
             ),
             None => {
                 for s in 0..jp1 {
@@ -409,9 +415,7 @@ fn attn_unit(
                 m = sc;
             }
         }
-        for r in &mut row[..jp1] {
-            *r = fast_exp(*r - m);
-        }
+        kernels::fast_exp_sub_rows(&mut row[..jp1], m, simd);
         let mut sum = 0.0f32;
         for &e in &row[..jp1] {
             sum += e;
@@ -485,9 +489,18 @@ fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize, par: &ParCtx) ->
     let blocked = par.cfg.threads > 1;
     let br = par.cfg.block_rows.max(1);
     let njb = n.div_ceil(br);
-    // threads == 1 is the scalar path: naive kernels, inline execution
-    let mm: fn(&[f32], &[f32], usize, usize, usize, &mut [f32]) =
-        if blocked { kernels::matmul_blocked } else { kernels::matmul };
+    let simd = par.simd;
+    // threads == 1 is the scalar path: naive kernels, inline execution.
+    // The blocked path dispatches on the resolved SIMD level (scalar
+    // blocked when the host has no vector ISA or KVZAP_SIMD=scalar);
+    // every level is bitwise identical (see kernels::matmul_block_rows_level).
+    let mm = |x: &[f32], w: &[f32], rows: usize, a: usize, b: usize, out: &mut [f32]| {
+        if blocked {
+            kernels::matmul_block_rows_level(x, w, 0..rows, a, b, out, simd)
+        } else {
+            kernels::matmul(x, w, rows, a, b, out)
+        }
+    };
 
     let mut x = vec![0.0f32; n * DM];
     let mut qk_buf = vec![0.0f32; n * HQ * D]; // reused for q then o
@@ -616,6 +629,7 @@ fn prefill_one(w: &RefWeights, toks: &[i32], stats_from: usize, par: &ParCtx) ->
                         hn,
                         stats_from,
                         win_from,
+                        simd,
                         rows,
                         &mut st,
                     );
@@ -754,12 +768,53 @@ fn carve_slots_ref(buf: &[f32], b: usize, inner: usize, chunk: usize) -> Vec<Vec
     out
 }
 
+/// One slot's attendable demoted-tier rows for a quant-attend decode
+/// step: per `(layer, kv head)` lists (indexed `l * HKV + head`) of
+/// quantized entries sorted ascending by position — the deterministic
+/// append order of the quant-attend softmax.
+#[derive(Default)]
+struct SlotSide {
+    rows: Vec<Vec<SideRow>>,
+}
+
+/// One quantized (K, V) pair attendable without rehydration.
+struct SideRow {
+    pos: usize,
+    k: kernels::QuantRow,
+    v: kernels::QuantRow,
+    bits: kernels::QuantBits,
+    group: usize,
+    bytes: usize,
+}
+
+impl SlotSide {
+    /// Total entries / side-pool bytes this slot attends per step.
+    fn stat(&self) -> QuantAttendStat {
+        let rows = self.rows.iter().map(|r| r.len()).sum();
+        let bytes = self.rows.iter().flatten().map(|e| e.bytes).sum();
+        QuantAttendStat { rows, bytes }
+    }
+}
+
 /// One masked decode step for one batch slot, against that slot's views of
 /// the dense padded cache. Mirrors kernels/ref.py::decode_attention_ref:
 /// row `pos` of the cache is written *after* attending (the new KV
 /// participates via a virtual appended row, exactly the static-shape
 /// S = t_max + 1 trick the decode artifact uses).
-fn decode_slot(w: &RefWeights, t_max: usize, token: i32, pos: usize, sv: &mut SlotViews) {
+///
+/// With `side` present, each `(l, kv)` additionally attends that list's
+/// quantized demoted rows, dequantized in-register inside the score and
+/// value loops (`kernels::score_from_quant` / `axpy_from_quant`) and
+/// appended to the softmax after the virtual row. With `side` `None` (or
+/// all-empty) the step is bitwise identical to the pre-quant-attend path.
+fn decode_slot(
+    w: &RefWeights,
+    t_max: usize,
+    token: i32,
+    pos: usize,
+    side: Option<&SlotSide>,
+    sv: &mut SlotViews,
+) {
     let b = token.clamp(0, V as i32 - 1) as usize;
     let pos = pos.min(t_max - 1);
     let mut h = [0.0f32; DM];
@@ -767,7 +822,10 @@ fn decode_slot(w: &RefWeights, t_max: usize, token: i32, pos: usize, sv: &mut Sl
     let (cos, sin) = rope_angles(pos as f32);
     let scale = 1.0 / (D as f32).sqrt();
     let mut x = [0.0f32; DM];
-    let mut row = vec![0.0f32; t_max + 1];
+    let max_side = side
+        .map(|s| s.rows.iter().map(|r| r.len()).max().unwrap_or(0))
+        .unwrap_or(0);
+    let mut row = vec![0.0f32; t_max + 1 + max_side];
     let mut keep = vec![0usize; t_max + 1];
 
     for l in 0..L {
@@ -831,6 +889,7 @@ fn decode_slot(w: &RefWeights, t_max: usize, token: i32, pos: usize, sv: &mut Sl
             let vc = &mut *sv.vc[lh];
             let mask = sv.mask[lh];
             let ar = &mut *sv.attn_row[lh];
+            let srows: &[SideRow] = side.map(|s| s.rows[lh].as_slice()).unwrap_or(&[]);
             // attendable positions: masked cache rows + the appended new KV
             let mut nkeep = 0;
             for s in 0..t_max {
@@ -841,6 +900,7 @@ fn decode_slot(w: &RefWeights, t_max: usize, token: i32, pos: usize, sv: &mut Sl
             }
             keep[nkeep] = t_max; // virtual appended row
             nkeep += 1;
+            let total = nkeep + srows.len();
             for g in 0..GRP {
                 let qh = kv * GRP + g;
                 let qv = &q[qh * D..qh * D + D];
@@ -856,8 +916,17 @@ fn decode_slot(w: &RefWeights, t_max: usize, token: i32, pos: usize, sv: &mut Sl
                         m = sc;
                     }
                 }
+                // demoted rows join the softmax after the virtual row,
+                // scored straight off their codes (no rehydration)
+                for (i, e) in srows.iter().enumerate() {
+                    let sc = kernels::score_from_quant(qv, &e.k, e.group, e.bits, D);
+                    row[nkeep + i] = sc;
+                    if sc > m {
+                        m = sc;
+                    }
+                }
                 let mut sum = 0.0f32;
-                for r in &mut row[..nkeep] {
+                for r in &mut row[..total] {
                     let e = fast_exp(*r - m);
                     *r = e;
                     sum += e;
@@ -874,6 +943,18 @@ fn decode_slot(w: &RefWeights, t_max: usize, token: i32, pos: usize, sv: &mut Sl
                         attn_out[qh * D + d] += a * vrow[d];
                     }
                     ar[s] += a;
+                }
+                for (i, e) in srows.iter().enumerate() {
+                    let a = row[nkeep + i] * inv;
+                    kernels::axpy_from_quant(
+                        a,
+                        &e.v,
+                        e.group,
+                        e.bits,
+                        D,
+                        &mut attn_out[qh * D..qh * D + D],
+                    );
+                    ar[e.pos] += a;
                 }
             }
             // vnorm statistic for the new KV pair
@@ -943,6 +1024,10 @@ pub struct ReferenceBackend {
     w: RefWeights,
     t_max: usize,
     cfg: ParallelConfig,
+    /// Host-resolved SIMD level for the blocked kernels (forced to
+    /// `Scalar` when `cfg.threads == 1` so the naive oracle never
+    /// vectorizes, whatever `KVZAP_SIMD` says).
+    simd: SimdLevel,
     pool: WorkerPool,
     kv: Mutex<HashMap<u64, Arc<Mutex<RefKvGroup>>>>,
     /// Quantized demoted-tier payloads (see [`Backend::kv_demote`]).
@@ -971,10 +1056,12 @@ impl ReferenceBackend {
     /// bitwise identical across configs with equal `block_rows`.
     pub fn with_options(t_max: usize, cfg: ParallelConfig) -> ReferenceBackend {
         assert!(t_max >= *PREFILL_T.iter().max().unwrap(), "t_max below the prefill buckets");
+        let simd = if cfg.threads > 1 { cfg.simd.resolve() } else { SimdLevel::Scalar };
         ReferenceBackend {
             w: gen_weights(),
             t_max,
             cfg,
+            simd,
             pool: WorkerPool::new(&cfg),
             kv: Mutex::new(HashMap::new()),
             side: Mutex::new(HashMap::new()),
@@ -987,8 +1074,13 @@ impl ReferenceBackend {
         self.cfg
     }
 
+    /// The host-resolved SIMD level the blocked kernels run at.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
+    }
+
     fn par(&self) -> ParCtx<'_> {
-        ParCtx { cfg: self.cfg, pool: &self.pool }
+        ParCtx { cfg: self.cfg, pool: &self.pool, simd: self.simd }
     }
 
     /// Decode every slot of one group step, in parallel across slots when
@@ -1003,6 +1095,7 @@ impl ReferenceBackend {
         kc: &mut [f32],
         vc: &mut [f32],
         mask: &[f32],
+        side: Option<&[SlotSide]>,
         scratch: &mut DecodeScratch,
     ) {
         let t_max = self.t_max;
@@ -1034,17 +1127,18 @@ impl ReferenceBackend {
                 attn_row: ar,
             })
             .collect();
+        let side_of = |s: usize| side.and_then(|sides| sides.get(s));
         if self.cfg.threads > 1 && b > 1 {
             let work: Vec<Mutex<Option<SlotViews>>> =
                 slots.into_iter().map(|s| Mutex::new(Some(s))).collect();
             let w = &self.w;
             self.pool.run(b, &|s| {
                 let mut sv = work[s].lock().unwrap().take().unwrap();
-                decode_slot(w, t_max, tokens[s], pos[s].max(0) as usize, &mut sv);
+                decode_slot(w, t_max, tokens[s], pos[s].max(0) as usize, side_of(s), &mut sv);
             });
         } else {
             for (s, sv) in slots.iter_mut().enumerate() {
-                decode_slot(&self.w, t_max, tokens[s], pos[s].max(0) as usize, sv);
+                decode_slot(&self.w, t_max, tokens[s], pos[s].max(0) as usize, side_of(s), sv);
             }
         }
     }
@@ -1137,11 +1231,58 @@ impl ReferenceBackend {
         let mut kc = kc_in.data.clone();
         let mut vc = vc_in.data.clone();
         let mut scratch = self.decode_scratch(b);
-        self.decode_group_run(b, tokens, pos, &mut kc, &mut vc, &mask.data, &mut scratch);
+        self.decode_group_run(b, tokens, pos, &mut kc, &mut vc, &mask.data, None, &mut scratch);
         Ok(vec![
             host(scratch.logits, vec![b, V])?,
             host(kc, vec![L, b, HKV, t_max, D])?,
             host(vc, vec![L, b, HKV, t_max, D])?,
+            host(scratch.score_lin, vec![L, b, HKV])?,
+            host(scratch.score_mlp, vec![L, b, HKV])?,
+            host(scratch.vnorm, vec![L, b, HKV])?,
+            host(scratch.attn_row, vec![L, b, HKV, t_max + 1])?,
+        ])
+    }
+
+    /// Shared body of the resident decode paths: validate, run the group
+    /// step (optionally quant-attending `side`), flip the decoded rows'
+    /// mask bits, package outputs.
+    fn decode_resident_inner(
+        &self,
+        meta: &ArtifactMeta,
+        tokens: &[i32],
+        pos: &[i32],
+        h: &KvHandle,
+        side: Option<&[SlotSide]>,
+    ) -> Result<Vec<Buffer>> {
+        let t_max = self.t_max;
+        let b = meta.batch;
+        if meta.kind != "decode" {
+            return Err(anyhow!("exec_decode_resident on non-decode artifact {}", meta.name));
+        }
+        if tokens.len() != b || pos.len() != b || h.batch != b {
+            return Err(anyhow!(
+                "exec_decode_resident: batch mismatch (artifact {b}, tokens {}, handle {})",
+                tokens.len(),
+                h.batch
+            ));
+        }
+        let g = self.group(h)?;
+        let mut g = g.lock().unwrap();
+        let mut scratch = self.decode_scratch(b);
+        let RefKvGroup { k, v, mask, .. } = &mut *g;
+        self.decode_group_run(b, tokens, pos, k, v, mask, side, &mut scratch);
+        // the decoded row is attendable from the next step on (mirrors
+        // PagedKvCache::fill — joins overwrite vacant-slot leftovers)
+        for s in 0..b {
+            let p = (pos[s].max(0) as usize).min(t_max - 1);
+            for l in 0..L {
+                for hh in 0..HKV {
+                    mask[((l * b + s) * HKV + hh) * t_max + p] = 1.0;
+                }
+            }
+        }
+        Ok(vec![
+            host(scratch.logits, vec![b, V])?,
             host(scratch.score_lin, vec![L, b, HKV])?,
             host(scratch.score_mlp, vec![L, b, HKV])?,
             host(scratch.vnorm, vec![L, b, HKV])?,
@@ -1207,8 +1348,10 @@ impl Backend for ReferenceBackend {
     fn describe(&self) -> String {
         if self.cfg.threads > 1 {
             format!(
-                "reference (blocked, threads={}, block_rows={})",
-                self.cfg.threads, self.cfg.block_rows
+                "reference (blocked, threads={}, block_rows={}, simd={})",
+                self.cfg.threads,
+                self.cfg.block_rows,
+                self.simd.tag()
             )
         } else {
             "reference (scalar)".to_string()
@@ -1372,40 +1515,57 @@ impl Backend for ReferenceBackend {
         pos: &[i32],
         h: &KvHandle,
     ) -> Result<Vec<Buffer>> {
-        let t_max = self.t_max;
+        self.decode_resident_inner(meta, tokens, pos, h, None)
+    }
+
+    fn exec_decode_resident_quant(
+        &self,
+        meta: &ArtifactMeta,
+        tokens: &[i32],
+        pos: &[i32],
+        h: &KvHandle,
+    ) -> Result<(Vec<Buffer>, Vec<QuantAttendStat>)> {
         let b = meta.batch;
-        if meta.kind != "decode" {
-            return Err(anyhow!("exec_decode_resident on non-decode artifact {}", meta.name));
-        }
-        if tokens.len() != b || pos.len() != b || h.batch != b {
-            return Err(anyhow!(
-                "exec_decode_resident: batch mismatch (artifact {b}, tokens {}, handle {})",
-                tokens.len(),
-                h.batch
-            ));
-        }
-        let g = self.group(h)?;
-        let mut g = g.lock().unwrap();
-        let mut scratch = self.decode_scratch(b);
-        let RefKvGroup { k, v, mask, .. } = &mut *g;
-        self.decode_group_run(b, tokens, pos, k, v, mask, &mut scratch);
-        // the decoded row is attendable from the next step on (mirrors
-        // PagedKvCache::fill — joins overwrite vacant-slot leftovers)
-        for s in 0..b {
-            let p = (pos[s].max(0) as usize).min(t_max - 1);
-            for l in 0..L {
-                for hh in 0..HKV {
-                    mask[((l * b + s) * HKV + hh) * t_max + p] = 1.0;
+        // snapshot the attendable side entries per slot (cloned out of the
+        // side map so no lock is held across the worker pool), grouped per
+        // (layer, kv head) and sorted by position — a deterministic order
+        // independent of map iteration
+        let mut sides: Vec<SlotSide> = (0..b)
+            .map(|_| SlotSide { rows: (0..L * HKV).map(|_| Vec::new()).collect() })
+            .collect();
+        {
+            let side = self.side.lock().unwrap();
+            for (&(id, slot, l, head, pos), e) in side.iter() {
+                if id == h.id && slot < b {
+                    sides[slot].rows[l * HKV + head].push(SideRow {
+                        pos,
+                        k: e.k.clone(),
+                        v: e.v.clone(),
+                        bits: e.bits,
+                        group: e.group,
+                        bytes: e.bytes,
+                    });
                 }
             }
         }
-        Ok(vec![
-            host(scratch.logits, vec![b, V])?,
-            host(scratch.score_lin, vec![L, b, HKV])?,
-            host(scratch.score_mlp, vec![L, b, HKV])?,
-            host(scratch.vnorm, vec![L, b, HKV])?,
-            host(scratch.attn_row, vec![L, b, HKV, t_max + 1])?,
-        ])
+        for s in &mut sides {
+            for list in &mut s.rows {
+                list.sort_by_key(|e| e.pos);
+            }
+        }
+        let stats: Vec<QuantAttendStat> = sides.iter().map(|s| s.stat()).collect();
+        let outs = self.decode_resident_inner(meta, tokens, pos, h, Some(&sides))?;
+        Ok((outs, stats))
+    }
+
+    fn kv_drop_slot(&self, h: &KvHandle, slot: usize) -> Result<usize> {
+        let mut n = 0;
+        self.side.lock().unwrap().retain(|key, _| {
+            let hit = key.0 == h.id && key.1 == slot;
+            n += hit as usize;
+            !hit
+        });
+        Ok(n)
     }
 
     // ---- demoted (quantized) KV tier -------------------------------------
@@ -1675,7 +1835,7 @@ mod tests {
     fn scalar_prefill(w: &RefWeights, toks: &[i32], stats_from: usize) -> PrefillOut {
         let cfg = ParallelConfig::scalar();
         let pool = WorkerPool::new(&cfg);
-        prefill_one(w, toks, stats_from, &ParCtx { cfg, pool: &pool })
+        prefill_one(w, toks, stats_from, &ParCtx { cfg, pool: &pool, simd: SimdLevel::Scalar })
     }
 
     #[test]
@@ -1885,6 +2045,105 @@ mod tests {
         assert_eq!(kg[..n * D], kc0[..n * D]);
         be.kv_free(&h);
         assert!(be.kv_scatter(&h, 0, &kc0, &vc0).is_err(), "freed handle rejected");
+    }
+
+    /// Quant-attended decode: demoted rows contribute to attention
+    /// straight from their codes, no `kv_rehydrate`. With an empty side
+    /// tier the quant path is bitwise the plain resident path; with a
+    /// demoted band it matches the rehydrate-everything decode to the
+    /// ≤1e-3 property bound (identical dequantized values, different
+    /// softmax summation order) and reports the attended rows/bytes.
+    #[test]
+    fn quant_attend_matches_rehydrated_decode() {
+        let be = ReferenceBackend::new();
+        let man = reference_manifest();
+        let t = 128;
+        let mut toks = vec![0i32; t];
+        toks[0] = 1;
+        for (i, b) in "Zt = 905. filler filler".bytes().enumerate() {
+            toks[i + 1] = b as i32;
+        }
+        let n = 24usize;
+        let lens = [n as i32];
+        let outs = exec(&be, &man, "prefill_b1_t128", &[
+            Arg::I32(&toks, &[1, t]),
+            Arg::I32(&lens, &[1]),
+        ]);
+        let kc0 = outs[1].host_f32().unwrap().data.clone();
+        let vc0 = outs[2].host_f32().unwrap().data.clone();
+        let dec = man.artifacts.get("decode_b1").unwrap();
+        let band: Vec<usize> = (2..7).collect();
+        let bits = kernels::QuantBits::Int8;
+
+        let mk = |demote_band: bool, rehydrate_back: bool, mask_band: bool| -> KvHandle {
+            let h = be.kv_alloc(L, 1, HKV, T_MAX, D).unwrap();
+            be.kv_scatter(&h, 0, &kc0, &vc0).unwrap();
+            if demote_band {
+                for l in 0..L {
+                    for hh in 0..HKV {
+                        for &p in &band {
+                            be.kv_demote(&h, 0, l, hh, p, bits, 8).unwrap();
+                            if rehydrate_back {
+                                be.kv_rehydrate(&h, 0, l, hh, p).unwrap();
+                            }
+                        }
+                    }
+                }
+            }
+            let mut mask = vec![0.0f32; L * HKV * T_MAX];
+            for l in 0..L {
+                for hh in 0..HKV {
+                    for p in 0..n {
+                        if mask_band || !band.contains(&p) {
+                            mask[(l * HKV + hh) * T_MAX + p] = 1.0;
+                        }
+                    }
+                }
+            }
+            be.kv_write_mask(&h, 0, &mask).unwrap();
+            h
+        };
+
+        // A: band demoted + masked out → quant-attended from the side tier
+        let ha = mk(true, false, false);
+        // B: band demoted then rehydrated (same lossy values), fully masked
+        let hb = mk(true, true, true);
+        let tok = [b'9' as i32];
+        let pos = [n as i32];
+        let (aouts, stats) = be.exec_decode_resident_quant(dec, &tok, &pos, &ha).unwrap();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].rows, L * HKV * band.len());
+        assert!(stats[0].bytes > 0);
+        let bouts = be.exec_decode_resident(dec, &tok, &pos, &hb).unwrap();
+        let la = aouts[0].host_f32().unwrap().data.clone();
+        let lb = bouts[0].host_f32().unwrap().data.clone();
+        assert_ne!(la, lb, "summation order differs — bitwise equality would be suspicious");
+        for (a, b) in la.iter().zip(&lb) {
+            assert!(
+                (a - b).abs() <= 1e-3 * a.abs().max(1.0),
+                "quant-attend vs rehydrate-everything drifted: {a} vs {b}"
+            );
+        }
+
+        // with an empty side tier the quant path is bitwise the plain path
+        let hc = mk(false, false, true);
+        let hd = mk(false, false, true);
+        let (couts, cstats) = be.exec_decode_resident_quant(dec, &tok, &pos, &hc).unwrap();
+        let douts = be.exec_decode_resident(dec, &tok, &pos, &hd).unwrap();
+        assert_eq!(cstats[0], QuantAttendStat { rows: 0, bytes: 0 });
+        assert_eq!(
+            couts[0].host_f32().unwrap().data,
+            douts[0].host_f32().unwrap().data,
+            "no side entries ⇒ quant path must be bitwise identical"
+        );
+
+        // kv_drop_slot purges a vacated slot's side entries
+        assert_eq!(be.kv_drop_slot(&ha, 0).unwrap(), L * HKV * band.len());
+        let (_, s2) = be.exec_decode_resident_quant(dec, &tok, &pos, &ha).unwrap();
+        assert_eq!(s2[0].rows, 0, "dropped slot must not quant-attend");
+        for h in [ha, hb, hc, hd] {
+            be.kv_free(&h);
+        }
     }
 
     #[test]

@@ -68,6 +68,14 @@ pub enum Fault {
         /// Simulation step at which to inject the rogue fetch.
         step: usize,
     },
+    /// Bump the quant-attend counters at the given step without any
+    /// backend work — a backend that reports in-place quantized attends
+    /// it never served. Caught by the transfer-accounting invariant's
+    /// quant fields (predicted rows come from the pre-step demoted sets).
+    PhantomQuantAttend {
+        /// Simulation step at which to inject the rogue counter bump.
+        step: usize,
+    },
 }
 
 /// What one scripted client ended up with.
@@ -170,6 +178,9 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
     let mut subs: HashMap<u64, ParsedRequest> = HashMap::new();
     // every uid the scheduler ever held (slot entries may lag reaping)
     let mut known_uids: HashSet<u64> = HashSet::new();
+    // cumulative (decode_demotions, decode_rehydrations) per uid, for the
+    // per-step tier-flow conservation check
+    let mut flow_prev: HashMap<u64, (usize, usize)> = HashMap::new();
 
     let mut violation: Option<Violation> = None;
     let mut fault_injected = false;
@@ -252,12 +263,23 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
         let capacity_before = core.group().capacity();
         let mut active_uids: Vec<u64> = vec![];
         let mut dirty_uids: HashSet<u64> = HashSet::new();
+        // demoted counts per active uid before the step: exactly the side
+        // entries the quantized decode path will attend in place (the
+        // engine's rehydration scan and fresh demotions both run *after*
+        // the exec), so these predict the step's quant-attend counters
+        let mut demoted_before: HashMap<u64, usize> = HashMap::new();
+        let mut q_rows = 0u64;
+        let mut q_bytes = 0u64;
         for (_id, seq) in core.live() {
             if seq.position() < t_max {
                 active_uids.push(seq.uid());
                 if seq.cache().is_dirty() {
                     dirty_uids.insert(seq.uid());
                 }
+                let demoted = seq.cache_stats().demoted;
+                demoted_before.insert(seq.uid(), demoted);
+                q_rows += demoted as u64;
+                q_bytes += (demoted * seq.cache().tier().bytes_per_entry()) as u64;
             }
         }
         let expected = predict_transfer(
@@ -267,6 +289,7 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
             capacity_before,
             &decode_buckets,
             (layers, heads, t_max, d_head),
+            (q_rows, q_bytes),
         );
         let before = engine.rt.transfer.snapshot();
 
@@ -279,8 +302,8 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
             });
             break;
         }
-        if let Some(Fault::PhantomRowFetch { step }) = opts.fault {
-            if step == t {
+        match opts.fault {
+            Some(Fault::PhantomRowFetch { step }) if step == t => {
                 if let Some(h) = core.group().kv_handle() {
                     let mut k = vec![0.0f32; h.row_elems()];
                     let mut v = vec![0.0f32; h.row_elems()];
@@ -288,6 +311,11 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
                     fault_injected = true;
                 }
             }
+            Some(Fault::PhantomQuantAttend { step }) if step == t => {
+                engine.rt.transfer.note_quant_attend(1, 64);
+                fault_injected = true;
+            }
+            _ => {}
         }
         let after = engine.rt.transfer.snapshot();
         let actual = TransferDelta {
@@ -295,15 +323,31 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
             kv_bytes_down: after.kv_bytes_down - before.kv_bytes_down,
             mask_uploads: after.mask_uploads - before.mask_uploads,
             decode_steps: after.decode_steps - before.decode_steps,
+            quant_attend_rows: after.quant_attend_rows - before.quant_attend_rows,
+            quant_attend_bytes: after.quant_attend_bytes - before.quant_attend_bytes,
         };
 
         // ---- invariant checks -----------------------------------------
-        let seqs: Vec<SeqCheck> = core
-            .live()
-            .map(|(id, seq)| {
-                seq_check(id, seq, subs.get(&id).map(|p| &p.policy), window, layers, heads)
-            })
-            .collect();
+        let mut seqs: Vec<SeqCheck> = vec![];
+        for (id, seq) in core.live() {
+            let (pd, pr) = flow_prev.get(&seq.uid()).copied().unwrap_or((0, 0));
+            // tier flow for seqs that decoded this step: demoted-before
+            // plus the step's demotion/rehydration counter movement
+            let step_flow = demoted_before.get(&seq.uid()).map(|&before| {
+                (before, seq.decode_demotions - pd, seq.decode_rehydrations - pr)
+            });
+            flow_prev
+                .insert(seq.uid(), (seq.decode_demotions, seq.decode_rehydrations));
+            seqs.push(seq_check(
+                id,
+                seq,
+                subs.get(&id).map(|p| &p.policy),
+                window,
+                layers,
+                heads,
+                step_flow,
+            ));
+        }
         known_uids.extend(core.live().map(|(_, s)| s.uid()));
         let obs = StepObs {
             step: t,
@@ -377,6 +421,10 @@ fn budget_of(p: &PolicySpec) -> Option<f64> {
 /// Replay the device-resident KV protocol for one step: who scatters, who
 /// refreshes a mask, who is vacated, and what the row-only steady state
 /// fetches — producing the exact counter deltas the engine must match.
+/// `quant` is the predicted quant-attend movement (rows, bytes): the sum
+/// of pre-step demoted sets over active sequences, since the quantized
+/// decode path attends every live side entry in place, and a vacated
+/// slot's entries must have been purged.
 fn predict_transfer(
     active: &[u64],
     dirty: &HashSet<u64>,
@@ -384,6 +432,7 @@ fn predict_transfer(
     capacity: usize,
     decode_buckets: &[usize],
     dims: (usize, usize, usize, usize),
+    quant: (u64, u64),
 ) -> TransferDelta {
     let nb = active.len();
     if nb == 0 {
@@ -417,6 +466,8 @@ fn predict_transfer(
         kv_bytes_down: 4 * (nb * 2 * row_elems) as u64,
         mask_uploads: (newcomers + vacates + refreshes) as u64,
         decode_steps: 1,
+        quant_attend_rows: quant.0,
+        quant_attend_bytes: quant.1,
     }
 }
 
@@ -427,6 +478,7 @@ fn seq_check(
     window: usize,
     layers: usize,
     heads: usize,
+    step_flow: Option<(usize, usize, usize)>,
 ) -> SeqCheck {
     let cache = seq.cache();
     let st = cache.stats();
@@ -470,6 +522,10 @@ fn seq_check(
         tracked_demoted: seq.tracked_demoted(),
         demoted_in_window: cache.demoted_at_or_after(len.saturating_sub(window)),
         accounting_err: cache.accounting_ok().err(),
+        quant_attended_rows: st.quant_attended_rows,
+        quant_attended_bytes: st.quant_attended_bytes,
+        tier_bpe: cache.tier().bytes_per_entry(),
+        step_flow,
     }
 }
 
@@ -680,8 +736,14 @@ pub fn replay_opts(opts: &SimOptions) -> String {
     if !opts.check_solo {
         s.push_str(" --no-solo");
     }
-    if let Some(Fault::PhantomRowFetch { step }) = opts.fault {
-        s.push_str(&format!(" --fault-step {step}"));
+    match opts.fault {
+        Some(Fault::PhantomRowFetch { step }) => {
+            s.push_str(&format!(" --fault-step {step}"));
+        }
+        Some(Fault::PhantomQuantAttend { step }) => {
+            s.push_str(&format!(" --fault-quant-step {step}"));
+        }
+        None => {}
     }
     s
 }

@@ -43,6 +43,11 @@ pub struct TransferDelta {
     pub mask_uploads: u64,
     /// Resident decode executions.
     pub decode_steps: u64,
+    /// Demoted side-tier rows attended in place (quantized, device-local
+    /// — they never contribute to the byte counters above).
+    pub quant_attend_rows: u64,
+    /// Quantized bytes those in-place attends read.
+    pub quant_attend_bytes: u64,
 }
 
 /// Post-step snapshot of one slot-resident sequence's cache accounting.
@@ -91,6 +96,17 @@ pub struct SeqCheck {
     ///
     /// [`accounting_ok`]: crate::kvcache::PagedKvCache::accounting_ok
     pub accounting_err: Option<String>,
+    /// Cumulative side entries this sequence's decode steps attended in
+    /// place (quantized, no rehydrate) per the cache telemetry.
+    pub quant_attended_rows: usize,
+    /// Cumulative quantized bytes those in-place attends read.
+    pub quant_attended_bytes: usize,
+    /// Side-tier bytes one demoted entry costs at this cache's code width.
+    pub tier_bpe: usize,
+    /// Tier flow over this step for decode-active sequences:
+    /// `(demoted_before, demotions, rehydrations)`. `None` when the
+    /// sequence did not decode this step.
+    pub step_flow: Option<(usize, usize, usize)>,
 }
 
 /// Post-prefill budget accounting for one newly-admitted budget policy.
@@ -263,8 +279,14 @@ impl Invariant for WindowProtection {
 
 /// The quantized side tier stays conserved: the cache's own recount
 /// balances, the engine's rehydration ledger tracks exactly the demoted
-/// set, tier membership is disjoint (kept + demoted ≤ filled), and no
-/// demoted entry sits inside the protected window.
+/// set, tier membership is disjoint (kept + demoted ≤ filled), no demoted
+/// entry sits inside the protected window, the quant-attend telemetry is
+/// internally consistent, and per-step tier flow balances — rehydration
+/// counters only move on promotion (demoted_before + demotions ==
+/// demoted_after + rehydrations), never as a side effect of a quantized
+/// in-place attend. (That attends charge no resident transfer bytes is
+/// pinned by [`TransferAccounting`]: the predicted byte deltas exclude
+/// quant-attended rows entirely.)
 struct TierConservation;
 
 impl Invariant for TierConservation {
@@ -301,6 +323,22 @@ impl Invariant for TierConservation {
                      (re-entry backstop failed to rehydrate)",
                     s.id, s.demoted_in_window
                 ));
+            }
+            if s.quant_attended_bytes != s.quant_attended_rows * s.tier_bpe {
+                return Err(format!(
+                    "seq {}: {} quant-attended bytes != {} rows x {} bytes/entry",
+                    s.id, s.quant_attended_bytes, s.quant_attended_rows, s.tier_bpe
+                ));
+            }
+            if let Some((before, dem, reh)) = s.step_flow {
+                if before + dem != s.demoted + reh {
+                    return Err(format!(
+                        "seq {}: tier flow broken: {before} demoted before + {dem} \
+                         demotions != {} demoted after + {reh} rehydrations \
+                         (rehydration counters may only move on promotion)",
+                        s.id, s.demoted
+                    ));
+                }
             }
         }
         Ok(())

@@ -17,7 +17,9 @@
 //!   cancels and disconnects.
 //! * [`run_scenario`] drives it one discrete step at a time and checks the
 //!   invariant [`registry`] after every step: slot conservation, cache
-//!   accounting balance, the row-only transfer contract, window
+//!   accounting balance, the row-only transfer contract (including the
+//!   quant-attend counters — every live side entry is attended in place,
+//!   charging zero transfer bytes), tier-flow conservation, window
 //!   protection, budget respect — then metamorphic faithfulness (solo
 //!   replay) at the end.
 //! * [`thread_traces_match`] re-runs a scenario at different thread counts

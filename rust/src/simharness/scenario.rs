@@ -13,6 +13,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::policies::{PolicySpec, Surrogate};
+use crate::runtime::kernels::QuantBits;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload;
@@ -275,13 +276,20 @@ fn random_policy(r: &mut Rng) -> PolicySpec {
             surrogate: Surrogate::Mlp,
             tau: *r.choice(&[-8.0, -4.0, -1.0]),
             floor: None,
+            bits: QuantBits::Int8,
         },
         4 => PolicySpec::Kvzap {
             surrogate: Surrogate::Linear,
             tau: *r.choice(&[-6.0, -4.0]),
             floor: None,
+            bits: QuantBits::Int8,
         },
-        5 => PolicySpec::Kvzap { surrogate: Surrogate::Mlp, tau: 100.0, floor: None },
+        5 => PolicySpec::Kvzap {
+            surrogate: Surrogate::Mlp,
+            tau: 100.0,
+            floor: None,
+            bits: QuantBits::Int8,
+        },
         6 | 7 => PolicySpec::Full,
         8 => PolicySpec::H2o { keep_frac: *r.choice(&[0.25, 0.5, 0.75]) },
         9 => PolicySpec::SnapKv { keep_frac: *r.choice(&[0.25, 0.5, 0.75]) },
@@ -303,7 +311,12 @@ fn random_policy(r: &mut Rng) -> PolicySpec {
             // include the decode-evicting tau=100 extreme so the gated
             // decode path (both surrogates must agree) gets fuzzed too
             let tau = *r.choice(&[-4.0, 100.0]);
-            PolicySpec::FastKvzip { tau, gate_tau: *r.choice(&[tau, -4.0]), floor: None }
+            PolicySpec::FastKvzip {
+                tau,
+                gate_tau: *r.choice(&[tau, -4.0]),
+                floor: None,
+                bits: QuantBits::Int8,
+            }
         }
         18 => PolicySpec::ExpectedAttnVnorm { keep_frac: *r.choice(&[0.5, 0.75]) },
         19 => {
@@ -314,6 +327,7 @@ fn random_policy(r: &mut Rng) -> PolicySpec {
                 surrogate: Surrogate::Mlp,
                 tau,
                 floor: Some(*r.choice(&[-10.0, -8.0])),
+                bits: *r.choice(&[QuantBits::Int8, QuantBits::Int4]),
             }
         }
         _ => {
@@ -322,6 +336,7 @@ fn random_policy(r: &mut Rng) -> PolicySpec {
                 tau,
                 gate_tau: *r.choice(&[tau, -4.0]),
                 floor: Some(-9.0),
+                bits: QuantBits::Int8,
             }
         }
     }
@@ -331,16 +346,21 @@ fn random_policy(r: &mut Rng) -> PolicySpec {
 /// demote bands (τ up to the evict-everything extreme, floors near the
 /// bottom of the score range) across both two-threshold families.
 fn tiered_policy(r: &mut Rng) -> PolicySpec {
+    // every bit width shows up so quant-attend accounting is fuzzed over
+    // int8/int4/int2 side tiers, not just the default
+    let bits = *r.choice(&[QuantBits::Int8, QuantBits::Int4, QuantBits::Int2]);
     match r.below(3) {
         0 => PolicySpec::Kvzap {
             surrogate: Surrogate::Mlp,
             tau: *r.choice(&[-1.0, 100.0]),
             floor: Some(*r.choice(&[-10.0, -8.0])),
+            bits,
         },
         1 => PolicySpec::Kvzap {
             surrogate: Surrogate::Linear,
             tau: *r.choice(&[-2.0, 100.0]),
             floor: Some(-9.0),
+            bits,
         },
         _ => {
             let tau = *r.choice(&[-1.0, 100.0]);
@@ -348,6 +368,7 @@ fn tiered_policy(r: &mut Rng) -> PolicySpec {
                 tau,
                 gate_tau: *r.choice(&[tau, -1.0]),
                 floor: Some(*r.choice(&[-10.0, -8.0])),
+                bits,
             }
         }
     }

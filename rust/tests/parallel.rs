@@ -13,6 +13,7 @@ use std::sync::Arc;
 use common::{engine, needle_tokens, prefill_bits};
 use kvzap::coordinator::{Engine, SamplingParams};
 use kvzap::policies;
+use kvzap::runtime::kernels::SimdMode;
 use kvzap::runtime::{Arg, ParallelConfig, Runtime};
 use kvzap::util::rng::Rng;
 use kvzap::workload;
@@ -144,6 +145,56 @@ fn generation_is_thread_count_invariant() {
         texts.push((rs[0].text.clone(), format!("{:.6}", rs[0].compression)));
     }
     assert_eq!(texts[0], texts[1], "generation must not depend on the thread count");
+}
+
+/// The SIMD lanes preserve the blocked path's bitwise contract: every
+/// prefill output (logits, KV caches, all eight statistics) is identical
+/// between simd=scalar and simd=auto at the same thread count — the
+/// mul-then-add lanes keep each output's reduction order, so dispatch
+/// never changes a single emitted bit. On hosts where auto resolves to
+/// scalar this degenerates to a self-comparison, which still pins the
+/// dispatch plumbing.
+#[test]
+fn simd_prefill_is_bitwise_identical_to_blocked_scalar() {
+    let n = 300; // spans several 64-row blocks, not block-aligned
+    let toks = needle_tokens(n);
+    let rt = Runtime::reference_with_options(
+        512,
+        ParallelConfig::with_threads(4).with_simd(SimdMode::Scalar),
+    );
+    let want = prefill_bits(&rt, "prefill_b1_t384", &toks, n);
+    let rt = Runtime::reference_with_options(
+        512,
+        ParallelConfig::with_threads(4).with_simd(SimdMode::Auto),
+    );
+    let got = prefill_bits(&rt, "prefill_b1_t384", &toks, n);
+    assert_eq!(want.len(), got.len());
+    for (oi, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a, b, "simd=auto: prefill output {oi} diverged from blocked scalar");
+    }
+}
+
+/// End-to-end SIMD-dispatch determinism at the engine level: full
+/// generation (prefill + prune + batched resident decode) produces the
+/// same text and compression whether the blocked microkernels run scalar
+/// or through the AVX2/NEON lanes — the KVZAP_SIMD=scalar|auto twin of
+/// [`generation_is_thread_count_invariant`].
+#[test]
+fn generation_is_simd_mode_invariant() {
+    let mut texts: Vec<(String, String)> = vec![];
+    for simd in [SimdMode::Scalar, SimdMode::Auto] {
+        let cfg = ParallelConfig::with_threads(4).with_simd(simd);
+        let rt = Runtime::reference_with_options(512, cfg);
+        let e = Engine::new(Arc::new(rt));
+        let mut rng = Rng::new(11);
+        let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+        let policy = policies::by_name("kvzap_mlp:-4", e.window()).unwrap();
+        let sp = SamplingParams::greedy(8);
+        let prompts = [task.prompt.as_str(), task.prompt.as_str(), task.prompt.as_str()];
+        let rs = e.generate_batch(&prompts, policy.as_ref(), &sp).unwrap();
+        texts.push((rs[0].text.clone(), format!("{:.6}", rs[0].compression)));
+    }
+    assert_eq!(texts[0], texts[1], "generation must not depend on the SIMD mode");
 }
 
 /// The larger-capacity manifests grow the prefill bucket grid so a

@@ -112,6 +112,51 @@ fn injected_accounting_bug_is_caught_and_minimized() {
     assert_eq!(v.invariant, "transfer-accounting");
 }
 
+/// Mutation self-check for the quantized decode path: a backend that
+/// reports quant-attended rows it never served (a rogue counter bump with
+/// no matching demoted entries) must trip the transfer-accounting
+/// invariant's quant fields at exactly the injection step.
+#[test]
+fn injected_phantom_quant_attend_is_caught() {
+    let mut rng = Rng::new(78);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let client = ClientScript {
+        join_step: 0,
+        prompt: task.prompt,
+        policy: PolicySpec::Full,
+        structured_policy: false,
+        max_new: 16,
+        greedy: true,
+        seed: 1,
+        stop_newline: false,
+        cancel_step: None,
+        drop_step: None,
+    };
+    let spec = ScenarioSpec { seed: 0, steps: 12, max_batch: 2, clients: vec![client] };
+    let opts = SimOptions {
+        check_solo: false,
+        fault: Some(Fault::PhantomQuantAttend { step: 4 }),
+        ..SimOptions::default()
+    };
+
+    // sanity: without the fault the scenario is clean
+    let clean = run_scenario(&spec, &SimOptions { fault: None, ..opts.clone() });
+    assert!(clean.violation.is_none(), "{}", clean.violation.unwrap());
+
+    let failure = simulate(&spec, &opts).expect_err("the phantom quant attend must be caught");
+    assert_eq!(
+        failure.violation.invariant, "transfer-accounting",
+        "unexpected invariant: {}",
+        failure.violation
+    );
+    assert_eq!(failure.violation.step, 4, "caught at the injection step");
+    assert!(
+        failure.replay.contains("--fault-quant-step 4"),
+        "the replay line must carry the quant fault flag: {}",
+        failure.replay
+    );
+}
+
 /// Demotion-heavy scripted episodes (tiered two-threshold policies only)
 /// run clean under the full registry — tier conservation, the window
 /// re-entry backstop, accounting balance, transfer prediction, and the
