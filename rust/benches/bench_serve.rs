@@ -1,0 +1,192 @@
+//! Serving saturation bench: latency and throughput vs offered load
+//! through the router/shard layer, at 1/2/4 engine workers.
+//!
+//! Each cell submits a burst of shared-prefix requests (prompt families
+//! from the workload generators — the prefix cache's reuse unit) to a
+//! [`ShardPool`] and drives `pool.step()` until every request finishes:
+//! consistent-hash placement, fair-share tenant queues, continuous
+//! batching and cross-request prefix reuse all on the hot path. Reported
+//! per cell: wall time, token throughput, mean and p95 request latency,
+//! and the prefix hit/miss counters. Emits `BENCH_serve.json` at the repo
+//! root to seed the perf trajectory.
+//!
+//!     cargo bench --bench bench_serve            # full sweep
+//!     cargo bench --bench bench_serve -- --quick # CI smoke subset
+//!
+//! The `--quick` lane is also a functional gate: the shared-prefix burst
+//! must record a nonzero prefix-hit count (a zero-hit run means the reuse
+//! path silently stopped engaging).
+
+use std::sync::mpsc::{self, Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use kvzap::bench_support::{write_bench_json, BenchArgs};
+use kvzap::coordinator::{
+    BatcherConfig, Engine, Request, RouterConfig, SamplingParams, SeqEvent, ShardPool,
+};
+use kvzap::policies::PolicySpec;
+use kvzap::runtime::Runtime;
+use kvzap::util::rng::Rng;
+use kvzap::workload;
+
+struct Row {
+    shards: usize,
+    offered: usize,
+    tokens: usize,
+    wall_s: f64,
+    tok_s: f64,
+    mean_ms: f64,
+    p95_ms: f64,
+    prefix_hits: u64,
+    prefix_misses: u64,
+}
+
+/// Run one saturation cell: a burst of `offered` shared-prefix requests
+/// against a fresh pool of `shards` workers, stepped to completion.
+fn run_cell(shards: usize, offered: usize, t_max: usize) -> anyhow::Result<Row> {
+    let engines: Vec<Arc<Engine>> = (0..shards)
+        .map(|_| Arc::new(Engine::new(Arc::new(Runtime::reference_with_t_max(t_max)))))
+        .collect();
+    let mut pool = ShardPool::new(
+        engines,
+        BatcherConfig { max_batch: 4, max_wait_us: 0 },
+        RouterConfig { shards, prefix_reuse: true, ..RouterConfig::default() },
+    );
+
+    // duplicated prompt families: every family's members share one byte-
+    // identical prompt, so the second member of a family is a prefix hit
+    let mut rng = Rng::new(17);
+    let n_families = (offered / 2).max(1);
+    let families = workload::prefix_families(&mut rng, n_families, 1, 200);
+    let policy = PolicySpec::parse("kvzap_mlp:-4").unwrap();
+    let mut sp = SamplingParams::greedy(8);
+    sp.stop_at_newline = false;
+
+    let t0 = Instant::now();
+    let mut rxs: Vec<Option<Receiver<SeqEvent>>> = vec![];
+    for i in 0..offered {
+        let (tx, rx) = mpsc::channel();
+        pool.submit(
+            (i + 1) as u64,
+            &format!("tenant-{}", i % 3),
+            Request {
+                prompt: families[i % n_families][0].prompt.clone(),
+                policy: policy.clone(),
+                sp: sp.clone(),
+                stream: false,
+                events: tx,
+            },
+        );
+        rxs.push(Some(rx));
+    }
+
+    let mut latencies_ms: Vec<f64> = vec![];
+    let mut tokens = 0usize;
+    let mut iters = 0usize;
+    while rxs.iter().any(|r| r.is_some()) {
+        pool.step();
+        iters += 1;
+        anyhow::ensure!(iters < 100_000, "pool failed to drain {offered} requests");
+        for slot in rxs.iter_mut() {
+            let Some(rx) = slot else { continue };
+            loop {
+                match rx.try_recv() {
+                    Ok(SeqEvent::Done(r)) => {
+                        anyhow::ensure!(r.error.is_none(), "request failed: {:?}", r.error);
+                        latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                        tokens += r.tokens_out;
+                        *slot = None;
+                        break;
+                    }
+                    Ok(SeqEvent::Token { .. }) => {}
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        anyhow::bail!("a request's channel closed without a Done")
+                    }
+                }
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    latencies_ms.sort_by(|a, b| a.total_cmp(b));
+    let mean_ms = latencies_ms.iter().sum::<f64>() / latencies_ms.len() as f64;
+    let p95_ms = latencies_ms[(latencies_ms.len() * 95 / 100).min(latencies_ms.len() - 1)];
+    let (mut hits, mut misses) = (0u64, 0u64);
+    for s in 0..shards {
+        let m = &pool.core(s).engine().metrics;
+        hits += m.prefix_hits.load(std::sync::atomic::Ordering::Relaxed);
+        misses += m.prefix_misses.load(std::sync::atomic::Ordering::Relaxed);
+    }
+    Ok(Row {
+        shards,
+        offered,
+        tokens,
+        wall_s,
+        tok_s: tokens as f64 / wall_s,
+        mean_ms,
+        p95_ms,
+        prefix_hits: hits,
+        prefix_misses: misses,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let quick = args.flag("quick");
+    let shard_counts: Vec<usize> = if quick { vec![1, 2] } else { vec![1, 2, 4] };
+    let loads: Vec<usize> = if quick { vec![8] } else { vec![4, 8, 16] };
+    let t_max = args.usize("t-max", 512);
+
+    println!(
+        "{:>6} {:>8} {:>8} {:>9} {:>10} {:>10} {:>10} {:>6} {:>7}",
+        "shards", "offered", "tokens", "wall s", "tok/s", "mean ms", "p95 ms", "hits", "misses"
+    );
+    let mut rows: Vec<Row> = vec![];
+    for &shards in &shard_counts {
+        for &offered in &loads {
+            let r = run_cell(shards, offered, t_max)?;
+            println!(
+                "{:>6} {:>8} {:>8} {:>9.3} {:>10.1} {:>10.1} {:>10.1} {:>6} {:>7}",
+                r.shards,
+                r.offered,
+                r.tokens,
+                r.wall_s,
+                r.tok_s,
+                r.mean_ms,
+                r.p95_ms,
+                r.prefix_hits,
+                r.prefix_misses
+            );
+            rows.push(r);
+        }
+    }
+
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"shards\": {}, \"offered\": {}, \"tokens\": {}, \"wall_s\": {:.4}, \
+                 \"tok_s\": {:.2}, \"mean_ms\": {:.2}, \"p95_ms\": {:.2}, \
+                 \"prefix_hits\": {}, \"prefix_misses\": {}}}",
+                r.shards,
+                r.offered,
+                r.tokens,
+                r.wall_s,
+                r.tok_s,
+                r.mean_ms,
+                r.p95_ms,
+                r.prefix_hits,
+                r.prefix_misses
+            )
+        })
+        .collect();
+    write_bench_json("serve", "reference", quick, &items)?;
+
+    // functional gate: the shared-prefix burst must actually reuse
+    anyhow::ensure!(
+        rows.iter().all(|r| r.prefix_hits > 0),
+        "a shared-prefix burst recorded zero prefix hits — the reuse path stopped engaging"
+    );
+    Ok(())
+}

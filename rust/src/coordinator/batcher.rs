@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::engine::{DecodeGroup, Engine, Sequence, StepEvent};
+use super::router::PrefixCache;
 use super::sampler::SamplingParams;
 use crate::policies::PolicySpec;
 
@@ -129,6 +130,13 @@ pub struct SchedCore {
     waiting: VecDeque<Pending>,
     /// Ids cancelled before their Submit was processed.
     cancelled: HashSet<u64>,
+    /// Optional shared prefix cache ([`PrefixCache`]): when attached,
+    /// admission looks up (prompt, policy) and installs a cached prefill
+    /// snapshot on a hit instead of executing the prefill bucket.
+    prefix: Option<Arc<PrefixCache>>,
+    /// (id, was_hit) per admission since the last drain — the simulation
+    /// harness replays the cache protocol and checks these against it.
+    prefix_flags: Vec<(u64, bool)>,
 }
 
 impl SchedCore {
@@ -145,7 +153,26 @@ impl SchedCore {
             slots: vec![],
             waiting: VecDeque::new(),
             cancelled: HashSet::new(),
+            prefix: None,
+            prefix_flags: vec![],
         }
+    }
+
+    /// Attach (or detach) a shared prefix cache; subsequent admissions
+    /// consult it before running prefill.
+    pub fn set_prefix_cache(&mut self, cache: Option<Arc<PrefixCache>>) {
+        self.prefix = cache;
+    }
+
+    /// The engine this scheduler drives.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Drain the per-admission `(id, was_hit)` flags recorded since the
+    /// last call. Empty unless a prefix cache is attached.
+    pub fn take_prefix_flags(&mut self) -> Vec<(u64, bool)> {
+        std::mem::take(&mut self.prefix_flags)
     }
 
     /// Effective batch cap (after decode-bucket clamping).
@@ -223,7 +250,32 @@ impl SchedCore {
             let p = self.waiting.pop_front().unwrap();
             let policy = p.req.policy.build(engine.window());
             let mut seq = engine.sequence(p.id, &p.req.prompt, p.req.sp.clone());
-            match engine.prefill(&mut seq, policy.as_ref()) {
+            let prefilled = match &self.prefix {
+                None => engine.prefill(&mut seq, policy.as_ref()),
+                Some(pc) => {
+                    let pkey = p.req.policy.to_string();
+                    if let Some(snap) = pc.lookup(&p.req.prompt, &pkey) {
+                        // Hit: install the cached post-KVzap prefill state;
+                        // the per-request sampler still draws the first
+                        // token from the stored logits row, so outputs are
+                        // bitwise identical to a fresh prefill.
+                        engine.metrics.note_prefix_hit();
+                        self.prefix_flags.push((p.id, true));
+                        Ok(engine.prefill_from_snapshot(&mut seq, &snap))
+                    } else {
+                        match engine.prefill_with_snapshot(&mut seq, policy.as_ref()) {
+                            Ok((events, snap)) => {
+                                engine.metrics.note_prefix_miss();
+                                self.prefix_flags.push((p.id, false));
+                                pc.insert(&p.req.prompt, &pkey, snap);
+                                Ok(events)
+                            }
+                            Err(e) => Err(e),
+                        }
+                    }
+                }
+            };
+            match prefilled {
                 Ok(events) => {
                     let mut slot = Slot { id: p.id, req: p.req, arrived: p.arrived, seq };
                     dispatch(std::slice::from_mut(&mut slot), &events);
@@ -322,8 +374,19 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn start(engine: Arc<Engine>, cfg: BatcherConfig) -> Batcher {
+        Self::start_with_prefix(engine, cfg, None)
+    }
+
+    /// [`Batcher::start`] with a (possibly shared) cross-request prefix
+    /// cache attached to the scheduler — the sharded server hands every
+    /// shard's batcher the same cache.
+    pub fn start_with_prefix(
+        engine: Arc<Engine>,
+        cfg: BatcherConfig,
+        prefix: Option<Arc<PrefixCache>>,
+    ) -> Batcher {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = std::thread::spawn(move || Self::run(engine, cfg, rx));
+        let handle = std::thread::spawn(move || Self::run(engine, cfg, prefix, rx));
         Batcher { tx, next_id: AtomicU64::new(1), handle: Some(handle) }
     }
 
@@ -344,8 +407,14 @@ impl Batcher {
         self.tx.send(Msg::Cancel(id)).map_err(|_| anyhow::anyhow!("batcher stopped"))
     }
 
-    fn run(engine: Arc<Engine>, cfg: BatcherConfig, rx: Receiver<Msg>) {
+    fn run(
+        engine: Arc<Engine>,
+        cfg: BatcherConfig,
+        prefix: Option<Arc<PrefixCache>>,
+        rx: Receiver<Msg>,
+    ) {
         let mut core = SchedCore::new(engine, cfg.clone());
+        core.set_prefix_cache(prefix);
         let mut disconnected = false;
         loop {
             // ---- message intake -------------------------------------------

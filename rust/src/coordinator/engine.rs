@@ -312,6 +312,40 @@ impl Sequence {
     }
 }
 
+/// A reusable snapshot of one prefilled sequence, captured just before
+/// first-token sampling ([`Engine::prefill_with_snapshot`]): the pruned
+/// host KV, paged-cache bookkeeping, decode score window, tier ledger and
+/// the prefill logits row. The router's prefix cache stores one per unique
+/// (prompt, policy) and installs clones into joining sequences
+/// ([`Engine::prefill_from_snapshot`]), so requests sharing a prompt
+/// prefix skip the prefill execution entirely.
+pub struct PrefillSnapshot {
+    policy_name: String,
+    prompt_len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    cache: PagedKvCache,
+    sbuf: ScoreBuffer,
+    tau: Option<f32>,
+    dstat: Stat,
+    gate: Option<(Stat, f32)>,
+    floor: Option<f32>,
+    demoted_scores: Vec<Vec<(usize, f32)>>,
+    logits0: Vec<f32>,
+}
+
+impl PrefillSnapshot {
+    /// Prompt length in tokens (BOS included) the snapshot was taken at.
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    /// Approximate host bytes the snapshot pins (KV copy + logits row).
+    pub fn approx_bytes(&self) -> usize {
+        4 * (self.k.len() + self.v.len() + self.logits0.len())
+    }
+}
+
 /// Round-trip one position's K and V rows of a `[L, H, t_max, D]` host
 /// snapshot through the tier's quantizer, in place. A demoted row must
 /// read back exactly the lossy values the side tier stores, so a later
@@ -493,6 +527,72 @@ impl Engine {
     /// first token from the prefill logits. Returns the emitted events
     /// (first token, and possibly an immediate done).
     pub fn prefill(&self, seq: &mut Sequence, policy: &dyn PrunePolicy) -> Result<Vec<StepEvent>> {
+        let logits0 = self.prefill_inner(seq, policy)?;
+        Ok(self.first_token(seq, logits0.row(&[0])))
+    }
+
+    /// [`Engine::prefill`] that additionally captures a [`PrefillSnapshot`]
+    /// of the post-prune sequence state. The snapshot is taken *before*
+    /// the first token is sampled, so a sequence resumed from it replays
+    /// the whole generation — its own per-request sampler draws the first
+    /// token from the stored logits row. This is what the router's prefix
+    /// cache stores on a miss.
+    pub fn prefill_with_snapshot(
+        &self,
+        seq: &mut Sequence,
+        policy: &dyn PrunePolicy,
+    ) -> Result<(Vec<StepEvent>, PrefillSnapshot)> {
+        let logits0 = self.prefill_inner(seq, policy)?;
+        let snap = PrefillSnapshot {
+            policy_name: seq.policy_name.clone(),
+            prompt_len: seq.toks.len(),
+            k: seq.k.clone(),
+            v: seq.v.clone(),
+            cache: seq.cache.clone(),
+            sbuf: seq.sbuf.clone(),
+            tau: seq.tau,
+            dstat: seq.dstat,
+            gate: seq.gate,
+            floor: seq.floor,
+            demoted_scores: seq.demoted_scores.clone(),
+            logits0: logits0.row(&[0]).to_vec(),
+        };
+        Ok((self.first_token(seq, &snap.logits0), snap))
+    }
+
+    /// Install a cached [`PrefillSnapshot`] into a fresh sequence instead
+    /// of running the prefill bucket (a prefix-cache hit). The sequence
+    /// must carry the same prompt and policy the snapshot was taken from.
+    /// Its own sampler draws the first token from the stored logits row,
+    /// so the generation is bitwise identical to a cache-miss prefill;
+    /// backend-side state is reproduced by the normal decode-step join
+    /// path (full-slot scatter + mask + re-demotion of the tracked band),
+    /// exactly as a leave/rejoin already does.
+    pub fn prefill_from_snapshot(
+        &self,
+        seq: &mut Sequence,
+        snap: &PrefillSnapshot,
+    ) -> Vec<StepEvent> {
+        assert!(!seq.prefilled, "sequence {} already prefilled", seq.id);
+        debug_assert_eq!(seq.toks.len(), snap.prompt_len, "snapshot/prompt length mismatch");
+        seq.k = snap.k.clone();
+        seq.v = snap.v.clone();
+        seq.cache = snap.cache.clone();
+        seq.sbuf = snap.sbuf.clone();
+        seq.tau = snap.tau;
+        seq.dstat = snap.dstat;
+        seq.gate = snap.gate;
+        seq.floor = snap.floor;
+        seq.demoted_scores = snap.demoted_scores.clone();
+        seq.policy_name = snap.policy_name.clone();
+        seq.prefilled = true;
+        seq.pos = snap.prompt_len;
+        self.first_token(seq, &snap.logits0)
+    }
+
+    /// The shared prefill body: everything up to (but not including) the
+    /// first-token sample. Returns the prefill logits tensor.
+    fn prefill_inner(&self, seq: &mut Sequence, policy: &dyn PrunePolicy) -> Result<Tensor> {
         assert!(!seq.prefilled, "sequence {} already prefilled", seq.id);
         let man = &self.rt.manifest;
         let n = seq.toks.len();
@@ -616,10 +716,15 @@ impl Engine {
         seq.policy_name = policy.name();
         seq.prefilled = true;
         seq.pos = n;
+        Ok(logits0)
+    }
 
-        // first token comes from the prefill logits
+    /// Shared first-token tail: sample from the prefill logits row (fresh
+    /// prefill or cached snapshot) and emit the token / immediate-done
+    /// events.
+    fn first_token(&self, seq: &mut Sequence, logits0: &[f32]) -> Vec<StepEvent> {
         let mut events = vec![];
-        let t = seq.sampler.sample(logits0.row(&[0]), &seq.sp);
+        let t = seq.sampler.sample(logits0, &seq.sp);
         if self.tok.is_stop(t, seq.sp.stop_at_newline) {
             seq.done = Some(DoneReason::Stop);
             events.push(StepEvent::Done { id: seq.id, reason: DoneReason::Stop });
@@ -641,7 +746,7 @@ impl Engine {
                 events.push(StepEvent::Done { id: seq.id, reason: DoneReason::MaxTokens });
             }
         }
-        Ok(events)
+        events
     }
 
     /// Advance every live sequence in `seqs` by one decode step. The

@@ -10,6 +10,10 @@
 //!   running decode group whenever a slot frees (per-request sampling
 //!   params and [`crate::policies::PolicySpec`]), stream token events, and
 //!   can be cancelled mid-decode.
+//! * [`router`] — the multi-shard coordinator: consistent-hash placement
+//!   with load-based spill over N engine workers ([`ShardPool`]), per-
+//!   tenant fair-share admission queues, and cross-request prefix reuse
+//!   through a shared [`PrefixCache`] of pruned prefill snapshots.
 //! * [`sampler`] — greedy / temperature / top-k / top-p sampling.
 //!
 //! KV cache pruning is a first-class feature of the serving path: the
@@ -19,8 +23,12 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod router;
 pub mod sampler;
 
 pub use batcher::{Batcher, BatcherConfig, Request, Response, SchedCore, SeqEvent};
-pub use engine::{DecodeGroup, DoneReason, Engine, GenResult, Sequence, StepEvent};
+pub use engine::{
+    DecodeGroup, DoneReason, Engine, GenResult, PrefillSnapshot, Sequence, StepEvent,
+};
+pub use router::{PrefixCache, Rebalance, Router, RouterConfig, ShardPool};
 pub use sampler::{Sampler, SamplingParams};

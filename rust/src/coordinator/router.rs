@@ -1,0 +1,735 @@
+//! Multi-shard router/coordinator: N engine workers behind one front door.
+//!
+//! Three pieces compose the layer:
+//!
+//! * [`PrefixCache`] — cross-request prefix reuse. The first request for a
+//!   (prompt, policy) pair runs a real prefill and deposits a pruned
+//!   post-KVzap snapshot ([`PrefillSnapshot`], captured *before* the first
+//!   token is sampled); later requests for the same pair install the
+//!   snapshot instead of re-running the prefill bucket. Because KVzap
+//!   scoring is query-agnostic (KVzip §3.2: the surrogate scores depend
+//!   only on the prompt), the pruned prefix is valid for any continuation,
+//!   and because the per-request sampler still draws the first token from
+//!   the stored logits row, outputs are bitwise identical to a fresh
+//!   prefill. Hits and misses are accounted on
+//!   [`crate::metrics::EngineMetrics`].
+//! * [`Router`] — placement. A consistent-hash ring (virtual nodes per
+//!   shard) gives every prompt a stable home shard; placements are sticky
+//!   — once a key is placed, it only moves through a *recorded*
+//!   [`Rebalance`] (load-based spill when the home shard's backlog runs
+//!   ahead of the least-loaded shard). The simulation harness snapshots
+//!   the placement table every step and fails the run if a placement
+//!   changed without a matching rebalance record.
+//! * [`ShardPool`] — the deterministic driver: owns one [`SchedCore`]
+//!   (and thus one engine + resident cache) per shard, per-tenant FIFO
+//!   queues pumped round-robin (at most one dispatch per tenant per
+//!   round, bounded by a per-tenant in-flight cap), and steps shards in
+//!   index order so a fixed submit schedule yields bit-identical token
+//!   streams at any shard count.
+//!
+//! The threaded server reuses [`Router`] + [`PrefixCache`] directly (one
+//! `Batcher` per shard); [`ShardPool`] is the single-threaded composition
+//! used by the simulation harness and the saturation bench.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use super::batcher::{BatcherConfig, Request, Response, SchedCore, SeqEvent};
+use super::engine::{Engine, PrefillSnapshot};
+
+/// FNV-1a: tiny, deterministic, dependency-free — placement only ever
+/// needs a stable well-mixed 64-bit digest, not collision resistance.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Shared store of pruned prefill snapshots keyed by (prompt, policy).
+///
+/// Thread-safe (the threaded server shares one across shard batchers);
+/// first writer wins so concurrent misses for the same key converge on a
+/// single snapshot. Snapshots are deterministic in (prompt, policy) —
+/// the reference backend's weights are seed-derived — so which shard
+/// deposited one never matters.
+#[derive(Default)]
+pub struct PrefixCache {
+    map: Mutex<HashMap<(String, String), Arc<PrefillSnapshot>>>,
+}
+
+impl PrefixCache {
+    /// An empty cache.
+    pub fn new() -> PrefixCache {
+        PrefixCache::default()
+    }
+
+    /// The snapshot for (prompt, policy), if one was deposited.
+    pub fn lookup(&self, prompt: &str, policy: &str) -> Option<Arc<PrefillSnapshot>> {
+        self.map.lock().unwrap().get(&(prompt.to_string(), policy.to_string())).cloned()
+    }
+
+    /// Deposit a snapshot for (prompt, policy). First writer wins.
+    pub fn insert(&self, prompt: &str, policy: &str, snap: PrefillSnapshot) {
+        self.map
+            .lock()
+            .unwrap()
+            .entry((prompt.to_string(), policy.to_string()))
+            .or_insert_with(|| Arc::new(snap));
+    }
+
+    /// Whether a snapshot exists for (prompt, policy).
+    pub fn contains(&self, prompt: &str, policy: &str) -> bool {
+        self.map.lock().unwrap().contains_key(&(prompt.to_string(), policy.to_string()))
+    }
+
+    /// Number of cached snapshots.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when no snapshot has been deposited yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate host bytes held across all snapshots.
+    pub fn approx_bytes(&self) -> usize {
+        self.map.lock().unwrap().values().map(|s| s.approx_bytes()).sum()
+    }
+}
+
+/// Knobs for [`Router`] / [`ShardPool`].
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Number of engine workers.
+    pub shards: usize,
+    /// Ring points per shard (more → smoother key spread).
+    pub virtual_nodes: usize,
+    /// Backlog lead (placed shard minus least-loaded shard) at which a
+    /// placement spills to the least-loaded shard.
+    pub spill_threshold: usize,
+    /// Per-shard backlog bound: the pump leaves a request queued (with a
+    /// recorded "shard-full" skip) rather than dispatch to a shard at or
+    /// above this backlog.
+    pub shard_backlog: usize,
+    /// Per-tenant in-flight cap across the pool (dispatched, unfinished).
+    pub tenant_inflight: usize,
+    /// Attach a shared [`PrefixCache`] to every shard.
+    pub prefix_reuse: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            shards: 1,
+            virtual_nodes: 16,
+            spill_threshold: 4,
+            shard_backlog: 16,
+            tenant_inflight: 8,
+            prefix_reuse: false,
+        }
+    }
+}
+
+/// One recorded placement change. Placements are immutable *except*
+/// through these — the placement-stability invariant replays the table
+/// and demands a matching record for every observed move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rebalance {
+    /// [`Router::key_hash`] of the moved placement key.
+    pub key_hash: u64,
+    /// Shard the key was placed on before the move.
+    pub from: usize,
+    /// Shard the key moved to.
+    pub to: usize,
+    /// Why it moved (currently always "load-spill").
+    pub cause: &'static str,
+}
+
+/// Consistent-hash placement with sticky assignments and load-based
+/// spill. Deterministic: same key + same load vector → same shard.
+pub struct Router {
+    shards: usize,
+    spill_threshold: usize,
+    /// Sorted (point, shard) ring; `virtual_nodes` points per shard.
+    ring: Vec<(u64, usize)>,
+    /// key hash → shard, for every key ever placed.
+    placements: HashMap<u64, usize>,
+    rebalances: Vec<Rebalance>,
+}
+
+impl Router {
+    /// A router over `cfg.shards` shards.
+    pub fn new(cfg: &RouterConfig) -> Router {
+        let shards = cfg.shards.max(1);
+        let mut ring = Vec::with_capacity(shards * cfg.virtual_nodes.max(1));
+        for s in 0..shards {
+            for v in 0..cfg.virtual_nodes.max(1) {
+                ring.push((fnv1a(format!("shard{s}/vnode{v}").as_bytes()), s));
+            }
+        }
+        ring.sort_unstable();
+        Router {
+            shards,
+            spill_threshold: cfg.spill_threshold.max(1),
+            ring,
+            placements: HashMap::new(),
+            rebalances: vec![],
+        }
+    }
+
+    /// The stable digest placement records are keyed by.
+    pub fn key_hash(key: &str) -> u64 {
+        fnv1a(key.as_bytes())
+    }
+
+    /// Number of shards this router places over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn ring_shard(&self, h: u64) -> usize {
+        let i = self.ring.partition_point(|&(p, _)| p < h);
+        self.ring[i % self.ring.len()].1
+    }
+
+    /// Place `key` given the current per-shard backlogs. Sticky: a placed
+    /// key stays put unless its shard's backlog leads the least-loaded
+    /// shard by at least the spill threshold, in which case it moves there
+    /// and the move is recorded as a [`Rebalance`]. A first placement may
+    /// also spill (no record — nothing moved).
+    pub fn place(&mut self, key: &str, loads: &[usize]) -> usize {
+        debug_assert_eq!(loads.len(), self.shards);
+        let h = fnv1a(key.as_bytes());
+        let least = (0..self.shards).min_by_key(|&s| (loads[s], s)).unwrap_or(0);
+        match self.placements.get(&h).copied() {
+            Some(cur) => {
+                if loads[cur] >= loads[least] + self.spill_threshold {
+                    self.rebalances.push(Rebalance {
+                        key_hash: h,
+                        from: cur,
+                        to: least,
+                        cause: "load-spill",
+                    });
+                    self.placements.insert(h, least);
+                    least
+                } else {
+                    cur
+                }
+            }
+            None => {
+                let home = self.ring_shard(h);
+                let s = if loads[home] >= loads[least] + self.spill_threshold {
+                    least
+                } else {
+                    home
+                };
+                self.placements.insert(h, s);
+                s
+            }
+        }
+    }
+
+    /// Every placement ever made (key hash → shard).
+    pub fn placements(&self) -> &HashMap<u64, usize> {
+        &self.placements
+    }
+
+    /// All recorded placement moves, oldest first.
+    pub fn rebalances(&self) -> &[Rebalance] {
+        &self.rebalances
+    }
+
+    /// Fault hook (simulation only): silently move one placement record to
+    /// the next shard *without* recording a rebalance — the defect the
+    /// placement-stability invariant exists to catch. Deterministic (the
+    /// smallest key hash moves). Returns false when there is nothing to
+    /// misroute (no placements, or a single shard where every "move" is a
+    /// no-op).
+    pub fn inject_misroute(&mut self) -> bool {
+        if self.shards < 2 {
+            return false;
+        }
+        let Some(&h) = self.placements.keys().min() else {
+            return false;
+        };
+        let cur = self.placements[&h];
+        self.placements.insert(h, (cur + 1) % self.shards);
+        true
+    }
+}
+
+/// Why a backlogged tenant was passed over in one pump round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Skip {
+    /// Pump round the skip happened in.
+    pub round: u64,
+    /// The tenant that was passed over.
+    pub tenant: String,
+    /// "inflight-cap" or "shard-full".
+    pub cause: &'static str,
+}
+
+/// One request dispatched from the fair queue into a shard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dispatch {
+    /// Pump round the dispatch happened in.
+    pub round: u64,
+    /// The dispatching tenant.
+    pub tenant: String,
+    /// Request id.
+    pub id: u64,
+    /// Destination shard.
+    pub shard: usize,
+}
+
+struct Queued {
+    id: u64,
+    req: Request,
+}
+
+/// N [`SchedCore`] workers behind a [`Router`] and per-tenant fair-share
+/// queues. Single-threaded and deterministic: shards are stepped in index
+/// order, tenants pumped in first-seen order, so a fixed submit schedule
+/// produces bit-identical token streams at any shard count.
+pub struct ShardPool {
+    cores: Vec<SchedCore>,
+    router: Router,
+    prefix: Option<Arc<PrefixCache>>,
+    shard_backlog: usize,
+    tenant_inflight: usize,
+    /// Tenants in first-seen order — the deterministic round-robin order.
+    tenant_order: Vec<String>,
+    queues: HashMap<String, VecDeque<Queued>>,
+    inflight: HashMap<String, usize>,
+    /// Dispatched-but-unfinished: id → (tenant, shard).
+    id_map: HashMap<u64, (String, usize)>,
+    /// Ids cancelled before they were submitted (mirrors
+    /// [`SchedCore`]'s cancel-before-submit memory at the pool layer).
+    pre_cancelled: std::collections::HashSet<u64>,
+    skips: Vec<Skip>,
+    dispatches: Vec<Dispatch>,
+    round: u64,
+}
+
+impl ShardPool {
+    /// A pool with one scheduler per engine. Every engine should have its
+    /// own [`crate::runtime::Runtime`] (its own resident cache); sharing
+    /// one runtime across shards works but serializes their caches.
+    pub fn new(engines: Vec<Arc<Engine>>, batch: BatcherConfig, cfg: RouterConfig) -> ShardPool {
+        assert!(!engines.is_empty(), "shard pool needs at least one engine");
+        let prefix = cfg.prefix_reuse.then(|| Arc::new(PrefixCache::new()));
+        let cores: Vec<SchedCore> = engines
+            .into_iter()
+            .map(|e| {
+                let mut c = SchedCore::new(e, batch.clone());
+                c.set_prefix_cache(prefix.clone());
+                c
+            })
+            .collect();
+        let router = Router::new(&RouterConfig { shards: cores.len(), ..cfg.clone() });
+        ShardPool {
+            cores,
+            router,
+            prefix,
+            shard_backlog: cfg.shard_backlog.max(1),
+            tenant_inflight: cfg.tenant_inflight.max(1),
+            tenant_order: vec![],
+            queues: HashMap::new(),
+            inflight: HashMap::new(),
+            id_map: HashMap::new(),
+            pre_cancelled: std::collections::HashSet::new(),
+            skips: vec![],
+            dispatches: vec![],
+            round: 0,
+        }
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Shard `i`'s scheduler.
+    pub fn core(&self, i: usize) -> &SchedCore {
+        &self.cores[i]
+    }
+
+    /// Shard `i`'s scheduler, mutable (the harness drives admission and
+    /// decode per shard itself to observe state between phases).
+    pub fn core_mut(&mut self, i: usize) -> &mut SchedCore {
+        &mut self.cores[i]
+    }
+
+    /// The placement router.
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// The placement router, mutable (fault hooks).
+    pub fn router_mut(&mut self) -> &mut Router {
+        &mut self.router
+    }
+
+    /// The shared prefix cache, when reuse is enabled.
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.prefix.as_ref()
+    }
+
+    /// Enqueue a request under `tenant` ("" is a tenant like any other).
+    /// Ids must be unique among in-flight requests across the pool.
+    pub fn submit(&mut self, id: u64, tenant: &str, req: Request) {
+        if self.pre_cancelled.remove(&id) {
+            let _ = req.events.send(SeqEvent::Done(Response {
+                text: String::new(),
+                compression: 0.0,
+                tokens_out: 0,
+                e2e_us: 0,
+                error: None,
+                reason: Some("cancelled".into()),
+            }));
+            return;
+        }
+        if !self.queues.contains_key(tenant) {
+            self.tenant_order.push(tenant.to_string());
+            self.queues.insert(tenant.to_string(), VecDeque::new());
+        }
+        self.queues.get_mut(tenant).unwrap().push_back(Queued { id, req });
+    }
+
+    /// Cancel a request wherever it currently lives: still queued here →
+    /// answered immediately; dispatched → forwarded to its shard; not yet
+    /// submitted → remembered, and answered at submit time.
+    pub fn cancel(&mut self, id: u64) {
+        for q in self.queues.values_mut() {
+            if let Some(i) = q.iter().position(|p| p.id == id) {
+                let p = q.remove(i).unwrap();
+                let _ = p.req.events.send(SeqEvent::Done(Response {
+                    text: String::new(),
+                    compression: 0.0,
+                    tokens_out: 0,
+                    e2e_us: 0,
+                    error: None,
+                    reason: Some("cancelled".into()),
+                }));
+                return;
+            }
+        }
+        if let Some(&(_, shard)) = self.id_map.get(&id) {
+            self.cores[shard].cancel(id);
+        } else {
+            self.pre_cancelled.insert(id);
+        }
+    }
+
+    /// Fair-share admission: round-robin over tenants in first-seen
+    /// order, at most one dispatch per tenant per round, until a full
+    /// round makes no progress. A tenant passed over while backlogged
+    /// records a [`Skip`] with its cause (the fairness invariant demands
+    /// one for every tenant still queued afterwards). Returns the number
+    /// of requests dispatched.
+    pub fn pump(&mut self) -> usize {
+        let mut total = 0;
+        loop {
+            self.round += 1;
+            let mut progress = false;
+            for t in self.tenant_order.clone() {
+                let Some(front) = self.queues.get(&t).and_then(|q| q.front()) else {
+                    continue;
+                };
+                if self.inflight.get(&t).copied().unwrap_or(0) >= self.tenant_inflight {
+                    self.skips.push(Skip {
+                        round: self.round,
+                        tenant: t.clone(),
+                        cause: "inflight-cap",
+                    });
+                    continue;
+                }
+                let key = front.req.prompt.clone();
+                let loads: Vec<usize> = self.cores.iter().map(|c| c.backlog()).collect();
+                let shard = self.router.place(&key, &loads);
+                if self.cores[shard].backlog() >= self.shard_backlog {
+                    self.skips.push(Skip {
+                        round: self.round,
+                        tenant: t.clone(),
+                        cause: "shard-full",
+                    });
+                    continue;
+                }
+                let p = self.queues.get_mut(&t).unwrap().pop_front().unwrap();
+                self.cores[shard].submit(p.id, p.req);
+                *self.inflight.entry(t.clone()).or_insert(0) += 1;
+                self.id_map.insert(p.id, (t.clone(), shard));
+                self.dispatches.push(Dispatch {
+                    round: self.round,
+                    tenant: t.clone(),
+                    id: p.id,
+                    shard,
+                });
+                progress = true;
+                total += 1;
+            }
+            if !progress {
+                break;
+            }
+        }
+        total
+    }
+
+    /// Release per-tenant in-flight charges for finished request ids.
+    pub fn note_finished(&mut self, ids: &[u64]) {
+        for id in ids {
+            if let Some((t, _)) = self.id_map.remove(id) {
+                if let Some(n) = self.inflight.get_mut(&t) {
+                    *n = n.saturating_sub(1);
+                }
+            }
+        }
+    }
+
+    /// One full pool iteration: pump, then per shard (in index order)
+    /// admit → reap → decode → reap, releasing in-flight charges as
+    /// requests finish. Engine errors were already answered to the
+    /// affected requests (same contract as [`SchedCore::step`]).
+    pub fn step(&mut self) {
+        self.pump();
+        for i in 0..self.cores.len() {
+            self.cores[i].admit_waiting();
+            let mut done = self.cores[i].reap_finished();
+            let _ = self.cores[i].decode_once();
+            done.extend(self.cores[i].reap_finished());
+            self.note_finished(&done);
+        }
+    }
+
+    /// Requests still waiting in the pool's fair queues.
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Tenants with a nonempty queue, in round-robin order.
+    pub fn queued_tenants(&self) -> Vec<String> {
+        self.tenant_order
+            .iter()
+            .filter(|t| self.queues.get(*t).is_some_and(|q| !q.is_empty()))
+            .cloned()
+            .collect()
+    }
+
+    /// No queued and no shard-resident work anywhere.
+    pub fn is_idle(&self) -> bool {
+        self.queued() == 0 && self.cores.iter().all(|c| c.is_idle())
+    }
+
+    /// Drain the skip records accumulated since the last call.
+    pub fn take_skips(&mut self) -> Vec<Skip> {
+        std::mem::take(&mut self.skips)
+    }
+
+    /// Drain the dispatch records accumulated since the last call.
+    pub fn take_dispatches(&mut self) -> Vec<Dispatch> {
+        std::mem::take(&mut self.dispatches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sampler::SamplingParams;
+    use crate::policies::PolicySpec;
+    use crate::runtime::Runtime;
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn cfg(shards: usize) -> RouterConfig {
+        RouterConfig { shards, ..Default::default() }
+    }
+
+    #[test]
+    fn placement_is_sticky_and_deterministic() {
+        let mut r1 = Router::new(&cfg(4));
+        let mut r2 = Router::new(&cfg(4));
+        let loads = [0usize; 4];
+        let mut used = std::collections::HashSet::new();
+        for i in 0..32 {
+            let key = format!("prompt-{i}");
+            let a = r1.place(&key, &loads);
+            assert_eq!(a, r2.place(&key, &loads), "two routers agree");
+            assert_eq!(a, r1.place(&key, &loads), "repeat placement is sticky");
+            used.insert(a);
+        }
+        assert!(used.len() >= 2, "keys spread over shards: {used:?}");
+        assert!(r1.rebalances().is_empty(), "no moves under balanced load");
+    }
+
+    #[test]
+    fn overload_spills_and_records_rebalance() {
+        let mut r = Router::new(&cfg(2));
+        let home = r.place("k", &[0, 0]);
+        let other = 1 - home;
+        // Re-place with the home shard far ahead: must spill and record.
+        let mut loads = [0usize; 2];
+        loads[home] = 10;
+        let moved = r.place("k", &loads);
+        assert_eq!(moved, other);
+        assert_eq!(
+            r.rebalances(),
+            &[Rebalance {
+                key_hash: Router::key_hash("k"),
+                from: home,
+                to: other,
+                cause: "load-spill"
+            }]
+        );
+        // Sticky again on the new shard under balanced load.
+        assert_eq!(r.place("k", &[1, 1]), other);
+        assert_eq!(r.rebalances().len(), 1);
+    }
+
+    #[test]
+    fn misroute_injection_moves_a_placement_without_a_record() {
+        let mut r = Router::new(&cfg(2));
+        assert!(!r.inject_misroute(), "nothing placed yet");
+        let before = r.place("k", &[0, 0]);
+        assert!(r.inject_misroute());
+        let after = r.placements()[&Router::key_hash("k")];
+        assert_ne!(before, after);
+        assert!(r.rebalances().is_empty(), "the fault leaves no record");
+    }
+
+    #[test]
+    fn prefix_cache_starts_empty() {
+        let pc = PrefixCache::new();
+        assert!(pc.is_empty());
+        assert!(pc.lookup("p", "full").is_none());
+        assert!(!pc.contains("p", "full"));
+        assert_eq!(pc.approx_bytes(), 0);
+    }
+
+    fn request(prompt: &str) -> (Request, Receiver<SeqEvent>) {
+        let (tx, rx) = channel();
+        let req = Request {
+            prompt: prompt.to_string(),
+            policy: PolicySpec::Full,
+            sp: SamplingParams { max_new: 4, greedy: true, seed: 1, ..Default::default() },
+            stream: false,
+            events: tx,
+        };
+        (req, rx)
+    }
+
+    fn pool(shards: usize, rcfg: RouterConfig) -> ShardPool {
+        let engines = (0..shards)
+            .map(|_| Arc::new(Engine::new(Arc::new(Runtime::reference_with_t_max(128)))))
+            .collect();
+        ShardPool::new(engines, BatcherConfig::default(), rcfg)
+    }
+
+    fn final_text(rx: &Receiver<SeqEvent>) -> String {
+        loop {
+            match rx.recv().expect("response") {
+                SeqEvent::Done(r) => {
+                    assert!(r.error.is_none(), "unexpected error: {:?}", r.error);
+                    return r.text;
+                }
+                SeqEvent::Token { .. } => {}
+            }
+        }
+    }
+
+    /// Round-robin pump: with two backlogged tenants, each round
+    /// dispatches at most one request per tenant, and a tenant blocked by
+    /// its in-flight cap records a skip cause.
+    #[test]
+    fn pump_interleaves_tenants_and_records_skip_causes() {
+        let rcfg = RouterConfig { tenant_inflight: 2, ..cfg(2) };
+        let mut p = pool(2, rcfg);
+        let mut rxs = vec![];
+        for i in 0..4u64 {
+            let (req, rx) = request(&format!("tenant-a request {i}"));
+            p.submit(i, "a", req);
+            rxs.push(rx);
+        }
+        for i in 4..6u64 {
+            let (req, rx) = request(&format!("tenant-b request {i}"));
+            p.submit(i, "b", req);
+            rxs.push(rx);
+        }
+        let n = p.pump();
+        assert_eq!(n, 4, "2 per tenant: both hit the in-flight cap of 2");
+        let dispatches = p.take_dispatches();
+        for round in [1u64, 2] {
+            for tenant in ["a", "b"] {
+                let k = dispatches
+                    .iter()
+                    .filter(|d| d.round == round && d.tenant == tenant)
+                    .count();
+                assert_eq!(k, 1, "round {round} tenant {tenant}: exactly one dispatch");
+            }
+        }
+        let skips = p.take_skips();
+        assert!(
+            skips.iter().any(|s| s.tenant == "a" && s.cause == "inflight-cap"),
+            "capped tenant records its skip cause: {skips:?}"
+        );
+        assert_eq!(p.queued(), 2);
+        assert_eq!(p.queued_tenants(), vec!["a".to_string()]);
+        // Drain to completion: caps release as requests finish.
+        for _ in 0..200 {
+            if p.is_idle() {
+                break;
+            }
+            p.step();
+        }
+        assert!(p.is_idle(), "pool drains");
+        for rx in &rxs {
+            assert!(!final_text(rx).is_empty());
+        }
+    }
+
+    /// Metamorphic composition check at the pool level: the same six
+    /// requests produce bitwise-identical texts at 1 and 2 shards, and
+    /// shared prompts hit the prefix cache without changing outputs.
+    #[test]
+    fn shard_count_and_prefix_reuse_preserve_outputs() {
+        let run = |shards: usize, reuse: bool| -> Vec<String> {
+            let rcfg = RouterConfig { prefix_reuse: reuse, ..cfg(shards) };
+            let mut p = pool(shards, rcfg);
+            let mut rxs = vec![];
+            for i in 0..6u64 {
+                // three distinct prompts, each submitted twice
+                let (req, rx) = request(&format!("shared prompt {}", i % 3));
+                p.submit(i, if i % 2 == 0 { "a" } else { "b" }, req);
+                rxs.push(rx);
+            }
+            for _ in 0..200 {
+                if p.is_idle() {
+                    break;
+                }
+                p.step();
+            }
+            assert!(p.is_idle());
+            if reuse {
+                let pc = p.prefix_cache().expect("cache attached");
+                assert_eq!(pc.len(), 3, "one snapshot per distinct prompt");
+                let hits: u64 = (0..p.shard_count())
+                    .map(|i| {
+                        p.core(i)
+                            .engine()
+                            .metrics
+                            .prefix_hits
+                            .load(std::sync::atomic::Ordering::Relaxed)
+                    })
+                    .sum();
+                assert_eq!(hits, 3, "each repeated prompt hits once");
+            }
+            rxs.iter().map(final_text).collect()
+        };
+        let base = run(1, false);
+        assert_eq!(base, run(2, false), "shard count must not change outputs");
+        assert_eq!(base, run(1, true), "prefix reuse must not change outputs");
+        assert_eq!(base, run(2, true), "sharding + reuse must not change outputs");
+    }
+}

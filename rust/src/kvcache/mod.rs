@@ -622,6 +622,38 @@ impl PagedKvCache {
     }
 }
 
+impl Clone for PagedKvCache {
+    /// Snapshot clone (the prefix-reuse cache stores one per cached
+    /// prefill): every bitset and counter is copied, but the pool handles
+    /// are detached so the clone never releases charges it did not
+    /// allocate. Engine-path sequence caches carry no pools, so the clone
+    /// is a full-fidelity snapshot there; re-attach with
+    /// [`PagedKvCache::with_pool`] if admission control is wanted.
+    fn clone(&self) -> PagedKvCache {
+        PagedKvCache {
+            layers: self.layers,
+            heads: self.heads,
+            t_max: self.t_max,
+            kept: self.kept.clone(),
+            demoted: self.demoted.clone(),
+            words_per_head: self.words_per_head,
+            len: self.len,
+            kept_count: self.kept_count.clone(),
+            demoted_count: self.demoted_count.clone(),
+            resident: self.resident.clone(),
+            block_words: self.block_words,
+            freed_blocks: self.freed_blocks,
+            pool: None,
+            pool_blocks: self.pool_blocks,
+            side_pool: None,
+            side_bytes: self.side_bytes,
+            quant_attended_rows: self.quant_attended_rows,
+            tier: self.tier,
+            dirty: self.dirty,
+        }
+    }
+}
+
 impl Drop for PagedKvCache {
     fn drop(&mut self) {
         self.release();

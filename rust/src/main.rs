@@ -8,18 +8,24 @@
 //!                                full policy-catalog sweep over every suite;
 //!                                writes BENCH_leaderboard.json and prints
 //!                                per-suite accuracy/compression frontiers
-//!   serve [--addr host:port] [--policy ...]
+//!   serve [--addr host:port] [--policy ...] [--shards N] [--prefix-reuse]
 //!   policies                     pruning-policy catalog (params + defaults)
 //!   flops                        Appendix-B overhead table (Table 3)
 //!   metrics-demo                 quick built-in load test printing metrics
 //!   simulate [--seed S|A..B] [--steps K] [--clients N] [--max-batch B]
 //!            [--quick] [--no-solo] [--check-threads] [--threads T]
 //!            [--spec-file PATH] [--fault-step K] [--fault-quant-step K]
-//!            [--tiered]
+//!            [--fault-prefix-step K] [--fault-route-step K]
+//!            [--tiered] [--shards N] [--prefix-reuse] [--no-prefix-reuse]
 //!                                deterministic multi-client scenario fuzzer
 //!                                with invariant checking (docs/TESTING.md);
 //!                                --tiered scripts demotion-heavy episodes
-//!                                (two-threshold policies only);
+//!                                (two-threshold policies only); --shards N
+//!                                routes through the shard pool, adds the
+//!                                router invariants, and (with --quick or
+//!                                --check-shards) runs the shard-invariance
+//!                                metamorphic family on a shared-prefix
+//!                                episode;
 //!                                exits non-zero when an invariant fires
 
 use std::sync::Arc;
@@ -98,7 +104,8 @@ fn main() -> Result<()> {
 /// non-zero (the CI lane fails on any fired invariant).
 fn simulate(args: &Args) -> Result<()> {
     use kvzap::simharness::{
-        replay_line, simulate as run_one, thread_traces_match, Fault, ScenarioSpec, SimOptions,
+        replay_line, reuse_traces_match, shard_traces_match, simulate as run_one,
+        thread_traces_match, Fault, ScenarioSpec, SimOptions,
     };
     let quick = args.kv.contains_key("quick");
     let threads = match args.kv.get("threads") {
@@ -107,30 +114,46 @@ fn simulate(args: &Args) -> Result<()> {
             Some(v.parse().map_err(|_| anyhow!("bad --threads '{v}' (want a count)"))?)
         }
     };
-    let fault = match (args.kv.get("fault-step"), args.kv.get("fault-quant-step")) {
-        (Some(_), Some(_)) => {
-            return Err(anyhow!(
-                "--fault-step and --fault-quant-step are mutually exclusive \
-                 (one injected bug per mutation run)"
-            ))
-        }
-        (Some(v), None) => {
+    let fault_flags = [
+        ("fault-step", "PhantomRowFetch"),
+        ("fault-quant-step", "PhantomQuantAttend"),
+        ("fault-prefix-step", "PhantomPrefixHit"),
+        ("fault-route-step", "PhantomMisroute"),
+    ];
+    let set: Vec<&str> = fault_flags
+        .iter()
+        .map(|(f, _)| *f)
+        .filter(|f| args.kv.contains_key(*f))
+        .collect();
+    if set.len() > 1 {
+        return Err(anyhow!(
+            "--{} are mutually exclusive (one injected bug per mutation run)",
+            set.join(" and --")
+        ));
+    }
+    let fault = match set.first() {
+        None => None,
+        Some(flag) => {
+            let v = &args.kv[*flag];
             let step =
-                v.parse().map_err(|_| anyhow!("bad --fault-step '{v}' (want a step)"))?;
-            Some(Fault::PhantomRowFetch { step })
+                v.parse().map_err(|_| anyhow!("bad --{flag} '{v}' (want a step)"))?;
+            Some(match *flag {
+                "fault-step" => Fault::PhantomRowFetch { step },
+                "fault-quant-step" => Fault::PhantomQuantAttend { step },
+                "fault-prefix-step" => Fault::PhantomPrefixHit { step },
+                _ => Fault::PhantomMisroute { step },
+            })
         }
-        (None, Some(v)) => {
-            let step = v
-                .parse()
-                .map_err(|_| anyhow!("bad --fault-quant-step '{v}' (want a step)"))?;
-            Some(Fault::PhantomQuantAttend { step })
-        }
-        (None, None) => None,
     };
+    let shards = args.usize("shards", 1);
+    let prefix_reuse = args.kv.contains_key("prefix-reuse")
+        || (shards > 1 && !args.kv.contains_key("no-prefix-reuse"));
     let opts = SimOptions {
         threads,
         check_solo: !args.kv.contains_key("no-solo"),
         fault,
+        shards,
+        prefix_reuse,
         ..SimOptions::default()
     };
     let tiered = args.kv.contains_key("tiered");
@@ -160,8 +183,8 @@ fn simulate(args: &Args) -> Result<()> {
             Ok(s) => {
                 if opts.fault.is_some() && !s.fault_injected {
                     return Err(anyhow!(
-                        "--fault-step never fired (no KV group at that step): the clean \
-                         result is not a passed mutation check"
+                        "the injected fault never fired (nothing to corrupt at that \
+                         step): the clean result is not a passed mutation check"
                     ));
                 }
                 println!(
@@ -189,6 +212,8 @@ fn simulate(args: &Args) -> Result<()> {
         return Err(anyhow!("empty seed range '{seed_arg}' — nothing would be tested"));
     }
     let check_threads = quick || args.kv.contains_key("check-threads");
+    let check_shards =
+        shards > 1 && fault.is_none() && (quick || args.kv.contains_key("check-shards"));
     for &seed in &seeds {
         let spec = if tiered {
             ScenarioSpec::generate_tiered(seed, steps, clients, max_batch)
@@ -199,8 +224,9 @@ fn simulate(args: &Args) -> Result<()> {
             Ok(s) => {
                 if opts.fault.is_some() && !s.fault_injected {
                     return Err(anyhow!(
-                        "seed {seed}: --fault-step never fired (no KV group at that \
-                         step): the clean result is not a passed mutation check"
+                        "seed {seed}: the injected fault never fired (nothing to \
+                         corrupt at that step): the clean result is not a passed \
+                         mutation check"
                     ));
                 }
                 println!(
@@ -218,6 +244,34 @@ fn simulate(args: &Args) -> Result<()> {
                 std::process::exit(1);
             }
             println!("seed {seed}: threads 1 vs 2 bitwise identical");
+        }
+        if check_shards {
+            // metamorphic shard-invariance family on a cancel-free
+            // shared-prefix episode (cancelled streams are schedule-
+            // dependent, so the fuzzed spec above is not comparable)
+            let shared = ScenarioSpec::generate_shared_prefix(seed, 96, 4, max_batch);
+            if let Err(e) = shard_traces_match(&shared, 1, shards.max(2)) {
+                eprintln!("[kvzap simulate] SHARD-INVARIANCE VIOLATION: {e}");
+                eprintln!(
+                    "[kvzap simulate] replay: {} --shards {}",
+                    replay_line(&shared),
+                    shards.max(2)
+                );
+                std::process::exit(1);
+            }
+            if let Err(e) = reuse_traces_match(&shared, shards.max(2)) {
+                eprintln!("[kvzap simulate] PREFIX-REUSE-INVARIANCE VIOLATION: {e}");
+                eprintln!(
+                    "[kvzap simulate] replay: {} --shards {} --prefix-reuse",
+                    replay_line(&shared),
+                    shards.max(2)
+                );
+                std::process::exit(1);
+            }
+            println!(
+                "seed {seed}: outputs identical at 1 vs {} shard(s), reuse on vs off",
+                shards.max(2)
+            );
         }
     }
     println!("simulate: {} seed(s) clean", seeds.len());
@@ -383,14 +437,19 @@ fn leaderboard(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let engine = load_engine()?;
+    let shards = args.usize("shards", 1).max(1);
     let cfg = ServerConfig {
         addr: args.get("addr", "127.0.0.1:7712"),
         default_policy: args.get("policy", "kvzap_mlp:-4"),
         max_batch: args.usize("max-batch", 4),
         max_wait_us: args.usize("max-wait-us", 2000) as u64,
+        shards,
+        prefix_reuse: args.kv.contains_key("prefix-reuse")
+            || (shards > 1 && !args.kv.contains_key("no-prefix-reuse")),
     };
-    Server::new(engine, cfg).serve()
+    // one engine (own runtime + resident cache) per shard
+    let engines: Result<Vec<_>> = (0..shards).map(|_| load_engine()).collect();
+    Server::new_sharded(engines?, cfg).serve()
 }
 
 fn flops() -> Result<()> {

@@ -143,6 +143,12 @@ pub struct EngineMetrics {
     pub e2e: Mutex<Histogram>,
     pub requests: AtomicU64,
     pub tokens_out: AtomicU64,
+    /// Prefix-cache hits: admissions that installed a cached prefill
+    /// snapshot instead of executing the prefill bucket.
+    pub prefix_hits: AtomicU64,
+    /// Prefix-cache misses: admissions that ran a fresh prefill with reuse
+    /// enabled (a snapshot was captured and inserted for later requests).
+    pub prefix_misses: AtomicU64,
     /// Side-tier rows attended in place (no rehydrate) across all decode
     /// steps — the steady-state *compute* footprint of the demoted tier.
     pub quant_attend_rows: AtomicU64,
@@ -175,12 +181,24 @@ impl EngineMetrics {
         self.quant_attend_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Record a prefix-cache hit (snapshot installed, prefill skipped).
+    pub fn note_prefix_hit(&self) {
+        self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a prefix-cache miss (fresh prefill, snapshot captured).
+    pub fn note_prefix_miss(&self) {
+        self.prefix_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens_out={} mean_compression={:.3} quant_attend_rows={} quant_attend_bytes={}\n  prefill {}\n  decode_step {}\n  step_kv_up {}\n  step_kv_down {}\n  e2e {}",
+            "requests={} tokens_out={} mean_compression={:.3} prefix_hits={} prefix_misses={} quant_attend_rows={} quant_attend_bytes={}\n  prefill {}\n  decode_step {}\n  step_kv_up {}\n  step_kv_down {}\n  e2e {}",
             self.requests.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
             self.mean_compression(),
+            self.prefix_hits.load(Ordering::Relaxed),
+            self.prefix_misses.load(Ordering::Relaxed),
             self.quant_attend_rows.load(Ordering::Relaxed),
             self.quant_attend_bytes.load(Ordering::Relaxed),
             self.prefill.lock().unwrap().summary("us"),

@@ -10,6 +10,7 @@
 
 use crate::kvcache::PagedKvCache;
 
+#[derive(Clone)]
 pub struct ScoreBuffer {
     window: usize,
     layers: usize,

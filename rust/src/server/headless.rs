@@ -5,9 +5,9 @@
 //! no ports, no listener, no OS networking. Each [`HeadlessClient`] is one
 //! "connection" — a thread running the protocol loop, fed request lines
 //! through a channel and answering with parsed JSON lines. All generation
-//! still funnels through the shared continuous [`Batcher`], so batching,
-//! streaming, cancellation and error handling behave exactly as they do
-//! over TCP.
+//! still funnels through the shard set's continuous batchers, so routing,
+//! batching, streaming, cancellation and error handling behave exactly as
+//! they do over TCP.
 //!
 //! This is what the server error-path tests and the simulation tooling
 //! use: hermetic, deterministic setup/teardown, and no port allocation.
@@ -22,8 +22,8 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use super::{serve_lines, ServerConfig};
-use crate::coordinator::{Batcher, BatcherConfig, Engine};
+use super::{serve_lines, ServerConfig, ShardSet};
+use crate::coordinator::Engine;
 use crate::util::json::Json;
 
 /// `Read` over a byte channel; EOF when the sending side is dropped.
@@ -72,31 +72,38 @@ impl Write for ChanWriter {
     }
 }
 
-/// The headless server: the shared engine + batcher a set of
+/// The headless server: the shard set (engines + batchers) a set of
 /// [`HeadlessClient`] connections funnel into. `cfg.addr` is unused (there
 /// is no socket); the other [`ServerConfig`] fields mean what they mean
 /// for the TCP frontend.
 pub struct HeadlessServer {
-    engine: Arc<Engine>,
-    batcher: Arc<Batcher>,
+    shards: Arc<ShardSet>,
     default_policy: String,
     stop: Arc<AtomicBool>,
 }
 
 impl HeadlessServer {
-    /// Start the shared batcher; connections attach via
+    /// Start a single-shard batcher; connections attach via
     /// [`HeadlessServer::connect`].
     pub fn new(engine: Arc<Engine>, cfg: ServerConfig) -> HeadlessServer {
-        let batcher = Arc::new(Batcher::start(
-            engine.clone(),
-            BatcherConfig { max_batch: cfg.max_batch, max_wait_us: cfg.max_wait_us },
-        ));
+        HeadlessServer::new_sharded(vec![engine], cfg)
+    }
+
+    /// Start one batcher per engine behind the router; requests placed by
+    /// consistent hash with load spill, exactly like the TCP frontend.
+    pub fn new_sharded(engines: Vec<Arc<Engine>>, cfg: ServerConfig) -> HeadlessServer {
+        let shards = ShardSet::new(engines, &cfg);
         HeadlessServer {
-            engine,
-            batcher,
+            shards,
             default_policy: cfg.default_policy,
             stop: Arc::new(AtomicBool::new(false)),
         }
+    }
+
+    /// Every shard's engine, in shard order (for tests that cross-check
+    /// the aggregated `stats` command against per-shard counters).
+    pub fn engines(&self) -> &[Arc<Engine>] {
+        self.shards.engines()
     }
 
     /// Open one in-process protocol connection (its own loop thread).
@@ -105,12 +112,11 @@ impl HeadlessServer {
         let (resp_tx, resp_rx) = mpsc::channel::<String>();
         let reader = BufReader::new(ChanReader { rx: line_rx, buf: VecDeque::new() });
         let writer = Arc::new(Mutex::new(ChanWriter { tx: resp_tx, buf: vec![] }));
-        let batcher = self.batcher.clone();
-        let engine = self.engine.clone();
+        let shards = self.shards.clone();
         let stop = self.stop.clone();
         let default_policy = self.default_policy.clone();
         let handle = std::thread::spawn(move || {
-            let _ = serve_lines(reader, writer, batcher, engine, stop, || {}, &default_policy);
+            let _ = serve_lines(reader, writer, shards, stop, || {}, &default_policy);
         });
         HeadlessClient { tx: line_tx, rx: resp_rx, handle: Some(handle) }
     }

@@ -62,12 +62,15 @@ pub use headless::{HeadlessClient, HeadlessServer};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Batcher, Engine, Request, SamplingParams, SeqEvent};
+use crate::coordinator::{
+    Batcher, BatcherConfig, Engine, PrefixCache, Request, Router, RouterConfig,
+    SamplingParams, SeqEvent,
+};
 use crate::policies::{spec, PolicySpec};
 use crate::util::json::Json;
 
@@ -76,6 +79,13 @@ pub struct ServerConfig {
     pub default_policy: String,
     pub max_batch: usize,
     pub max_wait_us: u64,
+    /// Engine workers the frontend should run. Purely a builder hint —
+    /// `Server::new_sharded` / `HeadlessServer::new_sharded` take the
+    /// actual engines and use their count; `main` reads this to decide how
+    /// many to construct.
+    pub shards: usize,
+    /// Share a cross-request prefix cache across all shards' batchers.
+    pub prefix_reuse: bool,
 }
 
 impl Default for ServerConfig {
@@ -85,6 +95,8 @@ impl Default for ServerConfig {
             default_policy: "kvzap_mlp:-4".into(),
             max_batch: 4,
             max_wait_us: 2_000,
+            shards: 1,
+            prefix_reuse: false,
         }
     }
 }
@@ -97,6 +109,10 @@ pub struct ParsedRequest {
     pub stream: bool,
     /// Client-chosen id (string or number), echoed in responses/events.
     pub id: Option<Json>,
+    /// Tenant the request bills to ("" when absent — a tenant like any
+    /// other). The deterministic pool path enforces per-tenant fair-share
+    /// queueing on it; the threaded frontend just carries it.
+    pub tenant: String,
 }
 
 pub fn parse_request(line: &str, default_policy: &str) -> Result<ParsedRequest> {
@@ -123,7 +139,11 @@ pub fn parse_request_json(j: &Json, default_policy: &str) -> Result<ParsedReques
             anyhow::bail!("'id' must be a string or a number");
         }
     }
-    Ok(ParsedRequest { prompt, policy, sp, stream, id })
+    let tenant = match j.get("tenant") {
+        None => String::new(),
+        Some(t) => t.as_str().context("'tenant' must be a string")?.to_string(),
+    };
+    Ok(ParsedRequest { prompt, policy, sp, stream, id, tenant })
 }
 
 /// Non-streaming response body — the exact protocol-v1 shape, plus the
@@ -163,6 +183,14 @@ pub fn stats_json(engine: &Engine) -> Json {
             Json::num(m.tokens_out.load(std::sync::atomic::Ordering::Relaxed) as f64),
         ),
         ("mean_compression", Json::num(m.mean_compression())),
+        (
+            "prefix_hits",
+            Json::num(m.prefix_hits.load(std::sync::atomic::Ordering::Relaxed) as f64),
+        ),
+        (
+            "prefix_misses",
+            Json::num(m.prefix_misses.load(std::sync::atomic::Ordering::Relaxed) as f64),
+        ),
         ("decode_steps", Json::num(t.decode_steps as f64)),
         ("kv_bytes_up", Json::num(t.kv_bytes_up as f64)),
         ("kv_bytes_down", Json::num(t.kv_bytes_down as f64)),
@@ -176,6 +204,146 @@ pub fn stats_json(engine: &Engine) -> Json {
         ("tier_bytes_stored", Json::num(t.tier_bytes_stored as f64)),
         ("tier_bytes_freed", Json::num(t.tier_bytes_freed as f64)),
     ])
+}
+
+/// Aggregated stats across a server's shards, for {"cmd": "stats"}: every
+/// counter field is summed, `mean_compression` is request-weighted, and
+/// the untouched per-shard bodies ride along under "shard" (index order)
+/// so load imbalance stays visible. For a single shard the top-level
+/// fields equal the lone shard entry's.
+pub fn stats_json_sharded(engines: &[Arc<Engine>]) -> Json {
+    let per: Vec<Json> = engines.iter().map(|e| stats_json(e)).collect();
+    let keys: Vec<String> = per[0].as_obj().unwrap().keys().cloned().collect();
+    let mut pairs: Vec<(&str, Json)> = vec![];
+    for k in &keys {
+        match k.as_str() {
+            "backend" => {
+                pairs.push(("backend", per[0].get("backend").cloned().unwrap_or(Json::Null)));
+            }
+            "mean_compression" => {
+                let total: u64 = engines
+                    .iter()
+                    .map(|e| e.metrics.requests.load(Ordering::Relaxed))
+                    .sum();
+                let mean = if total == 0 {
+                    0.0
+                } else {
+                    engines
+                        .iter()
+                        .map(|e| {
+                            let n = e.metrics.requests.load(Ordering::Relaxed) as f64;
+                            e.metrics.mean_compression() * n
+                        })
+                        .sum::<f64>()
+                        / total as f64
+                };
+                pairs.push(("mean_compression", Json::num(mean)));
+            }
+            _ => {
+                let sum: f64 = per
+                    .iter()
+                    .map(|p| p.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0))
+                    .sum();
+                pairs.push((k.as_str(), Json::num(sum)));
+            }
+        }
+    }
+    pairs.push(("shard", Json::Arr(per)));
+    Json::obj(pairs)
+}
+
+/// Shard-aware dispatch state shared by every connection of a server: one
+/// continuous [`Batcher`] per shard (all sharing one [`PrefixCache`] when
+/// reuse is on) behind a [`Router`], with per-shard outstanding-request
+/// counters the router reads as its load vector. The threaded frontends
+/// do placement and load spill here; deterministic per-tenant fair-share
+/// queueing lives in [`crate::coordinator::ShardPool`] (the sim path).
+pub struct ShardSet {
+    engines: Vec<Arc<Engine>>,
+    batchers: Vec<Arc<Batcher>>,
+    router: Mutex<Router>,
+    outstanding: Vec<AtomicUsize>,
+    /// Fallback client-visible ids (clients that sent no "id"): a
+    /// set-global counter, since per-batcher ids collide across shards.
+    next_auto: AtomicU64,
+}
+
+impl ShardSet {
+    /// One batcher per engine; each engine should own its runtime (its
+    /// own resident cache).
+    pub fn new(engines: Vec<Arc<Engine>>, cfg: &ServerConfig) -> Arc<ShardSet> {
+        assert!(!engines.is_empty(), "shard set needs at least one engine");
+        let prefix = cfg.prefix_reuse.then(|| Arc::new(PrefixCache::new()));
+        let bcfg = BatcherConfig { max_batch: cfg.max_batch, max_wait_us: cfg.max_wait_us };
+        let batchers = engines
+            .iter()
+            .map(|e| {
+                Arc::new(Batcher::start_with_prefix(e.clone(), bcfg.clone(), prefix.clone()))
+            })
+            .collect();
+        let router = Mutex::new(Router::new(&RouterConfig {
+            shards: engines.len(),
+            prefix_reuse: cfg.prefix_reuse,
+            ..RouterConfig::default()
+        }));
+        let outstanding = (0..engines.len()).map(|_| AtomicUsize::new(0)).collect();
+        Arc::new(ShardSet {
+            engines,
+            batchers,
+            router,
+            outstanding,
+            next_auto: AtomicU64::new(1),
+        })
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Every shard's engine, in shard order.
+    pub fn engines(&self) -> &[Arc<Engine>] {
+        &self.engines
+    }
+
+    /// Shard `s`'s engine.
+    pub fn engine(&self, s: usize) -> &Arc<Engine> {
+        &self.engines[s]
+    }
+
+    /// Route by prompt (consistent hash + load spill) and submit to the
+    /// placed shard's batcher. Returns (shard, batcher id).
+    pub fn submit(&self, req: Request) -> Result<(usize, u64)> {
+        let loads: Vec<usize> =
+            self.outstanding.iter().map(|o| o.load(Ordering::Relaxed)).collect();
+        let shard = self.router.lock().unwrap().place(&req.prompt, &loads);
+        self.outstanding[shard].fetch_add(1, Ordering::Relaxed);
+        match self.batchers[shard].submit(req) {
+            Ok(bid) => Ok((shard, bid)),
+            Err(e) => {
+                self.finished(shard);
+                Err(e)
+            }
+        }
+    }
+
+    /// Release `shard`'s outstanding charge for one finished request.
+    pub fn finished(&self, shard: usize) {
+        let _ = self.outstanding[shard].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(1)),
+        );
+    }
+
+    /// Cancel a dispatched request on its shard.
+    pub fn cancel(&self, shard: usize, bid: u64) -> Result<()> {
+        self.batchers[shard].cancel(bid)
+    }
+
+    fn next_auto_id(&self) -> u64 {
+        self.next_auto.fetch_add(1, Ordering::Relaxed)
+    }
 }
 
 fn done_event_json(r: &crate::coordinator::Response, id: &Json) -> Json {
@@ -202,22 +370,29 @@ fn write_line<W: Write>(writer: &Arc<Mutex<W>>, j: &Json) -> std::io::Result<()>
 }
 
 pub struct Server {
+    /// Shard 0's engine, kept for embedders that poke metrics directly.
     pub engine: Arc<Engine>,
-    batcher: Arc<Batcher>,
+    shards: Arc<ShardSet>,
     cfg: ServerConfig,
     stop: Arc<AtomicBool>,
 }
 
 impl Server {
     pub fn new(engine: Arc<Engine>, cfg: ServerConfig) -> Server {
-        let batcher = Arc::new(Batcher::start(
-            engine.clone(),
-            crate::coordinator::BatcherConfig {
-                max_batch: cfg.max_batch,
-                max_wait_us: cfg.max_wait_us,
-            },
-        ));
-        Server { engine, batcher, cfg, stop: Arc::new(AtomicBool::new(false)) }
+        Server::new_sharded(vec![engine], cfg)
+    }
+
+    /// A server over N engine workers (one batcher + resident cache
+    /// each); requests are placed by prompt via the consistent-hash
+    /// router with load spill.
+    pub fn new_sharded(engines: Vec<Arc<Engine>>, cfg: ServerConfig) -> Server {
+        let shards = ShardSet::new(engines, &cfg);
+        Server {
+            engine: shards.engine(0).clone(),
+            shards,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+        }
     }
 
     /// Blocking accept loop. Returns when a client sends {"cmd":"shutdown"}
@@ -243,13 +418,12 @@ impl Server {
                 break; // woken by the shutdown handler
             }
             handles.retain(|h| !h.is_finished());
-            let batcher = self.batcher.clone();
-            let engine = self.engine.clone();
+            let shards = self.shards.clone();
             let stop = self.stop.clone();
             let addr = self.cfg.addr.clone();
             let default_policy = self.cfg.default_policy.clone();
             handles.push(std::thread::spawn(move || {
-                let _ = handle_conn(stream, batcher, engine, stop, addr, default_policy);
+                let _ = handle_conn(stream, shards, stop, addr, default_policy);
             }));
         }
         // Join only finished connection threads: a client idling on an
@@ -266,8 +440,7 @@ impl Server {
 
 fn handle_conn(
     stream: TcpStream,
-    batcher: Arc<Batcher>,
-    engine: Arc<Engine>,
+    shards: Arc<ShardSet>,
     stop: Arc<AtomicBool>,
     addr: String,
     default_policy: String,
@@ -279,7 +452,7 @@ fn handle_conn(
     let wake = move || {
         let _ = TcpStream::connect(&addr);
     };
-    serve_lines(reader, writer, batcher, engine, stop, wake, &default_policy)
+    serve_lines(reader, writer, shards, stop, wake, &default_policy)
 }
 
 /// One connection's protocol-v2 loop over an arbitrary transport: read
@@ -290,8 +463,7 @@ fn handle_conn(
 pub(crate) fn serve_lines<R, W>(
     reader: R,
     writer: Arc<Mutex<W>>,
-    batcher: Arc<Batcher>,
-    engine: Arc<Engine>,
+    shards: Arc<ShardSet>,
     stop: Arc<AtomicBool>,
     wake: impl Fn(),
     default_policy: &str,
@@ -300,10 +472,10 @@ where
     R: BufRead,
     W: Write + Send + 'static,
 {
-    // client-visible id -> batcher id, for {"cmd": "cancel"}; entries are
-    // removed when their request completes, so the map stays bounded by
-    // the number of in-flight requests
-    let ids: Arc<Mutex<HashMap<String, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    // client-visible id -> (shard, batcher id), for {"cmd": "cancel"};
+    // entries are removed when their request completes, so the map stays
+    // bounded by the number of in-flight requests
+    let ids: Arc<Mutex<HashMap<String, (usize, u64)>>> = Arc::new(Mutex::new(HashMap::new()));
     let mut pumps: Vec<std::thread::JoinHandle<()>> = vec![];
     let mut result: Result<()> = Ok(());
     for line in reader.lines() {
@@ -320,20 +492,29 @@ where
         let j = match Json::parse(&line) {
             Ok(j) => j,
             Err(e) => {
-                write_line(&writer, &Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]))?;
+                let msg = Json::str(format!("bad json: {e}"));
+                write_line(&writer, &Json::obj(vec![("error", msg)]))?;
                 continue;
             }
         };
         match j.get("cmd").and_then(|c| c.as_str()) {
             Some("metrics") => {
-                write_line(
-                    &writer,
-                    &Json::obj(vec![("metrics", Json::str(engine.metrics.report()))]),
-                )?;
+                let report = if shards.shard_count() == 1 {
+                    shards.engine(0).metrics.report()
+                } else {
+                    (0..shards.shard_count())
+                        .map(|s| format!("shard {s}: {}", shards.engine(s).metrics.report()))
+                        .collect::<Vec<_>>()
+                        .join("\n")
+                };
+                write_line(&writer, &Json::obj(vec![("metrics", Json::str(report))]))?;
                 continue;
             }
             Some("stats") => {
-                write_line(&writer, &Json::obj(vec![("stats", stats_json(&engine))]))?;
+                write_line(
+                    &writer,
+                    &Json::obj(vec![("stats", stats_json_sharded(shards.engines()))]),
+                )?;
                 continue;
             }
             Some("policies") => {
@@ -345,7 +526,7 @@ where
                     .get("id")
                     .map(|idj| idj.dump())
                     .and_then(|key| ids.lock().unwrap().get(&key).copied())
-                    .map(|bid| batcher.cancel(bid).is_ok())
+                    .map(|(shard, bid)| shards.cancel(shard, bid).is_ok())
                     .unwrap_or(false);
                 let mut pairs = vec![("ok", Json::Bool(ok))];
                 if !ok {
@@ -374,7 +555,7 @@ where
                 // Reject prompts beyond the largest prefill bucket with a
                 // structured error instead of silently truncating (the
                 // tokenizer is byte-level, so tokens = bytes + BOS).
-                let max_prompt = engine.max_prompt();
+                let max_prompt = shards.engine(0).max_prompt();
                 if preq.prompt.len() + 1 > max_prompt {
                     let mut pairs = vec![(
                         "error",
@@ -393,23 +574,29 @@ where
                 let (tx, rx) = mpsc::channel();
                 let client_id = preq.id.clone();
                 let stream_flag = preq.stream;
-                match batcher.submit(Request {
+                match shards.submit(Request {
                     prompt: preq.prompt,
                     policy: preq.policy,
                     sp: preq.sp,
                     stream: stream_flag,
                     events: tx,
                 }) {
-                    Ok(bid) => {
-                        let id_json =
-                            client_id.clone().unwrap_or_else(|| Json::num(bid as f64));
+                    Ok((shard, _bid)) => {
+                        // default ids come from the set-global counter, not
+                        // the per-shard batcher id (those collide across
+                        // shards and would alias cancel targets)
+                        let id_json = client_id
+                            .clone()
+                            .unwrap_or_else(|| Json::num(shards.next_auto_id() as f64));
                         let id_key = id_json.dump();
-                        ids.lock().unwrap().insert(id_key.clone(), bid);
+                        ids.lock().unwrap().insert(id_key.clone(), (shard, _bid));
                         if stream_flag {
                             let w = writer.clone();
                             let ids = ids.clone();
+                            let set = shards.clone();
                             pumps.push(std::thread::spawn(move || {
                                 pump_stream(rx, w, id_json);
+                                set.finished(shard);
                                 ids.lock().unwrap().remove(&id_key);
                             }));
                         } else {
@@ -419,10 +606,13 @@ where
                                     Ok(SeqEvent::Done(r)) => break r,
                                     Ok(SeqEvent::Token { .. }) => continue,
                                     Err(_) => {
+                                        shards.finished(shard);
+                                        ids.lock().unwrap().remove(&id_key);
                                         anyhow::bail!("batcher dropped the request")
                                     }
                                 }
                             };
+                            shards.finished(shard);
                             ids.lock().unwrap().remove(&id_key);
                             let body = response_json_with_id(&resp, client_id.as_ref());
                             let mut w = writer.lock().unwrap();

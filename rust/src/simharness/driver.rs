@@ -18,13 +18,22 @@
 //! [`simulate`] wraps a run with the shrink pass
 //! ([`crate::util::propcheck::minimize`] over [`shrink_spec`]) so a
 //! failure is reported as a minimal scenario plus a one-line replay.
+//!
+//! With `--shards N` (or prefix reuse, or a router-layer fault) the run
+//! goes through [`run_pool`] instead: N engines behind a [`ShardPool`],
+//! the same per-shard checks, plus the router-layer invariants
+//! (placement-stability, tenant-fairness, prefix-accounting) and the
+//! shard-invariance metamorphic family ([`shard_traces_match`] /
+//! [`reuse_traces_match`]).
 
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, TryRecvError};
 use std::sync::Arc;
 
 use crate::coordinator::{
-    BatcherConfig, Engine, Request, SchedCore, SeqEvent, Sequence, StepEvent,
+    BatcherConfig, Engine, Request, RouterConfig, SchedCore, SeqEvent, Sequence, ShardPool,
+    StepEvent,
 };
 use crate::metrics::TransferSnapshot;
 use crate::policies::PolicySpec;
@@ -32,7 +41,10 @@ use crate::runtime::{ParallelConfig, Runtime};
 use crate::server::{self, ParsedRequest};
 use crate::util::propcheck;
 
-use super::invariants::{registry, BudgetCheck, SeqCheck, StepObs, TransferDelta, Violation};
+use super::invariants::{
+    check_placement_stability, check_prefix_accounting, check_tenant_fairness, registry,
+    BudgetCheck, PrefixEvent, SeqCheck, StepObs, TransferDelta, Violation,
+};
 use super::scenario::ScenarioSpec;
 
 /// How to run a scenario (orthogonal to the scenario itself).
@@ -49,11 +61,25 @@ pub struct SimOptions {
     pub fault: Option<Fault>,
     /// Cache capacity for the run's engine.
     pub t_max: usize,
+    /// Engine workers behind the router. 1 = the classic single-core
+    /// path; >1 routes through a [`ShardPool`] (one engine + resident
+    /// cache per shard) and adds the router-layer checks.
+    pub shards: usize,
+    /// Attach a shared cross-request prefix cache. Forces the pool path
+    /// even at one shard so the reuse machinery is always exercised.
+    pub prefix_reuse: bool,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { threads: None, check_solo: true, fault: None, t_max: 512 }
+        SimOptions {
+            threads: None,
+            check_solo: true,
+            fault: None,
+            t_max: 512,
+            shards: 1,
+            prefix_reuse: false,
+        }
     }
 }
 
@@ -74,6 +100,22 @@ pub enum Fault {
     /// quant fields (predicted rows come from the pre-step demoted sets).
     PhantomQuantAttend {
         /// Simulation step at which to inject the rogue counter bump.
+        step: usize,
+    },
+    /// Count a prefix-cache hit at the given step without any snapshot
+    /// install — a scheduler whose hit counter runs ahead of the installs
+    /// it claims. Caught by the prefix-accounting check (the step's
+    /// counter movement no longer matches its admissions).
+    PhantomPrefixHit {
+        /// Simulation step at which to inject the rogue hit count.
+        step: usize,
+    },
+    /// Silently move one placement record at the given step without a
+    /// recorded [`crate::coordinator::Rebalance`] — a router that forgets
+    /// a move. Caught by the placement-stability check. Never fires at a
+    /// single shard (every move is a no-op there).
+    PhantomMisroute {
+        /// Simulation step at which to inject the silent move.
         step: usize,
     },
 }
@@ -135,6 +177,10 @@ pub struct SimReport {
     /// group to act on — the caller must not read a clean run as a passed
     /// mutation check in that case).
     pub fault_injected: bool,
+    /// Prefix-cache hits summed over all engines (0 without reuse).
+    pub prefix_hits: u64,
+    /// Prefix-cache misses summed over all engines (0 without reuse).
+    pub prefix_misses: u64,
 }
 
 struct ClientState {
@@ -146,14 +192,29 @@ struct ClientState {
 /// Run one scenario to completion (or first violation). Deterministic:
 /// the same spec and options produce the same [`SimTrace`] bit for bit.
 pub fn run_scenario(spec: &ScenarioSpec, opts: &SimOptions) -> SimReport {
-    let pcfg = match opts.threads {
-        None => ParallelConfig::from_env(),
-        Some(1) => ParallelConfig::scalar(),
-        Some(n) => ParallelConfig::with_threads(n),
+    let mk_engine = || {
+        let pcfg = match opts.threads {
+            None => ParallelConfig::from_env(),
+            Some(1) => ParallelConfig::scalar(),
+            Some(n) => ParallelConfig::with_threads(n),
+        };
+        Arc::new(Engine::new(Arc::new(Runtime::reference_with_options(opts.t_max, pcfg))))
     };
-    let rt = Runtime::reference_with_options(opts.t_max, pcfg);
-    let engine = Arc::new(Engine::new(Arc::new(rt)));
-    run_on(engine, spec, opts)
+    // The pool path is needed for real sharding, for prefix reuse, and
+    // for the router-layer faults; everything else keeps the untouched
+    // single-core path.
+    let pooled = opts.shards > 1
+        || opts.prefix_reuse
+        || matches!(
+            opts.fault,
+            Some(Fault::PhantomPrefixHit { .. }) | Some(Fault::PhantomMisroute { .. })
+        );
+    if pooled {
+        let engines = (0..opts.shards.max(1)).map(|_| mk_engine()).collect();
+        run_pool(engines, spec, opts)
+    } else {
+        run_on(mk_engine(), spec, opts)
+    }
 }
 
 fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimReport {
@@ -400,7 +461,368 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
         violation,
         steps_run,
         fault_injected,
+        prefix_hits: engine.metrics.prefix_hits.load(Ordering::Relaxed),
+        prefix_misses: engine.metrics.prefix_misses.load(Ordering::Relaxed),
     }
+}
+
+/// The sharded variant of [`run_on`]: N engines behind a [`ShardPool`],
+/// stepped in index order so the run stays deterministic at any shard
+/// count. Each shard gets the same per-step treatment as the single-core
+/// path (admission → observation → decode → registry checks, against its
+/// own engine's counters), and the router layer adds three checks per
+/// step: tenant fairness over the pump's dispatch/skip records, placement
+/// stability over the router's table, and prefix-hit accounting (the
+/// harness replays the cache protocol in admission order and demands the
+/// schedulers' hit flags and the engines' counters agree with it).
+fn run_pool(engines: Vec<Arc<Engine>>, spec: &ScenarioSpec, opts: &SimOptions) -> SimReport {
+    let n_shards = engines.len();
+    let (layers, heads, t_max, d_head) = {
+        let m = &engines[0].rt.manifest.model;
+        (m.n_layers, m.n_kv_heads, m.t_max, m.d_head)
+    };
+    let decode_buckets = engines[0].rt.manifest.buckets.decode_b.clone();
+    let window = engines[0].window();
+    let invariants = registry();
+
+    let mut pool = ShardPool::new(
+        engines,
+        BatcherConfig { max_batch: spec.max_batch, max_wait_us: 0 },
+        RouterConfig {
+            shards: n_shards,
+            prefix_reuse: opts.prefix_reuse,
+            ..RouterConfig::default()
+        },
+    );
+    let mut states: Vec<ClientState> = spec
+        .clients
+        .iter()
+        .map(|_| ClientState { rx: None, outcome: ClientOutcome::new(), submitted: false })
+        .collect();
+    let mut subs: HashMap<u64, ParsedRequest> = HashMap::new();
+    // per-shard mirrors of run_on's per-engine bookkeeping: engines have
+    // independent uid counters, so uids are only unique within a shard
+    let mut known_uids: Vec<HashSet<u64>> = vec![HashSet::new(); n_shards];
+    let mut flow_prev: Vec<HashMap<u64, (usize, usize)>> = vec![HashMap::new(); n_shards];
+    // harness-side replay of the prefix-cache protocol: keys deposited so
+    // far, maintained in the same shard-index admission order the
+    // schedulers run in, so predicted hits are exact
+    let mut prefix_keys: HashSet<(String, String)> = HashSet::new();
+    let mut prev_placements: HashMap<u64, usize> = HashMap::new();
+    let mut seen_rebalances = 0usize;
+    let (mut prev_hits, mut prev_misses) = (0u64, 0u64);
+
+    let mut violation: Option<Violation> = None;
+    let mut fault_injected = false;
+    let mut steps_run = 0;
+    'steps: for t in 0..spec.steps {
+        steps_run = t + 1;
+        // ---- scripted client actions ----------------------------------
+        for (i, c) in spec.clients.iter().enumerate() {
+            let id = (i + 1) as u64;
+            if c.join_step == t && !states[i].submitted {
+                states[i].submitted = true;
+                let line = c.request_json(id).dump();
+                match server::parse_request(&line, "full") {
+                    Ok(preq) => {
+                        let (tx, rx) = mpsc::channel();
+                        pool.submit(
+                            id,
+                            &preq.tenant,
+                            Request {
+                                prompt: preq.prompt.clone(),
+                                policy: preq.policy.clone(),
+                                sp: preq.sp.clone(),
+                                stream: true,
+                                events: tx,
+                            },
+                        );
+                        states[i].rx = Some(rx);
+                        subs.insert(id, preq);
+                    }
+                    Err(e) => {
+                        violation = Some(Violation {
+                            step: t,
+                            invariant: "protocol",
+                            detail: format!("client {id}: request rejected: {e:#}"),
+                        });
+                        break 'steps;
+                    }
+                }
+            }
+            if c.cancel_step == Some(t) {
+                pool.cancel(id);
+            }
+            if c.drop_step == Some(t) {
+                states[i].rx = None; // simulated disconnect
+            }
+        }
+
+        // ---- fair-share pump + router-layer checks --------------------
+        pool.pump();
+        if let Some(Fault::PhantomMisroute { step }) = opts.fault {
+            if step == t && pool.router_mut().inject_misroute() {
+                fault_injected = true;
+            }
+        }
+        let dispatches = pool.take_dispatches();
+        let skips = pool.take_skips();
+        let queued = pool.queued_tenants();
+        if let Err(detail) = check_tenant_fairness(&dispatches, &skips, &queued) {
+            violation = Some(Violation { step: t, invariant: "tenant-fairness", detail });
+            break 'steps;
+        }
+        let new_rebalances = pool.router().rebalances()[seen_rebalances..].to_vec();
+        seen_rebalances += new_rebalances.len();
+        let cur_placements = pool.router().placements().clone();
+        if let Err(detail) =
+            check_placement_stability(&prev_placements, &cur_placements, &new_rebalances)
+        {
+            violation =
+                Some(Violation { step: t, invariant: "placement-stability", detail });
+            break 'steps;
+        }
+        prev_placements = cur_placements;
+        if let Some(Fault::PhantomPrefixHit { step }) = opts.fault {
+            if step == t {
+                pool.core(0).engine().metrics.note_prefix_hit();
+                fault_injected = true;
+            }
+        }
+
+        // ---- per shard, in index order --------------------------------
+        let mut prefix_events: Vec<PrefixEvent> = vec![];
+        for s in 0..n_shards {
+            // admission + budget observation
+            let admitted = pool.core_mut(s).admit_waiting();
+            for (id, hit) in pool.core_mut(s).take_prefix_flags() {
+                let predicted_hit = match subs.get(&id) {
+                    // insert() is false when the key was already present
+                    Some(p) => !prefix_keys.insert((p.prompt.clone(), p.policy.to_string())),
+                    None => false,
+                };
+                prefix_events.push(PrefixEvent { id, observed_hit: hit, predicted_hit });
+            }
+            let mut budgets: Vec<BudgetCheck> = vec![];
+            for (id, seq) in pool.core(s).live() {
+                if !admitted.contains(&id) {
+                    continue;
+                }
+                let frac = match subs.get(&id).map(|p| &p.policy).and_then(budget_of) {
+                    Some(f) => f,
+                    None => continue,
+                };
+                let st = seq.cache_stats();
+                let n = seq.prompt_len().max(1);
+                budgets.push(BudgetCheck {
+                    id,
+                    policy: subs[&id].policy.to_string(),
+                    keep_frac: frac,
+                    kept_frac: st.kept as f64 / st.filled.max(1) as f64,
+                    slack: (window as f64 + 2.0) / n as f64 + 0.05,
+                });
+            }
+            let done = pool.core_mut(s).reap_finished();
+            pool.note_finished(&done);
+
+            // pre-decode protocol replay (transfer prediction)
+            let core = pool.core(s);
+            let residents_before: Vec<u64> = core
+                .group()
+                .resident_uids()
+                .iter()
+                .copied()
+                .filter(|&u| u != 0)
+                .collect();
+            let capacity_before = core.group().capacity();
+            let mut active_uids: Vec<u64> = vec![];
+            let mut dirty_uids: HashSet<u64> = HashSet::new();
+            let mut demoted_before: HashMap<u64, usize> = HashMap::new();
+            let mut q_rows = 0u64;
+            let mut q_bytes = 0u64;
+            for (_id, seq) in core.live() {
+                if seq.position() < t_max {
+                    active_uids.push(seq.uid());
+                    if seq.cache().is_dirty() {
+                        dirty_uids.insert(seq.uid());
+                    }
+                    let demoted = seq.cache_stats().demoted;
+                    demoted_before.insert(seq.uid(), demoted);
+                    q_rows += demoted as u64;
+                    q_bytes += (demoted * seq.cache().tier().bytes_per_entry()) as u64;
+                }
+            }
+            let expected = predict_transfer(
+                &active_uids,
+                &dirty_uids,
+                &residents_before,
+                capacity_before,
+                &decode_buckets,
+                (layers, heads, t_max, d_head),
+                (q_rows, q_bytes),
+            );
+            let before = core.engine().rt.transfer.snapshot();
+
+            // the shard's shared decode step
+            if let Err(e) = pool.core_mut(s).decode_once() {
+                violation = Some(Violation {
+                    step: t,
+                    invariant: "engine-error",
+                    detail: format!("shard {s}: {e:#}"),
+                });
+                break 'steps;
+            }
+            if s == 0 {
+                match opts.fault {
+                    Some(Fault::PhantomRowFetch { step }) if step == t => {
+                        if let Some(h) = pool.core(0).group().kv_handle() {
+                            let mut k = vec![0.0f32; h.row_elems()];
+                            let mut v = vec![0.0f32; h.row_elems()];
+                            let _ = pool
+                                .core(0)
+                                .engine()
+                                .rt
+                                .kv_fetch_row(h, 0, 0, &mut k, &mut v);
+                            fault_injected = true;
+                        }
+                    }
+                    Some(Fault::PhantomQuantAttend { step }) if step == t => {
+                        pool.core(0).engine().rt.transfer.note_quant_attend(1, 64);
+                        fault_injected = true;
+                    }
+                    _ => {}
+                }
+            }
+            let after = pool.core(s).engine().rt.transfer.snapshot();
+            let actual = TransferDelta {
+                kv_bytes_up: after.kv_bytes_up - before.kv_bytes_up,
+                kv_bytes_down: after.kv_bytes_down - before.kv_bytes_down,
+                mask_uploads: after.mask_uploads - before.mask_uploads,
+                decode_steps: after.decode_steps - before.decode_steps,
+                quant_attend_rows: after.quant_attend_rows - before.quant_attend_rows,
+                quant_attend_bytes: after.quant_attend_bytes - before.quant_attend_bytes,
+            };
+
+            // invariant checks against this shard's engine
+            let core = pool.core(s);
+            let mut seqs: Vec<SeqCheck> = vec![];
+            for (id, seq) in core.live() {
+                let (pd, pr) = flow_prev[s].get(&seq.uid()).copied().unwrap_or((0, 0));
+                let step_flow = demoted_before.get(&seq.uid()).map(|&b| {
+                    (b, seq.decode_demotions - pd, seq.decode_rehydrations - pr)
+                });
+                flow_prev[s]
+                    .insert(seq.uid(), (seq.decode_demotions, seq.decode_rehydrations));
+                seqs.push(seq_check(
+                    id,
+                    seq,
+                    subs.get(&id).map(|p| &p.policy),
+                    window,
+                    layers,
+                    heads,
+                    step_flow,
+                ));
+            }
+            known_uids[s].extend(core.live().map(|(_, q)| q.uid()));
+            let obs = StepObs {
+                step: t,
+                seqs,
+                budgets,
+                known_uids: known_uids[s].iter().copied().collect(),
+                residents: core.group().resident_uids().to_vec(),
+                capacity: core.group().capacity(),
+                expected,
+                actual,
+            };
+            for inv in &invariants {
+                if let Err(detail) = inv.check(&obs) {
+                    violation = Some(Violation { step: t, invariant: inv.name(), detail });
+                    break 'steps;
+                }
+            }
+            let done = pool.core_mut(s).reap_finished();
+            pool.note_finished(&done);
+        }
+
+        // ---- prefix-hit accounting ------------------------------------
+        let (hits, misses) = pool_prefix_counts(&pool);
+        if let Err(detail) =
+            check_prefix_accounting(&prefix_events, hits - prev_hits, misses - prev_misses)
+        {
+            violation = Some(Violation { step: t, invariant: "prefix-accounting", detail });
+            break 'steps;
+        }
+        prev_hits = hits;
+        prev_misses = misses;
+
+        drain(&mut states);
+    }
+    drain(&mut states);
+    let transfer = pool_transfer(&pool);
+    let (prefix_hits, prefix_misses) = pool_prefix_counts(&pool);
+
+    if violation.is_none() {
+        for (i, st) in states.iter().enumerate() {
+            if let Some(e) = &st.outcome.error {
+                violation = Some(Violation {
+                    step: steps_run,
+                    invariant: "request-error",
+                    detail: format!("client {}: {e}", i + 1),
+                });
+                break;
+            }
+        }
+    }
+    if violation.is_none() && opts.check_solo {
+        violation = solo_check(pool.core(0).engine(), &subs, &states, steps_run);
+    }
+
+    SimReport {
+        trace: SimTrace {
+            clients: states.into_iter().map(|s| s.outcome).collect(),
+            transfer,
+        },
+        violation,
+        steps_run,
+        fault_injected,
+        prefix_hits,
+        prefix_misses,
+    }
+}
+
+/// Field-wise sum of every shard's transfer counters: the pool-level
+/// trace aggregates what N engines moved, so N-shard totals are
+/// comparable across runs even though per-shard residency differs.
+fn pool_transfer(pool: &ShardPool) -> TransferSnapshot {
+    let mut acc = pool.core(0).engine().rt.transfer.snapshot();
+    for s in 1..pool.shard_count() {
+        let t = pool.core(s).engine().rt.transfer.snapshot();
+        acc.kv_bytes_up += t.kv_bytes_up;
+        acc.kv_bytes_down += t.kv_bytes_down;
+        acc.mask_uploads += t.mask_uploads;
+        acc.bytes_up += t.bytes_up;
+        acc.bytes_down += t.bytes_down;
+        acc.decode_steps += t.decode_steps;
+        acc.demotes += t.demotes;
+        acc.rehydrates += t.rehydrates;
+        acc.tier_bytes_stored += t.tier_bytes_stored;
+        acc.tier_bytes_freed += t.tier_bytes_freed;
+        acc.quant_attend_rows += t.quant_attend_rows;
+        acc.quant_attend_bytes += t.quant_attend_bytes;
+    }
+    acc
+}
+
+/// (hits, misses) summed over every shard's engine.
+fn pool_prefix_counts(pool: &ShardPool) -> (u64, u64) {
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for s in 0..pool.shard_count() {
+        let m = &pool.core(s).engine().metrics;
+        hits += m.prefix_hits.load(Ordering::Relaxed);
+        misses += m.prefix_misses.load(Ordering::Relaxed);
+    }
+    (hits, misses)
 }
 
 /// Which budget the policy promises at prefill (None: not a budget policy
@@ -676,6 +1098,76 @@ pub fn thread_traces_match(spec: &ScenarioSpec, a: usize, b: usize) -> Result<()
     Ok(())
 }
 
+/// Metamorphic shard invariance: the same scenario must produce
+/// bit-identical per-client outcomes at two shard counts (prefix reuse
+/// off). Transfer counters are deliberately *not* compared — batch
+/// composition and residency churn differ per shard count by design; the
+/// claim is about request-visible outputs only. Requires a
+/// cancel/disconnect-free spec whose clients all finish within
+/// `spec.steps`: queueing delay differs across shard counts, so a partial
+/// stream's cut point is schedule-dependent and its comparison vacuous.
+pub fn shard_traces_match(spec: &ScenarioSpec, a: usize, b: usize) -> Result<(), String> {
+    let base = SimOptions { check_solo: false, ..SimOptions::default() };
+    let run = |shards: usize| -> Result<SimTrace, String> {
+        let r = run_scenario(spec, &SimOptions { shards, ..base.clone() });
+        if let Some(v) = r.violation {
+            return Err(format!("shards={shards}: {v}"));
+        }
+        for (i, c) in r.trace.clients.iter().enumerate() {
+            if !c.done {
+                return Err(format!(
+                    "shards={shards}: client {} did not finish — raise spec.steps so the \
+                     comparison sees complete streams",
+                    i + 1
+                ));
+            }
+        }
+        Ok(r.trace)
+    };
+    let ta = run(a)?;
+    let tb = run(b)?;
+    if ta.clients != tb.clients {
+        return Err(format!("outputs diverged between shards={a} and shards={b}"));
+    }
+    Ok(())
+}
+
+/// Metamorphic prefix-reuse invariance: at a fixed shard count, outputs
+/// with the prefix cache on must be bit-identical to outputs with it off
+/// — and the reuse run must actually hit (a zero-hit run proves nothing
+/// about the reuse path). Same spec requirements as
+/// [`shard_traces_match`].
+pub fn reuse_traces_match(spec: &ScenarioSpec, shards: usize) -> Result<(), String> {
+    let base = SimOptions { check_solo: false, shards, ..SimOptions::default() };
+    let off = run_scenario(spec, &SimOptions { prefix_reuse: false, ..base.clone() });
+    if let Some(v) = off.violation {
+        return Err(format!("reuse=off: {v}"));
+    }
+    let on = run_scenario(spec, &SimOptions { prefix_reuse: true, ..base });
+    if let Some(v) = on.violation {
+        return Err(format!("reuse=on: {v}"));
+    }
+    for (label, r) in [("off", &off), ("on", &on)] {
+        for (i, c) in r.trace.clients.iter().enumerate() {
+            if !c.done {
+                return Err(format!(
+                    "reuse={label}: client {} did not finish — raise spec.steps",
+                    i + 1
+                ));
+            }
+        }
+    }
+    if on.prefix_hits == 0 {
+        return Err(
+            "reuse run recorded zero prefix hits — the scenario exercises nothing".into()
+        );
+    }
+    if off.trace.clients != on.trace.clients {
+        return Err("outputs diverged between prefix reuse off and on".into());
+    }
+    Ok(())
+}
+
 /// Aggregate counts the CLI prints per clean run.
 #[derive(Debug, Clone)]
 pub struct SimSummary {
@@ -736,12 +1228,24 @@ pub fn replay_opts(opts: &SimOptions) -> String {
     if !opts.check_solo {
         s.push_str(" --no-solo");
     }
+    if opts.shards != 1 {
+        s.push_str(&format!(" --shards {}", opts.shards));
+    }
+    if opts.prefix_reuse {
+        s.push_str(" --prefix-reuse");
+    }
     match opts.fault {
         Some(Fault::PhantomRowFetch { step }) => {
             s.push_str(&format!(" --fault-step {step}"));
         }
         Some(Fault::PhantomQuantAttend { step }) => {
             s.push_str(&format!(" --fault-quant-step {step}"));
+        }
+        Some(Fault::PhantomPrefixHit { step }) => {
+            s.push_str(&format!(" --fault-prefix-step {step}"));
+        }
+        Some(Fault::PhantomMisroute { step }) => {
+            s.push_str(&format!(" --fault-route-step {step}"));
         }
         None => {}
     }

@@ -9,7 +9,10 @@
 //! failure aborts the run with a [`Violation`] naming the invariant, the
 //! step, and the detail — which the CLI turns into a replay line.
 
+use std::collections::{HashMap, HashSet};
 use std::fmt;
+
+use crate::coordinator::router::{Dispatch, Rebalance, Skip};
 
 /// One invariant failure: enough to reproduce (`step` within the scenario)
 /// and to triage (`invariant` name + detail).
@@ -377,4 +380,122 @@ pub fn registry() -> Vec<Box<dyn Invariant>> {
         Box::new(WindowProtection),
         Box::new(BudgetRespect),
     ]
+}
+
+// ---------------------------------------------------------------------------
+// Router-layer invariants (sharded runs only). These operate on router
+// observations rather than [`StepObs`], so they are standalone checks the
+// sharded driver calls once per step; violations carry the names
+// "placement-stability", "tenant-fairness" and "prefix-accounting". The
+// fourth router-layer property — shard-count output invariance — is
+// metamorphic (it compares whole runs, not steps) and lives in
+// [`crate::simharness::driver::shard_traces_match`] /
+// [`crate::simharness::driver::reuse_traces_match`].
+
+/// One prefix-cache admission observation: the hit flag the scheduler
+/// reported vs the hit the harness's own replay of the cache protocol
+/// (a key hits iff an earlier admission inserted it) predicted.
+#[derive(Debug, Clone)]
+pub struct PrefixEvent {
+    /// Request id of the admission.
+    pub id: u64,
+    /// Hit flag the scheduler recorded for this admission.
+    pub observed_hit: bool,
+    /// Hit the harness's protocol replay predicted.
+    pub predicted_hit: bool,
+}
+
+/// Placement stability: between two observations of the placement table,
+/// every moved key must be explained by a chain of recorded
+/// [`Rebalance`]s (a placement that changes with no recorded cause is a
+/// routing defect — or the injected `PhantomMisroute`). Keys may appear
+/// (first placements) but never vanish.
+pub fn check_placement_stability(
+    prev: &HashMap<u64, usize>,
+    cur: &HashMap<u64, usize>,
+    new_rebalances: &[Rebalance],
+) -> Result<(), String> {
+    for (k, &was) in prev {
+        let Some(&now) = cur.get(k) else {
+            return Err(format!("placement for key {k:#018x} vanished from the table"));
+        };
+        // walk this key's recorded moves; they must chain from `was`
+        let mut at = was;
+        for r in new_rebalances.iter().filter(|r| r.key_hash == *k) {
+            if r.from != at {
+                return Err(format!(
+                    "rebalance log for key {k:#018x} does not chain: record moves \
+                     {} -> {} ({}) but the key was on shard {at}",
+                    r.from, r.to, r.cause
+                ));
+            }
+            at = r.to;
+        }
+        if at != now {
+            return Err(format!(
+                "placement for key {k:#018x} moved {was} -> {now} but the recorded \
+                 rebalances only explain {was} -> {at}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Tenant fairness bounds for one pump: (a) round-robin — no tenant
+/// dispatches twice in the same round; (b) no silent starvation — a
+/// tenant still backlogged after the pump must have a recorded [`Skip`]
+/// naming the cause that blocked it.
+pub fn check_tenant_fairness(
+    dispatches: &[Dispatch],
+    skips: &[Skip],
+    queued: &[String],
+) -> Result<(), String> {
+    let mut seen: HashSet<(u64, &str)> = HashSet::new();
+    for d in dispatches {
+        if !seen.insert((d.round, d.tenant.as_str())) {
+            return Err(format!(
+                "tenant '{}' dispatched twice in pump round {}",
+                d.tenant, d.round
+            ));
+        }
+    }
+    for t in queued {
+        if !skips.iter().any(|s| &s.tenant == t) {
+            return Err(format!(
+                "tenant '{t}' is still backlogged after the pump with no recorded skip cause"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Prefix-hit accounting for one step: every admission's hit flag must
+/// match the harness's protocol replay, and the engines' hit/miss counter
+/// movement must equal the flags — a counter that moves without a
+/// matching admission (the injected `PhantomPrefixHit`) or an admission
+/// whose flag contradicts the replay is an accounting defect.
+pub fn check_prefix_accounting(
+    events: &[PrefixEvent],
+    hits_delta: u64,
+    misses_delta: u64,
+) -> Result<(), String> {
+    for e in events {
+        if e.observed_hit != e.predicted_hit {
+            return Err(format!(
+                "request {}: scheduler reported prefix hit={} but the cache-protocol \
+                 replay predicts hit={}",
+                e.id, e.observed_hit, e.predicted_hit
+            ));
+        }
+    }
+    let flag_hits = events.iter().filter(|e| e.observed_hit).count() as u64;
+    let flag_misses = events.len() as u64 - flag_hits;
+    if hits_delta != flag_hits || misses_delta != flag_misses {
+        return Err(format!(
+            "prefix counters moved by {hits_delta} hits / {misses_delta} misses but the \
+             step's admissions account for {flag_hits} / {flag_misses} \
+             (a hit was counted without a snapshot install, or vice versa)"
+        ));
+    }
+    Ok(())
 }

@@ -25,6 +25,12 @@
 //! * [`thread_traces_match`] re-runs a scenario at different thread counts
 //!   and requires bit-identical traces (the determinism rule every
 //!   backend must satisfy — docs/TESTING.md).
+//! * `--shards N` runs the same episode through the router/shard layer
+//!   ([`crate::coordinator::ShardPool`]) and adds its invariants —
+//!   placement-stability, tenant-fairness, prefix-accounting — plus the
+//!   shard-invariance metamorphic family: [`shard_traces_match`]
+//!   (outputs identical at any shard count) and [`reuse_traces_match`]
+//!   (outputs identical with the prefix cache on and off).
 //! * [`simulate`] adds the shrink pass: a violation is minimized via
 //!   [`crate::util::propcheck::minimize`] and reported with a single
 //!   replay line (`kvzap simulate --seed S --steps K ...`).
@@ -37,8 +43,12 @@ pub mod invariants;
 pub mod scenario;
 
 pub use driver::{
-    replay_line, replay_opts, run_scenario, shrink_spec, simulate, thread_traces_match,
-    ClientOutcome, Fault, SimFailure, SimOptions, SimReport, SimSummary, SimTrace,
+    replay_line, replay_opts, reuse_traces_match, run_scenario, shard_traces_match,
+    shrink_spec, simulate, thread_traces_match, ClientOutcome, Fault, SimFailure,
+    SimOptions, SimReport, SimSummary, SimTrace,
 };
-pub use invariants::{registry, StepObs, TransferDelta, Violation};
+pub use invariants::{
+    check_placement_stability, check_prefix_accounting, check_tenant_fairness, registry,
+    PrefixEvent, StepObs, TransferDelta, Violation,
+};
 pub use scenario::{ClientScript, ScenarioSpec};

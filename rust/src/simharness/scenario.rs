@@ -24,6 +24,9 @@ use crate::workload;
 pub struct ClientScript {
     /// Simulation step at which the request is submitted.
     pub join_step: usize,
+    /// Tenant this request bills to ("" is a tenant like any other). The
+    /// sharded driver feeds it to the pool's fair-share queues.
+    pub tenant: String,
     /// Prompt text (produced by the workload generators).
     pub prompt: String,
     /// Pruning policy for this request.
@@ -65,6 +68,7 @@ impl ClientScript {
             ("seed", Json::num(self.seed as f64)),
             ("stop_newline", Json::Bool(self.stop_newline)),
             ("stream", Json::Bool(true)),
+            ("tenant", Json::str(self.tenant.clone())),
             ("id", Json::num(id as f64)),
         ])
     }
@@ -73,6 +77,7 @@ impl ClientScript {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("join_step", Json::num(self.join_step as f64)),
+            ("tenant", Json::str(self.tenant.clone())),
             ("prompt", Json::str(self.prompt.clone())),
             ("policy", self.policy.to_json()),
             ("structured_policy", Json::Bool(self.structured_policy)),
@@ -90,6 +95,12 @@ impl ClientScript {
         let field = |k: &str| j.get(k).ok_or_else(|| anyhow!("client missing '{k}'"));
         Ok(ClientScript {
             join_step: field("join_step")?.as_usize().ok_or_else(|| anyhow!("bad join_step"))?,
+            // absent in pre-shard spec files: default tenant
+            tenant: j
+                .get("tenant")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
             prompt: field("prompt")?
                 .as_str()
                 .ok_or_else(|| anyhow!("bad prompt"))?
@@ -169,10 +180,65 @@ impl ScenarioSpec {
                 let t = workload::ruler_instance(subset, target, r);
                 ClientScript {
                     join_step: r.below((steps / 4).max(1)),
+                    tenant: String::new(),
                     prompt: t.prompt,
                     policy: tiered_policy(r),
                     structured_policy: r.below(100) < 30,
                     max_new: r.below(32) + 16,
+                    greedy: true,
+                    seed: r.below(1 << 31) as u64,
+                    stop_newline: false,
+                    cancel_step: None,
+                    drop_step: None,
+                }
+            })
+            .collect();
+        ScenarioSpec { seed, steps, max_batch, clients }
+    }
+
+    /// A shared-prefix episode for the router layer: clients are grouped
+    /// into prompt *families* (each family one duplicated prompt from
+    /// [`crate::workload::prefix_families`], all members the identical
+    /// byte string and the identical policy — the prefix cache's reuse
+    /// unit) and spread over a few tenants, so one run exercises
+    /// consistent-hash placement, fair-share queueing and prefix
+    /// hit/miss accounting at once. Members differ only in sampler seed
+    /// and token budget; no cancels or disconnects.
+    pub fn generate_shared_prefix(
+        seed: u64,
+        steps: usize,
+        n_clients: usize,
+        max_batch: usize,
+    ) -> ScenarioSpec {
+        let mut r = Rng::new(seed);
+        let n_families = (n_clients / 2).max(1);
+        let fam_r = &mut r.fork(1_000_003);
+        let target = *fam_r.choice(&[120usize, 200, 300]);
+        let families = workload::prefix_families(fam_r, n_families, 1, target);
+        let fam_policies: Vec<PolicySpec> = (0..n_families)
+            .map(|i| match fam_r.below(3) {
+                0 => PolicySpec::Full,
+                1 => PolicySpec::Kvzap {
+                    surrogate: Surrogate::Mlp,
+                    tau: -4.0,
+                    floor: None,
+                    bits: QuantBits::Int8,
+                },
+                _ => tiered_policy(&mut fam_r.fork(i as u64)),
+            })
+            .collect();
+        let n_tenants = n_clients.clamp(1, 3);
+        let clients = (0..n_clients)
+            .map(|i| {
+                let r = &mut r.fork(i as u64);
+                let fam = i % n_families;
+                ClientScript {
+                    join_step: r.below((steps / 3).max(1)),
+                    tenant: format!("tenant-{}", i % n_tenants),
+                    prompt: families[fam][0].prompt.clone(),
+                    policy: fam_policies[fam].clone(),
+                    structured_policy: false,
+                    max_new: r.below(16) + 6,
                     greedy: true,
                     seed: r.below(1 << 31) as u64,
                     stop_newline: false,
@@ -253,6 +319,7 @@ fn client_script(r: &mut Rng, steps: usize) -> ClientScript {
     };
     ClientScript {
         join_step,
+        tenant: String::new(),
         prompt,
         policy: random_policy(r),
         structured_policy: r.below(100) < 30,

@@ -183,6 +183,27 @@ fn qa2(r: &mut Rng, target: usize, subset: &str) -> TaskInstance {
     inst("ruler", subset, format!("{hay}Q job {n2}\nA "), j.to_string())
 }
 
+/// Shared-prefix prompt families for the prefix-reuse serving path: each
+/// family draws one RULER instance and duplicates it `members` times, so
+/// every member of a family shares the *identical* prompt byte-for-byte
+/// (the unit of cross-request prefix reuse — the router's prefix cache
+/// keys on the full prompt). Deterministic in the caller's `r`: the same
+/// seed yields the same family partition (prompts, sizes, order).
+pub fn prefix_families(
+    r: &mut Rng,
+    n_families: usize,
+    members: usize,
+    target_len: usize,
+) -> Vec<Vec<TaskInstance>> {
+    (0..n_families)
+        .map(|_| {
+            let subset = *r.choice(super::RULER_SUBSETS);
+            let t = ruler_instance(subset, target_len, r);
+            (0..members).map(|_| t.clone()).collect()
+        })
+        .collect()
+}
+
 pub fn ruler_instance(subset: &str, target_len: usize, r: &mut Rng) -> TaskInstance {
     match subset {
         "niah_single_1" => niah_single(r, target_len, 1, subset),
@@ -456,6 +477,50 @@ mod tests {
                 *want,
                 "input {input:?}"
             );
+        }
+    }
+
+    /// Determinism of the shared-prefix family partition: the same seed
+    /// must yield the same families (count, sizes, prompts — and every
+    /// member of a family the identical prompt), across a table of shapes.
+    #[test]
+    fn prefix_family_partition_is_deterministic_per_seed() {
+        let table: &[(u64, usize, usize, usize)] = &[
+            (1, 1, 2, 120),
+            (7, 2, 3, 200),
+            (42, 3, 2, 300),
+            (9009, 4, 4, 460),
+        ];
+        for &(seed, fams, members, target) in table {
+            let a = prefix_families(&mut Rng::new(seed), fams, members, target);
+            let b = prefix_families(&mut Rng::new(seed), fams, members, target);
+            assert_eq!(a.len(), fams, "seed {seed}: family count");
+            let parts = |fs: &[Vec<TaskInstance>]| -> Vec<Vec<String>> {
+                fs.iter()
+                    .map(|f| f.iter().map(|t| t.prompt.clone()).collect())
+                    .collect()
+            };
+            assert_eq!(parts(&a), parts(&b), "seed {seed}: partition must repeat");
+            for (i, fam) in a.iter().enumerate() {
+                assert_eq!(fam.len(), members, "seed {seed} family {i}: size");
+                for t in fam {
+                    assert_eq!(
+                        t.prompt, fam[0].prompt,
+                        "seed {seed} family {i}: members share one prompt"
+                    );
+                    assert!(t.prompt.len() <= target, "seed {seed} family {i}: budget");
+                }
+            }
+            // distinct families carry distinct prompts (random keys/values
+            // make a collision a generator bug, not chance)
+            for i in 0..a.len() {
+                for j in 0..i {
+                    assert_ne!(
+                        a[i][0].prompt, a[j][0].prompt,
+                        "seed {seed}: families {j} and {i} collide"
+                    );
+                }
+            }
         }
     }
 }

@@ -15,7 +15,9 @@
 pub mod generators;
 pub mod tokenizer;
 
-pub use generators::{aime_instance, longbench_instance, ruler_instance, AimeInstance};
+pub use generators::{
+    aime_instance, longbench_instance, prefix_families, ruler_instance, AimeInstance,
+};
 pub use tokenizer::ByteTokenizer;
 
 /// One evaluation sample.

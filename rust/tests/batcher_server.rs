@@ -125,6 +125,7 @@ fn server_round_trip() {
         default_policy: "kvzap_mlp:-4".into(),
         max_batch: 2,
         max_wait_us: 500,
+        ..ServerConfig::default()
     };
     let server = Arc::new(Server::new(e, cfg));
     let srv = server.clone();
@@ -169,6 +170,7 @@ fn server_v2_streaming_cancel_and_backcompat() {
         default_policy: "kvzap_mlp:-4".into(),
         max_batch: 2,
         max_wait_us: 100_000,
+        ..ServerConfig::default()
     };
     let server = Arc::new(Server::new(e.clone(), cfg));
     let srv = server.clone();
@@ -368,6 +370,7 @@ fn headless_server() -> HeadlessServer {
             default_policy: "kvzap_mlp:-4".into(),
             max_batch: 2,
             max_wait_us: 500,
+            ..ServerConfig::default()
         },
     )
 }
@@ -391,6 +394,68 @@ fn headless_transport_runs_the_v2_protocol() {
     let c2 = srv.connect();
     let r2 = c2.request(r#"{"prompt": "KEY = 777. filler. Q KEY\nA ", "max_new": 2}"#).unwrap();
     assert!(r2.get("error").is_none(), "{r2:?}");
+}
+
+/// Multi-shard headless server: the `stats` command aggregates counters
+/// across shards (every summed field equals the sum of its per-shard
+/// values in the `shard` breakdown), and repeating an identical
+/// (prompt, policy) pair hits the shared cross-shard prefix cache.
+#[test]
+fn sharded_stats_aggregate_and_prefix_hits() {
+    let srv = HeadlessServer::new_sharded(
+        vec![engine(), engine()],
+        ServerConfig {
+            addr: String::new(), // unused by the headless transport
+            default_policy: "kvzap_mlp:-4".into(),
+            max_batch: 2,
+            max_wait_us: 500,
+            prefix_reuse: true,
+            ..ServerConfig::default()
+        },
+    );
+    let c = srv.connect();
+    // same (prompt, policy) twice — the second prefill reuses the stored
+    // snapshot — plus one distinct prompt that may land on either shard
+    for prompt in [
+        "KEY = 777. filler. Q KEY\nA ",
+        "KEY = 777. filler. Q KEY\nA ",
+        "OTHER = 31. pad pad pad. Q OTHER\nA ",
+    ] {
+        let req =
+            Json::obj(vec![("prompt", Json::str(prompt)), ("max_new", Json::num(4.0))]);
+        let r = c.request(&req.dump()).unwrap();
+        assert!(r.get("error").is_none(), "{r:?}");
+    }
+    let stats = c.request(r#"{"cmd": "stats"}"#).unwrap();
+    let s = stats.get("stats").expect("stats object");
+    let per = s.get("shard").and_then(|v| v.as_arr()).expect("per-shard breakdown");
+    assert_eq!(per.len(), 2, "one breakdown entry per shard");
+    for (key, v) in s.as_obj().unwrap() {
+        if matches!(key.as_str(), "backend" | "shard" | "mean_compression") {
+            continue; // non-summed fields
+        }
+        let total = v.as_f64().unwrap_or_else(|| panic!("non-numeric stat {key}"));
+        let sum: f64 = per
+            .iter()
+            .map(|sh| sh.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0))
+            .sum();
+        assert!(
+            (total - sum).abs() < 1e-6,
+            "stat '{key}': aggregate {total} != per-shard sum {sum}"
+        );
+    }
+    assert_eq!(s.get("requests").and_then(|v| v.as_f64()), Some(3.0));
+    assert!(
+        s.get("prefix_hits").and_then(|v| v.as_f64()).unwrap() >= 1.0,
+        "identical repeated prompt must hit the shared prefix cache: {s:?}"
+    );
+    // the cross-check also holds against direct per-engine counters
+    let direct: u64 = srv
+        .engines()
+        .iter()
+        .map(|e| e.metrics.requests.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert_eq!(direct, 3);
 }
 
 /// Malformed JSON, an unknown cmd, a cancel for an unknown id, and an

@@ -473,3 +473,61 @@ fn sequence_leaving_and_rejoining_matches_solo() {
     assert_eq!(s1.cache_stats(), stats1, "s1 CacheStats must match the solo run");
     assert_eq!(s2.cache_stats(), stats2, "s2 CacheStats must match the solo run");
 }
+
+/// Prefix snapshots × the demoted tier (extends the rejoin round-trip
+/// test above): a snapshot captured from a tiered (`:floor=`) prefill
+/// carries the quantized side pool, and a fresh sequence resumed from it
+/// must re-demote bitwise on its group join — identical text and
+/// identical CacheStats (kept / demoted / side-tier bytes) to the donor
+/// run — across every tier code width.
+#[test]
+fn tiered_prefill_snapshot_resumes_bitwise_across_code_widths() {
+    let e = engine();
+    let mut rng = Rng::new(56);
+    let task = workload::ruler_instance("niah_single_1", 220, &mut rng);
+    let mut sp = SamplingParams::greedy(10);
+    sp.stop_at_newline = false;
+    for bits in [8usize, 4, 2] {
+        let spec = format!("kvzap_mlp:-1:floor=-8:bits={bits}");
+        let policy = policies::by_name(&spec, e.window()).unwrap();
+
+        // donor: fresh tiered prefill, snapshot taken before the first
+        // token sample (what the prefix cache stores on a miss)
+        let mut donor = e.sequence(60 + bits as u64, &task.prompt, sp.clone());
+        let (_, snap) = e.prefill_with_snapshot(&mut donor, policy.as_ref()).unwrap();
+        assert_eq!(snap.prompt_len(), task.prompt.len() + 1, "byte tokens + BOS");
+        assert!(snap.approx_bytes() > 0);
+        let mut g = e.decode_group();
+        while !donor.is_done() {
+            let mut set = vec![&mut donor];
+            e.decode_step(&mut g, &mut set).unwrap();
+        }
+        let donor_text = e.finish(&donor).text;
+        let donor_stats = donor.cache_stats();
+        assert!(
+            donor_stats.demoted > 0,
+            "bits={bits}: the floor band must demote during prefill for this test to bite"
+        );
+        assert!(donor_stats.side_bytes > 0, "bits={bits}: demoted rows occupy side bytes");
+
+        // resumed: a fresh sequence installs the snapshot (a cache hit)
+        // instead of running the prefill bucket, then decodes solo
+        let mut resumed = e.sequence(70 + bits as u64, &task.prompt, sp.clone());
+        e.prefill_from_snapshot(&mut resumed, &snap);
+        let mut g2 = e.decode_group();
+        while !resumed.is_done() {
+            let mut set = vec![&mut resumed];
+            e.decode_step(&mut g2, &mut set).unwrap();
+        }
+        assert_eq!(
+            e.finish(&resumed).text,
+            donor_text,
+            "bits={bits}: snapshot resume changed the token stream"
+        );
+        assert_eq!(
+            resumed.cache_stats(),
+            donor_stats,
+            "bits={bits}: snapshot resume changed the cache accounting"
+        );
+    }
+}

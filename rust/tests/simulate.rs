@@ -5,8 +5,8 @@
 
 use kvzap::policies::PolicySpec;
 use kvzap::simharness::{
-    run_scenario, simulate, thread_traces_match, ClientScript, Fault, ScenarioSpec,
-    SimOptions,
+    reuse_traces_match, run_scenario, shard_traces_match, simulate, thread_traces_match,
+    ClientScript, Fault, ScenarioSpec, SimOptions,
 };
 use kvzap::util::json::Json;
 use kvzap::util::rng::Rng;
@@ -68,6 +68,7 @@ fn injected_accounting_bug_is_caught_and_minimized() {
     let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
     let client = ClientScript {
         join_step: 0,
+        tenant: String::new(),
         prompt: task.prompt,
         policy: PolicySpec::Full,
         structured_policy: false,
@@ -122,6 +123,7 @@ fn injected_phantom_quant_attend_is_caught() {
     let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
     let client = ClientScript {
         join_step: 0,
+        tenant: String::new(),
         prompt: task.prompt,
         policy: PolicySpec::Full,
         structured_policy: false,
@@ -183,6 +185,131 @@ fn simulate_tiered_scenarios_run_clean() {
         );
         assert_eq!(report.steps_run, 32);
     }
+}
+
+/// Mutation self-check for the router layer's prefix accounting: a
+/// scheduler whose hit counter runs ahead of the snapshot installs it
+/// claims must trip the prefix-accounting check at exactly the injection
+/// step, and shrink to a replayable one-liner carrying the fault flag.
+#[test]
+fn injected_phantom_prefix_hit_is_caught() {
+    let mut rng = Rng::new(79);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let client = ClientScript {
+        join_step: 0,
+        tenant: "acme".into(),
+        prompt: task.prompt,
+        policy: PolicySpec::Full,
+        structured_policy: false,
+        max_new: 16,
+        greedy: true,
+        seed: 1,
+        stop_newline: false,
+        cancel_step: None,
+        drop_step: None,
+    };
+    let spec = ScenarioSpec { seed: 0, steps: 12, max_batch: 2, clients: vec![client] };
+    let opts = SimOptions {
+        check_solo: false,
+        prefix_reuse: true, // the pool path, with the reuse machinery live
+        fault: Some(Fault::PhantomPrefixHit { step: 3 }),
+        ..SimOptions::default()
+    };
+
+    // sanity: without the fault the scenario is clean
+    let clean = run_scenario(&spec, &SimOptions { fault: None, ..opts.clone() });
+    assert!(clean.violation.is_none(), "{}", clean.violation.unwrap());
+
+    let failure = simulate(&spec, &opts).expect_err("the phantom hit must be caught");
+    assert_eq!(
+        failure.violation.invariant, "prefix-accounting",
+        "unexpected invariant: {}",
+        failure.violation
+    );
+    assert_eq!(failure.violation.step, 3, "caught at the injection step");
+    assert!(
+        failure.replay.contains("--fault-prefix-step 3")
+            && failure.replay.contains("--prefix-reuse")
+            && failure.replay.contains("--no-solo"),
+        "the replay line must carry the run options: {}",
+        failure.replay
+    );
+
+    // the minimized scenario replays from its JSON and still fails
+    let parsed =
+        ScenarioSpec::from_json(&Json::parse(&failure.minimized_json).unwrap()).unwrap();
+    assert_eq!(parsed, failure.minimized);
+    let replayed = run_scenario(&parsed, &opts);
+    let v = replayed.violation.expect("minimized scenario must still fail");
+    assert_eq!(v.invariant, "prefix-accounting");
+}
+
+/// Mutation self-check for the router: a placement that silently moves
+/// without a recorded rebalance must trip the placement-stability check
+/// at exactly the injection step.
+#[test]
+fn injected_phantom_misroute_is_caught() {
+    let mut rng = Rng::new(80);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let client = ClientScript {
+        join_step: 0,
+        tenant: "acme".into(),
+        prompt: task.prompt,
+        policy: PolicySpec::Full,
+        structured_policy: false,
+        max_new: 16,
+        greedy: true,
+        seed: 1,
+        stop_newline: false,
+        cancel_step: None,
+        drop_step: None,
+    };
+    let spec = ScenarioSpec { seed: 0, steps: 12, max_batch: 2, clients: vec![client] };
+    let opts = SimOptions {
+        check_solo: false,
+        shards: 2, // a silent move is a no-op at one shard
+        fault: Some(Fault::PhantomMisroute { step: 4 }),
+        ..SimOptions::default()
+    };
+
+    // sanity: without the fault the sharded scenario is clean
+    let clean = run_scenario(&spec, &SimOptions { fault: None, ..opts.clone() });
+    assert!(clean.violation.is_none(), "{}", clean.violation.unwrap());
+
+    let failure = simulate(&spec, &opts).expect_err("the silent move must be caught");
+    assert_eq!(
+        failure.violation.invariant, "placement-stability",
+        "unexpected invariant: {}",
+        failure.violation
+    );
+    assert_eq!(failure.violation.step, 4, "caught at the injection step");
+    assert!(
+        failure.replay.contains("--shards 2")
+            && failure.replay.contains("--fault-route-step 4"),
+        "the replay line must carry the shard count and fault flag: {}",
+        failure.replay
+    );
+}
+
+/// Metamorphic shard invariance (the headline router claim): a fixed
+/// seeded shared-prefix episode produces bit-identical per-request
+/// outputs at 1 shard and at 4 shards.
+#[test]
+fn shard_count_is_output_invariant_on_shared_prefix_episodes() {
+    for seed in 0..2u64 {
+        let spec = ScenarioSpec::generate_shared_prefix(seed, 96, 4, 3);
+        shard_traces_match(&spec, 1, 4).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+/// Metamorphic prefix-reuse invariance: with the cross-request prefix
+/// cache on, outputs are bit-identical to the reuse-off run — and the
+/// helper itself rejects a run that never hit the cache, so this also
+/// pins that shared-prefix episodes really exercise reuse.
+#[test]
+fn prefix_reuse_is_output_invariant_and_actually_hits() {
+    let spec = ScenarioSpec::generate_shared_prefix(1, 96, 4, 3);
+    reuse_traces_match(&spec, 2).unwrap();
 }
 
 /// The clean-run summary counts what the trace shows.
