@@ -13,9 +13,17 @@
 //!     cargo bench --bench bench_serve            # full sweep
 //!     cargo bench --bench bench_serve -- --quick # CI smoke subset
 //!
+//! The prefix cache runs *bounded*: each cell sizes a bytes budget so
+//! every family's snapshot fits at once (an a-priori bound from the
+//! model dims — pass `--prefix-budget BYTES` to override it, 0 for
+//! unbounded), and the eviction/reject counters land in the table and
+//! in `BENCH_serve.json`.
+//!
 //! The `--quick` lane is also a functional gate: the shared-prefix burst
 //! must record a nonzero prefix-hit count (a zero-hit run means the reuse
-//! path silently stopped engaging).
+//! path silently stopped engaging), and a run whose budget churned the
+//! families out of the cache (evictions with no surviving hits) fails
+//! loudly instead of shipping a silently reuse-free number.
 
 use std::sync::mpsc::{self, Receiver, TryRecvError};
 use std::sync::Arc;
@@ -40,24 +48,49 @@ struct Row {
     p95_ms: f64,
     prefix_hits: u64,
     prefix_misses: u64,
+    prefix_evictions: u64,
+    prefix_rejects: u64,
+    prefix_bytes: usize,
 }
 
 /// Run one saturation cell: a burst of `offered` shared-prefix requests
 /// against a fresh pool of `shards` workers, stepped to completion.
-fn run_cell(shards: usize, offered: usize, t_max: usize) -> anyhow::Result<Row> {
+/// `prefix_budget` of None sizes a bytes budget every family fits inside
+/// (Some(0) = unbounded, Some(n) = exactly n).
+fn run_cell(
+    shards: usize,
+    offered: usize,
+    t_max: usize,
+    prefix_budget: Option<usize>,
+) -> anyhow::Result<Row> {
     let engines: Vec<Arc<Engine>> = (0..shards)
         .map(|_| Arc::new(Engine::new(Arc::new(Runtime::reference_with_t_max(t_max)))))
         .collect();
+    let n_families = (offered / 2).max(1);
+    // a-priori per-snapshot bound: the full fp32 KV host copy plus slack
+    // for the stored logits row — so the default budget admits every
+    // family at once and evictions signal a real problem, not sizing
+    let m = &engines[0].rt.manifest.model;
+    let snap_bound = 2 * m.n_layers * m.n_kv_heads * m.t_max * m.d_head * 4 + (64 << 10);
+    let budget = match prefix_budget {
+        None => Some(n_families * snap_bound),
+        Some(0) => None,
+        Some(b) => Some(b),
+    };
     let mut pool = ShardPool::new(
         engines,
         BatcherConfig { max_batch: 4, max_wait_us: 0 },
-        RouterConfig { shards, prefix_reuse: true, ..RouterConfig::default() },
+        RouterConfig {
+            shards,
+            prefix_reuse: true,
+            prefix_budget: budget,
+            ..RouterConfig::default()
+        },
     );
 
     // duplicated prompt families: every family's members share one byte-
     // identical prompt, so the second member of a family is a prefix hit
     let mut rng = Rng::new(17);
-    let n_families = (offered / 2).max(1);
     let families = workload::prefix_families(&mut rng, n_families, 1, 200);
     let policy = PolicySpec::parse("kvzap_mlp:-4").unwrap();
     let mut sp = SamplingParams::greedy(8);
@@ -118,6 +151,13 @@ fn run_cell(shards: usize, offered: usize, t_max: usize) -> anyhow::Result<Row> 
         hits += m.prefix_hits.load(std::sync::atomic::Ordering::Relaxed);
         misses += m.prefix_misses.load(std::sync::atomic::Ordering::Relaxed);
     }
+    let (evictions, rejects, bytes) = pool
+        .prefix_cache()
+        .map(|pc| {
+            let st = pc.stats();
+            (st.evictions, st.insert_rejects, st.bytes)
+        })
+        .unwrap_or((0, 0, 0));
     Ok(Row {
         shards,
         offered,
@@ -128,6 +168,9 @@ fn run_cell(shards: usize, offered: usize, t_max: usize) -> anyhow::Result<Row> 
         p95_ms,
         prefix_hits: hits,
         prefix_misses: misses,
+        prefix_evictions: evictions,
+        prefix_rejects: rejects,
+        prefix_bytes: bytes,
     })
 }
 
@@ -137,17 +180,20 @@ fn main() -> anyhow::Result<()> {
     let shard_counts: Vec<usize> = if quick { vec![1, 2] } else { vec![1, 2, 4] };
     let loads: Vec<usize> = if quick { vec![8] } else { vec![4, 8, 16] };
     let t_max = args.usize("t-max", 512);
+    // 0 = unbounded; absent = the sized per-cell default (see run_cell)
+    let prefix_budget = args.usize_opt("prefix-budget");
 
     println!(
-        "{:>6} {:>8} {:>8} {:>9} {:>10} {:>10} {:>10} {:>6} {:>7}",
-        "shards", "offered", "tokens", "wall s", "tok/s", "mean ms", "p95 ms", "hits", "misses"
+        "{:>6} {:>8} {:>8} {:>9} {:>10} {:>10} {:>10} {:>6} {:>7} {:>6} {:>7}",
+        "shards", "offered", "tokens", "wall s", "tok/s", "mean ms", "p95 ms", "hits",
+        "misses", "evict", "reject"
     );
     let mut rows: Vec<Row> = vec![];
     for &shards in &shard_counts {
         for &offered in &loads {
-            let r = run_cell(shards, offered, t_max)?;
+            let r = run_cell(shards, offered, t_max, prefix_budget)?;
             println!(
-                "{:>6} {:>8} {:>8} {:>9.3} {:>10.1} {:>10.1} {:>10.1} {:>6} {:>7}",
+                "{:>6} {:>8} {:>8} {:>9.3} {:>10.1} {:>10.1} {:>10.1} {:>6} {:>7} {:>6} {:>7}",
                 r.shards,
                 r.offered,
                 r.tokens,
@@ -156,7 +202,9 @@ fn main() -> anyhow::Result<()> {
                 r.mean_ms,
                 r.p95_ms,
                 r.prefix_hits,
-                r.prefix_misses
+                r.prefix_misses,
+                r.prefix_evictions,
+                r.prefix_rejects
             );
             rows.push(r);
         }
@@ -168,7 +216,8 @@ fn main() -> anyhow::Result<()> {
             format!(
                 "{{\"shards\": {}, \"offered\": {}, \"tokens\": {}, \"wall_s\": {:.4}, \
                  \"tok_s\": {:.2}, \"mean_ms\": {:.2}, \"p95_ms\": {:.2}, \
-                 \"prefix_hits\": {}, \"prefix_misses\": {}}}",
+                 \"prefix_hits\": {}, \"prefix_misses\": {}, \"prefix_evictions\": {}, \
+                 \"prefix_rejects\": {}, \"prefix_bytes\": {}}}",
                 r.shards,
                 r.offered,
                 r.tokens,
@@ -177,16 +226,36 @@ fn main() -> anyhow::Result<()> {
                 r.mean_ms,
                 r.p95_ms,
                 r.prefix_hits,
-                r.prefix_misses
+                r.prefix_misses,
+                r.prefix_evictions,
+                r.prefix_rejects,
+                r.prefix_bytes
             )
         })
         .collect();
     write_bench_json("serve", "reference", quick, &items)?;
 
-    // functional gate: the shared-prefix burst must actually reuse
-    anyhow::ensure!(
-        rows.iter().all(|r| r.prefix_hits > 0),
-        "a shared-prefix burst recorded zero prefix hits — the reuse path stopped engaging"
-    );
+    // functional gates: the shared-prefix burst must actually reuse, and a
+    // budget that churned the families out must fail loudly rather than
+    // ship a silently reuse-free number
+    for r in &rows {
+        anyhow::ensure!(
+            r.prefix_hits > 0 || r.prefix_evictions + r.prefix_rejects > 0,
+            "cell (shards {}, offered {}): a shared-prefix burst recorded zero prefix \
+             hits with no budget pressure — the reuse path stopped engaging",
+            r.shards,
+            r.offered
+        );
+        anyhow::ensure!(
+            r.prefix_hits > 0,
+            "cell (shards {}, offered {}): the prefix budget churned the shared-prefix \
+             families out of the cache ({} evictions, {} rejects, 0 hits) — raise \
+             --prefix-budget so the families fit",
+            r.shards,
+            r.offered,
+            r.prefix_evictions,
+            r.prefix_rejects
+        );
+    }
     Ok(())
 }

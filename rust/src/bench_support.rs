@@ -46,6 +46,13 @@ impl BenchArgs {
         self.kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// The parsed value of `--key`, or None when the flag is absent or
+    /// unparsable (for flags whose absence means "pick a default" rather
+    /// than a fixed number).
+    pub fn usize_opt(&self, key: &str) -> Option<usize> {
+        self.kv.get(key).and_then(|v| v.parse().ok())
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         self.kv.get(key).map(|v| v == "true").unwrap_or(false)
     }
@@ -137,8 +144,12 @@ pub struct EvalRow {
     pub kv_bytes: f64,
     /// Mean KV entries parked in the quantized side tier at steady state.
     pub demoted: f64,
-    /// Mean side-tier entries rehydrated before answer scoring.
+    /// Mean side-tier entries rehydrated before answer scoring (0 under
+    /// the default quant-attend re-score path, which never rehydrates).
     pub rehydrated: f64,
+    /// Mean demoted rows attended from their quantized form per
+    /// teacher-forcing step during answer scoring.
+    pub quant_attended: f64,
     pub prefill_us: f64,
     pub decode_us: f64,
     pub policy_us: f64,
@@ -164,7 +175,7 @@ pub fn eval_policy(
         let mut ok = 0usize;
         let mut comp = 0.0;
         let mut nll_sum = 0.0;
-        let (mut bytes, mut dem, mut reh) = (0.0, 0.0, 0.0);
+        let (mut bytes, mut dem, mut reh, mut qat) = (0.0, 0.0, 0.0, 0.0);
         let (mut pf, mut dc, mut pol, mut orc) = (0.0, 0.0, 0.0, 0.0);
         for i in 0..samples {
             let mut r = rng.fork(i as u64);
@@ -188,6 +199,7 @@ pub fn eval_policy(
             bytes += score.kv_bytes as f64;
             dem += score.demoted as f64;
             reh += score.rehydrated as f64;
+            qat += score.quant_attended as f64;
             ok += correct as usize;
             comp += res.compression;
             pf += res.prefill_us as f64;
@@ -206,6 +218,7 @@ pub fn eval_policy(
             kv_bytes: bytes / n,
             demoted: dem / n,
             rehydrated: reh / n,
+            quant_attended: qat / n,
             prefill_us: pf / n,
             decode_us: dc / n,
             policy_us: pol / n,

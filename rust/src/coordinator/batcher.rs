@@ -261,13 +261,18 @@ impl SchedCore {
                         // bitwise identical to a fresh prefill.
                         engine.metrics.note_prefix_hit();
                         self.prefix_flags.push((p.id, true));
-                        Ok(engine.prefill_from_snapshot(&mut seq, &snap))
+                        engine.prefill_from_snapshot(&mut seq, &snap)
                     } else {
                         match engine.prefill_with_snapshot(&mut seq, policy.as_ref()) {
                             Ok((events, snap)) => {
                                 engine.metrics.note_prefix_miss();
                                 self.prefix_flags.push((p.id, false));
-                                pc.insert(&p.req.prompt, &pkey, snap);
+                                let out = pc.insert(&p.req.prompt, &pkey, snap);
+                                engine.metrics.note_prefix_insert(
+                                    out.evicted as u64,
+                                    out.raced,
+                                    out.rejected,
+                                );
                                 Ok(events)
                             }
                             Err(e) => Err(e),

@@ -52,12 +52,12 @@
 #![warn(missing_docs)]
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
 use super::sampler::{Sampler, SamplingParams};
-use crate::kvcache::{PagedKvCache, TierConfig};
+use crate::kvcache::{KvPools, PagedKvCache, TierConfig};
 use crate::metrics::EngineMetrics;
 use crate::policies::{PrefillView, PrunePolicy, ScoreBuffer, Stat};
 use crate::runtime::kernels::{quant_roundtrip, QuantBits};
@@ -81,6 +81,11 @@ pub struct Engine {
     pub tok: ByteTokenizer,
     /// Rolling latency/throughput/compression histograms.
     pub metrics: EngineMetrics,
+    /// Engine-level KV admission pools (None = uncharged, the default):
+    /// every cache this engine creates or installs adopts these, so
+    /// resident blocks and demoted side bytes across all live sequences
+    /// draw from one shared budget. See [`Engine::set_kv_pools`].
+    kv_pools: Mutex<Option<KvPools>>,
 }
 
 /// -log softmax(logits)[target] in nats.
@@ -344,6 +349,32 @@ impl PrefillSnapshot {
     pub fn approx_bytes(&self) -> usize {
         4 * (self.k.len() + self.v.len() + self.logits0.len())
     }
+
+    /// Test-only stand-in with a chosen [`PrefillSnapshot::approx_bytes`]
+    /// (`bytes` rounded down to a multiple of 4). Lets cache-eviction
+    /// unit tests size entries exactly without running prefills.
+    #[cfg(test)]
+    pub(crate) fn test_stub(bytes: usize) -> PrefillSnapshot {
+        PrefillSnapshot {
+            policy_name: String::new(),
+            prompt_len: 0,
+            k: vec![0.0; bytes / 4],
+            v: vec![],
+            cache: PagedKvCache::new_tiered(
+                1,
+                1,
+                1,
+                TierConfig { d_head: 1, bits: QuantBits::Int8, group: 1 },
+            ),
+            sbuf: ScoreBuffer::new(1, 1, 1),
+            tau: None,
+            dstat: Stat::ScoreMlp,
+            gate: None,
+            floor: None,
+            demoted_scores: vec![],
+            logits0: vec![],
+        }
+    }
 }
 
 /// Round-trip one position's K and V rows of a `[L, H, t_max, D]` host
@@ -452,7 +483,29 @@ impl Engine {
     /// An engine over `rt` with fresh metrics (cheap; the weights and
     /// backend live inside the runtime).
     pub fn new(rt: Arc<Runtime>) -> Engine {
-        Engine { rt, tok: ByteTokenizer::default(), metrics: EngineMetrics::default() }
+        Engine {
+            rt,
+            tok: ByteTokenizer::default(),
+            metrics: EngineMetrics::default(),
+            kv_pools: Mutex::new(None),
+        }
+    }
+
+    /// Install (or clear) the engine-level KV admission pools. Affects
+    /// caches created *after* the call — [`Engine::sequence`], the
+    /// prefill-time tier rebuild, and snapshot installs all adopt the
+    /// configured pools; already-live sequences keep whatever they had.
+    /// With [`KvPools::Unified`] the whole engine's KV footprint (resident
+    /// blocks at f32 width + demoted quantized bytes) is bounded by one
+    /// byte budget, and demotions refuse gracefully under pressure.
+    pub fn set_kv_pools(&self, pools: Option<KvPools>) {
+        *self.kv_pools.lock().unwrap() = pools;
+    }
+
+    /// The currently installed engine-level pools (see
+    /// [`Engine::set_kv_pools`]).
+    pub fn kv_pools(&self) -> Option<KvPools> {
+        self.kv_pools.lock().unwrap().clone()
     }
 
     /// A fresh (empty) decode-group session for [`Engine::decode_step`].
@@ -490,6 +543,11 @@ impl Engine {
         let (layers, heads, t_max) =
             (man.model.n_layers, man.model.n_kv_heads, man.model.t_max);
         let seed = sp.seed;
+        let mut cache = PagedKvCache::new_tiered(layers, heads, t_max, self.tier_config());
+        if let Some(pools) = self.kv_pools() {
+            let ok = cache.adopt_pools(&pools);
+            debug_assert!(ok, "adopting pools into an empty cache cannot fail");
+        }
         Sequence {
             id,
             uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
@@ -497,7 +555,7 @@ impl Engine {
             generated: vec![],
             pos: 0,
             cur: self.tok.pad as i32,
-            cache: PagedKvCache::new_tiered(layers, heads, t_max, self.tier_config()),
+            cache,
             sbuf: ScoreBuffer::new(self.window(), layers, heads),
             tau: None,
             dstat: Stat::ScoreMlp,
@@ -568,16 +626,30 @@ impl Engine {
     /// backend-side state is reproduced by the normal decode-step join
     /// path (full-slot scatter + mask + re-demotion of the tracked band),
     /// exactly as a leave/rejoin already does.
+    ///
+    /// When the engine carries [`Engine::set_kv_pools`] admission pools,
+    /// the installed cache's holdings (resident blocks + demoted bytes)
+    /// are charged against them up front; an exhausted pool refuses the
+    /// install with an error instead of admitting unbounded bytes.
     pub fn prefill_from_snapshot(
         &self,
         seq: &mut Sequence,
         snap: &PrefillSnapshot,
-    ) -> Vec<StepEvent> {
+    ) -> Result<Vec<StepEvent>> {
         assert!(!seq.prefilled, "sequence {} already prefilled", seq.id);
         debug_assert_eq!(seq.toks.len(), snap.prompt_len, "snapshot/prompt length mismatch");
+        let mut cache = snap.cache.clone();
+        if let Some(pools) = self.kv_pools() {
+            if !cache.adopt_pools(&pools) {
+                return Err(anyhow!(
+                    "kv pool exhausted: snapshot install of {} bytes refused admission",
+                    cache.charged_bytes()
+                ));
+            }
+        }
         seq.k = snap.k.clone();
         seq.v = snap.v.clone();
-        seq.cache = snap.cache.clone();
+        seq.cache = cache;
         seq.sbuf = snap.sbuf.clone();
         seq.tau = snap.tau;
         seq.dstat = snap.dstat;
@@ -587,7 +659,7 @@ impl Engine {
         seq.policy_name = snap.policy_name.clone();
         seq.prefilled = true;
         seq.pos = snap.prompt_len;
-        self.first_token(seq, &snap.logits0)
+        Ok(self.first_token(seq, &snap.logits0))
     }
 
     /// The shared prefill body: everything up to (but not including) the
@@ -645,17 +717,24 @@ impl Engine {
         // lands in it (the default sequence cache is int8)
         let bits = policy.tier_bits();
         if seq.cache.tier().bits != bits {
-            seq.cache = PagedKvCache::new_tiered(
+            let mut cache = PagedKvCache::new_tiered(
                 man.model.n_layers,
                 man.model.n_kv_heads,
                 man.model.t_max,
                 self.tier_config_bits(bits),
             );
+            if let Some(pools) = self.kv_pools() {
+                let ok = cache.adopt_pools(&pools);
+                debug_assert!(ok, "adopting pools into an empty cache cannot fail");
+            }
+            seq.cache = cache;
         }
 
         // prune after prefill + seed the decode score window
         let t0 = crate::util::now_micros();
-        seq.cache.fill(n);
+        if !seq.cache.fill(n) {
+            return Err(anyhow!("kv pool exhausted: prefill of {n} positions refused admission"));
+        }
         policy.prefill_prune(&stats.view(0, oracle.as_ref()), n, &mut seq.cache);
         seq.tau = policy.decode_threshold();
         seq.dstat = policy.decode_stat();
@@ -856,13 +935,15 @@ impl Engine {
             // payloads bitwise (device-local, no transfer bytes).
             if seq.cache.stats().demoted > 0 {
                 let tier = seq.cache.tier();
+                let mut band = vec![];
                 for l in 0..layers {
                     for h in 0..heads {
                         for p in seq.cache.demoted_positions(l, h) {
-                            self.rt.kv_demote(handle, s, l, h, p, tier.bits, tier.group)?;
+                            band.push((l, h, p));
                         }
                     }
                 }
+                self.rt.kv_demote_band(handle, s, &band, tier.bits, tier.group)?;
             }
         }
 
@@ -924,8 +1005,15 @@ impl Engine {
                 }
             }
             // the token we just fed occupies pos (the backend mirrors this
-            // fill in the resident mask, so it is not a dirty change)
-            seq.cache.fill((seq.pos + 1).min(t_max));
+            // fill in the resident mask, so it is not a dirty change). An
+            // engine-level pool can refuse the new block under pressure —
+            // the sequence then finishes as CacheFull instead of admitting
+            // unbudgeted bytes.
+            if !seq.cache.fill((seq.pos + 1).min(t_max)) {
+                seq.done = Some(DoneReason::CacheFull);
+                events.push(StepEvent::Done { id: seq.id, reason: DoneReason::CacheFull });
+                continue;
+            }
             // credit the side rows the backend attended for this slot
             let qa = qstats.get(slot).copied().unwrap_or_default();
             if qa.rows > 0 {
@@ -1174,15 +1262,32 @@ impl Engine {
     /// quantized side tier at prefill. This scorer prices the cache at
     /// that *steady state* (`kv_bytes`, `compression` — what the pairs
     /// cost while the request idles between prefill and answer), then
-    /// rehydrates every demoted position before teacher-forcing the
-    /// answer: the band returns with int8 round-trip error instead of
-    /// being gone, which is the tier's faithfulness story on the
-    /// accuracy-vs-bytes frontier.
+    /// teacher-forces the answer with the demoted band **scored from
+    /// quantized form** ([`RescoreMode::QuantAttend`], the default): the
+    /// band is parked on the backend via the fused demote-band op and the
+    /// quantized decode path attends it in place, so no rehydration — and
+    /// no resident re-charge — happens just to measure quality. The band
+    /// still contributes with int8 round-trip error instead of being
+    /// gone, which is the tier's faithfulness story on the
+    /// accuracy-vs-bytes frontier; [`RescoreMode::Rehydrate`] keeps the
+    /// legacy rehydrate-everything path for metamorphic comparison.
     pub fn score_answer_full(
         &self,
         prompt: &str,
         answer: &str,
         policy: &dyn PrunePolicy,
+    ) -> Result<AnswerScore> {
+        self.score_answer_mode(prompt, answer, policy, RescoreMode::QuantAttend)
+    }
+
+    /// [`Engine::score_answer_full`] with an explicit demoted-band
+    /// treatment (see [`RescoreMode`]).
+    pub fn score_answer_mode(
+        &self,
+        prompt: &str,
+        answer: &str,
+        policy: &dyn PrunePolicy,
+        mode: RescoreMode,
     ) -> Result<AnswerScore> {
         let man = &self.rt.manifest;
         let (layers, heads, t_max) =
@@ -1233,12 +1338,14 @@ impl Engine {
         let steady = cache.stats();
         let compression = steady.compression();
 
-        // answer-time rehydration: round-trip every demoted row in the
-        // fetched prefill KV through the tier's quantizer (the side tier
-        // stores int8; the answer must attend to what it stored, not the
-        // original f32), then rehydrate so the band is attendable
+        // Collect the demoted band and round-trip its host rows through
+        // the tier's quantizer either way (the side tier stores int8; the
+        // answer must attend to what it stored, not the original f32 —
+        // and quantization is stable under re-encoding, so the backend's
+        // demote-band re-encode reproduces the same payload bitwise).
         let mut kc = fetch("kcache")?;
         let mut vc = fetch("vcache")?;
+        let mut band = vec![];
         let mut rehydrated = 0usize;
         if steady.demoted > 0 {
             let tier = cache.tier();
@@ -1249,9 +1356,16 @@ impl Engine {
                         roundtrip_snapshot_row(
                             &mut kc.data, &mut vc.data, tier, heads, t_max, d, l, h, p,
                         );
-                        if cache.rehydrate(l, h, p) {
-                            rehydrated += 1;
-                        }
+                        band.push((l, h, p));
+                    }
+                }
+            }
+            // legacy mode only: bring the band back to residency before
+            // scoring (re-charges resident blocks)
+            if matches!(mode, RescoreMode::Rehydrate) {
+                for &(l, h, p) in &band {
+                    if cache.rehydrate(l, h, p) {
+                        rehydrated += 1;
                     }
                 }
             }
@@ -1267,11 +1381,20 @@ impl Engine {
         let handle = group.handle.as_ref().unwrap();
         self.rt.kv_scatter(handle, 0, &kc.data, &vc.data)?;
         self.rt.kv_write_mask(handle, 0, &cache.mask_f32())?;
+        // quant-attend mode: park the demoted band on the backend (fused
+        // band demote) so the quantized decode path scores it in place —
+        // the band stays masked off and demoted, no resident re-charge
+        let quant = matches!(mode, RescoreMode::QuantAttend) && !band.is_empty();
+        if quant {
+            let tier = cache.tier();
+            self.rt.kv_demote_band(handle, 0, &band, tier.bits, tier.group)?;
+        }
 
         // NLL of answer byte i under logits from step i-1 (teacher forcing).
         let mut nll = 0.0f64;
         let mut count = 0usize;
         let mut logits = logits0;
+        let mut quant_attended = 0usize;
         for (i, &a) in ans.iter().enumerate() {
             nll += nll_of(logits.row(&[0]), a);
             count += 1;
@@ -1279,8 +1402,20 @@ impl Engine {
             if pos >= t_max || i == ans.len() - 1 {
                 break;
             }
-            let outs =
-                self.rt.exec_decode_resident(&dec, &[a], &[pos as i32], handle)?;
+            let outs = if quant {
+                let (outs, qstats) =
+                    self.rt.exec_decode_resident_quant(&dec, &[a], &[pos as i32], handle)?;
+                let rows: usize = qstats.iter().map(|s| s.rows).sum();
+                if rows > 0 {
+                    let bytes: u64 = qstats.iter().map(|s| s.bytes as u64).sum();
+                    quant_attended += rows;
+                    cache.note_quant_attend(rows);
+                    self.metrics.note_quant_attend(rows as u64, bytes);
+                }
+                outs
+            } else {
+                self.rt.exec_decode_resident(&dec, &[a], &[pos as i32], handle)?
+            };
             let li = dec.meta.output_index("logits")?;
             let ri = dec.meta.resident_output_index("logits")?;
             logits = self.rt.fetch_f32(&outs[ri], &dec.meta.outputs[li].shape)?;
@@ -1291,8 +1426,25 @@ impl Engine {
             kv_bytes: steady.kv_bytes(),
             demoted: steady.demoted,
             rehydrated,
+            quant_attended,
         })
     }
+}
+
+/// How [`Engine::score_answer_mode`] treats a prefill's demoted band
+/// while teacher-forcing the answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RescoreMode {
+    /// Score the band from quantized form in place: the fused demote-band
+    /// op parks it on the backend and the quantized decode path attends
+    /// it with zero rehydrations and zero resident re-charge. The
+    /// default ([`Engine::score_answer_full`]).
+    QuantAttend,
+    /// Legacy: round-trip + rehydrate every demoted row back to
+    /// residency, then score over the fully-resident cache. Kept for
+    /// metamorphic comparison — both modes must produce bitwise-identical
+    /// NLL and eviction decisions.
+    Rehydrate,
 }
 
 /// Result of [`Engine::score_answer_full`]: the teacher-forced quality
@@ -1310,8 +1462,12 @@ pub struct AnswerScore {
     pub kv_bytes: usize,
     /// Prompt positions the policy demoted into the side tier.
     pub demoted: usize,
-    /// Demoted positions rehydrated before the answer was scored.
+    /// Demoted positions rehydrated before the answer was scored (0 in
+    /// the default [`RescoreMode::QuantAttend`] mode).
     pub rehydrated: usize,
+    /// Demoted rows attended in quantized form while scoring, summed over
+    /// teacher-forcing steps (0 in [`RescoreMode::Rehydrate`] mode).
+    pub quant_attended: usize,
 }
 
 #[cfg(test)]

@@ -28,7 +28,10 @@ pub mod sampler;
 
 pub use batcher::{Batcher, BatcherConfig, Request, Response, SchedCore, SeqEvent};
 pub use engine::{
-    DecodeGroup, DoneReason, Engine, GenResult, PrefillSnapshot, Sequence, StepEvent,
+    DecodeGroup, DoneReason, Engine, GenResult, PrefillSnapshot, RescoreMode, Sequence, StepEvent,
 };
-pub use router::{PrefixCache, Rebalance, Router, RouterConfig, ShardPool};
+pub use router::{
+    PrefixCache, PrefixCacheStats, PrefixInsertOutcome, Rebalance, Router, RouterConfig,
+    ShardPool,
+};
 pub use sampler::{Sampler, SamplingParams};

@@ -32,6 +32,7 @@
 //! used by the simulation harness and the saturation bench.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::batcher::{BatcherConfig, Request, Response, SchedCore, SeqEvent};
@@ -48,46 +49,203 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Shared store of pruned prefill snapshots keyed by (prompt, policy).
+/// Point-in-time [`PrefixCache`] telemetry: lifetime counters plus the
+/// current footprint. Counters are monotone; `bytes`/`entries` are
+/// gauges read under the map lock.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Lookups that found a snapshot.
+    pub hits: u64,
+    /// Lookups that found nothing.
+    pub misses: u64,
+    /// Snapshots evicted to make room under the bytes budget.
+    pub evictions: u64,
+    /// Inserts that lost a key race (first writer wins; the newer
+    /// snapshot was discarded).
+    pub insert_races: u64,
+    /// Inserts refused outright: the snapshot could not fit the budget
+    /// even after evicting every cold entry.
+    pub insert_rejects: u64,
+    /// Host bytes currently held across all snapshots.
+    pub bytes: usize,
+    /// Snapshots currently held.
+    pub entries: usize,
+}
+
+/// What one [`PrefixCache::insert`] did — the caller (the batcher)
+/// forwards this to its engine's metrics so eviction churn is
+/// attributed to the shard that caused it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixInsertOutcome {
+    /// The snapshot entered the cache.
+    pub installed: bool,
+    /// The key was already present: this insert lost the race and its
+    /// snapshot was discarded (first writer wins).
+    pub raced: bool,
+    /// Entries evicted to make room.
+    pub evicted: usize,
+    /// The snapshot did not fit the budget even after evicting every
+    /// unpinned entry, and was not cached.
+    pub rejected: bool,
+}
+
+struct PrefixEntry {
+    snap: Arc<PrefillSnapshot>,
+    bytes: usize,
+    /// Monotone recency tick; refreshed on every hit (touch-on-hit LRU).
+    last_used: u64,
+}
+
+struct PrefixMap {
+    map: HashMap<(String, String), PrefixEntry>,
+    /// Running byte total — kept exact on every insert/evict so readers
+    /// never walk the map under the lock (the old O(n) `approx_bytes`).
+    bytes: usize,
+    tick: u64,
+}
+
+/// Shared store of pruned prefill snapshots keyed by (prompt, policy),
+/// bounded by an optional bytes budget with LRU eviction.
 ///
 /// Thread-safe (the threaded server shares one across shard batchers);
 /// first writer wins so concurrent misses for the same key converge on a
 /// single snapshot. Snapshots are deterministic in (prompt, policy) —
 /// the reference backend's weights are seed-derived — so which shard
 /// deposited one never matters.
+///
+/// Under a finite budget, `insert` evicts least-recently-used entries
+/// until the newcomer fits. An entry whose snapshot is still referenced
+/// outside the cache (`Arc` strong count > 1 — an install in flight on
+/// some shard) is *pinned* and never evicted; a hit handed out stays
+/// valid even if its entry is later evicted, because eviction only drops
+/// the cache's own reference. If the newcomer cannot fit even after all
+/// unpinned entries are gone, it is refused (counted as an
+/// `insert_reject`) rather than blowing the budget.
 #[derive(Default)]
 pub struct PrefixCache {
-    map: Mutex<HashMap<(String, String), Arc<PrefillSnapshot>>>,
+    inner: Mutex<PrefixMap>,
+    budget: Option<usize>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    insert_races: AtomicU64,
+    insert_rejects: AtomicU64,
+}
+
+impl Default for PrefixMap {
+    fn default() -> Self {
+        PrefixMap { map: HashMap::new(), bytes: 0, tick: 0 }
+    }
 }
 
 impl PrefixCache {
-    /// An empty cache.
+    /// An empty cache with no bytes budget (never evicts).
     pub fn new() -> PrefixCache {
         PrefixCache::default()
     }
 
-    /// The snapshot for (prompt, policy), if one was deposited.
-    pub fn lookup(&self, prompt: &str, policy: &str) -> Option<Arc<PrefillSnapshot>> {
-        self.map.lock().unwrap().get(&(prompt.to_string(), policy.to_string())).cloned()
+    /// An empty cache holding at most `budget` snapshot bytes
+    /// (`None` → unbounded, same as [`PrefixCache::new`]).
+    pub fn with_budget(budget: Option<usize>) -> PrefixCache {
+        PrefixCache { budget, ..PrefixCache::default() }
     }
 
-    /// Deposit a snapshot for (prompt, policy). First writer wins.
-    pub fn insert(&self, prompt: &str, policy: &str, snap: PrefillSnapshot) {
-        self.map
+    /// The configured bytes budget, if any.
+    pub fn budget(&self) -> Option<usize> {
+        self.budget
+    }
+
+    /// The snapshot for (prompt, policy), if one was deposited. Counts a
+    /// hit or miss and refreshes the entry's LRU recency.
+    pub fn lookup(&self, prompt: &str, policy: &str) -> Option<Arc<PrefillSnapshot>> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.map.get_mut(&(prompt.to_string(), policy.to_string())) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.snap.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Deposit a snapshot for (prompt, policy). First writer wins: a key
+    /// collision discards `snap` and counts an `insert_race`. Under a
+    /// finite budget, evicts cold unpinned entries (oldest `last_used`
+    /// first) until the newcomer fits, or refuses it if it cannot fit.
+    pub fn insert(
+        &self,
+        prompt: &str,
+        policy: &str,
+        snap: PrefillSnapshot,
+    ) -> PrefixInsertOutcome {
+        let key = (prompt.to_string(), policy.to_string());
+        let bytes = snap.approx_bytes();
+        let mut g = self.inner.lock().unwrap();
+        if g.map.contains_key(&key) {
+            self.insert_races.fetch_add(1, Ordering::Relaxed);
+            return PrefixInsertOutcome { raced: true, ..Default::default() };
+        }
+        let mut evicted = 0usize;
+        if let Some(budget) = self.budget {
+            if bytes > budget {
+                // can never fit — refuse up front rather than flushing
+                // the whole cache first
+                self.insert_rejects.fetch_add(1, Ordering::Relaxed);
+                return PrefixInsertOutcome { rejected: true, ..Default::default() };
+            }
+            while g.bytes + bytes > budget {
+                // coldest unpinned entry; a strong count above 1 means a
+                // shard is mid-install from this snapshot — skip it
+                let victim = g
+                    .map
+                    .iter()
+                    .filter(|(_, e)| Arc::strong_count(&e.snap) == 1)
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone());
+                let Some(vk) = victim else { break };
+                let e = g.map.remove(&vk).unwrap();
+                g.bytes -= e.bytes;
+                evicted += 1;
+            }
+            if g.bytes + bytes > budget {
+                // roll the evictions back into the counter anyway — they
+                // happened — but refuse the newcomer
+                self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+                self.insert_rejects.fetch_add(1, Ordering::Relaxed);
+                return PrefixInsertOutcome {
+                    evicted,
+                    rejected: true,
+                    ..Default::default()
+                };
+            }
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        g.map.insert(key, PrefixEntry { snap: Arc::new(snap), bytes, last_used: tick });
+        g.bytes += bytes;
+        self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        PrefixInsertOutcome { installed: true, evicted, ..Default::default() }
+    }
+
+    /// Whether a snapshot exists for (prompt, policy). A peek: counts
+    /// nothing and does not touch recency.
+    pub fn contains(&self, prompt: &str, policy: &str) -> bool {
+        self.inner
             .lock()
             .unwrap()
-            .entry((prompt.to_string(), policy.to_string()))
-            .or_insert_with(|| Arc::new(snap));
-    }
-
-    /// Whether a snapshot exists for (prompt, policy).
-    pub fn contains(&self, prompt: &str, policy: &str) -> bool {
-        self.map.lock().unwrap().contains_key(&(prompt.to_string(), policy.to_string()))
+            .map
+            .contains_key(&(prompt.to_string(), policy.to_string()))
     }
 
     /// Number of cached snapshots.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     /// True when no snapshot has been deposited yet.
@@ -95,9 +253,24 @@ impl PrefixCache {
         self.len() == 0
     }
 
-    /// Approximate host bytes held across all snapshots.
+    /// Host bytes held across all snapshots — O(1), read from the
+    /// running counter rather than walking the map.
     pub fn approx_bytes(&self) -> usize {
-        self.map.lock().unwrap().values().map(|s| s.approx_bytes()).sum()
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Telemetry snapshot (counters + current footprint).
+    pub fn stats(&self) -> PrefixCacheStats {
+        let g = self.inner.lock().unwrap();
+        PrefixCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            insert_races: self.insert_races.load(Ordering::Relaxed),
+            insert_rejects: self.insert_rejects.load(Ordering::Relaxed),
+            bytes: g.bytes,
+            entries: g.map.len(),
+        }
     }
 }
 
@@ -119,6 +292,8 @@ pub struct RouterConfig {
     pub tenant_inflight: usize,
     /// Attach a shared [`PrefixCache`] to every shard.
     pub prefix_reuse: bool,
+    /// Bytes budget for the shared prefix cache (`None` → unbounded).
+    pub prefix_budget: Option<usize>,
 }
 
 impl Default for RouterConfig {
@@ -130,6 +305,7 @@ impl Default for RouterConfig {
             shard_backlog: 16,
             tenant_inflight: 8,
             prefix_reuse: false,
+            prefix_budget: None,
         }
     }
 }
@@ -321,7 +497,8 @@ impl ShardPool {
     /// one runtime across shards works but serializes their caches.
     pub fn new(engines: Vec<Arc<Engine>>, batch: BatcherConfig, cfg: RouterConfig) -> ShardPool {
         assert!(!engines.is_empty(), "shard pool needs at least one engine");
-        let prefix = cfg.prefix_reuse.then(|| Arc::new(PrefixCache::new()));
+        let prefix =
+            cfg.prefix_reuse.then(|| Arc::new(PrefixCache::with_budget(cfg.prefix_budget)));
         let cores: Vec<SchedCore> = engines
             .into_iter()
             .map(|e| {
@@ -606,6 +783,82 @@ mod tests {
         assert!(pc.lookup("p", "full").is_none());
         assert!(!pc.contains("p", "full"));
         assert_eq!(pc.approx_bytes(), 0);
+        let st = pc.stats();
+        assert_eq!(st.misses, 1, "the empty lookup counted a miss");
+        assert_eq!((st.hits, st.evictions, st.insert_races, st.bytes), (0, 0, 0, 0));
+    }
+
+    /// Bounded LRU mechanics: the running bytes counter stays exact and
+    /// ≤ budget, inserts evict coldest-first, and a hit refreshes recency
+    /// so the touched entry survives the next eviction.
+    #[test]
+    fn prefix_cache_evicts_lru_under_bytes_budget() {
+        // room for exactly two 400-byte snapshots
+        let pc = PrefixCache::with_budget(Some(800));
+        assert_eq!(pc.budget(), Some(800));
+        assert!(pc.insert("a", "full", PrefillSnapshot::test_stub(400)).installed);
+        assert!(pc.insert("b", "full", PrefillSnapshot::test_stub(400)).installed);
+        assert_eq!((pc.len(), pc.approx_bytes()), (2, 800));
+        // touch "a" so "b" is now the coldest entry
+        assert!(pc.lookup("a", "full").is_some());
+        let out = pc.insert("c", "full", PrefillSnapshot::test_stub(400));
+        assert!(out.installed);
+        assert_eq!(out.evicted, 1, "one cold entry made room");
+        assert!(pc.contains("a", "full"), "the touched entry survived");
+        assert!(!pc.contains("b", "full"), "the cold entry was evicted");
+        assert!(pc.contains("c", "full"));
+        assert_eq!((pc.len(), pc.approx_bytes()), (2, 800));
+        let st = pc.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.bytes, 800);
+        assert!(st.bytes <= 800, "bytes never exceed the budget");
+    }
+
+    /// A snapshot handed out by `lookup` pins its entry: eviction skips
+    /// it while the install is in flight, and the newcomer evicts the
+    /// next-coldest unpinned entry instead. An entry too large to ever
+    /// fit is refused, not admitted over budget.
+    #[test]
+    fn prefix_cache_pins_in_flight_installs_and_rejects_oversize() {
+        let pc = PrefixCache::with_budget(Some(800));
+        assert!(pc.insert("a", "full", PrefillSnapshot::test_stub(400)).installed);
+        assert!(pc.insert("b", "full", PrefillSnapshot::test_stub(400)).installed);
+        // hold "a" like a shard mid-install; "b" is hotter but unpinned
+        let pinned = pc.lookup("a", "full").unwrap();
+        assert!(pc.lookup("b", "full").is_some());
+        let out = pc.insert("c", "full", PrefillSnapshot::test_stub(400));
+        assert!(out.installed);
+        assert!(pc.contains("a", "full"), "pinned entry never evicted");
+        assert!(!pc.contains("b", "full"), "hotter but unpinned entry paid instead");
+        drop(pinned);
+        // a snapshot larger than the whole budget is refused outright
+        let out = pc.insert("d", "full", PrefillSnapshot::test_stub(2000));
+        assert!(out.rejected && !out.installed);
+        assert!(!pc.contains("d", "full"));
+        assert!(pc.approx_bytes() <= 800);
+        assert_eq!(pc.stats().insert_rejects, 1);
+    }
+
+    /// Concurrent inserts for one key: first writer wins, every loser is
+    /// counted as an `insert_race`, and exactly one snapshot survives.
+    #[test]
+    fn prefix_cache_counts_insert_races_under_concurrency() {
+        let pc = Arc::new(PrefixCache::new());
+        let n = 8;
+        let mut handles = vec![];
+        for _ in 0..n {
+            let pc = pc.clone();
+            handles.push(std::thread::spawn(move || {
+                pc.insert("shared", "full", PrefillSnapshot::test_stub(100))
+            }));
+        }
+        let outs: Vec<PrefixInsertOutcome> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(outs.iter().filter(|o| o.installed).count(), 1, "one winner");
+        assert_eq!(outs.iter().filter(|o| o.raced).count(), n - 1, "n-1 losers");
+        assert_eq!(pc.len(), 1);
+        assert_eq!(pc.approx_bytes(), 100);
+        assert_eq!(pc.stats().insert_races, (n - 1) as u64);
     }
 
     fn request(prompt: &str) -> (Request, Receiver<SeqEvent>) {

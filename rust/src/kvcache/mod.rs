@@ -77,6 +77,32 @@ impl TierConfig {
     }
 }
 
+/// How a sequence cache charges shared pools — the engine-level admission
+/// configuration ([`crate::coordinator::Engine::set_kv_pools`]).
+///
+/// *Split* is the historical shape: resident blocks charge a
+/// block-denominated pool, demoted entries a byte-denominated side pool,
+/// and either can be absent (uncharged). *Unified* is the
+/// memory-governance shape: one byte-denominated pool is charged by both
+/// tiers — a resident block costs [`TierConfig::resident_block_bytes`],
+/// a demoted entry [`TierConfig::bytes_per_entry`] — so demotion competes
+/// with residency for the same budget and fails gracefully into drop
+/// when the pool is exhausted.
+#[derive(Debug, Clone)]
+pub enum KvPools {
+    /// One byte-denominated pool charged by both tiers.
+    Unified(Arc<BlockPool>),
+    /// Block-denominated resident pool + byte-denominated side pool.
+    Split {
+        /// Resident-tier pool (units: blocks); `None` leaves residency
+        /// uncharged.
+        blocks: Option<Arc<BlockPool>>,
+        /// Demoted-tier pool (units: bytes); `None` leaves the side tier
+        /// uncharged.
+        side: Option<Arc<BlockPool>>,
+    },
+}
+
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CacheStats {
     /// KV pairs currently kept (filled, attendable), summed over heads.
@@ -100,6 +126,9 @@ pub struct CacheStats {
     /// Cumulative quantized bytes those in-place attends read
     /// (rows × [`TierConfig::bytes_per_entry`]).
     pub quant_attended_bytes: usize,
+    /// Cumulative demotions refused under pool pressure (the caller fell
+    /// back to dropping the entry instead).
+    pub demote_refusals: usize,
 }
 
 impl CacheStats {
@@ -169,6 +198,15 @@ pub struct PagedKvCache {
     /// the quantized tier); byte count maintained even without a pool.
     side_pool: Option<Arc<BlockPool>>,
     side_bytes: usize,
+    /// Unified-pool mode: `pool` is byte-denominated and charged by both
+    /// tiers (blocks at [`TierConfig::resident_block_bytes`], demoted
+    /// entries at [`TierConfig::bytes_per_entry`]); `side_pool` is unused.
+    unified: bool,
+    /// Cumulative demotions refused because a pool was exhausted
+    /// (pressure-driven refusals only — not disabled-tier or not-kept
+    /// refusals). The graceful-degradation observable: each one means a
+    /// caller fell back from demote to drop.
+    demote_refusals: usize,
     /// Cumulative demoted entries the quantized decode path attended in
     /// place (see [`PagedKvCache::note_quant_attend`]). Pure telemetry —
     /// no pool charge moves, so `accounting_ok` ignores it.
@@ -210,6 +248,8 @@ impl PagedKvCache {
             pool_blocks: 0,
             side_pool: None,
             side_bytes: 0,
+            unified: false,
+            demote_refusals: 0,
             quant_attended_rows: 0,
             tier,
             dirty: true,
@@ -227,6 +267,100 @@ impl PagedKvCache {
     pub fn with_side_pool(mut self, pool: Arc<BlockPool>) -> PagedKvCache {
         self.side_pool = Some(pool);
         self
+    }
+
+    /// Attach one byte-denominated pool charged by *both* tiers (see
+    /// [`KvPools::Unified`]): resident blocks cost
+    /// [`TierConfig::resident_block_bytes`] each, demoted entries
+    /// [`TierConfig::bytes_per_entry`] each. Demotion now competes with
+    /// residency for the same budget.
+    pub fn with_unified_pool(mut self, pool: Arc<BlockPool>) -> PagedKvCache {
+        self.pool = Some(pool);
+        self.unified = true;
+        self
+    }
+
+    /// Attach an engine-level pool configuration, charging this cache's
+    /// *current* holdings (resident blocks + demoted bytes) against the
+    /// pools — the snapshot-install path, where a cloned cache arrives
+    /// with non-zero counters but detached handles. Returns false (cache
+    /// left detached, nothing charged) if the pools cannot admit the
+    /// holdings. On an empty cache this always succeeds.
+    pub fn adopt_pools(&mut self, pools: &KvPools) -> bool {
+        debug_assert!(
+            self.pool.is_none() && self.side_pool.is_none(),
+            "adopt_pools on a cache that already has pools"
+        );
+        match pools {
+            KvPools::Unified(p) => {
+                let cost = self.tier.resident_block_bytes().max(1);
+                if !p.try_alloc(self.pool_blocks * cost + self.side_bytes) {
+                    return false;
+                }
+                self.pool = Some(p.clone());
+                self.unified = true;
+            }
+            KvPools::Split { blocks, side } => {
+                if let Some(bp) = blocks {
+                    if !bp.try_alloc(self.pool_blocks) {
+                        return false;
+                    }
+                }
+                if let Some(sp) = side {
+                    if !sp.try_alloc(self.side_bytes) {
+                        if let Some(bp) = blocks {
+                            bp.release(self.pool_blocks);
+                        }
+                        return false;
+                    }
+                }
+                self.pool = blocks.clone();
+                self.side_pool = side.clone();
+                self.unified = false;
+            }
+        }
+        true
+    }
+
+    /// Pool units one resident block costs: bytes in unified mode, 1 in
+    /// block-denominated mode.
+    fn block_cost(&self) -> usize {
+        if self.unified {
+            self.tier.resident_block_bytes().max(1)
+        } else {
+            1
+        }
+    }
+
+    /// Release `bytes` of demoted-tier charge back to whichever pool holds
+    /// it (the unified pool, or the split-mode side pool).
+    fn release_side_charge(&self, bytes: usize) {
+        if self.unified {
+            if let Some(p) = &self.pool {
+                p.release(bytes);
+            }
+        } else if let Some(sp) = &self.side_pool {
+            sp.release(bytes);
+        }
+    }
+
+    /// Whether both tiers charge one shared byte pool.
+    pub fn is_unified(&self) -> bool {
+        self.unified
+    }
+
+    /// Total bytes this cache has charged across both tiers (resident
+    /// blocks priced at full f32 width + demoted side bytes) — the
+    /// memory-governance observable the simulation harness sums across
+    /// live sequences against the pool budget.
+    pub fn charged_bytes(&self) -> usize {
+        self.pool_blocks * self.tier.resident_block_bytes() + self.side_bytes
+    }
+
+    /// Cumulative pressure-driven demotion refusals (pool exhausted; the
+    /// caller fell back to dropping the entry).
+    pub fn demote_refusals(&self) -> usize {
+        self.demote_refusals
     }
 
     /// The demoted-tier configuration this cache was built with.
@@ -320,8 +454,9 @@ impl PagedKvCache {
                 self.set_block_resident(l, h, b, false);
                 self.freed_blocks += 1;
                 self.pool_blocks -= 1;
+                let cost = self.block_cost();
                 if let Some(pool) = &self.pool {
-                    pool.release(1);
+                    pool.release(cost);
                 }
             }
         }
@@ -345,7 +480,7 @@ impl PagedKvCache {
             }
         }
         if let Some(pool) = &self.pool {
-            if !pool.try_alloc(need) {
+            if !pool.try_alloc(need * self.block_cost()) {
                 return false;
             }
         }
@@ -388,8 +523,17 @@ impl PagedKvCache {
             return false;
         }
         let bytes = self.tier.bytes_per_entry();
-        if let Some(sp) = &self.side_pool {
+        if self.unified {
+            // Demotion competes with residency for the one byte budget.
+            if let Some(p) = &self.pool {
+                if !p.try_alloc(bytes) {
+                    self.demote_refusals += 1;
+                    return false;
+                }
+            }
+        } else if let Some(sp) = &self.side_pool {
             if !sp.try_alloc(bytes) {
+                self.demote_refusals += 1;
                 return false;
             }
         }
@@ -409,8 +553,9 @@ impl PagedKvCache {
         }
         let b = pos / BLOCK_SLOTS;
         if !self.block_resident(l, h, b) {
+            let cost = self.block_cost();
             if let Some(pool) = &self.pool {
-                if !pool.try_alloc(1) {
+                if !pool.try_alloc(cost) {
                     return false;
                 }
             }
@@ -420,9 +565,7 @@ impl PagedKvCache {
         self.set_demoted_bit(l, h, pos, false);
         let bytes = self.tier.bytes_per_entry();
         self.side_bytes -= bytes;
-        if let Some(sp) = &self.side_pool {
-            sp.release(bytes);
-        }
+        self.release_side_charge(bytes);
         self.set_kept(l, h, pos, true);
         // mask 0 -> 1 is a change the backend cannot mirror itself
         self.dirty = true;
@@ -438,9 +581,7 @@ impl PagedKvCache {
         self.set_demoted_bit(l, h, pos, false);
         let bytes = self.tier.bytes_per_entry();
         self.side_bytes -= bytes;
-        if let Some(sp) = &self.side_pool {
-            sp.release(bytes);
-        }
+        self.release_side_charge(bytes);
         true
     }
 
@@ -539,6 +680,7 @@ impl PagedKvCache {
             side_bytes: self.side_bytes,
             quant_attended_rows: self.quant_attended_rows,
             quant_attended_bytes: self.quant_attended_rows * self.tier.bytes_per_entry(),
+            demote_refusals: self.demote_refusals,
         }
     }
 
@@ -611,13 +753,11 @@ impl PagedKvCache {
     /// demoted-tier bytes both go back to their pools.
     pub fn release(&mut self) {
         if let Some(pool) = &self.pool {
-            pool.release(self.pool_blocks);
+            pool.release(self.pool_blocks * self.block_cost());
         }
         self.pool_blocks = 0;
         self.resident.fill(0);
-        if let Some(sp) = &self.side_pool {
-            sp.release(self.side_bytes);
-        }
+        self.release_side_charge(self.side_bytes);
         self.side_bytes = 0;
     }
 }
@@ -647,6 +787,8 @@ impl Clone for PagedKvCache {
             pool_blocks: self.pool_blocks,
             side_pool: None,
             side_bytes: self.side_bytes,
+            unified: false,
+            demote_refusals: self.demote_refusals,
             quant_attended_rows: self.quant_attended_rows,
             tier: self.tier,
             dirty: self.dirty,
@@ -835,6 +977,92 @@ mod tests {
         assert_eq!((s.kept, s.demoted, s.dropped()), (7, 2, 1));
         c.release();
         assert_eq!(side.free(), 2 * bpe);
+    }
+
+    #[test]
+    fn unified_pool_charges_both_tiers_in_bytes() {
+        let t = tier();
+        let bpe = t.bytes_per_entry();
+        let bb = t.resident_block_bytes();
+        // Room for two resident blocks plus three demoted entries.
+        let pool = Arc::new(BlockPool::new(2 * bb + 3 * bpe));
+        let mut c = PagedKvCache::new_tiered(1, 1, 64, t).with_unified_pool(pool.clone());
+        assert!(c.is_unified());
+        assert!(c.fill(32), "two blocks fit");
+        assert_eq!(pool.free(), 3 * bpe);
+        assert_eq!(c.charged_bytes(), 2 * bb);
+        assert!(!c.fill(33), "a third block does not fit");
+
+        assert!(c.demote(0, 0, 0));
+        assert!(c.demote(0, 0, 1));
+        assert!(c.demote(0, 0, 2));
+        assert_eq!(pool.free(), 0);
+        assert_eq!(c.charged_bytes(), 2 * bb + 3 * bpe);
+        assert!(!c.demote(0, 0, 3), "pool exhausted -> demotion refused");
+        assert!(c.is_kept(0, 0, 3), "refused demotion leaves the entry kept");
+        assert_eq!(c.stats().demote_refusals, 1);
+        assert!(c.evict(0, 0, 3), "caller falls back to dropping outright");
+        c.accounting_ok().unwrap();
+
+        // Dropping a demoted entry returns its bytes to the shared budget,
+        // letting the next demotion through.
+        assert!(c.drop_demoted(0, 0, 0));
+        assert_eq!(pool.free(), bpe);
+        assert!(c.demote(0, 0, 4));
+        assert_eq!(pool.free(), 0);
+
+        // Evicting the rest of block 0 vacates it; its block-bytes flow
+        // back into the same budget and cover a block re-charge on
+        // rehydrate.
+        for pos in 5..16 {
+            assert!(c.evict(0, 0, pos));
+        }
+        assert_eq!(pool.free(), bb, "vacated block returns byte-priced charge");
+        assert!(c.rehydrate(0, 0, 1), "freed block bytes cover the re-charge");
+        assert_eq!(c.charged_bytes(), 2 * bb + 2 * bpe);
+        assert_eq!(pool.free(), 2 * bb + 3 * bpe - c.charged_bytes());
+        c.accounting_ok().unwrap();
+        c.release();
+        assert_eq!(pool.free(), 2 * bb + 3 * bpe, "release returns every byte");
+    }
+
+    #[test]
+    fn adopt_pools_charges_existing_holdings() {
+        let t = tier();
+        let bb = t.resident_block_bytes();
+        let bpe = t.bytes_per_entry();
+        let mut donor = PagedKvCache::new_tiered(1, 1, 64, t);
+        donor.fill(32);
+        donor.demote(0, 0, 0);
+        let snap = donor.clone();
+        assert_eq!(snap.charged_bytes(), 2 * bb + bpe);
+
+        // Too small: adoption refused, pool untouched, cache detached.
+        let tiny = Arc::new(BlockPool::new(bb));
+        let mut c = snap.clone();
+        assert!(!c.adopt_pools(&KvPools::Unified(tiny.clone())));
+        assert_eq!(tiny.free(), bb);
+        c.release();
+        assert_eq!(tiny.free(), bb, "detached cache releases nothing");
+
+        // Big enough: holdings charged, release returns them.
+        let pool = Arc::new(BlockPool::new(4 * bb));
+        let mut c = snap.clone();
+        assert!(c.adopt_pools(&KvPools::Unified(pool.clone())));
+        assert_eq!(pool.free(), 4 * bb - (2 * bb + bpe));
+        drop(c);
+        assert_eq!(pool.free(), 4 * bb);
+
+        // Split adoption rolls back the block charge if the side pool
+        // refuses.
+        let blocks = Arc::new(BlockPool::new(8));
+        let no_side = Arc::new(BlockPool::new(0));
+        let mut c = snap.clone();
+        assert!(!c.adopt_pools(&KvPools::Split {
+            blocks: Some(blocks.clone()),
+            side: Some(no_side),
+        }));
+        assert_eq!(blocks.free(), 8, "failed split adoption rolls back block charge");
     }
 
     #[test]

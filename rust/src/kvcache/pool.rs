@@ -18,11 +18,21 @@ pub struct BlockPool {
     /// corrupting the free counter, and the simulation harness can fail
     /// loudly on any nonzero value.
     over_release: AtomicUsize,
+    /// High-water mark of `used()`, maintained on every successful
+    /// allocation. Lets harnesses size a budget to a probed workload
+    /// ("rerun with budget = peak - 1") without replaying allocation
+    /// history themselves.
+    peak: AtomicUsize,
 }
 
 impl BlockPool {
     pub fn new(total: usize) -> BlockPool {
-        BlockPool { total, free: AtomicUsize::new(total), over_release: AtomicUsize::new(0) }
+        BlockPool {
+            total,
+            free: AtomicUsize::new(total),
+            over_release: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
     }
 
     pub fn total(&self) -> usize {
@@ -42,6 +52,11 @@ impl BlockPool {
         self.over_release.load(Ordering::Relaxed)
     }
 
+    /// Highest `used()` any successful allocation has reached so far.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
     /// Try to reserve `n` blocks; false (and no change) if unavailable.
     pub fn try_alloc(&self, n: usize) -> bool {
         let mut cur = self.free.load(Ordering::Relaxed);
@@ -55,7 +70,10 @@ impl BlockPool {
                 Ordering::AcqRel,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return true,
+                Ok(_) => {
+                    self.peak.fetch_max(self.total - (cur - n), Ordering::Relaxed);
+                    return true;
+                }
                 Err(c) => cur = c,
             }
         }
@@ -97,6 +115,20 @@ mod tests {
         assert!(p.try_alloc(3));
         p.release(10);
         assert_eq!(p.free(), 10);
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark_not_current_usage() {
+        let p = BlockPool::new(10);
+        assert_eq!(p.peak(), 0);
+        assert!(p.try_alloc(4));
+        assert_eq!(p.peak(), 4);
+        p.release(4);
+        assert_eq!(p.peak(), 4, "peak survives release");
+        assert!(p.try_alloc(7));
+        assert_eq!(p.peak(), 7);
+        assert!(!p.try_alloc(9), "refusal must not move the peak");
+        assert_eq!(p.peak(), 7);
     }
 
     #[test]

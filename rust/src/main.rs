@@ -17,6 +17,8 @@
 //!            [--spec-file PATH] [--fault-step K] [--fault-quant-step K]
 //!            [--fault-prefix-step K] [--fault-route-step K]
 //!            [--tiered] [--shards N] [--prefix-reuse] [--no-prefix-reuse]
+//!            [--prefix-budget BYTES] [--kv-budget BYTES]
+//!            [--side-budget BYTES]
 //!                                deterministic multi-client scenario fuzzer
 //!                                with invariant checking (docs/TESTING.md);
 //!                                --tiered scripts demotion-heavy episodes
@@ -25,7 +27,10 @@
 //!                                router invariants, and (with --quick or
 //!                                --check-shards) runs the shard-invariance
 //!                                metamorphic family on a shared-prefix
-//!                                episode;
+//!                                episode; the budget flags bound the
+//!                                prefix cache / per-engine KV pools and
+//!                                add the pool-budget invariant (0 =
+//!                                unbounded; KV budgets imply --no-solo);
 //!                                exits non-zero when an invariant fires
 
 use std::sync::Arc;
@@ -148,12 +153,33 @@ fn simulate(args: &Args) -> Result<()> {
     let shards = args.usize("shards", 1);
     let prefix_reuse = args.kv.contains_key("prefix-reuse")
         || (shards > 1 && !args.kv.contains_key("no-prefix-reuse"));
+    let budget = |key: &str| -> Result<Option<usize>> {
+        match args.kv.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let b: usize =
+                    v.parse().map_err(|_| anyhow!("bad --{key} '{v}' (want bytes)"))?;
+                Ok((b > 0).then_some(b))
+            }
+        }
+    };
+    let prefix_budget = budget("prefix-budget")?;
+    let kv_budget = budget("kv-budget")?;
+    let side_budget = budget("side-budget")?;
     let opts = SimOptions {
         threads,
-        check_solo: !args.kv.contains_key("no-solo"),
+        // KV budgets disable the solo replays: they run on the scripted
+        // engines, whose pools are still charged by live sequences, so a
+        // replay would see (and cause) spurious admission pressure.
+        check_solo: !args.kv.contains_key("no-solo")
+            && kv_budget.is_none()
+            && side_budget.is_none(),
         fault,
         shards,
         prefix_reuse,
+        prefix_budget,
+        kv_budget,
+        side_budget,
         ..SimOptions::default()
     };
     let tiered = args.kv.contains_key("tiered");
@@ -446,6 +472,11 @@ fn serve(args: &Args) -> Result<()> {
         shards,
         prefix_reuse: args.kv.contains_key("prefix-reuse")
             || (shards > 1 && !args.kv.contains_key("no-prefix-reuse")),
+        prefix_budget: match args.usize("prefix-budget", 0) {
+            0 => None, // 0 = unbounded
+            b => Some(b),
+        },
+        tenant_inflight: args.usize("tenant-inflight", 8),
     };
     // one engine (own runtime + resident cache) per shard
     let engines: Result<Vec<_>> = (0..shards).map(|_| load_engine()).collect();

@@ -78,6 +78,15 @@ impl TransferCounters {
         self.tier_bytes_stored.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Record a fused band demotion of `n` entries storing `bytes` of
+    /// payload in total — counter-equivalent to `n` single
+    /// [`TransferCounters::note_demote`] calls, so exact-replay models
+    /// never see a difference between the fused and per-entry paths.
+    pub fn note_demote_band(&self, n: u64, bytes: u64) {
+        self.demotes.fetch_add(n, Ordering::Relaxed);
+        self.tier_bytes_stored.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     /// Record one rehydrate (or drop) op freeing `bytes` of payload.
     pub fn note_rehydrate(&self, bytes: u64) {
         self.rehydrates.fetch_add(1, Ordering::Relaxed);
@@ -149,6 +158,15 @@ pub struct EngineMetrics {
     /// Prefix-cache misses: admissions that ran a fresh prefill with reuse
     /// enabled (a snapshot was captured and inserted for later requests).
     pub prefix_misses: AtomicU64,
+    /// Prefix-cache snapshots this engine's inserts evicted to make room
+    /// under the shared cache's bytes budget.
+    pub prefix_evictions: AtomicU64,
+    /// Prefix-cache inserts by this engine that lost a key race (another
+    /// shard deposited the snapshot first; ours was discarded).
+    pub prefix_insert_races: AtomicU64,
+    /// Prefix-cache inserts refused because the snapshot could not fit
+    /// the bytes budget even after evicting every cold entry.
+    pub prefix_insert_rejects: AtomicU64,
     /// Side-tier rows attended in place (no rehydrate) across all decode
     /// steps — the steady-state *compute* footprint of the demoted tier.
     pub quant_attend_rows: AtomicU64,
@@ -191,14 +209,29 @@ impl EngineMetrics {
         self.prefix_misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record what one prefix-cache insert did (eviction/race/reject
+    /// attribution for the engine whose admission performed it).
+    pub fn note_prefix_insert(&self, evicted: u64, raced: bool, rejected: bool) {
+        self.prefix_evictions.fetch_add(evicted, Ordering::Relaxed);
+        if raced {
+            self.prefix_insert_races.fetch_add(1, Ordering::Relaxed);
+        }
+        if rejected {
+            self.prefix_insert_rejects.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens_out={} mean_compression={:.3} prefix_hits={} prefix_misses={} quant_attend_rows={} quant_attend_bytes={}\n  prefill {}\n  decode_step {}\n  step_kv_up {}\n  step_kv_down {}\n  e2e {}",
+            "requests={} tokens_out={} mean_compression={:.3} prefix_hits={} prefix_misses={} prefix_evictions={} prefix_insert_races={} prefix_insert_rejects={} quant_attend_rows={} quant_attend_bytes={}\n  prefill {}\n  decode_step {}\n  step_kv_up {}\n  step_kv_down {}\n  e2e {}",
             self.requests.load(Ordering::Relaxed),
             self.tokens_out.load(Ordering::Relaxed),
             self.mean_compression(),
             self.prefix_hits.load(Ordering::Relaxed),
             self.prefix_misses.load(Ordering::Relaxed),
+            self.prefix_evictions.load(Ordering::Relaxed),
+            self.prefix_insert_races.load(Ordering::Relaxed),
+            self.prefix_insert_rejects.load(Ordering::Relaxed),
             self.quant_attend_rows.load(Ordering::Relaxed),
             self.quant_attend_bytes.load(Ordering::Relaxed),
             self.prefill.lock().unwrap().summary("us"),

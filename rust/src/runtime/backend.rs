@@ -286,6 +286,29 @@ pub trait Backend: Send + Sync {
         Err(anyhow!("backend '{}' does not support the demoted KV tier", self.name()))
     }
 
+    /// Demote a whole band of `(l, head, pos)` entries of `slot` in one
+    /// call — the batched sibling of [`Backend::kv_demote`]. The engine
+    /// uses it when a joining sequence re-installs its side tier after a
+    /// scatter, and when the answer scorer parks a prefill's demoted band
+    /// so it can score from quantized form without rehydrating. Returns
+    /// the total side-pool bytes the band occupies. The default loops the
+    /// per-entry op; tier-capable backends can fuse the encode and
+    /// bookkeeping under one lock.
+    fn kv_demote_band(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        band: &[(usize, usize, usize)],
+        bits: QuantBits,
+        group: usize,
+    ) -> Result<usize> {
+        let mut bytes = 0;
+        for &(l, head, pos) in band {
+            bytes += self.kv_demote(h, slot, l, head, pos, bits, group)?;
+        }
+        Ok(bytes)
+    }
+
     /// Rehydrate a previously demoted entry: decode the side-pool payload
     /// back into the resident K/V rows at `(l, head, pos)` of `slot` and
     /// drop the side-pool entry. Returns the side-pool bytes freed.

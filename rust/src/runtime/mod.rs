@@ -239,6 +239,24 @@ impl Runtime {
         Ok(bytes)
     }
 
+    /// Demote a band of entries of `slot` in one backend call (see
+    /// `Backend::kv_demote_band`). Device-local like the per-entry op;
+    /// the band's payload bytes roll into the demote tier counters.
+    pub fn kv_demote_band(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        band: &[(usize, usize, usize)],
+        bits: kernels::QuantBits,
+        group: usize,
+    ) -> Result<usize> {
+        let bytes = self.backend.kv_demote_band(h, slot, band, bits, group)?;
+        if !band.is_empty() {
+            self.transfer.note_demote_band(band.len() as u64, bytes as u64);
+        }
+        Ok(bytes)
+    }
+
     /// Rehydrate a demoted entry back into the resident rows of `slot`
     /// (see `Backend::kv_rehydrate`). Device-local.
     pub fn kv_rehydrate(

@@ -1600,6 +1600,38 @@ impl Backend for ReferenceBackend {
         Ok(bytes)
     }
 
+    /// Fused band demotion: one group lock + one side-map lock for the
+    /// whole band, instead of a lock pair per entry. Encoding semantics
+    /// are identical to [`Backend::kv_demote`] per entry (lossy
+    /// round-trip left in the resident rows).
+    fn kv_demote_band(
+        &self,
+        h: &KvHandle,
+        slot: usize,
+        band: &[(usize, usize, usize)],
+        bits: kernels::QuantBits,
+        group: usize,
+    ) -> Result<usize> {
+        let g = self.group(h)?;
+        let mut g = g.lock().unwrap();
+        check_slot(&g, h, slot)?;
+        let d = h.d_head;
+        let mut side = self.side.lock().unwrap();
+        let mut total = 0;
+        for &(l, head, pos) in band {
+            check_lhp(h, l, head, pos)?;
+            let base = (((l * g.batch + slot) * h.heads + head) * h.t_max + pos) * d;
+            let kq = kernels::quantize_row(&g.k[base..base + d], group, bits);
+            let vq = kernels::quantize_row(&g.v[base..base + d], group, bits);
+            kernels::dequantize_row(&kq, group, bits, &mut g.k[base..base + d]);
+            kernels::dequantize_row(&vq, group, bits, &mut g.v[base..base + d]);
+            let bytes = 2 * kernels::quant_row_bytes(d, group, bits);
+            side.insert((h.id, slot, l, head, pos), SideEntry { k: kq, v: vq, bits, group, bytes });
+            total += bytes;
+        }
+        Ok(total)
+    }
+
     fn kv_rehydrate(
         &self,
         h: &KvHandle,

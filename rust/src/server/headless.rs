@@ -106,6 +106,12 @@ impl HeadlessServer {
         self.shards.engines()
     }
 
+    /// The dispatch state behind every connection (fair-share gate
+    /// observability: per-tenant peaks and throttle waits).
+    pub fn shard_set(&self) -> &Arc<ShardSet> {
+        &self.shards
+    }
+
     /// Open one in-process protocol connection (its own loop thread).
     pub fn connect(&self) -> HeadlessClient {
         let (line_tx, line_rx) = mpsc::channel::<Vec<u8>>();

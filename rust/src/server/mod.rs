@@ -63,7 +63,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -86,6 +86,18 @@ pub struct ServerConfig {
     pub shards: usize,
     /// Share a cross-request prefix cache across all shards' batchers.
     pub prefix_reuse: bool,
+    /// Bytes budget for the shared prefix cache (`None` = unbounded).
+    /// Under a finite budget cold snapshots are LRU-evicted on insert;
+    /// the churn shows up in the `stats` command as `prefix_evictions` /
+    /// `prefix_insert_rejects` next to the live `prefix_bytes` gauge.
+    pub prefix_budget: Option<usize>,
+    /// Per-tenant in-flight cap across the shard set (mirrors
+    /// [`crate::coordinator::router::RouterConfig`]'s `tenant_inflight`
+    /// on the deterministic pool path). A submit beyond the cap blocks
+    /// the submitting connection's thread until one of that tenant's
+    /// requests finishes — backpressure lands on the flooding tenant
+    /// while other tenants' connections dispatch unimpeded.
+    pub tenant_inflight: usize,
 }
 
 impl Default for ServerConfig {
@@ -97,6 +109,8 @@ impl Default for ServerConfig {
             max_wait_us: 2_000,
             shards: 1,
             prefix_reuse: false,
+            prefix_budget: None,
+            tenant_inflight: 8,
         }
     }
 }
@@ -110,8 +124,9 @@ pub struct ParsedRequest {
     /// Client-chosen id (string or number), echoed in responses/events.
     pub id: Option<Json>,
     /// Tenant the request bills to ("" when absent — a tenant like any
-    /// other). The deterministic pool path enforces per-tenant fair-share
-    /// queueing on it; the threaded frontend just carries it.
+    /// other). Both paths enforce per-tenant fair-share on it: the
+    /// deterministic pool with round-robin queues, the threaded frontend
+    /// with [`ShardSet`]'s blocking in-flight gate.
     pub tenant: String,
 }
 
@@ -191,6 +206,21 @@ pub fn stats_json(engine: &Engine) -> Json {
             "prefix_misses",
             Json::num(m.prefix_misses.load(std::sync::atomic::Ordering::Relaxed) as f64),
         ),
+        // prefix-cache churn attributed to this shard's inserts (the
+        // live bytes/entries gauges are cache-wide and ride at the set
+        // level — see `stats_json_set` — so they never double-count)
+        (
+            "prefix_evictions",
+            Json::num(m.prefix_evictions.load(std::sync::atomic::Ordering::Relaxed) as f64),
+        ),
+        (
+            "prefix_insert_races",
+            Json::num(m.prefix_insert_races.load(std::sync::atomic::Ordering::Relaxed) as f64),
+        ),
+        (
+            "prefix_insert_rejects",
+            Json::num(m.prefix_insert_rejects.load(std::sync::atomic::Ordering::Relaxed) as f64),
+        ),
         ("decode_steps", Json::num(t.decode_steps as f64)),
         ("kv_bytes_up", Json::num(t.kv_bytes_up as f64)),
         ("kv_bytes_down", Json::num(t.kv_bytes_down as f64)),
@@ -252,12 +282,40 @@ pub fn stats_json_sharded(engines: &[Arc<Engine>]) -> Json {
     Json::obj(pairs)
 }
 
+/// [`stats_json_sharded`] plus the shard set's cache-wide gauges: the
+/// shared prefix cache's live `prefix_bytes` / `prefix_entries`. Gauges
+/// are set once at the set level — never summed per shard — because the
+/// cache is one object shared by every batcher.
+pub fn stats_json_set(shards: &ShardSet) -> Json {
+    let mut j = stats_json_sharded(shards.engines());
+    if let (Some(pc), Json::Obj(m)) = (shards.prefix_cache(), &mut j) {
+        let s = pc.stats();
+        m.insert("prefix_bytes".into(), Json::num(s.bytes as f64));
+        m.insert("prefix_entries".into(), Json::num(s.entries as f64));
+    }
+    j
+}
+
+/// Per-tenant admission slots behind [`ShardSet`]'s fair-share gate.
+#[derive(Default)]
+struct TenantSlots {
+    /// Dispatched-but-unfinished requests billed to this tenant.
+    count: usize,
+    /// High-water mark of `count` (never exceeds the configured cap —
+    /// the regression tests pin this invariant).
+    peak: usize,
+}
+
 /// Shard-aware dispatch state shared by every connection of a server: one
 /// continuous [`Batcher`] per shard (all sharing one [`PrefixCache`] when
 /// reuse is on) behind a [`Router`], with per-shard outstanding-request
 /// counters the router reads as its load vector. The threaded frontends
-/// do placement and load spill here; deterministic per-tenant fair-share
-/// queueing lives in [`crate::coordinator::ShardPool`] (the sim path).
+/// do placement and load spill here, and enforce the same per-tenant
+/// in-flight cap the deterministic [`crate::coordinator::ShardPool`]
+/// (sim path) enforces with its round-robin queues: a tenant past its
+/// cap blocks *its own* submitting connection until one of its requests
+/// finishes, so a flooding tenant backpressures itself while every other
+/// tenant's connections keep dispatching.
 pub struct ShardSet {
     engines: Vec<Arc<Engine>>,
     batchers: Vec<Arc<Batcher>>,
@@ -266,6 +324,16 @@ pub struct ShardSet {
     /// Fallback client-visible ids (clients that sent no "id"): a
     /// set-global counter, since per-batcher ids collide across shards.
     next_auto: AtomicU64,
+    /// The shared cross-shard prefix cache, kept for its live gauges
+    /// (`None` when prefix reuse is off).
+    prefix: Option<Arc<PrefixCache>>,
+    /// Fair-share gate: per-tenant in-flight slots under `tenant_cap`.
+    tenant_cap: usize,
+    tenants: Mutex<HashMap<String, TenantSlots>>,
+    tenant_freed: Condvar,
+    /// Submits that had to wait on the gate (observability: nonzero means
+    /// a tenant hit its cap at least once).
+    throttle_waits: AtomicU64,
 }
 
 impl ShardSet {
@@ -273,7 +341,8 @@ impl ShardSet {
     /// own resident cache).
     pub fn new(engines: Vec<Arc<Engine>>, cfg: &ServerConfig) -> Arc<ShardSet> {
         assert!(!engines.is_empty(), "shard set needs at least one engine");
-        let prefix = cfg.prefix_reuse.then(|| Arc::new(PrefixCache::new()));
+        let prefix =
+            cfg.prefix_reuse.then(|| Arc::new(PrefixCache::with_budget(cfg.prefix_budget)));
         let bcfg = BatcherConfig { max_batch: cfg.max_batch, max_wait_us: cfg.max_wait_us };
         let batchers = engines
             .iter()
@@ -293,6 +362,11 @@ impl ShardSet {
             router,
             outstanding,
             next_auto: AtomicU64::new(1),
+            prefix,
+            tenant_cap: cfg.tenant_inflight.max(1),
+            tenants: Mutex::new(HashMap::new()),
+            tenant_freed: Condvar::new(),
+            throttle_waits: AtomicU64::new(0),
         })
     }
 
@@ -311,9 +385,34 @@ impl ShardSet {
         &self.engines[s]
     }
 
+    /// The shared prefix cache, when reuse is enabled.
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.prefix.as_ref()
+    }
+
+    /// Acquire one of `tenant`'s in-flight slots, blocking the calling
+    /// connection thread while the tenant sits at its cap. The wait ends
+    /// when [`ShardSet::finished`] releases one of the tenant's slots —
+    /// other tenants' submits never wait on this tenant's backlog.
+    fn acquire_tenant(&self, tenant: &str) {
+        let mut map = self.tenants.lock().unwrap();
+        if map.get(tenant).is_some_and(|s| s.count >= self.tenant_cap) {
+            self.throttle_waits.fetch_add(1, Ordering::Relaxed);
+            while map.get(tenant).is_some_and(|s| s.count >= self.tenant_cap) {
+                map = self.tenant_freed.wait(map).unwrap();
+            }
+        }
+        let slots = map.entry(tenant.to_string()).or_default();
+        slots.count += 1;
+        slots.peak = slots.peak.max(slots.count);
+    }
+
     /// Route by prompt (consistent hash + load spill) and submit to the
-    /// placed shard's batcher. Returns (shard, batcher id).
-    pub fn submit(&self, req: Request) -> Result<(usize, u64)> {
+    /// placed shard's batcher, after taking one of `tenant`'s fair-share
+    /// slots (blocks while the tenant is at its in-flight cap). Returns
+    /// (shard, batcher id).
+    pub fn submit(&self, tenant: &str, req: Request) -> Result<(usize, u64)> {
+        self.acquire_tenant(tenant);
         let loads: Vec<usize> =
             self.outstanding.iter().map(|o| o.load(Ordering::Relaxed)).collect();
         let shard = self.router.lock().unwrap().place(&req.prompt, &loads);
@@ -321,19 +420,37 @@ impl ShardSet {
         match self.batchers[shard].submit(req) {
             Ok(bid) => Ok((shard, bid)),
             Err(e) => {
-                self.finished(shard);
+                self.finished(shard, tenant);
                 Err(e)
             }
         }
     }
 
-    /// Release `shard`'s outstanding charge for one finished request.
-    pub fn finished(&self, shard: usize) {
+    /// Release `shard`'s outstanding charge and `tenant`'s in-flight slot
+    /// for one finished request (wakes submits parked at the cap).
+    pub fn finished(&self, shard: usize, tenant: &str) {
         let _ = self.outstanding[shard].fetch_update(
             Ordering::Relaxed,
             Ordering::Relaxed,
             |v| Some(v.saturating_sub(1)),
         );
+        let mut map = self.tenants.lock().unwrap();
+        if let Some(slots) = map.get_mut(tenant) {
+            slots.count = slots.count.saturating_sub(1);
+        }
+        drop(map);
+        self.tenant_freed.notify_all();
+    }
+
+    /// High-water mark of `tenant`'s concurrently in-flight requests —
+    /// by construction never above the configured `tenant_inflight` cap.
+    pub fn tenant_peak_inflight(&self, tenant: &str) -> usize {
+        self.tenants.lock().unwrap().get(tenant).map_or(0, |s| s.peak)
+    }
+
+    /// Times a submit had to wait because its tenant sat at the cap.
+    pub fn throttle_waits(&self) -> u64 {
+        self.throttle_waits.load(Ordering::Relaxed)
     }
 
     /// Cancel a dispatched request on its shard.
@@ -511,10 +628,7 @@ where
                 continue;
             }
             Some("stats") => {
-                write_line(
-                    &writer,
-                    &Json::obj(vec![("stats", stats_json_sharded(shards.engines()))]),
-                )?;
+                write_line(&writer, &Json::obj(vec![("stats", stats_json_set(&shards))]))?;
                 continue;
             }
             Some("policies") => {
@@ -574,7 +688,8 @@ where
                 let (tx, rx) = mpsc::channel();
                 let client_id = preq.id.clone();
                 let stream_flag = preq.stream;
-                match shards.submit(Request {
+                let tenant = preq.tenant.clone();
+                match shards.submit(&tenant, Request {
                     prompt: preq.prompt,
                     policy: preq.policy,
                     sp: preq.sp,
@@ -596,7 +711,7 @@ where
                             let set = shards.clone();
                             pumps.push(std::thread::spawn(move || {
                                 pump_stream(rx, w, id_json);
-                                set.finished(shard);
+                                set.finished(shard, &tenant);
                                 ids.lock().unwrap().remove(&id_key);
                             }));
                         } else {
@@ -606,13 +721,13 @@ where
                                     Ok(SeqEvent::Done(r)) => break r,
                                     Ok(SeqEvent::Token { .. }) => continue,
                                     Err(_) => {
-                                        shards.finished(shard);
+                                        shards.finished(shard, &tenant);
                                         ids.lock().unwrap().remove(&id_key);
                                         anyhow::bail!("batcher dropped the request")
                                     }
                                 }
                             };
-                            shards.finished(shard);
+                            shards.finished(shard, &tenant);
                             ids.lock().unwrap().remove(&id_key);
                             let body = response_json_with_id(&resp, client_id.as_ref());
                             let mut w = writer.lock().unwrap();

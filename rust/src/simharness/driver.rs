@@ -35,6 +35,7 @@ use crate::coordinator::{
     BatcherConfig, Engine, Request, RouterConfig, SchedCore, SeqEvent, Sequence, ShardPool,
     StepEvent,
 };
+use crate::kvcache::{BlockPool, KvPools};
 use crate::metrics::TransferSnapshot;
 use crate::policies::PolicySpec;
 use crate::runtime::{ParallelConfig, Runtime};
@@ -42,8 +43,9 @@ use crate::server::{self, ParsedRequest};
 use crate::util::propcheck;
 
 use super::invariants::{
-    check_placement_stability, check_prefix_accounting, check_tenant_fairness, registry,
-    BudgetCheck, PrefixEvent, SeqCheck, StepObs, TransferDelta, Violation,
+    check_placement_stability, check_pool_budget, check_prefix_accounting,
+    check_tenant_fairness, registry, BudgetCheck, PoolCheck, PrefixEvent, SeqCheck, StepObs,
+    TransferDelta, Violation,
 };
 use super::scenario::ScenarioSpec;
 
@@ -68,6 +70,22 @@ pub struct SimOptions {
     /// Attach a shared cross-request prefix cache. Forces the pool path
     /// even at one shard so the reuse machinery is always exercised.
     pub prefix_reuse: bool,
+    /// Bytes budget for the shared prefix cache (`None` → unbounded).
+    /// A finite budget relaxes prefix-hit accounting to one-sided: the
+    /// harness's protocol replay never evicts, so it can only rule out
+    /// hits the real cache reports for keys no insert ever deposited.
+    pub prefix_budget: Option<usize>,
+    /// Unified KV admission pool: one bytes budget *per shard engine*,
+    /// charged by resident blocks (at f32 width) and demoted side bytes
+    /// alike. Adds the pool-budget invariant per shard per step. Use with
+    /// `check_solo: false` — solo replays run on the scripted engines, so
+    /// their sequences would contend for the already-charged budget.
+    pub kv_budget: Option<usize>,
+    /// Split-mode side-tier pool: a bytes budget per shard engine charged
+    /// by demotions only (residency stays uncharged, so prefill admission
+    /// can never fail). Ignored when `kv_budget` is set; same
+    /// `check_solo` caveat.
+    pub side_budget: Option<usize>,
 }
 
 impl Default for SimOptions {
@@ -79,6 +97,9 @@ impl Default for SimOptions {
             t_max: 512,
             shards: 1,
             prefix_reuse: false,
+            prefix_budget: None,
+            kv_budget: None,
+            side_budget: None,
         }
     }
 }
@@ -181,6 +202,20 @@ pub struct SimReport {
     pub prefix_hits: u64,
     /// Prefix-cache misses summed over all engines (0 without reuse).
     pub prefix_misses: u64,
+    /// Budget-pressure evictions the shared prefix cache performed
+    /// (0 without reuse or without a `prefix_budget`).
+    pub prefix_evictions: u64,
+    /// Snapshot bytes the shared prefix cache held at the end of the run.
+    pub prefix_bytes: u64,
+    /// Pressure-driven demotion refusals summed over every sequence the
+    /// harness observed alive at a step boundary (sequences that finish
+    /// within their admission step can slip under this count).
+    pub demote_refusals: u64,
+    /// High-water mark of charged bytes, summed over each shard's
+    /// byte-denominated KV pool (the unified pool under `kv_budget`, the
+    /// side pool under `side_budget`; 0 when neither is set). Probe runs
+    /// read this to size a bounding budget for a rerun.
+    pub kv_pool_peak: u64,
 }
 
 struct ClientState {
@@ -225,6 +260,9 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
     let decode_buckets = engine.rt.manifest.buckets.decode_b.clone();
     let window = engine.window();
     let invariants = registry();
+    if let Some(pools) = kv_pools_of(opts) {
+        engine.set_kv_pools(Some(pools));
+    }
 
     let mut core = SchedCore::new(
         engine.clone(),
@@ -242,6 +280,9 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
     // cumulative (decode_demotions, decode_rehydrations) per uid, for the
     // per-step tier-flow conservation check
     let mut flow_prev: HashMap<u64, (usize, usize)> = HashMap::new();
+    // latest cumulative demote-refusal count per uid (caches die with
+    // their sequences, so the last step-boundary observation is kept)
+    let mut refusals: HashMap<u64, usize> = HashMap::new();
 
     let mut violation: Option<Violation> = None;
     let mut fault_injected = false;
@@ -399,6 +440,7 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
             });
             flow_prev
                 .insert(seq.uid(), (seq.decode_demotions, seq.decode_rehydrations));
+            refusals.insert(seq.uid(), seq.cache().demote_refusals());
             seqs.push(seq_check(
                 id,
                 seq,
@@ -432,6 +474,18 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
 
         // ---- event drain + reap ---------------------------------------
         core.reap_finished();
+
+        // ---- pool-budget invariant (post-reap: only live sequences may
+        // hold charges, so the recount is exact here) -------------------
+        for pc in pool_checks(0, &engine, &core) {
+            if let Err(detail) = check_pool_budget(&pc) {
+                violation = Some(Violation { step: t, invariant: "pool-budget", detail });
+                break;
+            }
+        }
+        if violation.is_some() {
+            break;
+        }
         drain(&mut states);
     }
     drain(&mut states);
@@ -463,6 +517,10 @@ fn run_on(engine: Arc<Engine>, spec: &ScenarioSpec, opts: &SimOptions) -> SimRep
         fault_injected,
         prefix_hits: engine.metrics.prefix_hits.load(Ordering::Relaxed),
         prefix_misses: engine.metrics.prefix_misses.load(Ordering::Relaxed),
+        prefix_evictions: 0,
+        prefix_bytes: 0,
+        demote_refusals: refusals.values().map(|&r| r as u64).sum(),
+        kv_pool_peak: pool_peak(&engine) as u64,
     }
 }
 
@@ -484,6 +542,12 @@ fn run_pool(engines: Vec<Arc<Engine>>, spec: &ScenarioSpec, opts: &SimOptions) -
     let decode_buckets = engines[0].rt.manifest.buckets.decode_b.clone();
     let window = engines[0].window();
     let invariants = registry();
+    for e in &engines {
+        // a fresh pool per shard: budgets are per engine, not pooled
+        if let Some(pools) = kv_pools_of(opts) {
+            e.set_kv_pools(Some(pools));
+        }
+    }
 
     let mut pool = ShardPool::new(
         engines,
@@ -491,6 +555,7 @@ fn run_pool(engines: Vec<Arc<Engine>>, spec: &ScenarioSpec, opts: &SimOptions) -
         RouterConfig {
             shards: n_shards,
             prefix_reuse: opts.prefix_reuse,
+            prefix_budget: opts.prefix_budget,
             ..RouterConfig::default()
         },
     );
@@ -504,6 +569,7 @@ fn run_pool(engines: Vec<Arc<Engine>>, spec: &ScenarioSpec, opts: &SimOptions) -
     // independent uid counters, so uids are only unique within a shard
     let mut known_uids: Vec<HashSet<u64>> = vec![HashSet::new(); n_shards];
     let mut flow_prev: Vec<HashMap<u64, (usize, usize)>> = vec![HashMap::new(); n_shards];
+    let mut refusals: Vec<HashMap<u64, usize>> = vec![HashMap::new(); n_shards];
     // harness-side replay of the prefix-cache protocol: keys deposited so
     // far, maintained in the same shard-index admission order the
     // schedulers run in, so predicted hits are exact
@@ -713,6 +779,7 @@ fn run_pool(engines: Vec<Arc<Engine>>, spec: &ScenarioSpec, opts: &SimOptions) -
                 });
                 flow_prev[s]
                     .insert(seq.uid(), (seq.decode_demotions, seq.decode_rehydrations));
+                refusals[s].insert(seq.uid(), seq.cache().demote_refusals());
                 seqs.push(seq_check(
                     id,
                     seq,
@@ -742,13 +809,26 @@ fn run_pool(engines: Vec<Arc<Engine>>, spec: &ScenarioSpec, opts: &SimOptions) -
             }
             let done = pool.core_mut(s).reap_finished();
             pool.note_finished(&done);
+
+            // pool-budget invariant (post-reap: only live sequences may
+            // hold charges, so the recount is exact here)
+            for pc in pool_checks(s, pool.core(s).engine(), pool.core(s)) {
+                if let Err(detail) = check_pool_budget(&pc) {
+                    violation =
+                        Some(Violation { step: t, invariant: "pool-budget", detail });
+                    break 'steps;
+                }
+            }
         }
 
         // ---- prefix-hit accounting ------------------------------------
         let (hits, misses) = pool_prefix_counts(&pool);
-        if let Err(detail) =
-            check_prefix_accounting(&prefix_events, hits - prev_hits, misses - prev_misses)
-        {
+        if let Err(detail) = check_prefix_accounting(
+            &prefix_events,
+            hits - prev_hits,
+            misses - prev_misses,
+            opts.prefix_budget.is_some(),
+        ) {
             violation = Some(Violation { step: t, invariant: "prefix-accounting", detail });
             break 'steps;
         }
@@ -777,6 +857,15 @@ fn run_pool(engines: Vec<Arc<Engine>>, spec: &ScenarioSpec, opts: &SimOptions) -
         violation = solo_check(pool.core(0).engine(), &subs, &states, steps_run);
     }
 
+    let (prefix_evictions, prefix_bytes) = pool
+        .prefix_cache()
+        .map(|pc| {
+            let st = pc.stats();
+            (st.evictions, st.bytes as u64)
+        })
+        .unwrap_or((0, 0));
+    let kv_pool_peak: u64 =
+        (0..pool.shard_count()).map(|s| pool_peak(pool.core(s).engine()) as u64).sum();
     SimReport {
         trace: SimTrace {
             clients: states.into_iter().map(|s| s.outcome).collect(),
@@ -787,6 +876,14 @@ fn run_pool(engines: Vec<Arc<Engine>>, spec: &ScenarioSpec, opts: &SimOptions) -
         fault_injected,
         prefix_hits,
         prefix_misses,
+        prefix_evictions,
+        prefix_bytes,
+        demote_refusals: refusals
+            .iter()
+            .flat_map(|m| m.values())
+            .map(|&r| r as u64)
+            .sum(),
+        kv_pool_peak,
     }
 }
 
@@ -811,6 +908,73 @@ fn pool_transfer(pool: &ShardPool) -> TransferSnapshot {
         acc.quant_attend_bytes += t.quant_attend_bytes;
     }
     acc
+}
+
+/// The per-engine KV admission pools [`SimOptions`] asks for: a unified
+/// byte pool under `kv_budget`, a side-only split pool under
+/// `side_budget`, nothing otherwise. Called once per engine so every
+/// shard gets its own fresh pool.
+fn kv_pools_of(opts: &SimOptions) -> Option<KvPools> {
+    if let Some(b) = opts.kv_budget {
+        return Some(KvPools::Unified(Arc::new(BlockPool::new(b))));
+    }
+    opts.side_budget
+        .map(|b| KvPools::Split { blocks: None, side: Some(Arc::new(BlockPool::new(b))) })
+}
+
+/// Build the step's [`PoolCheck`]s for one shard: each configured pool's
+/// own counter vs budget vs an independent recount over the scheduler's
+/// live sequences. Empty when the engine carries no pools.
+fn pool_checks(shard: usize, engine: &Engine, core: &SchedCore) -> Vec<PoolCheck> {
+    let Some(pools) = engine.kv_pools() else { return vec![] };
+    let mut out = vec![];
+    match pools {
+        KvPools::Unified(p) => out.push(PoolCheck {
+            shard,
+            kind: "unified",
+            pool_used: p.used(),
+            budget: p.total(),
+            recount: core.live().map(|(_, s)| s.cache().charged_bytes()).sum(),
+            over_released: p.over_released(),
+        }),
+        KvPools::Split { blocks, side } => {
+            if let Some(bp) = blocks {
+                out.push(PoolCheck {
+                    shard,
+                    kind: "blocks",
+                    pool_used: bp.used(),
+                    budget: bp.total(),
+                    recount: core
+                        .live()
+                        .map(|(_, s)| s.cache_stats().resident_blocks)
+                        .sum(),
+                    over_released: bp.over_released(),
+                });
+            }
+            if let Some(sp) = side {
+                out.push(PoolCheck {
+                    shard,
+                    kind: "side",
+                    pool_used: sp.used(),
+                    budget: sp.total(),
+                    recount: core.live().map(|(_, s)| s.cache_stats().side_bytes).sum(),
+                    over_released: sp.over_released(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Byte-denominated KV-pool high-water mark for one engine (the unified
+/// pool, or the split-mode side pool; 0 without pools — the split-mode
+/// *blocks* pool is block-denominated and deliberately excluded).
+fn pool_peak(engine: &Engine) -> usize {
+    match engine.kv_pools() {
+        Some(KvPools::Unified(p)) => p.peak(),
+        Some(KvPools::Split { side: Some(p), .. }) => p.peak(),
+        _ => 0,
+    }
 }
 
 /// (hits, misses) summed over every shard's engine.
@@ -1233,6 +1397,15 @@ pub fn replay_opts(opts: &SimOptions) -> String {
     }
     if opts.prefix_reuse {
         s.push_str(" --prefix-reuse");
+    }
+    if let Some(b) = opts.prefix_budget {
+        s.push_str(&format!(" --prefix-budget {b}"));
+    }
+    if let Some(b) = opts.kv_budget {
+        s.push_str(&format!(" --kv-budget {b}"));
+    }
+    if let Some(b) = opts.side_budget {
+        s.push_str(&format!(" --side-budget {b}"));
     }
     match opts.fault {
         Some(Fault::PhantomRowFetch { step }) => {

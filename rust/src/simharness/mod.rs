@@ -31,6 +31,12 @@
 //!   shard-invariance metamorphic family: [`shard_traces_match`]
 //!   (outputs identical at any shard count) and [`reuse_traces_match`]
 //!   (outputs identical with the prefix cache on and off).
+//! * `--kv-budget` / `--side-budget` attach per-engine admission pools
+//!   and check the pool-budget invariant every step: charged bytes never
+//!   exceed the budget, never over-release, and always equal an
+//!   independent recount over live sequences. `--prefix-budget` bounds
+//!   the shared prefix cache the same way (evictions under pressure,
+//!   one-sided hit accounting).
 //! * [`simulate`] adds the shrink pass: a violation is minimized via
 //!   [`crate::util::propcheck::minimize`] and reported with a single
 //!   replay line (`kvzap simulate --seed S --steps K ...`).
@@ -48,7 +54,8 @@ pub use driver::{
     SimOptions, SimReport, SimSummary, SimTrace,
 };
 pub use invariants::{
-    check_placement_stability, check_prefix_accounting, check_tenant_fairness, registry,
-    PrefixEvent, StepObs, TransferDelta, Violation,
+    check_placement_stability, check_pool_budget, check_prefix_accounting,
+    check_tenant_fairness, registry, PoolCheck, PrefixEvent, StepObs, TransferDelta,
+    Violation,
 };
 pub use scenario::{ClientScript, ScenarioSpec};

@@ -431,8 +431,13 @@ fn sharded_stats_aggregate_and_prefix_hits() {
     let per = s.get("shard").and_then(|v| v.as_arr()).expect("per-shard breakdown");
     assert_eq!(per.len(), 2, "one breakdown entry per shard");
     for (key, v) in s.as_obj().unwrap() {
-        if matches!(key.as_str(), "backend" | "shard" | "mean_compression") {
-            continue; // non-summed fields
+        if matches!(
+            key.as_str(),
+            // non-summed: scalars, the breakdown itself, and the shared
+            // prefix cache's set-level gauges (one cache, not per shard)
+            "backend" | "shard" | "mean_compression" | "prefix_bytes" | "prefix_entries"
+        ) {
+            continue;
         }
         let total = v.as_f64().unwrap_or_else(|| panic!("non-numeric stat {key}"));
         let sum: f64 = per
@@ -448,6 +453,20 @@ fn sharded_stats_aggregate_and_prefix_hits() {
     assert!(
         s.get("prefix_hits").and_then(|v| v.as_f64()).unwrap() >= 1.0,
         "identical repeated prompt must hit the shared prefix cache: {s:?}"
+    );
+    // the shared cache's live gauges ride at the set level, once
+    assert!(
+        s.get("prefix_entries").and_then(|v| v.as_f64()).unwrap() >= 1.0,
+        "stored snapshots must show in the entries gauge: {s:?}"
+    );
+    assert!(
+        s.get("prefix_bytes").and_then(|v| v.as_f64()).unwrap() > 0.0,
+        "stored snapshots must show in the bytes gauge: {s:?}"
+    );
+    assert_eq!(
+        s.get("prefix_evictions").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "unbounded cache must never evict: {s:?}"
     );
     // the cross-check also holds against direct per-engine counters
     let direct: u64 = srv
@@ -498,4 +517,70 @@ fn server_error_paths_return_structured_errors() {
         .unwrap();
     assert!(r.get("error").is_none(), "{r:?}");
     assert!(r.get("text").is_some());
+}
+
+/// Per-tenant fair-share on the threaded (TCP/headless) path: a tenant
+/// flooding requests past its in-flight cap backpressures *its own*
+/// connection — it never holds more than `tenant_inflight` slots at once
+/// and its submits park at the gate — while a second tenant at a light
+/// offered load keeps dispatching and completing throughout.
+#[test]
+fn shardset_fair_share_caps_flooding_tenant_without_starving_light_one() {
+    let srv = HeadlessServer::new(
+        engine(),
+        ServerConfig {
+            addr: String::new(), // unused by the headless transport
+            default_policy: "kvzap_mlp:-4".into(),
+            max_batch: 2,
+            max_wait_us: 500,
+            tenant_inflight: 2,
+            ..ServerConfig::default()
+        },
+    );
+
+    // tenant "flood" fires 5 streaming requests back-to-back on one
+    // connection; its protocol loop parks in the gate past 2 in flight
+    let flood = srv.connect();
+    for i in 0..5 {
+        let req = format!(
+            r#"{{"prompt": "KEY = 777. filler. Q KEY\nA ", "max_new": 16, "stop_newline": false, "stream": true, "id": "f{i}", "tenant": "flood"}}"#
+        );
+        flood.send_line(&req).unwrap();
+    }
+
+    // tenant "light" meanwhile gets both of its requests through on its
+    // own connection — a blocking round trip each, so a completed reply
+    // *is* the no-starvation evidence (a gated-out tenant would hang)
+    let light = srv.connect();
+    for i in 0..2 {
+        let req = format!(
+            r#"{{"prompt": "XQZA = 12345. filler. Q XQZA\nA ", "max_new": 4, "id": "l{i}", "tenant": "light"}}"#
+        );
+        let r = light.request(&req).unwrap();
+        assert!(r.get("error").is_none(), "light tenant reply {i}: {r:?}");
+        assert!(r.get("text").is_some());
+    }
+
+    // drain the flood tenant's streams to completion
+    let mut done = 0;
+    while done < 5 {
+        let ev = flood.recv(std::time::Duration::from_secs(120)).unwrap();
+        if ev.get("event").and_then(|e| e.as_str()) == Some("done") {
+            assert!(ev.get("error").is_none(), "{ev:?}");
+            done += 1;
+        }
+    }
+
+    let set = srv.shard_set();
+    assert!(
+        set.tenant_peak_inflight("flood") <= 2,
+        "flooding tenant exceeded its in-flight cap: peak {}",
+        set.tenant_peak_inflight("flood")
+    );
+    assert!(set.tenant_peak_inflight("flood") >= 1);
+    assert!(set.tenant_peak_inflight("light") <= 2);
+    assert!(
+        set.throttle_waits() >= 1,
+        "5 offered vs cap 2 must park the flooding tenant's submit at least once"
+    );
 }

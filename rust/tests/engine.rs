@@ -199,6 +199,7 @@ fn tiered_floor_equal_tau_is_bitwise_identical_to_drop_only() {
         assert_eq!(ad.kv_bytes, at.kv_bytes, "{tier_spec}: same bytes with an empty band");
         assert_eq!(at.demoted, 0, "{tier_spec}");
         assert_eq!(at.rehydrated, 0, "{tier_spec}");
+        assert_eq!(at.quant_attended, 0, "{tier_spec}: empty band, nothing to quant-attend");
     }
 }
 
@@ -216,7 +217,8 @@ fn tiered_policy_demotes_into_side_tier_and_undercuts_drop_at_floor() {
     let tiered = policies::by_name("kvzap_mlp:-1:floor=-8", e.window()).unwrap();
     let a_tier = e.score_answer_full(&task.prompt, &task.answer, tiered.as_ref()).unwrap();
     assert!(a_tier.demoted > 0, "the [-8, -1) band must land in the side tier");
-    assert_eq!(a_tier.rehydrated, a_tier.demoted, "answer scoring rehydrates the band");
+    assert_eq!(a_tier.rehydrated, 0, "answer scoring attends the band in place, no rehydrate");
+    assert!(a_tier.quant_attended > 0, "demoted rows must be scored from their quantized form");
 
     // the bytes win, in its purest form: demote *everything* outside the
     // protected window (τ=+∞, bottomless floor) vs keeping everything
@@ -251,6 +253,44 @@ fn tiered_policy_demotes_into_side_tier_and_undercuts_drop_at_floor() {
             r.decode_evictions, 0,
             "nothing scores below -1e30, so the band absorbs every exit"
         );
+    }
+}
+
+/// Metamorphic pin for the no-rehydrate re-score path: scoring the answer
+/// with the demoted band attended **from its quantized form** must be
+/// bitwise identical to rehydrating the band first and attending fp32 —
+/// same NLL (the quantization round-trip is deterministic, so the
+/// dequantized-in-register rows equal the rehydrated rows), same pruning
+/// decisions, same steady-state bytes. Only the side-tier traffic
+/// counters may differ: quant-attend never rehydrates.
+#[test]
+fn quant_rescore_is_bitwise_identical_to_rehydrate_rescore() {
+    use kvzap::coordinator::RescoreMode;
+    let e = engine();
+    let mut rng = Rng::new(47);
+    for (name, tlen) in [("niah_multikey_1", 220), ("niah_single_2", 180)] {
+        let task = workload::ruler_instance(name, tlen, &mut rng);
+        let tiered = policies::by_name("kvzap_mlp:-1:floor=-8", e.window()).unwrap();
+        let q = e
+            .score_answer_mode(&task.prompt, &task.answer, tiered.as_ref(), RescoreMode::QuantAttend)
+            .unwrap();
+        let r = e
+            .score_answer_mode(&task.prompt, &task.answer, tiered.as_ref(), RescoreMode::Rehydrate)
+            .unwrap();
+        assert!(q.demoted > 0, "{name}: the band must be non-empty for this pin to bite");
+        assert_eq!(q.demoted, r.demoted, "{name}: identical prefill pruning decisions");
+        assert_eq!(q.compression, r.compression, "{name}");
+        assert_eq!(q.kv_bytes, r.kv_bytes, "{name}: steady-state bytes priced identically");
+        assert_eq!(
+            q.nll.to_bits(),
+            r.nll.to_bits(),
+            "{name}: quant-attend NLL must match rehydrate-then-score bitwise"
+        );
+        // the two modes differ only in how the band reaches the attention op
+        assert_eq!(q.rehydrated, 0, "{name}");
+        assert!(q.quant_attended > 0, "{name}");
+        assert_eq!(r.rehydrated, r.demoted, "{name}");
+        assert_eq!(r.quant_attended, 0, "{name}");
     }
 }
 
@@ -513,7 +553,7 @@ fn tiered_prefill_snapshot_resumes_bitwise_across_code_widths() {
         // resumed: a fresh sequence installs the snapshot (a cache hit)
         // instead of running the prefill bucket, then decodes solo
         let mut resumed = e.sequence(70 + bits as u64, &task.prompt, sp.clone());
-        e.prefill_from_snapshot(&mut resumed, &snap);
+        e.prefill_from_snapshot(&mut resumed, &snap).unwrap();
         let mut g2 = e.decode_group();
         while !resumed.is_done() {
             let mut set = vec![&mut resumed];

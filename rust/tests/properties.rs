@@ -440,6 +440,137 @@ fn pool_blocks_released_on_eviction_and_drop() {
     assert_eq!(pool.used(), 0);
 }
 
+/// Memory governance: under random interleavings of fill / evict /
+/// demote / rehydrate / drop-demoted traffic, every byte the cache holds
+/// is charged to its pool and the charge never exceeds the budget — at
+/// every step, under both the unified configuration (one byte pool for
+/// both tiers) and the split configuration (block pool + side pool).
+/// Refused operations (pool exhausted) must leave the accounting intact,
+/// which is exactly the graceful demote-into-drop degradation the engine
+/// relies on under pressure.
+#[test]
+fn prop_pool_charges_bounded_under_random_tier_traffic() {
+    use kvzap::kvcache::{KvPools, TierConfig};
+    use kvzap::runtime::kernels::QuantBits;
+
+    let tier = TierConfig { d_head: 8, bits: QuantBits::Int8, group: 8 };
+    let bb = tier.resident_block_bytes();
+    let bpe = tier.bytes_per_entry();
+    let (layers, heads, t_max) = (2usize, 2usize, 128usize);
+
+    check(
+        50,
+        |r| {
+            // Budgets sized so both admission and refusal paths are hit.
+            let blocks = r.below(24) + 4;
+            let side_entries = r.below(12) + 1;
+            let ops: Vec<(usize, usize, usize, usize)> = (0..r.below(300) + 50)
+                .map(|_| (r.below(5), r.below(2), r.below(2), r.below(200)))
+                .collect();
+            (blocks, side_entries, ops)
+        },
+        |&(blocks, side_entries, ref ops)| {
+            let unified_total = blocks * bb + side_entries * bpe;
+            for split in [false, true] {
+                let upool = Arc::new(BlockPool::new(unified_total));
+                let bpool = Arc::new(BlockPool::new(blocks));
+                let spool = Arc::new(BlockPool::new(side_entries * bpe));
+                let mut cache = PagedKvCache::new_tiered(layers, heads, t_max, tier);
+                let pools = if split {
+                    KvPools::Split { blocks: Some(bpool.clone()), side: Some(spool.clone()) }
+                } else {
+                    KvPools::Unified(upool.clone())
+                };
+                assert!(cache.adopt_pools(&pools), "empty-cache adoption");
+
+                for (step, &(op, l, h, rp)) in ops.iter().enumerate() {
+                    let pos = rp % cache.len().max(1);
+                    match op {
+                        0 => {
+                            let want = (cache.len() + 1 + rp % 7).min(t_max);
+                            cache.fill(want); // may refuse: that's the point
+                        }
+                        1 => {
+                            cache.evict(l, h, pos);
+                        }
+                        2 => {
+                            let refusals = cache.demote_refusals();
+                            let before = cache.stats();
+                            if !cache.demote(l, h, pos) && cache.is_kept(l, h, pos) {
+                                // pressure refusal: state must be untouched
+                                let after = cache.stats();
+                                if (after.kept, after.demoted, after.side_bytes)
+                                    != (before.kept, before.demoted, before.side_bytes)
+                                {
+                                    return Err(format!(
+                                        "step {step}: refused demote moved tier state"
+                                    ));
+                                }
+                                if cache.demote_refusals() != refusals + 1 {
+                                    return Err(format!(
+                                        "step {step}: pressure refusal not counted"
+                                    ));
+                                }
+                            }
+                        }
+                        3 => {
+                            cache.rehydrate(l, h, pos);
+                        }
+                        _ => {
+                            cache.drop_demoted(l, h, pos);
+                        }
+                    }
+                    cache.accounting_ok().map_err(|e| format!("step {step}: {e}"))?;
+                    let s = cache.stats();
+                    if split {
+                        if bpool.used() != s.resident_blocks {
+                            return Err(format!(
+                                "step {step}: block pool used {} != resident {}",
+                                bpool.used(),
+                                s.resident_blocks
+                            ));
+                        }
+                        if spool.used() != s.side_bytes {
+                            return Err(format!(
+                                "step {step}: side pool used {} != side bytes {}",
+                                spool.used(),
+                                s.side_bytes
+                            ));
+                        }
+                        if bpool.used() > blocks || spool.used() > side_entries * bpe {
+                            return Err(format!("step {step}: split budget exceeded"));
+                        }
+                    } else {
+                        if upool.used() != cache.charged_bytes() {
+                            return Err(format!(
+                                "step {step}: unified pool used {} != charged {}",
+                                upool.used(),
+                                cache.charged_bytes()
+                            ));
+                        }
+                        if cache.charged_bytes() > unified_total {
+                            return Err(format!(
+                                "step {step}: charged {} exceeds budget {unified_total}",
+                                cache.charged_bytes()
+                            ));
+                        }
+                    }
+                }
+                cache.release();
+                let leak = if split {
+                    bpool.used() + spool.used()
+                } else {
+                    upool.used()
+                };
+                if leak != 0 {
+                    return Err(format!("release leaked {leak} pool units (split={split})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_tokenizer_roundtrip() {
     check(

@@ -322,3 +322,130 @@ fn simulate_summary_counts_clients() {
     assert_eq!(summary.seed, 5);
     assert!(summary.completed + summary.cancelled <= summary.clients);
 }
+
+/// Memory-governance acceptance, unified pool: a probe run with an
+/// effectively unlimited budget records the workload's charged-bytes
+/// high-water mark; rerunning one byte below it turns the peak-setting
+/// allocation into a graceful demotion refusal (the caller drops the
+/// entry instead), while the pool-budget invariant — charged ≤ budget,
+/// no over-release, counter equals the live-sequence recount — holds at
+/// every step of both runs.
+#[test]
+fn unified_pool_budget_holds_and_pressure_forces_demote_refusals() {
+    use kvzap::policies::Surrogate;
+    use kvzap::runtime::kernels::QuantBits;
+
+    let mut rng = Rng::new(81);
+    let task = workload::ruler_instance("niah_single_1", 200, &mut rng);
+    let client = ClientScript {
+        join_step: 0,
+        tenant: String::new(),
+        prompt: task.prompt,
+        // τ far above every score with a floor far below any: prefill
+        // demotes every prunable position, marching side bytes up against
+        // the unified pool while resident blocks vacate under it
+        policy: PolicySpec::Kvzap {
+            surrogate: Surrogate::Mlp,
+            tau: 100.0,
+            floor: Some(-100000.0),
+            bits: QuantBits::Int8,
+        },
+        structured_policy: false,
+        max_new: 48,
+        greedy: true,
+        seed: 1,
+        stop_newline: false,
+        cancel_step: None,
+        drop_step: None,
+    };
+    let spec = ScenarioSpec { seed: 0, steps: 20, max_batch: 2, clients: vec![client] };
+
+    let probe_opts = SimOptions {
+        check_solo: false, // solo replays would contend for the charged pool
+        kv_budget: Some(1 << 30),
+        ..SimOptions::default()
+    };
+    let probe = run_scenario(&spec, &probe_opts);
+    assert!(probe.violation.is_none(), "probe: {}", probe.violation.unwrap());
+    assert_eq!(probe.demote_refusals, 0, "a 1 GiB budget must never refuse");
+    let peak = probe.kv_pool_peak as usize;
+    assert!(peak > 0, "the probe run must charge the pool");
+
+    let bound_opts = SimOptions {
+        check_solo: false,
+        kv_budget: Some(peak - 1),
+        ..SimOptions::default()
+    };
+    let bound = run_scenario(&spec, &bound_opts);
+    assert!(bound.violation.is_none(), "bounded: {}", bound.violation.unwrap());
+    assert!(
+        bound.demote_refusals >= 1,
+        "a budget below the probed peak must refuse at least one demotion"
+    );
+    assert!(
+        (bound.kv_pool_peak as usize) < peak,
+        "the bounded run's peak ({}) must stay under the probed one ({peak})",
+        bound.kv_pool_peak
+    );
+}
+
+/// Memory-governance acceptance, split side pool: a side-tier budget too
+/// small for even one quantized entry turns every demotion attempt of a
+/// demotion-heavy episode into a graceful refusal (drop fallback), with
+/// the full registry plus the pool-budget invariant still clean and the
+/// pool never admitting a byte.
+#[test]
+fn tiny_side_budget_refuses_demotions_gracefully() {
+    let spec = ScenarioSpec::generate_tiered(0, 32, 3, 3);
+    let opts = SimOptions {
+        check_solo: false,
+        side_budget: Some(1), // below bytes_per_entry at every code width
+        ..SimOptions::default()
+    };
+    let report = run_scenario(&spec, &opts);
+    assert!(report.violation.is_none(), "{}", report.violation.unwrap());
+    assert_eq!(report.steps_run, 32);
+    assert!(
+        report.demote_refusals >= 1,
+        "a 1-byte side pool must refuse the episode's demotions"
+    );
+    assert_eq!(report.kv_pool_peak, 0, "nothing is ever admitted to the side pool");
+}
+
+/// Memory-governance acceptance, prefix cache: a probe run with no
+/// budget records the footprint of the episode's distinct prefill
+/// snapshots; rerunning one byte below it forces LRU eviction at the
+/// last distinct insert (each snapshot alone still fits, so none are
+/// rejected outright), with the run otherwise clean under the relaxed
+/// one-sided hit accounting and the final footprint inside the budget.
+#[test]
+fn bounded_prefix_cache_evicts_under_pressure_and_stays_within_budget() {
+    let spec = ScenarioSpec::generate_shared_prefix(2, 64, 6, 3);
+    let base = SimOptions {
+        check_solo: false,
+        prefix_reuse: true,
+        ..SimOptions::default()
+    };
+
+    let probe = run_scenario(&spec, &base);
+    assert!(probe.violation.is_none(), "probe: {}", probe.violation.unwrap());
+    assert!(probe.prefix_bytes > 0, "shared-prefix episodes must deposit snapshots");
+    assert_eq!(probe.prefix_evictions, 0, "an unbounded cache never evicts");
+
+    // one byte below the combined footprint: with several families, every
+    // individual snapshot is at least a byte smaller than the budget, so
+    // the last distinct insert must evict rather than be refused
+    let budget = (probe.prefix_bytes as usize).saturating_sub(1).max(1);
+    let bound =
+        run_scenario(&spec, &SimOptions { prefix_budget: Some(budget), ..base });
+    assert!(bound.violation.is_none(), "bounded: {}", bound.violation.unwrap());
+    assert!(
+        bound.prefix_evictions >= 1,
+        "a budget under the combined snapshot footprint must evict"
+    );
+    assert!(
+        bound.prefix_bytes as usize <= budget,
+        "held bytes ({}) must end inside the budget ({budget})",
+        bound.prefix_bytes
+    );
+}
